@@ -1,0 +1,60 @@
+//! Rank-adaptive training via DMRG-inspired sweeps (paper §3.3, Alg. 1).
+//!
+//! Starts a MetaTT-5D at rank 10 and anneals to rank 4 while training,
+//! comparing against fixed-rank-4 AdamW. Shows the paper's signature
+//! pattern: an accuracy dip right after each truncation, rapid recovery,
+//! and a better final-rank model than training at rank 4 from scratch.
+//! Also demonstrates the coordinator's executable hot-swap: each rank on
+//! the ladder is a different HLO artifact, compiled once and cached.
+//!
+//!     cargo run --release --example dmrg_rank_adaptive
+
+use metatt::adapters::AdapterKind;
+use metatt::config::ModelPreset;
+use metatt::coordinator::{run_dmrg, run_fixed_rank_baseline, DmrgConfig};
+use metatt::data::TaskId;
+use metatt::runtime::{checkpoint_path, Runtime};
+use metatt::tt::{MetaTtKind, RankSchedule};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelPreset::Tiny;
+    let task = TaskId::MrpcSyn;
+    let kind = AdapterKind::MetaTt(MetaTtKind::FiveD);
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let ckpt = checkpoint_path(model);
+    let ckpt = ckpt.exists().then_some(ckpt);
+
+    let mut cfg = DmrgConfig::default();
+    cfg.train.epochs = 12;
+    cfg.train.train_cap = 640;
+    cfg.train.eval_cap = 300;
+    cfg.start_rank = 10;
+    cfg.schedule = RankSchedule::parse("1:9,3:8,5:7,6:6,7:5,8:4").map_err(anyhow::Error::msg)?;
+
+    println!("AdamW + DMRG sweeps (start rank 10 → 4):");
+    let res = run_dmrg(&rt, model, kind, task, &cfg, ckpt.as_deref())?;
+    for e in &res.epochs {
+        let marker = if e.swept { " ← sweep" } else { "" };
+        println!(
+            "  epoch {:>2}  acc {:.3}  rank {:>2}{}",
+            e.epoch, e.metric, e.rank, marker
+        );
+    }
+    println!(
+        "  {} rank-specific executables compiled and hot-swapped\n",
+        res.executables_compiled
+    );
+
+    println!("fixed-rank-4 AdamW baseline:");
+    let base = run_fixed_rank_baseline(&rt, model, kind, task, 4, &cfg, ckpt.as_deref())?;
+    let best_base = base.iter().map(|e| e.metric).fold(f64::NEG_INFINITY, f64::max);
+    for e in base.iter().step_by(3) {
+        println!("  epoch {:>2}  acc {:.3}", e.epoch, e.metric);
+    }
+    println!(
+        "\nbest at rank 4 — annealed: {:.3}  vs fixed-rank: {:.3} (paper Figs 2/6 shape)",
+        res.best_at_final_rank, best_base
+    );
+    Ok(())
+}

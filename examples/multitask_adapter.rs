@@ -1,0 +1,71 @@
+//! Multi-task learning with a task core (paper §3.2): joint-train one
+//! adapter over three binary tasks and compare
+//!
+//!   * MetaTT-4D      — one shared TT, no task structure
+//!   * MetaTT-(4+1)D  — same TT plus an r×r task core G3[t] in the middle
+//!   * LoRA           — a single per-matrix adapter shared across tasks
+//!
+//! reproducing the qualitative Table-2 finding: the task core buys back
+//! most of the task interference for ~(T·r²) extra parameters.
+//!
+//!     cargo run --release --example multitask_adapter
+
+use metatt::adapters::{AdapterKind, AdapterSpec};
+use metatt::config::ModelPreset;
+use metatt::coordinator::{run_mtl, MtlConfig};
+use metatt::data::TaskId;
+use metatt::runtime::{checkpoint_path, Runtime};
+use metatt::tt::MetaTtKind;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelPreset::Tiny;
+    let tasks = [TaskId::ColaSyn, TaskId::MrpcSyn, TaskId::RteSyn];
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let ckpt = checkpoint_path(model);
+    let ckpt = ckpt.exists().then_some(ckpt);
+    let mut cfg = MtlConfig::default();
+    cfg.train.epochs = 5;
+    cfg.per_task_cap = 600;
+    cfg.eval_cap = 300;
+
+    let dims = model.dims(tasks.len());
+    println!(
+        "joint training over {:?}\n{:<14} {:>8} {:>10} {:>24}",
+        tasks.iter().map(|t| t.name()).collect::<Vec<_>>(),
+        "adapter",
+        "params",
+        "best-mean",
+        "per-task"
+    );
+    for kind in [
+        AdapterKind::MetaTt(MetaTtKind::FourD),
+        AdapterKind::MetaTt(MetaTtKind::FourPlusOneD),
+        AdapterKind::LoRa,
+    ] {
+        let spec = AdapterSpec::new(kind, 8, cfg.alpha, dims);
+        let res = run_mtl(&rt, model, &spec, &tasks, &cfg, ckpt.as_deref())?;
+        println!(
+            "{:<14} {:>8} {:>10.3} {:>24}",
+            spec.kind.name(),
+            spec.param_count(),
+            res.best_mean,
+            format!(
+                "{:?}",
+                res.best_per_task
+                    .iter()
+                    .map(|m| (m * 100.0).round() / 100.0)
+                    .collect::<Vec<_>>()
+            )
+        );
+    }
+    println!(
+        "\nThe (4+1)D task core adds only {} params over 4D yet recovers \
+         per-task specialization (paper Table 2).",
+        AdapterSpec::new(AdapterKind::MetaTt(MetaTtKind::FourPlusOneD), 8, 2.0, dims)
+            .param_count()
+            - AdapterSpec::new(AdapterKind::MetaTt(MetaTtKind::FourD), 8, 2.0, dims)
+                .param_count()
+    );
+    Ok(())
+}

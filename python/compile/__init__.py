@@ -1,0 +1,7 @@
+"""Build-time compile path: JAX model (L2) + Pallas kernels (L1) + AOT
+lowering to HLO text artifacts consumed by the rust coordinator (L3).
+
+Nothing in this package runs at training/serving time — `make artifacts`
+invokes `python -m compile.aot` once and the rust binary is self-contained
+afterwards.
+"""

@@ -1,0 +1,239 @@
+"""AOT driver: lower every (model, adapter, rank, classes, tasks) step to
+HLO text and write `artifacts/manifest.json` for the rust registry.
+
+HLO *text* — not serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--only SUBSTR]
+                          [--with-base] [--list] [--force]
+
+The build is a no-op when nothing changed: a hash of the compile/ sources
+plus the build plan is stored next to the manifest and checked first.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the rust-loadable form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+class Request:
+    """One artifact to build."""
+
+    def __init__(self, step, preset, adapter, rank, classes, tasks, batch, seq, alpha=1.0):
+        self.step = step
+        self.preset = preset
+        self.adapter = adapter
+        self.rank = rank
+        self.classes = classes
+        self.tasks = tasks
+        self.batch = batch
+        self.seq = seq
+        self.alpha = alpha
+
+    @property
+    def stem(self):
+        return (
+            f"{self.step}_{self.preset}_{self.adapter}_r{self.rank}"
+            f"_c{self.classes}_t{self.tasks}_b{self.batch}_s{self.seq}"
+        )
+
+    def build(self):
+        """Returns (fn, inputs, outputs, n_frozen, n_trainable)."""
+        if self.step == "train":
+            return model.build_train_step(
+                self.preset, self.adapter, self.rank,
+                self.classes, self.tasks, self.batch, self.seq,
+            )
+        if self.step == "eval":
+            return model.build_eval_step(
+                self.preset, self.adapter, self.rank,
+                self.classes, self.tasks, self.batch, self.seq,
+            )
+        if self.step == "pretrain":
+            return model.build_pretrain_step(self.preset, self.batch, self.seq)
+        if self.step == "apply":
+            return model.build_apply_step(
+                self.preset, self.adapter, self.rank, self.alpha, self.batch, self.seq
+            )
+        raise ValueError(f"unknown step {self.step}")
+
+
+def default_plan(with_base=False):
+    """The artifact grid the benches and examples consume.
+
+    Alpha is a scalar input of train/eval artifacts (one artifact serves
+    the whole Appendix-D hyper-parameter grid); only apply artifacts bake it.
+    """
+    reqs = []
+    t = MODEL = "tiny"
+    B, S = 16, model.MODEL_PRESETS[t]["max_seq"]
+
+    # Pretraining (full-weights MLM) per preset.
+    reqs.append(Request("pretrain", "tiny", "none", 0, 0, 0, 32, S))
+    reqs.append(Request("pretrain", "small", "none", 0, 0, 0, 16, 64))
+    if with_base:
+        reqs.append(Request("pretrain", "base_sim", "none", 0, 0, 0, 8, 64))
+
+    def add_pair(adapter, rank, classes, tasks=1, preset=MODEL, batch=B, seq=S):
+        reqs.append(Request("train", preset, adapter, rank, classes, tasks, batch, seq))
+        reqs.append(Request("eval", preset, adapter, rank, classes, tasks, batch, seq))
+
+    # Table 1 grid (single task): every adapter at its table ranks, for
+    # 2-class, 3-class (MNLI analogue) and regression (classes=1, STS-B).
+    for classes in (1, 2, 3):
+        for rank in (4, 8, 16):
+            add_pair("metatt4d", rank, classes)
+        add_pair("metatt5d", 8, classes)
+        add_pair("lora", 8, classes)
+        add_pair("vera", 64, classes)
+        add_pair("lotr", 8, classes)
+    add_pair("full", 0, 2)
+
+    # DMRG rank ladder (Figs 2/6): MetaTT-5D on 2-class tasks, r 10 -> 4.
+    for rank in (4, 5, 6, 7, 9, 10):
+        add_pair("metatt5d", rank, 2)
+    for rank in (5, 6, 10):  # 4D ladder for ablations
+        add_pair("metatt4d", rank, 2)
+
+    # MTL (Table 2 / Figs 4-5): 3-task and 4-task, 2-class heads.
+    for tasks in (3, 4):
+        add_pair("metatt4p1d", 8, 2, tasks=tasks)
+        add_pair("metatt4d", 8, 2, tasks=tasks)
+        add_pair("lora", 8, 2, tasks=tasks)
+
+    # e2e example at the bigger preset.
+    if with_base:
+        add_pair("metatt4d", 8, 2, preset="base_sim", batch=8, seq=64)
+    add_pair("metatt4d", 8, 2, preset="small", batch=16, seq=64)
+
+    # Serving hot-path kernels (Pallas) for the micro-bench.
+    reqs.append(Request("apply", "base_sim", "metatt4d", 8, 0, 0, 64, 64))
+    reqs.append(Request("apply", "base_sim", "lora", 8, 0, 0, 64, 64))
+    return reqs
+
+
+def plan_hash(reqs):
+    h = hashlib.sha256()
+    here = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in os.walk(here):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    for r in reqs:
+        h.update(r.stem.encode())
+    return h.hexdigest()
+
+
+def lower_one(req, out_dir):
+    fn, inputs, outputs, n_frozen, n_trainable = req.build()
+    specs = [
+        jax.ShapeDtypeStruct(shape, DTYPES[dtype]) for (_, shape, dtype) in inputs
+    ]
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = req.stem + ".hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    entry = {
+        "step": req.step,
+        "model": req.preset,
+        "adapter": req.adapter,
+        "rank": req.rank,
+        "classes": req.classes,
+        "tasks": req.tasks,
+        "batch": req.batch,
+        "seq": req.seq,
+        "file": fname,
+        "n_frozen": n_frozen,
+        "n_trainable": n_trainable,
+        "inputs": [
+            {"name": n, "shape": list(s), "dtype": d} for (n, s, d) in inputs
+        ],
+        "outputs": [
+            {"name": n, "shape": list(s), "dtype": d} for (n, s, d) in outputs
+        ],
+    }
+    return entry, len(text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="substring filter on artifact stems")
+    ap.add_argument("--with-base", action="store_true", help="include base_sim artifacts")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args()
+
+    reqs = default_plan(with_base=args.with_base)
+    if args.only:
+        reqs = [r for r in reqs if args.only in r.stem]
+    if args.list:
+        for r in reqs:
+            print(r.stem)
+        return
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    hash_path = os.path.join(out_dir, ".build_hash")
+    want_hash = plan_hash(reqs)
+
+    if not args.force and not args.only and os.path.exists(manifest_path) and os.path.exists(hash_path):
+        with open(hash_path) as f:
+            if f.read().strip() == want_hash:
+                print(f"artifacts fresh ({len(reqs)} entries) — nothing to do")
+                return
+
+    # Merge with any pre-existing manifest so --only builds are incremental.
+    entries = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            for e in json.load(f).get("artifacts", []):
+                key = (e["step"], e["model"], e["adapter"], e["rank"],
+                       e["classes"], e["tasks"], e["batch"], e["seq"])
+                entries[key] = e
+
+    total_bytes = 0
+    for i, req in enumerate(reqs):
+        entry, nbytes = lower_one(req, out_dir)
+        total_bytes += nbytes
+        key = (entry["step"], entry["model"], entry["adapter"], entry["rank"],
+               entry["classes"], entry["tasks"], entry["batch"], entry["seq"])
+        entries[key] = entry
+        print(f"[{i+1}/{len(reqs)}] {req.stem} ({nbytes//1024} KB)")
+
+    with open(manifest_path, "w") as f:
+        json.dump({"artifacts": sorted(entries.values(), key=lambda e: e["file"])}, f, indent=1)
+    if not args.only:
+        with open(hash_path, "w") as f:
+            f.write(want_hash)
+    print(f"wrote {len(entries)} artifacts ({total_bytes//(1<<20)} MB) to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""L1 kernels: Pallas implementations (`tt_apply`) and jnp oracles (`ref`)."""

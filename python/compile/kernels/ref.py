@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the ground-truth implementations the pytest suite pins the Pallas
+kernels against (atol/rtol 1e-5), and the implementations the *train-step*
+artifacts lower (pallas_call has no VJP in interpret mode; see DESIGN.md
+"Autodiff note"). The apply/serve artifacts lower the Pallas kernels, so the
+kernel == ref check is what guarantees trained math == served math.
+"""
+
+import jax.numpy as jnp
+
+
+def tt_apply_ref(x, g1, mid, g4, alpha):
+    """MetaTT-4D adapter application for one (layer, matrix) pair.
+
+    y = alpha * (((x @ g1) @ mid) @ g4)        (paper Eq. 5)
+
+    Args:
+      x:   (n, d_in) activations.
+      g1:  (d_in, r) left boundary core.
+      mid: (r, r) pre-contracted middle slice G2[l] @ G3[m].
+      g4:  (r, d_out) right boundary core.
+      alpha: python float scaling.
+    """
+    return alpha * (((x @ g1) @ mid) @ g4)
+
+
+def tt_apply_5d_ref(x, g1, mid, g4h, g5, alpha):
+    """MetaTT-5D adapter application for one (layer, matrix) pair.
+
+    Per head h: y_h = alpha * (x @ g1 @ mid @ g4h[h] @ g5), concatenated
+    along the output axis (paper Eq. 3 / Fig. 1 right).
+
+    Args:
+      x:   (n, d_in)
+      g1:  (d_in, r)
+      mid: (r, r)          -- G2[l] @ G3[m]
+      g4h: (h, r, r)       -- head core
+      g5:  (r, d_out // h) -- right boundary
+    """
+    xm = (x @ g1) @ mid                            # (n, r)
+    per_head = jnp.einsum("nr,hrq->nhq", xm, g4h)  # (n, h, r)
+    y = jnp.einsum("nhq,qd->nhd", per_head, g5)    # (n, h, dh)
+    n = x.shape[0]
+    return alpha * y.reshape(n, -1)
+
+
+def lora_apply_ref(x, a, b, alpha):
+    """LoRA adapter application: y = alpha * ((x @ a) @ b)."""
+    return alpha * ((x @ a) @ b)

@@ -1,0 +1,412 @@
+"""L2: the JAX transformer encoder with global MetaTT adapters (build time).
+
+A from-scratch RoBERTa-style encoder (post-LN, GELU MLP, learned positions,
+CLS pooling) whose Q and V projections are steered by one of the adapter
+families of the paper's Table 1: MetaTT-4D / 5D / (4+1)D, LoRA, VeRA, LoTR,
+or full fine-tuning. The module defines, as *the single source of truth
+shared with the rust side* (rust/src/adapters/mod.rs must mirror it):
+
+  * `MODEL_PRESETS`            — model size presets (== `config::ModelPreset`)
+  * `frozen_specs`             — ordered frozen-weight layout
+  * `adapter_param_specs`      — ordered trainable-adapter layout
+  * train / eval / pretrain step functions lowered by `aot.py`
+
+Everything is positional: step functions take `(frozen..., trainable...,
+data...)` in spec order, so the HLO parameter order is deterministic and the
+manifest can describe it exactly.
+
+The adapter application in the train path uses the jnp reference math
+(`kernels.ref`) — identical to the Pallas kernels by pytest — because
+`pallas_call` has no VJP in interpret mode. The serve/apply artifacts lower
+the Pallas kernels themselves.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+MODEL_PRESETS = {
+    "tiny": dict(hidden=64, layers=4, heads=4, ffn=256, vocab=512, max_seq=32),
+    "small": dict(hidden=128, layers=6, heads=8, ffn=512, vocab=1024, max_seq=64),
+    "base_sim": dict(hidden=256, layers=12, heads=8, ffn=1024, vocab=1024, max_seq=64),
+}
+
+# Adapted projection matrices per layer: m=0 -> Q, m=1 -> V (paper App. A.2:
+# Q,V is the configuration used for all Table-1 results).
+N_MATRICES = 2
+
+PAD_ID = 0
+
+
+# ---------------------------------------------------------------------------
+# Parameter layouts (shared contract with rust).
+# ---------------------------------------------------------------------------
+
+
+def frozen_specs(preset, tasks, classes):
+    """Ordered frozen-weight layout: 20 encoder arrays + per-task heads."""
+    p = MODEL_PRESETS[preset]
+    d, l, f = p["hidden"], p["layers"], p["ffn"]
+    v, s = p["vocab"], p["max_seq"]
+    return [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (s, d)),
+        ("emb_ln_g", (d,)),
+        ("emb_ln_b", (d,)),
+        ("wq", (l, d, d)),
+        ("bq", (l, d)),
+        ("wk", (l, d, d)),
+        ("bk", (l, d)),
+        ("wv", (l, d, d)),
+        ("bv", (l, d)),
+        ("wo", (l, d, d)),
+        ("bo", (l, d)),
+        ("ln1_g", (l, d)),
+        ("ln1_b", (l, d)),
+        ("w1", (l, d, f)),
+        ("b1", (l, f)),
+        ("w2", (l, f, d)),
+        ("b2", (l, d)),
+        ("ln2_g", (l, d)),
+        ("ln2_b", (l, d)),
+        ("cls_w", (tasks, d, classes)),
+        ("cls_b", (tasks, classes)),
+    ]
+
+
+def encoder_specs(preset):
+    """The 20 encoder arrays (frozen_specs minus the classifier heads) —
+    the trainable set for pretraining and full fine-tuning."""
+    return frozen_specs(preset, 1, 1)[:-2]
+
+
+def adapter_param_specs(adapter, preset, rank, tasks):
+    """Ordered trainable layout per adapter — mirrors
+    `AdapterSpec::param_specs` in rust/src/adapters/mod.rs."""
+    p = MODEL_PRESETS[preset]
+    d, l, h = p["hidden"], p["layers"], p["heads"]
+    m, r, t = N_MATRICES, rank, tasks
+    if adapter == "metatt4d":
+        return [("g1", (d, r)), ("g2", (l, r, r)), ("g3", (m, r, r)), ("g4", (r, d))]
+    if adapter == "metatt5d":
+        return [
+            ("g1", (d, r)),
+            ("g2", (l, r, r)),
+            ("g3", (m, r, r)),
+            ("g4", (h, r, r)),
+            ("g5", (r, d // h)),
+        ]
+    if adapter == "metatt4p1d":
+        return [
+            ("g1", (d, r)),
+            ("g2", (l, r, r)),
+            ("g3", (t, r, r)),
+            ("g4", (m, r, r)),
+            ("g5", (r, d)),
+        ]
+    if adapter == "lora":
+        return [("lora_a", (l, m, d, r)), ("lora_b", (l, m, r, d))]
+    if adapter == "vera":
+        return [("vera_d", (l, m, r)), ("vera_b", (l, m, d))]
+    if adapter == "lotr":
+        return [("lotr_u", (d, r)), ("lotr_s", (l, m, r, r)), ("lotr_v", (r, d))]
+    if adapter == "full":
+        return encoder_specs(preset)
+    raise ValueError(f"unknown adapter '{adapter}'")
+
+
+# ---------------------------------------------------------------------------
+# Adapter application.
+# ---------------------------------------------------------------------------
+
+
+def _vera_frozen(d, r, seed=7):
+    """VeRA's frozen shared random projections, baked into the HLO as
+    constants (seed-fixed, so every artifact agrees)."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(ka, (d, r), jnp.float32) / math.sqrt(d)
+    b = jax.random.normal(kb, (r, d), jnp.float32) / math.sqrt(r)
+    return a, b
+
+
+def adapter_delta(adapter, tr, layer, matrix, task_id, x2d, alpha, preset, rank):
+    """Adapter output for activations `x2d` (n, d) at (layer, matrix).
+
+    `tr` is the trainable dict; `task_id` a traced scalar (used by the
+    (4+1)D task core). Returns (n, d)."""
+    p = MODEL_PRESETS[preset]
+    d = p["hidden"]
+    if adapter == "metatt4d":
+        mid = tr["g2"][layer] @ tr["g3"][matrix]
+        return ref.tt_apply_ref(x2d, tr["g1"], mid, tr["g4"], alpha)
+    if adapter == "metatt5d":
+        mid = tr["g2"][layer] @ tr["g3"][matrix]
+        return ref.tt_apply_5d_ref(x2d, tr["g1"], mid, tr["g4"], tr["g5"], alpha)
+    if adapter == "metatt4p1d":
+        g3t = jnp.take(tr["g3"], task_id, axis=0)  # dynamic task slice
+        mid = tr["g2"][layer] @ g3t @ tr["g4"][matrix]
+        return ref.tt_apply_ref(x2d, tr["g1"], mid, tr["g5"], alpha)
+    if adapter == "lora":
+        return ref.lora_apply_ref(
+            x2d, tr["lora_a"][layer, matrix], tr["lora_b"][layer, matrix], alpha
+        )
+    if adapter == "vera":
+        a, b = _vera_frozen(d, rank)
+        t = (x2d @ a) * tr["vera_d"][layer, matrix][None, :]
+        return alpha * ((t @ b) * tr["vera_b"][layer, matrix][None, :])
+    if adapter == "lotr":
+        mid = tr["lotr_s"][layer, matrix]
+        return ref.tt_apply_ref(x2d, tr["lotr_u"], mid, tr["lotr_v"], alpha)
+    if adapter == "full" or adapter == "none":
+        return jnp.zeros_like(x2d)
+    raise ValueError(f"unknown adapter '{adapter}'")
+
+
+# ---------------------------------------------------------------------------
+# Encoder forward.
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def encoder_forward(preset, adapter, rank, alpha, fz, tr, tokens, task_id):
+    """Run the encoder; returns hidden states (b, s, d).
+
+    `fz`/`tr` are dicts of frozen/trainable arrays. For `adapter == "full"`,
+    the encoder weights themselves come from `tr`.
+    """
+    p = MODEL_PRESETS[preset]
+    d, l, h = p["hidden"], p["layers"], p["heads"]
+    dh = d // h
+    w = tr if adapter == "full" else fz  # encoder weight source
+    b, s = tokens.shape
+
+    x = w["tok_emb"][tokens] + w["pos_emb"][None, :s, :]
+    x = _layer_norm(x, w["emb_ln_g"], w["emb_ln_b"])
+
+    pad_mask = (tokens != PAD_ID)  # (b, s)
+    att_bias = jnp.where(pad_mask[:, None, None, :], 0.0, -1e9)  # (b,1,1,s)
+
+    def delta(layer, matrix, x3d):
+        x2d = x3d.reshape(b * s, d)
+        out = adapter_delta(
+            adapter, tr, layer, matrix, task_id, x2d, alpha, preset, rank
+        )
+        return out.reshape(b, s, d)
+
+    for layer in range(l):
+        # --- Multi-head self-attention, adapters on Q (m=0) and V (m=1).
+        q = x @ w["wq"][layer] + w["bq"][layer] + delta(layer, 0, x)
+        k = x @ w["wk"][layer] + w["bk"][layer]
+        v = x @ w["wv"][layer] + w["bv"][layer] + delta(layer, 1, x)
+        q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh) + att_bias
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+        attn_out = ctx @ w["wo"][layer] + w["bo"][layer]
+        x = _layer_norm(x + attn_out, w["ln1_g"][layer], w["ln1_b"][layer])
+        # --- MLP.
+        m_out = jax.nn.gelu(x @ w["w1"][layer] + w["b1"][layer])
+        m_out = m_out @ w["w2"][layer] + w["b2"][layer]
+        x = _layer_norm(x + m_out, w["ln2_g"][layer], w["ln2_b"][layer])
+    return x
+
+
+def task_logits(preset, adapter, rank, alpha, fz, tr, tokens, task_id):
+    """CLS-pooled task logits (b, classes) through the frozen head."""
+    hidden = encoder_forward(preset, adapter, rank, alpha, fz, tr, tokens, task_id)
+    pooled = hidden[:, 0, :]  # CLS
+    cw = jnp.take(fz["cls_w"], task_id, axis=0)
+    cb = jnp.take(fz["cls_b"], task_id, axis=0)
+    return pooled @ cw + cb
+
+
+# ---------------------------------------------------------------------------
+# Losses.
+# ---------------------------------------------------------------------------
+
+
+def task_loss(logits, labels, scores, weights, classes):
+    """Weighted task loss: softmax CE for classification, MSE for the
+    regression analogue (classes == 1; targets in [0, 5] scaled to [0,1])."""
+    wsum = jnp.maximum(jnp.sum(weights), 1e-6)
+    if classes == 1:
+        pred = logits[:, 0]
+        per = (pred - scores / 5.0) ** 2
+    else:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        per = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.sum(per * weights) / wsum
+
+
+def mlm_loss(preset, tr, tokens, targets, mask):
+    """Masked-LM loss with weight-tied output head (logits = h @ tok_embᵀ)."""
+    hidden = encoder_forward(preset, "full", 0, 0.0, {}, tr, tokens, jnp.int32(0))
+    logits = hidden @ tr["tok_emb"].T  # (b, s, v)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    per = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Step builders (lowered by aot.py).
+# ---------------------------------------------------------------------------
+
+
+def _to_dicts(specs_fz, specs_tr, args):
+    nf, nt = len(specs_fz), len(specs_tr)
+    fz = {name: arg for (name, _), arg in zip(specs_fz, args[:nf])}
+    tr = {name: arg for (name, _), arg in zip(specs_tr, args[nf : nf + nt])}
+    return fz, tr, args[nf + nt :]
+
+
+def build_train_step(preset, adapter, rank, classes, tasks, batch, seq):
+    """fwd+bwd step: (frozen..., trainable..., tokens, labels, scores,
+    weights, task_id, alpha) -> (loss, grad_per_trainable...).
+
+    `alpha` is a scalar *input*, so one artifact serves the whole
+    hyper-parameter grid of paper Appendix D."""
+    sfz = frozen_specs(preset, tasks, classes)
+    if adapter == "full":
+        sfz = sfz[-2:]  # only the heads stay frozen
+    stry = adapter_param_specs(adapter, preset, rank, tasks)
+
+    def step(*args):
+        fz, tr, data = _to_dicts(sfz, stry, args)
+        tokens, labels, scores, weights, task_id, alpha = data
+
+        def loss_fn(tr_):
+            logits = task_logits(preset, adapter, rank, alpha, fz, tr_, tokens, task_id)
+            return task_loss(logits, labels, scores, weights, classes)
+
+        loss, grads = jax.value_and_grad(loss_fn)(tr)
+        return (loss,) + tuple(grads[name] for name, _ in stry)
+
+    inputs = _input_specs(sfz, stry, batch, seq, with_labels=True)
+    outputs = [("loss", (), "f32")] + [
+        (f"grad_{name}", shape, "f32") for name, shape in stry
+    ]
+    return step, inputs, outputs, len(sfz), len(stry)
+
+
+def build_eval_step(preset, adapter, rank, classes, tasks, batch, seq):
+    """fwd step: (frozen..., trainable..., tokens, task_id, alpha) -> logits."""
+    sfz = frozen_specs(preset, tasks, classes)
+    if adapter == "full":
+        sfz = sfz[-2:]
+    stry = adapter_param_specs(adapter, preset, rank, tasks)
+
+    def step(*args):
+        fz, tr, data = _to_dicts(sfz, stry, args)
+        tokens, task_id, alpha = data
+        return (task_logits(preset, adapter, rank, alpha, fz, tr, tokens, task_id),)
+
+    inputs = _input_specs(sfz, stry, batch, seq, with_labels=False)
+    outputs = [("logits", (batch, classes), "f32")]
+    return step, inputs, outputs, len(sfz), len(stry)
+
+
+def build_pretrain_step(preset, batch, seq):
+    """MLM step over all encoder weights: (weights..., tokens, targets,
+    mask) -> (loss, grads...)."""
+    stry = encoder_specs(preset)
+
+    def step(*args):
+        _, tr, data = _to_dicts([], stry, args)
+        tokens, targets, mask = data
+
+        def loss_fn(tr_):
+            return mlm_loss(preset, tr_, tokens, targets, mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(tr)
+        return (loss,) + tuple(grads[name] for name, _ in stry)
+
+    inputs = [(name, shape, "f32") for name, shape in stry] + [
+        ("tokens", (batch, seq), "i32"),
+        ("targets", (batch, seq), "i32"),
+        ("mask", (batch, seq), "f32"),
+    ]
+    outputs = [("loss", (), "f32")] + [
+        (f"grad_{name}", shape, "f32") for name, shape in stry
+    ]
+    return step, inputs, outputs, 0, len(stry)
+
+
+def build_apply_step(preset, adapter, rank, alpha, batch, seq):
+    """Serving hot-path artifact: the *Pallas* fused adapter apply for one
+    (layer, matrix) slice — inputs are the pre-contracted factors."""
+    from .kernels import tt_apply as k
+
+    p = MODEL_PRESETS[preset]
+    d = p["hidden"]
+    n = batch * seq
+    if adapter == "lora":
+        def step(x, a, b_):
+            return (k.lora_apply(x, a, b_, alpha),)
+
+        inputs = [
+            ("x", (n, d), "f32"),
+            ("lora_a", (d, rank), "f32"),
+            ("lora_b", (rank, d), "f32"),
+        ]
+    else:
+        def step(x, g1, mid, g4):
+            return (k.tt_apply(x, g1, mid, g4, alpha),)
+
+        inputs = [
+            ("x", (n, d), "f32"),
+            ("g1", (d, rank), "f32"),
+            ("mid", (rank, rank), "f32"),
+            ("g4", (rank, d), "f32"),
+        ]
+    outputs = [("y", (n, d), "f32")]
+    return step, inputs, outputs, 0, len(inputs) - 1
+
+
+def _input_specs(sfz, stry, batch, seq, with_labels):
+    inputs = [(name, shape, "f32") for name, shape in sfz]
+    inputs += [(name, shape, "f32") for name, shape in stry]
+    inputs.append(("tokens", (batch, seq), "i32"))
+    if with_labels:
+        inputs += [
+            ("labels", (batch,), "i32"),
+            ("scores", (batch,), "f32"),
+            ("weights", (batch,), "f32"),
+        ]
+    inputs.append(("task_id", (), "i32"))
+    inputs.append(("alpha", (), "f32"))
+    return inputs
+
+
+# ---------------------------------------------------------------------------
+# Frozen-weight initialization (pre-pretraining starting point).
+# ---------------------------------------------------------------------------
+
+
+def init_encoder_weights(preset, seed=0):
+    """Fresh encoder weights (the state `metatt pretrain` starts from).
+    Returned in `encoder_specs` order."""
+    p = MODEL_PRESETS[preset]
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in encoder_specs(preset):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g", "ln1_g", "ln2_g")):
+            arr = jnp.ones(shape, jnp.float32)
+        elif name.startswith("b") or name.endswith("_b"):
+            arr = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            arr = jax.random.normal(sub, shape, jnp.float32) * (0.02 if "emb" in name else 1.0 / math.sqrt(fan_in))
+        out.append((name, arr))
+    return out

@@ -1,0 +1,105 @@
+"""AOT driver: lowering, manifest correctness, freshness hashing."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+class TestPlan:
+    def test_default_plan_covers_every_experiment(self):
+        reqs = aot.default_plan()
+        stems = {r.stem for r in reqs}
+        assert len(stems) == len(reqs), "duplicate artifact stems"
+        # Pretraining for tiny and small.
+        assert any(r.step == "pretrain" and r.preset == "tiny" for r in reqs)
+        assert any(r.step == "pretrain" and r.preset == "small" for r in reqs)
+        # Table 1: every adapter appears with train+eval at 2 classes.
+        for adapter in ("metatt4d", "metatt5d", "lora", "vera", "lotr", "full"):
+            assert any(
+                r.step == "train" and r.adapter == adapter and r.classes == 2
+                for r in reqs
+            ), adapter
+        # Regression (STS-B) and 3-class (MNLI) variants exist.
+        assert any(r.classes == 1 and r.step == "train" for r in reqs)
+        assert any(r.classes == 3 and r.step == "train" for r in reqs)
+        # DMRG ladder: metatt5d at every rank 4..10.
+        for rank in range(4, 11):
+            assert any(
+                r.adapter == "metatt5d" and r.rank == rank and r.classes == 2
+                for r in reqs
+            ), f"missing 5d rank {rank}"
+        # MTL artifacts at 3 and 4 tasks.
+        for tasks in (3, 4):
+            for adapter in ("metatt4p1d", "metatt4d", "lora"):
+                assert any(
+                    r.adapter == adapter and r.tasks == tasks for r in reqs
+                ), (adapter, tasks)
+        # Pallas serve kernels.
+        assert any(r.step == "apply" and r.adapter == "metatt4d" for r in reqs)
+        assert any(r.step == "apply" and r.adapter == "lora" for r in reqs)
+
+    def test_with_base_adds_base_sim(self):
+        base = aot.default_plan(with_base=True)
+        assert any(r.preset == "base_sim" and r.step == "pretrain" for r in base)
+        assert any(r.preset == "base_sim" and r.step == "train" for r in base)
+
+    def test_plan_hash_is_stable_and_plan_sensitive(self):
+        reqs = aot.default_plan()
+        assert aot.plan_hash(reqs) == aot.plan_hash(reqs)
+        assert aot.plan_hash(reqs) != aot.plan_hash(reqs[:-1])
+
+
+class TestLowering:
+    def test_lower_one_writes_valid_entry(self):
+        req = aot.Request("eval", "tiny", "metatt4d", 4, 2, 1, 2, 32)
+        with tempfile.TemporaryDirectory() as d:
+            entry, nbytes = aot.lower_one(req, d)
+            path = os.path.join(d, entry["file"])
+            assert os.path.exists(path) and nbytes > 1000
+            text = open(path).read()
+            assert text.startswith("HloModule")
+            # I/O layout matches the model's specs.
+            n_inputs = len(entry["inputs"])
+            sfz = model.frozen_specs("tiny", 1, 2)
+            stry = model.adapter_param_specs("metatt4d", "tiny", 4, 1)
+            assert entry["n_frozen"] == len(sfz)
+            assert entry["n_trainable"] == len(stry)
+            # frozen..., trainable..., tokens, task_id, alpha
+            assert n_inputs == len(sfz) + len(stry) + 3
+            assert entry["inputs"][0]["name"] == "tok_emb"
+            assert entry["inputs"][-1]["name"] == "alpha"
+            assert entry["outputs"][0]["name"] == "logits"
+            assert entry["outputs"][0]["shape"] == [2, 2]
+            # The HLO entry computation has exactly n_inputs parameters —
+            # keep_unused=True must stop jax from pruning unused args (e.g.
+            # `scores` in classification artifacts), or the rust call
+            # convention breaks.
+            import re
+            entry = text.split("ENTRY")[1]
+            params = re.findall(r"parameter\((\d+)\)", entry)
+            assert len(set(params)) == n_inputs, (len(set(params)), n_inputs)
+
+    def test_train_entry_grad_outputs(self):
+        req = aot.Request("train", "tiny", "lora", 4, 2, 1, 2, 32)
+        with tempfile.TemporaryDirectory() as d:
+            entry, _ = aot.lower_one(req, d)
+            names = [o["name"] for o in entry["outputs"]]
+            assert names == ["loss", "grad_lora_a", "grad_lora_b"]
+            assert entry["outputs"][1]["shape"] == [4, 2, 64, 4]
+
+    def test_train_entry_keeps_unused_inputs(self):
+        # Classification train steps never read `scores`; regression ones
+        # never read `labels` — both must still be HLO parameters.
+        import re
+        for classes in (1, 2):
+            req = aot.Request("train", "tiny", "metatt4d", 4, classes, 1, 2, 32)
+            with tempfile.TemporaryDirectory() as d:
+                entry, _ = aot.lower_one(req, d)
+                text = open(os.path.join(d, entry["file"])).read()
+                body = text.split("ENTRY")[1]
+                params = set(re.findall(r"parameter\((\d+)\)", body))
+                assert len(params) == len(entry["inputs"]), classes

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is THE core correctness signal of the compile path: the train-step
+artifacts lower `ref.py` and the serve artifacts lower the Pallas kernels,
+so kernel == ref is what makes the trained and served math the same
+function. Includes a hypothesis sweep over shapes/dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import tt_apply as k
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def assert_close(got, want, rel=1e-5):
+    """Scale-aware closeness: the kernel and ref accumulate in different
+    orders, so per-element error scales with the magnitude of the chain."""
+    scale = float(np.abs(want).max()) or 1.0
+    np.testing.assert_allclose(got, want, atol=rel * scale, rtol=1e-4)
+
+
+class TestTtApply4d:
+    def test_matches_ref_basic(self):
+        kx, k1, km, k4 = keys(0, 4)
+        x, g1 = rand(kx, (256, 64)), rand(k1, (64, 8))
+        mid, g4 = rand(km, (8, 8)), rand(k4, (8, 64))
+        got = k.tt_apply(x, g1, mid, g4, alpha=0.5)
+        want = ref.tt_apply_ref(x, g1, mid, g4, alpha=0.5)
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        blk=st.sampled_from([8, 32, 128]),
+        d_in=st.sampled_from([16, 64, 256]),
+        d_out=st.sampled_from([16, 64, 256]),
+        r=st.integers(1, 32),
+        alpha=st.sampled_from([0.5, 1.0, 4.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_shape_sweep(self, n_blocks, blk, d_in, d_out, r, alpha, seed):
+        n = n_blocks * blk
+        kx, k1, km, k4 = keys(seed, 4)
+        x, g1 = rand(kx, (n, d_in)), rand(k1, (d_in, r))
+        mid, g4 = rand(km, (r, r)), rand(k4, (r, d_out))
+        got = k.tt_apply(x, g1, mid, g4, alpha=alpha, block_n=blk)
+        want = ref.tt_apply_ref(x, g1, mid, g4, alpha=alpha)
+        assert_close(got, want)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_bfloat16_inputs_accumulate_in_f32(self, seed):
+        kx, k1, km, k4 = keys(seed, 4)
+        x = rand(kx, (128, 64), jnp.bfloat16)
+        g1 = rand(k1, (64, 8), jnp.bfloat16)
+        mid, g4 = rand(km, (8, 8), jnp.bfloat16), rand(k4, (8, 64), jnp.bfloat16)
+        got = k.tt_apply(x, g1, mid, g4, alpha=1.0).astype(jnp.float32)
+        want = ref.tt_apply_ref(
+            x.astype(jnp.float32), g1.astype(jnp.float32),
+            mid.astype(jnp.float32), g4.astype(jnp.float32), alpha=1.0,
+        )
+        # bf16 storage: ~3 decimal digits.
+        np.testing.assert_allclose(got, want, atol=0.25, rtol=0.1)
+
+    def test_zero_g1_gives_zero_output(self):
+        # The LoRA zero-at-init condition, paper §3.
+        kx, km, k4 = keys(1, 3)
+        x = rand(kx, (128, 32))
+        g1 = jnp.zeros((32, 4))
+        out = k.tt_apply(x, g1, rand(km, (4, 4)), rand(k4, (4, 32)), alpha=4.0)
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_rejects_indivisible_batch(self):
+        with pytest.raises(ValueError):
+            k.tt_apply(
+                jnp.zeros((100, 16)), jnp.zeros((16, 4)),
+                jnp.zeros((4, 4)), jnp.zeros((4, 16)), 1.0, block_n=64,
+            )
+
+
+class TestTtApply5d:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        heads=st.sampled_from([2, 4, 8]),
+        dh=st.sampled_from([8, 16]),
+        r=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, heads, dh, r, seed):
+        d = heads * dh
+        kx, k1, km, k4, k5 = keys(seed, 5)
+        x, g1 = rand(kx, (64, d)), rand(k1, (d, r))
+        mid = rand(km, (r, r))
+        g4h, g5 = rand(k4, (heads, r, r)), rand(k5, (r, dh))
+        got = k.tt_apply_5d(x, g1, mid, g4h, g5, alpha=0.5, block_n=32)
+        want = ref.tt_apply_5d_ref(x, g1, mid, g4h, g5, alpha=0.5)
+        assert_close(got, want)
+
+    def test_head_blocks_are_independent(self):
+        # Zeroing head h's core must zero exactly that output block.
+        kx, k1, km, k4, k5 = keys(3, 5)
+        h, r, dh = 4, 6, 8
+        d = h * dh
+        x, g1 = rand(kx, (32, d)), rand(k1, (d, r))
+        mid, g5 = rand(km, (r, r)), rand(k5, (r, dh))
+        g4h = rand(k4, (h, r, r))
+        g4h = g4h.at[2].set(0.0)
+        out = k.tt_apply_5d(x, g1, mid, g4h, g5, alpha=1.0, block_n=32)
+        blocks = out.reshape(32, h, dh)
+        assert float(jnp.abs(blocks[:, 2]).max()) == 0.0
+        assert float(jnp.abs(blocks[:, 0]).max()) > 0.0
+
+
+class TestLoraApply:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        d=st.sampled_from([32, 128]),
+        r=st.integers(1, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, d, r, seed):
+        kx, ka, kb = keys(seed, 3)
+        x, a, b = rand(kx, (128, d)), rand(ka, (d, r)), rand(kb, (r, d))
+        got = k.lora_apply(x, a, b, alpha=2.0)
+        want = ref.lora_apply_ref(x, a, b, alpha=2.0)
+        assert_close(got, want)
+
+
+class TestEquivalences:
+    def test_tt_reduces_to_lora_with_identity_mid(self):
+        # With mid = I, the TT chain is exactly a LoRA pair (A=G1, B=G4).
+        kx, k1, k4 = keys(4, 3)
+        x, g1, g4 = rand(kx, (64, 32)), rand(k1, (32, 8)), rand(k4, (8, 32))
+        tt = k.tt_apply(x, g1, jnp.eye(8), g4, alpha=1.5)
+        lora = k.lora_apply(x, g1, g4, alpha=1.5)
+        np.testing.assert_allclose(tt, lora, atol=1e-5, rtol=1e-5)
+
+    def test_alpha_is_linear_scaling(self):
+        kx, k1, km, k4 = keys(5, 4)
+        x, g1 = rand(kx, (64, 16)), rand(k1, (16, 4))
+        mid, g4 = rand(km, (4, 4)), rand(k4, (4, 16))
+        y1 = k.tt_apply(x, g1, mid, g4, alpha=1.0)
+        y4 = k.tt_apply(x, g1, mid, g4, alpha=4.0)
+        np.testing.assert_allclose(4.0 * y1, y4, atol=1e-5, rtol=1e-5)
+
+
+class TestAnalyze:
+    def test_vmem_fits_and_scales(self):
+        a = k.analyze(4096, 1024, 64)
+        assert a["vmem_frac"] < 0.25  # resident factors well inside VMEM
+        small = k.analyze(4096, 1024, 8)
+        assert small["arith_intensity"] < a["arith_intensity"]
+        assert 0.0 < a["mxu_util"] <= 1.0
+
+    def test_fused_chain_flops(self):
+        a = k.analyze(128, 64, 8)
+        # 2 * n * (d*r + r*r + r*d)
+        assert a["flops"] == 2 * 128 * (64 * 8 + 64 + 8 * 64)

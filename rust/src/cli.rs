@@ -1,0 +1,175 @@
+//! Tiny command-line parser for the `metatt` launcher.
+//!
+//! No `clap` in the offline registry; this covers what the launcher needs:
+//! one positional subcommand, `--key value` / `--key=value` options,
+//! boolean `--flag`s, and typed accessors with defaults. Unknown options
+//! are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, options, and free positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding argv[0]). `opt_names` lists value-taking
+    /// options, `flag_names` lists boolean flags (both without `--`).
+    /// Anything else starting with `--` is an error so typos fail loudly.
+    pub fn parse(
+        argv: &[String],
+        opt_names: &[&str],
+        flag_names: &[&str],
+    ) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if flag_names.contains(&key.as_str()) {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    args.flags.push(key);
+                } else if opt_names.contains(&key.as_str()) {
+                    if let Some(v) = inline_val {
+                        args.opts.insert(key, v);
+                    } else if let Some(next) = it.next() {
+                        args.opts.insert(key, next.clone());
+                    } else {
+                        return Err(format!("--{key} expects a value"));
+                    }
+                } else {
+                    return Err(format!("unknown option --{key}"));
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(opt_names: &[&str], flag_names: &[&str]) -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv, opt_names, flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a float, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--ranks 4,8,16`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name} expects ints, got '{p}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of strings, e.g. `--tasks mrpc_syn,rte_syn`.
+    pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|p| p.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|p| p.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(
+            &argv("train --task mrpc_syn --rank=8 --verbose out.json"),
+            &["task", "rank"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("task"), Some("mrpc_syn"));
+        assert_eq!(a.usize_or("rank", 0).unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.json"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&argv("x --nope 1"), &["yep"], &[]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(&argv("x --verbose=1"), &[], &["verbose"]).is_err());
+        assert!(Args::parse(&argv("x --task"), &["task"], &[]).is_err());
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = Args::parse(&argv("t --ranks 4,8,16"), &["ranks", "tasks"], &[]).unwrap();
+        assert_eq!(a.usize_list_or("ranks", &[]).unwrap(), vec![4, 8, 16]);
+        assert_eq!(a.str_list_or("tasks", &["cola_syn"]), vec!["cola_syn"]);
+        assert_eq!(a.f32_or("missing", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = Args::parse(&argv("t --lr -0.5"), &["lr"], &[]).unwrap();
+        // "-0.5" starts with '-' but not "--", so it's consumed as a value.
+        assert_eq!(a.f32_or("lr", 0.0).unwrap(), -0.5);
+    }
+}

@@ -1,0 +1,240 @@
+//! Experiment configuration: model presets, training hyper-parameters, and
+//! TOML-file loading for the launcher.
+//!
+//! Model presets: the compute-bearing experiments run on `tiny` / `small`
+//! encoders (CPU-feasible, see DESIGN.md §3); the analytic complexity
+//! experiments use true RoBERTa dimensions via `adapters::ModelDims`.
+
+use crate::adapters::{AdapterKind, AdapterSpec, ModelDims};
+use crate::util::json::Json;
+use crate::util::toml;
+use std::path::Path;
+
+/// A named model size preset. These must match `MODEL_PRESETS` in
+/// `python/compile/model.py` — the manifest records the preset per artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelPreset {
+    /// 4 layers, d=64, 4 heads, vocab 512, seq 32 — the experiment-grid
+    /// scale (~0.3 M params; every Table-1/Figure run is CPU-feasible).
+    Tiny,
+    /// 6 layers, d=128, 8 heads, vocab 1024, seq 64 — mid scale (~1.5 M).
+    Small,
+    /// 12 layers, d=256, 8 heads, vocab 1024, seq 64 — "base-sim", the e2e
+    /// example scale (~10 M); the RoBERTa stand-in for CPU runs.
+    BaseSim,
+}
+
+impl ModelPreset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelPreset::Tiny => "tiny",
+            ModelPreset::Small => "small",
+            ModelPreset::BaseSim => "base_sim",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<ModelPreset, String> {
+        match s {
+            "tiny" => Ok(ModelPreset::Tiny),
+            "small" => Ok(ModelPreset::Small),
+            "base_sim" => Ok(ModelPreset::BaseSim),
+            other => Err(format!("unknown model preset '{other}'")),
+        }
+    }
+
+    /// Structural dims (matrices = Q,V per paper App. A.2; tasks set by the
+    /// experiment).
+    pub fn dims(&self, tasks: usize) -> ModelDims {
+        match self {
+            ModelPreset::Tiny => ModelDims {
+                hidden: 64,
+                layers: 4,
+                heads: 4,
+                matrices: 2,
+                tasks,
+                vocab: 512,
+                ffn: 256,
+                max_seq: 32,
+            },
+            ModelPreset::Small => ModelDims {
+                hidden: 128,
+                layers: 6,
+                heads: 8,
+                matrices: 2,
+                tasks,
+                vocab: 1024,
+                ffn: 512,
+                max_seq: 64,
+            },
+            ModelPreset::BaseSim => ModelDims {
+                hidden: 256,
+                layers: 12,
+                heads: 8,
+                matrices: 2,
+                tasks,
+                vocab: 1024,
+                ffn: 1024,
+                max_seq: 64,
+            },
+        }
+    }
+}
+
+/// Training-loop hyper-parameters (paper Appendix D grids).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub warmup_ratio: f32,
+    /// Max global gradient norm; 0 disables clipping.
+    pub grad_clip: f32,
+    pub seed: u64,
+    /// Cap on training examples (the paper's MTL protocol caps at 5000).
+    pub train_cap: usize,
+    pub eval_cap: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            epochs: 20,
+            batch_size: 16,
+            lr: 1e-3,
+            weight_decay: 0.0,
+            warmup_ratio: 0.06,
+            grad_clip: 3.0,
+            seed: 42,
+            train_cap: 2_000,
+            eval_cap: 500,
+        }
+    }
+}
+
+/// A full experiment description (one run).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: ModelPreset,
+    pub adapter: AdapterKind,
+    pub rank: usize,
+    pub alpha: f32,
+    pub tasks: Vec<String>,
+    pub train: TrainConfig,
+}
+
+impl ExperimentConfig {
+    pub fn adapter_spec(&self) -> AdapterSpec {
+        let dims = self.model.dims(self.tasks.len().max(1));
+        AdapterSpec::new(self.adapter, self.rank, self.alpha, dims)
+    }
+
+    /// Load from a TOML file (see `configs/*.toml`).
+    pub fn from_toml(path: &Path) -> Result<ExperimentConfig, String> {
+        let doc = toml::parse_file(path)?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<ExperimentConfig, String> {
+        let str_field = |key: &str, default: &str| -> String {
+            doc.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+        };
+        let model = ModelPreset::from_name(&str_field("model", "tiny"))?;
+        let adapter = AdapterKind::from_name(&str_field("adapter", "metatt4d"))?;
+        let rank = doc.get("rank").and_then(|v| v.as_usize()).unwrap_or(8);
+        let alpha = doc.get("alpha").and_then(|v| v.as_f64()).unwrap_or(4.0) as f32;
+        let tasks = match doc.get("tasks").and_then(|v| v.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .map(|v| v.as_str().map(|s| s.to_string()))
+                .collect::<Option<Vec<_>>>()
+                .ok_or("tasks must be strings")?,
+            None => vec!["mrpc_syn".to_string()],
+        };
+        let mut train = TrainConfig::default();
+        if let Some(t) = doc.get("train") {
+            if let Some(v) = t.get("epochs").and_then(|v| v.as_usize()) {
+                train.epochs = v;
+            }
+            if let Some(v) = t.get("batch_size").and_then(|v| v.as_usize()) {
+                train.batch_size = v;
+            }
+            if let Some(v) = t.get("lr").and_then(|v| v.as_f64()) {
+                train.lr = v as f32;
+            }
+            if let Some(v) = t.get("weight_decay").and_then(|v| v.as_f64()) {
+                train.weight_decay = v as f32;
+            }
+            if let Some(v) = t.get("warmup_ratio").and_then(|v| v.as_f64()) {
+                train.warmup_ratio = v as f32;
+            }
+            if let Some(v) = t.get("grad_clip").and_then(|v| v.as_f64()) {
+                train.grad_clip = v as f32;
+            }
+            if let Some(v) = t.get("seed").and_then(|v| v.as_usize()) {
+                train.seed = v as u64;
+            }
+            if let Some(v) = t.get("train_cap").and_then(|v| v.as_usize()) {
+                train.train_cap = v;
+            }
+            if let Some(v) = t.get("eval_cap").and_then(|v| v.as_usize()) {
+                train.eval_cap = v;
+            }
+        }
+        Ok(ExperimentConfig { model, adapter, rank, alpha, tasks, train })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml;
+
+    #[test]
+    fn presets_have_consistent_dims() {
+        for p in [ModelPreset::Tiny, ModelPreset::Small, ModelPreset::BaseSim] {
+            let d = p.dims(1);
+            assert_eq!(d.hidden % d.heads, 0, "{:?}", p);
+            assert_eq!(ModelPreset::from_name(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn experiment_config_from_toml() {
+        let doc = toml::parse(
+            r#"
+model = "small"
+adapter = "metatt5d"
+rank = 16
+alpha = 0.5
+tasks = ["mrpc_syn", "rte_syn"]
+
+[train]
+epochs = 5
+batch_size = 32
+lr = 0.0005
+seed = 2025
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.model, ModelPreset::Small);
+        assert_eq!(cfg.adapter.name(), "metatt5d");
+        assert_eq!(cfg.rank, 16);
+        assert_eq!(cfg.tasks.len(), 2);
+        assert_eq!(cfg.train.epochs, 5);
+        assert_eq!(cfg.train.seed, 2025);
+        let spec = cfg.adapter_spec();
+        assert_eq!(spec.dims.tasks, 2);
+        assert!(spec.param_count() > 0);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let doc = toml::parse("model = \"tiny\"").unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.rank, 8);
+        assert_eq!(cfg.train.epochs, 20);
+        assert_eq!(cfg.tasks, vec!["mrpc_syn"]);
+    }
+}

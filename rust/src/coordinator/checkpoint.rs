@@ -1,0 +1,117 @@
+//! Checkpoint store: a minimal binary tensor container.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "MTT1" | u32 n_tensors
+//! per tensor: u32 name_len | name bytes | u32 ndim | u64 dims... | f32 data...
+//! ```
+//! Used for the pretrained frozen backbone (written by `metatt pretrain`,
+//! read by every fine-tuning run) and for trained adapter states.
+
+use crate::tensor::Tensor;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"MTT1";
+
+/// Save named tensors. Order is preserved.
+pub fn save(path: &Path, tensors: &[(String, Tensor)]) -> Result<(), String> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.extend_from_slice(&(t.ndim() as u32).to_le_bytes());
+        for &d in t.shape() {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &v in t.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let mut f = std::fs::File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
+    f.write_all(&buf).map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+/// Load named tensors in stored order.
+pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>, String> {
+    let mut f = std::fs::File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8], String> {
+        if *pos + n > buf.len() {
+            return Err("truncated checkpoint".into());
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    if take(&mut pos, 4)? != MAGIC {
+        return Err(format!("{}: bad magic (not a MetaTT checkpoint)", path.display()));
+    }
+    let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+            .map_err(|_| "bad tensor name".to_string())?;
+        let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let raw = take(&mut pos, numel * 4)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.push((name, Tensor::from_vec(&shape, data)));
+    }
+    if pos != buf.len() {
+        return Err("trailing bytes in checkpoint".into());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_preserves_names_shapes_data() {
+        let mut rng = Pcg64::new(1);
+        let tensors = vec![
+            ("emb".to_string(), Tensor::randn(&[10, 4], 1.0, &mut rng)),
+            ("scalar-ish".to_string(), Tensor::randn(&[1], 1.0, &mut rng)),
+            ("core.g2".to_string(), Tensor::randn(&[3, 2, 3], 1.0, &mut rng)),
+        ];
+        let dir = std::env::temp_dir().join("metatt_ckpt_test");
+        let path = dir.join("test.bin");
+        save(&path, &tensors).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        for ((n0, t0), (n1, t1)) in tensors.iter().zip(&loaded) {
+            assert_eq!(n0, n1);
+            assert_eq!(t0, t1);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("metatt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator: the paper's training orchestration, in rust.
+//!
+//! * [`trainer`] — single-task fine-tuning (Table 1 protocol)
+//! * [`mtl`] — joint multi-task training with task cores (Table 2, Figs 4-5)
+//! * [`dmrg`] — AdamW interleaved with rank-adaptive sweeps + executable
+//!   hot-swap (Figs 2, 6)
+//! * [`pretrain`] — MLM pretraining of the frozen backbone
+//! * [`checkpoint`] — binary tensor container
+//! * [`results`] — JSONL experiment records
+
+pub mod checkpoint;
+pub mod dmrg;
+pub mod mtl;
+pub mod pretrain;
+pub mod results;
+pub mod sequential;
+pub mod trainer;
+
+pub use dmrg::{run_dmrg, run_fixed_rank_baseline, DmrgConfig, DmrgResult};
+pub use mtl::{run_mtl, MtlConfig, MtlResult};
+pub use pretrain::{pretrain, PretrainConfig};
+pub use sequential::{run_sequential, SequentialResult};
+pub use trainer::{run_single_task, SingleTaskTrainer, TrainResult};

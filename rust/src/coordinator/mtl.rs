@@ -1,0 +1,209 @@
+//! Multi-task joint training (paper §3.2, Table 2, Appendix B).
+//!
+//! Joint training minimizes the composite loss Σ_k L_k by interleaving
+//! fixed-shape batches from every task within each epoch (each batch
+//! carries its task id, which selects both the frozen head and — for
+//! MetaTT-(4+1)D — the task core G3[t]). Datasets are downsampled to the
+//! paper's caps (≤5000 train / ≤500 eval per task); per-epoch evaluation
+//! reports each task's metric and their mean, and the per-core
+//! normalized-gradient probes `‖∇G‖_F/√|G|` of Appendix B are recorded for
+//! the Figure 4/5 heatmaps.
+
+use crate::adapters::AdapterSpec;
+use crate::config::{ModelPreset, TrainConfig};
+use crate::coordinator::trainer::{eval_metric, flatten_all, unflatten_all};
+use crate::data::{downsample, Batcher, Dataset, TaskId};
+use crate::optim::{clip_global_norm, AdamW, LrSchedule};
+use crate::runtime::{assemble_frozen, ArtifactSpec, Runtime, StepKind, StepRunner};
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Per-epoch MTL record.
+#[derive(Clone, Debug)]
+pub struct MtlEpochLog {
+    pub epoch: usize,
+    pub train_loss: f64,
+    /// Metric per task, in task order.
+    pub metrics: Vec<f64>,
+    pub mean_metric: f64,
+    /// Normalized gradient `‖∇G‖_F/√|G|` per trainable array (Appendix B),
+    /// averaged over the epoch's steps.
+    pub grad_norms: Vec<f64>,
+}
+
+/// Result of one MTL run.
+#[derive(Clone, Debug)]
+pub struct MtlResult {
+    pub tasks: Vec<TaskId>,
+    pub adapter: String,
+    pub param_count: usize,
+    /// Names of the trainable arrays (for the Fig 4/5 heatmap axes).
+    pub param_names: Vec<String>,
+    pub epochs: Vec<MtlEpochLog>,
+    /// Best mean-across-tasks metric over epochs (the paper's Table-2 rule).
+    pub best_mean: f64,
+    /// Per-task metric at the best-mean epoch.
+    pub best_per_task: Vec<f64>,
+}
+
+/// Joint training configuration on top of [`TrainConfig`].
+#[derive(Clone, Debug)]
+pub struct MtlConfig {
+    pub train: TrainConfig,
+    pub alpha: f32,
+    /// Paper's caps: ≤5000 train / ≤500 eval per task.
+    pub per_task_cap: usize,
+    pub eval_cap: usize,
+}
+
+impl Default for MtlConfig {
+    fn default() -> MtlConfig {
+        MtlConfig {
+            train: TrainConfig { grad_clip: 3.0, ..Default::default() },
+            alpha: 2.0, // Appendix B setting
+            per_task_cap: 5_000,
+            eval_cap: 500,
+        }
+    }
+}
+
+/// Run joint multi-task training of `spec` over `tasks`.
+pub fn run_mtl(
+    rt: &Runtime,
+    model: ModelPreset,
+    spec: &AdapterSpec,
+    tasks: &[TaskId],
+    cfg: &MtlConfig,
+    checkpoint: Option<&Path>,
+) -> Result<MtlResult> {
+    assert!(!tasks.is_empty());
+    let dims = model.dims(tasks.len());
+    // All MTL tasks share one 2-class artifact (CoLA/MRPC/RTE/QNLI analogues
+    // are all binary — mirrors the paper's task selection).
+    for t in tasks {
+        let info = t.info();
+        anyhow::ensure!(
+            !info.regression && info.num_classes == 2,
+            "MTL supports binary tasks (paper §3.2); got {}",
+            t.name()
+        );
+    }
+    let train_spec = ArtifactSpec {
+        step: StepKind::Train,
+        model: model.name().to_string(),
+        adapter: spec.kind.name(),
+        rank: spec.rank,
+        classes: 2,
+        tasks: tasks.len(),
+        batch: cfg.train.batch_size,
+        seq: dims.max_seq,
+    };
+    let mut eval_spec = train_spec.clone();
+    eval_spec.step = StepKind::Eval;
+    let entry = rt.manifest.require(&train_spec).map_err(anyhow::Error::msg)?;
+    let frozen = assemble_frozen(entry, checkpoint, model)?;
+    let train_runner = StepRunner::bind(rt, &train_spec, &frozen)?;
+    let eval_runner = StepRunner::bind(rt, &eval_spec, &frozen)?;
+
+    // Data: generate + downsample per the paper's protocol.
+    let mut data_rng = Pcg64::with_stream(cfg.train.seed, 0xd011 + tasks.len() as u64);
+    let datasets: Vec<Dataset> = tasks
+        .iter()
+        .map(|t| {
+            let info = t.info();
+            let full = t.generate_at(
+                info.train_size.min(cfg.per_task_cap * 2),
+                info.eval_size,
+                cfg.train.seed,
+                dims.max_seq,
+                dims.vocab,
+            );
+            downsample(&full, cfg.per_task_cap, cfg.eval_cap, &mut data_rng)
+        })
+        .collect();
+
+    let mut rng = Pcg64::with_stream(cfg.train.seed, 0x3417);
+    let mut params = spec.init_params_with(&mut rng, None);
+    let param_names: Vec<String> =
+        spec.param_specs().iter().map(|p| p.name.clone()).collect();
+    let batcher = Batcher::new(cfg.train.batch_size);
+    let steps_per_epoch: usize = datasets
+        .iter()
+        .map(|d| d.train.len().div_ceil(cfg.train.batch_size))
+        .sum();
+    let total = steps_per_epoch * cfg.train.epochs;
+    let sched = LrSchedule::new(cfg.train.lr, total, cfg.train.warmup_ratio);
+    let mut flat = flatten_all(&params);
+    let mut opt = AdamW::new(flat.len(), cfg.train.weight_decay);
+
+    let mut epochs: Vec<MtlEpochLog> = Vec::new();
+    let mut step = 0usize;
+    for epoch in 0..cfg.train.epochs {
+        // Interleave: all tasks' batches, shuffled together.
+        let mut tagged: Vec<(usize, crate::data::Batch)> = Vec::new();
+        for (ti, ds) in datasets.iter().enumerate() {
+            for b in batcher.epoch(ds, &mut rng) {
+                tagged.push((ti, b));
+            }
+        }
+        rng.shuffle(&mut tagged);
+        let mut loss_sum = 0.0;
+        let mut grad_sums = vec![0.0f64; params.len()];
+        for (ti, batch) in &tagged {
+            let (loss, grads) =
+                train_runner.run_train(&params, batch, *ti as i32, cfg.alpha)?;
+            // Appendix-B probe: ‖∇G‖_F/√|G| per core, before clipping.
+            for (gi, g) in grads.iter().enumerate() {
+                let nnz = g.nnz().max(1);
+                grad_sums[gi] += (g.fro_norm() as f64) / (nnz as f64).sqrt();
+            }
+            let mut gflat = flatten_all(&grads);
+            if cfg.train.grad_clip > 0.0 {
+                clip_global_norm(&mut gflat, cfg.train.grad_clip);
+            }
+            opt.step(&mut flat, &gflat, sched.lr_at(step));
+            unflatten_all(&mut params, &flat);
+            loss_sum += loss as f64;
+            step += 1;
+        }
+        // Per-task eval.
+        let mut metrics = Vec::with_capacity(tasks.len());
+        for (ti, ds) in datasets.iter().enumerate() {
+            let m = eval_metric(
+                &eval_runner,
+                &params,
+                ds,
+                &batcher,
+                ti as i32,
+                cfg.alpha,
+                tasks[ti].info().metric,
+            )?;
+            metrics.push(m);
+        }
+        let mean = metrics.iter().sum::<f64>() / metrics.len() as f64;
+        epochs.push(MtlEpochLog {
+            epoch,
+            train_loss: loss_sum / tagged.len().max(1) as f64,
+            mean_metric: mean,
+            metrics,
+            grad_norms: grad_sums
+                .iter()
+                .map(|s| s / tagged.len().max(1) as f64)
+                .collect(),
+        });
+    }
+    let best = epochs
+        .iter()
+        .max_by(|a, b| a.mean_metric.partial_cmp(&b.mean_metric).unwrap())
+        .context("no epochs")?;
+    Ok(MtlResult {
+        tasks: tasks.to_vec(),
+        adapter: spec.kind.name(),
+        param_count: spec.param_count(),
+        param_names,
+        best_mean: best.mean_metric,
+        best_per_task: best.metrics.clone(),
+        epochs,
+    })
+}

@@ -1,0 +1,97 @@
+//! MLM pretraining of the frozen backbone (the RoBERTa stand-in).
+//!
+//! Runs the full-weight MLM artifact for `steps` batches of the synthetic
+//! corpus, AdamW + constant LR + warmup, and writes the checkpoint every
+//! `save_every` steps and at the end. The resulting weights are the frozen
+//! encoder every fine-tuning experiment loads (DESIGN.md §3 substitution).
+
+use crate::config::ModelPreset;
+use crate::coordinator::checkpoint;
+use crate::coordinator::trainer::{flatten_all, unflatten_all};
+use crate::data::MlmCorpus;
+use crate::optim::{clip_global_norm, AdamW, LrSchedule};
+use crate::runtime::{checkpoint_path, init_encoder_weights, ArtifactSpec, Runtime, StepKind, StepRunner};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Pretraining configuration.
+#[derive(Clone, Debug)]
+pub struct PretrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> PretrainConfig {
+        PretrainConfig { steps: 600, lr: 1e-3, warmup: 50, seed: 1234, log_every: 50 }
+    }
+}
+
+/// Loss trace of a pretraining run.
+#[derive(Clone, Debug)]
+pub struct PretrainResult {
+    pub losses: Vec<(usize, f64)>,
+    pub final_loss: f64,
+    pub checkpoint: std::path::PathBuf,
+}
+
+/// Run MLM pretraining for `preset`; saves `checkpoints/pretrained_<p>.bin`.
+pub fn pretrain(rt: &Runtime, preset: ModelPreset, cfg: &PretrainConfig) -> Result<PretrainResult> {
+    let spec = find_pretrain_spec(rt, preset)?;
+    let entry = rt.manifest.require(&spec).map_err(anyhow::Error::msg)?.clone();
+    // Trainable = the whole encoder; initialize in-rust.
+    let shapes: Vec<(String, Vec<usize>)> = entry
+        .trainable_inputs()
+        .iter()
+        .map(|io| (io.name.clone(), io.shape.clone()))
+        .collect();
+    let named = init_encoder_weights(&shapes, cfg.seed);
+    let mut params: Vec<Tensor> = named.iter().map(|(_, t)| t.clone()).collect();
+    let names: Vec<String> = named.into_iter().map(|(n, _)| n).collect();
+
+    let runner = StepRunner::bind(rt, &spec, &HashMap::new())?;
+    let dims = preset.dims(1);
+    let mut corpus = MlmCorpus::new(dims.vocab, spec.seq, cfg.seed);
+    let sched = LrSchedule::new(cfg.lr, cfg.steps, cfg.warmup as f32 / cfg.steps.max(1) as f32);
+    let mut flat = flatten_all(&params);
+    let mut opt = AdamW::new(flat.len(), 0.01);
+    let mut losses = Vec::new();
+    let mut final_loss = f64::NAN;
+    for step in 0..cfg.steps {
+        let batch = corpus.next_batch(spec.batch);
+        let (loss, grads) = runner.run_pretrain(&params, &batch)?;
+        let mut gflat = flatten_all(&grads);
+        clip_global_norm(&mut gflat, 1.0);
+        opt.step(&mut flat, &gflat, sched.lr_at(step));
+        unflatten_all(&mut params, &flat);
+        final_loss = loss as f64;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            losses.push((step, loss as f64));
+            println!("[pretrain {}] step {:>5} loss {:.4}", preset.name(), step, loss);
+        }
+    }
+    let path = checkpoint_path(preset);
+    let tensors: Vec<(String, Tensor)> =
+        names.into_iter().zip(params.into_iter()).collect();
+    checkpoint::save(&path, &tensors).map_err(anyhow::Error::msg)?;
+    println!("[pretrain {}] saved {}", preset.name(), path.display());
+    Ok(PretrainResult { losses, final_loss, checkpoint: path })
+}
+
+/// The manifest's pretrain artifact for a preset (batch/seq fixed by aot.py).
+pub fn find_pretrain_spec(rt: &Runtime, preset: ModelPreset) -> Result<ArtifactSpec> {
+    rt.manifest
+        .specs()
+        .find(|s| s.step == StepKind::Pretrain && s.model == preset.name())
+        .cloned()
+        .ok_or_else(|| {
+            anyhow!(
+                "no pretrain artifact for '{}' in manifest — run `make artifacts`",
+                preset.name()
+            )
+        })
+}

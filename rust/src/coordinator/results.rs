@@ -1,0 +1,48 @@
+//! Structured results logging: every experiment run appends a JSON record
+//! under `results/` so tables can be rebuilt without re-running.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Append one JSON record to `results/<name>.jsonl`.
+pub fn append_record(name: &str, record: &Json) {
+    let dir = Path::new("results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{name}.jsonl"));
+    let mut line = record.to_string();
+    line.push('\n');
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = f.write_all(line.as_bytes());
+    }
+}
+
+/// Load all records from `results/<name>.jsonl`.
+pub fn load_records(name: &str) -> Vec<Json> {
+    let path = Path::new("results").join(format!("{name}.jsonl"));
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        return Vec::new();
+    };
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(|l| crate::util::json::parse(l).ok())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_load_roundtrip() {
+        let name = "results_test_tmp";
+        let path = Path::new("results").join(format!("{name}.jsonl"));
+        let _ = std::fs::remove_file(&path);
+        append_record(name, &Json::obj(vec![("a", Json::num(1.0))]));
+        append_record(name, &Json::obj(vec![("a", Json::num(2.0))]));
+        let recs = load_records(name);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].get("a").unwrap().as_f64(), Some(2.0));
+        let _ = std::fs::remove_file(&path);
+    }
+}

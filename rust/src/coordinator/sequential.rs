@@ -1,0 +1,115 @@
+//! Sequential multi-task learning (paper §3.2, first bullet).
+//!
+//! "This approach involves first fine-tuning a model on a specific task,
+//! transferring the adapter to a new task for further fine-tuning, and then
+//! transferring the adapter back to the original task. […] a significant
+//! challenge with sequential learning is the risk of catastrophic
+//! forgetting or training interference."
+//!
+//! This module implements exactly that A → B → A protocol with a single
+//! shared adapter, measuring the paper's failure mode: the metric on task A
+//! immediately after phase B (the *forgetting gap*) versus after
+//! re-adaptation. Joint training (`mtl.rs`) is the paper's preferred
+//! alternative; this exists so the comparison in §3.2 is reproducible.
+
+use crate::adapters::AdapterSpec;
+use crate::config::{ExperimentConfig, ModelPreset, TrainConfig};
+use crate::coordinator::trainer::{eval_metric, SingleTaskTrainer};
+use crate::data::{Batcher, TaskId};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+use std::path::Path;
+
+/// One phase of the sequence: which task was trained and the metrics of
+/// *both* tasks after it.
+#[derive(Clone, Debug)]
+pub struct PhaseLog {
+    pub trained_task: TaskId,
+    pub metric_a: f64,
+    pub metric_b: f64,
+}
+
+/// Result of the A → B → A protocol.
+#[derive(Clone, Debug)]
+pub struct SequentialResult {
+    pub task_a: TaskId,
+    pub task_b: TaskId,
+    pub phases: Vec<PhaseLog>,
+    /// metric_A(after phase 1) − metric_A(after phase 2): how much of task
+    /// A was forgotten while training on B (positive = forgetting).
+    pub forgetting_gap: f64,
+    /// metric_A(after phase 3) − metric_A(after phase 1): net gain from the
+    /// round trip (the paper's hoped-for transfer, usually ≤ 0).
+    pub roundtrip_gain: f64,
+}
+
+/// Run sequential learning A → B → A with a single shared adapter.
+/// Both tasks must be binary (the shared 2-class artifact).
+pub fn run_sequential(
+    rt: &Runtime,
+    model: ModelPreset,
+    spec: &AdapterSpec,
+    task_a: TaskId,
+    task_b: TaskId,
+    train: &TrainConfig,
+    alpha: f32,
+    checkpoint: Option<&Path>,
+) -> Result<SequentialResult> {
+    for t in [task_a, task_b] {
+        let info = t.info();
+        anyhow::ensure!(
+            !info.regression && info.num_classes == 2,
+            "sequential learning uses binary tasks; got {}",
+            t.name()
+        );
+    }
+    let make_trainer = |task: TaskId| -> Result<SingleTaskTrainer<'_>> {
+        let exp = ExperimentConfig {
+            model,
+            adapter: spec.kind,
+            rank: spec.rank,
+            alpha,
+            tasks: vec![task.name().to_string()],
+            train: train.clone(),
+        };
+        SingleTaskTrainer::prepare(rt, &exp, task, checkpoint)
+    };
+    let trainer_a = make_trainer(task_a)?;
+    let trainer_b = make_trainer(task_b)?;
+    let batcher = Batcher::new(train.batch_size);
+
+    let eval_both = |params: &[Tensor],
+                     ta: &SingleTaskTrainer,
+                     tb: &SingleTaskTrainer|
+     -> Result<(f64, f64)> {
+        let ma = eval_metric(
+            &ta.eval_runner, params, &ta.ds, &batcher, 0, alpha, task_a.info().metric,
+        )?;
+        let mb = eval_metric(
+            &tb.eval_runner, params, &tb.ds, &batcher, 0, alpha, task_b.info().metric,
+        )?;
+        Ok((ma, mb))
+    };
+
+    let mut rng = Pcg64::with_stream(train.seed, 0x1417);
+    let mut params = spec.init_params_with(&mut rng, None);
+    let mut phases = Vec::new();
+    for (phase, trainer) in [(&trainer_a), (&trainer_b), (&trainer_a)].iter().enumerate() {
+        trainer.run_from(spec, &mut params)?;
+        let (ma, mb) = eval_both(&params, &trainer_a, &trainer_b)?;
+        phases.push(PhaseLog {
+            trained_task: if phase == 1 { task_b } else { task_a },
+            metric_a: ma,
+            metric_b: mb,
+        });
+    }
+    Ok(SequentialResult {
+        task_a,
+        task_b,
+        forgetting_gap: phases[0].metric_a - phases[1].metric_a,
+        roundtrip_gain: phases[2].metric_a - phases[0].metric_a,
+        phases,
+    })
+}

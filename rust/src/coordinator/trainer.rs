@@ -1,0 +1,306 @@
+//! Single-task fine-tuning trainer (the Table-1 workhorse).
+//!
+//! Mirrors the paper's protocol (§3.1 / Appendix D): AdamW with linear
+//! warmup (warmup_ratio) + linear decay, only adapter weights trainable,
+//! frozen random classifier head, eval at every epoch, best-epoch metric
+//! reported; multiple seeds aggregated by the caller.
+
+use crate::adapters::AdapterSpec;
+use crate::config::{ExperimentConfig, ModelPreset, TrainConfig};
+use crate::data::{Batcher, Dataset, TaskId};
+use crate::metrics::{self, MetricKind};
+use crate::optim::{clip_global_norm, AdamW, LrSchedule};
+use crate::runtime::{assemble_frozen, ArtifactSpec, Runtime, StepKind, StepRunner};
+use crate::tensor::Tensor;
+use crate::tt::InitStrategy;
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Per-epoch record.
+#[derive(Clone, Debug)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub metric: f64,
+}
+
+/// Outcome of one fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub task: TaskId,
+    pub adapter: String,
+    pub rank: usize,
+    pub param_count: usize,
+    pub epochs: Vec<EpochLog>,
+    /// Best eval metric across epochs (the paper's reporting rule).
+    pub best_metric: f64,
+    /// Final trained adapter tensors (export layout).
+    pub params: Vec<Tensor>,
+}
+
+/// Flatten/unflatten helpers over a list of tensors (optimizer state is one
+/// flat vector).
+pub fn flatten_all(ts: &[Tensor]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(ts.iter().map(|t| t.len()).sum());
+    for t in ts {
+        out.extend_from_slice(t.data());
+    }
+    out
+}
+
+pub fn unflatten_all(ts: &mut [Tensor], flat: &[f32]) {
+    let mut off = 0;
+    for t in ts.iter_mut() {
+        let n = t.len();
+        t.data_mut().copy_from_slice(&flat[off..off + n]);
+        off += n;
+    }
+    debug_assert_eq!(off, flat.len());
+}
+
+/// Compute the task metric from logits batches.
+pub fn eval_metric(
+    runner: &StepRunner,
+    params: &[Tensor],
+    ds: &Dataset,
+    batcher: &Batcher,
+    task_idx: i32,
+    alpha: f32,
+    metric: MetricKind,
+) -> Result<f64> {
+    let mut preds: Vec<usize> = Vec::new();
+    let mut golds: Vec<usize> = Vec::new();
+    let mut pred_scores: Vec<f32> = Vec::new();
+    let mut gold_scores: Vec<f32> = Vec::new();
+    for batch in batcher.eval(ds) {
+        let logits = runner.run_eval(params, &batch, task_idx, alpha)?;
+        let classes = logits.cols();
+        for i in 0..batch.batch_size {
+            if batch.weights[i] == 0.0 {
+                continue;
+            }
+            if metric == MetricKind::Spearman {
+                pred_scores.push(logits.at(i, 0));
+                gold_scores.push(batch.scores[i]);
+            } else {
+                let mut best = 0;
+                for c in 1..classes {
+                    if logits.at(i, c) > logits.at(i, best) {
+                        best = c;
+                    }
+                }
+                preds.push(best);
+                golds.push(batch.labels[i] as usize);
+            }
+        }
+    }
+    Ok(match metric {
+        MetricKind::Accuracy => metrics::accuracy(&preds, &golds),
+        MetricKind::Matthews => metrics::matthews_corr(&preds, &golds),
+        MetricKind::Spearman => metrics::spearman_corr(&pred_scores, &gold_scores),
+    })
+}
+
+/// A fully-wired single-task fine-tuning session.
+pub struct SingleTaskTrainer<'rt> {
+    pub train_runner: StepRunner<'rt>,
+    pub eval_runner: StepRunner<'rt>,
+    pub task: TaskId,
+    pub ds: Dataset,
+    pub cfg: TrainConfig,
+    pub alpha: f32,
+}
+
+impl<'rt> SingleTaskTrainer<'rt> {
+    /// Wire up runners + data for `cfg` on `task`.
+    pub fn prepare(
+        rt: &'rt Runtime,
+        exp: &ExperimentConfig,
+        task: TaskId,
+        checkpoint: Option<&Path>,
+    ) -> Result<SingleTaskTrainer<'rt>> {
+        let info = task.info();
+        let classes = if info.regression { 1 } else { info.num_classes };
+        let dims = exp.model.dims(1);
+        let train_spec = ArtifactSpec {
+            step: StepKind::Train,
+            model: exp.model.name().to_string(),
+            adapter: exp.adapter.name(),
+            rank: exp.rank,
+            classes,
+            tasks: 1,
+            batch: exp.train.batch_size,
+            seq: dims.max_seq,
+        };
+        let mut eval_spec = train_spec.clone();
+        eval_spec.step = StepKind::Eval;
+        let entry = rt.manifest.require(&train_spec).map_err(anyhow::Error::msg)?;
+        let frozen = assemble_frozen(entry, checkpoint, exp.model)?;
+        let train_runner = StepRunner::bind(rt, &train_spec, &frozen)?;
+        let eval_runner = StepRunner::bind(rt, &eval_spec, &frozen)?;
+        let mut data_rng = Pcg64::with_stream(exp.train.seed, 0xda7a);
+        let n_train = exp.train.train_cap.min(info.train_size);
+        let ds = task.generate_at(
+            n_train,
+            exp.train.eval_cap.min(info.eval_size),
+            exp.train.seed,
+            dims.max_seq,
+            dims.vocab,
+        );
+        let _ = &mut data_rng;
+        Ok(SingleTaskTrainer {
+            train_runner,
+            eval_runner,
+            task,
+            ds,
+            cfg: exp.train.clone(),
+            alpha: exp.alpha,
+        })
+    }
+
+    /// Run the training loop from the spec's default init.
+    pub fn run(&self, spec: &AdapterSpec, init: Option<&InitStrategy>) -> Result<TrainResult> {
+        let mut rng = Pcg64::with_stream(self.cfg.seed, 0x1417);
+        let mut params = spec.init_params_with(&mut rng, init);
+        self.run_from(spec, &mut params)
+    }
+
+    /// Training loop over provided (mutable) params; returns the result and
+    /// leaves the trained values in `params`.
+    pub fn run_from(
+        &self,
+        spec: &AdapterSpec,
+        params: &mut Vec<Tensor>,
+    ) -> Result<TrainResult> {
+        let info = self.task.info();
+        let batcher = Batcher::new(self.cfg.batch_size);
+        let steps_per_epoch = self.ds.train.len().div_ceil(self.cfg.batch_size);
+        let total_steps = steps_per_epoch * self.cfg.epochs;
+        let sched = LrSchedule::new(self.cfg.lr, total_steps, self.cfg.warmup_ratio);
+        let mut flat = flatten_all(params);
+        let mut opt = AdamW::new(flat.len(), self.cfg.weight_decay);
+        let mut rng = Pcg64::with_stream(self.cfg.seed, 0x0bac);
+        let mut step = 0usize;
+        let mut epochs = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        for epoch in 0..self.cfg.epochs {
+            let mut loss_sum = 0.0f64;
+            let mut nb = 0usize;
+            for batch in batcher.epoch(&self.ds, &mut rng) {
+                let (loss, grads) = self.train_runner.run_train(params, &batch, 0, self.alpha)?;
+                let mut gflat = flatten_all(&grads);
+                if self.cfg.grad_clip > 0.0 {
+                    clip_global_norm(&mut gflat, self.cfg.grad_clip);
+                }
+                opt.step(&mut flat, &gflat, sched.lr_at(step));
+                unflatten_all(params, &flat);
+                loss_sum += loss as f64;
+                nb += 1;
+                step += 1;
+            }
+            let metric = eval_metric(
+                &self.eval_runner,
+                params,
+                &self.ds,
+                &batcher,
+                0,
+                self.alpha,
+                info.metric,
+            )?;
+            best = best.max(metric);
+            epochs.push(EpochLog {
+                epoch,
+                train_loss: loss_sum / nb.max(1) as f64,
+                metric,
+            });
+        }
+        Ok(TrainResult {
+            task: self.task,
+            adapter: spec.kind.name(),
+            rank: spec.rank,
+            param_count: spec.param_count(),
+            epochs,
+            best_metric: best,
+            params: params.clone(),
+        })
+    }
+}
+
+/// Initial trainable tensors for a spec. Adapters come from their init
+/// rules; **full fine-tuning** trains the encoder itself, so its trainable
+/// set is the pretrained checkpoint (or a fresh encoder when absent).
+pub fn init_trainable(
+    spec: &AdapterSpec,
+    entry: &crate::runtime::ArtifactEntry,
+    checkpoint: Option<&Path>,
+    seed: u64,
+    init: Option<&InitStrategy>,
+) -> Result<Vec<Tensor>> {
+    if !matches!(spec.kind, crate::adapters::AdapterKind::Full) {
+        let mut rng = Pcg64::with_stream(seed, 0x1417);
+        return Ok(spec.init_params_with(&mut rng, init));
+    }
+    let shapes: Vec<(String, Vec<usize>)> = entry
+        .trainable_inputs()
+        .iter()
+        .map(|io| (io.name.clone(), io.shape.clone()))
+        .collect();
+    match checkpoint {
+        Some(p) if p.exists() => {
+            let named = crate::coordinator::checkpoint::load(p).map_err(anyhow::Error::msg)?;
+            let map: std::collections::HashMap<String, Tensor> = named.into_iter().collect();
+            shapes
+                .iter()
+                .map(|(name, shape)| {
+                    let t = map
+                        .get(name)
+                        .with_context(|| format!("checkpoint missing '{name}' for full FT"))?;
+                    anyhow::ensure!(
+                        t.shape() == &shape[..],
+                        "checkpoint '{}' shape {:?} != artifact {:?}",
+                        name,
+                        t.shape(),
+                        shape
+                    );
+                    Ok(t.clone())
+                })
+                .collect()
+        }
+        _ => Ok(crate::runtime::init_encoder_weights(&shapes, seed)
+            .into_iter()
+            .map(|(_, t)| t)
+            .collect()),
+    }
+}
+
+/// Convenience: run one seed of (model, adapter, rank, task) end to end.
+pub fn run_single_task(
+    rt: &Runtime,
+    model: ModelPreset,
+    adapter_spec: &AdapterSpec,
+    task: TaskId,
+    train: &TrainConfig,
+    alpha: f32,
+    checkpoint: Option<&Path>,
+    init: Option<&InitStrategy>,
+) -> Result<TrainResult> {
+    let exp = ExperimentConfig {
+        model,
+        adapter: adapter_spec.kind,
+        rank: adapter_spec.rank,
+        alpha,
+        tasks: vec![task.name().to_string()],
+        train: train.clone(),
+    };
+    let trainer = SingleTaskTrainer::prepare(rt, &exp, task, checkpoint)
+        .with_context(|| format!("prepare {} on {}", adapter_spec.kind.name(), task.name()))?;
+    let mut params = init_trainable(
+        adapter_spec,
+        &trainer.train_runner.entry,
+        checkpoint,
+        train.seed,
+        init,
+    )?;
+    trainer.run_from(adapter_spec, &mut params)
+}

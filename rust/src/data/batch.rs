@@ -1,0 +1,135 @@
+//! Batching: fixed-shape batches for the AOT-compiled train/eval steps.
+//!
+//! HLO executables have static shapes, so every batch is exactly
+//! `batch_size × seq_len`; the final ragged batch of an epoch is padded by
+//! repeating examples and a `weights` mask zeroes their loss contribution.
+
+use super::tasks::{Dataset, Example};
+use crate::util::rng::Pcg64;
+
+/// A fixed-shape batch ready for device upload.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Token ids, row-major `[batch, seq]`, as i32 for the HLO input.
+    pub tokens: Vec<i32>,
+    /// Class labels (i32) — zeros for regression tasks.
+    pub labels: Vec<i32>,
+    /// Regression targets (f32) — zeros for classification tasks.
+    pub scores: Vec<f32>,
+    /// Per-example loss weights (0.0 marks padding rows).
+    pub weights: Vec<f32>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+}
+
+impl Batch {
+    fn from_examples(examples: &[&Example], batch_size: usize, seq_len: usize) -> Batch {
+        assert!(!examples.is_empty() && examples.len() <= batch_size);
+        let mut tokens = Vec::with_capacity(batch_size * seq_len);
+        let mut labels = Vec::with_capacity(batch_size);
+        let mut scores = Vec::with_capacity(batch_size);
+        let mut weights = Vec::with_capacity(batch_size);
+        for i in 0..batch_size {
+            // Pad the tail by cycling examples with zero weight.
+            let (e, w) = if i < examples.len() {
+                (examples[i], 1.0)
+            } else {
+                (examples[i % examples.len()], 0.0)
+            };
+            assert_eq!(e.tokens.len(), seq_len, "example length mismatch");
+            tokens.extend(e.tokens.iter().map(|&t| t as i32));
+            labels.push(e.label as i32);
+            scores.push(e.score);
+            weights.push(w);
+        }
+        Batch { tokens, labels, scores, weights, batch_size, seq_len }
+    }
+
+    /// Number of real (non-padding) examples.
+    pub fn real_count(&self) -> usize {
+        self.weights.iter().filter(|&&w| w > 0.0).count()
+    }
+}
+
+/// Epoch iterator producing shuffled fixed-shape batches.
+pub struct Batcher {
+    batch_size: usize,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize) -> Batcher {
+        assert!(batch_size >= 1);
+        Batcher { batch_size }
+    }
+
+    /// Shuffled training batches for one epoch.
+    pub fn epoch(&self, ds: &Dataset, rng: &mut Pcg64) -> Vec<Batch> {
+        let mut order: Vec<usize> = (0..ds.train.len()).collect();
+        rng.shuffle(&mut order);
+        order
+            .chunks(self.batch_size)
+            .map(|chunk| {
+                let refs: Vec<&Example> = chunk.iter().map(|&i| &ds.train[i]).collect();
+                Batch::from_examples(&refs, self.batch_size, ds.seq_len)
+            })
+            .collect()
+    }
+
+    /// Deterministic evaluation batches.
+    pub fn eval(&self, ds: &Dataset) -> Vec<Batch> {
+        ds.eval
+            .chunks(self.batch_size)
+            .map(|chunk| {
+                let refs: Vec<&Example> = chunk.iter().collect();
+                Batch::from_examples(&refs, self.batch_size, ds.seq_len)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TaskId;
+
+    #[test]
+    fn epoch_covers_every_example_once() {
+        let ds = TaskId::Sst2Syn.generate(103, 10, 1);
+        let batcher = Batcher::new(16);
+        let mut rng = Pcg64::new(2);
+        let batches = batcher.epoch(&ds, &mut rng);
+        assert_eq!(batches.len(), 7); // ceil(103/16)
+        let total_real: usize = batches.iter().map(|b| b.real_count()).sum();
+        assert_eq!(total_real, 103);
+        for b in &batches {
+            assert_eq!(b.tokens.len(), 16 * ds.seq_len);
+            assert_eq!(b.labels.len(), 16);
+        }
+        // last batch padded with zero weights
+        let last = batches.last().unwrap();
+        assert_eq!(last.real_count(), 103 % 16);
+    }
+
+    #[test]
+    fn eval_batches_are_deterministic() {
+        let ds = TaskId::MrpcSyn.generate(10, 33, 1);
+        let batcher = Batcher::new(8);
+        let a = batcher.eval(&ds);
+        let b = batcher.eval(&ds);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.weights, y.weights);
+        }
+    }
+
+    #[test]
+    fn shuffling_differs_across_epochs() {
+        let ds = TaskId::Sst2Syn.generate(64, 0, 1);
+        let batcher = Batcher::new(16);
+        let mut rng = Pcg64::new(3);
+        let e1 = batcher.epoch(&ds, &mut rng);
+        let e2 = batcher.epoch(&ds, &mut rng);
+        assert_ne!(e1[0].tokens, e2[0].tokens);
+    }
+}

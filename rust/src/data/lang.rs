@@ -1,0 +1,318 @@
+//! The planted synthetic language shared by every task generator.
+//!
+//! Token space (vocab `V`, default 1024):
+//! * ids 0..4 — specials: PAD, CLS, SEP, MASK.
+//! * "function" tokens — emitted by a 6-state bigram automaton; sentences
+//!   that follow the automaton are "grammatical".
+//! * topic bands — contiguous id ranges carrying content: per-topic nouns.
+//! * polarity bands — positive / negative sentiment carriers.
+//!
+//! A sentence is sampled by walking the automaton and, at content states,
+//! emitting from the active topic / polarity band. Perturbation helpers
+//! build the second element of pair tasks (paraphrase via synonym
+//! substitution inside a band, contradiction via polarity flip, random
+//! unrelated sentences, automaton violations for the CoLA analogue).
+
+use crate::util::rng::Pcg64;
+
+pub const PAD: u32 = 0;
+pub const CLS: u32 = 1;
+pub const SEP: u32 = 2;
+pub const MASK: u32 = 3;
+/// Number of reserved special ids.
+pub const SPECIAL_TOKENS: u32 = 4;
+
+/// Automaton states.
+const N_STATES: usize = 6;
+
+/// The synthetic language: vocabulary layout + transition tables.
+#[derive(Clone, Debug)]
+pub struct SynthLang {
+    pub vocab: usize,
+    /// Function-token range start (one sub-band per automaton state).
+    func_base: u32,
+    func_band: u32,
+    /// Topic bands: `n_topics` bands of `band` tokens each.
+    topic_base: u32,
+    pub n_topics: usize,
+    band: u32,
+    /// Positive / negative polarity bands.
+    pos_base: u32,
+    neg_base: u32,
+    pol_band: u32,
+    /// Bigram automaton: transition[state] = list of next states.
+    transition: [[usize; 2]; N_STATES],
+}
+
+impl SynthLang {
+    /// Default layout for a given vocab size (>= 256).
+    pub fn new(vocab: usize) -> SynthLang {
+        assert!(vocab >= 256, "vocab too small");
+        let func_band = 8u32;
+        let func_base = SPECIAL_TOKENS;
+        let n_topics = 8usize;
+        let band = 24u32;
+        let topic_base = func_base + N_STATES as u32 * func_band;
+        let pol_band = 24u32;
+        let pos_base = topic_base + n_topics as u32 * band;
+        let neg_base = pos_base + pol_band;
+        assert!((neg_base + pol_band) as usize <= vocab, "vocab layout overflow");
+        SynthLang {
+            vocab,
+            func_base,
+            func_band,
+            topic_base,
+            n_topics,
+            band,
+            pos_base,
+            neg_base,
+            pol_band,
+            // A fixed, slightly non-trivial cycle structure.
+            transition: [[1, 3], [2, 2], [3, 5], [4, 4], [5, 0], [0, 1]],
+        }
+    }
+
+    /// Sample a grammatical sentence of exactly `len` tokens about `topic`
+    /// with sentiment polarity `pol` (+1 positive, -1 negative, 0 neutral).
+    ///
+    /// Function tokens trace an automaton walk; after each function token a
+    /// content token (topic/polarity carrier) may be interleaved *without*
+    /// advancing the automaton, so the subsequence of function tokens is
+    /// exactly an automaton path — the grammaticality invariant that
+    /// [`is_grammatical`](Self::is_grammatical) checks and
+    /// [`corrupt_grammar`](Self::corrupt_grammar) breaks.
+    pub fn sentence(
+        &self,
+        len: usize,
+        topic: usize,
+        pol: i32,
+        rng: &mut Pcg64,
+    ) -> Vec<u32> {
+        assert!(topic < self.n_topics);
+        let mut out = Vec::with_capacity(len);
+        let mut state = rng.uniform_usize(N_STATES);
+        while out.len() < len {
+            out.push(
+                self.func_base + state as u32 * self.func_band
+                    + rng.uniform_u32(self.func_band),
+            );
+            if out.len() < len && rng.bernoulli(0.55) {
+                out.push(self.content_token(topic, pol, rng));
+            }
+            state = self.transition[state][rng.uniform_usize(2)];
+        }
+        out
+    }
+
+    fn content_token(&self, topic: usize, pol: i32, rng: &mut Pcg64) -> u32 {
+        // Polarity token with prob 0.4 when polarized, else a topic token.
+        if pol != 0 && rng.bernoulli(0.4) {
+            let base = if pol > 0 { self.pos_base } else { self.neg_base };
+            return base + rng.uniform_u32(self.pol_band);
+        }
+        self.topic_base + topic as u32 * self.band + rng.uniform_u32(self.band)
+    }
+
+    /// Is `tok` a function token, and if so which automaton state emitted it?
+    fn func_state(&self, tok: u32) -> Option<usize> {
+        if tok >= self.func_base && tok < self.func_base + N_STATES as u32 * self.func_band {
+            Some(((tok - self.func_base) / self.func_band) as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Grammaticality check used to *verify* the CoLA generator: every
+    /// consecutive pair of function tokens must be automaton-compatible.
+    pub fn is_grammatical(&self, toks: &[u32]) -> bool {
+        let states: Vec<usize> = toks.iter().filter_map(|&t| self.func_state(t)).collect();
+        states.windows(2).all(|w| self.transition[w[0]].contains(&w[1]))
+    }
+
+    /// Corrupt grammar: replace function tokens so at least one automaton
+    /// edge in the function-token subsequence becomes invalid (the
+    /// CoLA-analogue negative class).
+    pub fn corrupt_grammar(&self, toks: &mut [u32], rng: &mut Pcg64) {
+        let idxs: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| self.func_state(t).is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if idxs.len() < 2 {
+            // No function structure to break; overwrite the head with an
+            // incompatible pair (state 0 → state 2 is invalid).
+            if toks.len() >= 2 {
+                toks[0] = self.func_base;
+                toks[1] = self.func_base + 2 * self.func_band;
+            }
+            return;
+        }
+        // Break 1/3 of the edges: for a chosen position k >= 1, replace the
+        // function token at idxs[k] with one from a state NOT reachable from
+        // the state at idxs[k-1]. Each state has 2 successors of 6, so an
+        // invalid target always exists.
+        let n_corrupt = (idxs.len() / 3).max(1);
+        for _ in 0..n_corrupt {
+            let k = 1 + rng.uniform_usize(idxs.len() - 1);
+            let prev_state = self.func_state(toks[idxs[k - 1]]).unwrap();
+            let invalid: Vec<usize> = (0..N_STATES)
+                .filter(|s| !self.transition[prev_state].contains(s))
+                .collect();
+            let bad_state = invalid[rng.uniform_usize(invalid.len())];
+            toks[idxs[k]] = self.func_base + bad_state as u32 * self.func_band
+                + rng.uniform_u32(self.func_band);
+        }
+    }
+
+    /// Paraphrase: substitute content tokens by *synonyms* (same band),
+    /// keeping function structure — token overlap is low but meaning (band
+    /// pattern) is identical.
+    pub fn paraphrase(&self, toks: &[u32], rng: &mut Pcg64) -> Vec<u32> {
+        toks.iter()
+            .map(|&t| {
+                if t >= self.topic_base && t < self.pos_base {
+                    let band_idx = (t - self.topic_base) / self.band;
+                    self.topic_base + band_idx * self.band + rng.uniform_u32(self.band)
+                } else if t >= self.pos_base && t < self.pos_base + self.pol_band {
+                    self.pos_base + rng.uniform_u32(self.pol_band)
+                } else if t >= self.neg_base && t < self.neg_base + self.pol_band {
+                    self.neg_base + rng.uniform_u32(self.pol_band)
+                } else {
+                    t
+                }
+            })
+            .collect()
+    }
+
+    /// Flip sentiment polarity tokens (entailment → contradiction).
+    pub fn flip_polarity(&self, toks: &[u32]) -> Vec<u32> {
+        toks.iter()
+            .map(|&t| {
+                if t >= self.pos_base && t < self.pos_base + self.pol_band {
+                    t - self.pos_base + self.neg_base
+                } else if t >= self.neg_base && t < self.neg_base + self.pol_band {
+                    t - self.neg_base + self.pos_base
+                } else {
+                    t
+                }
+            })
+            .collect()
+    }
+
+    /// Change the topic of content tokens (unrelated sentence derivation).
+    pub fn retopic(&self, toks: &[u32], new_topic: usize, rng: &mut Pcg64) -> Vec<u32> {
+        assert!(new_topic < self.n_topics);
+        toks.iter()
+            .map(|&t| {
+                if t >= self.topic_base && t < self.pos_base {
+                    self.topic_base + new_topic as u32 * self.band + rng.uniform_u32(self.band)
+                } else {
+                    t
+                }
+            })
+            .collect()
+    }
+
+    /// Fraction of content positions whose band matches between a and b —
+    /// the similarity signal for the STS-B analogue.
+    pub fn band_similarity(&self, a: &[u32], b: &[u32]) -> f32 {
+        let band_of = |t: u32| -> Option<u32> {
+            if t >= self.topic_base && t < self.pos_base {
+                Some((t - self.topic_base) / self.band)
+            } else if t >= self.pos_base && t < self.pos_base + self.pol_band {
+                Some(1000)
+            } else if t >= self.neg_base && t < self.neg_base + self.pol_band {
+                Some(1001)
+            } else {
+                None
+            }
+        };
+        let ab: Vec<_> = a.iter().filter_map(|&t| band_of(t)).collect();
+        let bb: Vec<_> = b.iter().filter_map(|&t| band_of(t)).collect();
+        if ab.is_empty() || bb.is_empty() {
+            return 0.0;
+        }
+        let n = ab.len().min(bb.len());
+        let same = (0..n).filter(|&i| ab[i] == bb[i]).count();
+        same as f32 / n as f32
+    }
+
+    /// Count positive minus negative polarity tokens (sentiment signal).
+    pub fn polarity_score(&self, toks: &[u32]) -> i32 {
+        toks.iter()
+            .map(|&t| {
+                if t >= self.pos_base && t < self.pos_base + self.pol_band {
+                    1
+                } else if t >= self.neg_base && t < self.neg_base + self.pol_band {
+                    -1
+                } else {
+                    0
+                }
+            })
+            .sum()
+    }
+
+    /// A random token id excluding specials — for MLM negative sampling.
+    pub fn random_token(&self, rng: &mut Pcg64) -> u32 {
+        SPECIAL_TOKENS + rng.uniform_u32((self.vocab as u32) - SPECIAL_TOKENS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentences_are_grammatical() {
+        let lang = SynthLang::new(1024);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..50 {
+            let s = lang.sentence(30, 2, 1, &mut rng);
+            assert_eq!(s.len(), 30);
+            assert!(lang.is_grammatical(&s));
+            assert!(s.iter().all(|&t| (t as usize) < lang.vocab && t >= SPECIAL_TOKENS));
+        }
+    }
+
+    #[test]
+    fn corruption_breaks_grammar_mostly() {
+        let lang = SynthLang::new(1024);
+        let mut rng = Pcg64::new(2);
+        let mut broken = 0;
+        let n = 100;
+        for _ in 0..n {
+            let mut s = lang.sentence(30, 1, 0, &mut rng);
+            lang.corrupt_grammar(&mut s, &mut rng);
+            if !lang.is_grammatical(&s) {
+                broken += 1;
+            }
+        }
+        assert!(broken > n * 8 / 10, "only {broken}/{n} corrupted");
+    }
+
+    #[test]
+    fn paraphrase_keeps_band_similarity_high() {
+        let lang = SynthLang::new(1024);
+        let mut rng = Pcg64::new(3);
+        let s = lang.sentence(40, 3, 1, &mut rng);
+        let p = lang.paraphrase(&s, &mut rng);
+        assert!(lang.band_similarity(&s, &p) > 0.95);
+        // ...while raw token overlap is low
+        let overlap = s.iter().zip(&p).filter(|(a, b)| a == b).count();
+        assert!(overlap < s.len(), "paraphrase should change tokens");
+        let u = lang.retopic(&s, 6, &mut rng);
+        assert!(lang.band_similarity(&s, &u) < 0.7);
+    }
+
+    #[test]
+    fn polarity_flip_negates_score() {
+        let lang = SynthLang::new(1024);
+        let mut rng = Pcg64::new(4);
+        let s = lang.sentence(40, 0, 1, &mut rng);
+        let score = lang.polarity_score(&s);
+        assert!(score > 0, "positive sentence score {score}");
+        let f = lang.flip_polarity(&s);
+        assert_eq!(lang.polarity_score(&f), -score);
+    }
+}

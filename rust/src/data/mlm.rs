@@ -1,0 +1,133 @@
+//! Masked-language-model pretraining corpus.
+//!
+//! The paper fine-tunes a *pretrained* RoBERTa. Our substitution (DESIGN.md
+//! §3) pretrains the from-scratch encoder in-repo on an MLM objective over
+//! the same synthetic language the tasks are built from, so the frozen
+//! backbone the adapters steer has real (if small) linguistic structure:
+//! the automaton grammar, topic bands and polarity bands of [`SynthLang`].
+//!
+//! Masking follows BERT: 15% of non-special positions are selected; of
+//! those 80% become `[MASK]`, 10% a random token, 10% stay. Loss weights
+//! are 1 at selected positions, 0 elsewhere.
+
+use super::lang::{SynthLang, CLS, MASK, SEP, SPECIAL_TOKENS};
+#[cfg(test)]
+use super::lang::PAD;
+use crate::util::rng::Pcg64;
+
+/// One MLM batch ready for the pretrain-step artifact.
+#[derive(Clone, Debug)]
+pub struct MlmBatch {
+    /// Masked input ids, `[batch, seq]` row-major.
+    pub tokens: Vec<i32>,
+    /// Original ids (targets), `[batch, seq]`.
+    pub targets: Vec<i32>,
+    /// Loss weights, `[batch, seq]` (1.0 at masked positions).
+    pub weights: Vec<f32>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+}
+
+/// Streaming MLM batch generator.
+pub struct MlmCorpus {
+    lang: SynthLang,
+    seq_len: usize,
+    rng: Pcg64,
+}
+
+impl MlmCorpus {
+    pub fn new(vocab: usize, seq_len: usize, seed: u64) -> MlmCorpus {
+        MlmCorpus {
+            lang: SynthLang::new(vocab),
+            seq_len,
+            rng: Pcg64::with_stream(seed, 777),
+        }
+    }
+
+    /// Next batch of `batch_size` masked sentences.
+    pub fn next_batch(&mut self, batch_size: usize) -> MlmBatch {
+        let n = batch_size * self.seq_len;
+        let mut tokens = Vec::with_capacity(n);
+        let mut targets = Vec::with_capacity(n);
+        let mut weights = Vec::with_capacity(n);
+        for _ in 0..batch_size {
+            let topic = self.rng.uniform_usize(self.lang.n_topics);
+            let pol = [-1, 0, 1][self.rng.uniform_usize(3)];
+            let body_len = self.seq_len - 2;
+            let sent = self.lang.sentence(body_len, topic, pol, &mut self.rng);
+            let mut row: Vec<u32> = Vec::with_capacity(self.seq_len);
+            row.push(CLS);
+            row.extend_from_slice(&sent);
+            row.push(SEP);
+            debug_assert_eq!(row.len(), self.seq_len);
+            for &orig in &row {
+                let maskable = orig >= SPECIAL_TOKENS;
+                let selected = maskable && self.rng.bernoulli(0.15);
+                let input = if selected {
+                    let roll = self.rng.uniform_f64();
+                    if roll < 0.8 {
+                        MASK
+                    } else if roll < 0.9 {
+                        self.lang.random_token(&mut self.rng)
+                    } else {
+                        orig
+                    }
+                } else {
+                    orig
+                };
+                tokens.push(input as i32);
+                targets.push(orig as i32);
+                weights.push(if selected { 1.0 } else { 0.0 });
+            }
+        }
+        MlmBatch { tokens, targets, weights, batch_size, seq_len: self.seq_len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes_and_masking_rate() {
+        let mut corpus = MlmCorpus::new(512, 32, 1);
+        let b = corpus.next_batch(64);
+        assert_eq!(b.tokens.len(), 64 * 32);
+        assert_eq!(b.targets.len(), 64 * 32);
+        let masked = b.weights.iter().filter(|&&w| w > 0.0).count();
+        let frac = masked as f64 / b.weights.len() as f64;
+        assert!((0.08..0.22).contains(&frac), "mask fraction {frac}");
+        // No PAD in pretraining rows; specials never selected.
+        for (i, &w) in b.weights.iter().enumerate() {
+            assert_ne!(b.tokens[i], PAD as i32);
+            if w > 0.0 {
+                assert!(b.targets[i] >= SPECIAL_TOKENS as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_positions_mostly_mask_token() {
+        let mut corpus = MlmCorpus::new(512, 32, 2);
+        let b = corpus.next_batch(128);
+        let (mut mask_tok, mut total) = (0, 0);
+        for (i, &w) in b.weights.iter().enumerate() {
+            if w > 0.0 {
+                total += 1;
+                if b.tokens[i] == MASK as i32 {
+                    mask_tok += 1;
+                }
+            }
+        }
+        let frac = mask_tok as f64 / total as f64;
+        assert!((0.7..0.9).contains(&frac), "MASK fraction {frac}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = MlmCorpus::new(512, 32, 9).next_batch(4);
+        let b = MlmCorpus::new(512, 32, 9).next_batch(4);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.weights, b.weights);
+    }
+}

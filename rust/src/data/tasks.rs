@@ -1,0 +1,445 @@
+//! The eight synthetic GLUE-analogue task generators.
+
+use super::lang::{SynthLang, CLS, PAD, SEP};
+use super::TaskInfo;
+use crate::metrics::MetricKind;
+use crate::util::rng::Pcg64;
+
+/// One training / evaluation example: token ids padded to a fixed sequence
+/// length, a class label (classification) or score (regression).
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub tokens: Vec<u32>,
+    pub label: usize,
+    /// Regression target (STS-B analogue), in [0, 5]; 0.0 otherwise.
+    pub score: f32,
+}
+
+/// A generated dataset split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub task: TaskId,
+    pub seq_len: usize,
+    pub train: Vec<Example>,
+    pub eval: Vec<Example>,
+}
+
+/// Kind of supervised objective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Classify(usize),
+    Regress,
+}
+
+/// Task identifiers, named after their GLUE analogues.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TaskId {
+    ColaSyn,
+    MnliSyn,
+    MrpcSyn,
+    QnliSyn,
+    QqpSyn,
+    RteSyn,
+    Sst2Syn,
+    StsbSyn,
+}
+
+/// All tasks, in the paper's Table-1 column order.
+pub const ALL_TASKS: [TaskId; 8] = [
+    TaskId::ColaSyn,
+    TaskId::MnliSyn,
+    TaskId::MrpcSyn,
+    TaskId::QnliSyn,
+    TaskId::QqpSyn,
+    TaskId::RteSyn,
+    TaskId::Sst2Syn,
+    TaskId::StsbSyn,
+];
+
+impl TaskId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskId::ColaSyn => "cola_syn",
+            TaskId::MnliSyn => "mnli_syn",
+            TaskId::MrpcSyn => "mrpc_syn",
+            TaskId::QnliSyn => "qnli_syn",
+            TaskId::QqpSyn => "qqp_syn",
+            TaskId::RteSyn => "rte_syn",
+            TaskId::Sst2Syn => "sst2_syn",
+            TaskId::StsbSyn => "stsb_syn",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<TaskId, String> {
+        ALL_TASKS
+            .iter()
+            .find(|t| t.name() == s)
+            .copied()
+            .ok_or_else(|| format!("unknown task '{s}'"))
+    }
+
+    pub fn info(&self) -> TaskInfo {
+        let (analogue, classes, regression, metric, train, pair) = match self {
+            TaskId::ColaSyn => ("CoLA", 2, false, MetricKind::Matthews, 8_000, false),
+            TaskId::MnliSyn => ("MNLI", 3, false, MetricKind::Accuracy, 40_000, true),
+            TaskId::MrpcSyn => ("MRPC", 2, false, MetricKind::Accuracy, 3_000, true),
+            TaskId::QnliSyn => ("QNLI", 2, false, MetricKind::Accuracy, 10_000, true),
+            TaskId::QqpSyn => ("QQP", 2, false, MetricKind::Accuracy, 36_000, true),
+            TaskId::RteSyn => ("RTE", 2, false, MetricKind::Accuracy, 2_500, true),
+            TaskId::Sst2Syn => ("SST-2", 2, false, MetricKind::Accuracy, 6_700, false),
+            TaskId::StsbSyn => ("STS-B", 1, true, MetricKind::Spearman, 5_700, true),
+        };
+        TaskInfo {
+            id: *self,
+            glue_analogue: analogue,
+            num_classes: classes,
+            regression,
+            metric,
+            train_size: train,
+            eval_size: 500,
+            pair: pair,
+        }
+    }
+
+    pub fn kind(&self) -> TaskKind {
+        let info = self.info();
+        if info.regression {
+            TaskKind::Regress
+        } else {
+            TaskKind::Classify(info.num_classes)
+        }
+    }
+
+    /// Generate `n_train` + `n_eval` examples at `seq_len` with the given
+    /// seed. Train/eval are independent draws from the same process.
+    pub fn generate(&self, n_train: usize, n_eval: usize, seed: u64) -> Dataset {
+        self.generate_at(n_train, n_eval, seed, 64, 1024)
+    }
+
+    /// Generate for a specific model preset's sequence length and vocab
+    /// (the synthetic language layout must fit inside the model's vocab).
+    pub fn generate_at(
+        &self,
+        n_train: usize,
+        n_eval: usize,
+        seed: u64,
+        seq_len: usize,
+        vocab: usize,
+    ) -> Dataset {
+        let lang = SynthLang::new(vocab);
+        let mut rng = Pcg64::with_stream(seed, task_stream(*self));
+        let gen_split = |n: usize, rng: &mut Pcg64| -> Vec<Example> {
+            (0..n).map(|_| self.example(&lang, seq_len, rng)).collect()
+        };
+        let train = gen_split(n_train, &mut rng);
+        let eval = gen_split(n_eval, &mut rng);
+        Dataset { task: *self, seq_len, train, eval }
+    }
+
+    fn example(&self, lang: &SynthLang, seq_len: usize, rng: &mut Pcg64) -> Example {
+        match self {
+            TaskId::ColaSyn => cola(lang, seq_len, rng),
+            TaskId::Sst2Syn => sst2(lang, seq_len, rng),
+            TaskId::MrpcSyn => pair_paraphrase(lang, seq_len, rng, 0.5),
+            TaskId::QqpSyn => pair_paraphrase(lang, seq_len, rng, 0.37), // QQP is ~37% dup
+            TaskId::RteSyn => rte(lang, seq_len, rng),
+            TaskId::QnliSyn => qnli(lang, seq_len, rng),
+            TaskId::MnliSyn => mnli(lang, seq_len, rng),
+            TaskId::StsbSyn => stsb(lang, seq_len, rng),
+        }
+    }
+}
+
+fn task_stream(t: TaskId) -> u64 {
+    // Stable per-task stream ids so multi-task runs draw independent data.
+    match t {
+        TaskId::ColaSyn => 101,
+        TaskId::MnliSyn => 102,
+        TaskId::MrpcSyn => 103,
+        TaskId::QnliSyn => 104,
+        TaskId::QqpSyn => 105,
+        TaskId::RteSyn => 106,
+        TaskId::Sst2Syn => 107,
+        TaskId::StsbSyn => 108,
+    }
+}
+
+/// Wrap a single sentence as `[CLS] s [SEP]` padded to `seq_len`.
+fn wrap_single(s: &[u32], seq_len: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(seq_len);
+    out.push(CLS);
+    out.extend_from_slice(&s[..s.len().min(seq_len - 2)]);
+    out.push(SEP);
+    out.resize(seq_len, PAD);
+    out
+}
+
+/// Wrap a pair as `[CLS] a [SEP] b [SEP]` padded to `seq_len`.
+fn wrap_pair(a: &[u32], b: &[u32], seq_len: usize) -> Vec<u32> {
+    let budget = seq_len - 3;
+    let la = a.len().min(budget / 2);
+    let lb = b.len().min(budget - la);
+    let mut out = Vec::with_capacity(seq_len);
+    out.push(CLS);
+    out.extend_from_slice(&a[..la]);
+    out.push(SEP);
+    out.extend_from_slice(&b[..lb]);
+    out.push(SEP);
+    out.resize(seq_len, PAD);
+    out
+}
+
+fn sent_len(seq_len: usize, pair: bool, rng: &mut Pcg64) -> usize {
+    let max = if pair { (seq_len - 3) / 2 } else { seq_len - 2 };
+    let lo = (max * 3) / 4;
+    lo + rng.uniform_usize(max - lo + 1)
+}
+
+fn cola(lang: &SynthLang, seq_len: usize, rng: &mut Pcg64) -> Example {
+    let topic = rng.uniform_usize(lang.n_topics);
+    let mut s = lang.sentence(sent_len(seq_len, false, rng), topic, 0, rng);
+    // CoLA is unbalanced: ~70% acceptable.
+    let acceptable = rng.bernoulli(0.7);
+    if !acceptable {
+        lang.corrupt_grammar(&mut s, rng);
+    }
+    Example {
+        tokens: wrap_single(&s, seq_len),
+        label: acceptable as usize,
+        score: 0.0,
+    }
+}
+
+fn sst2(lang: &SynthLang, seq_len: usize, rng: &mut Pcg64) -> Example {
+    let topic = rng.uniform_usize(lang.n_topics);
+    let positive = rng.bernoulli(0.5);
+    let pol = if positive { 1 } else { -1 };
+    let s = lang.sentence(sent_len(seq_len, false, rng), topic, pol, rng);
+    Example {
+        tokens: wrap_single(&s, seq_len),
+        label: positive as usize,
+        score: 0.0,
+    }
+}
+
+fn pair_paraphrase(
+    lang: &SynthLang,
+    seq_len: usize,
+    rng: &mut Pcg64,
+    p_pos: f64,
+) -> Example {
+    let topic = rng.uniform_usize(lang.n_topics);
+    let a = lang.sentence(sent_len(seq_len, true, rng), topic, 0, rng);
+    let positive = rng.bernoulli(p_pos);
+    let b = if positive {
+        lang.paraphrase(&a, rng)
+    } else if rng.bernoulli(0.5) {
+        // Hard negative: same function skeleton, different topic.
+        let other = (topic + 1 + rng.uniform_usize(lang.n_topics - 1)) % lang.n_topics;
+        lang.retopic(&a, other, rng)
+    } else {
+        // Easy negative: fresh unrelated sentence.
+        let other = (topic + 1 + rng.uniform_usize(lang.n_topics - 1)) % lang.n_topics;
+        lang.sentence(sent_len(seq_len, true, rng), other, 0, rng)
+    };
+    Example {
+        tokens: wrap_pair(&a, &b, seq_len),
+        label: positive as usize,
+        score: 0.0,
+    }
+}
+
+fn rte(lang: &SynthLang, seq_len: usize, rng: &mut Pcg64) -> Example {
+    let topic = rng.uniform_usize(lang.n_topics);
+    let pol = if rng.bernoulli(0.5) { 1 } else { -1 };
+    let premise = lang.sentence(sent_len(seq_len, true, rng), topic, pol, rng);
+    let entail = rng.bernoulli(0.5);
+    let hypothesis = if entail {
+        // Entailed: paraphrase of a prefix of the premise.
+        let cut = premise.len() / 2 + rng.uniform_usize(premise.len() / 2);
+        lang.paraphrase(&premise[..cut], rng)
+    } else if rng.bernoulli(0.5) {
+        // Contradiction-style negative: polarity flipped paraphrase.
+        lang.flip_polarity(&lang.paraphrase(&premise, rng))
+    } else {
+        // Unrelated negative.
+        let other = (topic + 1 + rng.uniform_usize(lang.n_topics - 1)) % lang.n_topics;
+        lang.sentence(sent_len(seq_len, true, rng), other, -pol, rng)
+    };
+    Example {
+        tokens: wrap_pair(&premise, &hypothesis, seq_len),
+        label: entail as usize,
+        score: 0.0,
+    }
+}
+
+fn qnli(lang: &SynthLang, seq_len: usize, rng: &mut Pcg64) -> Example {
+    // "Does the context sentence answer the question?" — modeled as: the
+    // context contains the question's topic band (answer present) or not.
+    let topic = rng.uniform_usize(lang.n_topics);
+    let question = lang.sentence(sent_len(seq_len, true, rng), topic, 0, rng);
+    let answered = rng.bernoulli(0.5);
+    let ctx_topic = if answered {
+        topic
+    } else {
+        (topic + 1 + rng.uniform_usize(lang.n_topics - 1)) % lang.n_topics
+    };
+    let context = lang.sentence(sent_len(seq_len, true, rng), ctx_topic, 0, rng);
+    Example {
+        tokens: wrap_pair(&question, &context, seq_len),
+        label: answered as usize,
+        score: 0.0,
+    }
+}
+
+fn mnli(lang: &SynthLang, seq_len: usize, rng: &mut Pcg64) -> Example {
+    // 3-way: 0 = contradiction, 1 = neutral, 2 = entailment.
+    let topic = rng.uniform_usize(lang.n_topics);
+    let pol = if rng.bernoulli(0.5) { 1 } else { -1 };
+    let premise = lang.sentence(sent_len(seq_len, true, rng), topic, pol, rng);
+    let label = rng.uniform_usize(3);
+    let hypothesis = match label {
+        2 => {
+            let cut = premise.len() / 2 + rng.uniform_usize(premise.len() / 2);
+            lang.paraphrase(&premise[..cut], rng)
+        }
+        0 => lang.flip_polarity(&lang.paraphrase(&premise, rng)),
+        _ => {
+            let other = (topic + 1 + rng.uniform_usize(lang.n_topics - 1)) % lang.n_topics;
+            lang.sentence(sent_len(seq_len, true, rng), other, 0, rng)
+        }
+    };
+    Example {
+        tokens: wrap_pair(&premise, &hypothesis, seq_len),
+        label,
+        score: 0.0,
+    }
+}
+
+fn stsb(lang: &SynthLang, seq_len: usize, rng: &mut Pcg64) -> Example {
+    let topic = rng.uniform_usize(lang.n_topics);
+    let a = lang.sentence(sent_len(seq_len, true, rng), topic, 0, rng);
+    // Derivation mixture spanning the similarity spectrum.
+    let b = match rng.uniform_usize(4) {
+        0 => lang.paraphrase(&a, rng), // ~5
+        1 => {
+            // partially retopic'd paraphrase (~2-4)
+            let mut p = lang.paraphrase(&a, rng);
+            let other = (topic + 1 + rng.uniform_usize(lang.n_topics - 1)) % lang.n_topics;
+            let half = lang.retopic(&p.split_off(p.len() / 2), other, rng);
+            p.extend(half);
+            p
+        }
+        2 => {
+            let other = (topic + 1 + rng.uniform_usize(lang.n_topics - 1)) % lang.n_topics;
+            lang.retopic(&a, other, rng) // ~0-1 (structure kept)
+        }
+        _ => {
+            let other = (topic + 1 + rng.uniform_usize(lang.n_topics - 1)) % lang.n_topics;
+            lang.sentence(sent_len(seq_len, true, rng), other, 0, rng) // ~0
+        }
+    };
+    let score = 5.0 * lang.band_similarity(&a, &b);
+    Example {
+        tokens: wrap_pair(&a, &b, seq_len),
+        label: 0,
+        score,
+    }
+}
+
+/// Downsample per the paper's MTL protocol (§3.2): at most `cap` training
+/// samples and at most `eval_cap` evaluation samples, keeping order
+/// deterministic via the provided rng.
+pub fn downsample(ds: &Dataset, cap: usize, eval_cap: usize, rng: &mut Pcg64) -> Dataset {
+    let pick = |xs: &[Example], cap: usize, rng: &mut Pcg64| -> Vec<Example> {
+        if xs.len() <= cap {
+            return xs.to_vec();
+        }
+        let idx = rng.choose_k(xs.len(), cap);
+        idx.into_iter().map(|i| xs[i].clone()).collect()
+    };
+    Dataset {
+        task: ds.task,
+        seq_len: ds.seq_len,
+        train: pick(&ds.train, cap, rng),
+        eval: pick(&ds.eval, eval_cap, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrap_shapes_are_exact() {
+        let s: Vec<u32> = (10..40).collect();
+        let w = wrap_single(&s, 64);
+        assert_eq!(w.len(), 64);
+        assert_eq!(w[0], CLS);
+        assert_eq!(w[31], SEP);
+        assert!(w[32..].iter().all(|&t| t == PAD));
+        let p = wrap_pair(&s, &s, 64);
+        assert_eq!(p.len(), 64);
+        assert_eq!(p.iter().filter(|&&t| t == SEP).count(), 2);
+    }
+
+    #[test]
+    fn cola_positive_examples_are_grammatical() {
+        let ds = TaskId::ColaSyn.generate(300, 0, 9);
+        let lang = SynthLang::new(1024);
+        let strip = |e: &Example| -> Vec<u32> {
+            e.tokens
+                .iter()
+                .copied()
+                .filter(|&t| t >= super::super::lang::SPECIAL_TOKENS)
+                .collect()
+        };
+        let pos_ok = ds
+            .train
+            .iter()
+            .filter(|e| e.label == 1)
+            .filter(|e| lang.is_grammatical(&strip(e)))
+            .count();
+        let pos_total = ds.train.iter().filter(|e| e.label == 1).count();
+        assert_eq!(pos_ok, pos_total, "grammatical positives");
+        let neg_bad = ds
+            .train
+            .iter()
+            .filter(|e| e.label == 0)
+            .filter(|e| !lang.is_grammatical(&strip(e)))
+            .count();
+        let neg_total = ds.train.iter().filter(|e| e.label == 0).count();
+        assert!(neg_bad * 10 >= neg_total * 8, "{neg_bad}/{neg_total} corrupted");
+        // unbalanced as designed
+        assert!(pos_total > ds.train.len() / 2);
+    }
+
+    #[test]
+    fn stsb_scores_span_the_range() {
+        let ds = TaskId::StsbSyn.generate(400, 0, 3);
+        let hi = ds.train.iter().filter(|e| e.score > 4.0).count();
+        let lo = ds.train.iter().filter(|e| e.score < 1.0).count();
+        assert!(hi > 40, "high-similarity pairs {hi}");
+        assert!(lo > 40, "low-similarity pairs {lo}");
+    }
+
+    #[test]
+    fn downsample_caps_sizes() {
+        let ds = TaskId::MrpcSyn.generate(800, 700, 4);
+        let mut rng = Pcg64::new(1);
+        let small = downsample(&ds, 500, 100, &mut rng);
+        assert_eq!(small.train.len(), 500);
+        assert_eq!(small.eval.len(), 100);
+        // under cap: untouched
+        let same = downsample(&small, 5_000, 500, &mut rng);
+        assert_eq!(same.train.len(), 500);
+    }
+
+    #[test]
+    fn task_names_roundtrip() {
+        for t in ALL_TASKS {
+            assert_eq!(TaskId::from_name(t.name()).unwrap(), t);
+        }
+        assert!(TaskId::from_name("nope").is_err());
+    }
+}

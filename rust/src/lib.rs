@@ -1,0 +1,54 @@
+//! # MetaTT — a global tensor-train adapter for parameter-efficient fine-tuning
+//!
+//! Reproduction of *MetaTT: A Global Tensor-Train Adapter for
+//! Parameter-Efficient Fine-Tuning* (Lopez-Piqueres et al., cs.LG 2025) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L1 (build time, python)** — Pallas kernels for the fused TT-adapter
+//!   apply, validated against a pure-`jnp` oracle.
+//! * **L2 (build time, python)** — a from-scratch JAX transformer encoder
+//!   whose Q/V projections are steered by a single *global* tensor-train
+//!   adapter; fwd/bwd lowered AOT to HLO text artifacts.
+//! * **L3 (run time, rust — this crate)** — the coordinator: PJRT runtime,
+//!   training orchestration, AdamW, the DMRG-inspired rank-adaptive sweep
+//!   (paper Algorithm 1), the synthetic GLUE workload suite, metrics, and
+//!   the benchmark harness that regenerates every table and figure of the
+//!   paper's evaluation.
+//!
+//! Python never runs on the training/serving path: `make artifacts` lowers
+//! the compute graphs once; everything after that is this crate.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tensor`] | dense f32 host tensors (DMRG, optimizer, metrics) |
+//! | [`linalg`] | Householder QR + Jacobi SVD (+ truncated SVD) |
+//! | [`tt`] | tensor-train container, MetaTT variants, DMRG sweep |
+//! | [`adapters`] | parameter layouts + analytic counts for all baselines |
+//! | [`optim`] | AdamW / SGD, LR schedules, gradient clipping |
+//! | [`data`] | synthetic GLUE suite + MLM pretraining corpus |
+//! | [`metrics`] | accuracy, Matthews, Spearman, seed aggregation |
+//! | [`runtime`] | PJRT client, artifact registry, executable cache |
+//! | [`coordinator`] | trainers (single-task, MTL, DMRG), checkpoints |
+//! | [`bench`] | micro-bench harness + paper-style table emitters |
+//! | [`config`] | experiment configuration (TOML) |
+//! | [`cli`] | launcher argument parsing |
+
+pub mod adapters;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod tt;
+pub mod util;
+
+/// Crate version string surfaced by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

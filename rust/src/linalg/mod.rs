@@ -1,0 +1,485 @@
+//! Linear-algebra substrate: QR and SVD, built from scratch.
+//!
+//! The DMRG-inspired sweep (paper Algorithm 1) is a sequence of truncated
+//! SVDs on merged TT cores. No LAPACK is available in this environment, so
+//! we implement:
+//!
+//! * Householder QR (with thin Q recovery) — used to pre-reduce tall
+//!   matrices before the SVD and for TT orthogonalization.
+//! * One-sided Jacobi SVD — numerically robust, simple, and fast enough for
+//!   the merged-core sizes MetaTT produces (≤ a few hundred on a side).
+//! * `truncated_svd` — the `tSVD(M; r)` primitive of Algorithm 1.
+//!
+//! Merged cores are (r·n) × (n'·r') with r ≤ 64 and n ∈ {L, M, H, T}, so the
+//! matrices are small; the boundary merges touch D (≤ 1024) on one side,
+//! which the QR pre-reduction shrinks to min(m, n) before Jacobi runs.
+
+use crate::tensor::Tensor;
+
+/// Result of a (possibly truncated) SVD: `a ≈ u · diag(s) · vt`.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    /// m × k, orthonormal columns.
+    pub u: Tensor,
+    /// k singular values, descending.
+    pub s: Vec<f32>,
+    /// k × n, orthonormal rows.
+    pub vt: Tensor,
+}
+
+/// Householder QR of an m×n matrix. Returns (Q thin m×k, R k×n), k=min(m,n).
+pub fn qr(a: &Tensor) -> (Tensor, Tensor) {
+    let (m, n) = (a.rows(), a.cols());
+    let k = m.min(n);
+    let mut r = a.clone();
+    // Householder vectors stored per reflection.
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(k);
+    for j in 0..k {
+        // Build the Householder vector for column j below the diagonal.
+        let mut norm2 = 0.0f64;
+        for i in j..m {
+            let x = r.at(i, j) as f64;
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt() as f32;
+        let mut v = vec![0.0f32; m - j];
+        if norm > 0.0 {
+            let x0 = r.at(j, j);
+            let alpha = if x0 >= 0.0 { -norm } else { norm };
+            v[0] = x0 - alpha;
+            for i in j + 1..m {
+                v[i - j] = r.at(i, j);
+            }
+            let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            if vnorm2 > 1e-30 {
+                // Apply H = I - 2 v v^T / (v^T v) to R[j.., j..].
+                for col in j..n {
+                    let mut dot = 0.0f64;
+                    for i in j..m {
+                        dot += v[i - j] as f64 * r.at(i, col) as f64;
+                    }
+                    let coef = (2.0 * dot / vnorm2) as f32;
+                    for i in j..m {
+                        let val = r.at(i, col) - coef * v[i - j];
+                        r.set(i, col, val);
+                    }
+                }
+            } else {
+                v[0] = 0.0;
+            }
+        }
+        vs.push(v);
+    }
+    // Zero the strictly-lower part of R and clip to k rows.
+    let mut r_out = Tensor::zeros(&[k, n]);
+    for i in 0..k {
+        for j in i..n {
+            r_out.set(i, j, r.at(i, j));
+        }
+    }
+    // Recover thin Q by applying reflections to the first k columns of I.
+    let mut q = Tensor::eye_rect(m, k);
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if vnorm2 <= 1e-30 {
+            continue;
+        }
+        for col in 0..k {
+            let mut dot = 0.0f64;
+            for i in j..m {
+                dot += v[i - j] as f64 * q.at(i, col) as f64;
+            }
+            let coef = (2.0 * dot / vnorm2) as f32;
+            for i in j..m {
+                let val = q.at(i, col) - coef * v[i - j];
+                q.set(i, col, val);
+            }
+        }
+    }
+    (q, r_out)
+}
+
+/// Full SVD via one-sided Jacobi, with QR/LQ pre-reduction for rectangular
+/// inputs. Returns k = min(m, n) triplets, singular values descending.
+pub fn svd(a: &Tensor) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    if m >= n {
+        if m > n {
+            // Tall: A = Q R, svd(R) = U S Vt, so A = (Q U) S Vt.
+            let (q, r) = qr(a);
+            let inner = jacobi_svd(&r);
+            return Svd { u: q.matmul(&inner.u), s: inner.s, vt: inner.vt };
+        }
+        jacobi_svd(a)
+    } else {
+        // Wide: svd(A^T) then swap roles.
+        let at = a.transpose();
+        let t = svd(&at);
+        Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() }
+    }
+}
+
+/// One-sided Jacobi SVD for m×n with m >= n (square or mildly tall).
+fn jacobi_svd(a: &Tensor) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    debug_assert!(m >= n);
+    // Work on columns of U = A; rotate pairs until all are orthogonal.
+    let mut u = a.clone();
+    let mut v = Tensor::eye(n);
+    let max_sweeps = 60;
+    let eps = 1e-12f64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let up = u.at(i, p) as f64;
+                    let uq = u.at(i, q) as f64;
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation that zeroes the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let up = u.at(i, p);
+                    let uq = u.at(i, q);
+                    u.set(i, p, cf * up - sf * uq);
+                    u.set(i, q, sf * up + cf * uq);
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    v.set(i, p, cf * vp - sf * vq);
+                    v.set(i, q, sf * vp + cf * vq);
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+    // Column norms are the singular values; normalize U's columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigmas = vec![0.0f32; n];
+    for j in 0..n {
+        let norm: f64 = (0..m).map(|i| (u.at(i, j) as f64).powi(2)).sum::<f64>().sqrt();
+        sigmas[j] = norm as f32;
+    }
+    order.sort_by(|&a, &b| sigmas[b].partial_cmp(&sigmas[a]).unwrap());
+    let mut u_out = Tensor::zeros(&[m, n]);
+    let mut vt_out = Tensor::zeros(&[n, n]);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let sig = sigmas[old_j];
+        let inv = if sig > 1e-30 { 1.0 / sig } else { 0.0 };
+        for i in 0..m {
+            u_out.set(i, new_j, u.at(i, old_j) * inv);
+        }
+        for i in 0..n {
+            vt_out.set(new_j, i, v.at(i, old_j));
+        }
+    }
+    let s: Vec<f32> = order.iter().map(|&j| sigmas[j]).collect();
+    Svd { u: u_out, s, vt: vt_out }
+}
+
+/// Truncated SVD: keep at most `rank` leading triplets — `tSVD(M; r)` from
+/// Algorithm 1. Also drops trailing numerically-zero singular values so the
+/// returned rank never exceeds the matrix's numerical rank.
+pub fn truncated_svd(a: &Tensor, rank: usize) -> Svd {
+    truncated_svd_with_tail(a, rank).0
+}
+
+/// [`truncated_svd`] that also reports the *relative dropped weight*
+/// `sqrt(Σ_{k>r} σ_k²) / sqrt(Σ_k σ_k²)` computed directly from the
+/// discarded singular values (no cancellation, unlike `‖A‖² - ‖A_k‖²`).
+///
+/// Perf (EXPERIMENTS.md §Perf L3 iteration 4): when the requested rank is
+/// far below min(m, n) — the DMRG regime at RoBERTa-scale boundary merges,
+/// e.g. 768×768 truncated to 64 — full Jacobi is O(n³·sweeps) and was the
+/// dominant host cost. We switch to a randomized range-finder (Halko-
+/// Martinsson-Tropp: Gaussian sketch + 2 power iterations + exact SVD of
+/// the (k+8)×n projection), which is exact up to the spectral tail the
+/// truncation discards anyway.
+pub fn truncated_svd_with_tail(a: &Tensor, rank: usize) -> (Svd, f32) {
+    let min_dim = a.rows().min(a.cols());
+    let k = rank.max(1);
+    if min_dim > 4 * k && min_dim > 96 {
+        return randomized_truncated_svd(a, k);
+    }
+    let full = svd(a);
+    let k_max = full.s.len().min(rank.max(1));
+    // Drop numerically-zero tail (relative to sigma_0).
+    let tol = full.s.first().copied().unwrap_or(0.0) * 1e-7;
+    let mut k = k_max;
+    while k > 1 && full.s[k - 1] <= tol {
+        k -= 1;
+    }
+    let total: f64 = full.s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let tail: f64 = full.s[k..].iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let dropped = if total > 0.0 { (tail / total).sqrt() as f32 } else { 0.0 };
+    (
+        Svd {
+            u: full.u.cols_slice(0, k),
+            s: full.s[..k].to_vec(),
+            vt: full.vt.rows_slice(0, k),
+        },
+        dropped,
+    )
+}
+
+/// Randomized truncated SVD (Halko-Martinsson-Tropp) for rank ≪ min(m, n).
+/// Gaussian sketch of k+8 columns, two power iterations (QR-stabilized),
+/// exact Jacobi SVD on the small projected matrix. Deterministic: the test
+/// matrix comes from a fixed-seed PCG stream.
+fn randomized_truncated_svd(a: &Tensor, k: usize) -> (Svd, f32) {
+    let (m, n) = (a.rows(), a.cols());
+    let p = (k + 8).min(m.min(n));
+    let mut rng = crate::util::rng::Pcg64::with_stream(0x5d5d5d, 0x4a11);
+    let omega = Tensor::randn(&[n, p], 1.0, &mut rng);
+    let mut y = a.matmul(&omega); // m×p
+    for _ in 0..2 {
+        let (q, _) = qr(&y);
+        let z = a.t_matmul(&q); // n×p
+        let (qz, _) = qr(&z);
+        y = a.matmul(&qz);
+    }
+    let (q, _) = qr(&y); // m×p, orthonormal columns
+    let b = q.t_matmul(a); // p×n (small)
+    let inner = svd(&b);
+    // Clip to k and drop the numerically-zero tail.
+    let tol = inner.s.first().copied().unwrap_or(0.0) * 1e-7;
+    let mut keep = k.min(inner.s.len());
+    while keep > 1 && inner.s[keep - 1] <= tol {
+        keep -= 1;
+    }
+    let result = Svd {
+        u: q.matmul(&inner.u.cols_slice(0, keep)),
+        s: inner.s[..keep].to_vec(),
+        vt: inner.vt.rows_slice(0, keep),
+    };
+    // Dropped weight from energies: ‖A‖² is exact; Σσ² of the kept block is
+    // exact on the small matrix. (f64 accumulation throughout.)
+    let total: f64 = a.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let kept: f64 = result.s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let dropped = if total > 0.0 {
+        ((total - kept).max(0.0) / total).sqrt() as f32
+    } else {
+        0.0
+    };
+    (result, dropped)
+}
+
+impl Svd {
+    /// Reconstruct `u · diag(s) · vt`.
+    pub fn reconstruct(&self) -> Tensor {
+        let k = self.s.len();
+        let mut us = self.u.clone();
+        for j in 0..k {
+            for i in 0..us.rows() {
+                let v = us.at(i, j) * self.s[j];
+                us.set(i, j, v);
+            }
+        }
+        us.matmul(&self.vt)
+    }
+
+    /// `u` and `s·vt` — the left-to-right DMRG split (Algorithm 1, line 4).
+    pub fn split_left_canonical(&self) -> (Tensor, Tensor) {
+        let mut svt = self.vt.clone();
+        for i in 0..self.s.len() {
+            for j in 0..svt.cols() {
+                let v = svt.at(i, j) * self.s[i];
+                svt.set(i, j, v);
+            }
+        }
+        (self.u.clone(), svt)
+    }
+
+    /// `u·s` and `vt` — the right-to-left DMRG split (Algorithm 1, line 9).
+    pub fn split_right_canonical(&self) -> (Tensor, Tensor) {
+        let mut us = self.u.clone();
+        for j in 0..self.s.len() {
+            for i in 0..us.rows() {
+                let v = us.at(i, j) * self.s[j];
+                us.set(i, j, v);
+            }
+        }
+        (us, self.vt.clone())
+    }
+}
+
+/// Spectral-style error of a rank-k approximation: ‖A - A_k‖_F / ‖A‖_F.
+pub fn lowrank_rel_err(a: &Tensor, approx: &Tensor) -> f32 {
+    a.sub(approx).fro_norm() / a.fro_norm().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rel_err;
+    use crate::util::rng::Pcg64;
+
+    fn assert_orthonormal_cols(q: &Tensor, tol: f32) {
+        let gram = q.t_matmul(q);
+        let eye = Tensor::eye(q.cols());
+        assert!(rel_err(&gram, &eye) < tol, "gram err {}", rel_err(&gram, &eye));
+    }
+
+    #[test]
+    fn qr_reconstructs_and_q_is_orthonormal() {
+        let mut rng = Pcg64::new(1);
+        for &(m, n) in &[(5, 5), (12, 4), (30, 7), (4, 9)] {
+            let a = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let (q, r) = qr(&a);
+            assert_eq!(q.shape(), &[m, m.min(n)]);
+            assert_eq!(r.shape(), &[m.min(n), n]);
+            assert!(rel_err(&q.matmul(&r), &a) < 1e-4, "({m},{n})");
+            assert_orthonormal_cols(&q, 1e-4);
+            // R upper-triangular
+            for i in 0..r.rows() {
+                for j in 0..i.min(r.cols()) {
+                    assert!(r.at(i, j).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs_random_matrices() {
+        let mut rng = Pcg64::new(2);
+        for &(m, n) in &[(6, 6), (20, 5), (5, 20), (33, 17), (64, 48)] {
+            let a = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let d = svd(&a);
+            assert!(rel_err(&d.reconstruct(), &a) < 1e-4, "({m},{n})");
+            assert_orthonormal_cols(&d.u, 1e-4);
+            assert_orthonormal_cols(&d.vt.transpose(), 1e-4);
+            // descending singular values
+            for w in d.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_recovers_known_rank() {
+        let mut rng = Pcg64::new(3);
+        // Build an exactly rank-3 matrix.
+        let u = Tensor::randn(&[24, 3], 1.0, &mut rng);
+        let v = Tensor::randn(&[3, 18], 1.0, &mut rng);
+        let a = u.matmul(&v);
+        let d = svd(&a);
+        assert!(d.s[2] > 1e-3);
+        assert!(d.s[3] < d.s[0] * 1e-5, "s3={} s0={}", d.s[3], d.s[0]);
+    }
+
+    #[test]
+    fn truncation_is_best_lowrank_in_frobenius() {
+        let mut rng = Pcg64::new(4);
+        let a = Tensor::randn(&[16, 12], 1.0, &mut rng);
+        let full = svd(&a);
+        let k = 4;
+        let trunc = truncated_svd(&a, k);
+        assert_eq!(trunc.s.len(), k);
+        let err = lowrank_rel_err(&a, &trunc.reconstruct());
+        // Eckart–Young: error equals the norm of the dropped tail.
+        let tail: f32 =
+            full.s[k..].iter().map(|&x| x * x).sum::<f32>().sqrt() / a.fro_norm();
+        assert!((err - tail).abs() < 1e-4, "err {err} tail {tail}");
+    }
+
+    #[test]
+    fn truncated_rank_never_exceeds_numerical_rank() {
+        let mut rng = Pcg64::new(5);
+        let u = Tensor::randn(&[10, 2], 1.0, &mut rng);
+        let v = Tensor::randn(&[2, 10], 1.0, &mut rng);
+        let a = u.matmul(&v); // rank 2
+        let t = truncated_svd(&a, 6);
+        assert!(t.s.len() <= 2, "kept {} values", t.s.len());
+        assert!(lowrank_rel_err(&a, &t.reconstruct()) < 1e-4);
+    }
+
+    #[test]
+    fn canonical_splits_multiply_back() {
+        let mut rng = Pcg64::new(6);
+        let a = Tensor::randn(&[9, 14], 1.0, &mut rng);
+        let t = truncated_svd(&a, 5);
+        let (l1, r1) = t.split_left_canonical();
+        let (l2, r2) = t.split_right_canonical();
+        assert!(rel_err(&l1.matmul(&r1), &t.reconstruct()) < 1e-4);
+        assert!(rel_err(&l2.matmul(&r2), &t.reconstruct()) < 1e-4);
+        assert_orthonormal_cols(&l1, 1e-4);
+        assert_orthonormal_cols(&r2.transpose(), 1e-4);
+    }
+
+    #[test]
+    fn svd_handles_degenerate_inputs() {
+        let z = Tensor::zeros(&[4, 3]);
+        let d = svd(&z);
+        assert!(d.s.iter().all(|&s| s == 0.0));
+        let one = Tensor::from_vec(&[1, 1], vec![3.0]);
+        let d1 = svd(&one);
+        assert!((d1.s[0] - 3.0).abs() < 1e-6);
+    }
+}
+
+#[cfg(test)]
+mod randomized_tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn randomized_matches_exact_on_lowrank_data() {
+        let mut rng = Pcg64::new(1);
+        // 200x180 matrix of true rank 12, truncate to 12: near-exact.
+        let u = Tensor::randn(&[200, 12], 1.0, &mut rng);
+        let v = Tensor::randn(&[12, 180], 1.0, &mut rng);
+        let a = u.matmul(&v);
+        let (t, dropped) = truncated_svd_with_tail(&a, 12);
+        assert!(t.s.len() <= 12);
+        let err = lowrank_rel_err(&a, &t.reconstruct());
+        assert!(err < 1e-3, "err {err}");
+        assert!(dropped < 1e-3, "dropped {dropped}");
+    }
+
+    #[test]
+    fn randomized_close_to_optimal_on_full_rank_data() {
+        let mut rng = Pcg64::new(2);
+        let a = Tensor::randn(&[160, 160], 1.0, &mut rng);
+        let k = 16;
+        // exact truncation via full Jacobi (bypass the size heuristic)
+        let full = svd(&a);
+        let opt_tail: f32 =
+            (full.s[k..].iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+                / full.s.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+            .sqrt() as f32;
+        let (t, dropped) = truncated_svd_with_tail(&a, k);
+        let err = lowrank_rel_err(&a, &t.reconstruct());
+        // Randomized is near-optimal: within 5% of the Eckart-Young error.
+        assert!(err <= opt_tail * 1.05 + 1e-4, "err {err} vs opt {opt_tail}");
+        assert!((dropped - opt_tail).abs() < 0.05, "dropped {dropped} vs {opt_tail}");
+    }
+
+    #[test]
+    fn randomized_is_deterministic() {
+        let mut rng = Pcg64::new(3);
+        let a = Tensor::randn(&[150, 150], 1.0, &mut rng);
+        let (t1, d1) = truncated_svd_with_tail(&a, 10);
+        let (t2, d2) = truncated_svd_with_tail(&a, 10);
+        assert_eq!(t1.s, t2.s);
+        assert_eq!(d1, d2);
+        assert_eq!(t1.u, t2.u);
+    }
+}

@@ -1,0 +1,480 @@
+//! `metatt` — the L3 coordinator launcher.
+//!
+//! Subcommands:
+//!   info                         inspect the artifact manifest & runtime
+//!   pretrain  --model tiny       MLM-pretrain the frozen backbone
+//!   train     --task mrpc_syn    single-task fine-tuning (Table-1 protocol)
+//!   mtl       --tasks a,b,c      joint multi-task training (Table-2)
+//!   dmrg      --task mrpc_syn    AdamW + DMRG rank-annealing (Figs 2/6)
+//!   serve     --requests N       folded-adapter serving loop (apply artifact)
+//!
+//! Every run appends a JSONL record under results/.
+
+use anyhow::{anyhow, bail, Result};
+use metatt::adapters::{AdapterKind, AdapterSpec};
+use metatt::cli::Args;
+use metatt::config::{ModelPreset, TrainConfig};
+use metatt::coordinator::{self, results, DmrgConfig, MtlConfig, PretrainConfig};
+use metatt::data::TaskId;
+use metatt::runtime::{checkpoint_path, Runtime, StepKind};
+use metatt::tt::{InitStrategy, RankSchedule};
+use metatt::util::json::Json;
+use std::path::Path;
+
+const USAGE: &str = "\
+metatt <command> [options]
+
+commands:
+  info       show artifact manifest summary and PJRT platform
+  pretrain   --model tiny|small|base_sim --steps N [--lr F] [--seed N]
+  train      --task T --adapter A --rank R [--alpha F] [--epochs N]
+             [--batch N] [--lr F] [--seed N] [--init ze-id-id-id]
+             [--train-cap N] [--no-checkpoint]
+  mtl        --tasks a,b,c --adapter A --rank R [--alpha F] [--epochs N] ...
+  dmrg       --task T [--adapter metatt5d] [--start-rank 10]
+             [--schedule e:r,e:r,...] [--epochs N] [--seed N]
+  seq        --task-a A --task-b B — sequential A→B→A transfer (forgetting)
+  serve      --requests N [--rank R] — run the folded Pallas apply artifact
+  run        --config configs/foo.toml — config-file-driven run
+
+options shared: --model (default tiny), --artifacts DIR (default artifacts)
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const OPTS: &[&str] = &[
+    "task-a", "task-b", "config",
+    "model", "steps", "lr", "seed", "task", "tasks", "adapter", "rank", "alpha",
+    "epochs", "batch", "init", "train-cap", "eval-cap", "artifacts", "schedule",
+    "start-rank", "requests", "warmup-ratio", "grad-clip",
+];
+const FLAGS: &[&str] = &["help", "no-checkpoint", "verbose"];
+
+fn run() -> Result<()> {
+    let args = Args::from_env(OPTS, FLAGS).map_err(|e| anyhow!(e))?;
+    if args.flag("help") || args.command.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts = args.str_or("artifacts", "artifacts");
+    match args.command.as_str() {
+        "info" => cmd_info(&args, Path::new(&artifacts)),
+        "pretrain" => cmd_pretrain(&args, Path::new(&artifacts)),
+        "train" => cmd_train(&args, Path::new(&artifacts)),
+        "mtl" => cmd_mtl(&args, Path::new(&artifacts)),
+        "seq" => cmd_seq(&args, Path::new(&artifacts)),
+        "dmrg" => cmd_dmrg(&args, Path::new(&artifacts)),
+        "serve" => cmd_serve(&args, Path::new(&artifacts)),
+        "run" => cmd_run(&args, Path::new(&artifacts)),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+/// `metatt run --config configs/foo.toml` — config-file-driven single run.
+fn cmd_run(args: &Args, artifacts: &Path) -> Result<()> {
+    let path = args
+        .get("config")
+        .or_else(|| args.positional.first().map(|s| s.as_str()))
+        .ok_or_else(|| anyhow!("run needs --config <file.toml>"))?;
+    let cfg = metatt::config::ExperimentConfig::from_toml(Path::new(path))
+        .map_err(|e| anyhow!(e))?;
+    let rt = Runtime::new(artifacts)?;
+    let ckpt = ckpt_for(args, cfg.model);
+    let spec = cfg.adapter_spec();
+    if cfg.tasks.len() > 1 {
+        let tasks: Vec<TaskId> = cfg
+            .tasks
+            .iter()
+            .map(|n| TaskId::from_name(n))
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow!(e))?;
+        let mut mcfg = MtlConfig::default();
+        mcfg.train = cfg.train.clone();
+        mcfg.alpha = cfg.alpha;
+        let res = coordinator::run_mtl(&rt, cfg.model, &spec, &tasks, &mcfg, ckpt.as_deref())?;
+        println!("best mean metric: {:.4} {:?}", res.best_mean, res.best_per_task);
+    } else {
+        let task = TaskId::from_name(&cfg.tasks[0]).map_err(|e| anyhow!(e))?;
+        let res = coordinator::run_single_task(
+            &rt, cfg.model, &spec, task, &cfg.train, cfg.alpha, ckpt.as_deref(), None,
+        )?;
+        println!("best {}: {:.4}", task.info().metric.name(), res.best_metric);
+    }
+    Ok(())
+}
+
+/// `metatt seq --task-a mrpc_syn --task-b rte_syn` — sequential A→B→A
+/// transfer with one shared adapter (paper §3.2, forgetting measurement).
+fn cmd_seq(args: &Args, artifacts: &Path) -> Result<()> {
+    let model = parse_model(args)?;
+    let task_a = TaskId::from_name(&args.str_or("task-a", "mrpc_syn")).map_err(|e| anyhow!(e))?;
+    let task_b = TaskId::from_name(&args.str_or("task-b", "rte_syn")).map_err(|e| anyhow!(e))?;
+    let adapter =
+        AdapterKind::from_name(&args.str_or("adapter", "metatt4d")).map_err(|e| anyhow!(e))?;
+    let rank = args.usize_or("rank", 8).map_err(|e| anyhow!(e))?;
+    let alpha = args.f32_or("alpha", 4.0).map_err(|e| anyhow!(e))?;
+    let train = train_config(args)?;
+    let rt = Runtime::new(artifacts)?;
+    let spec = AdapterSpec::new(adapter, rank, alpha, model.dims(1));
+    let ckpt = ckpt_for(args, model);
+    let res = coordinator::run_sequential(
+        &rt, model, &spec, task_a, task_b, &train, alpha, ckpt.as_deref(),
+    )?;
+    for (i, p) in res.phases.iter().enumerate() {
+        println!(
+            "phase {} (trained {:>9}):  {}={:.3}  {}={:.3}",
+            i + 1,
+            p.trained_task.name(),
+            task_a.name(),
+            p.metric_a,
+            task_b.name(),
+            p.metric_b
+        );
+    }
+    println!(
+        "forgetting gap on {} while training {}: {:+.3}   round-trip gain: {:+.3}\n\
+         (paper §3.2: sequential transfer risks catastrophic forgetting — joint \
+         training with a task core is the remedy, see `metatt mtl`)",
+        task_a.name(),
+        task_b.name(),
+        res.forgetting_gap,
+        res.roundtrip_gain
+    );
+    results::append_record(
+        "sequential",
+        &Json::obj(vec![
+            ("task_a", Json::str(task_a.name())),
+            ("task_b", Json::str(task_b.name())),
+            ("adapter", Json::str(spec.kind.name())),
+            ("forgetting_gap", Json::num(res.forgetting_gap)),
+            ("roundtrip_gain", Json::num(res.roundtrip_gain)),
+        ]),
+    );
+    Ok(())
+}
+
+fn parse_model(args: &Args) -> Result<ModelPreset> {
+    ModelPreset::from_name(&args.str_or("model", "tiny")).map_err(|e| anyhow!(e))
+}
+
+fn train_config(args: &Args) -> Result<TrainConfig> {
+    let mut t = TrainConfig::default();
+    t.epochs = args.usize_or("epochs", t.epochs).map_err(|e| anyhow!(e))?;
+    t.batch_size = args.usize_or("batch", 16).map_err(|e| anyhow!(e))?;
+    t.lr = args.f32_or("lr", t.lr).map_err(|e| anyhow!(e))?;
+    t.seed = args.u64_or("seed", t.seed).map_err(|e| anyhow!(e))?;
+    t.train_cap = args.usize_or("train-cap", t.train_cap).map_err(|e| anyhow!(e))?;
+    t.eval_cap = args.usize_or("eval-cap", t.eval_cap).map_err(|e| anyhow!(e))?;
+    t.warmup_ratio = args.f32_or("warmup-ratio", t.warmup_ratio).map_err(|e| anyhow!(e))?;
+    t.grad_clip = args.f32_or("grad-clip", t.grad_clip).map_err(|e| anyhow!(e))?;
+    Ok(t)
+}
+
+fn ckpt_for(args: &Args, model: ModelPreset) -> Option<std::path::PathBuf> {
+    if args.flag("no-checkpoint") {
+        return None;
+    }
+    let p = checkpoint_path(model);
+    if p.exists() {
+        Some(p)
+    } else {
+        eprintln!(
+            "note: {} not found — using an untrained frozen backbone \
+             (run `metatt pretrain --model {}` first for paper-faithful runs)",
+            p.display(),
+            model.name()
+        );
+        None
+    }
+}
+
+fn cmd_info(_args: &Args, artifacts: &Path) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {} entries in {}", rt.manifest.len(), artifacts.display());
+    let mut by_step = std::collections::BTreeMap::new();
+    for spec in rt.manifest.specs() {
+        *by_step.entry(spec.step.name()).or_insert(0usize) += 1;
+    }
+    for (step, n) in by_step {
+        println!("  {:>9}: {n}", step);
+    }
+    for preset in [ModelPreset::Tiny, ModelPreset::Small, ModelPreset::BaseSim] {
+        let p = checkpoint_path(preset);
+        println!(
+            "checkpoint {:>8}: {}",
+            preset.name(),
+            if p.exists() { "present" } else { "missing" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pretrain(args: &Args, artifacts: &Path) -> Result<()> {
+    let model = parse_model(args)?;
+    let rt = Runtime::new(artifacts)?;
+    let cfg = PretrainConfig {
+        steps: args.usize_or("steps", 600).map_err(|e| anyhow!(e))?,
+        lr: args.f32_or("lr", 1e-3).map_err(|e| anyhow!(e))?,
+        seed: args.u64_or("seed", 1234).map_err(|e| anyhow!(e))?,
+        ..Default::default()
+    };
+    let res = coordinator::pretrain(&rt, model, &cfg)?;
+    results::append_record(
+        "pretrain",
+        &Json::obj(vec![
+            ("model", Json::str(model.name())),
+            ("steps", Json::num(cfg.steps as f64)),
+            ("final_loss", Json::num(res.final_loss)),
+            (
+                "losses",
+                Json::Arr(
+                    res.losses
+                        .iter()
+                        .map(|(s, l)| Json::Arr(vec![Json::num(*s as f64), Json::num(*l)]))
+                        .collect(),
+                ),
+            ),
+        ]),
+    );
+    println!("final MLM loss: {:.4}", res.final_loss);
+    Ok(())
+}
+
+fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
+    let model = parse_model(args)?;
+    let task = TaskId::from_name(&args.str_or("task", "mrpc_syn")).map_err(|e| anyhow!(e))?;
+    let adapter =
+        AdapterKind::from_name(&args.str_or("adapter", "metatt4d")).map_err(|e| anyhow!(e))?;
+    let rank = args.usize_or("rank", 8).map_err(|e| anyhow!(e))?;
+    let alpha = args.f32_or("alpha", 4.0).map_err(|e| anyhow!(e))?;
+    let train = train_config(args)?;
+    let init = match args.get("init") {
+        Some(code) => Some(InitStrategy::from_code(code).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
+    let rt = Runtime::new(artifacts)?;
+    let dims = model.dims(1);
+    let spec = AdapterSpec::new(adapter, rank, alpha, dims);
+    println!(
+        "train {} on {} (rank {}, {} params, alpha {})",
+        spec.kind.name(),
+        task.name(),
+        rank,
+        spec.param_count(),
+        alpha
+    );
+    let ckpt = ckpt_for(args, model);
+    let res = coordinator::run_single_task(
+        &rt,
+        model,
+        &spec,
+        task,
+        &train,
+        alpha,
+        ckpt.as_deref(),
+        init.as_ref(),
+    )?;
+    for e in &res.epochs {
+        println!(
+            "epoch {:>2}  loss {:.4}  {} {:.4}",
+            e.epoch,
+            e.train_loss,
+            task.info().metric.name(),
+            e.metric
+        );
+    }
+    println!("best {}: {:.4}", task.info().metric.name(), res.best_metric);
+    results::append_record(
+        "train",
+        &Json::obj(vec![
+            ("model", Json::str(model.name())),
+            ("task", Json::str(task.name())),
+            ("adapter", Json::str(spec.kind.name())),
+            ("rank", Json::num(rank as f64)),
+            ("alpha", Json::num(alpha as f64)),
+            ("seed", Json::num(train.seed as f64)),
+            ("params", Json::num(spec.param_count() as f64)),
+            ("best", Json::num(res.best_metric)),
+            (
+                "curve",
+                Json::Arr(res.epochs.iter().map(|e| Json::num(e.metric)).collect()),
+            ),
+        ]),
+    );
+    Ok(())
+}
+
+fn cmd_mtl(args: &Args, artifacts: &Path) -> Result<()> {
+    let model = parse_model(args)?;
+    let task_names = args.str_list_or("tasks", &["cola_syn", "mrpc_syn", "rte_syn"]);
+    let tasks: Vec<TaskId> = task_names
+        .iter()
+        .map(|n| TaskId::from_name(n))
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow!(e))?;
+    let adapter =
+        AdapterKind::from_name(&args.str_or("adapter", "metatt4p1d")).map_err(|e| anyhow!(e))?;
+    let rank = args.usize_or("rank", 8).map_err(|e| anyhow!(e))?;
+    let mut cfg = MtlConfig::default();
+    cfg.train = train_config(args)?;
+    cfg.alpha = args.f32_or("alpha", 2.0).map_err(|e| anyhow!(e))?;
+    // Paper cap is 5000/task; --train-cap lowers it for quick runs.
+    cfg.per_task_cap = cfg.per_task_cap.min(cfg.train.train_cap);
+    cfg.eval_cap = cfg.eval_cap.min(cfg.train.eval_cap);
+    let rt = Runtime::new(artifacts)?;
+    let dims = model.dims(tasks.len());
+    let spec = AdapterSpec::new(adapter, rank, cfg.alpha, dims);
+    println!(
+        "mtl {} over {:?} ({} params)",
+        spec.kind.name(),
+        task_names,
+        spec.param_count()
+    );
+    let ckpt = ckpt_for(args, model);
+    let res = coordinator::run_mtl(&rt, model, &spec, &tasks, &cfg, ckpt.as_deref())?;
+    for e in &res.epochs {
+        println!(
+            "epoch {:>2}  loss {:.4}  mean {:.4}  per-task {:?}",
+            e.epoch,
+            e.train_loss,
+            e.mean_metric,
+            e.metrics.iter().map(|m| (m * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+        );
+    }
+    println!("best mean metric: {:.4} {:?}", res.best_mean, res.best_per_task);
+    results::append_record(
+        "mtl",
+        &Json::obj(vec![
+            ("model", Json::str(model.name())),
+            (
+                "tasks",
+                Json::Arr(task_names.iter().map(|t| Json::str(t.clone())).collect()),
+            ),
+            ("adapter", Json::str(spec.kind.name())),
+            ("rank", Json::num(rank as f64)),
+            ("params", Json::num(spec.param_count() as f64)),
+            ("seed", Json::num(cfg.train.seed as f64)),
+            ("best_mean", Json::num(res.best_mean)),
+            (
+                "best_per_task",
+                Json::Arr(res.best_per_task.iter().map(|m| Json::num(*m)).collect()),
+            ),
+        ]),
+    );
+    Ok(())
+}
+
+fn cmd_dmrg(args: &Args, artifacts: &Path) -> Result<()> {
+    let model = parse_model(args)?;
+    let task = TaskId::from_name(&args.str_or("task", "mrpc_syn")).map_err(|e| anyhow!(e))?;
+    let adapter =
+        AdapterKind::from_name(&args.str_or("adapter", "metatt5d")).map_err(|e| anyhow!(e))?;
+    let mut cfg = DmrgConfig::default();
+    cfg.train = train_config(args)?;
+    cfg.train.lr = args.f32_or("lr", 5e-4).map_err(|e| anyhow!(e))?;
+    cfg.alpha = args.f32_or("alpha", 2.0).map_err(|e| anyhow!(e))?;
+    cfg.start_rank = args.usize_or("start-rank", 10).map_err(|e| anyhow!(e))?;
+    if let Some(s) = args.get("schedule") {
+        cfg.schedule = RankSchedule::parse(s).map_err(|e| anyhow!(e))?;
+    }
+    let rt = Runtime::new(artifacts)?;
+    let ckpt = ckpt_for(args, model);
+    println!(
+        "dmrg {} on {}: start rank {}, schedule {:?}",
+        adapter.name(),
+        task.name(),
+        cfg.start_rank,
+        cfg.schedule.steps
+    );
+    let res = coordinator::run_dmrg(&rt, model, adapter, task, &cfg, ckpt.as_deref())?;
+    for e in &res.epochs {
+        println!(
+            "epoch {:>2}  loss {:.4}  acc {:.4}  rank {:>2}{}{}",
+            e.epoch,
+            e.train_loss,
+            e.metric,
+            e.rank,
+            if e.swept { "  [swept" } else { "" },
+            if e.swept {
+                format!(" drop {:.3}]", e.dropped)
+            } else {
+                String::new()
+            }
+        );
+    }
+    println!(
+        "best at final rank {}: {:.4} ({} executables compiled)",
+        res.final_rank, res.best_at_final_rank, res.executables_compiled
+    );
+    results::append_record(
+        "dmrg",
+        &Json::obj(vec![
+            ("model", Json::str(model.name())),
+            ("task", Json::str(task.name())),
+            ("adapter", Json::str(adapter.name())),
+            ("start_rank", Json::num(cfg.start_rank as f64)),
+            ("seed", Json::num(cfg.train.seed as f64)),
+            ("best_final", Json::num(res.best_at_final_rank)),
+            (
+                "curve",
+                Json::Arr(
+                    res.epochs
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("metric", Json::num(e.metric)),
+                                ("rank", Json::num(e.rank as f64)),
+                                ("swept", Json::Bool(e.swept)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
+    use metatt::runtime::{ArtifactSpec, StepRunner};
+    use metatt::tensor::Tensor;
+    use metatt::util::rng::Pcg64;
+    let requests = args.usize_or("requests", 100).map_err(|e| anyhow!(e))?;
+    let rank = args.usize_or("rank", 8).map_err(|e| anyhow!(e))?;
+    let rt = Runtime::new(artifacts)?;
+    let spec = rt
+        .manifest
+        .specs()
+        .find(|s| s.step == StepKind::Apply && s.adapter == "metatt4d" && s.rank == rank)
+        .cloned()
+        .ok_or_else(|| anyhow!("no apply artifact at rank {rank}"))?;
+    let entry = rt.manifest.require(&spec).map_err(anyhow::Error::msg)?.clone();
+    let runner = StepRunner::bind(&rt, &spec, &Default::default())?;
+    let mut rng = Pcg64::new(1);
+    let inputs: Vec<Tensor> = entry
+        .inputs
+        .iter()
+        .map(|io| Tensor::randn(&io.shape, 0.5, &mut rng))
+        .collect();
+    let t0 = std::time::Instant::now();
+    for _ in 0..requests {
+        let out = runner.run_raw(&inputs)?;
+        std::hint::black_box(out);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let n = entry.inputs[0].shape[0];
+    println!(
+        "served {requests} apply calls ({} tokens each) in {:.3}s — {:.1} req/s, {:.1}k tok/s",
+        n,
+        dt,
+        requests as f64 / dt,
+        requests as f64 * n as f64 / dt / 1e3
+    );
+    Ok(())
+}

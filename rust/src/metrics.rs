@@ -1,0 +1,173 @@
+//! Evaluation metrics and seed aggregation.
+//!
+//! The GLUE suite mixes metrics: Matthews correlation (CoLA), Spearman rank
+//! correlation (STS-B), plain accuracy (the rest). Results are aggregated
+//! across seeds as mean ± standard error, printed `mean(err)` as the paper
+//! does in Tables 1–2.
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Matthews correlation coefficient for binary labels {0, 1}.
+pub fn matthews_corr(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    let (mut tp, mut tn, mut fp, mut fnn) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p, g) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fnn += 1.0,
+            _ => panic!("matthews_corr expects binary labels"),
+        }
+    }
+    let denom = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fnn) / denom
+    }
+}
+
+/// Spearman rank correlation between two score vectors (average ranks for
+/// ties).
+pub fn spearman_corr(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.len() < 2 {
+        return 0.0;
+    }
+    let ra = ranks(a);
+    let rb = ranks(b);
+    pearson(&ra, &rb)
+}
+
+fn ranks(xs: &[f32]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0f64; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        // Group ties, assign average rank (1-based).
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    let denom = (va * vb).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        cov / denom
+    }
+}
+
+/// Mean and standard error of the mean over trial results.
+pub fn mean_stderr(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, (var / n).sqrt())
+}
+
+/// Which metric a task reports (paper Table 1 caption).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Accuracy,
+    Matthews,
+    Spearman,
+}
+
+impl MetricKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricKind::Accuracy => "accuracy",
+            MetricKind::Matthews => "matthews",
+            MetricKind::Spearman => "spearman",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverse() {
+        let gold = [0, 1, 0, 1, 1, 0];
+        assert!((matthews_corr(&gold, &gold) - 1.0).abs() < 1e-12);
+        let inv: Vec<usize> = gold.iter().map(|&g| 1 - g).collect();
+        assert!((matthews_corr(&inv, &gold) + 1.0).abs() < 1e-12);
+        // Constant predictor → 0 by convention.
+        assert_eq!(matthews_corr(&[1, 1, 1, 1, 1, 1], &gold), 0.0);
+    }
+
+    #[test]
+    fn matthews_known_value() {
+        // tp=2 tn=1 fp=1 fn=1 → (2-1)/sqrt(3*3*2*2) = 1/6
+        let pred = [1, 1, 1, 0, 0];
+        let gold = [1, 1, 0, 1, 0];
+        assert!((matthews_corr(&pred, &gold) - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_is_one() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [10.0f32, 20.0, 30.0, 40.0];
+        assert!((spearman_corr(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [4.0f32, 3.0, 2.0, 1.0];
+        assert!((spearman_corr(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let a = [1.0f32, 1.0, 2.0, 3.0];
+        let b = [1.0f32, 1.0, 2.0, 3.0];
+        assert!((spearman_corr(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_stderr_basics() {
+        let (m, e) = mean_stderr(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((e - (1.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        let (m1, e1) = mean_stderr(&[5.0]);
+        assert_eq!((m1, e1), (5.0, 0.0));
+    }
+}

@@ -1,0 +1,210 @@
+//! Optimizers and learning-rate schedules.
+//!
+//! AdamW with decoupled weight decay (Loshchilov & Hutter) is the paper's
+//! optimizer; SGD is kept for ablations. The LR schedule is the
+//! HuggingFace-style linear warmup (warmup_ratio of total steps) followed by
+//! linear decay to zero, matching the paper's Appendix A.3/D settings.
+//! `Adam::reset_moments` exists because the DMRG sweep changes parameter
+//! shapes mid-run: "one must reinitialize Adam moments after each
+//! truncation" (paper §3.3).
+
+/// Linear warmup + linear decay schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+}
+
+impl LrSchedule {
+    pub fn new(base_lr: f32, total_steps: usize, warmup_ratio: f32) -> LrSchedule {
+        let warmup_steps = ((total_steps as f32) * warmup_ratio).round() as usize;
+        LrSchedule { base_lr, total_steps: total_steps.max(1), warmup_steps }
+    }
+
+    /// Constant learning rate (used by the DMRG experiments, §3.3).
+    pub fn constant(base_lr: f32) -> LrSchedule {
+        LrSchedule { base_lr, total_steps: usize::MAX, warmup_steps: 0 }
+    }
+
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if self.total_steps == usize::MAX {
+            return self.base_lr;
+        }
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step as f32 + 1.0) / self.warmup_steps as f32;
+        }
+        let remaining = self.total_steps.saturating_sub(step) as f32;
+        let denom = self.total_steps.saturating_sub(self.warmup_steps).max(1) as f32;
+        self.base_lr * (remaining / denom).clamp(0.0, 1.0)
+    }
+}
+
+/// AdamW over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct AdamW {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// Timestep since the last moment reset (bias correction restarts too —
+    /// the whole optimizer state is fresh after a DMRG truncation).
+    t: u64,
+}
+
+impl AdamW {
+    pub fn new(param_len: usize, weight_decay: f32) -> AdamW {
+        AdamW {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            m: vec![0.0; param_len],
+            v: vec![0.0; param_len],
+            t: 0,
+        }
+    }
+
+    pub fn param_len(&self) -> usize {
+        self.m.len()
+    }
+
+    /// Drop all moments and restart bias correction; must be called whenever
+    /// the parameter vector changes shape (DMRG truncation).
+    pub fn reset_moments(&mut self, new_param_len: usize) {
+        self.m = vec![0.0; new_param_len];
+        self.v = vec![0.0; new_param_len];
+        self.t = 0;
+    }
+
+    /// One AdamW step: `params -= lr * (mhat / (sqrt(vhat)+eps) + wd * p)`.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.m.len(), "param/moment length mismatch");
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * params[i]);
+        }
+    }
+}
+
+/// Plain SGD with optional momentum (ablation baseline).
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub momentum: f32,
+    vel: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(param_len: usize, momentum: f32) -> Sgd {
+        Sgd { momentum, vel: vec![0.0; param_len] }
+    }
+
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.vel.len());
+        for i in 0..params.len() {
+            self.vel[i] = self.momentum * self.vel[i] + grads[i];
+            params[i] -= lr * self.vel[i];
+        }
+    }
+}
+
+/// Clip gradients to a maximum global L2 norm (the paper uses max 3.0 in
+/// the MTL experiments, Appendix B). Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [f32], max_norm: f32) -> f32 {
+    let norm = grads.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>().sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adamw_minimizes_quadratic() {
+        // f(p) = 0.5 Σ (p - c)^2, grad = p - c
+        let c = [3.0f32, -2.0, 0.5, 7.0];
+        let mut p = vec![0.0f32; 4];
+        let mut opt = AdamW::new(4, 0.0);
+        for _ in 0..2000 {
+            let g: Vec<f32> = p.iter().zip(&c).map(|(&pi, &ci)| pi - ci).collect();
+            opt.step(&mut p, &g, 0.05);
+        }
+        for (pi, ci) in p.iter().zip(&c) {
+            assert!((pi - ci).abs() < 1e-2, "{pi} vs {ci}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut p = vec![1.0f32];
+        let mut opt = AdamW::new(1, 0.1);
+        // zero gradient: only decay acts
+        for _ in 0..10 {
+            opt.step(&mut p, &[0.0], 0.1);
+        }
+        assert!(p[0] < 1.0 && p[0] > 0.8);
+    }
+
+    #[test]
+    fn reset_moments_changes_shape() {
+        let mut opt = AdamW::new(4, 0.0);
+        let mut p = vec![1.0f32; 4];
+        opt.step(&mut p, &[1.0; 4], 0.01);
+        opt.reset_moments(2);
+        assert_eq!(opt.param_len(), 2);
+        let mut p2 = vec![1.0f32; 2];
+        opt.step(&mut p2, &[1.0; 2], 0.01); // must not panic
+    }
+
+    #[test]
+    fn sgd_with_momentum_converges() {
+        let mut p = vec![5.0f32];
+        let mut opt = Sgd::new(1, 0.9);
+        for _ in 0..300 {
+            let g = [p[0]];
+            opt.step(&mut p, &g, 0.01);
+        }
+        assert!(p[0].abs() < 0.05);
+    }
+
+    #[test]
+    fn clip_caps_norm() {
+        let mut g = vec![3.0f32, 4.0];
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        let post = (g[0] * g[0] + g[1] * g[1]).sqrt();
+        assert!((post - 1.0).abs() < 1e-6);
+        // below threshold: untouched
+        let mut h = vec![0.3f32, 0.4];
+        clip_global_norm(&mut h, 1.0);
+        assert_eq!(h, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn schedule_warmup_then_decay() {
+        let s = LrSchedule::new(1.0, 100, 0.1);
+        assert!(s.lr_at(0) > 0.0 && s.lr_at(0) <= 0.2);
+        assert!((s.lr_at(9) - 1.0).abs() < 1e-6); // end of warmup
+        assert!(s.lr_at(50) < 1.0);
+        assert!(s.lr_at(99) < s.lr_at(50));
+        let c = LrSchedule::constant(0.5);
+        assert_eq!(c.lr_at(0), 0.5);
+        assert_eq!(c.lr_at(10_000), 0.5);
+    }
+}

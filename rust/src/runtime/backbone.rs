@@ -1,0 +1,149 @@
+//! Frozen-backbone assembly: encoder weights + per-task classifier heads.
+//!
+//! Fine-tuning runs need the full `frozen_specs` input set of the artifact:
+//! the 20 encoder arrays (from the pretraining checkpoint, or freshly
+//! initialized when no checkpoint exists) plus the frozen random classifier
+//! heads (the paper freezes heads to isolate adapter capacity, §3.1).
+
+use super::registry::ArtifactEntry;
+use crate::config::ModelPreset;
+use crate::coordinator::checkpoint;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Initialize encoder weights in rust (used when pretraining from scratch
+/// and as the no-checkpoint fallback): N(0, 0.02) embeddings, fan-in-scaled
+/// normal matrices, zero biases, unit layernorm gains.
+pub fn init_encoder_weights(entry_inputs: &[(String, Vec<usize>)], seed: u64) -> Vec<(String, Tensor)> {
+    let mut rng = Pcg64::with_stream(seed, 0xbac6b0de);
+    entry_inputs
+        .iter()
+        .map(|(name, shape)| {
+            let t = if name.ends_with("_g") {
+                Tensor::full(shape, 1.0)
+            } else if name.starts_with('b') || name.ends_with("_b") {
+                Tensor::zeros(shape)
+            } else if name.contains("emb") {
+                Tensor::randn(shape, 0.02, &mut rng)
+            } else {
+                let fan_in = if shape.len() >= 2 {
+                    shape[shape.len() - 2]
+                } else {
+                    shape[shape.len() - 1]
+                };
+                Tensor::randn(shape, 1.0 / (fan_in as f32).sqrt(), &mut rng)
+            };
+            (name.clone(), t)
+        })
+        .collect()
+}
+
+/// Default checkpoint path for a preset.
+pub fn checkpoint_path(preset: ModelPreset) -> PathBuf {
+    Path::new("checkpoints").join(format!("pretrained_{}.bin", preset.name()))
+}
+
+/// Build the frozen input map for a fine-tuning artifact: encoder weights
+/// from `ckpt` (or fresh, seeded, if None/missing) + random frozen heads.
+///
+/// Head seed is fixed per (preset, tasks, classes) so every method sees the
+/// *same* frozen head — the paper's controlled comparison.
+pub fn assemble_frozen(
+    entry: &ArtifactEntry,
+    ckpt: Option<&Path>,
+    preset: ModelPreset,
+) -> Result<HashMap<String, Tensor>> {
+    let mut out: HashMap<String, Tensor> = HashMap::new();
+    // Encoder weights.
+    let loaded: Option<Vec<(String, Tensor)>> = match ckpt {
+        Some(p) if p.exists() => {
+            Some(checkpoint::load(p).map_err(anyhow::Error::msg)?)
+        }
+        _ => None,
+    };
+    match loaded {
+        Some(tensors) => {
+            for (name, t) in tensors {
+                out.insert(name, t);
+            }
+        }
+        None => {
+            let shapes: Vec<(String, Vec<usize>)> = entry
+                .frozen_inputs()
+                .iter()
+                .filter(|io| !io.name.starts_with("cls_"))
+                .map(|io| (io.name.clone(), io.shape.clone()))
+                .collect();
+            for (name, t) in init_encoder_weights(&shapes, 0x5eed) {
+                out.insert(name, t);
+            }
+        }
+    }
+    // Frozen random heads.
+    let spec = &entry.spec;
+    let head_seed = head_seed(spec.tasks, spec.classes, preset);
+    let mut rng = Pcg64::with_stream(head_seed, 0xc1a55);
+    for io in entry.frozen_inputs() {
+        if io.name == "cls_w" {
+            let d = io.shape[1] as f32;
+            out.insert(io.name.clone(), Tensor::randn(&io.shape, 1.0 / d.sqrt(), &mut rng));
+        } else if io.name == "cls_b" {
+            out.insert(io.name.clone(), Tensor::zeros(&io.shape));
+        }
+    }
+    // Sanity: every frozen input is covered with the right shape.
+    for io in entry.frozen_inputs() {
+        match out.get(&io.name) {
+            None => bail!("frozen input '{}' not assembled", io.name),
+            Some(t) if t.shape() != &io.shape[..] => bail!(
+                "frozen '{}': checkpoint shape {:?} != artifact {:?} — wrong preset checkpoint?",
+                io.name,
+                t.shape(),
+                io.shape
+            ),
+            _ => {}
+        }
+    }
+    Ok(out)
+}
+
+fn head_seed(tasks: usize, classes: usize, preset: ModelPreset) -> u64 {
+    (tasks as u64) << 32 | (classes as u64) << 16 | preset.name().len() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_weights_follow_conventions() {
+        let shapes = vec![
+            ("tok_emb".to_string(), vec![512usize, 64]),
+            ("wq".to_string(), vec![4, 64, 64]),
+            ("bq".to_string(), vec![4, 64]),
+            ("ln1_g".to_string(), vec![4, 64]),
+            ("ln1_b".to_string(), vec![4, 64]),
+        ];
+        let ws = init_encoder_weights(&shapes, 1);
+        let get = |n: &str| &ws.iter().find(|(name, _)| name == n).unwrap().1;
+        assert!(get("ln1_g").data().iter().all(|&x| x == 1.0));
+        assert!(get("bq").data().iter().all(|&x| x == 0.0));
+        assert!(get("ln1_b").data().iter().all(|&x| x == 0.0));
+        assert!(get("tok_emb").max_abs() < 0.2); // 0.02 std
+        let wq_std = get("wq").fro_norm() / ((4 * 64 * 64) as f32).sqrt();
+        assert!((wq_std - 1.0 / 8.0).abs() < 0.02, "wq std {wq_std}");
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let shapes = vec![("wq".to_string(), vec![2usize, 8, 8])];
+        assert_eq!(init_encoder_weights(&shapes, 7), init_encoder_weights(&shapes, 7));
+        assert_ne!(
+            init_encoder_weights(&shapes, 7)[0].1,
+            init_encoder_weights(&shapes, 8)[0].1
+        );
+    }
+}

@@ -1,0 +1,273 @@
+//! PJRT execution: client wrapper, executable cache, step runners.
+//!
+//! The coordinator's hot loop lives here. Design decisions (DESIGN.md §7):
+//!
+//! * **Executable cache keyed by [`ArtifactSpec`]** — the DMRG scheduler
+//!   changes TT ranks mid-run, which changes HLO shapes; each rank's
+//!   artifact is compiled once and hot-swapped in O(1) afterwards.
+//! * **Frozen weights upload once** — the pretrained backbone (+ heads) is
+//!   transferred to device buffers at [`StepRunner`] construction; per-step
+//!   uploads are only the (small) trainable arrays and the data batch.
+//! * Outputs come back as one tuple literal, decomposed per the manifest's
+//!   output layout.
+
+use super::registry::{ArtifactEntry, ArtifactSpec, Manifest};
+use crate::data::{Batch, MlmBatch};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// PJRT client + artifact registry + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<ArtifactSpec, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// SAFETY: the PJRT C API is documented thread-safe; `PjRtClient` and
+// `PjRtLoadedExecutable` are immutable handles after creation and the
+// executable cache is mutex-guarded. The rust wrapper types only lack the
+// auto-traits because they hold raw pointers.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// CPU client over the given artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the executable for `spec`.
+    pub fn executable(
+        &self,
+        spec: &ArtifactSpec,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(spec) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.require(spec).map_err(|e| anyhow!(e))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", spec.stem()))?,
+        );
+        self.cache.lock().unwrap().insert(spec.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Upload an f32 tensor.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(t.data(), t.shape(), None)?)
+    }
+
+    /// Upload an i32 array.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an f32 scalar.
+    pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    /// Upload an i32 scalar.
+    pub fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+}
+
+/// Decompose the single tuple output of an artifact execution into f32
+/// tensors shaped per the manifest.
+fn decompose_outputs(
+    entry: &ArtifactEntry,
+    result: Vec<Vec<xla::PjRtBuffer>>,
+) -> Result<Vec<Tensor>> {
+    let buf = result
+        .into_iter()
+        .next()
+        .and_then(|d| d.into_iter().next())
+        .context("empty execution result")?;
+    let mut literal = buf.to_literal_sync()?;
+    let parts = literal.decompose_tuple()?;
+    if parts.len() != entry.outputs.len() {
+        bail!(
+            "artifact {} returned {} outputs, manifest says {}",
+            entry.spec.stem(),
+            parts.len(),
+            entry.outputs.len()
+        );
+    }
+    let mut out = Vec::with_capacity(parts.len());
+    for (lit, spec) in parts.into_iter().zip(&entry.outputs) {
+        let data: Vec<f32> = lit.to_vec::<f32>().with_context(|| {
+            format!("output {} of {} not f32", spec.name, entry.spec.stem())
+        })?;
+        if data.len() != spec.numel() {
+            bail!(
+                "output {} of {}: got {} elements, want {:?}",
+                spec.name,
+                entry.spec.stem(),
+                data.len(),
+                spec.shape
+            );
+        }
+        out.push(Tensor::from_vec(&spec.shape, data));
+    }
+    Ok(out)
+}
+
+/// A bound step: compiled executable + resident frozen buffers.
+///
+/// `run_train` / `run_eval` take only the things that change per step.
+pub struct StepRunner<'rt> {
+    rt: &'rt Runtime,
+    pub entry: ArtifactEntry,
+    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    frozen: Vec<xla::PjRtBuffer>,
+}
+
+impl<'rt> StepRunner<'rt> {
+    /// Bind `spec`, uploading `frozen` (name → tensor) once. Every frozen
+    /// input in the manifest must be present with the exact shape.
+    pub fn bind(
+        rt: &'rt Runtime,
+        spec: &ArtifactSpec,
+        frozen: &HashMap<String, Tensor>,
+    ) -> Result<StepRunner<'rt>> {
+        let entry = rt.manifest.require(spec).map_err(|e| anyhow!(e))?.clone();
+        let exe = rt.executable(spec)?;
+        let mut buffers = Vec::with_capacity(entry.n_frozen);
+        for io in entry.frozen_inputs() {
+            let t = frozen.get(&io.name).with_context(|| {
+                format!("frozen input '{}' missing for {}", io.name, spec.stem())
+            })?;
+            if t.shape() != &io.shape[..] {
+                bail!(
+                    "frozen input '{}': shape {:?}, manifest wants {:?}",
+                    io.name,
+                    t.shape(),
+                    io.shape
+                );
+            }
+            buffers.push(rt.upload(t)?);
+        }
+        Ok(StepRunner { rt, entry, exe, frozen: buffers })
+    }
+
+    /// Validate trainable tensors against the manifest and upload.
+    fn upload_trainable(&self, trainable: &[Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
+        let specs = self.entry.trainable_inputs();
+        if trainable.len() != specs.len() {
+            bail!(
+                "{}: {} trainable tensors supplied, manifest wants {}",
+                self.entry.spec.stem(),
+                trainable.len(),
+                specs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(trainable.len());
+        for (t, io) in trainable.iter().zip(specs) {
+            if t.shape() != &io.shape[..] {
+                bail!(
+                    "trainable '{}': shape {:?}, manifest wants {:?}",
+                    io.name,
+                    t.shape(),
+                    io.shape
+                );
+            }
+            out.push(self.rt.upload(t)?);
+        }
+        Ok(out)
+    }
+
+    fn execute(&self, args: Vec<xla::PjRtBuffer>) -> Result<Vec<Tensor>> {
+        // Frozen buffers first, then per-step args — the HLO parameter order.
+        let ordered: Vec<&xla::PjRtBuffer> =
+            self.frozen.iter().chain(args.iter()).collect();
+        let result = self.exe.execute_b(&ordered)?;
+        decompose_outputs(&self.entry, result)
+    }
+
+    /// One fwd+bwd step. Returns (loss, grads in trainable order).
+    pub fn run_train(
+        &self,
+        trainable: &[Tensor],
+        batch: &Batch,
+        task_id: i32,
+        alpha: f32,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let mut args = self.upload_trainable(trainable)?;
+        args.push(self.rt.upload_i32(&batch.tokens, &[batch.batch_size, batch.seq_len])?);
+        args.push(self.rt.upload_i32(&batch.labels, &[batch.batch_size])?);
+        args.push(self.rt.upload(&Tensor::from_vec(&[batch.batch_size], batch.scores.clone()))?);
+        args.push(self.rt.upload(&Tensor::from_vec(&[batch.batch_size], batch.weights.clone()))?);
+        args.push(self.rt.upload_scalar_i32(task_id)?);
+        args.push(self.rt.upload_scalar(alpha)?);
+        let mut outs = self.execute(args)?;
+        let grads = outs.split_off(1);
+        let loss = outs[0].data()[0];
+        Ok((loss, grads))
+    }
+
+    /// One fwd (eval) step. Returns logits `[batch, classes]`.
+    pub fn run_eval(
+        &self,
+        trainable: &[Tensor],
+        batch: &Batch,
+        task_id: i32,
+        alpha: f32,
+    ) -> Result<Tensor> {
+        let mut args = self.upload_trainable(trainable)?;
+        args.push(self.rt.upload_i32(&batch.tokens, &[batch.batch_size, batch.seq_len])?);
+        args.push(self.rt.upload_scalar_i32(task_id)?);
+        args.push(self.rt.upload_scalar(alpha)?);
+        let outs = self.execute(args)?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// One MLM pretraining step (no frozen inputs; `trainable` is the whole
+    /// encoder). Returns (loss, grads).
+    pub fn run_pretrain(
+        &self,
+        trainable: &[Tensor],
+        batch: &MlmBatch,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let mut args = self.upload_trainable(trainable)?;
+        args.push(self.rt.upload_i32(&batch.tokens, &[batch.batch_size, batch.seq_len])?);
+        args.push(self.rt.upload_i32(&batch.targets, &[batch.batch_size, batch.seq_len])?);
+        args.push(self.rt.upload(&Tensor::from_vec(
+            &[batch.batch_size, batch.seq_len],
+            batch.weights.clone(),
+        ))?);
+        let mut outs = self.execute(args)?;
+        let grads = outs.split_off(1);
+        Ok((outs[0].data()[0], grads))
+    }
+
+    /// Raw positional execution (used by the apply/serve micro-bench).
+    pub fn run_raw(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut args = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            args.push(self.rt.upload(t)?);
+        }
+        self.execute(args)
+    }
+}

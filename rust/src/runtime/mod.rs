@@ -1,0 +1,13 @@
+//! PJRT runtime: artifact registry, executable cache, step execution.
+//!
+//! `registry` parses `artifacts/manifest.json` (written by aot.py);
+//! `exec` owns the PJRT client, the spec-keyed executable cache, and the
+//! step runners; `backbone` assembles the frozen-weight input set.
+
+mod backbone;
+mod exec;
+mod registry;
+
+pub use backbone::{assemble_frozen, checkpoint_path, init_encoder_weights};
+pub use exec::{Runtime, StepRunner};
+pub use registry::{ArtifactEntry, ArtifactSpec, IoSpec, Manifest, StepKind};

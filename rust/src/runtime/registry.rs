@@ -1,0 +1,296 @@
+//! Artifact registry: the manifest written by `python/compile/aot.py`.
+//!
+//! Every AOT-lowered HLO artifact is identified by an [`ArtifactSpec`]
+//! (model preset, adapter, rank, tasks, batch, seq, step kind). The python
+//! side lowers one HLO text file per spec and records, in
+//! `artifacts/manifest.json`, the file name plus the *exact ordered input
+//! layout* (frozen weights, trainable params, data) and output layout the
+//! rust executor must honor. The registry parses and indexes that manifest.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// What a lowered computation does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum StepKind {
+    /// fwd+bwd: outputs (loss, grads...) given (frozen, trainable, batch).
+    Train,
+    /// fwd only: outputs logits/scores given (frozen, trainable, batch).
+    Eval,
+    /// MLM pretraining step over all weights.
+    Pretrain,
+    /// Serving apply: folded adapter application (hotpath bench).
+    Apply,
+}
+
+impl StepKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepKind::Train => "train",
+            StepKind::Eval => "eval",
+            StepKind::Pretrain => "pretrain",
+            StepKind::Apply => "apply",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<StepKind, String> {
+        match s {
+            "train" => Ok(StepKind::Train),
+            "eval" => Ok(StepKind::Eval),
+            "pretrain" => Ok(StepKind::Pretrain),
+            "apply" => Ok(StepKind::Apply),
+            other => Err(format!("unknown step kind '{other}'")),
+        }
+    }
+}
+
+/// Identity of one artifact. Equality/order derive the cache key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ArtifactSpec {
+    pub step: StepKind,
+    /// Model preset name ("tiny", "small", "base_sim").
+    pub model: String,
+    /// Adapter name ("metatt4d", "lora", … or "none" for pretrain).
+    pub adapter: String,
+    pub rank: usize,
+    /// Task-head arity: number of classes (or 1 for regression).
+    pub classes: usize,
+    /// Number of tasks wired into the graph (MTL artifacts).
+    pub tasks: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl ArtifactSpec {
+    /// Canonical file stem, mirrored by aot.py.
+    pub fn stem(&self) -> String {
+        format!(
+            "{}_{}_{}_r{}_c{}_t{}_b{}_s{}",
+            self.step.name(),
+            self.model,
+            self.adapter,
+            self.rank,
+            self.classes,
+            self.tasks,
+            self.batch,
+            self.seq
+        )
+    }
+}
+
+/// One named input or output of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "i32".
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A manifest entry: artifact identity + file + I/O layout.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub spec: ArtifactSpec,
+    pub file: PathBuf,
+    /// Ordered HLO parameters: frozen weights first, then trainable, then
+    /// data inputs — the exact call convention of the executable.
+    pub inputs: Vec<IoSpec>,
+    /// Ordered tuple outputs.
+    pub outputs: Vec<IoSpec>,
+    /// Index ranges partitioning `inputs`.
+    pub n_frozen: usize,
+    pub n_trainable: usize,
+}
+
+impl ArtifactEntry {
+    pub fn frozen_inputs(&self) -> &[IoSpec] {
+        &self.inputs[..self.n_frozen]
+    }
+    pub fn trainable_inputs(&self) -> &[IoSpec] {
+        &self.inputs[self.n_frozen..self.n_frozen + self.n_trainable]
+    }
+    pub fn data_inputs(&self) -> &[IoSpec] {
+        &self.inputs[self.n_frozen + self.n_trainable..]
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: BTreeMap<ArtifactSpec, ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts` first)", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_json(&doc, dir)
+    }
+
+    pub fn from_json(doc: &Json, dir: &Path) -> Result<Manifest, String> {
+        let arr = doc
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest missing 'artifacts' array")?;
+        let mut entries = BTreeMap::new();
+        for item in arr {
+            let entry = parse_entry(item, dir)?;
+            entries.insert(entry.spec.clone(), entry);
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, spec: &ArtifactSpec) -> Option<&ArtifactEntry> {
+        self.entries.get(spec)
+    }
+
+    pub fn require(&self, spec: &ArtifactSpec) -> Result<&ArtifactEntry, String> {
+        self.get(spec).ok_or_else(|| {
+            format!(
+                "artifact {} not in manifest ({} available); re-run `make artifacts`",
+                spec.stem(),
+                self.entries.len()
+            )
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn specs(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.entries.keys()
+    }
+}
+
+fn parse_entry(item: &Json, dir: &Path) -> Result<ArtifactEntry, String> {
+    let s = |key: &str| -> Result<String, String> {
+        item.get(key)
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .ok_or_else(|| format!("artifact entry missing '{key}'"))
+    };
+    let n = |key: &str| -> Result<usize, String> {
+        item.get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| format!("artifact entry missing '{key}'"))
+    };
+    let spec = ArtifactSpec {
+        step: StepKind::from_name(&s("step")?)?,
+        model: s("model")?,
+        adapter: s("adapter")?,
+        rank: n("rank")?,
+        classes: n("classes")?,
+        tasks: n("tasks")?,
+        batch: n("batch")?,
+        seq: n("seq")?,
+    };
+    let parse_ios = |key: &str| -> Result<Vec<IoSpec>, String> {
+        item.get(key)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| format!("artifact entry missing '{key}'"))?
+            .iter()
+            .map(|io| {
+                let name = io
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or("io missing name")?
+                    .to_string();
+                let dtype = io
+                    .get("dtype")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("f32")
+                    .to_string();
+                let shape = io
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or("io missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or("bad dim"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(IoSpec { name, shape, dtype })
+            })
+            .collect()
+    };
+    Ok(ArtifactEntry {
+        file: dir.join(s("file")?),
+        inputs: parse_ios("inputs")?,
+        outputs: parse_ios("outputs")?,
+        n_frozen: n("n_frozen")?,
+        n_trainable: n("n_trainable")?,
+        spec,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {
+          "step": "train", "model": "tiny", "adapter": "metatt4d",
+          "rank": 8, "classes": 2, "tasks": 1, "batch": 16, "seq": 64,
+          "file": "train_tiny_metatt4d_r8_c2_t1_b16_s64.hlo.txt",
+          "n_frozen": 2, "n_trainable": 4,
+          "inputs": [
+            {"name": "tok_emb", "shape": [1024, 128], "dtype": "f32"},
+            {"name": "pos_emb", "shape": [64, 128], "dtype": "f32"},
+            {"name": "g1", "shape": [128, 8], "dtype": "f32"},
+            {"name": "g2", "shape": [4, 8, 8], "dtype": "f32"},
+            {"name": "g3", "shape": [2, 8, 8], "dtype": "f32"},
+            {"name": "g4", "shape": [8, 128], "dtype": "f32"},
+            {"name": "tokens", "shape": [16, 64], "dtype": "i32"},
+            {"name": "labels", "shape": [16], "dtype": "i32"}
+          ],
+          "outputs": [
+            {"name": "loss", "shape": [], "dtype": "f32"},
+            {"name": "grad_g1", "shape": [128, 8], "dtype": "f32"}
+          ]
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn manifest_roundtrip() {
+        let doc = crate::util::json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&doc, Path::new("artifacts")).unwrap();
+        assert_eq!(m.len(), 1);
+        let spec = ArtifactSpec {
+            step: StepKind::Train,
+            model: "tiny".into(),
+            adapter: "metatt4d".into(),
+            rank: 8,
+            classes: 2,
+            tasks: 1,
+            batch: 16,
+            seq: 64,
+        };
+        let e = m.require(&spec).unwrap();
+        assert_eq!(e.frozen_inputs().len(), 2);
+        assert_eq!(e.trainable_inputs().len(), 4);
+        assert_eq!(e.data_inputs().len(), 2);
+        assert_eq!(e.data_inputs()[0].dtype, "i32");
+        assert_eq!(e.trainable_inputs()[1].numel(), 4 * 8 * 8);
+        assert_eq!(spec.stem(), "train_tiny_metatt4d_r8_c2_t1_b16_s64");
+        // missing spec is a helpful error
+        let mut missing = spec.clone();
+        missing.rank = 99;
+        assert!(m.require(&missing).is_err());
+    }
+}

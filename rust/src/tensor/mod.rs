@@ -1,0 +1,231 @@
+//! Dense f32 tensor substrate.
+//!
+//! The rust side of the stack needs host-side numerics for everything the
+//! HLO artifacts do *not* cover: the DMRG sweep (merge / SVD / truncate /
+//! re-split of TT cores), optimizer state, adapter materialization checks,
+//! and metric computation. This module provides a small row-major ND array
+//! with the operations those consumers use. It is deliberately not a BLAS —
+//! the hot numerical path of training lives in the AOT-compiled XLA
+//! artifacts; host tensors touch only adapter-sized data (KBs to low MBs).
+
+mod ops;
+
+pub use ops::*;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Tensor filled with `v`.
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Build from shape + data (length must match).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// 2-D identity matrix.
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// Identity-like rectangular matrix (ones on the main diagonal).
+    pub fn eye_rect(rows: usize, cols: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[rows, cols]);
+        for i in 0..rows.min(cols) {
+            t.data[i * cols + i] = 1.0;
+        }
+        t
+    }
+
+    /// Gaussian-filled tensor, N(0, std).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::rng::Pcg64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows of a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "rows() needs a matrix, got {:?}", self.shape);
+        self.shape[0]
+    }
+
+    /// Number of columns of a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "cols() needs a matrix, got {:?}", self.shape);
+        self.shape[1]
+    }
+
+    /// Matrix element accessor.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Matrix element mutator.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        self.data[i * cols + j] = v;
+    }
+
+    /// 3-D element accessor (used by TT cores, shape [r_left, n, r_right]).
+    #[inline]
+    pub fn at3(&self, i: usize, j: usize, k: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 3);
+        self.data[(i * self.shape[1] + j) * self.shape[2] + k]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, i: usize, j: usize, k: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 3);
+        let (s1, s2) = (self.shape[1], self.shape[2]);
+        self.data[(i * s1 + j) * s2 + k] = v;
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?} changes element count",
+            self.shape,
+            shape
+        );
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// In-place reshape (no copy).
+    pub fn reshape_inplace(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Count of non-zero elements (used for the paper's `‖∇G‖_F/√|G|`
+    /// normalized-gradient diagnostic, Appendix B).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Max |x|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// True if all elements are finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at(1, 2), 6.0);
+        let e = Tensor::eye(3);
+        assert_eq!(e.at(2, 2), 1.0);
+        assert_eq!(e.at(0, 1), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+
+    #[test]
+    fn fro_norm_matches_manual() {
+        let t = Tensor::from_vec(&[2, 2], vec![3., 4., 0., 0.]);
+        assert!((t.fro_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn randn_is_seed_deterministic() {
+        let a = Tensor::randn(&[4, 4], 1.0, &mut Pcg64::new(3));
+        let b = Tensor::randn(&[4, 4], 1.0, &mut Pcg64::new(3));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn at3_layout() {
+        let t = Tensor::from_vec(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        assert_eq!(t.at3(1, 0, 1), 5.0);
+        assert_eq!(t.at3(0, 1, 0), 2.0);
+    }
+}

@@ -1,0 +1,329 @@
+//! Tensor operations: matmul family, transpose, elementwise, reductions.
+//!
+//! Matmul is cache-blocked with an i-k-j loop order (unit-stride inner loop)
+//! which is plenty for the adapter-sized matrices the host touches. The
+//! bench `hotpath_micro` tracks its throughput so regressions are visible.
+
+use super::Tensor;
+
+/// Cache block edge for the matmul micro-kernel (f32: 64*64*4B = 16 KB/tile,
+/// three tiles comfortably fit in L1+L2).
+const BLOCK: usize = 64;
+
+impl Tensor {
+    /// Matrix product `self (m×k) · rhs (k×n)`.
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (rhs.rows(), rhs.cols());
+        assert_eq!(k, k2, "matmul inner dims: {:?} x {:?}", self.shape(), rhs.shape());
+        let mut out = Tensor::zeros(&[m, n]);
+        matmul_into(self.data(), rhs.data(), out.data_mut(), m, k, n);
+        out
+    }
+
+    /// `self^T (k×m)^T=(m×k)? ` — computes `self.transpose() · rhs` without
+    /// materializing the transpose: self is (k×m), rhs is (k×n), out (m×n).
+    pub fn t_matmul(&self, rhs: &Tensor) -> Tensor {
+        let (k, m) = (self.rows(), self.cols());
+        let (k2, n) = (rhs.rows(), rhs.cols());
+        assert_eq!(k, k2, "t_matmul inner dims: {:?}^T x {:?}", self.shape(), rhs.shape());
+        let mut out = Tensor::zeros(&[m, n]);
+        let (a, b, c) = (self.data(), rhs.data(), out.data_mut());
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let aval = a[kk * m + i];
+                if aval == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += aval * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self · rhs^T`: self (m×k), rhs (n×k), out (m×n).
+    pub fn matmul_t(&self, rhs: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (n, k2) = (rhs.rows(), rhs.cols());
+        assert_eq!(k, k2, "matmul_t inner dims: {:?} x {:?}^T", self.shape(), rhs.shape());
+        let mut out = Tensor::zeros(&[m, n]);
+        let (a, b, c) = (self.data(), rhs.data(), out.data_mut());
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for t in 0..k {
+                    acc += arow[t] * brow[t];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// 2-D transpose (copies).
+    pub fn transpose(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data_mut()[j * m + i] = self.data()[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// Elementwise `self + rhs` (same shape).
+    pub fn add(&self, rhs: &Tensor) -> Tensor {
+        self.zip(rhs, |a, b| a + b)
+    }
+
+    /// Elementwise `self - rhs` (same shape).
+    pub fn sub(&self, rhs: &Tensor) -> Tensor {
+        self.zip(rhs, |a, b| a - b)
+    }
+
+    /// Elementwise product.
+    pub fn mul(&self, rhs: &Tensor) -> Tensor {
+        self.zip(rhs, |a, b| a * b)
+    }
+
+    /// Scalar multiply.
+    pub fn scale(&self, s: f32) -> Tensor {
+        let mut out = self.clone();
+        for v in out.data_mut() {
+            *v *= s;
+        }
+        out
+    }
+
+    /// In-place `self += s * rhs` (axpy).
+    pub fn axpy(&mut self, s: f32, rhs: &Tensor) {
+        assert_eq!(self.shape(), rhs.shape());
+        for (a, b) in self.data_mut().iter_mut().zip(rhs.data()) {
+            *a += s * b;
+        }
+    }
+
+    fn zip(&self, rhs: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape(), rhs.shape(), "elementwise shape mismatch");
+        let data = self.data().iter().zip(rhs.data()).map(|(&a, &b)| f(a, b)).collect();
+        Tensor::from_vec(self.shape(), data)
+    }
+
+    /// Dot product of flattened tensors (same element count).
+    pub fn dot(&self, rhs: &Tensor) -> f64 {
+        assert_eq!(self.len(), rhs.len());
+        self.data()
+            .iter()
+            .zip(rhs.data())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum()
+    }
+
+    /// Extract row `i` of a matrix as a vector tensor.
+    pub fn row(&self, i: usize) -> Tensor {
+        let n = self.cols();
+        Tensor::from_vec(&[n], self.data()[i * n..(i + 1) * n].to_vec())
+    }
+
+    /// Extract a contiguous row range [lo, hi) of a matrix.
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> Tensor {
+        let n = self.cols();
+        assert!(lo <= hi && hi <= self.rows());
+        Tensor::from_vec(&[hi - lo, n], self.data()[lo * n..hi * n].to_vec())
+    }
+
+    /// Extract a column range [lo, hi) of a matrix.
+    pub fn cols_slice(&self, lo: usize, hi: usize) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        assert!(lo <= hi && hi <= n);
+        let w = hi - lo;
+        let mut out = Tensor::zeros(&[m, w]);
+        for i in 0..m {
+            out.data_mut()[i * w..(i + 1) * w]
+                .copy_from_slice(&self.data()[i * n + lo..i * n + hi]);
+        }
+        out
+    }
+
+    /// Slice of a 3-D tensor along the middle axis: `self[:, j, :]` as a
+    /// matrix (r_left × r_right). TT cores are stored [r_left, n, r_right].
+    pub fn mid_slice(&self, j: usize) -> Tensor {
+        assert_eq!(self.ndim(), 3);
+        let (rl, n, rr) = (self.shape()[0], self.shape()[1], self.shape()[2]);
+        assert!(j < n);
+        let mut out = Tensor::zeros(&[rl, rr]);
+        for i in 0..rl {
+            let src = &self.data()[(i * n + j) * rr..(i * n + j) * rr + rr];
+            out.data_mut()[i * rr..(i + 1) * rr].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Write a matrix into the middle-axis slice `self[:, j, :]`.
+    pub fn set_mid_slice(&mut self, j: usize, m: &Tensor) {
+        assert_eq!(self.ndim(), 3);
+        let (rl, n, rr) = (self.shape()[0], self.shape()[1], self.shape()[2]);
+        assert_eq!(m.shape(), &[rl, rr]);
+        assert!(j < n);
+        for i in 0..rl {
+            let dst_start = (i * n + j) * rr;
+            self.data_mut()[dst_start..dst_start + rr]
+                .copy_from_slice(&m.data()[i * rr..(i + 1) * rr]);
+        }
+    }
+
+    /// Sum over all elements.
+    pub fn sum(&self) -> f64 {
+        self.data().iter().map(|&x| x as f64).sum()
+    }
+
+    /// Mean over all elements.
+    pub fn mean(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.len() as f64
+        }
+    }
+}
+
+/// Blocked matmul kernel: C (m×n) += A (m×k) · B (k×n); C must be zeroed.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for j0 in (0..n).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(n);
+                for i in i0..i1 {
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    for kk in k0..k1 {
+                        let aik = a[i * k + kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        for j in j0..j1 {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Relative Frobenius error ‖a-b‖/max(‖b‖, eps); the standard closeness
+/// measure used across tests.
+pub fn rel_err(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape(), b.shape());
+    let diff = a.sub(b).fro_norm();
+    diff / b.fro_norm().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for t in 0..k {
+                    acc += a.at(i, t) * b.at(t, j);
+                }
+                c.set(i, j, acc);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_on_random_shapes() {
+        let mut rng = Pcg64::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (65, 64, 63), (128, 17, 70)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(rel_err(&got, &want) < 1e-5, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn transpose_variants_agree() {
+        let mut rng = Pcg64::new(2);
+        let a = Tensor::randn(&[9, 13], 1.0, &mut rng);
+        let b = Tensor::randn(&[9, 11], 1.0, &mut rng);
+        // a^T b via t_matmul vs explicit transpose
+        let got = a.t_matmul(&b);
+        let want = a.transpose().matmul(&b);
+        assert!(rel_err(&got, &want) < 1e-5);
+        // a b^T via matmul_t
+        let c = Tensor::randn(&[7, 13], 1.0, &mut rng);
+        let got2 = a.matmul_t(&c);
+        let want2 = a.matmul(&c.transpose());
+        assert!(rel_err(&got2, &want2) < 1e-5);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::new(3);
+        let a = Tensor::randn(&[6, 6], 1.0, &mut rng);
+        assert!(rel_err(&a.matmul(&Tensor::eye(6)), &a) < 1e-6);
+        assert!(rel_err(&Tensor::eye(6).matmul(&a), &a) < 1e-6);
+    }
+
+    #[test]
+    fn slices() {
+        let t = Tensor::from_vec(&[3, 4], (0..12).map(|x| x as f32).collect());
+        assert_eq!(t.row(1).data(), &[4., 5., 6., 7.]);
+        assert_eq!(t.rows_slice(1, 3).shape(), &[2, 4]);
+        assert_eq!(t.cols_slice(1, 3).data(), &[1., 2., 5., 6., 9., 10.]);
+    }
+
+    #[test]
+    fn mid_slice_roundtrip() {
+        let mut rng = Pcg64::new(4);
+        let mut core = Tensor::randn(&[3, 5, 2], 1.0, &mut rng);
+        let m = Tensor::randn(&[3, 2], 1.0, &mut rng);
+        core.set_mid_slice(2, &m);
+        assert_eq!(core.mid_slice(2), m);
+        // untouched slices keep their values finite and distinct
+        assert_ne!(core.mid_slice(1), m);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::full(&[2, 2], 1.0);
+        let b = Tensor::full(&[2, 2], 2.0);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(a.scale(0.5).data(), &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn associativity_of_chain_products() {
+        // (X G1) G2 == X (G1 G2) — the algebraic fact the TT apply relies on.
+        let mut rng = Pcg64::new(5);
+        let x = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        let g1 = Tensor::randn(&[16, 4], 1.0, &mut rng);
+        let g2 = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        let left = x.matmul(&g1).matmul(&g2);
+        let right = x.matmul(&g1.matmul(&g2));
+        assert!(rel_err(&left, &right) < 1e-5);
+    }
+}

@@ -1,0 +1,72 @@
+//! Property-testing helper (the offline registry has no `proptest`).
+//!
+//! `prop_check` runs a closure over N seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed deterministically:
+//! `prop_check` derives each case's RNG from (suite seed, case index), so
+//! re-running the named test reproduces the exact failure.
+
+use crate::util::rng::Pcg64;
+
+/// Run `cases` random property checks. `f` gets a per-case RNG and the case
+/// index and returns `Err(msg)` to signal a violation.
+pub fn prop_check<F>(name: &str, cases: usize, f: F)
+where
+    F: Fn(&mut Pcg64, usize) -> Result<(), String>,
+{
+    let suite_seed: u64 = 0x6d65_7461_7474; // "metatt"
+    for case in 0..cases {
+        let mut rng = Pcg64::with_stream(suite_seed, case as u64 + 1);
+        if let Err(msg) = f(&mut rng, case) {
+            panic!("property '{name}' violated at case {case}: {msg}");
+        }
+    }
+}
+
+/// Random shape helper: each dim uniform in [lo, hi].
+pub fn rand_shape(rng: &mut Pcg64, ndim: usize, lo: usize, hi: usize) -> Vec<usize> {
+    (0..ndim).map(|_| lo + rng.uniform_usize(hi - lo + 1)).collect()
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{ctx}: element {i} differs: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_valid_property() {
+        prop_check("square nonneg", 50, |rng, _| {
+            let x = rng.normal();
+            if x * x >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn prop_check_reports_failures() {
+        prop_check("always fails", 3, |_, _| Err("boom".into()));
+    }
+
+    #[test]
+    fn rand_shape_in_bounds() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..100 {
+            let s = rand_shape(&mut rng, 3, 2, 9);
+            assert!(s.iter().all(|&d| (2..=9).contains(&d)));
+        }
+    }
+}

@@ -1,0 +1,343 @@
+//! The generic TT chain: cores, contraction, slicing, orthogonalization.
+
+use crate::linalg;
+use crate::tensor::Tensor;
+
+/// A tensor train: `cores[k]` has shape `[r_{k-1}, n_k, r_k]` with boundary
+/// ranks `r_0 = r_d = 1`.
+#[derive(Clone, Debug)]
+pub struct TtChain {
+    cores: Vec<Tensor>,
+}
+
+impl TtChain {
+    /// Build from cores; validates the rank chain.
+    pub fn new(cores: Vec<Tensor>) -> TtChain {
+        assert!(!cores.is_empty(), "TT needs at least one core");
+        for c in &cores {
+            assert_eq!(c.ndim(), 3, "TT cores are order-3, got {:?}", c.shape());
+        }
+        assert_eq!(cores[0].shape()[0], 1, "left boundary rank must be 1");
+        assert_eq!(cores.last().unwrap().shape()[2], 1, "right boundary rank must be 1");
+        for w in cores.windows(2) {
+            assert_eq!(
+                w[0].shape()[2],
+                w[1].shape()[0],
+                "bond mismatch: {:?} -> {:?}",
+                w[0].shape(),
+                w[1].shape()
+            );
+        }
+        TtChain { cores }
+    }
+
+    /// Number of cores (the order d of the represented tensor).
+    pub fn order(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Mode sizes `n_1..n_d`.
+    pub fn mode_sizes(&self) -> Vec<usize> {
+        self.cores.iter().map(|c| c.shape()[1]).collect()
+    }
+
+    /// Interior bond ranks `r_1..r_{d-1}` (boundary 1s omitted).
+    pub fn ranks(&self) -> Vec<usize> {
+        self.cores[..self.cores.len() - 1]
+            .iter()
+            .map(|c| c.shape()[2])
+            .collect()
+    }
+
+    /// Largest interior bond rank.
+    pub fn max_rank(&self) -> usize {
+        self.ranks().into_iter().max().unwrap_or(1)
+    }
+
+    pub fn core(&self, k: usize) -> &Tensor {
+        &self.cores[k]
+    }
+
+    pub fn core_mut(&mut self, k: usize) -> &mut Tensor {
+        &mut self.cores[k]
+    }
+
+    pub fn cores(&self) -> &[Tensor] {
+        &self.cores
+    }
+
+    /// Replace cores i and i+1 (used by the DMRG sweep).
+    pub(crate) fn replace_pair(&mut self, i: usize, left: Tensor, right: Tensor) {
+        assert_eq!(left.shape()[1], self.cores[i].shape()[1]);
+        assert_eq!(right.shape()[1], self.cores[i + 1].shape()[1]);
+        assert_eq!(left.shape()[2], right.shape()[0]);
+        assert_eq!(left.shape()[0], self.cores[i].shape()[0]);
+        assert_eq!(right.shape()[2], self.cores[i + 1].shape()[2]);
+        self.cores[i] = left;
+        self.cores[i + 1] = right;
+    }
+
+    /// Total number of stored parameters.
+    pub fn param_count(&self) -> usize {
+        self.cores.iter().map(|c| c.len()).sum()
+    }
+
+    /// The matrix slice `G_k[j]` (r_{k-1} × r_k) of core k.
+    pub fn slice(&self, k: usize, j: usize) -> Tensor {
+        self.cores[k].mid_slice(j)
+    }
+
+    /// Evaluate one scalar entry `G[i1..id]` (tests / tiny tensors only).
+    pub fn entry(&self, idx: &[usize]) -> f32 {
+        assert_eq!(idx.len(), self.order());
+        let mut acc = self.slice(0, idx[0]);
+        for (k, &j) in idx.iter().enumerate().skip(1) {
+            acc = acc.matmul(&self.slice(k, j));
+        }
+        debug_assert_eq!(acc.shape(), &[1, 1]);
+        acc.data()[0]
+    }
+
+    /// Materialize the full tensor, row-major over the mode indices.
+    /// Exponential in d — test use only.
+    pub fn materialize(&self) -> Tensor {
+        let modes = self.mode_sizes();
+        let total: usize = modes.iter().product();
+        assert!(total <= 1 << 22, "materialize() is for small tensors");
+        // Left-to-right accumulation: rows = multi-index prefix, cols = bond.
+        // acc starts as core0 flattened: (n_1) x r_1.
+        let c0 = &self.cores[0];
+        let mut acc = c0.reshape(&[modes[0], c0.shape()[2]]);
+        for k in 1..self.order() {
+            let ck = &self.cores[k];
+            let (rl, n, rr) = (ck.shape()[0], ck.shape()[1], ck.shape()[2]);
+            // acc: (P x rl) · core (rl x (n·rr)) = P x (n·rr) -> (P·n) x rr
+            let ck_mat = ck.reshape(&[rl, n * rr]);
+            acc = acc.matmul(&ck_mat).reshape_inplace(&[acc.shape()[0] * n, rr]);
+        }
+        acc.reshape_inplace(&modes)
+    }
+
+    /// Contract a sub-chain of *middle* cores at fixed indices into a single
+    /// r×r matrix: `G_a[i_a]·…·G_b[i_b]` for cores `a..=b`.
+    pub fn middle_product(&self, a: usize, b: usize, idx: &[usize]) -> Tensor {
+        assert_eq!(idx.len(), b - a + 1);
+        let mut acc = self.slice(a, idx[0]);
+        for (off, &j) in idx.iter().enumerate().skip(1) {
+            acc = acc.matmul(&self.slice(a + off, j));
+        }
+        acc
+    }
+
+    /// Frobenius norm of the represented tensor, computed stably via
+    /// right-to-left contraction of the Gram chain (no materialization).
+    pub fn fro_norm(&self) -> f32 {
+        // E_k = sum_j core_k[.., j, ..] E_{k+1} core_k[.., j, ..]^T, E_d = [[1]]
+        let mut e = Tensor::eye(1);
+        for k in (0..self.order()).rev() {
+            let c = &self.cores[k];
+            let (rl, n, _rr) = (c.shape()[0], c.shape()[1], c.shape()[2]);
+            let mut next = Tensor::zeros(&[rl, rl]);
+            for j in 0..n {
+                let s = c.mid_slice(j);
+                let m = s.matmul(&e).matmul_t(&s);
+                next.axpy(1.0, &m);
+            }
+            e = next;
+        }
+        e.data()[0].max(0.0).sqrt()
+    }
+
+    /// Left-orthogonalize cores `0..pivot` in place (QR push). After this,
+    /// each core k < pivot satisfies `sum_j G_k[j]^T G_k[j] = I`.
+    pub fn left_orthogonalize(&mut self, pivot: usize) {
+        assert!(pivot < self.order());
+        for k in 0..pivot {
+            let c = &self.cores[k];
+            let (rl, n, rr) = (c.shape()[0], c.shape()[1], c.shape()[2]);
+            let mat = c.reshape(&[rl * n, rr]);
+            let (q, r) = linalg::qr(&mat);
+            let new_rr = q.cols();
+            self.cores[k] = q.reshape(&[rl, n, new_rr]);
+            // Push R into the next core: new_{k+1}[a, j, c] = sum_b R[a,b] G[b,j,c]
+            let nx = &self.cores[k + 1];
+            let (nrl, nn, nrr) = (nx.shape()[0], nx.shape()[1], nx.shape()[2]);
+            let nx_mat = nx.reshape(&[nrl, nn * nrr]);
+            self.cores[k + 1] = r.matmul(&nx_mat).reshape_inplace(&[new_rr, nn, nrr]);
+        }
+    }
+
+    /// Right-orthogonalize cores `pivot+1..d` in place (LQ push, mirrored).
+    pub fn right_orthogonalize(&mut self, pivot: usize) {
+        assert!(pivot < self.order());
+        for k in (pivot + 1..self.order()).rev() {
+            let c = &self.cores[k];
+            let (rl, n, rr) = (c.shape()[0], c.shape()[1], c.shape()[2]);
+            // LQ of (rl x n·rr) == transpose of QR of (n·rr x rl).
+            let mat_t = c.reshape(&[rl, n * rr]).transpose();
+            let (q, r) = linalg::qr(&mat_t);
+            let new_rl = q.cols();
+            self.cores[k] = q.transpose().reshape_inplace(&[new_rl, n, rr]);
+            // Push R^T into the previous core (multiply on its right bond).
+            let pv = &self.cores[k - 1];
+            let (prl, pn, prr) = (pv.shape()[0], pv.shape()[1], pv.shape()[2]);
+            debug_assert_eq!(prr, rl);
+            let pv_mat = pv.reshape(&[prl * pn, prr]);
+            self.cores[k - 1] = pv_mat.matmul_t(&r).reshape_inplace(&[prl, pn, new_rl]);
+        }
+    }
+
+    /// Merge cores i and i+1 into the matrix `(r_{i-1}·n_i) × (n_{i+1}·r_{i+1})`
+    /// — the MERGE step of Algorithm 1.
+    pub fn merge_pair(&self, i: usize) -> Tensor {
+        let (a, b) = (&self.cores[i], &self.cores[i + 1]);
+        let (rl, n1, rm) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+        let (_, n2, rr) = (b.shape()[0], b.shape()[1], b.shape()[2]);
+        let am = a.reshape(&[rl * n1, rm]);
+        let bm = b.reshape(&[rm, n2 * rr]);
+        am.matmul(&bm) // (rl·n1) x (n2·rr)
+    }
+
+    /// Flatten all cores into one parameter vector (canonical order: cores
+    /// left→right, each row-major). Matches the python export layout.
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count());
+        for c in &self.cores {
+            out.extend_from_slice(c.data());
+        }
+        out
+    }
+
+    /// Inverse of [`flatten`] given the current core shapes.
+    pub fn unflatten(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.param_count(), "flat param size mismatch");
+        let mut off = 0;
+        for c in &mut self.cores {
+            let n = c.len();
+            c.data_mut().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rel_err;
+    use crate::testutil::prop_check;
+    use crate::util::rng::Pcg64;
+
+    pub(crate) fn random_chain(
+        rng: &mut Pcg64,
+        modes: &[usize],
+        rank: usize,
+    ) -> TtChain {
+        let d = modes.len();
+        let mut cores = Vec::new();
+        for k in 0..d {
+            let rl = if k == 0 { 1 } else { rank };
+            let rr = if k == d - 1 { 1 } else { rank };
+            cores.push(Tensor::randn(&[rl, modes[k], rr], 0.5, rng));
+        }
+        TtChain::new(cores)
+    }
+
+    #[test]
+    fn entry_matches_materialize() {
+        let mut rng = Pcg64::new(1);
+        let tt = random_chain(&mut rng, &[3, 4, 2, 3], 3);
+        let full = tt.materialize();
+        // full is row-major over modes [3,4,2,3]
+        let strides = [4 * 2 * 3, 2 * 3, 3, 1];
+        for idx in [[0, 0, 0, 0], [2, 3, 1, 2], [1, 2, 0, 1]] {
+            let flat: usize = idx.iter().zip(strides).map(|(&i, s)| i * s).sum();
+            let want = full.data()[flat];
+            let got = tt.entry(&idx);
+            assert!((got - want).abs() < 1e-4, "idx {:?}: {got} vs {want}", idx);
+        }
+    }
+
+    #[test]
+    fn fro_norm_matches_materialized() {
+        let mut rng = Pcg64::new(2);
+        let tt = random_chain(&mut rng, &[4, 3, 5], 4);
+        let want = tt.materialize().fro_norm();
+        let got = tt.fro_norm();
+        assert!((got - want).abs() / want < 1e-4, "{got} vs {want}");
+    }
+
+    #[test]
+    fn orthogonalization_preserves_tensor() {
+        prop_check("orthogonalize preserves", 10, |rng, case| {
+            let modes = vec![3, 4, 3, 2];
+            let tt0 = random_chain(rng, &modes, 3);
+            let full0 = tt0.materialize();
+            let mut tt = tt0.clone();
+            if case % 2 == 0 {
+                tt.left_orthogonalize(modes.len() - 1);
+            } else {
+                tt.right_orthogonalize(0);
+            }
+            let full1 = tt.materialize();
+            let err = rel_err(&full1, &full0);
+            if err < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("err {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn left_orthogonal_cores_are_isometries() {
+        let mut rng = Pcg64::new(3);
+        let mut tt = random_chain(&mut rng, &[3, 4, 3, 2], 3);
+        tt.left_orthogonalize(3);
+        for k in 0..3 {
+            let c = tt.core(k);
+            let (rl, n, rr) = (c.shape()[0], c.shape()[1], c.shape()[2]);
+            let m = c.reshape(&[rl * n, rr]);
+            let gram = m.t_matmul(&m);
+            assert!(rel_err(&gram, &Tensor::eye(rr)) < 1e-4, "core {k}");
+        }
+    }
+
+    #[test]
+    fn merge_pair_contracts_correctly() {
+        let mut rng = Pcg64::new(4);
+        let tt = random_chain(&mut rng, &[2, 3, 4], 3);
+        let merged = tt.merge_pair(0); // (1*2) x (3*3)
+        assert_eq!(merged.shape(), &[2, 9]);
+        // Check one entry against slice products.
+        // merged[(0*2+i1), (j*3+b)] = sum_a G0[0,i1,a] G1[a,j,b]
+        let want = tt.slice(0, 1).matmul(&tt.slice(1, 2));
+        for b in 0..3 {
+            let got = merged.at(1, 2 * 3 + b);
+            assert!((got - want.at(0, b)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut rng = Pcg64::new(5);
+        let tt = random_chain(&mut rng, &[3, 2, 4], 2);
+        let flat = tt.flatten();
+        assert_eq!(flat.len(), tt.param_count());
+        let mut tt2 = random_chain(&mut rng, &[3, 2, 4], 2);
+        tt2.unflatten(&flat);
+        for k in 0..tt.order() {
+            assert_eq!(tt.core(k), tt2.core(k));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bond mismatch")]
+    fn bad_bond_rejected() {
+        let a = Tensor::zeros(&[1, 3, 2]);
+        let b = Tensor::zeros(&[3, 3, 1]);
+        TtChain::new(vec![a, b]);
+    }
+}
+
+#[cfg(test)]
+pub(crate) use tests::random_chain;

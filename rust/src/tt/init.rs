@@ -1,0 +1,194 @@
+//! TT initialization strategies (paper §3 "Initialization of MetaTT PEFT"
+//! and Appendix A.1 / Figure 3).
+//!
+//! The LoRA condition requires the adapter to be an exact zero map at step 0.
+//! Any single zero core achieves that; the paper's default is `ze-id-id-id`:
+//! first core zero, every other core's matrix slices the identity. Appendix
+//! A.1 also evaluates normal-initialized cores ('no', N(0, 0.2)) in various
+//! positions, which `fig3_init_strategies` reproduces.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// How to initialize one TT core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoreInit {
+    /// All entries zero ('ze').
+    Zero,
+    /// Each matrix slice `G_k[j]` is the (rectangular) identity ('id').
+    Identity,
+    /// Entries drawn from N(0, 0.2) ('no', Appendix A.1).
+    Normal,
+}
+
+impl CoreInit {
+    /// Parse the two-letter code used in the paper's Figure 3 legend.
+    pub fn from_code(code: &str) -> Result<CoreInit, String> {
+        match code {
+            "ze" => Ok(CoreInit::Zero),
+            "id" => Ok(CoreInit::Identity),
+            "no" => Ok(CoreInit::Normal),
+            other => Err(format!("unknown init code '{other}' (want ze|id|no)")),
+        }
+    }
+
+    pub fn code(&self) -> &'static str {
+        match self {
+            CoreInit::Zero => "ze",
+            CoreInit::Identity => "id",
+            CoreInit::Normal => "no",
+        }
+    }
+
+    /// Build an *interior* core of shape `[r_left, n, r_right]`: 'id' sets
+    /// every matrix slice `G_k[j]` to the (rectangular) identity.
+    pub fn build(&self, r_left: usize, n: usize, r_right: usize, rng: &mut Pcg64) -> Tensor {
+        match self {
+            CoreInit::Zero => Tensor::zeros(&[r_left, n, r_right]),
+            CoreInit::Identity => {
+                let mut t = Tensor::zeros(&[r_left, n, r_right]);
+                let eye = Tensor::eye_rect(r_left, r_right);
+                for j in 0..n {
+                    t.set_mid_slice(j, &eye);
+                }
+                t
+            }
+            CoreInit::Normal => Tensor::randn(&[r_left, n, r_right], 0.2, rng),
+        }
+    }
+
+    /// Build a *boundary* core. The paper's Algorithm 3 applies
+    /// `nn.init.eye_` to the boundary cores' natural **matrix view** —
+    /// `G1 ∈ R^{n×r}` (left, stored `[1, n, r]`) or `Gd ∈ R^{r×n}` (right,
+    /// stored `[r, n, 1]`) — NOT to each slice. Slice-level identity on a
+    /// boundary core (`e_0` per slice) would route every bond through
+    /// channel 0 and collapse the whole adapter to rank 1 regardless of r.
+    pub fn build_boundary(
+        &self,
+        r_left: usize,
+        n: usize,
+        r_right: usize,
+        rng: &mut Pcg64,
+    ) -> Tensor {
+        debug_assert!(r_left == 1 || r_right == 1, "not a boundary core");
+        match self {
+            CoreInit::Identity => {
+                let mut t = Tensor::zeros(&[r_left, n, r_right]);
+                if r_left == 1 {
+                    // left boundary: matrix view (n, r_right), eye -> t[0,j,b] = δ_{jb}
+                    for j in 0..n.min(r_right) {
+                        t.set3(0, j, j, 1.0);
+                    }
+                } else {
+                    // right boundary: matrix view (r_left, n), eye -> t[a,j,0] = δ_{aj}
+                    for a in 0..r_left.min(n) {
+                        t.set3(a, a, 0, 1.0);
+                    }
+                }
+                t
+            }
+            other => other.build(r_left, n, r_right, rng),
+        }
+    }
+}
+
+/// A per-core initialization recipe, e.g. `ze-id-id-id` (the paper default).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InitStrategy {
+    pub cores: Vec<CoreInit>,
+}
+
+impl InitStrategy {
+    /// The paper's default for a d-core chain: first core zero, rest identity.
+    pub fn paper_default(order: usize) -> InitStrategy {
+        let mut cores = vec![CoreInit::Identity; order];
+        cores[0] = CoreInit::Zero;
+        InitStrategy { cores }
+    }
+
+    /// Parse a dash-separated code string like "ze-id-no-id".
+    pub fn from_code(code: &str) -> Result<InitStrategy, String> {
+        let cores = code
+            .split('-')
+            .map(CoreInit::from_code)
+            .collect::<Result<Vec<_>, _>>()?;
+        if cores.is_empty() {
+            return Err("empty init code".into());
+        }
+        Ok(InitStrategy { cores })
+    }
+
+    pub fn code(&self) -> String {
+        self.cores.iter().map(|c| c.code()).collect::<Vec<_>>().join("-")
+    }
+
+    /// Does this strategy guarantee a zero adapter at step 0? True iff at
+    /// least one core is all-zero (paper Appendix A.1: the TT contraction is
+    /// zero along every slice iff some core vanishes).
+    pub fn is_zero_at_init(&self) -> bool {
+        self.cores.iter().any(|c| *c == CoreInit::Zero)
+    }
+
+    /// All 3^d init-code combinations for an order-d chain that satisfy the
+    /// zero-at-init condition — the Figure 3 ablation grid generator.
+    pub fn zero_preserving_grid(order: usize) -> Vec<InitStrategy> {
+        let opts = [CoreInit::Zero, CoreInit::Identity, CoreInit::Normal];
+        let mut out = Vec::new();
+        let total = 3usize.pow(order as u32);
+        for mask in 0..total {
+            let mut m = mask;
+            let cores: Vec<CoreInit> = (0..order)
+                .map(|_| {
+                    let c = opts[m % 3];
+                    m /= 3;
+                    c
+                })
+                .collect();
+            let s = InitStrategy { cores };
+            if s.is_zero_at_init() {
+                out.push(s);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_roundtrip() {
+        let s = InitStrategy::from_code("ze-id-no-id").unwrap();
+        assert_eq!(s.code(), "ze-id-no-id");
+        assert!(s.is_zero_at_init());
+        assert!(InitStrategy::from_code("xx-id").is_err());
+    }
+
+    #[test]
+    fn paper_default_is_ze_then_id() {
+        let s = InitStrategy::paper_default(4);
+        assert_eq!(s.code(), "ze-id-id-id");
+        assert!(s.is_zero_at_init());
+    }
+
+    #[test]
+    fn identity_core_slices_are_identity() {
+        let mut rng = Pcg64::new(1);
+        let c = CoreInit::Identity.build(3, 5, 3, &mut rng);
+        for j in 0..5 {
+            assert_eq!(c.mid_slice(j), Tensor::eye(3));
+        }
+        // rectangular case
+        let c2 = CoreInit::Identity.build(2, 4, 3, &mut rng);
+        assert_eq!(c2.mid_slice(1), Tensor::eye_rect(2, 3));
+    }
+
+    #[test]
+    fn grid_only_contains_zero_preserving() {
+        let grid = InitStrategy::zero_preserving_grid(3);
+        // 3^3 = 27 total; strategies with no 'ze' are 2^3 = 8; expect 19.
+        assert_eq!(grid.len(), 19);
+        assert!(grid.iter().all(|s| s.is_zero_at_init()));
+    }
+}

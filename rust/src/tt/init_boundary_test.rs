@@ -1,0 +1,76 @@
+//! Regression tests for the boundary-core identity init (the rank-collapse
+//! bug): with `ze-id-id-id`, the *effective* trained subspace must scale
+//! with r, i.e. the right boundary must expose every bond channel.
+
+use super::*;
+use crate::tensor::Tensor;
+use crate::tt::meta::{MetaTt, MetaTtDims, MetaTtKind};
+use crate::util::rng::Pcg64;
+
+fn dims() -> MetaTtDims {
+    MetaTtDims { d_in: 16, d_out: 16, layers: 3, matrices: 2, heads: 4, tasks: 1 }
+}
+
+#[test]
+fn right_boundary_identity_is_rect_eye_in_matrix_view() {
+    let mut rng = Pcg64::new(1);
+    let tt = MetaTt::new_default(MetaTtKind::FourD, dims(), 4, 1.0, &mut rng);
+    let exported = tt.export_cores();
+    let g4 = &exported[3]; // (r, d_out)
+    assert_eq!(g4.shape(), &[4, 16]);
+    for a in 0..4 {
+        for j in 0..16 {
+            let want = if a == j { 1.0 } else { 0.0 };
+            assert_eq!(g4.at(a, j), want, "g4[{a},{j}]");
+        }
+    }
+}
+
+#[test]
+fn gradient_channel_is_full_rank_not_rank1() {
+    // With G4 = eye_rect(r, D): (mid · G4) maps bond j -> output dim j for
+    // j < r, so dY/dG1 has r independent columns. The old (buggy) slice-
+    // identity boundary made (mid·G4) rank 1, so every rank trained the
+    // same function.
+    let mut rng = Pcg64::new(2);
+    let tt = MetaTt::new_default(MetaTtKind::FourD, dims(), 4, 1.0, &mut rng);
+    let mid = tt.chain.middle_product(1, 2, &[0, 0]);
+    let g4 = tt.chain.core(3).reshape(&[4, 16]);
+    let right = mid.matmul(&g4); // r x D
+    let svd = crate::linalg::svd(&right);
+    let numerical_rank = svd.s.iter().filter(|&&s| s > 1e-5).count();
+    assert_eq!(numerical_rank, 4, "right factor must expose all r channels");
+}
+
+#[test]
+fn five_d_boundary_also_full_channel() {
+    let mut rng = Pcg64::new(3);
+    let tt = MetaTt::new_default(MetaTtKind::FiveD, dims(), 3, 1.0, &mut rng);
+    let g5 = tt.chain.core(4).reshape(&[3, 4]); // (r, d/h)
+    let svd = crate::linalg::svd(&g5);
+    assert_eq!(svd.s.iter().filter(|&&s| s > 1e-5).count(), 3);
+}
+
+#[test]
+fn zero_at_init_still_holds_after_fix() {
+    let mut rng = Pcg64::new(4);
+    for kind in [MetaTtKind::FourD, MetaTtKind::FiveD, MetaTtKind::FourPlusOneD] {
+        let tt = MetaTt::new_default(kind, dims(), 4, 2.0, &mut rng);
+        let x = Tensor::randn(&[5, 16], 1.0, &mut rng);
+        assert_eq!(tt.apply(&x, 0, 0, 0).max_abs(), 0.0);
+    }
+}
+
+#[test]
+fn left_boundary_identity_matrix_view() {
+    // id-ze-id-id (Fig 3 ablation code): G1 = eye(D, r) in matrix view.
+    let mut rng = Pcg64::new(5);
+    let strat = InitStrategy::from_code("id-ze-id-id").unwrap();
+    let tt = MetaTt::new(MetaTtKind::FourD, dims(), 4, 1.0, &strat, &mut rng);
+    let g1 = tt.chain.core(0).reshape(&[16, 4]);
+    for j in 0..16 {
+        for b in 0..4 {
+            assert_eq!(g1.at(j, b), if j == b { 1.0 } else { 0.0 });
+        }
+    }
+}

@@ -1,0 +1,480 @@
+//! MetaTT adapters: the TT chain bound to transformer structural axes.
+
+use super::chain::TtChain;
+use super::init::InitStrategy;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Which MetaTT variant (paper §2.2–2.3, §3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetaTtKind {
+    /// Axes (D_in, L, M, D_out).
+    FourD,
+    /// Axes (D_in, L, M, H, D_out/H).
+    FiveD,
+    /// Axes (D_in, L, T, M, D_out) — the MTL variant with a task core in the
+    /// middle of the chain ("for symmetry", paper §3.2).
+    FourPlusOneD,
+}
+
+impl MetaTtKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetaTtKind::FourD => "metatt4d",
+            MetaTtKind::FiveD => "metatt5d",
+            MetaTtKind::FourPlusOneD => "metatt4p1d",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<MetaTtKind, String> {
+        match s {
+            "metatt4d" => Ok(MetaTtKind::FourD),
+            "metatt5d" => Ok(MetaTtKind::FiveD),
+            "metatt4p1d" => Ok(MetaTtKind::FourPlusOneD),
+            other => Err(format!("unknown MetaTT kind '{other}'")),
+        }
+    }
+
+    /// Chain order d.
+    pub fn order(&self) -> usize {
+        match self {
+            MetaTtKind::FourD => 4,
+            MetaTtKind::FiveD => 5,
+            MetaTtKind::FourPlusOneD => 5,
+        }
+    }
+}
+
+/// Structural dimensions of the adapted transformer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetaTtDims {
+    /// Input feature dim (D_in).
+    pub d_in: usize,
+    /// Output feature dim (D_out).
+    pub d_out: usize,
+    /// Number of transformer layers (L).
+    pub layers: usize,
+    /// Number of adapted projection matrices per layer (M; Q,V → 2).
+    pub matrices: usize,
+    /// Attention heads (H; 5D variant only).
+    pub heads: usize,
+    /// Number of tasks (T; (4+1)D variant only).
+    pub tasks: usize,
+}
+
+/// The global MetaTT adapter: one TT chain shared by every adapted linear
+/// map in the network, with slicing by (layer, matrix[, head, task]).
+#[derive(Clone, Debug)]
+pub struct MetaTt {
+    pub kind: MetaTtKind,
+    pub dims: MetaTtDims,
+    /// Scaling factor α applied to the adapter output (paper Eq. 5).
+    pub alpha: f32,
+    pub chain: TtChain,
+}
+
+impl MetaTt {
+    /// Derive TT dims from transformer model dims (square attention
+    /// projections: D_in = D_out = hidden).
+    pub fn dims_from_model(
+        _kind: MetaTtKind,
+        m: &crate::adapters::ModelDims,
+    ) -> MetaTtDims {
+        MetaTtDims {
+            d_in: m.hidden,
+            d_out: m.hidden,
+            layers: m.layers,
+            matrices: m.matrices,
+            heads: m.heads,
+            tasks: m.tasks,
+        }
+    }
+
+    /// Mode sizes for a variant given dims.
+    pub fn mode_sizes(kind: MetaTtKind, dims: &MetaTtDims) -> Vec<usize> {
+        match kind {
+            MetaTtKind::FourD => vec![dims.d_in, dims.layers, dims.matrices, dims.d_out],
+            MetaTtKind::FiveD => {
+                assert!(
+                    dims.d_out % dims.heads == 0,
+                    "D_out {} not divisible by H {}",
+                    dims.d_out,
+                    dims.heads
+                );
+                vec![
+                    dims.d_in,
+                    dims.layers,
+                    dims.matrices,
+                    dims.heads,
+                    dims.d_out / dims.heads,
+                ]
+            }
+            MetaTtKind::FourPlusOneD => vec![
+                dims.d_in,
+                dims.layers,
+                dims.tasks,
+                dims.matrices,
+                dims.d_out,
+            ],
+        }
+    }
+
+    /// Create with uniform interior rank `r` and the given init strategy.
+    pub fn new(
+        kind: MetaTtKind,
+        dims: MetaTtDims,
+        rank: usize,
+        alpha: f32,
+        init: &InitStrategy,
+        rng: &mut Pcg64,
+    ) -> MetaTt {
+        let modes = Self::mode_sizes(kind, &dims);
+        assert_eq!(
+            init.cores.len(),
+            modes.len(),
+            "init strategy order {} != chain order {}",
+            init.cores.len(),
+            modes.len()
+        );
+        let d = modes.len();
+        let cores: Vec<Tensor> = (0..d)
+            .map(|k| {
+                let rl = if k == 0 { 1 } else { rank };
+                let rr = if k == d - 1 { 1 } else { rank };
+                if k == 0 || k == d - 1 {
+                    init.cores[k].build_boundary(rl, modes[k], rr, rng)
+                } else {
+                    init.cores[k].build(rl, modes[k], rr, rng)
+                }
+            })
+            .collect();
+        MetaTt { kind, dims, alpha, chain: TtChain::new(cores) }
+    }
+
+    /// Create with the paper-default init (ze-id-id-…).
+    pub fn new_default(
+        kind: MetaTtKind,
+        dims: MetaTtDims,
+        rank: usize,
+        alpha: f32,
+        rng: &mut Pcg64,
+    ) -> MetaTt {
+        let init = InitStrategy::paper_default(kind.order());
+        Self::new(kind, dims, rank, alpha, &init, rng)
+    }
+
+    /// Trainable parameter count (exact; the complexity bench checks this
+    /// against the paper's closed forms).
+    pub fn param_count(&self) -> usize {
+        self.chain.param_count()
+    }
+
+    /// Materialize the adapter update `ΔW_{l,m}` (D_in × D_out), WITHOUT α.
+    ///
+    /// 4D: `G1 · G2[l] · G3[m] · G4` (paper Eq. 5).
+    /// 5D: head-blocks concatenated along the output dim.
+    /// (4+1)D: `G1 · G2[l] · G3[t] · G4[m] · G5` (paper Eq. 6).
+    pub fn delta_w(&self, layer: usize, matrix: usize, task: usize) -> Tensor {
+        let d_in = self.dims.d_in;
+        match self.kind {
+            MetaTtKind::FourD => {
+                let g1 = self.chain.core(0).reshape(&[d_in, self.chain.core(0).shape()[2]]);
+                let mid = self.chain.middle_product(1, 2, &[layer, matrix]);
+                let g4 = self.last_core_matrix();
+                g1.matmul(&mid).matmul(&g4)
+            }
+            MetaTtKind::FourPlusOneD => {
+                let g1 = self.chain.core(0).reshape(&[d_in, self.chain.core(0).shape()[2]]);
+                let mid = self.chain.middle_product(1, 3, &[layer, task, matrix]);
+                let g5 = self.last_core_matrix();
+                g1.matmul(&mid).matmul(&g5)
+            }
+            MetaTtKind::FiveD => {
+                let g1 = self.chain.core(0).reshape(&[d_in, self.chain.core(0).shape()[2]]);
+                let dh = self.dims.d_out / self.dims.heads;
+                let mut out = Tensor::zeros(&[d_in, self.dims.d_out]);
+                let lm = self.chain.middle_product(1, 2, &[layer, matrix]);
+                let g5 = self.last_core_matrix(); // r4 x dh
+                for h in 0..self.dims.heads {
+                    let mid = lm.matmul(&self.chain.slice(3, h));
+                    let blk = g1.matmul(&mid).matmul(&g5); // d_in x dh
+                    for i in 0..d_in {
+                        for j in 0..dh {
+                            out.set(i, h * dh + j, blk.at(i, j));
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Last core as a (r × n_d) matrix.
+    fn last_core_matrix(&self) -> Tensor {
+        let c = self.chain.core(self.chain.order() - 1);
+        c.reshape(&[c.shape()[0], c.shape()[1]])
+    }
+
+    /// Apply the adapter to a batch: `α · X · ΔW_{l,m,t}` — the rust oracle
+    /// for the Pallas kernel, contracted in the cheap order
+    /// `(((X·G1)·mid)·G_last)` so no D×D intermediate is formed.
+    pub fn apply(&self, x: &Tensor, layer: usize, matrix: usize, task: usize) -> Tensor {
+        assert_eq!(x.cols(), self.dims.d_in);
+        let g1 = self.chain.core(0).reshape(&[self.dims.d_in, self.chain.core(0).shape()[2]]);
+        let xg = x.matmul(&g1); // N x r
+        match self.kind {
+            MetaTtKind::FourD => {
+                let mid = self.chain.middle_product(1, 2, &[layer, matrix]);
+                xg.matmul(&mid).matmul(&self.last_core_matrix()).scale(self.alpha)
+            }
+            MetaTtKind::FourPlusOneD => {
+                let mid = self.chain.middle_product(1, 3, &[layer, task, matrix]);
+                xg.matmul(&mid).matmul(&self.last_core_matrix()).scale(self.alpha)
+            }
+            MetaTtKind::FiveD => {
+                let n = x.rows();
+                let dh = self.dims.d_out / self.dims.heads;
+                let lm = self.chain.middle_product(1, 2, &[layer, matrix]);
+                let xlm = xg.matmul(&lm);
+                let g5 = self.last_core_matrix();
+                let mut out = Tensor::zeros(&[n, self.dims.d_out]);
+                for h in 0..self.dims.heads {
+                    let blk = xlm.matmul(&self.chain.slice(3, h)).matmul(&g5);
+                    for i in 0..n {
+                        for j in 0..dh {
+                            out.set(i, h * dh + j, self.alpha * blk.at(i, j));
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Pre-merge the middle cores into the boundary for serving (paper §2.4:
+    /// "merge the middle tensor cores with G1 or G4 once the adapters are
+    /// trained"). Returns per-(l,m[,t]) factor pairs (A = G1·mid scaled by α,
+    /// B = G_last) so serving does exactly two GEMMs like LoRA.
+    pub fn fold_for_serving(&self, task: usize) -> Vec<Vec<(Tensor, Tensor)>> {
+        let g1 = self.chain.core(0).reshape(&[self.dims.d_in, self.chain.core(0).shape()[2]]);
+        let mut out = Vec::with_capacity(self.dims.layers);
+        for l in 0..self.dims.layers {
+            let mut row = Vec::with_capacity(self.dims.matrices);
+            for m in 0..self.dims.matrices {
+                let (a, b) = match self.kind {
+                    MetaTtKind::FourD => {
+                        let mid = self.chain.middle_product(1, 2, &[l, m]);
+                        (g1.matmul(&mid).scale(self.alpha), self.last_core_matrix())
+                    }
+                    MetaTtKind::FourPlusOneD => {
+                        let mid = self.chain.middle_product(1, 3, &[l, task, m]);
+                        (g1.matmul(&mid).scale(self.alpha), self.last_core_matrix())
+                    }
+                    MetaTtKind::FiveD => {
+                        // Fold heads into a block-diagonal-free form: build the
+                        // full (r1 x D_out) right factor for this (l, m).
+                        let lm = self.chain.middle_product(1, 2, &[l, m]);
+                        let g5 = self.last_core_matrix();
+                        let dh = self.dims.d_out / self.dims.heads;
+                        let r1 = g1.cols();
+                        let mut right = Tensor::zeros(&[r1, self.dims.d_out]);
+                        for h in 0..self.dims.heads {
+                            let rh = lm
+                                .matmul(&self.chain.slice(3, h))
+                                .matmul(&g5); // r1 x dh
+                            for i in 0..r1 {
+                                for j in 0..dh {
+                                    right.set(i, h * dh + j, rh.at(i, j));
+                                }
+                            }
+                        }
+                        (g1.scale(self.alpha), right)
+                    }
+                };
+                row.push((a, b));
+            }
+            out.push(row);
+        }
+        out
+    }
+
+    /// Export cores in the layout the python model consumes:
+    /// boundary cores squeezed to matrices, interior cores permuted to
+    /// `(n, r_left, r_right)` so `core[idx]` indexes the structural axis.
+    pub fn export_cores(&self) -> Vec<Tensor> {
+        let d = self.chain.order();
+        (0..d)
+            .map(|k| {
+                let c = self.chain.core(k);
+                let (rl, n, rr) = (c.shape()[0], c.shape()[1], c.shape()[2]);
+                if k == 0 {
+                    c.reshape(&[n, rr])
+                } else if k == d - 1 {
+                    c.reshape(&[rl, n])
+                } else {
+                    // [rl, n, rr] -> [n, rl, rr]
+                    let mut out = Tensor::zeros(&[n, rl, rr]);
+                    for a in 0..rl {
+                        for j in 0..n {
+                            for b in 0..rr {
+                                out.set3(j, a, b, c.at3(a, j, b));
+                            }
+                        }
+                    }
+                    out
+                }
+            })
+            .collect()
+    }
+
+    /// Inverse of [`export_cores`]: load updated cores (e.g. post-HLO-step
+    /// values) back into the chain.
+    pub fn import_cores(&mut self, exported: &[Tensor]) {
+        let d = self.chain.order();
+        assert_eq!(exported.len(), d);
+        for k in 0..d {
+            let cur = self.chain.core(k);
+            let (rl, n, rr) = (cur.shape()[0], cur.shape()[1], cur.shape()[2]);
+            let e = &exported[k];
+            if k == 0 {
+                assert_eq!(e.shape(), &[n, rr], "core 0 export shape");
+                *self.chain.core_mut(k) = e.reshape(&[1, n, rr]);
+            } else if k == d - 1 {
+                assert_eq!(e.shape(), &[rl, n], "last core export shape");
+                *self.chain.core_mut(k) = e.reshape(&[rl, n, 1]);
+            } else {
+                assert_eq!(e.shape(), &[n, rl, rr], "core {k} export shape");
+                let mut out = Tensor::zeros(&[rl, n, rr]);
+                for j in 0..n {
+                    for a in 0..rl {
+                        for b in 0..rr {
+                            out.set3(a, j, b, e.at3(j, a, b));
+                        }
+                    }
+                }
+                *self.chain.core_mut(k) = out;
+            }
+        }
+    }
+
+    /// Shapes of the exported cores, in export order (for HLO input specs).
+    pub fn export_shapes(&self) -> Vec<Vec<usize>> {
+        self.export_cores().iter().map(|t| t.shape().to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rel_err;
+    use crate::testutil::prop_check;
+
+    fn dims4() -> MetaTtDims {
+        MetaTtDims { d_in: 16, d_out: 16, layers: 3, matrices: 2, heads: 4, tasks: 3 }
+    }
+
+    #[test]
+    fn default_init_is_zero_map() {
+        let mut rng = Pcg64::new(1);
+        for kind in [MetaTtKind::FourD, MetaTtKind::FiveD, MetaTtKind::FourPlusOneD] {
+            let tt = MetaTt::new_default(kind, dims4(), 4, 2.0, &mut rng);
+            let x = Tensor::randn(&[5, 16], 1.0, &mut rng);
+            let y = tt.apply(&x, 1, 0, 0);
+            assert!(y.max_abs() == 0.0, "{:?} not zero at init", kind);
+            let dw = tt.delta_w(2, 1, 1);
+            assert!(dw.max_abs() == 0.0);
+        }
+    }
+
+    #[test]
+    fn apply_matches_delta_w() {
+        prop_check("apply == x·ΔW·α", 12, |rng, case| {
+            let kind = [MetaTtKind::FourD, MetaTtKind::FiveD, MetaTtKind::FourPlusOneD]
+                [case % 3];
+            let init = InitStrategy {
+                cores: vec![super::super::init::CoreInit::Normal; kind.order()],
+            };
+            let tt = MetaTt::new(kind, dims4(), 3, 0.7, &init, rng);
+            let x = Tensor::randn(&[4, 16], 1.0, rng);
+            let (l, m, t) = (rng.uniform_usize(3), rng.uniform_usize(2), rng.uniform_usize(3));
+            let got = tt.apply(&x, l, m, t);
+            let want = x.matmul(&tt.delta_w(l, m, t)).scale(0.7);
+            let err = rel_err(&got, &want);
+            if err < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("{:?} err {err}", kind))
+            }
+        });
+    }
+
+    #[test]
+    fn param_count_matches_paper_formula_4d() {
+        // MetaTT-4D: 2Dr + (L + M) r^2 with D_in = D_out = D.
+        let mut rng = Pcg64::new(2);
+        let dims = dims4();
+        let r = 4;
+        let tt = MetaTt::new_default(MetaTtKind::FourD, dims, r, 1.0, &mut rng);
+        let want = 2 * dims.d_in * r + (dims.layers + dims.matrices) * r * r;
+        assert_eq!(tt.param_count(), want);
+    }
+
+    #[test]
+    fn param_count_matches_paper_formula_5d() {
+        // MetaTT-5D: (D + D/H) r + (L + M + H) r^2.
+        let mut rng = Pcg64::new(3);
+        let dims = dims4();
+        let r = 4;
+        let tt = MetaTt::new_default(MetaTtKind::FiveD, dims, r, 1.0, &mut rng);
+        let want = (dims.d_in + dims.d_out / dims.heads) * r
+            + (dims.layers + dims.matrices + dims.heads) * r * r;
+        assert_eq!(tt.param_count(), want);
+    }
+
+    #[test]
+    fn task_core_distinguishes_tasks() {
+        let mut rng = Pcg64::new(4);
+        let init = InitStrategy::from_code("no-no-no-no-no").unwrap();
+        let tt = MetaTt::new(MetaTtKind::FourPlusOneD, dims4(), 3, 1.0, &init, &mut rng);
+        let a = tt.delta_w(0, 0, 0);
+        let b = tt.delta_w(0, 0, 2);
+        assert!(rel_err(&a, &b) > 1e-3, "different tasks must give different ΔW");
+    }
+
+    #[test]
+    fn export_import_roundtrip() {
+        let mut rng = Pcg64::new(5);
+        let init = InitStrategy::from_code("no-no-no-no").unwrap();
+        let tt0 = MetaTt::new(MetaTtKind::FourD, dims4(), 3, 1.0, &init, &mut rng);
+        let exported = tt0.export_cores();
+        assert_eq!(exported[0].shape(), &[16, 3]); // (D, r)
+        assert_eq!(exported[1].shape(), &[3, 3, 3]); // (L, r, r)
+        assert_eq!(exported[3].shape(), &[3, 16]); // (r, D)
+        let mut tt1 = MetaTt::new_default(MetaTtKind::FourD, dims4(), 3, 1.0, &mut rng);
+        tt1.import_cores(&exported);
+        for k in 0..4 {
+            assert_eq!(tt0.chain.core(k), tt1.chain.core(k), "core {k}");
+        }
+    }
+
+    #[test]
+    fn folded_serving_form_matches_apply() {
+        let mut rng = Pcg64::new(6);
+        for kind in [MetaTtKind::FourD, MetaTtKind::FiveD, MetaTtKind::FourPlusOneD] {
+            let init = InitStrategy {
+                cores: vec![super::super::init::CoreInit::Normal; kind.order()],
+            };
+            let tt = MetaTt::new(kind, dims4(), 3, 1.3, &init, &mut rng);
+            let folded = tt.fold_for_serving(1);
+            let x = Tensor::randn(&[4, 16], 1.0, &mut rng);
+            for l in 0..3 {
+                for m in 0..2 {
+                    let (a, b) = &folded[l][m];
+                    let got = x.matmul(a).matmul(b);
+                    let want = tt.apply(&x, l, m, 1);
+                    assert!(rel_err(&got, &want) < 1e-4, "{:?} l={l} m={m}", kind);
+                }
+            }
+        }
+    }
+}

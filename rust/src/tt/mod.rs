@@ -1,0 +1,28 @@
+//! Tensor-train (TT) container and the MetaTT adapter algebra.
+//!
+//! A TT decomposes an order-d tensor `G[i1..id]` into a chain of order-3
+//! cores `G_k[r_{k-1}, n_k, r_k]` with boundary ranks `r_0 = r_d = 1`
+//! (paper Eq. 1). MetaTT instantiates this chain over the *structural* axes
+//! of a transformer:
+//!
+//! * **MetaTT-4D** — axes `(D_in, L, M, D_out)` (paper Eq. 2/5)
+//! * **MetaTT-5D** — axes `(D_in, L, M, H, D_out/H)` (paper Eq. 3)
+//! * **MetaTT-(4+1)D** — axes `(D_in, L, T, M, D_out)` (paper Eq. 6, MTL)
+//!
+//! This module owns the host-side TT: construction/init strategies
+//! (Appendix A.1), slicing `ΔW_{l,m}` out of the chain, applying the adapter
+//! to activations (the rust-side oracle for the Pallas kernel), full
+//! materialization for tests, canonical orthogonalization, and the
+//! **DMRG-inspired sweep of Algorithm 1** in [`dmrg`].
+
+mod chain;
+mod dmrg;
+mod init;
+#[cfg(test)]
+mod init_boundary_test;
+mod meta;
+
+pub use chain::TtChain;
+pub use dmrg::{dmrg_sweep, RankSchedule, SweepReport};
+pub use init::{CoreInit, InitStrategy};
+pub use meta::{MetaTt, MetaTtKind};

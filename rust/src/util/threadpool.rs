@@ -1,0 +1,154 @@
+//! A small fixed-size thread pool with scoped parallel-map helpers.
+//!
+//! The coordinator uses this for embarrassingly parallel work: generating
+//! synthetic datasets, running independent seeds of an experiment, and
+//! sweeping benchmark grids. No `tokio` in the offline registry, and the
+//! workloads are CPU-bound anyway, so plain `std::thread` + channels is the
+//! right tool.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs are executed FIFO; `join` blocks until the
+/// queue drains and workers exit.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("metatt-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { sender: Some(tx), workers }
+    }
+
+    /// Default-sized pool: available parallelism capped at 8 (experiment
+    /// trials are memory-hungry; more workers rarely help on this box).
+    pub fn default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.min(8))
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.sender
+            .as_ref()
+            .expect("pool joined")
+            .send(Box::new(job))
+            .expect("worker pool hung up");
+    }
+
+    /// Drain the queue and stop the workers.
+    pub fn join(mut self) {
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map over `items`, preserving order, with at most `threads`
+/// concurrent evaluations. `f` runs on borrowed scope threads, so it may
+/// capture references to the caller's stack.
+pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
+    let out_cells: Vec<Mutex<&mut Option<U>>> =
+        out.iter_mut().map(Mutex::new).collect();
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let val = f(&items[i]);
+                **out_cells[i].lock().unwrap() = Some(val);
+            });
+        }
+    });
+    drop(out_cells);
+    out.into_iter().map(|v| v.expect("par_map slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..57).collect();
+        let out = par_map(&items, 4, |&x| x * x);
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_single_thread_and_empty() {
+        let items: Vec<usize> = vec![];
+        assert!(par_map(&items, 4, |&x| x).is_empty());
+        let one = vec![3usize];
+        assert_eq!(par_map(&one, 1, |&x| x + 1), vec![4]);
+    }
+
+    #[test]
+    fn par_map_borrows_stack() {
+        let base = vec![10usize, 20, 30];
+        let items = vec![0usize, 1, 2];
+        let out = par_map(&items, 2, |&i| base[i] + 1);
+        assert_eq!(out, vec![11, 21, 31]);
+    }
+}

@@ -1,0 +1,299 @@
+//! Minimal TOML-subset parser for experiment configuration files.
+//!
+//! Supports the subset used by `configs/*.toml`: top-level and nested
+//! `[tables]`, `[[array.of.tables]]`, and key/value pairs with strings,
+//! integers, floats, booleans and homogeneous inline arrays. Comments with
+//! `#`. Values parse into the same [`Json`](super::json::Json) tree as the
+//! JSON module so downstream config code has a single value type.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+
+/// Parse a TOML-subset document into a Json object tree.
+pub fn parse(input: &str) -> Result<Json, String> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    // Path of the table currently being filled.
+    let mut current_path: Vec<String> = Vec::new();
+    // Whether current_path addresses the last element of an array-of-tables.
+    let mut current_is_array = false;
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| format!("line {}: {}", lineno + 1, msg);
+
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let path = parse_path(inner).map_err(|e| err(&e))?;
+            push_array_table(&mut root, &path).map_err(|e| err(&e))?;
+            current_path = path;
+            current_is_array = true;
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let path = parse_path(inner).map_err(|e| err(&e))?;
+            ensure_table(&mut root, &path).map_err(|e| err(&e))?;
+            current_path = path;
+            current_is_array = false;
+        } else if let Some(eq) = find_eq(&line) {
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim()).map_err(|e| err(&e))?;
+            let table = resolve_mut(&mut root, &current_path, current_is_array)
+                .map_err(|e| err(&e))?;
+            if table.insert(key.to_string(), val).is_some() {
+                return Err(err(&format!("duplicate key '{key}'")));
+            }
+        } else {
+            return Err(err("expected key = value or [table]"));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Parse a TOML file from disk.
+pub fn parse_file(path: &std::path::Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_path(s: &str) -> Result<Vec<String>, String> {
+    let parts: Vec<String> = s.split('.').map(|p| p.trim().to_string()).collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(format!("bad table path '{s}'"));
+    }
+    Ok(parts)
+}
+
+fn ensure_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            Json::Arr(items) => match items.last_mut() {
+                Some(Json::Obj(m)) => m,
+                _ => return Err(format!("'{part}' is not a table")),
+            },
+            _ => return Err(format!("'{part}' is not a table")),
+        };
+    }
+    Ok(())
+}
+
+fn push_array_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
+    let (last, prefix) = path.split_last().ok_or("empty path")?;
+    ensure_table(root, prefix)?;
+    let mut cur = root;
+    for part in prefix {
+        cur = match cur.get_mut(part) {
+            Some(Json::Obj(m)) => m,
+            Some(Json::Arr(items)) => match items.last_mut() {
+                Some(Json::Obj(m)) => m,
+                _ => return Err(format!("'{part}' is not a table")),
+            },
+            _ => return Err(format!("'{part}' is not a table")),
+        };
+    }
+    match cur.entry(last.clone()).or_insert_with(|| Json::Arr(Vec::new())) {
+        Json::Arr(items) => {
+            items.push(Json::Obj(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(format!("'{last}' is not an array of tables")),
+    }
+}
+
+fn resolve_mut<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    is_array: bool,
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for (i, part) in path.iter().enumerate() {
+        let at_last = i + 1 == path.len();
+        cur = match cur.get_mut(part) {
+            Some(Json::Obj(m)) => m,
+            Some(Json::Arr(items)) if at_last && is_array || !at_last => {
+                match items.last_mut() {
+                    Some(Json::Obj(m)) => m,
+                    _ => return Err(format!("'{part}' is not a table")),
+                }
+            }
+            _ => return Err(format!("unknown table '{part}'")),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape {:?}", other)),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Json::Str(out));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Json::Arr(items));
+    }
+    // numbers, with TOML underscores allowed
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("bad value '{s}'"))
+}
+
+/// Split an inline-array body on commas that are not nested in [] or "".
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_document() {
+        let doc = r#"
+# experiment config
+name = "table1"
+seeds = [42, 2025, 33305628]
+alpha = 0.5
+
+[model]
+layers = 4
+dim = 128
+label = "tiny" # inline comment
+
+[train.sched]
+warmup_ratio = 0.06
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "table1");
+        assert_eq!(v.get("seeds").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("alpha").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(v.get("model").unwrap().get("dim").unwrap().as_i64().unwrap(), 128);
+        assert_eq!(
+            v.get("train").unwrap().get("sched").unwrap().get("warmup_ratio").unwrap().as_f64().unwrap(),
+            0.06
+        );
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = r#"
+[[run]]
+task = "mrpc_syn"
+rank = 8
+
+[[run]]
+task = "rte_syn"
+rank = 16
+"#;
+        let v = parse(doc).unwrap();
+        let runs = v.get("run").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[1].get("rank").unwrap().as_i64().unwrap(), 16);
+    }
+
+    #[test]
+    fn nested_arrays_and_strings() {
+        let doc = r#"grid = [[1, 2], [3, 4]]
+msg = "a#b, [c]""#;
+        let v = parse(doc).unwrap();
+        let grid = v.get("grid").unwrap().as_arr().unwrap();
+        assert_eq!(grid[1].as_arr().unwrap()[0].as_i64().unwrap(), 3);
+        assert_eq!(v.get("msg").unwrap().as_str().unwrap(), "a#b, [c]");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("just words").is_err());
+        assert!(parse("a = ").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("a=1\na=2").is_err());
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let v = parse("n = 100_000").unwrap();
+        assert_eq!(v.get("n").unwrap().as_i64().unwrap(), 100_000);
+    }
+}
