@@ -14,9 +14,8 @@ use metatt::config::ModelPreset;
 use metatt::coordinator::{run_dmrg, run_fixed_rank_baseline, DmrgConfig};
 use metatt::data::TaskId;
 use metatt::metrics::mean_stderr;
-use metatt::runtime::{checkpoint_path, Runtime};
+use metatt::runtime::{backend_from_env, checkpoint_path};
 use metatt::tt::{MetaTtKind, RankSchedule};
-use std::path::Path;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -29,7 +28,7 @@ pub fn dmrg_figure(task: TaskId, stem: &str) -> anyhow::Result<()> {
     let seeds: &[u64] = &[33305628, 2025, 42][..n_seeds];
     let model = ModelPreset::Tiny;
     let kind = AdapterKind::MetaTt(MetaTtKind::FiveD);
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    let backend = backend_from_env()?;
     let ckpt = checkpoint_path(model);
     let ckpt = ckpt.exists().then_some(ckpt);
 
@@ -51,7 +50,7 @@ pub fn dmrg_figure(task: TaskId, stem: &str) -> anyhow::Result<()> {
         for &seed in seeds {
             let mut c = cfg.clone();
             c.train.seed = seed;
-            let logs = run_fixed_rank_baseline(&rt, model, kind, task, rank, &c, ckpt.as_deref())?;
+            let logs = run_fixed_rank_baseline(backend.as_ref(), model, kind, task, rank, &c, ckpt.as_deref())?;
             bests.push(logs.iter().map(|e| e.metric).fold(f64::MIN, f64::max) * 100.0);
             curves.push(logs.iter().map(|e| e.metric).collect());
         }
@@ -71,7 +70,7 @@ pub fn dmrg_figure(task: TaskId, stem: &str) -> anyhow::Result<()> {
     for &seed in seeds {
         let mut c = cfg.clone();
         c.train.seed = seed;
-        let res = run_dmrg(&rt, model, kind, task, &c, ckpt.as_deref())?;
+        let res = run_dmrg(backend.as_ref(), model, kind, task, &c, ckpt.as_deref())?;
         bests.push(res.best_at_final_rank * 100.0);
         ranks_at = res.epochs.iter().map(|e| e.rank).collect();
         curves.push(res.epochs.iter().map(|e| e.metric).collect());

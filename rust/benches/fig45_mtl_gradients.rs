@@ -15,9 +15,8 @@ use metatt::bench::Table;
 use metatt::config::ModelPreset;
 use metatt::coordinator::{run_mtl, MtlConfig};
 use metatt::data::TaskId;
-use metatt::runtime::{checkpoint_path, Runtime};
+use metatt::runtime::{backend_from_env, checkpoint_path};
 use metatt::tt::MetaTtKind;
-use std::path::Path;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -25,7 +24,7 @@ fn env_usize(name: &str, default: usize) -> usize {
 
 fn run_figure(tasks: &[TaskId], stem: &str, epochs: usize, cap: usize) -> anyhow::Result<()> {
     let model = ModelPreset::Tiny;
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    let backend = backend_from_env()?;
     let ckpt = checkpoint_path(model);
     let ckpt = ckpt.exists().then_some(ckpt);
     let dims = model.dims(tasks.len());
@@ -35,7 +34,7 @@ fn run_figure(tasks: &[TaskId], stem: &str, epochs: usize, cap: usize) -> anyhow
     cfg.train.lr = 5e-4; // Appendix B
     cfg.per_task_cap = cap;
     cfg.eval_cap = 300;
-    let res = run_mtl(&rt, model, &spec, tasks, &cfg, ckpt.as_deref())?;
+    let res = run_mtl(backend.as_ref(), model, &spec, tasks, &cfg, ckpt.as_deref())?;
 
     let mut header = vec!["epoch".to_string()];
     header.extend(res.param_names.iter().map(|n| format!("grad_{n}")));

@@ -1,44 +1,41 @@
 //! Hot-path micro-benchmarks (§2.4 timing claims + DESIGN.md §7 ablations).
 //!
-//! Measures:
-//!   1. **Adapter apply** (Pallas artifacts): fused MetaTT-4D chain vs
-//!      fused LoRA at the same rank — paper §2.4: "training times of TT
-//!      adapters are very competitive with LoRA" because the extra work is
-//!      r×r GEMMs, negligible next to the D×r boundaries.
+//! Backend-agnostic: runs on the pure-rust reference backend by default, or
+//! on PJRT with `METATT_BACKEND=pjrt` (after `make artifacts`). Measures:
+//!
+//!   1. **Adapter apply** (serving path): fused MetaTT-4D chain vs fused
+//!      LoRA at the same rank — paper §2.4: "training times of TT adapters
+//!      are very competitive with LoRA" because the extra work is r×r
+//!      GEMMs, negligible next to the D×r boundaries.
 //!   2. **Train/eval step latency** per adapter (the L3 hot loop).
 //!   3. **DMRG sweep** host cost at the paper's ranks — §C: "a small
 //!      overhead … a much smaller fraction of SVDs than per-matrix schemes".
-//!   4. **Ablation** (DESIGN.md §7.2): frozen weights resident as device
-//!      buffers vs re-uploaded per step.
-//!   5. **Executable hot-swap** cost: compile time per rank artifact vs
-//!      cached fetch.
+//!   4. **Ablation** (DESIGN.md §7.2): one-time step bind (frozen weights
+//!      resident) vs re-binding per step.
+//!   5. **Step hot-swap** cost across the DMRG rank ladder: first bind
+//!      (compile on pjrt, layout synthesis on ref) vs re-bind.
 
 use metatt::adapters::{AdapterKind, AdapterSpec};
 use metatt::bench::{bench, Stats};
 use metatt::config::ModelPreset;
 use metatt::data::TaskId;
-use metatt::runtime::{assemble_frozen, ArtifactSpec, Runtime, StepKind, StepRunner};
+use metatt::runtime::{assemble_frozen, backend_from_env, ArtifactSpec, Backend, Step, StepKind};
 use metatt::tensor::Tensor;
 use metatt::tt::{dmrg_sweep, InitStrategy, MetaTt, MetaTtKind};
 use metatt::util::rng::Pcg64;
-use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    let backend = backend_from_env()?;
+    println!("[backend] {}", backend.platform());
     let mut rng = Pcg64::new(42);
 
-    // ---- 1. Pallas apply artifacts: MetaTT vs LoRA at rank 8. -----------
-    println!("== 1. serving apply (Pallas, base_sim dims: d=256, n=4096) ==");
+    // ---- 1. Serving apply: MetaTT vs LoRA at rank 8. ---------------------
+    println!("== 1. serving apply (base_sim dims: d=256) ==");
     let mut apply_stats: Vec<(String, Stats)> = Vec::new();
     for adapter in ["metatt4d", "lora"] {
-        let spec = rt
-            .manifest
-            .specs()
-            .find(|s| s.step == StepKind::Apply && s.adapter == adapter)
-            .cloned()
-            .expect("apply artifact");
-        let entry = rt.manifest.require(&spec).map_err(anyhow::Error::msg)?.clone();
-        let runner = StepRunner::bind(&rt, &spec, &Default::default())?;
+        let spec = backend.apply_spec(adapter, 8)?;
+        let entry = backend.entry(&spec)?;
+        let runner = backend.bind(&spec, &Default::default())?;
         let inputs: Vec<Tensor> = entry
             .inputs
             .iter()
@@ -57,13 +54,14 @@ fn main() -> anyhow::Result<()> {
         ratio
     );
 
-    // ---- 2. Train/eval step latency per adapter. -------------------------
+    // ---- 2. Train-step latency per adapter. ------------------------------
     println!("== 2. train-step latency (tiny, batch 16) ==");
     let model = ModelPreset::Tiny;
     let dims = model.dims(1);
     let ds = TaskId::MrpcSyn.generate_at(64, 32, 1, dims.max_seq, dims.vocab);
     let batcher = metatt::data::Batcher::new(16);
-    let batch = &batcher.eval(&ds)[0];
+    let eval_batches = batcher.eval(&ds);
+    let batch = &eval_batches[0];
     for (adapter, rank) in [
         (AdapterKind::MetaTt(MetaTtKind::FourD), 8),
         (AdapterKind::MetaTt(MetaTtKind::FiveD), 8),
@@ -82,9 +80,9 @@ fn main() -> anyhow::Result<()> {
             batch: 16,
             seq: dims.max_seq,
         };
-        let entry = rt.manifest.require(&aspec).map_err(anyhow::Error::msg)?;
-        let frozen = assemble_frozen(entry, None, model)?;
-        let runner = StepRunner::bind(&rt, &aspec, &frozen)?;
+        let entry = backend.entry(&aspec)?;
+        let frozen = std::sync::Arc::new(assemble_frozen(&entry, None, model)?);
+        let runner = backend.bind(&aspec, &frozen)?;
         let params = spec.init_params(&mut rng);
         bench(&format!("train-step/{}/r{rank}", spec.kind.name()), 3, 25, || {
             let out = runner.run_train(&params, batch, 0, 4.0).unwrap();
@@ -117,8 +115,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!();
 
-    // ---- 4. Ablation: resident frozen buffers vs per-step upload. --------
-    println!("== 4. ablation: frozen-resident vs re-upload per step ==");
+    // ---- 4. Ablation: bind once (frozen resident) vs re-bind per step. ---
+    println!("== 4. ablation: bind-once vs re-bind per step ==");
     let aspec = ArtifactSpec {
         step: StepKind::Eval,
         model: "tiny".into(),
@@ -129,27 +127,27 @@ fn main() -> anyhow::Result<()> {
         batch: 16,
         seq: dims.max_seq,
     };
-    let entry = rt.manifest.require(&aspec).map_err(anyhow::Error::msg)?.clone();
-    let frozen = assemble_frozen(&entry, None, model)?;
+    let entry = backend.entry(&aspec)?;
+    let frozen = std::sync::Arc::new(assemble_frozen(&entry, None, model)?);
     let spec8 = AdapterSpec::new(AdapterKind::MetaTt(MetaTtKind::FourD), 8, 4.0, dims);
     let params = spec8.init_params(&mut rng);
-    let runner = StepRunner::bind(&rt, &aspec, &frozen)?;
-    let resident = bench("eval-step/frozen-resident", 3, 30, || {
+    let runner = backend.bind(&aspec, &frozen)?;
+    let resident = bench("eval-step/bind-once", 3, 30, || {
         let out = runner.run_eval(&params, batch, 0, 4.0).unwrap();
         std::hint::black_box(out);
     });
-    let reupload = bench("eval-step/frozen-reupload", 3, 30, || {
-        let r = StepRunner::bind(&rt, &aspec, &frozen).unwrap();
+    let reupload = bench("eval-step/re-bind", 3, 30, || {
+        let r = backend.bind(&aspec, &frozen).unwrap();
         let out = r.run_eval(&params, batch, 0, 4.0).unwrap();
         std::hint::black_box(out);
     });
     println!(
-        "   resident buffers are {:.1}x faster per step\n",
+        "   bind-once is {:.1}x faster per step\n",
         reupload.p50 / resident.p50
     );
 
-    // ---- 5. Executable compile vs cache fetch (the DMRG hot-swap cost). --
-    println!("== 5. executable hot-swap ==");
+    // ---- 5. Step hot-swap across the DMRG rank ladder. -------------------
+    println!("== 5. step hot-swap (DMRG rank ladder) ==");
     let rank_spec = |r: usize| ArtifactSpec {
         step: StepKind::Train,
         model: "tiny".into(),
@@ -160,19 +158,24 @@ fn main() -> anyhow::Result<()> {
         batch: 16,
         seq: dims.max_seq,
     };
+    let ladder_frozen = {
+        let e = backend.entry(&rank_spec(4))?;
+        std::sync::Arc::new(assemble_frozen(&e, None, model)?)
+    };
     let t0 = std::time::Instant::now();
     for r in [4, 5, 6, 7, 8, 9, 10] {
-        rt.executable(&rank_spec(r))?;
+        let step = backend.bind(&rank_spec(r), &ladder_frozen)?;
+        std::hint::black_box(step.entry().spec.rank);
     }
-    let compile_all = t0.elapsed().as_secs_f64();
-    let cached = bench("executable/cached-fetch", 2, 50, || {
-        let e = rt.executable(&rank_spec(6)).unwrap();
-        std::hint::black_box(e);
+    let bind_all = t0.elapsed().as_secs_f64();
+    let cached = bench("step/re-bind-rank6", 2, 50, || {
+        let e = backend.bind(&rank_spec(6), &ladder_frozen).unwrap();
+        std::hint::black_box(e.entry().spec.rank);
     });
     println!(
-        "   7-rank DMRG ladder compiles in {:.2}s total (amortized once per run); \
-         cached fetch {}",
-        compile_all,
+        "   7-rank DMRG ladder binds in {:.3}s total (amortized once per run); \
+         re-bind {}",
+        bind_all,
         Stats::fmt_time(cached.p50)
     );
     Ok(())

@@ -17,10 +17,9 @@ use metatt::config::{ModelPreset, TrainConfig};
 use metatt::coordinator::{results, run_single_task};
 use metatt::data::TaskId;
 use metatt::metrics::mean_stderr;
-use metatt::runtime::{checkpoint_path, Runtime};
+use metatt::runtime::{backend_from_env, checkpoint_path};
 use metatt::tt::MetaTtKind;
 use metatt::util::json::Json;
-use std::path::Path;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -61,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     ];
 
     let model = ModelPreset::Tiny;
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    let backend = backend_from_env()?;
     let ckpt = checkpoint_path(model);
     let ckpt = ckpt.exists().then_some(ckpt);
     if ckpt.is_none() {
@@ -102,7 +101,7 @@ fn main() -> anyhow::Result<()> {
                     ..Default::default()
                 };
                 let res = run_single_task(
-                    &rt, model, &spec, *task, &train, *alpha, ckpt.as_deref(), None,
+                    backend.as_ref(), model, &spec, *task, &train, *alpha, ckpt.as_deref(), None,
                 )?;
                 vals.push(res.best_metric * 100.0);
                 results::append_record(

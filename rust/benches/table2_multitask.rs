@@ -16,10 +16,9 @@ use metatt::config::ModelPreset;
 use metatt::coordinator::{results, run_mtl, MtlConfig};
 use metatt::data::TaskId;
 use metatt::metrics::mean_stderr;
-use metatt::runtime::{checkpoint_path, Runtime};
+use metatt::runtime::{backend_from_env, checkpoint_path};
 use metatt::tt::MetaTtKind;
 use metatt::util::json::Json;
-use std::path::Path;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -34,7 +33,7 @@ fn main() -> anyhow::Result<()> {
 
     let model = ModelPreset::Tiny;
     let tasks = [TaskId::ColaSyn, TaskId::MrpcSyn, TaskId::RteSyn];
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    let backend = backend_from_env()?;
     let ckpt = checkpoint_path(model);
     let ckpt = ckpt.exists().then_some(ckpt);
     let dims = model.dims(tasks.len());
@@ -59,7 +58,7 @@ fn main() -> anyhow::Result<()> {
             cfg.train.seed = seed;
             cfg.per_task_cap = cap;
             cfg.eval_cap = 400;
-            let res = run_mtl(&rt, model, &spec, &tasks, &cfg, ckpt.as_deref())?;
+            let res = run_mtl(backend.as_ref(), model, &spec, &tasks, &cfg, ckpt.as_deref())?;
             for (i, m) in res.best_per_task.iter().enumerate() {
                 per_task[i].push(m * 100.0);
             }

@@ -4,8 +4,10 @@
 //! comparing against fixed-rank-4 AdamW. Shows the paper's signature
 //! pattern: an accuracy dip right after each truncation, rapid recovery,
 //! and a better final-rank model than training at rank 4 from scratch.
-//! Also demonstrates the coordinator's executable hot-swap: each rank on
-//! the ladder is a different HLO artifact, compiled once and cached.
+//! Also demonstrates the coordinator's step hot-swap: each rank on the
+//! ladder is a different spec, bound once and cached (a compiled HLO
+//! executable on the pjrt backend; a synthesized layout on the default
+//! pure-rust reference backend).
 //!
 //!     cargo run --release --example dmrg_rank_adaptive
 
@@ -13,15 +15,14 @@ use metatt::adapters::AdapterKind;
 use metatt::config::ModelPreset;
 use metatt::coordinator::{run_dmrg, run_fixed_rank_baseline, DmrgConfig};
 use metatt::data::TaskId;
-use metatt::runtime::{checkpoint_path, Runtime};
+use metatt::runtime::{backend_from_env, checkpoint_path};
 use metatt::tt::{MetaTtKind, RankSchedule};
-use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     let model = ModelPreset::Tiny;
     let task = TaskId::MrpcSyn;
     let kind = AdapterKind::MetaTt(MetaTtKind::FiveD);
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    let backend = backend_from_env()?;
     let ckpt = checkpoint_path(model);
     let ckpt = ckpt.exists().then_some(ckpt);
 
@@ -33,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     cfg.schedule = RankSchedule::parse("1:9,3:8,5:7,6:6,7:5,8:4").map_err(anyhow::Error::msg)?;
 
     println!("AdamW + DMRG sweeps (start rank 10 → 4):");
-    let res = run_dmrg(&rt, model, kind, task, &cfg, ckpt.as_deref())?;
+    let res = run_dmrg(backend.as_ref(), model, kind, task, &cfg, ckpt.as_deref())?;
     for e in &res.epochs {
         let marker = if e.swept { " ← sweep" } else { "" };
         println!(
@@ -42,12 +43,13 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!(
-        "  {} rank-specific executables compiled and hot-swapped\n",
+        "  {} rank-specific steps bound and hot-swapped\n",
         res.executables_compiled
     );
 
     println!("fixed-rank-4 AdamW baseline:");
-    let base = run_fixed_rank_baseline(&rt, model, kind, task, 4, &cfg, ckpt.as_deref())?;
+    let base =
+        run_fixed_rank_baseline(backend.as_ref(), model, kind, task, 4, &cfg, ckpt.as_deref())?;
     let best_base = base.iter().map(|e| e.metric).fold(f64::NEG_INFINITY, f64::max);
     for e in base.iter().step_by(3) {
         println!("  epoch {:>2}  acc {:.3}", e.epoch, e.metric);

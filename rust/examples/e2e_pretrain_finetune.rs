@@ -5,12 +5,12 @@
 //!      the CPU-feasible RoBERTa stand-in, DESIGN.md §3) with the MLM
 //!      artifact for a few hundred steps, logging the loss curve.
 //!   2. **Freeze** it and fine-tune a single global MetaTT-4D adapter on a
-//!      synthetic GLUE task through the AOT train-step artifact.
+//!      synthetic GLUE task through the backend's train step.
 //!   3. **Serve**: fold the trained TT into per-(l,m) factors (paper §2.4)
-//!      and run the Pallas apply artifact on the folded factors.
+//!      and run the fused apply step on the folded factors.
 //!
-//! Run with the base artifacts present (`make artifacts` builds them via
-//! `--with-base`):
+//! Hermetic by default (pure-rust reference backend); set
+//! METATT_BACKEND=pjrt after `make artifacts --with-base` for the AOT path:
 //!
 //!     cargo run --release --example e2e_pretrain_finetune
 //!
@@ -20,11 +20,10 @@ use metatt::adapters::{AdapterKind, AdapterSpec};
 use metatt::config::{ModelPreset, TrainConfig};
 use metatt::coordinator::{pretrain, run_single_task, PretrainConfig};
 use metatt::data::TaskId;
-use metatt::runtime::{checkpoint_path, Runtime, StepKind, StepRunner};
+use metatt::runtime::{backend_from_env, checkpoint_path, Backend, Step};
 use metatt::tensor::Tensor;
 use metatt::tt::MetaTtKind;
 use metatt::util::rng::Pcg64;
-use std::path::Path;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -37,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    let backend = backend_from_env()?;
     let dims = model.dims(1);
     let total_params = dims.encoder_param_count();
     println!(
@@ -56,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         println!("[1/3] MLM pretraining for {steps} steps…");
         let t0 = Instant::now();
         let res = pretrain(
-            &rt,
+            backend.as_ref(),
             model,
             &PretrainConfig { steps, ..Default::default() },
         )?;
@@ -83,7 +82,7 @@ fn main() -> anyhow::Result<()> {
     };
     let t0 = Instant::now();
     let res = run_single_task(
-        &rt,
+        backend.as_ref(),
         model,
         &spec,
         TaskId::MrpcSyn,
@@ -112,19 +111,15 @@ fn main() -> anyhow::Result<()> {
     let mut tt = spec.build_metatt(&mut Pcg64::new(0));
     tt.import_cores(&res.params);
     let folded = tt.fold_for_serving(0);
-    let apply_spec = rt
-        .manifest
-        .specs()
-        .find(|s| s.step == StepKind::Apply && s.adapter == "metatt4d")
-        .cloned();
+    let apply_spec = backend.apply_spec("metatt4d", 8).ok();
     match apply_spec {
         Some(aspec) if dims.hidden == 256 => {
-            let entry = rt.manifest.require(&aspec).map_err(anyhow::Error::msg)?.clone();
-            let runner = StepRunner::bind(&rt, &aspec, &Default::default())?;
+            let entry = backend.entry(&aspec)?;
+            let runner = backend.bind(&aspec, &Default::default())?;
             let n = entry.inputs[0].shape[0];
             let mut rng = Pcg64::new(7);
             let x = Tensor::randn(&[n, dims.hidden], 1.0, &mut rng);
-            // apply artifact signature: (x, g1, mid, g4); alpha baked = 1.
+            // apply step signature: (x, g1, mid, g4); alpha baked = 1.
             let (a, b) = &folded[0][0];
             let g1 = a.clone(); // alpha already folded into a
             let mid = Tensor::eye(a.cols());
@@ -136,7 +131,7 @@ fn main() -> anyhow::Result<()> {
             }
             let dt = t0.elapsed().as_secs_f64();
             println!(
-                "      Pallas apply: {:.2} ms / call ({} tokens, {:.1}k tok/s) — \
+                "      fused apply: {:.2} ms / call ({} tokens, {:.1}k tok/s) — \
                  two GEMMs per layer at serve time, same as LoRA",
                 dt / reps as f64 * 1e3,
                 n,

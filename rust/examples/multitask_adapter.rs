@@ -14,14 +14,13 @@ use metatt::adapters::{AdapterKind, AdapterSpec};
 use metatt::config::ModelPreset;
 use metatt::coordinator::{run_mtl, MtlConfig};
 use metatt::data::TaskId;
-use metatt::runtime::{checkpoint_path, Runtime};
+use metatt::runtime::{backend_from_env, checkpoint_path};
 use metatt::tt::MetaTtKind;
-use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     let model = ModelPreset::Tiny;
     let tasks = [TaskId::ColaSyn, TaskId::MrpcSyn, TaskId::RteSyn];
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    let backend = backend_from_env()?;
     let ckpt = checkpoint_path(model);
     let ckpt = ckpt.exists().then_some(ckpt);
     let mut cfg = MtlConfig::default();
@@ -44,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         AdapterKind::LoRa,
     ] {
         let spec = AdapterSpec::new(kind, 8, cfg.alpha, dims);
-        let res = run_mtl(&rt, model, &spec, &tasks, &cfg, ckpt.as_deref())?;
+        let res = run_mtl(backend.as_ref(), model, &spec, &tasks, &cfg, ckpt.as_deref())?;
         println!(
             "{:<14} {:>8} {:>10.3} {:>24}",
             spec.kind.name(),

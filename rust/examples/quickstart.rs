@@ -1,25 +1,26 @@
 //! Quickstart: fine-tune one global MetaTT-4D adapter on a synthetic GLUE
 //! task and compare its parameter count against LoRA at the same rank.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! Uses the tiny preset so it finishes in under a minute on CPU. If a
-//! pretrained checkpoint exists (`metatt pretrain --model tiny`) it is used
+//! Hermetic by default: runs on the pure-rust reference backend (set
+//! METATT_BACKEND=pjrt after `make artifacts` for the PJRT path). Uses the
+//! tiny preset so it finishes in under a minute on CPU. If a pretrained
+//! checkpoint exists (`metatt pretrain --model tiny`) it is used
 //! automatically; otherwise the frozen backbone is a fresh random encoder.
 
 use metatt::adapters::{AdapterKind, AdapterSpec};
 use metatt::config::{ModelPreset, TrainConfig};
 use metatt::coordinator::run_single_task;
 use metatt::data::TaskId;
-use metatt::runtime::{checkpoint_path, Runtime};
+use metatt::runtime::{backend_from_env, checkpoint_path, Backend};
 use metatt::tt::MetaTtKind;
-use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     let model = ModelPreset::Tiny;
     let task = TaskId::MrpcSyn;
-    let rt = Runtime::new(Path::new("artifacts"))?;
-    println!("PJRT platform: {}", rt.platform());
+    let backend = backend_from_env()?;
+    println!("backend: {}", backend.platform());
 
     let dims = model.dims(1);
     let metatt = AdapterSpec::new(AdapterKind::MetaTt(MetaTtKind::FourD), 8, 4.0, dims);
@@ -43,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         println!("(no pretrained checkpoint — using a random frozen backbone)");
     }
     let res = run_single_task(
-        &rt,
+        backend.as_ref(),
         model,
         &metatt,
         task,

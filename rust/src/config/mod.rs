@@ -6,6 +6,7 @@
 //! experiments use true RoBERTa dimensions via `adapters::ModelDims`.
 
 use crate::adapters::{AdapterKind, AdapterSpec, ModelDims};
+use crate::runtime::BackendKind;
 use crate::util::json::Json;
 use crate::util::toml;
 use std::path::Path;
@@ -121,6 +122,11 @@ pub struct ExperimentConfig {
     pub alpha: f32,
     pub tasks: Vec<String>,
     pub train: TrainConfig,
+    /// Execution backend for config-file-driven runs (`backend = "ref"` in
+    /// TOML; the `--backend` CLI flag overrides it). Programmatic callers
+    /// pass a constructed backend directly, so the field is informational
+    /// for them.
+    pub backend: BackendKind,
 }
 
 impl ExperimentConfig {
@@ -141,6 +147,7 @@ impl ExperimentConfig {
         };
         let model = ModelPreset::from_name(&str_field("model", "tiny"))?;
         let adapter = AdapterKind::from_name(&str_field("adapter", "metatt4d"))?;
+        let backend = BackendKind::from_name(&str_field("backend", "ref"))?;
         let rank = doc.get("rank").and_then(|v| v.as_usize()).unwrap_or(8);
         let alpha = doc.get("alpha").and_then(|v| v.as_f64()).unwrap_or(4.0) as f32;
         let tasks = match doc.get("tasks").and_then(|v| v.as_arr()) {
@@ -181,7 +188,7 @@ impl ExperimentConfig {
                 train.eval_cap = v;
             }
         }
-        Ok(ExperimentConfig { model, adapter, rank, alpha, tasks, train })
+        Ok(ExperimentConfig { model, adapter, rank, alpha, tasks, train, backend })
     }
 }
 
@@ -236,5 +243,15 @@ seed = 2025
         assert_eq!(cfg.rank, 8);
         assert_eq!(cfg.train.epochs, 20);
         assert_eq!(cfg.tasks, vec!["mrpc_syn"]);
+        assert_eq!(cfg.backend, BackendKind::Ref);
+    }
+
+    #[test]
+    fn backend_field_parses_and_rejects_unknown() {
+        let doc = toml::parse("backend = \"pjrt\"").unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+        let bad = toml::parse("backend = \"tpu\"").unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
     }
 }

@@ -18,7 +18,7 @@ use crate::config::{ModelPreset, TrainConfig};
 use crate::coordinator::trainer::{eval_metric, flatten_all, unflatten_all};
 use crate::data::{Batcher, TaskId};
 use crate::optim::{clip_global_norm, AdamW, LrSchedule};
-use crate::runtime::{assemble_frozen, ArtifactSpec, Runtime, StepKind, StepRunner};
+use crate::runtime::{assemble_frozen, ArtifactSpec, Backend, Step, StepKind};
 use crate::tt::{dmrg_sweep, MetaTt, RankSchedule};
 use crate::util::rng::Pcg64;
 use anyhow::{Context, Result};
@@ -103,7 +103,7 @@ fn make_spec(
 /// Run AdamW interleaved with DMRG sweeps on a binary task (MRPC/RTE
 /// analogues in the paper).
 pub fn run_dmrg(
-    rt: &Runtime,
+    backend: &dyn Backend,
     model: ModelPreset,
     kind: AdapterKind,
     task: TaskId,
@@ -127,37 +127,29 @@ pub fn run_dmrg(
     let mut tt = spec0.build_metatt(&mut rng);
     let mut params = tt.export_cores();
 
-    // Verify the whole rank ladder has artifacts before starting.
+    // Verify the whole rank ladder is executable before starting (on the
+    // PJRT backend this checks the manifest; the ref backend synthesizes
+    // every rank's layout, so the ladder is always available).
     let ladder = cfg.schedule.ranks_visited(cfg.start_rank);
     for &r in &ladder {
-        rt.manifest
-            .require(&make_spec(StepKind::Train, model, kind, r, cfg.train.batch_size))
-            .map_err(anyhow::Error::msg)
+        backend
+            .entry(&make_spec(StepKind::Train, model, kind, r, cfg.train.batch_size))
             .with_context(|| format!("rank-{r} artifact missing for the DMRG ladder"))?;
     }
 
     // Frozen inputs are rank-independent; assemble once, re-bind per rank.
-    let entry0 = rt
-        .manifest
-        .require(&make_spec(StepKind::Train, model, kind, cfg.start_rank, cfg.train.batch_size))
-        .map_err(anyhow::Error::msg)?;
-    let frozen = assemble_frozen(entry0, checkpoint, model)?;
+    let entry0 = backend.entry(&make_spec(
+        StepKind::Train,
+        model,
+        kind,
+        cfg.start_rank,
+        cfg.train.batch_size,
+    ))?;
+    let frozen = std::sync::Arc::new(assemble_frozen(&entry0, checkpoint, model)?);
 
-    let compiled_before = rt.cached_executables();
-    let bind = |rank: usize| -> Result<(StepRunner, StepRunner)> {
-        let tr = StepRunner::bind(
-            rt,
-            &make_spec(StepKind::Train, model, kind, rank, cfg.train.batch_size),
-            &frozen,
-        )?;
-        let ev = StepRunner::bind(
-            rt,
-            &make_spec(StepKind::Eval, model, kind, rank, cfg.train.batch_size),
-            &frozen,
-        )?;
-        Ok((tr, ev))
-    };
-    let (mut train_runner, mut eval_runner) = bind(cfg.start_rank)?;
+    let compiled_before = backend.cached_executables();
+    let (mut train_runner, mut eval_runner) =
+        bind_pair(backend, &frozen, model, kind, cfg.start_rank, cfg.train.batch_size)?;
 
     let ds = task.generate_at(
         cfg.train.train_cap.min(info.train_size),
@@ -207,7 +199,8 @@ pub fn run_dmrg(
                 // Moments are shape-bound: reset (paper §3.3).
                 opt.reset_moments(flat.len());
                 // Hot-swap executables for the new rank.
-                let (t, e) = bind(target)?;
+                let (t, e) =
+                    bind_pair(backend, &frozen, model, kind, target, cfg.train.batch_size)?;
                 train_runner = t;
                 eval_runner = e;
                 swept = true;
@@ -215,7 +208,7 @@ pub fn run_dmrg(
         }
 
         let metric = eval_metric(
-            &eval_runner,
+            eval_runner.as_ref(),
             &params,
             &ds,
             &batcher,
@@ -244,8 +237,23 @@ pub fn run_dmrg(
         epochs,
         best_at_final_rank: best_at_final,
         final_rank,
-        executables_compiled: rt.cached_executables() - compiled_before,
+        executables_compiled: backend.cached_executables() - compiled_before,
     })
+}
+
+/// Bind the train + eval steps for one rank of the ladder (the executable
+/// hot-swap unit).
+fn bind_pair<'a>(
+    backend: &'a dyn Backend,
+    frozen: &std::sync::Arc<std::collections::HashMap<String, crate::tensor::Tensor>>,
+    model: ModelPreset,
+    kind: AdapterKind,
+    rank: usize,
+    batch: usize,
+) -> Result<(Box<dyn Step + 'a>, Box<dyn Step + 'a>)> {
+    let tr = backend.bind(&make_spec(StepKind::Train, model, kind, rank, batch), frozen)?;
+    let ev = backend.bind(&make_spec(StepKind::Eval, model, kind, rank, batch), frozen)?;
+    Ok((tr, ev))
 }
 
 /// Zero-pad every interior bond of the chain up to `rank` so the exported
@@ -278,7 +286,7 @@ fn pad_chain_to_rank(tt: &mut MetaTt, rank: usize) {
 
 /// Fixed-rank AdamW baseline at rank `r` (the paper's comparison curves).
 pub fn run_fixed_rank_baseline(
-    rt: &Runtime,
+    backend: &dyn Backend,
     model: ModelPreset,
     kind: AdapterKind,
     task: TaskId,
@@ -289,7 +297,7 @@ pub fn run_fixed_rank_baseline(
     let mut fixed = cfg.clone();
     fixed.start_rank = rank;
     fixed.schedule = RankSchedule { steps: vec![(usize::MAX - 1, rank)] };
-    let res = run_dmrg(rt, model, kind, task, &fixed, checkpoint)?;
+    let res = run_dmrg(backend, model, kind, task, &fixed, checkpoint)?;
     Ok(res.epochs)
 }
 

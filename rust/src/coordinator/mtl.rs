@@ -14,7 +14,7 @@ use crate::config::{ModelPreset, TrainConfig};
 use crate::coordinator::trainer::{eval_metric, flatten_all, unflatten_all};
 use crate::data::{downsample, Batcher, Dataset, TaskId};
 use crate::optim::{clip_global_norm, AdamW, LrSchedule};
-use crate::runtime::{assemble_frozen, ArtifactSpec, Runtime, StepKind, StepRunner};
+use crate::runtime::{assemble_frozen, ArtifactSpec, Backend, Step, StepKind};
 use crate::util::rng::Pcg64;
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -70,7 +70,7 @@ impl Default for MtlConfig {
 
 /// Run joint multi-task training of `spec` over `tasks`.
 pub fn run_mtl(
-    rt: &Runtime,
+    backend: &dyn Backend,
     model: ModelPreset,
     spec: &AdapterSpec,
     tasks: &[TaskId],
@@ -101,10 +101,10 @@ pub fn run_mtl(
     };
     let mut eval_spec = train_spec.clone();
     eval_spec.step = StepKind::Eval;
-    let entry = rt.manifest.require(&train_spec).map_err(anyhow::Error::msg)?;
-    let frozen = assemble_frozen(entry, checkpoint, model)?;
-    let train_runner = StepRunner::bind(rt, &train_spec, &frozen)?;
-    let eval_runner = StepRunner::bind(rt, &eval_spec, &frozen)?;
+    let entry = backend.entry(&train_spec)?;
+    let frozen = std::sync::Arc::new(assemble_frozen(&entry, checkpoint, model)?);
+    let train_runner = backend.bind(&train_spec, &frozen)?;
+    let eval_runner = backend.bind(&eval_spec, &frozen)?;
 
     // Data: generate + downsample per the paper's protocol.
     let mut data_rng = Pcg64::with_stream(cfg.train.seed, 0xd011 + tasks.len() as u64);
@@ -171,7 +171,7 @@ pub fn run_mtl(
         let mut metrics = Vec::with_capacity(tasks.len());
         for (ti, ds) in datasets.iter().enumerate() {
             let m = eval_metric(
-                &eval_runner,
+                eval_runner.as_ref(),
                 &params,
                 ds,
                 &batcher,

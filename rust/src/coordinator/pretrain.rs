@@ -10,9 +10,9 @@ use crate::coordinator::checkpoint;
 use crate::coordinator::trainer::{flatten_all, unflatten_all};
 use crate::data::MlmCorpus;
 use crate::optim::{clip_global_norm, AdamW, LrSchedule};
-use crate::runtime::{checkpoint_path, init_encoder_weights, ArtifactSpec, Runtime, StepKind, StepRunner};
+use crate::runtime::{checkpoint_path, init_encoder_weights, Backend, Step};
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 use std::collections::HashMap;
 
 /// Pretraining configuration.
@@ -40,9 +40,13 @@ pub struct PretrainResult {
 }
 
 /// Run MLM pretraining for `preset`; saves `checkpoints/pretrained_<p>.bin`.
-pub fn pretrain(rt: &Runtime, preset: ModelPreset, cfg: &PretrainConfig) -> Result<PretrainResult> {
-    let spec = find_pretrain_spec(rt, preset)?;
-    let entry = rt.manifest.require(&spec).map_err(anyhow::Error::msg)?.clone();
+pub fn pretrain(
+    backend: &dyn Backend,
+    preset: ModelPreset,
+    cfg: &PretrainConfig,
+) -> Result<PretrainResult> {
+    let spec = backend.pretrain_spec(preset)?;
+    let entry = backend.entry(&spec)?;
     // Trainable = the whole encoder; initialize in-rust.
     let shapes: Vec<(String, Vec<usize>)> = entry
         .trainable_inputs()
@@ -53,7 +57,7 @@ pub fn pretrain(rt: &Runtime, preset: ModelPreset, cfg: &PretrainConfig) -> Resu
     let mut params: Vec<Tensor> = named.iter().map(|(_, t)| t.clone()).collect();
     let names: Vec<String> = named.into_iter().map(|(n, _)| n).collect();
 
-    let runner = StepRunner::bind(rt, &spec, &HashMap::new())?;
+    let runner = backend.bind(&spec, &std::sync::Arc::new(HashMap::new()))?;
     let dims = preset.dims(1);
     let mut corpus = MlmCorpus::new(dims.vocab, spec.seq, cfg.seed);
     let sched = LrSchedule::new(cfg.lr, cfg.steps, cfg.warmup as f32 / cfg.steps.max(1) as f32);
@@ -80,18 +84,4 @@ pub fn pretrain(rt: &Runtime, preset: ModelPreset, cfg: &PretrainConfig) -> Resu
     checkpoint::save(&path, &tensors).map_err(anyhow::Error::msg)?;
     println!("[pretrain {}] saved {}", preset.name(), path.display());
     Ok(PretrainResult { losses, final_loss, checkpoint: path })
-}
-
-/// The manifest's pretrain artifact for a preset (batch/seq fixed by aot.py).
-pub fn find_pretrain_spec(rt: &Runtime, preset: ModelPreset) -> Result<ArtifactSpec> {
-    rt.manifest
-        .specs()
-        .find(|s| s.step == StepKind::Pretrain && s.model == preset.name())
-        .cloned()
-        .ok_or_else(|| {
-            anyhow!(
-                "no pretrain artifact for '{}' in manifest — run `make artifacts`",
-                preset.name()
-            )
-        })
 }

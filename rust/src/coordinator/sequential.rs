@@ -16,7 +16,7 @@ use crate::adapters::AdapterSpec;
 use crate::config::{ExperimentConfig, ModelPreset, TrainConfig};
 use crate::coordinator::trainer::{eval_metric, SingleTaskTrainer};
 use crate::data::{Batcher, TaskId};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 use anyhow::Result;
@@ -48,7 +48,7 @@ pub struct SequentialResult {
 /// Run sequential learning A → B → A with a single shared adapter.
 /// Both tasks must be binary (the shared 2-class artifact).
 pub fn run_sequential(
-    rt: &Runtime,
+    backend: &dyn Backend,
     model: ModelPreset,
     spec: &AdapterSpec,
     task_a: TaskId,
@@ -65,7 +65,15 @@ pub fn run_sequential(
             t.name()
         );
     }
-    let make_trainer = |task: TaskId| -> Result<SingleTaskTrainer<'_>> {
+    fn make_trainer<'a>(
+        backend: &'a dyn Backend,
+        model: ModelPreset,
+        spec: &AdapterSpec,
+        alpha: f32,
+        train: &TrainConfig,
+        checkpoint: Option<&Path>,
+        task: TaskId,
+    ) -> Result<SingleTaskTrainer<'a>> {
         let exp = ExperimentConfig {
             model,
             adapter: spec.kind,
@@ -73,11 +81,12 @@ pub fn run_sequential(
             alpha,
             tasks: vec![task.name().to_string()],
             train: train.clone(),
+            backend: backend.kind(),
         };
-        SingleTaskTrainer::prepare(rt, &exp, task, checkpoint)
-    };
-    let trainer_a = make_trainer(task_a)?;
-    let trainer_b = make_trainer(task_b)?;
+        SingleTaskTrainer::prepare(backend, &exp, task, checkpoint)
+    }
+    let trainer_a = make_trainer(backend, model, spec, alpha, train, checkpoint, task_a)?;
+    let trainer_b = make_trainer(backend, model, spec, alpha, train, checkpoint, task_b)?;
     let batcher = Batcher::new(train.batch_size);
 
     let eval_both = |params: &[Tensor],
@@ -85,10 +94,10 @@ pub fn run_sequential(
                      tb: &SingleTaskTrainer|
      -> Result<(f64, f64)> {
         let ma = eval_metric(
-            &ta.eval_runner, params, &ta.ds, &batcher, 0, alpha, task_a.info().metric,
+            ta.eval_runner.as_ref(), params, &ta.ds, &batcher, 0, alpha, task_a.info().metric,
         )?;
         let mb = eval_metric(
-            &tb.eval_runner, params, &tb.ds, &batcher, 0, alpha, task_b.info().metric,
+            tb.eval_runner.as_ref(), params, &tb.ds, &batcher, 0, alpha, task_b.info().metric,
         )?;
         Ok((ma, mb))
     };

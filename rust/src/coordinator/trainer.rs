@@ -10,11 +10,11 @@ use crate::config::{ExperimentConfig, ModelPreset, TrainConfig};
 use crate::data::{Batcher, Dataset, TaskId};
 use crate::metrics::{self, MetricKind};
 use crate::optim::{clip_global_norm, AdamW, LrSchedule};
-use crate::runtime::{assemble_frozen, ArtifactSpec, Runtime, StepKind, StepRunner};
+use crate::runtime::{assemble_frozen, ArtifactSpec, Backend, Step, StepKind};
 use crate::tensor::Tensor;
 use crate::tt::InitStrategy;
 use crate::util::rng::Pcg64;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 
 /// Per-epoch record.
@@ -61,7 +61,7 @@ pub fn unflatten_all(ts: &mut [Tensor], flat: &[f32]) {
 
 /// Compute the task metric from logits batches.
 pub fn eval_metric(
-    runner: &StepRunner,
+    runner: &dyn Step,
     params: &[Tensor],
     ds: &Dataset,
     batcher: &Batcher,
@@ -97,15 +97,16 @@ pub fn eval_metric(
     }
     Ok(match metric {
         MetricKind::Accuracy => metrics::accuracy(&preds, &golds),
-        MetricKind::Matthews => metrics::matthews_corr(&preds, &golds),
+        MetricKind::Matthews => metrics::matthews_corr(&preds, &golds)
+            .ok_or_else(|| anyhow!("matthews metric on non-binary labels"))?,
         MetricKind::Spearman => metrics::spearman_corr(&pred_scores, &gold_scores),
     })
 }
 
-/// A fully-wired single-task fine-tuning session.
+/// A fully-wired single-task fine-tuning session (backend-agnostic).
 pub struct SingleTaskTrainer<'rt> {
-    pub train_runner: StepRunner<'rt>,
-    pub eval_runner: StepRunner<'rt>,
+    pub train_runner: Box<dyn Step + 'rt>,
+    pub eval_runner: Box<dyn Step + 'rt>,
     pub task: TaskId,
     pub ds: Dataset,
     pub cfg: TrainConfig,
@@ -115,7 +116,7 @@ pub struct SingleTaskTrainer<'rt> {
 impl<'rt> SingleTaskTrainer<'rt> {
     /// Wire up runners + data for `cfg` on `task`.
     pub fn prepare(
-        rt: &'rt Runtime,
+        backend: &'rt dyn Backend,
         exp: &ExperimentConfig,
         task: TaskId,
         checkpoint: Option<&Path>,
@@ -135,10 +136,10 @@ impl<'rt> SingleTaskTrainer<'rt> {
         };
         let mut eval_spec = train_spec.clone();
         eval_spec.step = StepKind::Eval;
-        let entry = rt.manifest.require(&train_spec).map_err(anyhow::Error::msg)?;
-        let frozen = assemble_frozen(entry, checkpoint, exp.model)?;
-        let train_runner = StepRunner::bind(rt, &train_spec, &frozen)?;
-        let eval_runner = StepRunner::bind(rt, &eval_spec, &frozen)?;
+        let entry = backend.entry(&train_spec)?;
+        let frozen = std::sync::Arc::new(assemble_frozen(&entry, checkpoint, exp.model)?);
+        let train_runner = backend.bind(&train_spec, &frozen)?;
+        let eval_runner = backend.bind(&eval_spec, &frozen)?;
         let mut data_rng = Pcg64::with_stream(exp.train.seed, 0xda7a);
         let n_train = exp.train.train_cap.min(info.train_size);
         let ds = task.generate_at(
@@ -200,7 +201,7 @@ impl<'rt> SingleTaskTrainer<'rt> {
                 step += 1;
             }
             let metric = eval_metric(
-                &self.eval_runner,
+                self.eval_runner.as_ref(),
                 params,
                 &self.ds,
                 &batcher,
@@ -276,7 +277,7 @@ pub fn init_trainable(
 
 /// Convenience: run one seed of (model, adapter, rank, task) end to end.
 pub fn run_single_task(
-    rt: &Runtime,
+    backend: &dyn Backend,
     model: ModelPreset,
     adapter_spec: &AdapterSpec,
     task: TaskId,
@@ -292,12 +293,13 @@ pub fn run_single_task(
         alpha,
         tasks: vec![task.name().to_string()],
         train: train.clone(),
+        backend: backend.kind(),
     };
-    let trainer = SingleTaskTrainer::prepare(rt, &exp, task, checkpoint)
+    let trainer = SingleTaskTrainer::prepare(backend, &exp, task, checkpoint)
         .with_context(|| format!("prepare {} on {}", adapter_spec.kind.name(), task.name()))?;
     let mut params = init_trainable(
         adapter_spec,
-        &trainer.train_runner.entry,
+        trainer.train_runner.entry(),
         checkpoint,
         train.seed,
         init,

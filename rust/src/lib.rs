@@ -9,14 +9,24 @@
 //! * **L2 (build time, python)** — a from-scratch JAX transformer encoder
 //!   whose Q/V projections are steered by a single *global* tensor-train
 //!   adapter; fwd/bwd lowered AOT to HLO text artifacts.
-//! * **L3 (run time, rust — this crate)** — the coordinator: PJRT runtime,
-//!   training orchestration, AdamW, the DMRG-inspired rank-adaptive sweep
-//!   (paper Algorithm 1), the synthetic GLUE workload suite, metrics, and
-//!   the benchmark harness that regenerates every table and figure of the
-//!   paper's evaluation.
+//! * **L3 (run time, rust — this crate)** — the coordinator: pluggable
+//!   execution backends, training orchestration, AdamW, the DMRG-inspired
+//!   rank-adaptive sweep (paper Algorithm 1), the synthetic GLUE workload
+//!   suite, metrics, and the benchmark harness that regenerates every table
+//!   and figure of the paper's evaluation.
 //!
-//! Python never runs on the training/serving path: `make artifacts` lowers
-//! the compute graphs once; everything after that is this crate.
+//! ## Execution backends
+//!
+//! Every training/eval/pretrain step runs through the
+//! [`runtime::Backend`] seam (`--backend ref|pjrt` on the CLI):
+//!
+//! * **`ref`** (default) — pure-rust CPU reference executor. Hermetic: no
+//!   HLO artifacts, no Python, no network; the entire train/DMRG/MTL stack
+//!   (and `cargo test -q`) runs on it out of the box.
+//! * **`pjrt`** (cargo feature `pjrt`) — the AOT path: `make artifacts`
+//!   lowers the compute graphs once, then this crate compiles and caches
+//!   the HLO executables through PJRT. The vendored `xla` crate is a
+//!   compile-only stub; link real PJRT bindings to execute.
 //!
 //! ## Crate map
 //!
@@ -29,10 +39,10 @@
 //! | [`optim`] | AdamW / SGD, LR schedules, gradient clipping |
 //! | [`data`] | synthetic GLUE suite + MLM pretraining corpus |
 //! | [`metrics`] | accuracy, Matthews, Spearman, seed aggregation |
-//! | [`runtime`] | PJRT client, artifact registry, executable cache |
+//! | [`runtime`] | `Backend`/`Step` seam: pure-rust ref executor, spec-derived I/O layouts, artifact registry, PJRT cache (feature `pjrt`) |
 //! | [`coordinator`] | trainers (single-task, MTL, DMRG), checkpoints |
 //! | [`bench`] | micro-bench harness + paper-style table emitters |
-//! | [`config`] | experiment configuration (TOML) |
+//! | [`config`] | experiment configuration (TOML, incl. backend selection) |
 //! | [`cli`] | launcher argument parsing |
 
 pub mod adapters;

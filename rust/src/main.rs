@@ -16,7 +16,7 @@ use metatt::cli::Args;
 use metatt::config::{ModelPreset, TrainConfig};
 use metatt::coordinator::{self, results, DmrgConfig, MtlConfig, PretrainConfig};
 use metatt::data::TaskId;
-use metatt::runtime::{checkpoint_path, Runtime, StepKind};
+use metatt::runtime::{checkpoint_path, make_backend, Backend, BackendKind, Step};
 use metatt::tt::{InitStrategy, RankSchedule};
 use metatt::util::json::Json;
 use std::path::Path;
@@ -25,7 +25,7 @@ const USAGE: &str = "\
 metatt <command> [options]
 
 commands:
-  info       show artifact manifest summary and PJRT platform
+  info       show backend status (and artifact manifest, pjrt backend)
   pretrain   --model tiny|small|base_sim --steps N [--lr F] [--seed N]
   train      --task T --adapter A --rank R [--alpha F] [--epochs N]
              [--batch N] [--lr F] [--seed N] [--init ze-id-id-id]
@@ -34,10 +34,14 @@ commands:
   dmrg       --task T [--adapter metatt5d] [--start-rank 10]
              [--schedule e:r,e:r,...] [--epochs N] [--seed N]
   seq        --task-a A --task-b B — sequential A→B→A transfer (forgetting)
-  serve      --requests N [--rank R] — run the folded Pallas apply artifact
+  serve      --requests N [--rank R] — run the folded adapter apply step
   run        --config configs/foo.toml — config-file-driven run
 
-options shared: --model (default tiny), --artifacts DIR (default artifacts)
+options shared:
+  --backend ref|pjrt   execution backend (default ref: hermetic pure-rust
+                       CPU; pjrt needs `--features pjrt` + `make artifacts`)
+  --model PRESET       model preset (default tiny)
+  --artifacts DIR      HLO artifact dir for the pjrt backend (default artifacts)
 ";
 
 fn main() {
@@ -48,7 +52,7 @@ fn main() {
 }
 
 const OPTS: &[&str] = &[
-    "task-a", "task-b", "config",
+    "task-a", "task-b", "config", "backend",
     "model", "steps", "lr", "seed", "task", "tasks", "adapter", "rank", "alpha",
     "epochs", "batch", "init", "train-cap", "eval-cap", "artifacts", "schedule",
     "start-rank", "requests", "warmup-ratio", "grad-clip",
@@ -61,29 +65,44 @@ fn run() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let artifacts = args.str_or("artifacts", "artifacts");
     match args.command.as_str() {
-        "info" => cmd_info(&args, Path::new(&artifacts)),
-        "pretrain" => cmd_pretrain(&args, Path::new(&artifacts)),
-        "train" => cmd_train(&args, Path::new(&artifacts)),
-        "mtl" => cmd_mtl(&args, Path::new(&artifacts)),
-        "seq" => cmd_seq(&args, Path::new(&artifacts)),
-        "dmrg" => cmd_dmrg(&args, Path::new(&artifacts)),
-        "serve" => cmd_serve(&args, Path::new(&artifacts)),
-        "run" => cmd_run(&args, Path::new(&artifacts)),
+        "info" => cmd_info(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "train" => cmd_train(&args),
+        "mtl" => cmd_mtl(&args),
+        "seq" => cmd_seq(&args),
+        "dmrg" => cmd_dmrg(&args),
+        "serve" => cmd_serve(&args),
+        "run" => cmd_run(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
 
+/// Build the execution backend selected by `--backend` (default: the
+/// hermetic pure-rust reference backend).
+fn backend_for(args: &Args) -> Result<Box<dyn Backend>> {
+    let kind = BackendKind::from_name(&args.str_or("backend", "ref"))
+        .map_err(|e| anyhow!(e))?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    make_backend(kind, Path::new(&artifacts))
+}
+
 /// `metatt run --config configs/foo.toml` — config-file-driven single run.
-fn cmd_run(args: &Args, artifacts: &Path) -> Result<()> {
+fn cmd_run(args: &Args) -> Result<()> {
     let path = args
         .get("config")
         .or_else(|| args.positional.first().map(|s| s.as_str()))
         .ok_or_else(|| anyhow!("run needs --config <file.toml>"))?;
     let cfg = metatt::config::ExperimentConfig::from_toml(Path::new(path))
         .map_err(|e| anyhow!(e))?;
-    let rt = Runtime::new(artifacts)?;
+    // The TOML picks the backend; an explicit --backend flag overrides it.
+    let backend = match args.get("backend") {
+        Some(_) => backend_for(args)?,
+        None => {
+            let artifacts = args.str_or("artifacts", "artifacts");
+            make_backend(cfg.backend, Path::new(&artifacts))?
+        }
+    };
     let ckpt = ckpt_for(args, cfg.model);
     let spec = cfg.adapter_spec();
     if cfg.tasks.len() > 1 {
@@ -96,12 +115,15 @@ fn cmd_run(args: &Args, artifacts: &Path) -> Result<()> {
         let mut mcfg = MtlConfig::default();
         mcfg.train = cfg.train.clone();
         mcfg.alpha = cfg.alpha;
-        let res = coordinator::run_mtl(&rt, cfg.model, &spec, &tasks, &mcfg, ckpt.as_deref())?;
+        let res = coordinator::run_mtl(
+            backend.as_ref(), cfg.model, &spec, &tasks, &mcfg, ckpt.as_deref(),
+        )?;
         println!("best mean metric: {:.4} {:?}", res.best_mean, res.best_per_task);
     } else {
         let task = TaskId::from_name(&cfg.tasks[0]).map_err(|e| anyhow!(e))?;
         let res = coordinator::run_single_task(
-            &rt, cfg.model, &spec, task, &cfg.train, cfg.alpha, ckpt.as_deref(), None,
+            backend.as_ref(), cfg.model, &spec, task, &cfg.train, cfg.alpha,
+            ckpt.as_deref(), None,
         )?;
         println!("best {}: {:.4}", task.info().metric.name(), res.best_metric);
     }
@@ -110,7 +132,7 @@ fn cmd_run(args: &Args, artifacts: &Path) -> Result<()> {
 
 /// `metatt seq --task-a mrpc_syn --task-b rte_syn` — sequential A→B→A
 /// transfer with one shared adapter (paper §3.2, forgetting measurement).
-fn cmd_seq(args: &Args, artifacts: &Path) -> Result<()> {
+fn cmd_seq(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
     let task_a = TaskId::from_name(&args.str_or("task-a", "mrpc_syn")).map_err(|e| anyhow!(e))?;
     let task_b = TaskId::from_name(&args.str_or("task-b", "rte_syn")).map_err(|e| anyhow!(e))?;
@@ -119,11 +141,11 @@ fn cmd_seq(args: &Args, artifacts: &Path) -> Result<()> {
     let rank = args.usize_or("rank", 8).map_err(|e| anyhow!(e))?;
     let alpha = args.f32_or("alpha", 4.0).map_err(|e| anyhow!(e))?;
     let train = train_config(args)?;
-    let rt = Runtime::new(artifacts)?;
+    let backend = backend_for(args)?;
     let spec = AdapterSpec::new(adapter, rank, alpha, model.dims(1));
     let ckpt = ckpt_for(args, model);
     let res = coordinator::run_sequential(
-        &rt, model, &spec, task_a, task_b, &train, alpha, ckpt.as_deref(),
+        backend.as_ref(), model, &spec, task_a, task_b, &train, alpha, ckpt.as_deref(),
     )?;
     for (i, p) in res.phases.iter().enumerate() {
         println!(
@@ -193,17 +215,9 @@ fn ckpt_for(args: &Args, model: ModelPreset) -> Option<std::path::PathBuf> {
     }
 }
 
-fn cmd_info(_args: &Args, artifacts: &Path) -> Result<()> {
-    let rt = Runtime::new(artifacts)?;
-    println!("platform: {}", rt.platform());
-    println!("artifacts: {} entries in {}", rt.manifest.len(), artifacts.display());
-    let mut by_step = std::collections::BTreeMap::new();
-    for spec in rt.manifest.specs() {
-        *by_step.entry(spec.step.name()).or_insert(0usize) += 1;
-    }
-    for (step, n) in by_step {
-        println!("  {:>9}: {n}", step);
-    }
+fn cmd_info(args: &Args) -> Result<()> {
+    let backend = backend_for(args)?;
+    println!("{}", backend.describe());
     for preset in [ModelPreset::Tiny, ModelPreset::Small, ModelPreset::BaseSim] {
         let p = checkpoint_path(preset);
         println!(
@@ -215,16 +229,16 @@ fn cmd_info(_args: &Args, artifacts: &Path) -> Result<()> {
     Ok(())
 }
 
-fn cmd_pretrain(args: &Args, artifacts: &Path) -> Result<()> {
+fn cmd_pretrain(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
-    let rt = Runtime::new(artifacts)?;
+    let backend = backend_for(args)?;
     let cfg = PretrainConfig {
         steps: args.usize_or("steps", 600).map_err(|e| anyhow!(e))?,
         lr: args.f32_or("lr", 1e-3).map_err(|e| anyhow!(e))?,
         seed: args.u64_or("seed", 1234).map_err(|e| anyhow!(e))?,
         ..Default::default()
     };
-    let res = coordinator::pretrain(&rt, model, &cfg)?;
+    let res = coordinator::pretrain(backend.as_ref(), model, &cfg)?;
     results::append_record(
         "pretrain",
         &Json::obj(vec![
@@ -246,7 +260,7 @@ fn cmd_pretrain(args: &Args, artifacts: &Path) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
+fn cmd_train(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
     let task = TaskId::from_name(&args.str_or("task", "mrpc_syn")).map_err(|e| anyhow!(e))?;
     let adapter =
@@ -258,7 +272,7 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
         Some(code) => Some(InitStrategy::from_code(code).map_err(|e| anyhow!(e))?),
         None => None,
     };
-    let rt = Runtime::new(artifacts)?;
+    let backend = backend_for(args)?;
     let dims = model.dims(1);
     let spec = AdapterSpec::new(adapter, rank, alpha, dims);
     println!(
@@ -271,7 +285,7 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     );
     let ckpt = ckpt_for(args, model);
     let res = coordinator::run_single_task(
-        &rt,
+        backend.as_ref(),
         model,
         &spec,
         task,
@@ -310,7 +324,7 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     Ok(())
 }
 
-fn cmd_mtl(args: &Args, artifacts: &Path) -> Result<()> {
+fn cmd_mtl(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
     let task_names = args.str_list_or("tasks", &["cola_syn", "mrpc_syn", "rte_syn"]);
     let tasks: Vec<TaskId> = task_names
@@ -327,7 +341,7 @@ fn cmd_mtl(args: &Args, artifacts: &Path) -> Result<()> {
     // Paper cap is 5000/task; --train-cap lowers it for quick runs.
     cfg.per_task_cap = cfg.per_task_cap.min(cfg.train.train_cap);
     cfg.eval_cap = cfg.eval_cap.min(cfg.train.eval_cap);
-    let rt = Runtime::new(artifacts)?;
+    let backend = backend_for(args)?;
     let dims = model.dims(tasks.len());
     let spec = AdapterSpec::new(adapter, rank, cfg.alpha, dims);
     println!(
@@ -337,7 +351,8 @@ fn cmd_mtl(args: &Args, artifacts: &Path) -> Result<()> {
         spec.param_count()
     );
     let ckpt = ckpt_for(args, model);
-    let res = coordinator::run_mtl(&rt, model, &spec, &tasks, &cfg, ckpt.as_deref())?;
+    let res =
+        coordinator::run_mtl(backend.as_ref(), model, &spec, &tasks, &cfg, ckpt.as_deref())?;
     for e in &res.epochs {
         println!(
             "epoch {:>2}  loss {:.4}  mean {:.4}  per-task {:?}",
@@ -370,7 +385,7 @@ fn cmd_mtl(args: &Args, artifacts: &Path) -> Result<()> {
     Ok(())
 }
 
-fn cmd_dmrg(args: &Args, artifacts: &Path) -> Result<()> {
+fn cmd_dmrg(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
     let task = TaskId::from_name(&args.str_or("task", "mrpc_syn")).map_err(|e| anyhow!(e))?;
     let adapter =
@@ -383,7 +398,7 @@ fn cmd_dmrg(args: &Args, artifacts: &Path) -> Result<()> {
     if let Some(s) = args.get("schedule") {
         cfg.schedule = RankSchedule::parse(s).map_err(|e| anyhow!(e))?;
     }
-    let rt = Runtime::new(artifacts)?;
+    let backend = backend_for(args)?;
     let ckpt = ckpt_for(args, model);
     println!(
         "dmrg {} on {}: start rank {}, schedule {:?}",
@@ -392,7 +407,7 @@ fn cmd_dmrg(args: &Args, artifacts: &Path) -> Result<()> {
         cfg.start_rank,
         cfg.schedule.steps
     );
-    let res = coordinator::run_dmrg(&rt, model, adapter, task, &cfg, ckpt.as_deref())?;
+    let res = coordinator::run_dmrg(backend.as_ref(), model, adapter, task, &cfg, ckpt.as_deref())?;
     for e in &res.epochs {
         println!(
             "epoch {:>2}  loss {:.4}  acc {:.4}  rank {:>2}{}{}",
@@ -441,21 +456,16 @@ fn cmd_dmrg(args: &Args, artifacts: &Path) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
-    use metatt::runtime::{ArtifactSpec, StepRunner};
+fn cmd_serve(args: &Args) -> Result<()> {
     use metatt::tensor::Tensor;
     use metatt::util::rng::Pcg64;
     let requests = args.usize_or("requests", 100).map_err(|e| anyhow!(e))?;
     let rank = args.usize_or("rank", 8).map_err(|e| anyhow!(e))?;
-    let rt = Runtime::new(artifacts)?;
-    let spec = rt
-        .manifest
-        .specs()
-        .find(|s| s.step == StepKind::Apply && s.adapter == "metatt4d" && s.rank == rank)
-        .cloned()
-        .ok_or_else(|| anyhow!("no apply artifact at rank {rank}"))?;
-    let entry = rt.manifest.require(&spec).map_err(anyhow::Error::msg)?.clone();
-    let runner = StepRunner::bind(&rt, &spec, &Default::default())?;
+    let adapter = args.str_or("adapter", "metatt4d");
+    let backend = backend_for(args)?;
+    let spec = backend.apply_spec(&adapter, rank)?;
+    let entry = backend.entry(&spec)?;
+    let runner = backend.bind(&spec, &Default::default())?;
     let mut rng = Pcg64::new(1);
     let inputs: Vec<Tensor> = entry
         .inputs

@@ -16,7 +16,13 @@ pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
 }
 
 /// Matthews correlation coefficient for binary labels {0, 1}.
-pub fn matthews_corr(pred: &[usize], gold: &[usize]) -> f64 {
+///
+/// Returns `None` when any prediction or gold label is non-binary (the
+/// metric is undefined there — callers decide whether that is an error).
+/// Degenerate-but-binary batches (e.g. a single-class eval slice or a
+/// constant predictor) are well-handled: the denominator vanishes and the
+/// conventional value 0 is returned.
+pub fn matthews_corr(pred: &[usize], gold: &[usize]) -> Option<f64> {
     assert_eq!(pred.len(), gold.len());
     let (mut tp, mut tn, mut fp, mut fnn) = (0f64, 0f64, 0f64, 0f64);
     for (&p, &g) in pred.iter().zip(gold) {
@@ -25,15 +31,15 @@ pub fn matthews_corr(pred: &[usize], gold: &[usize]) -> f64 {
             (0, 0) => tn += 1.0,
             (1, 0) => fp += 1.0,
             (0, 1) => fnn += 1.0,
-            _ => panic!("matthews_corr expects binary labels"),
+            _ => return None,
         }
     }
     let denom = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
-    if denom == 0.0 {
+    Some(if denom == 0.0 {
         0.0
     } else {
         (tp * tn - fp * fnn) / denom
-    }
+    })
 }
 
 /// Spearman rank correlation between two score vectors (average ranks for
@@ -131,11 +137,11 @@ mod tests {
     #[test]
     fn matthews_perfect_and_inverse() {
         let gold = [0, 1, 0, 1, 1, 0];
-        assert!((matthews_corr(&gold, &gold) - 1.0).abs() < 1e-12);
+        assert!((matthews_corr(&gold, &gold).unwrap() - 1.0).abs() < 1e-12);
         let inv: Vec<usize> = gold.iter().map(|&g| 1 - g).collect();
-        assert!((matthews_corr(&inv, &gold) + 1.0).abs() < 1e-12);
+        assert!((matthews_corr(&inv, &gold).unwrap() + 1.0).abs() < 1e-12);
         // Constant predictor → 0 by convention.
-        assert_eq!(matthews_corr(&[1, 1, 1, 1, 1, 1], &gold), 0.0);
+        assert_eq!(matthews_corr(&[1, 1, 1, 1, 1, 1], &gold), Some(0.0));
     }
 
     #[test]
@@ -143,7 +149,21 @@ mod tests {
         // tp=2 tn=1 fp=1 fn=1 → (2-1)/sqrt(3*3*2*2) = 1/6
         let pred = [1, 1, 1, 0, 0];
         let gold = [1, 1, 0, 1, 0];
-        assert!((matthews_corr(&pred, &gold) - 1.0 / 6.0).abs() < 1e-12);
+        assert!((matthews_corr(&pred, &gold).unwrap() - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matthews_degenerate_single_class_batch_is_zero_not_panic() {
+        // All-gold-one batch (single class): denominator vanishes → 0.
+        assert_eq!(matthews_corr(&[1, 0, 1], &[1, 1, 1]), Some(0.0));
+        // All-pred == all-gold single class still 0 (no signal, no crash).
+        assert_eq!(matthews_corr(&[0, 0], &[0, 0]), Some(0.0));
+    }
+
+    #[test]
+    fn matthews_rejects_non_binary_labels() {
+        assert_eq!(matthews_corr(&[0, 2], &[1, 0]), None);
+        assert_eq!(matthews_corr(&[0, 1], &[1, 3]), None);
     }
 
     #[test]

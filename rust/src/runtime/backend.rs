@@ -1,0 +1,180 @@
+//! The execution-backend seam: every training/eval/pretrain step goes
+//! through the [`Backend`] + [`Step`] traits.
+//!
+//! Two implementations exist:
+//!
+//! * [`super::RefBackend`] (`--backend ref`, the default) — pure-rust CPU
+//!   execution of the encoder forward/backward on top of `tensor::ops`.
+//!   Hermetic: no HLO artifacts, no Python, no network.
+//! * `Runtime` (`--backend pjrt`, behind the `pjrt` cargo feature) — the
+//!   original PJRT path: AOT-lowered HLO artifacts compiled and cached per
+//!   [`ArtifactSpec`], frozen weights resident on device.
+//!
+//! The coordinator layer is written entirely against `&dyn Backend`, so the
+//! DMRG executable hot-swap, MTL task routing, and checkpointing logic is
+//! identical across backends.
+
+use super::registry::{ArtifactEntry, ArtifactSpec};
+use crate::config::ModelPreset;
+use crate::data::{Batch, MlmBatch};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Which execution backend to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust reference executor (hermetic, CPU).
+    Ref,
+    /// PJRT/XLA over AOT-lowered HLO artifacts (requires `--features pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Ref => "ref",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<BackendKind, String> {
+        match s {
+            "ref" => Ok(BackendKind::Ref),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(format!("unknown backend '{other}' (want ref|pjrt)")),
+        }
+    }
+}
+
+/// A bound step: ready to execute with only the per-step inputs.
+/// (The PJRT implementation holds resident frozen device buffers + the
+/// compiled executable; the reference implementation holds host tensors.)
+pub trait Step {
+    /// The artifact layout this step was bound against.
+    fn entry(&self) -> &ArtifactEntry;
+
+    /// One fwd+bwd step. Returns (loss, grads in trainable order).
+    fn run_train(
+        &self,
+        trainable: &[Tensor],
+        batch: &Batch,
+        task_id: i32,
+        alpha: f32,
+    ) -> Result<(f32, Vec<Tensor>)>;
+
+    /// One fwd (eval) step. Returns logits `[batch, classes]`.
+    fn run_eval(
+        &self,
+        trainable: &[Tensor],
+        batch: &Batch,
+        task_id: i32,
+        alpha: f32,
+    ) -> Result<Tensor>;
+
+    /// One MLM pretraining step (no frozen inputs; `trainable` is the whole
+    /// encoder). Returns (loss, grads).
+    fn run_pretrain(&self, trainable: &[Tensor], batch: &MlmBatch) -> Result<(f32, Vec<Tensor>)>;
+
+    /// Raw positional execution (serving-apply / micro-bench path).
+    fn run_raw(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution backend: resolves [`ArtifactSpec`]s to I/O layouts and binds
+/// executable steps.
+pub trait Backend: Send + Sync {
+    fn kind(&self) -> BackendKind;
+
+    /// Human-readable platform string (PJRT platform name / "cpu (pure rust)").
+    fn platform(&self) -> String;
+
+    /// Multi-line status summary for `metatt info`.
+    fn describe(&self) -> String;
+
+    /// Resolve the I/O layout of `spec`, erroring if this backend cannot
+    /// execute it (e.g. missing HLO artifact on the PJRT side).
+    fn entry(&self, spec: &ArtifactSpec) -> Result<ArtifactEntry>;
+
+    /// Bind `spec` with the frozen input set, validating names and shapes.
+    /// The map is shared (`Arc`) because rebinding is routine — the DMRG
+    /// scheduler hot-swaps steps per rank — and the frozen backbone can be
+    /// tens of MB; backends keep a refcount, never a deep copy.
+    fn bind<'a>(
+        &'a self,
+        spec: &ArtifactSpec,
+        frozen: &Arc<HashMap<String, Tensor>>,
+    ) -> Result<Box<dyn Step + 'a>>;
+
+    /// Number of distinct compiled/bound executables so far — the DMRG
+    /// hot-swap telemetry.
+    fn cached_executables(&self) -> usize;
+
+    /// The MLM pretraining spec for a preset.
+    fn pretrain_spec(&self, preset: ModelPreset) -> Result<ArtifactSpec>;
+
+    /// A serving-apply spec for (adapter, rank).
+    fn apply_spec(&self, adapter: &str, rank: usize) -> Result<ArtifactSpec>;
+}
+
+/// Construct a backend by kind. `artifact_dir` is only read by the PJRT
+/// backend (manifest + HLO files); the reference backend ignores it.
+pub fn make_backend(kind: BackendKind, artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Ref => {
+            let _ = artifact_dir;
+            Ok(Box::new(super::RefBackend::new()))
+        }
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(super::Runtime::new(artifact_dir)?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => {
+            let _ = artifact_dir;
+            anyhow::bail!(
+                "backend 'pjrt' is not compiled into this binary — rebuild with \
+                 `cargo build --features pjrt` (and real PJRT bindings), or use \
+                 `--backend ref`"
+            )
+        }
+    }
+}
+
+/// Backend selection from the environment: `METATT_BACKEND` (ref|pjrt,
+/// default ref) and `METATT_ARTIFACTS` (default "artifacts"). Used by the
+/// bench binaries and examples so one env var flips the whole harness.
+pub fn backend_from_env() -> Result<Box<dyn Backend>> {
+    let kind = match std::env::var("METATT_BACKEND") {
+        Ok(v) => BackendKind::from_name(&v).map_err(anyhow::Error::msg)?,
+        Err(_) => BackendKind::Ref,
+    };
+    let dir = std::env::var("METATT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    make_backend(kind, Path::new(&dir))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [BackendKind::Ref, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::from_name(k.name()).unwrap(), k);
+        }
+        assert!(BackendKind::from_name("tpu").is_err());
+    }
+
+    #[test]
+    fn ref_backend_constructs_without_artifacts() {
+        let b = make_backend(BackendKind::Ref, Path::new("/nonexistent")).unwrap();
+        assert_eq!(b.kind(), BackendKind::Ref);
+        assert_eq!(b.cached_executables(), 0);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_requires_feature() {
+        let err = make_backend(BackendKind::Pjrt, Path::new("artifacts")).unwrap_err();
+        assert!(format!("{err:#}").contains("--features pjrt"));
+    }
+}

@@ -1,0 +1,1192 @@
+//! Pure-rust forward + backward of the adapted transformer encoder.
+//!
+//! This is the compute core of the reference backend (`--backend ref`): a
+//! faithful re-implementation of `python/compile/model.py` on top of
+//! [`crate::tensor`] — RoBERTa-style post-LN encoder, tanh-GELU MLP,
+//! learned positions, pad-masked attention, adapters on the Q (m=0) and V
+//! (m=1) projections, CLS pooling through frozen per-task heads, weighted
+//! CE / MSE task losses, and the weight-tied MLM pretraining objective.
+//!
+//! The backward pass is hand-derived reverse mode over the same graph: the
+//! forward caches layer activations (`LayerCache`), the backward walks them
+//! in reverse, accumulating gradients by *name + contiguous chunk* into a
+//! [`GradSink`] keyed by the artifact's trainable layout. Because every
+//! structural axis (layer, matrix, head, task) is the leading axis of its
+//! array, all sliced accumulations are contiguous chunks — no strided
+//! scatter is ever needed. Gradients are checked against central finite
+//! differences in `tests/ref_backend.rs`.
+
+use super::registry::{ArtifactEntry, IoSpec};
+use crate::adapters::AdapterKind;
+use crate::config::ModelPreset;
+use crate::data::{Batch, MlmBatch};
+use crate::tensor::Tensor;
+use crate::tt::MetaTtKind;
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+const PAD_ID: i32 = 0;
+const LN_EPS: f32 = 1e-5;
+const MASK_NEG: f32 = -1e9;
+
+// ---------------------------------------------------------------------------
+// Small dense helpers.
+// ---------------------------------------------------------------------------
+
+/// Copy the `i`-th leading-axis slice of a stacked array as an (r × c)
+/// matrix. Works for any tensor whose trailing element count is r·c.
+fn chunk_mat(t: &Tensor, i: usize, r: usize, c: usize) -> Tensor {
+    let len = r * c;
+    Tensor::from_vec(&[r, c], t.data()[i * len..(i + 1) * len].to_vec())
+}
+
+/// Copy rows `[row0, row0+nrows)` × cols `[col0, col0+ncols)` of a matrix.
+fn block(m: &Tensor, row0: usize, nrows: usize, col0: usize, ncols: usize) -> Tensor {
+    let cols = m.shape()[1];
+    let mut out = Tensor::zeros(&[nrows, ncols]);
+    for i in 0..nrows {
+        let src = (row0 + i) * cols + col0;
+        out.data_mut()[i * ncols..(i + 1) * ncols]
+            .copy_from_slice(&m.data()[src..src + ncols]);
+    }
+    out
+}
+
+/// `dst[row0.., col0..] += src` for a (nrows × ncols) block.
+fn add_block(dst: &mut Tensor, row0: usize, col0: usize, src: &Tensor) {
+    let (nrows, ncols) = (src.shape()[0], src.shape()[1]);
+    let cols = dst.shape()[1];
+    for i in 0..nrows {
+        let d0 = (row0 + i) * cols + col0;
+        for j in 0..ncols {
+            dst.data_mut()[d0 + j] += src.data()[i * ncols + j];
+        }
+    }
+}
+
+/// `t[i, :] += bias` for every row.
+fn add_row_bias(t: &mut Tensor, bias: &[f32]) {
+    let cols = t.shape()[1];
+    debug_assert_eq!(cols, bias.len());
+    for row in t.data_mut().chunks_exact_mut(cols) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += *b;
+        }
+    }
+}
+
+/// Column sums of a matrix.
+fn colsum(t: &Tensor) -> Vec<f32> {
+    let cols = t.shape()[1];
+    let mut out = vec![0.0f32; cols];
+    for row in t.data().chunks_exact(cols) {
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += *v;
+        }
+    }
+    out
+}
+
+/// Elementwise product with a per-column vector: `t[i, j] * v[j]`.
+fn mul_cols(t: &Tensor, v: &[f32]) -> Tensor {
+    let cols = t.shape()[1];
+    debug_assert_eq!(cols, v.len());
+    let mut out = t.clone();
+    for row in out.data_mut().chunks_exact_mut(cols) {
+        for (x, s) in row.iter_mut().zip(v) {
+            *x *= *s;
+        }
+    }
+    out
+}
+
+/// Column sums of the elementwise product of two matrices (Σ_i a[i,j]·b[i,j]).
+fn colsum_mul(a: &Tensor, b: &Tensor) -> Vec<f32> {
+    debug_assert_eq!(a.shape(), b.shape());
+    let cols = a.shape()[1];
+    let mut out = vec![0.0f32; cols];
+    for (ra, rb) in a.data().chunks_exact(cols).zip(b.data().chunks_exact(cols)) {
+        for j in 0..cols {
+            out[j] += ra[j] * rb[j];
+        }
+    }
+    out
+}
+
+// tanh-approximate GELU (jax.nn.gelu default) and its derivative.
+const GELU_C: f32 = 0.797_884_6; // sqrt(2/π)
+const GELU_K: f32 = 0.044_715;
+
+fn gelu(u: f32) -> f32 {
+    0.5 * u * (1.0 + (GELU_C * (u + GELU_K * u * u * u)).tanh())
+}
+
+fn gelu_prime(u: f32) -> f32 {
+    let w = GELU_C * (u + GELU_K * u * u * u);
+    let t = w.tanh();
+    0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_K * u * u)
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm with cached normalization state.
+// ---------------------------------------------------------------------------
+
+struct LnCache {
+    /// Normalized input (x - μ)/σ, needed by both the output and the grads.
+    xhat: Tensor,
+    /// 1/σ per row.
+    inv_std: Vec<f32>,
+}
+
+/// `y = (x - μ)/sqrt(var + ε) · g + b` per row (biased variance, as jnp.var).
+fn layer_norm(x: &Tensor, gamma: &[f32], beta: &[f32]) -> (Tensor, LnCache) {
+    let (n, d) = (x.shape()[0], x.shape()[1]);
+    let mut xhat = Tensor::zeros(&[n, d]);
+    let mut y = Tensor::zeros(&[n, d]);
+    let mut inv_std = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &x.data()[i * d..(i + 1) * d];
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        inv_std[i] = inv;
+        for j in 0..d {
+            let xh = (row[j] - mu) * inv;
+            xhat.data_mut()[i * d + j] = xh;
+            y.data_mut()[i * d + j] = xh * gamma[j] + beta[j];
+        }
+    }
+    (y, LnCache { xhat, inv_std })
+}
+
+/// LayerNorm backward. Returns dx; if `dgb` is Some((dgamma, dbeta)) the
+/// parameter gradients are accumulated into the provided buffers.
+fn layer_norm_backward(
+    dy: &Tensor,
+    cache: &LnCache,
+    gamma: &[f32],
+    mut dgb: Option<(&mut [f32], &mut [f32])>,
+) -> Tensor {
+    let (n, d) = (dy.shape()[0], dy.shape()[1]);
+    let mut dx = Tensor::zeros(&[n, d]);
+    for i in 0..n {
+        let dyr = &dy.data()[i * d..(i + 1) * d];
+        let xhr = &cache.xhat.data()[i * d..(i + 1) * d];
+        let mut m1 = 0.0f32; // mean of dxhat
+        let mut m2 = 0.0f32; // mean of dxhat ∘ xhat
+        for j in 0..d {
+            let dxh = dyr[j] * gamma[j];
+            m1 += dxh;
+            m2 += dxh * xhr[j];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        let inv = cache.inv_std[i];
+        for j in 0..d {
+            let dxh = dyr[j] * gamma[j];
+            dx.data_mut()[i * d + j] = (dxh - m1 - xhr[j] * m2) * inv;
+        }
+        if let Some((ref mut dg, ref mut db)) = dgb {
+            for j in 0..d {
+                dg[j] += dyr[j] * xhr[j];
+                db[j] += dyr[j];
+            }
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Gradient sink: name + contiguous-chunk accumulation in trainable order.
+// ---------------------------------------------------------------------------
+
+/// Accumulates gradients for the artifact's ordered trainable arrays.
+struct GradSink {
+    grads: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl GradSink {
+    fn new(specs: &[IoSpec]) -> GradSink {
+        let grads = specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        let index = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.clone(), i))
+            .collect();
+        GradSink { grads, index }
+    }
+
+    /// `grad[name][offset..offset+len] += src` (contiguous chunk).
+    fn add_chunk(&mut self, name: &str, offset: usize, src: &[f32]) {
+        let i = *self.index.get(name).unwrap_or_else(|| {
+            panic!("gradient for unknown trainable '{name}'")
+        });
+        let dst = &mut self.grads[i].data_mut()[offset..offset + src.len()];
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += *s;
+        }
+    }
+
+    fn add_all(&mut self, name: &str, src: &Tensor) {
+        self.add_chunk(name, 0, src.data());
+    }
+
+    fn into_vec(self) -> Vec<Tensor> {
+        self.grads
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Weight resolution: frozen map + ordered trainable slice, by name.
+// ---------------------------------------------------------------------------
+
+struct Weights<'a> {
+    map: HashMap<&'a str, &'a Tensor>,
+}
+
+impl<'a> Weights<'a> {
+    fn build(
+        entry: &'a ArtifactEntry,
+        frozen: &'a HashMap<String, Tensor>,
+        trainable: &'a [Tensor],
+    ) -> Result<Weights<'a>> {
+        let mut map: HashMap<&str, &Tensor> = HashMap::new();
+        for io in entry.frozen_inputs() {
+            let t = frozen
+                .get(&io.name)
+                .ok_or_else(|| anyhow!("frozen input '{}' missing", io.name))?;
+            map.insert(io.name.as_str(), t);
+        }
+        for (io, t) in entry.trainable_inputs().iter().zip(trainable) {
+            map.insert(io.name.as_str(), t);
+        }
+        Ok(Weights { map })
+    }
+
+    fn get(&self, name: &str) -> &Tensor {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("weight '{name}' not resolved"))
+    }
+
+    fn vec(&self, name: &str) -> &[f32] {
+        self.get(name).data()
+    }
+
+    /// Row `i` of a (rows, d) stacked vector array.
+    fn row(&self, name: &str, i: usize, d: usize) -> &[f32] {
+        &self.get(name).data()[i * d..(i + 1) * d]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model dimensions derived from the artifact spec.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct Dims {
+    b: usize,
+    s: usize,
+    n: usize,
+    d: usize,
+    h: usize,
+    dh: usize,
+    f: usize,
+    l: usize,
+    v: usize,
+    classes: usize,
+}
+
+fn dims_of(entry: &ArtifactEntry) -> Result<Dims> {
+    let preset = ModelPreset::from_name(&entry.spec.model).map_err(anyhow::Error::msg)?;
+    let md = preset.dims(entry.spec.tasks.max(1));
+    let (b, s) = (entry.spec.batch, entry.spec.seq);
+    Ok(Dims {
+        b,
+        s,
+        n: b * s,
+        d: md.hidden,
+        h: md.heads,
+        dh: md.hidden / md.heads,
+        f: md.ffn,
+        l: md.layers,
+        v: md.vocab,
+        classes: entry.spec.classes,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Adapter application (forward + backward), all Table-1 families.
+// ---------------------------------------------------------------------------
+
+struct AdapterCtx<'a> {
+    /// None for "full"/"none" (zero delta).
+    kind: Option<AdapterKind>,
+    params: &'a [Tensor],
+    alpha: f32,
+    task: usize,
+    rank: usize,
+    heads: usize,
+    matrices: usize,
+    d: usize,
+    /// VeRA's frozen shared projections (seed-fixed), built once per step.
+    vera_frozen: Option<(Tensor, Tensor)>,
+}
+
+impl<'a> AdapterCtx<'a> {
+    fn new(entry: &ArtifactEntry, params: &'a [Tensor], alpha: f32, task: usize) -> Result<Self> {
+        let dims = dims_of(entry)?;
+        let kind = match entry.spec.adapter.as_str() {
+            "full" | "none" => None,
+            name => Some(AdapterKind::from_name(name).map_err(anyhow::Error::msg)?),
+        };
+        let vera_frozen = if matches!(kind, Some(AdapterKind::VeRa)) {
+            // Mirror of model.py `_vera_frozen`: shared random A (d×r),
+            // B (r×d), seed-fixed so every step agrees. (The PJRT artifacts
+            // bake jax-PRNG draws; the reference backend uses its own fixed
+            // PCG stream — same distribution, different realization.)
+            let r = entry.spec.rank;
+            let d = dims.d;
+            let mut rng = Pcg64::with_stream(7, 0x7e2a);
+            let a = Tensor::randn(&[d, r], 1.0 / (d as f32).sqrt(), &mut rng);
+            let b = Tensor::randn(&[r, d], 1.0 / (r as f32).sqrt(), &mut rng);
+            Some((a, b))
+        } else {
+            None
+        };
+        Ok(AdapterCtx {
+            kind,
+            params,
+            alpha,
+            task,
+            rank: entry.spec.rank,
+            heads: dims.h,
+            matrices: 2,
+            d: dims.d,
+            vera_frozen,
+        })
+    }
+
+    /// Adapter delta for activations `x` (n × d) at (layer, matrix).
+    fn apply(&self, x: &Tensor, layer: usize, matrix: usize) -> (Tensor, AdapterCache) {
+        let (n, d, r) = (x.shape()[0], self.d, self.rank);
+        let a = self.alpha;
+        match self.kind {
+            None => (Tensor::zeros(&[n, d]), AdapterCache::None),
+            Some(AdapterKind::MetaTt(MetaTtKind::FourD)) => {
+                let [g1, g2, g3, g4] = self.p4();
+                let mid = chunk_mat(g2, layer, r, r).matmul(&chunk_mat(g3, matrix, r, r));
+                let xg1 = x.matmul(g1);
+                let xgm = xg1.matmul(&mid);
+                let delta = xgm.matmul(g4).scale(a);
+                (delta, AdapterCache::Tt4 { xg1, xgm, mid })
+            }
+            Some(AdapterKind::MetaTt(MetaTtKind::FourPlusOneD)) => {
+                let [g1, g2, g3, g4, g5] = self.p5();
+                let ca = chunk_mat(g2, layer, r, r);
+                let cb = chunk_mat(g3, self.task, r, r);
+                let cc = chunk_mat(g4, matrix, r, r);
+                let ab = ca.matmul(&cb);
+                let bc = cb.matmul(&cc);
+                let mid = ab.matmul(&cc);
+                let xg1 = x.matmul(g1);
+                let xgm = xg1.matmul(&mid);
+                let delta = xgm.matmul(g5).scale(a);
+                (delta, AdapterCache::Tt4p1 { xg1, xgm, ca, ab, bc, mid })
+            }
+            Some(AdapterKind::MetaTt(MetaTtKind::FiveD)) => {
+                let [g1, g2, g3, g4, g5] = self.p5();
+                let dh = d / self.heads;
+                let lm = chunk_mat(g2, layer, r, r).matmul(&chunk_mat(g3, matrix, r, r));
+                let xg1 = x.matmul(g1);
+                let xlm = xg1.matmul(&lm);
+                let mut delta = Tensor::zeros(&[n, d]);
+                let mut xh = Vec::with_capacity(self.heads);
+                for hh in 0..self.heads {
+                    let xhh = xlm.matmul(&chunk_mat(g4, hh, r, r));
+                    let y = xhh.matmul(g5).scale(a); // (n, dh)
+                    add_block(&mut delta, 0, hh * dh, &y);
+                    xh.push(xhh);
+                }
+                (delta, AdapterCache::Tt5 { xg1, xlm, lm, xh })
+            }
+            Some(AdapterKind::LoRa) => {
+                let (pa, pb) = (&self.params[0], &self.params[1]);
+                let idx = layer * self.matrices + matrix;
+                let am = chunk_mat(pa, idx, d, r);
+                let bm = chunk_mat(pb, idx, r, d);
+                let xa = x.matmul(&am);
+                let delta = xa.matmul(&bm).scale(a);
+                (delta, AdapterCache::Lora { xa })
+            }
+            Some(AdapterKind::VeRa) => {
+                let (fa, fb) = self.vera_frozen.as_ref().expect("vera frozen");
+                let idx = layer * self.matrices + matrix;
+                let dvec = &self.params[0].data()[idx * r..(idx + 1) * r];
+                let bvec = &self.params[1].data()[idx * d..(idx + 1) * d];
+                let xa = x.matmul(fa);
+                let t = mul_cols(&xa, dvec);
+                let tb = t.matmul(fb);
+                let delta = mul_cols(&tb, bvec).scale(a);
+                (delta, AdapterCache::Vera { xa, tb })
+            }
+            Some(AdapterKind::LoTr) => {
+                let (u, sall, vmat) = (&self.params[0], &self.params[1], &self.params[2]);
+                let idx = layer * self.matrices + matrix;
+                let sm = chunk_mat(sall, idx, r, r);
+                let xu = x.matmul(u);
+                let xus = xu.matmul(&sm);
+                let delta = xus.matmul(vmat).scale(a);
+                (delta, AdapterCache::Lotr { xu, xus, sm })
+            }
+            Some(AdapterKind::Full) => (Tensor::zeros(&[n, d]), AdapterCache::None),
+        }
+    }
+
+    /// Backward through the delta at (layer, matrix): accumulates parameter
+    /// grads into `sink` and `dx += ∂delta/∂x · dy`.
+    fn backward(
+        &self,
+        x: &Tensor,
+        layer: usize,
+        matrix: usize,
+        cache: &AdapterCache,
+        dy: &Tensor,
+        dx: &mut Tensor,
+        sink: &mut GradSink,
+    ) {
+        let (d, r) = (self.d, self.rank);
+        let dya = dy.scale(self.alpha); // fold α once
+        match (self.kind, cache) {
+            (None, _) | (Some(AdapterKind::Full), _) => {}
+            (Some(AdapterKind::MetaTt(MetaTtKind::FourD)), AdapterCache::Tt4 { xg1, xgm, mid }) => {
+                let [g1, g2, g3, g4] = self.p4();
+                sink.add_all("g4", &xgm.t_matmul(&dya));
+                let dxgm = dya.matmul_t(g4);
+                let dmid = xg1.t_matmul(&dxgm);
+                let g2l = chunk_mat(g2, layer, r, r);
+                let g3m = chunk_mat(g3, matrix, r, r);
+                sink.add_chunk("g2", layer * r * r, dmid.matmul_t(&g3m).data());
+                sink.add_chunk("g3", matrix * r * r, g2l.t_matmul(&dmid).data());
+                let dxg1 = dxgm.matmul_t(mid);
+                sink.add_all("g1", &x.t_matmul(&dxg1));
+                dx.axpy(1.0, &dxg1.matmul_t(g1));
+            }
+            (
+                Some(AdapterKind::MetaTt(MetaTtKind::FourPlusOneD)),
+                AdapterCache::Tt4p1 { xg1, xgm, ca, ab, bc, mid },
+            ) => {
+                let [g1, _g2, _g3, g4, g5] = self.p5();
+                sink.add_all("g5", &xgm.t_matmul(&dya));
+                let dxgm = dya.matmul_t(g5);
+                let dmid = xg1.t_matmul(&dxgm);
+                let cc = chunk_mat(g4, matrix, r, r);
+                sink.add_chunk("g2", layer * r * r, dmid.matmul_t(bc).data());
+                sink.add_chunk(
+                    "g3",
+                    self.task * r * r,
+                    ca.t_matmul(&dmid).matmul_t(&cc).data(),
+                );
+                sink.add_chunk("g4", matrix * r * r, ab.t_matmul(&dmid).data());
+                let dxg1 = dxgm.matmul_t(mid);
+                sink.add_all("g1", &x.t_matmul(&dxg1));
+                dx.axpy(1.0, &dxg1.matmul_t(g1));
+            }
+            (
+                Some(AdapterKind::MetaTt(MetaTtKind::FiveD)),
+                AdapterCache::Tt5 { xg1, xlm, lm, xh },
+            ) => {
+                let [g1, g2, g3, g4, g5] = self.p5();
+                let dh = d / self.heads;
+                let n = dy.shape()[0];
+                let mut dxlm = Tensor::zeros(&[n, r]);
+                for hh in 0..self.heads {
+                    let dyh = block(&dya, 0, n, hh * dh, dh);
+                    sink.add_all("g5", &xh[hh].t_matmul(&dyh));
+                    let dxh = dyh.matmul_t(g5);
+                    sink.add_chunk("g4", hh * r * r, xlm.t_matmul(&dxh).data());
+                    let g4h = chunk_mat(g4, hh, r, r);
+                    dxlm.axpy(1.0, &dxh.matmul_t(&g4h));
+                }
+                let dlm = xg1.t_matmul(&dxlm);
+                let g2l = chunk_mat(g2, layer, r, r);
+                let g3m = chunk_mat(g3, matrix, r, r);
+                sink.add_chunk("g2", layer * r * r, dlm.matmul_t(&g3m).data());
+                sink.add_chunk("g3", matrix * r * r, g2l.t_matmul(&dlm).data());
+                let dxg1 = dxlm.matmul_t(lm);
+                sink.add_all("g1", &x.t_matmul(&dxg1));
+                dx.axpy(1.0, &dxg1.matmul_t(g1));
+            }
+            (Some(AdapterKind::LoRa), AdapterCache::Lora { xa }) => {
+                let (pa, pb) = (&self.params[0], &self.params[1]);
+                let idx = layer * self.matrices + matrix;
+                let am = chunk_mat(pa, idx, d, r);
+                let bm = chunk_mat(pb, idx, r, d);
+                sink.add_chunk("lora_b", idx * r * d, xa.t_matmul(&dya).data());
+                let dxa = dya.matmul_t(&bm);
+                sink.add_chunk("lora_a", idx * d * r, x.t_matmul(&dxa).data());
+                dx.axpy(1.0, &dxa.matmul_t(&am));
+            }
+            (Some(AdapterKind::VeRa), AdapterCache::Vera { xa, tb }) => {
+                let (fa, fb) = self.vera_frozen.as_ref().expect("vera frozen");
+                let idx = layer * self.matrices + matrix;
+                let dvec = &self.params[0].data()[idx * r..(idx + 1) * r];
+                let bvec = &self.params[1].data()[idx * d..(idx + 1) * d];
+                sink.add_chunk("vera_b", idx * d, &colsum_mul(&dya, tb));
+                let dtb = mul_cols(&dya, bvec);
+                let dt = dtb.matmul_t(fb);
+                sink.add_chunk("vera_d", idx * r, &colsum_mul(&dt, xa));
+                let dxa = mul_cols(&dt, dvec);
+                dx.axpy(1.0, &dxa.matmul_t(fa));
+            }
+            (Some(AdapterKind::LoTr), AdapterCache::Lotr { xu, xus, sm }) => {
+                let (u, _sall, vmat) = (&self.params[0], &self.params[1], &self.params[2]);
+                let idx = layer * self.matrices + matrix;
+                sink.add_all("lotr_v", &xus.t_matmul(&dya));
+                let dxus = dya.matmul_t(vmat);
+                sink.add_chunk("lotr_s", idx * r * r, xu.t_matmul(&dxus).data());
+                let dxu = dxus.matmul_t(sm);
+                sink.add_all("lotr_u", &x.t_matmul(&dxu));
+                dx.axpy(1.0, &dxu.matmul_t(u));
+            }
+            (kind, _) => panic!("adapter cache mismatch for {kind:?}"),
+        }
+    }
+
+    fn p4(&self) -> [&Tensor; 4] {
+        [&self.params[0], &self.params[1], &self.params[2], &self.params[3]]
+    }
+
+    fn p5(&self) -> [&Tensor; 5] {
+        [
+            &self.params[0],
+            &self.params[1],
+            &self.params[2],
+            &self.params[3],
+            &self.params[4],
+        ]
+    }
+}
+
+enum AdapterCache {
+    None,
+    Tt4 { xg1: Tensor, xgm: Tensor, mid: Tensor },
+    Tt4p1 { xg1: Tensor, xgm: Tensor, ca: Tensor, ab: Tensor, bc: Tensor, mid: Tensor },
+    Tt5 { xg1: Tensor, xlm: Tensor, lm: Tensor, xh: Vec<Tensor> },
+    Lora { xa: Tensor },
+    Vera { xa: Tensor, tb: Tensor },
+    Lotr { xu: Tensor, xus: Tensor, sm: Tensor },
+}
+
+// ---------------------------------------------------------------------------
+// Encoder forward.
+// ---------------------------------------------------------------------------
+
+struct LayerCache {
+    x_in: Tensor,
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    ad_q: AdapterCache,
+    ad_v: AdapterCache,
+    /// Attention probabilities per (batch · head), each (s × s).
+    probs: Vec<Tensor>,
+    ctx: Tensor,
+    ln1: LnCache,
+    x_mid: Tensor,
+    u: Tensor,
+    g: Tensor,
+    ln2: LnCache,
+}
+
+struct EncoderCache {
+    emb_ln: LnCache,
+    layers: Vec<LayerCache>,
+}
+
+/// Run the encoder; returns final hidden states (n × d) plus the cache the
+/// backward pass consumes.
+fn encoder_forward(
+    dims: &Dims,
+    w: &Weights,
+    adapter: &AdapterCtx,
+    tokens: &[i32],
+) -> (Tensor, EncoderCache) {
+    let Dims { b, s, n, d, h, dh, f, l, .. } = *dims;
+    // Embeddings: token + learned position.
+    let tok_emb = w.get("tok_emb");
+    let pos_emb = w.get("pos_emb");
+    let mut x_emb = Tensor::zeros(&[n, d]);
+    for i in 0..n {
+        let tok = tokens[i] as usize;
+        let pos = i % s;
+        let te = &tok_emb.data()[tok * d..(tok + 1) * d];
+        let pe = &pos_emb.data()[pos * d..(pos + 1) * d];
+        for j in 0..d {
+            x_emb.data_mut()[i * d + j] = te[j] + pe[j];
+        }
+    }
+    let (x0, emb_ln) = layer_norm(&x_emb, w.vec("emb_ln_g"), w.vec("emb_ln_b"));
+
+    let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+    let mut x = x0;
+    let mut layers = Vec::with_capacity(l);
+    for layer in 0..l {
+        let x_in = x;
+        // Projections with adapters on Q (m=0) and V (m=1).
+        let wq = chunk_mat(w.get("wq"), layer, d, d);
+        let wk = chunk_mat(w.get("wk"), layer, d, d);
+        let wv = chunk_mat(w.get("wv"), layer, d, d);
+        let (dq, ad_q) = adapter.apply(&x_in, layer, 0);
+        let (dv, ad_v) = adapter.apply(&x_in, layer, 1);
+        let mut q = x_in.matmul(&wq);
+        add_row_bias(&mut q, w.row("bq", layer, d));
+        q.axpy(1.0, &dq);
+        let mut k = x_in.matmul(&wk);
+        add_row_bias(&mut k, w.row("bk", layer, d));
+        let mut v = x_in.matmul(&wv);
+        add_row_bias(&mut v, w.row("bv", layer, d));
+        v.axpy(1.0, &dv);
+
+        // Pad-masked multi-head attention.
+        let mut ctx = Tensor::zeros(&[n, d]);
+        let mut probs_all = Vec::with_capacity(b * h);
+        for bi in 0..b {
+            for hi in 0..h {
+                let qh = block(&q, bi * s, s, hi * dh, dh);
+                let kh = block(&k, bi * s, s, hi * dh, dh);
+                let vh = block(&v, bi * s, s, hi * dh, dh);
+                let mut scores = qh.matmul_t(&kh).scale(inv_sqrt_dh);
+                for key in 0..s {
+                    if tokens[bi * s + key] == PAD_ID {
+                        for query in 0..s {
+                            let val = scores.at(query, key) + MASK_NEG;
+                            scores.set(query, key, val);
+                        }
+                    }
+                }
+                // Row-wise stable softmax.
+                let mut probs = scores;
+                for qi in 0..s {
+                    let row = &mut probs.data_mut()[qi * s..(qi + 1) * s];
+                    let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                    let mut z = 0.0f32;
+                    for v in row.iter_mut() {
+                        *v = (*v - mx).exp();
+                        z += *v;
+                    }
+                    for v in row.iter_mut() {
+                        *v /= z;
+                    }
+                }
+                let ctx_h = probs.matmul(&vh);
+                add_block(&mut ctx, bi * s, hi * dh, &ctx_h);
+                probs_all.push(probs);
+            }
+        }
+        let wo = chunk_mat(w.get("wo"), layer, d, d);
+        let mut attn_out = ctx.matmul(&wo);
+        add_row_bias(&mut attn_out, w.row("bo", layer, d));
+        let (x_mid, ln1) = layer_norm(
+            &x_in.add(&attn_out),
+            w.row("ln1_g", layer, d),
+            w.row("ln1_b", layer, d),
+        );
+
+        // GELU MLP.
+        let w1 = chunk_mat(w.get("w1"), layer, d, f);
+        let w2 = chunk_mat(w.get("w2"), layer, f, d);
+        let mut u = x_mid.matmul(&w1);
+        add_row_bias(&mut u, w.row("b1", layer, f));
+        let mut g = u.clone();
+        for v in g.data_mut() {
+            *v = gelu(*v);
+        }
+        let mut m_out = g.matmul(&w2);
+        add_row_bias(&mut m_out, w.row("b2", layer, d));
+        let (x_out, ln2) = layer_norm(
+            &x_mid.add(&m_out),
+            w.row("ln2_g", layer, d),
+            w.row("ln2_b", layer, d),
+        );
+
+        layers.push(LayerCache {
+            x_in,
+            q,
+            k,
+            v,
+            ad_q,
+            ad_v,
+            probs: probs_all,
+            ctx,
+            ln1,
+            x_mid,
+            u,
+            g,
+            ln2,
+        });
+        x = x_out;
+    }
+    (x, EncoderCache { emb_ln, layers })
+}
+
+// ---------------------------------------------------------------------------
+// Encoder backward.
+// ---------------------------------------------------------------------------
+
+/// Reverse pass through the encoder. `d_hidden` is ∂L/∂(final hidden states).
+/// Adapter grads always flow into `sink`; encoder-weight grads only when
+/// `train_encoder` (full FT / pretraining).
+fn encoder_backward(
+    dims: &Dims,
+    w: &Weights,
+    adapter: &AdapterCtx,
+    tokens: &[i32],
+    cache: &EncoderCache,
+    d_hidden: Tensor,
+    sink: &mut GradSink,
+    train_encoder: bool,
+) {
+    let Dims { b, s, n, d, h, dh, f, l, .. } = *dims;
+    let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+    let mut dx = d_hidden; // gradient w.r.t. the current layer's output
+    for layer in (0..l).rev() {
+        let lc = &cache.layers[layer];
+
+        // --- LN2 over (x_mid + m_out).
+        let mut dg_buf = vec![0.0f32; d];
+        let mut db_buf = vec![0.0f32; d];
+        let d_res2 = layer_norm_backward(
+            &dx,
+            &lc.ln2,
+            w.row("ln2_g", layer, d),
+            train_encoder.then_some((&mut dg_buf[..], &mut db_buf[..])),
+        );
+        if train_encoder {
+            sink.add_chunk("ln2_g", layer * d, &dg_buf);
+            sink.add_chunk("ln2_b", layer * d, &db_buf);
+        }
+
+        // --- MLP: m_out = gelu(x_mid·w1 + b1)·w2 + b2.
+        let w1 = chunk_mat(w.get("w1"), layer, d, f);
+        let w2 = chunk_mat(w.get("w2"), layer, f, d);
+        let d_mout = &d_res2; // residual: d(m_out) = d_res2, d(x_mid) += d_res2
+        if train_encoder {
+            sink.add_chunk("w2", layer * f * d, lc.g.t_matmul(d_mout).data());
+            sink.add_chunk("b2", layer * d, &colsum(d_mout));
+        }
+        let mut dgelu = d_mout.matmul_t(&w2); // (n, f)
+        for (dv, &uv) in dgelu.data_mut().iter_mut().zip(lc.u.data()) {
+            *dv *= gelu_prime(uv);
+        }
+        if train_encoder {
+            sink.add_chunk("w1", layer * d * f, lc.x_mid.t_matmul(&dgelu).data());
+            sink.add_chunk("b1", layer * f, &colsum(&dgelu));
+        }
+        let mut d_xmid = d_res2.clone();
+        d_xmid.axpy(1.0, &dgelu.matmul_t(&w1));
+
+        // --- LN1 over (x_in + attn_out).
+        let mut dg_buf = vec![0.0f32; d];
+        let mut db_buf = vec![0.0f32; d];
+        let d_res1 = layer_norm_backward(
+            &d_xmid,
+            &lc.ln1,
+            w.row("ln1_g", layer, d),
+            train_encoder.then_some((&mut dg_buf[..], &mut db_buf[..])),
+        );
+        if train_encoder {
+            sink.add_chunk("ln1_g", layer * d, &dg_buf);
+            sink.add_chunk("ln1_b", layer * d, &db_buf);
+        }
+
+        // --- Output projection: attn_out = ctx·wo + bo.
+        let wo = chunk_mat(w.get("wo"), layer, d, d);
+        if train_encoder {
+            sink.add_chunk("wo", layer * d * d, lc.ctx.t_matmul(&d_res1).data());
+            sink.add_chunk("bo", layer * d, &colsum(&d_res1));
+        }
+        let d_ctx = d_res1.matmul_t(&wo);
+
+        // --- Attention backward per (batch, head).
+        let mut dq = Tensor::zeros(&[n, d]);
+        let mut dk = Tensor::zeros(&[n, d]);
+        let mut dv = Tensor::zeros(&[n, d]);
+        for bi in 0..b {
+            for hi in 0..h {
+                let probs = &lc.probs[bi * h + hi];
+                let qh = block(&lc.q, bi * s, s, hi * dh, dh);
+                let kh = block(&lc.k, bi * s, s, hi * dh, dh);
+                let vh = block(&lc.v, bi * s, s, hi * dh, dh);
+                let d_ctx_h = block(&d_ctx, bi * s, s, hi * dh, dh);
+                let d_probs = d_ctx_h.matmul_t(&vh); // (s, s)
+                let d_vh = probs.t_matmul(&d_ctx_h);
+                // Softmax backward, row-wise.
+                let mut d_scores = Tensor::zeros(&[s, s]);
+                for qi in 0..s {
+                    let pr = &probs.data()[qi * s..(qi + 1) * s];
+                    let dp = &d_probs.data()[qi * s..(qi + 1) * s];
+                    let dot: f32 = pr.iter().zip(dp).map(|(&p, &g)| p * g).sum();
+                    for key in 0..s {
+                        d_scores.data_mut()[qi * s + key] = pr[key] * (dp[key] - dot);
+                    }
+                }
+                let d_qh = d_scores.matmul(&kh).scale(inv_sqrt_dh);
+                let d_kh = d_scores.t_matmul(&qh).scale(inv_sqrt_dh);
+                add_block(&mut dq, bi * s, hi * dh, &d_qh);
+                add_block(&mut dk, bi * s, hi * dh, &d_kh);
+                add_block(&mut dv, bi * s, hi * dh, &d_vh);
+            }
+        }
+
+        // --- Projections + adapters back to the layer input.
+        let wq = chunk_mat(w.get("wq"), layer, d, d);
+        let wk = chunk_mat(w.get("wk"), layer, d, d);
+        let wv = chunk_mat(w.get("wv"), layer, d, d);
+        let mut d_xin = d_res1; // residual branch
+        d_xin.axpy(1.0, &dq.matmul_t(&wq));
+        d_xin.axpy(1.0, &dk.matmul_t(&wk));
+        d_xin.axpy(1.0, &dv.matmul_t(&wv));
+        if train_encoder {
+            sink.add_chunk("wq", layer * d * d, lc.x_in.t_matmul(&dq).data());
+            sink.add_chunk("bq", layer * d, &colsum(&dq));
+            sink.add_chunk("wk", layer * d * d, lc.x_in.t_matmul(&dk).data());
+            sink.add_chunk("bk", layer * d, &colsum(&dk));
+            sink.add_chunk("wv", layer * d * d, lc.x_in.t_matmul(&dv).data());
+            sink.add_chunk("bv", layer * d, &colsum(&dv));
+        }
+        adapter.backward(&lc.x_in, layer, 0, &lc.ad_q, &dq, &mut d_xin, sink);
+        adapter.backward(&lc.x_in, layer, 1, &lc.ad_v, &dv, &mut d_xin, sink);
+        dx = d_xin;
+    }
+
+    // --- Embedding LN + scatter.
+    let mut dg_buf = vec![0.0f32; d];
+    let mut db_buf = vec![0.0f32; d];
+    let d_emb = layer_norm_backward(
+        &dx,
+        &cache.emb_ln,
+        w.vec("emb_ln_g"),
+        train_encoder.then_some((&mut dg_buf[..], &mut db_buf[..])),
+    );
+    if train_encoder {
+        sink.add_chunk("emb_ln_g", 0, &dg_buf);
+        sink.add_chunk("emb_ln_b", 0, &db_buf);
+        for i in 0..n {
+            let tok = tokens[i] as usize;
+            let pos = i % s;
+            let row = &d_emb.data()[i * d..(i + 1) * d];
+            sink.add_chunk("tok_emb", tok * d, row);
+            sink.add_chunk("pos_emb", pos * d, row);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task head + losses.
+// ---------------------------------------------------------------------------
+
+/// CLS-pooled logits through the frozen per-task head.
+fn head_logits(dims: &Dims, w: &Weights, hidden: &Tensor, task: usize) -> Tensor {
+    let Dims { b, s, d, classes, .. } = *dims;
+    let cls_w = chunk_mat(w.get("cls_w"), task, d, classes);
+    let cls_b = &w.get("cls_b").data()[task * classes..(task + 1) * classes];
+    let mut pooled = Tensor::zeros(&[b, d]);
+    for bi in 0..b {
+        let src = &hidden.data()[bi * s * d..bi * s * d + d]; // CLS row
+        pooled.data_mut()[bi * d..(bi + 1) * d].copy_from_slice(src);
+    }
+    let mut logits = pooled.matmul(&cls_w);
+    add_row_bias(&mut logits, cls_b);
+    logits
+}
+
+/// Weighted task loss + ∂loss/∂logits (CE for classification, MSE on
+/// score/5 for the regression analogue).
+fn task_loss_grad(
+    logits: &Tensor,
+    batch: &Batch,
+    classes: usize,
+) -> (f32, Tensor) {
+    let b = batch.batch_size;
+    let wsum: f32 = batch.weights.iter().sum::<f32>().max(1e-6);
+    let mut dlogits = Tensor::zeros(&[b, classes]);
+    let mut loss = 0.0f64;
+    if classes == 1 {
+        for i in 0..b {
+            let pred = logits.at(i, 0);
+            let target = batch.scores[i] / 5.0;
+            let wgt = batch.weights[i];
+            loss += ((pred - target) * (pred - target) * wgt) as f64;
+            dlogits.set(i, 0, 2.0 * (pred - target) * wgt / wsum);
+        }
+    } else {
+        for i in 0..b {
+            let row = &logits.data()[i * classes..(i + 1) * classes];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let z: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+            let lz = z.ln() + mx;
+            let label = batch.labels[i] as usize;
+            let wgt = batch.weights[i];
+            loss += ((lz - row[label]) * wgt) as f64;
+            for c in 0..classes {
+                let p = (row[c] - lz).exp();
+                let ind = if c == label { 1.0 } else { 0.0 };
+                dlogits.set(i, c, (p - ind) * wgt / wsum);
+            }
+        }
+    }
+    ((loss / wsum as f64) as f32, dlogits)
+}
+
+// ---------------------------------------------------------------------------
+// Public step entry points (used by the reference backend).
+// ---------------------------------------------------------------------------
+
+fn validate_batch(entry: &ArtifactEntry, batch_size: usize, seq_len: usize) -> Result<()> {
+    if batch_size != entry.spec.batch || seq_len != entry.spec.seq {
+        bail!(
+            "batch shape ({batch_size}, {seq_len}) does not match spec {} ({}, {})",
+            entry.spec.stem(),
+            entry.spec.batch,
+            entry.spec.seq
+        );
+    }
+    Ok(())
+}
+
+/// One fwd+bwd fine-tuning step. Returns (loss, grads in trainable order).
+pub fn train_step(
+    entry: &ArtifactEntry,
+    frozen: &HashMap<String, Tensor>,
+    trainable: &[Tensor],
+    batch: &Batch,
+    task_id: i32,
+    alpha: f32,
+) -> Result<(f32, Vec<Tensor>)> {
+    validate_batch(entry, batch.batch_size, batch.seq_len)?;
+    let dims = dims_of(entry)?;
+    let task = task_id as usize;
+    let w = Weights::build(entry, frozen, trainable)?;
+    let adapter = AdapterCtx::new(entry, trainable, alpha, task)?;
+    let train_encoder = entry.spec.adapter == "full";
+
+    let (hidden, cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens);
+    let logits = head_logits(&dims, &w, &hidden, task);
+    let (loss, dlogits) = task_loss_grad(&logits, batch, dims.classes);
+
+    // Head is frozen: only ∂/∂pooled flows back, scattered into CLS rows.
+    let cls_w = chunk_mat(w.get("cls_w"), task, dims.d, dims.classes);
+    let d_pooled = dlogits.matmul_t(&cls_w); // (b, d)
+    let mut d_hidden = Tensor::zeros(&[dims.n, dims.d]);
+    for bi in 0..dims.b {
+        let dst = bi * dims.s * dims.d;
+        let src = &d_pooled.data()[bi * dims.d..(bi + 1) * dims.d];
+        d_hidden.data_mut()[dst..dst + dims.d].copy_from_slice(src);
+    }
+
+    let mut sink = GradSink::new(entry.trainable_inputs());
+    encoder_backward(
+        &dims,
+        &w,
+        &adapter,
+        &batch.tokens,
+        &cache,
+        d_hidden,
+        &mut sink,
+        train_encoder,
+    );
+    Ok((loss, sink.into_vec()))
+}
+
+/// One fwd (eval) step. Returns logits `[batch, classes]`.
+pub fn eval_step(
+    entry: &ArtifactEntry,
+    frozen: &HashMap<String, Tensor>,
+    trainable: &[Tensor],
+    batch: &Batch,
+    task_id: i32,
+    alpha: f32,
+) -> Result<Tensor> {
+    validate_batch(entry, batch.batch_size, batch.seq_len)?;
+    let dims = dims_of(entry)?;
+    let task = task_id as usize;
+    let w = Weights::build(entry, frozen, trainable)?;
+    let adapter = AdapterCtx::new(entry, trainable, alpha, task)?;
+    let (hidden, _cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens);
+    Ok(head_logits(&dims, &w, &hidden, task))
+}
+
+/// One MLM pretraining step over all encoder weights (weight-tied output
+/// head: logits = h · tok_embᵀ). Returns (loss, grads).
+pub fn pretrain_step(
+    entry: &ArtifactEntry,
+    trainable: &[Tensor],
+    batch: &MlmBatch,
+) -> Result<(f32, Vec<Tensor>)> {
+    validate_batch(entry, batch.batch_size, batch.seq_len)?;
+    let dims = dims_of(entry)?;
+    let empty = HashMap::new();
+    let w = Weights::build(entry, &empty, trainable)?;
+    let adapter = AdapterCtx {
+        kind: None,
+        params: trainable,
+        alpha: 0.0,
+        task: 0,
+        rank: 0,
+        heads: dims.h,
+        matrices: 2,
+        d: dims.d,
+        vera_frozen: None,
+    };
+    let (hidden, cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens);
+
+    // Weight-tied MLM head over every position.
+    let tok_emb = w.get("tok_emb"); // (v, d)
+    let logits = hidden.matmul_t(tok_emb); // (n, v)
+    let wsum: f32 = batch.weights.iter().sum::<f32>().max(1e-6);
+    let (n, v) = (dims.n, dims.v);
+    let mut loss = 0.0f64;
+    let mut dlogits = Tensor::zeros(&[n, v]);
+    for i in 0..n {
+        let wgt = batch.weights[i];
+        let row = &logits.data()[i * v..(i + 1) * v];
+        let target = batch.targets[i] as usize;
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let z: f32 = row.iter().map(|&x| (x - mx).exp()).sum();
+        let lz = z.ln() + mx;
+        if wgt != 0.0 {
+            loss += ((lz - row[target]) * wgt) as f64;
+        }
+        let scale = wgt / wsum;
+        if scale != 0.0 {
+            let drow = &mut dlogits.data_mut()[i * v..(i + 1) * v];
+            for c in 0..v {
+                let p = (row[c] - lz).exp();
+                drow[c] = p * scale;
+            }
+            drow[target] -= scale;
+        }
+    }
+    let loss = (loss / wsum as f64) as f32;
+
+    let mut sink = GradSink::new(entry.trainable_inputs());
+    // Head: dh = dlogits · tok_emb ; d tok_emb += dlogitsᵀ · hidden.
+    let d_hidden = dlogits.matmul(tok_emb);
+    sink.add_all("tok_emb", &dlogits.t_matmul(&hidden));
+    encoder_backward(
+        &dims,
+        &w,
+        &adapter,
+        &batch.tokens,
+        &cache,
+        d_hidden,
+        &mut sink,
+        true,
+    );
+    Ok((loss, sink.into_vec()))
+}
+
+/// Raw positional apply (serving hot path): `y = x·g1·mid·g4` (TT families)
+/// or `y = x·a·b` (LoRA), α = 1 as baked into the AOT apply artifacts.
+pub fn apply_step(entry: &ArtifactEntry, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    if inputs.len() != entry.inputs.len() {
+        bail!(
+            "apply expects {} inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (t, io) in inputs.iter().zip(&entry.inputs) {
+        if t.shape() != &io.shape[..] {
+            bail!(
+                "apply input '{}': shape {:?}, spec wants {:?}",
+                io.name,
+                t.shape(),
+                io.shape
+            );
+        }
+    }
+    let y = if entry.spec.adapter == "lora" {
+        inputs[0].matmul(&inputs[1]).matmul(&inputs[2])
+    } else {
+        inputs[0].matmul(&inputs[1]).matmul(&inputs[2]).matmul(&inputs[3])
+    };
+    Ok(vec![y])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn gelu_matches_finite_difference() {
+        let eps = 1e-3f32;
+        for &u in &[-3.0f32, -1.0, -0.1, 0.0, 0.5, 2.0] {
+            let fd = (gelu(u + eps) - gelu(u - eps)) / (2.0 * eps);
+            let an = gelu_prime(u);
+            assert!((fd - an).abs() < 1e-3, "u={u}: fd {fd} vs {an}");
+        }
+        // Known values: gelu(0) = 0, gelu(∞) → identity.
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn layer_norm_backward_matches_finite_difference() {
+        let mut rng = Pcg64::new(9);
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let gamma: Vec<f32> = (0..8).map(|j| 1.0 + 0.1 * j as f32).collect();
+        let beta = vec![0.05f32; 8];
+        let dy = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let (_, cache) = layer_norm(&x, &gamma, &beta);
+        let dx = layer_norm_backward(&dy, &cache, &gamma, None);
+        // Scalar objective: L = Σ y ∘ dy; check a handful of coordinates.
+        let loss = |xp: &Tensor| -> f32 {
+            let (y, _) = layer_norm(xp, &gamma, &beta);
+            y.data().iter().zip(dy.data()).map(|(&a, &b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        for &(i, j) in &[(0usize, 0usize), (1, 3), (2, 7)] {
+            let mut xp = x.clone();
+            xp.data_mut()[i * 8 + j] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i * 8 + j] -= eps;
+            let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps);
+            let an = dx.data()[i * 8 + j];
+            assert!((fd - an).abs() < 2e-2, "({i},{j}): fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn block_helpers_roundtrip() {
+        let mut rng = Pcg64::new(2);
+        let m = Tensor::randn(&[6, 10], 1.0, &mut rng);
+        let blk = block(&m, 2, 3, 4, 5);
+        assert_eq!(blk.shape(), &[3, 5]);
+        assert_eq!(blk.at(0, 0), m.at(2, 4));
+        assert_eq!(blk.at(2, 4), m.at(4, 8));
+        let mut dst = Tensor::zeros(&[6, 10]);
+        add_block(&mut dst, 2, 4, &blk);
+        assert_eq!(block(&dst, 2, 3, 4, 5), blk);
+        assert_eq!(dst.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn colsum_and_mul_cols() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(colsum(&t), vec![5., 7., 9.]);
+        let m = mul_cols(&t, &[2.0, 0.0, 1.0]);
+        assert_eq!(m.data(), &[2., 0., 3., 8., 0., 6.]);
+        assert_close(
+            &colsum_mul(&t, &t),
+            &[17.0, 29.0, 45.0],
+            1e-6,
+            1e-6,
+            "colsum_mul",
+        );
+    }
+}

@@ -1,6 +1,8 @@
 //! PJRT execution: client wrapper, executable cache, step runners.
 //!
-//! The coordinator's hot loop lives here. Design decisions (DESIGN.md §7):
+//! Compiled only with `--features pjrt`; implements the [`Backend`] /
+//! [`Step`] seam over AOT-lowered HLO artifacts. Design decisions
+//! (DESIGN.md §7):
 //!
 //! * **Executable cache keyed by [`ArtifactSpec`]** — the DMRG scheduler
 //!   changes TT ranks mid-run, which changes HLO shapes; each rank's
@@ -11,7 +13,9 @@
 //! * Outputs come back as one tuple literal, decomposed per the manifest's
 //!   output layout.
 
-use super::registry::{ArtifactEntry, ArtifactSpec, Manifest};
+use super::backend::{Backend, BackendKind, Step};
+use super::registry::{ArtifactEntry, ArtifactSpec, Manifest, StepKind};
+use crate::config::ModelPreset;
 use crate::data::{Batch, MlmBatch};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
@@ -41,10 +45,6 @@ impl Runtime {
         Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
     /// Compile (or fetch cached) the executable for `spec`.
     pub fn executable(
         &self,
@@ -66,11 +66,6 @@ impl Runtime {
         );
         self.cache.lock().unwrap().insert(spec.clone(), exe.clone());
         Ok(exe)
-    }
-
-    /// Number of compiled executables currently cached.
-    pub fn cached_executables(&self) -> usize {
-        self.cache.lock().unwrap().len()
     }
 
     /// Upload an f32 tensor.
@@ -205,9 +200,15 @@ impl<'rt> StepRunner<'rt> {
         let result = self.exe.execute_b(&ordered)?;
         decompose_outputs(&self.entry, result)
     }
+}
+
+impl Step for StepRunner<'_> {
+    fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
 
     /// One fwd+bwd step. Returns (loss, grads in trainable order).
-    pub fn run_train(
+    fn run_train(
         &self,
         trainable: &[Tensor],
         batch: &Batch,
@@ -228,7 +229,7 @@ impl<'rt> StepRunner<'rt> {
     }
 
     /// One fwd (eval) step. Returns logits `[batch, classes]`.
-    pub fn run_eval(
+    fn run_eval(
         &self,
         trainable: &[Tensor],
         batch: &Batch,
@@ -245,7 +246,7 @@ impl<'rt> StepRunner<'rt> {
 
     /// One MLM pretraining step (no frozen inputs; `trainable` is the whole
     /// encoder). Returns (loss, grads).
-    pub fn run_pretrain(
+    fn run_pretrain(
         &self,
         trainable: &[Tensor],
         batch: &MlmBatch,
@@ -263,11 +264,79 @@ impl<'rt> StepRunner<'rt> {
     }
 
     /// Raw positional execution (used by the apply/serve micro-bench).
-    pub fn run_raw(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    fn run_raw(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let mut args = Vec::with_capacity(inputs.len());
         for t in inputs {
             args.push(self.rt.upload(t)?);
         }
         self.execute(args)
+    }
+}
+
+impl Backend for Runtime {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn describe(&self) -> String {
+        let mut by_step = std::collections::BTreeMap::new();
+        for spec in self.manifest.specs() {
+            *by_step.entry(spec.step.name()).or_insert(0usize) += 1;
+        }
+        let steps: Vec<String> =
+            by_step.iter().map(|(k, n)| format!("  {k:>9}: {n}")).collect();
+        format!(
+            "backend: pjrt — platform {}\nartifacts: {} entries in {}\n{}",
+            Backend::platform(self),
+            self.manifest.len(),
+            self.manifest.dir.display(),
+            steps.join("\n")
+        )
+    }
+
+    fn entry(&self, spec: &ArtifactSpec) -> Result<ArtifactEntry> {
+        self.manifest
+            .require(spec)
+            .map(|e| e.clone())
+            .map_err(|e| anyhow!(e))
+    }
+
+    fn bind<'a>(
+        &'a self,
+        spec: &ArtifactSpec,
+        frozen: &std::sync::Arc<HashMap<String, Tensor>>,
+    ) -> Result<Box<dyn Step + 'a>> {
+        // The PJRT runner uploads the frozen set to device buffers, so only
+        // the shared host map is read here — no host copy either way.
+        Ok(Box::new(StepRunner::bind(self, spec, frozen)?))
+    }
+
+    fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    fn pretrain_spec(&self, preset: ModelPreset) -> Result<ArtifactSpec> {
+        self.manifest
+            .specs()
+            .find(|s| s.step == StepKind::Pretrain && s.model == preset.name())
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no pretrain artifact for '{}' in manifest — run `make artifacts`",
+                    preset.name()
+                )
+            })
+    }
+
+    fn apply_spec(&self, adapter: &str, rank: usize) -> Result<ArtifactSpec> {
+        self.manifest
+            .specs()
+            .find(|s| s.step == StepKind::Apply && s.adapter == adapter && s.rank == rank)
+            .cloned()
+            .ok_or_else(|| anyhow!("no apply artifact for {adapter} at rank {rank}"))
     }
 }

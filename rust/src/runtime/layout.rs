@@ -1,0 +1,273 @@
+//! Spec-derived I/O layouts: the rust mirror of `python/compile/model.py`.
+//!
+//! The AOT pipeline records each artifact's exact input/output layout in
+//! `artifacts/manifest.json`. That layout is *derivable* from the
+//! [`ArtifactSpec`] alone — `frozen_specs` / `adapter_param_specs` /
+//! `_input_specs` in model.py are pure functions of (preset, adapter, rank,
+//! classes, tasks, batch, seq). This module re-derives it in rust so the
+//! pure-rust reference backend (and any test) can synthesize a full
+//! [`ArtifactEntry`] without a manifest, Python, or artifacts on disk.
+//! model.py remains the source of truth; `layout_matches_adapter_param_specs`
+//! below pins the rust mirror against `adapters::AdapterSpec::param_specs`,
+//! which is itself pinned against model.py by the python test suite.
+
+use super::registry::{ArtifactEntry, ArtifactSpec, IoSpec, StepKind};
+use crate::adapters::{AdapterKind, AdapterSpec};
+use crate::config::ModelPreset;
+use std::path::PathBuf;
+
+fn io(name: &str, shape: &[usize], dtype: &str) -> IoSpec {
+    IoSpec { name: name.to_string(), shape: shape.to_vec(), dtype: dtype.to_string() }
+}
+
+/// Ordered frozen-weight layout: the 20 encoder arrays + per-task classifier
+/// heads (mirror of model.py `frozen_specs`).
+pub fn frozen_specs(preset: ModelPreset, tasks: usize, classes: usize) -> Vec<IoSpec> {
+    let dims = preset.dims(tasks.max(1));
+    let (d, l, f) = (dims.hidden, dims.layers, dims.ffn);
+    let (v, s) = (dims.vocab, dims.max_seq);
+    vec![
+        io("tok_emb", &[v, d], "f32"),
+        io("pos_emb", &[s, d], "f32"),
+        io("emb_ln_g", &[d], "f32"),
+        io("emb_ln_b", &[d], "f32"),
+        io("wq", &[l, d, d], "f32"),
+        io("bq", &[l, d], "f32"),
+        io("wk", &[l, d, d], "f32"),
+        io("bk", &[l, d], "f32"),
+        io("wv", &[l, d, d], "f32"),
+        io("bv", &[l, d], "f32"),
+        io("wo", &[l, d, d], "f32"),
+        io("bo", &[l, d], "f32"),
+        io("ln1_g", &[l, d], "f32"),
+        io("ln1_b", &[l, d], "f32"),
+        io("w1", &[l, d, f], "f32"),
+        io("b1", &[l, f], "f32"),
+        io("w2", &[l, f, d], "f32"),
+        io("b2", &[l, d], "f32"),
+        io("ln2_g", &[l, d], "f32"),
+        io("ln2_b", &[l, d], "f32"),
+        io("cls_w", &[tasks, d, classes], "f32"),
+        io("cls_b", &[tasks, classes], "f32"),
+    ]
+}
+
+/// The 20 encoder arrays (frozen set minus the classifier heads) — the
+/// trainable layout for pretraining and full fine-tuning.
+pub fn encoder_specs(preset: ModelPreset) -> Vec<IoSpec> {
+    let mut all = frozen_specs(preset, 1, 1);
+    all.truncate(all.len() - 2);
+    all
+}
+
+/// Ordered trainable layout for `spec` (adapter params, or the encoder for
+/// full fine-tuning / pretraining).
+pub fn trainable_specs(spec: &ArtifactSpec) -> Result<Vec<IoSpec>, String> {
+    let preset = ModelPreset::from_name(&spec.model)?;
+    if spec.step == StepKind::Pretrain || spec.adapter == "full" {
+        // Pretraining and full fine-tuning train the encoder itself.
+        return Ok(encoder_specs(preset));
+    }
+    if spec.adapter == "none" {
+        // "none" marks the adapter-free pretrain graphs; on a fine-tuning
+        // step it would freeze AND train the same arrays (a silent no-op).
+        return Err(format!(
+            "adapter 'none' is only valid for pretrain specs (got {})",
+            spec.stem()
+        ));
+    }
+    let kind = AdapterKind::from_name(&spec.adapter)?;
+    let dims = preset.dims(spec.tasks.max(1));
+    let aspec = AdapterSpec::new(kind, spec.rank, 1.0, dims);
+    Ok(aspec
+        .param_specs()
+        .into_iter()
+        .map(|p| io(&p.name, &p.shape, "f32"))
+        .collect())
+}
+
+/// Synthesize the full [`ArtifactEntry`] (ordered inputs, outputs, frozen /
+/// trainable partition) for `spec`, exactly as aot.py would have recorded it
+/// in the manifest. This is what lets the reference backend run without
+/// `make artifacts`.
+pub fn synthesize_entry(spec: &ArtifactSpec) -> Result<ArtifactEntry, String> {
+    let preset = ModelPreset::from_name(&spec.model)?;
+    let dims = preset.dims(spec.tasks.max(1));
+    let (b, s, d) = (spec.batch, spec.seq, dims.hidden);
+    if spec.seq > dims.max_seq {
+        return Err(format!(
+            "spec seq {} exceeds preset '{}' max_seq {}",
+            spec.seq,
+            spec.model,
+            dims.max_seq
+        ));
+    }
+    let (inputs, outputs, n_frozen, n_trainable) = match spec.step {
+        StepKind::Train | StepKind::Eval => {
+            let mut frozen = frozen_specs(preset, spec.tasks.max(1), spec.classes);
+            if spec.adapter == "full" {
+                // Full FT trains the encoder itself; only the heads stay frozen.
+                frozen = frozen.split_off(frozen.len() - 2);
+            }
+            let trainable = trainable_specs(spec)?;
+            let (nf, nt) = (frozen.len(), trainable.len());
+            let mut inputs = frozen;
+            inputs.extend(trainable.iter().cloned());
+            inputs.push(io("tokens", &[b, s], "i32"));
+            let outputs = if spec.step == StepKind::Train {
+                inputs.push(io("labels", &[b], "i32"));
+                inputs.push(io("scores", &[b], "f32"));
+                inputs.push(io("weights", &[b], "f32"));
+                let mut outs = vec![io("loss", &[], "f32")];
+                outs.extend(trainable.iter().map(|t| {
+                    io(&format!("grad_{}", t.name), &t.shape, "f32")
+                }));
+                outs
+            } else {
+                vec![io("logits", &[b, spec.classes], "f32")]
+            };
+            inputs.push(io("task_id", &[], "i32"));
+            inputs.push(io("alpha", &[], "f32"));
+            (inputs, outputs, nf, nt)
+        }
+        StepKind::Pretrain => {
+            let trainable = encoder_specs(preset);
+            let nt = trainable.len();
+            let mut inputs = trainable.clone();
+            inputs.push(io("tokens", &[b, s], "i32"));
+            inputs.push(io("targets", &[b, s], "i32"));
+            inputs.push(io("mask", &[b, s], "f32"));
+            let mut outputs = vec![io("loss", &[], "f32")];
+            outputs.extend(trainable.iter().map(|t| {
+                io(&format!("grad_{}", t.name), &t.shape, "f32")
+            }));
+            (inputs, outputs, 0, nt)
+        }
+        StepKind::Apply => {
+            let n = b * s;
+            let r = spec.rank;
+            let inputs = if spec.adapter == "lora" {
+                vec![
+                    io("x", &[n, d], "f32"),
+                    io("lora_a", &[d, r], "f32"),
+                    io("lora_b", &[r, d], "f32"),
+                ]
+            } else {
+                vec![
+                    io("x", &[n, d], "f32"),
+                    io("g1", &[d, r], "f32"),
+                    io("mid", &[r, r], "f32"),
+                    io("g4", &[r, d], "f32"),
+                ]
+            };
+            let nt = inputs.len() - 1;
+            let outputs = vec![io("y", &[n, d], "f32")];
+            (inputs, outputs, 0, nt)
+        }
+    };
+    Ok(ArtifactEntry {
+        spec: spec.clone(),
+        // No file backs a synthesized entry; the path records provenance.
+        file: PathBuf::from(format!("<synthesized>/{}", spec.stem())),
+        inputs,
+        outputs,
+        n_frozen,
+        n_trainable,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(step: StepKind, adapter: &str) -> ArtifactSpec {
+        ArtifactSpec {
+            step,
+            model: "tiny".into(),
+            adapter: adapter.into(),
+            rank: 8,
+            classes: 2,
+            tasks: 1,
+            batch: 16,
+            seq: 32,
+        }
+    }
+
+    #[test]
+    fn train_entry_matches_manifest_shape_conventions() {
+        let e = synthesize_entry(&tiny_spec(StepKind::Train, "metatt4d")).unwrap();
+        assert_eq!(e.frozen_inputs().len(), 22); // 20 encoder arrays + 2 heads
+        assert_eq!(e.trainable_inputs().len(), 4); // g1..g4
+        // data inputs: tokens, labels, scores, weights, task_id, alpha
+        assert_eq!(e.data_inputs().len(), 6);
+        assert_eq!(e.data_inputs()[0].dtype, "i32");
+        assert_eq!(e.outputs.len(), 1 + 4); // loss + grads
+        assert_eq!(e.outputs[1].name, "grad_g1");
+        assert_eq!(e.outputs[1].shape, vec![64, 8]);
+        // Frozen heads sized by (tasks, d, classes).
+        let cls_w = e.frozen_inputs().iter().find(|io| io.name == "cls_w").unwrap();
+        assert_eq!(cls_w.shape, vec![1, 64, 2]);
+    }
+
+    #[test]
+    fn eval_and_pretrain_entries() {
+        let e = synthesize_entry(&tiny_spec(StepKind::Eval, "lora")).unwrap();
+        assert_eq!(e.outputs.len(), 1);
+        assert_eq!(e.outputs[0].shape, vec![16, 2]);
+        assert_eq!(e.data_inputs().len(), 3); // tokens, task_id, alpha
+
+        let p = synthesize_entry(&tiny_spec(StepKind::Pretrain, "none")).unwrap();
+        assert_eq!(p.n_frozen, 0);
+        assert_eq!(p.trainable_inputs().len(), 20);
+        assert_eq!(p.outputs.len(), 21);
+    }
+
+    #[test]
+    fn full_ft_keeps_only_heads_frozen() {
+        let e = synthesize_entry(&tiny_spec(StepKind::Train, "full")).unwrap();
+        assert_eq!(e.frozen_inputs().len(), 2);
+        assert!(e.frozen_inputs().iter().all(|io| io.name.starts_with("cls_")));
+        assert_eq!(e.trainable_inputs().len(), 20);
+    }
+
+    #[test]
+    fn layout_matches_adapter_param_specs() {
+        for adapter in ["metatt4d", "metatt5d", "metatt4p1d", "lora", "vera", "lotr"] {
+            let mut spec = tiny_spec(StepKind::Train, adapter);
+            spec.tasks = 3;
+            let e = synthesize_entry(&spec).unwrap();
+            let kind = AdapterKind::from_name(adapter).unwrap();
+            let aspec = AdapterSpec::new(
+                kind,
+                8,
+                1.0,
+                ModelPreset::Tiny.dims(3),
+            );
+            let want = aspec.param_specs();
+            let got = e.trainable_inputs();
+            assert_eq!(got.len(), want.len(), "{adapter}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.name, w.name, "{adapter}");
+                assert_eq!(g.shape, w.shape, "{adapter}");
+            }
+        }
+    }
+
+    #[test]
+    fn seq_beyond_preset_is_rejected() {
+        let mut spec = tiny_spec(StepKind::Train, "metatt4d");
+        spec.seq = 64; // tiny max_seq is 32
+        assert!(synthesize_entry(&spec).is_err());
+    }
+
+    #[test]
+    fn adapter_none_rejected_outside_pretrain() {
+        // A train/eval spec with adapter "none" would freeze and train the
+        // same arrays — reject it instead of synthesizing a no-op entry.
+        for step in [StepKind::Train, StepKind::Eval] {
+            let err = synthesize_entry(&tiny_spec(step, "none")).unwrap_err();
+            assert!(err.contains("pretrain"), "{err}");
+        }
+        assert!(synthesize_entry(&tiny_spec(StepKind::Pretrain, "none")).is_ok());
+    }
+}

@@ -1,13 +1,32 @@
-//! PJRT runtime: artifact registry, executable cache, step execution.
+//! Execution runtime: the backend seam, spec layouts, and step execution.
 //!
-//! `registry` parses `artifacts/manifest.json` (written by aot.py);
-//! `exec` owns the PJRT client, the spec-keyed executable cache, and the
-//! step runners; `backbone` assembles the frozen-weight input set.
+//! * `backend` — the [`Backend`] / [`Step`] traits every coordinator is
+//!   written against, plus backend construction ([`make_backend`]).
+//! * `layout` — spec-derived I/O layouts (the rust mirror of model.py);
+//!   lets any backend or test synthesize an [`ArtifactEntry`] offline.
+//! * `reference` — [`RefBackend`]: hermetic pure-rust CPU execution of
+//!   train / eval / pretrain / apply steps (`encoder` holds the math).
+//! * `registry` — [`ArtifactSpec`] identities + `artifacts/manifest.json`
+//!   parsing (written by aot.py, consumed by the PJRT backend).
+//! * `backbone` — frozen-weight assembly (encoder checkpoint + heads).
+//! * `exec` (feature `pjrt`) — the PJRT client, spec-keyed executable
+//!   cache, and device step runners over AOT-lowered HLO artifacts.
 
 mod backbone;
-mod exec;
+mod backend;
+mod encoder;
+mod layout;
+mod reference;
 mod registry;
 
+#[cfg(feature = "pjrt")]
+mod exec;
+
 pub use backbone::{assemble_frozen, checkpoint_path, init_encoder_weights};
-pub use exec::{Runtime, StepRunner};
+pub use backend::{backend_from_env, make_backend, Backend, BackendKind, Step};
+pub use layout::{encoder_specs, frozen_specs, synthesize_entry, trainable_specs};
+pub use reference::RefBackend;
 pub use registry::{ArtifactEntry, ArtifactSpec, IoSpec, Manifest, StepKind};
+
+#[cfg(feature = "pjrt")]
+pub use exec::{Runtime, StepRunner};

@@ -1,0 +1,271 @@
+//! The pure-rust reference backend (`--backend ref`).
+//!
+//! Executes every step kind of the MetaTT pipeline directly on host tensors
+//! via [`super::encoder`] — no HLO artifacts, no Python, no network. Specs
+//! are resolved through [`super::layout::synthesize_entry`], so the backend
+//! supports *any* (preset, adapter, rank, classes, tasks, batch, seq)
+//! combination a manifest could describe, including the full DMRG rank
+//! ladder — which is what makes the training/DMRG/MTL coordinators
+//! hermetically testable.
+
+use super::backend::{Backend, BackendKind, Step};
+use super::encoder;
+use super::layout;
+use super::registry::{ArtifactEntry, ArtifactSpec, StepKind};
+use crate::config::ModelPreset;
+use crate::data::{Batch, MlmBatch};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+/// Pure-rust CPU backend. Stateless apart from bind telemetry.
+pub struct RefBackend {
+    /// Stems of every spec bound so far — the analogue of the PJRT
+    /// executable cache, reported through `cached_executables` so the DMRG
+    /// hot-swap accounting works identically across backends.
+    bound: Mutex<HashSet<String>>,
+}
+
+impl RefBackend {
+    pub fn new() -> RefBackend {
+        RefBackend { bound: Mutex::new(HashSet::new()) }
+    }
+}
+
+impl Default for RefBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for RefBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Ref
+    }
+
+    fn platform(&self) -> String {
+        "cpu (pure rust)".to_string()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "backend: ref — pure-rust reference executor\n\
+             artifacts: synthesized on demand (no manifest needed)\n\
+             steps bound this session: {}",
+            self.cached_executables()
+        )
+    }
+
+    fn entry(&self, spec: &ArtifactSpec) -> Result<ArtifactEntry> {
+        layout::synthesize_entry(spec).map_err(anyhow::Error::msg)
+    }
+
+    fn bind<'a>(
+        &'a self,
+        spec: &ArtifactSpec,
+        frozen: &Arc<HashMap<String, Tensor>>,
+    ) -> Result<Box<dyn Step + 'a>> {
+        let entry = self.entry(spec)?;
+        // Validate the frozen set up front, exactly like the PJRT bind.
+        for io in entry.frozen_inputs() {
+            match frozen.get(&io.name) {
+                None => bail!(
+                    "frozen input '{}' missing for {}",
+                    io.name,
+                    spec.stem()
+                ),
+                Some(t) if t.shape() != &io.shape[..] => bail!(
+                    "frozen input '{}': shape {:?}, layout wants {:?}",
+                    io.name,
+                    t.shape(),
+                    io.shape
+                ),
+                _ => {}
+            }
+        }
+        self.bound.lock().unwrap().insert(spec.stem());
+        // Refcount bump only — the backbone is shared across every bound
+        // step (train + eval runners, all DMRG ranks).
+        Ok(Box::new(RefStep { entry, frozen: Arc::clone(frozen) }))
+    }
+
+    fn cached_executables(&self) -> usize {
+        self.bound.lock().unwrap().len()
+    }
+
+    fn pretrain_spec(&self, preset: ModelPreset) -> Result<ArtifactSpec> {
+        let dims = preset.dims(1);
+        Ok(ArtifactSpec {
+            step: StepKind::Pretrain,
+            model: preset.name().to_string(),
+            adapter: "none".to_string(),
+            rank: 0,
+            classes: 1,
+            tasks: 1,
+            batch: 16,
+            seq: dims.max_seq,
+        })
+    }
+
+    fn apply_spec(&self, adapter: &str, rank: usize) -> Result<ArtifactSpec> {
+        // The AOT pipeline lowers apply artifacts at base_sim serving shape;
+        // the reference backend mirrors that default.
+        let preset = ModelPreset::BaseSim;
+        let dims = preset.dims(1);
+        Ok(ArtifactSpec {
+            step: StepKind::Apply,
+            model: preset.name().to_string(),
+            adapter: adapter.to_string(),
+            rank,
+            classes: 1,
+            tasks: 1,
+            batch: 64,
+            seq: dims.max_seq,
+        })
+    }
+}
+
+/// A bound reference step: the synthesized layout + a shared handle on the
+/// frozen weights.
+struct RefStep {
+    entry: ArtifactEntry,
+    frozen: Arc<HashMap<String, Tensor>>,
+}
+
+impl RefStep {
+    /// Shape-validate the trainable tensors against the layout (the same
+    /// contract the PJRT uploader enforces).
+    fn check_trainable(&self, trainable: &[Tensor]) -> Result<()> {
+        let specs = self.entry.trainable_inputs();
+        if trainable.len() != specs.len() {
+            bail!(
+                "{}: {} trainable tensors supplied, layout wants {}",
+                self.entry.spec.stem(),
+                trainable.len(),
+                specs.len()
+            );
+        }
+        for (t, io) in trainable.iter().zip(specs) {
+            if t.shape() != &io.shape[..] {
+                bail!(
+                    "trainable '{}': shape {:?}, layout wants {:?}",
+                    io.name,
+                    t.shape(),
+                    io.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Step for RefStep {
+    fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    fn run_train(
+        &self,
+        trainable: &[Tensor],
+        batch: &Batch,
+        task_id: i32,
+        alpha: f32,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        if self.entry.spec.step != StepKind::Train {
+            bail!("{} is not a train step", self.entry.spec.stem());
+        }
+        self.check_trainable(trainable)?;
+        encoder::train_step(&self.entry, &self.frozen, trainable, batch, task_id, alpha)
+    }
+
+    fn run_eval(
+        &self,
+        trainable: &[Tensor],
+        batch: &Batch,
+        task_id: i32,
+        alpha: f32,
+    ) -> Result<Tensor> {
+        if self.entry.spec.step != StepKind::Eval {
+            bail!("{} is not an eval step", self.entry.spec.stem());
+        }
+        self.check_trainable(trainable)?;
+        encoder::eval_step(&self.entry, &self.frozen, trainable, batch, task_id, alpha)
+    }
+
+    fn run_pretrain(&self, trainable: &[Tensor], batch: &MlmBatch) -> Result<(f32, Vec<Tensor>)> {
+        if self.entry.spec.step != StepKind::Pretrain {
+            bail!("{} is not a pretrain step", self.entry.spec.stem());
+        }
+        self.check_trainable(trainable)?;
+        encoder::pretrain_step(&self.entry, trainable, batch)
+    }
+
+    fn run_raw(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match self.entry.spec.step {
+            StepKind::Apply => encoder::apply_step(&self.entry, inputs),
+            _ => bail!(
+                "run_raw on the ref backend supports apply specs only (got {})",
+                self.entry.spec.stem()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::assemble_frozen;
+    use crate::util::rng::Pcg64;
+
+    fn tiny_eval_spec() -> ArtifactSpec {
+        ArtifactSpec {
+            step: StepKind::Eval,
+            model: "tiny".into(),
+            adapter: "metatt4d".into(),
+            rank: 4,
+            classes: 2,
+            tasks: 1,
+            batch: 4,
+            seq: 8,
+        }
+    }
+
+    #[test]
+    fn bind_validates_frozen_set() {
+        let backend = RefBackend::new();
+        let spec = tiny_eval_spec();
+        // Empty frozen set must be rejected with a helpful error.
+        let err = backend.bind(&spec, &Arc::new(HashMap::new())).unwrap_err();
+        assert!(format!("{err:#}").contains("frozen input"), "{err:#}");
+        // A proper frozen set binds and is counted.
+        let entry = backend.entry(&spec).unwrap();
+        let frozen = Arc::new(assemble_frozen(&entry, None, ModelPreset::Tiny).unwrap());
+        backend.bind(&spec, &frozen).unwrap();
+        assert_eq!(backend.cached_executables(), 1);
+        // Re-binding the same spec does not double count.
+        backend.bind(&spec, &frozen).unwrap();
+        assert_eq!(backend.cached_executables(), 1);
+    }
+
+    #[test]
+    fn apply_step_runs_the_tt_chain() {
+        let backend = RefBackend::new();
+        let spec = backend.apply_spec("metatt4d", 8).unwrap();
+        let entry = backend.entry(&spec).unwrap();
+        let step = backend.bind(&spec, &Arc::new(HashMap::new())).unwrap();
+        let mut rng = Pcg64::new(3);
+        let inputs: Vec<Tensor> = entry
+            .inputs
+            .iter()
+            .map(|io| Tensor::randn(&io.shape, 0.5, &mut rng))
+            .collect();
+        let out = step.run_raw(&inputs).unwrap().remove(0);
+        let want = inputs[0]
+            .matmul(&inputs[1])
+            .matmul(&inputs[2])
+            .matmul(&inputs[3]);
+        assert_eq!(out, want);
+    }
+}

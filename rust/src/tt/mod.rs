@@ -25,4 +25,4 @@ mod meta;
 pub use chain::TtChain;
 pub use dmrg::{dmrg_sweep, RankSchedule, SweepReport};
 pub use init::{CoreInit, InitStrategy};
-pub use meta::{MetaTt, MetaTtKind};
+pub use meta::{MetaTt, MetaTtDims, MetaTtKind};

@@ -1,13 +1,16 @@
-//! Integration tests across runtime + coordinator: these execute real AOT
-//! artifacts through PJRT, so they need `make artifacts` to have run.
-//! Every test is skipped (with a loud message) when artifacts are absent so
-//! `cargo test` stays green on a fresh checkout.
+//! Integration tests across runtime + coordinator on the **PJRT backend**:
+//! these execute real AOT artifacts, so they compile only with
+//! `--features pjrt` and need `make artifacts` to have run. Every test is
+//! skipped (with a loud message) when artifacts are absent so `cargo test`
+//! stays green on a fresh checkout. The hermetic equivalents of the
+//! coordinator tests live in `tests/ref_backend.rs` and run everywhere.
+#![cfg(feature = "pjrt")]
 
 use metatt::adapters::{AdapterKind, AdapterSpec};
 use metatt::config::{ModelPreset, TrainConfig};
 use metatt::coordinator::{run_dmrg, run_mtl, run_single_task, DmrgConfig, MtlConfig};
 use metatt::data::{Batcher, TaskId};
-use metatt::runtime::{assemble_frozen, ArtifactSpec, Runtime, StepKind, StepRunner};
+use metatt::runtime::{assemble_frozen, ArtifactSpec, Runtime, Step, StepKind, StepRunner};
 use metatt::tensor::{rel_err, Tensor};
 use metatt::tt::{InitStrategy, MetaTtKind, RankSchedule};
 use metatt::util::rng::Pcg64;
@@ -78,7 +81,8 @@ fn train_step_executes_and_grads_respect_zero_init_structure() {
     let mut rng = Pcg64::new(1);
     let params = spec.init_params(&mut rng); // g1 = 0, rest identity
     let ds = TaskId::MrpcSyn.generate_at(16, 0, 3, 32, 512);
-    let batch = &Batcher::new(16).epoch(&ds, &mut rng)[0];
+    let batches = Batcher::new(16).epoch(&ds, &mut rng);
+    let batch = &batches[0];
     let (loss, grads) = runner.run_train(&params, batch, 0, 4.0).unwrap();
     assert!(loss.is_finite() && loss > 0.0);
     assert_eq!(grads.len(), 4);
@@ -102,7 +106,8 @@ fn eval_step_matches_zero_adapter_between_methods() {
     let dims = model.dims(1);
     let mut rng = Pcg64::new(2);
     let ds = TaskId::Sst2Syn.generate_at(16, 16, 5, 32, 512);
-    let batch = &Batcher::new(16).eval(&ds)[0];
+    let batches = Batcher::new(16).eval(&ds);
+    let batch = &batches[0];
     let mut logits: Vec<Tensor> = Vec::new();
     for adapter in [
         AdapterKind::MetaTt(MetaTtKind::FourD),

@@ -1,0 +1,162 @@
+//! Property tests for the TT algebra the adapters are built on:
+//!
+//! 1. The [`TtChain`] contraction behind `MetaTt::delta_w` equals the
+//!    corresponding slice of the densely materialized TT tensor, for random
+//!    ranks and slice axes, across all three MetaTT variants (paper Eqs.
+//!    5–6: the chain *is* the stacked ΔW bank).
+//! 2. The DMRG merge → SVD → split primitive (Algorithm 1's inner move) is
+//!    exact at full rank: the merged two-core matrix is preserved by both
+//!    the left- and right-canonical splits, and a full-rank double sweep
+//!    leaves the represented tensor untouched.
+
+use metatt::linalg::truncated_svd_with_tail;
+use metatt::tensor::{rel_err, Tensor};
+use metatt::testutil::prop_check;
+use metatt::tt::{dmrg_sweep, CoreInit, InitStrategy, MetaTt, MetaTtDims, MetaTtKind, TtChain};
+use metatt::util::rng::Pcg64;
+
+fn small_dims() -> MetaTtDims {
+    MetaTtDims { d_in: 8, d_out: 8, layers: 3, matrices: 2, heads: 2, tasks: 3 }
+}
+
+/// Flat row-major index into a materialized tensor with the given modes.
+fn flat(modes: &[usize], idx: &[usize]) -> usize {
+    assert_eq!(modes.len(), idx.len());
+    let mut off = 0;
+    for (m, i) in modes.iter().zip(idx) {
+        debug_assert!(i < m);
+        off = off * m + i;
+    }
+    off
+}
+
+/// ΔW slice read directly out of the dense materialized chain.
+fn dense_delta_w(tt: &MetaTt, layer: usize, matrix: usize, task: usize) -> Tensor {
+    let dims = tt.dims;
+    let modes = MetaTt::mode_sizes(tt.kind, &dims);
+    let full = tt.chain.materialize();
+    let mut out = Tensor::zeros(&[dims.d_in, dims.d_out]);
+    match tt.kind {
+        MetaTtKind::FourD => {
+            for i in 0..dims.d_in {
+                for j in 0..dims.d_out {
+                    let v = full.data()[flat(&modes, &[i, layer, matrix, j])];
+                    out.set(i, j, v);
+                }
+            }
+        }
+        MetaTtKind::FiveD => {
+            let dh = dims.d_out / dims.heads;
+            for i in 0..dims.d_in {
+                for h in 0..dims.heads {
+                    for j in 0..dh {
+                        let v = full.data()[flat(&modes, &[i, layer, matrix, h, j])];
+                        out.set(i, h * dh + j, v);
+                    }
+                }
+            }
+        }
+        MetaTtKind::FourPlusOneD => {
+            for i in 0..dims.d_in {
+                for j in 0..dims.d_out {
+                    let v = full.data()[flat(&modes, &[i, layer, task, matrix, j])];
+                    out.set(i, j, v);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn chain_contraction_matches_dense_delta_w_slice() {
+    prop_check("delta_w == dense slice", 15, |rng, case| {
+        let kind = [MetaTtKind::FourD, MetaTtKind::FiveD, MetaTtKind::FourPlusOneD][case % 3];
+        let dims = small_dims();
+        let rank = 1 + rng.uniform_usize(5); // random rank in [1, 5]
+        let init = InitStrategy { cores: vec![CoreInit::Normal; kind.order()] };
+        let tt = MetaTt::new(kind, dims, rank, 1.0, &init, rng);
+        let layer = rng.uniform_usize(dims.layers);
+        let matrix = rng.uniform_usize(dims.matrices);
+        let task = rng.uniform_usize(dims.tasks);
+        let via_chain = tt.delta_w(layer, matrix, task);
+        let via_dense = dense_delta_w(&tt, layer, matrix, task);
+        let err = rel_err(&via_chain, &via_dense);
+        if err < 1e-4 {
+            Ok(())
+        } else {
+            Err(format!(
+                "{kind:?} r={rank} (l={layer}, m={matrix}, t={task}): rel_err {err}"
+            ))
+        }
+    });
+}
+
+#[test]
+fn zero_init_chain_materializes_to_zero_everywhere() {
+    // The paper-default ze-id-… init must be the zero map on EVERY slice,
+    // not just the ones the training loop happens to touch.
+    let mut rng = Pcg64::new(11);
+    for kind in [MetaTtKind::FourD, MetaTtKind::FiveD, MetaTtKind::FourPlusOneD] {
+        let tt = MetaTt::new_default(kind, small_dims(), 3, 1.0, &mut rng);
+        assert_eq!(tt.chain.materialize().max_abs(), 0.0, "{kind:?}");
+    }
+}
+
+fn random_chain(rng: &mut Pcg64, modes: &[usize], rank: usize) -> TtChain {
+    let d = modes.len();
+    let cores = (0..d)
+        .map(|k| {
+            let rl = if k == 0 { 1 } else { rank };
+            let rr = if k == d - 1 { 1 } else { rank };
+            Tensor::randn(&[rl, modes[k], rr], 0.5, rng)
+        })
+        .collect();
+    TtChain::new(cores)
+}
+
+#[test]
+fn dmrg_merge_svd_split_roundtrip_is_exact_at_full_rank() {
+    prop_check("merge→tSVD→split exact at full rank", 8, |rng, case| {
+        let modes = [4, 3, 5, 2];
+        let rank = 2 + case % 3;
+        let tt = random_chain(rng, &modes, rank);
+        for bond in 0..tt.order() - 1 {
+            let merged = tt.merge_pair(bond);
+            let full_rank = merged.rows().min(merged.cols());
+            let (svd, dropped) = truncated_svd_with_tail(&merged, full_rank);
+            if dropped > 1e-5 {
+                return Err(format!("bond {bond}: full-rank SVD dropped {dropped}"));
+            }
+            // u·s·vt reconstructs the merged two-core tensor…
+            let err = rel_err(&svd.reconstruct(), &merged);
+            if err > 1e-4 {
+                return Err(format!("bond {bond}: reconstruct err {err}"));
+            }
+            // …and so do both canonical splits (U)(S·Vᵀ) and (U·S)(Vᵀ).
+            let (u, svt) = svd.split_left_canonical();
+            let err_l = rel_err(&u.matmul(&svt), &merged);
+            let (us, vt) = svd.split_right_canonical();
+            let err_r = rel_err(&us.matmul(&vt), &merged);
+            if err_l > 1e-4 || err_r > 1e-4 {
+                return Err(format!("bond {bond}: split errs {err_l} / {err_r}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_rank_double_sweep_preserves_tensor() {
+    let mut rng = Pcg64::new(21);
+    let mut tt = random_chain(&mut rng, &[4, 3, 4, 3], 4);
+    let before = tt.materialize();
+    let report = dmrg_sweep(&mut tt, &|_| 64); // cap far above any bond
+    let after = tt.materialize();
+    assert!(
+        rel_err(&after, &before) < 1e-4,
+        "full-rank sweep changed the tensor: {}",
+        rel_err(&after, &before)
+    );
+    assert!(report.max_dropped() < 1e-5);
+}

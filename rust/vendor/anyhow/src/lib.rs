@@ -1,0 +1,181 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline environment ships no crates registry, so this vendored crate
+//! provides the (small) subset of the `anyhow` API the repo uses: the
+//! [`Error`] type with a context chain, the [`Result`] alias, the
+//! [`Context`] extension trait for `Result`/`Option`, and the `anyhow!` /
+//! `bail!` / `ensure!` macros. Errors are stored as a chain of messages
+//! (outermost context first); `{}` shows the outermost message, `{:#}` and
+//! `{:?}` show the full `context: ...: root cause` chain, mirroring real
+//! anyhow's formatting closely enough for log output.
+
+use std::fmt;
+
+/// A chain of error messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (becomes the new outermost message).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root-cause (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in &self.chain[1..] {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what keeps this blanket conversion coherent (same trick as real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+    }
+
+    #[test]
+    fn macros_and_option_context() {
+        let e: Error = anyhow!("rank {} too large", 99);
+        assert_eq!(e.root_cause(), "rank 99 too large");
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        fn guarded(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x was {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(guarded(3).unwrap(), 3);
+        assert!(guarded(12).is_err());
+        assert_eq!(guarded(5).unwrap_err().root_cause(), "five is right out");
+    }
+
+    #[test]
+    fn error_msg_accepts_strings() {
+        let s: Result<(), String> = Err("boom".to_string());
+        let e = s.map_err(Error::msg).unwrap_err();
+        assert_eq!(format!("{e}"), "boom");
+    }
+}
