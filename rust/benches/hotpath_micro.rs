@@ -14,19 +14,31 @@
 //!      resident) vs re-binding per step.
 //!   5. **Step hot-swap** cost across the DMRG rank ladder: first bind
 //!      (compile on pjrt, layout synthesis on ref) vs re-bind.
+//!   6. **Threading scaling** (PR 2): the parallel kernel family and
+//!      encoder steps at 1 vs N worker threads, emitted as
+//!      `BENCH_pr2.json` so the perf trajectory is recorded per commit.
+//!
+//! `METATT_BENCH_SMOKE=1` runs a fast subset with tiny iteration counts —
+//! CI uses it to catch kernel regressions (crashes, determinism breaks,
+//! pathological slowdowns) without paying full measurement cost.
 
 use metatt::adapters::{AdapterKind, AdapterSpec};
 use metatt::bench::{bench, Stats};
 use metatt::config::ModelPreset;
 use metatt::data::TaskId;
-use metatt::runtime::{assemble_frozen, backend_from_env, ArtifactSpec, Backend, Step, StepKind};
+use metatt::runtime::{
+    assemble_frozen, backend_from_env, ArtifactSpec, Backend, RefBackend, Step, StepKind,
+};
 use metatt::tensor::Tensor;
 use metatt::tt::{dmrg_sweep, InitStrategy, MetaTt, MetaTtKind};
+use metatt::util::json::Json;
 use metatt::util::rng::Pcg64;
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("METATT_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let scale = |n: usize| if smoke { (n / 8).max(2) } else { n };
     let backend = backend_from_env()?;
-    println!("[backend] {}", backend.platform());
+    println!("[backend] {}{}", backend.platform(), if smoke { " (smoke mode)" } else { "" });
     let mut rng = Pcg64::new(42);
 
     // ---- 1. Serving apply: MetaTT vs LoRA at rank 8. ---------------------
@@ -41,7 +53,7 @@ fn main() -> anyhow::Result<()> {
             .iter()
             .map(|io| Tensor::randn(&io.shape, 0.5, &mut rng))
             .collect();
-        let s = bench(&format!("apply/{adapter}/r8"), 5, 40, || {
+        let s = bench(&format!("apply/{adapter}/r8"), scale(5), scale(40), || {
             let out = runner.run_raw(&inputs).unwrap();
             std::hint::black_box(out);
         });
@@ -84,7 +96,7 @@ fn main() -> anyhow::Result<()> {
         let frozen = std::sync::Arc::new(assemble_frozen(&entry, None, model)?);
         let runner = backend.bind(&aspec, &frozen)?;
         let params = spec.init_params(&mut rng);
-        bench(&format!("train-step/{}/r{rank}", spec.kind.name()), 3, 25, || {
+        bench(&format!("train-step/{}/r{rank}", spec.kind.name()), scale(3), scale(25), || {
             let out = runner.run_train(&params, batch, 0, 4.0).unwrap();
             std::hint::black_box(out);
         });
@@ -107,7 +119,7 @@ fn main() -> anyhow::Result<()> {
         let spec = AdapterSpec::new(AdapterKind::MetaTt(MetaTtKind::FourD), rank, 1.0, dims);
         let init = InitStrategy::from_code("no-no-no-no").unwrap();
         let tt0: MetaTt = spec.build_metatt_with(&mut rng, Some(&init));
-        bench(&format!("dmrg-sweep/d{d_model}/r{rank}->r{}", rank / 2), 2, 10, || {
+        bench(&format!("dmrg-sweep/d{d_model}/r{rank}->r{}", rank / 2), scale(2), scale(10), || {
             let mut tt = tt0.clone();
             let rep = dmrg_sweep(&mut tt.chain, &|_| rank / 2);
             std::hint::black_box(rep);
@@ -132,11 +144,11 @@ fn main() -> anyhow::Result<()> {
     let spec8 = AdapterSpec::new(AdapterKind::MetaTt(MetaTtKind::FourD), 8, 4.0, dims);
     let params = spec8.init_params(&mut rng);
     let runner = backend.bind(&aspec, &frozen)?;
-    let resident = bench("eval-step/bind-once", 3, 30, || {
+    let resident = bench("eval-step/bind-once", scale(3), scale(30), || {
         let out = runner.run_eval(&params, batch, 0, 4.0).unwrap();
         std::hint::black_box(out);
     });
-    let reupload = bench("eval-step/re-bind", 3, 30, || {
+    let reupload = bench("eval-step/re-bind", scale(3), scale(30), || {
         let r = backend.bind(&aspec, &frozen).unwrap();
         let out = r.run_eval(&params, batch, 0, 4.0).unwrap();
         std::hint::black_box(out);
@@ -168,7 +180,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(step.entry().spec.rank);
     }
     let bind_all = t0.elapsed().as_secs_f64();
-    let cached = bench("step/re-bind-rank6", 2, 50, || {
+    let cached = bench("step/re-bind-rank6", scale(2), scale(50), || {
         let e = backend.bind(&rank_spec(6), &ladder_frozen).unwrap();
         std::hint::black_box(e.entry().spec.rank);
     });
@@ -178,5 +190,122 @@ fn main() -> anyhow::Result<()> {
         bind_all,
         Stats::fmt_time(cached.p50)
     );
+
+    // ---- 6. Threading scaling (PR 2): kernels + encoder steps. -----------
+    let par_threads = metatt::util::threadpool::default_threads().max(2);
+    println!("== 6. threading scaling (1 vs {par_threads} threads) ==");
+    let mut records: Vec<Json> = Vec::new();
+
+    // 6a. Parallel matmul kernel at the sizes the acceptance criteria pin.
+    // Besides timing, this is the smoke gate CI relies on: the parallel
+    // result must match the serial result bit-for-bit, or we abort loudly.
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (384, 384, 384), (512, 512, 512)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        assert_eq!(
+            a.matmul_mt(&b, 1),
+            a.matmul_mt(&b, par_threads),
+            "determinism regression: {m}x{k}x{n} parallel != serial"
+        );
+        let serial = bench(&format!("matmul/{m}x{k}x{n}/t1"), scale(3), scale(20), || {
+            std::hint::black_box(a.matmul_mt(&b, 1));
+        });
+        let par = bench(
+            &format!("matmul/{m}x{k}x{n}/t{par_threads}"),
+            scale(3),
+            scale(20),
+            || {
+                std::hint::black_box(a.matmul_mt(&b, par_threads));
+            },
+        );
+        let speedup = serial.p50 / par.p50;
+        println!("   {m}x{k}x{n}: {speedup:.2}x speedup at {par_threads} threads");
+        records.push(Json::obj(vec![
+            ("kind", Json::str("matmul")),
+            ("shape", Json::str(format!("{m}x{k}x{n}"))),
+            ("threads", Json::num(par_threads as f64)),
+            ("t1_p50_s", Json::num(serial.p50)),
+            ("tn_p50_s", Json::num(par.p50)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+
+    // 6b. Encoder train + eval steps, tokens/sec at batch 8–32.
+    for &bsz in &[8usize, 16, 32] {
+        for step_kind in [StepKind::Train, StepKind::Eval] {
+            let sspec = ArtifactSpec {
+                step: step_kind,
+                model: "tiny".into(),
+                adapter: "metatt4d".into(),
+                rank: 8,
+                classes: 2,
+                tasks: 1,
+                batch: bsz,
+                seq: dims.max_seq,
+            };
+            let b1 = RefBackend::with_threads(1)?;
+            let bn = RefBackend::with_threads(par_threads)?;
+            let entry = b1.entry(&sspec)?;
+            let frozen = std::sync::Arc::new(assemble_frozen(&entry, None, model)?);
+            let ds = TaskId::MrpcSyn.generate_at(bsz, bsz, 1, dims.max_seq, dims.vocab);
+            let sbatch = metatt::data::Batcher::new(bsz).eval(&ds).remove(0);
+            let params = spec8.init_params(&mut rng);
+            let kind_name = match step_kind {
+                StepKind::Train => "train",
+                _ => "eval",
+            };
+            let run = |backend: &RefBackend, tag: &str| -> anyhow::Result<Stats> {
+                let runner = backend.bind(&sspec, &frozen)?;
+                Ok(bench(
+                    &format!("{kind_name}-step/b{bsz}/{tag}"),
+                    scale(3),
+                    scale(20),
+                    || match step_kind {
+                        StepKind::Train => {
+                            std::hint::black_box(
+                                runner.run_train(&params, &sbatch, 0, 4.0).unwrap(),
+                            );
+                        }
+                        _ => {
+                            std::hint::black_box(
+                                runner.run_eval(&params, &sbatch, 0, 4.0).unwrap(),
+                            );
+                        }
+                    },
+                ))
+            };
+            let s1 = run(&b1, "t1")?;
+            let sn = run(&bn, &format!("t{par_threads}"))?;
+            let toks = (bsz * dims.max_seq) as f64;
+            let speedup = s1.p50 / sn.p50;
+            println!(
+                "   {kind_name} b{bsz}: {:.0} tok/s -> {:.0} tok/s ({speedup:.2}x)",
+                toks / s1.p50,
+                toks / sn.p50
+            );
+            records.push(Json::obj(vec![
+                ("kind", Json::str(format!("{kind_name}-step"))),
+                ("batch", Json::num(bsz as f64)),
+                ("seq", Json::num(dims.max_seq as f64)),
+                ("threads", Json::num(par_threads as f64)),
+                ("t1_tokens_per_s", Json::num(toks / s1.p50)),
+                ("tn_tokens_per_s", Json::num(toks / sn.p50)),
+                ("speedup", Json::num(speedup)),
+            ]));
+        }
+    }
+
+    let out_path = std::env::var("METATT_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_pr2.json".to_string());
+    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    let doc = Json::obj(vec![
+        ("bench", Json::str("hotpath_micro/threading")),
+        ("host_parallelism", Json::num(host_threads as f64)),
+        ("threads", Json::num(par_threads as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write(&out_path, doc.to_pretty())?;
+    println!("\n[saved] {out_path}");
     Ok(())
 }

@@ -86,6 +86,18 @@ impl Args {
         }
     }
 
+    /// Optional integer: distinguishes "not given" (None) from an explicit
+    /// value, for options whose default comes from elsewhere (env, TOML).
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
         match self.get(name) {
             None => Ok(default),
@@ -164,6 +176,15 @@ mod tests {
         assert_eq!(a.usize_list_or("ranks", &[]).unwrap(), vec![4, 8, 16]);
         assert_eq!(a.str_list_or("tasks", &["cola_syn"]), vec!["cola_syn"]);
         assert_eq!(a.f32_or("missing", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn optional_integers_distinguish_absent_from_given() {
+        let a = Args::parse(&argv("t --threads 4"), &["threads"], &[]).unwrap();
+        assert_eq!(a.usize_opt("threads").unwrap(), Some(4));
+        assert_eq!(a.usize_opt("missing").unwrap(), None);
+        let bad = Args::parse(&argv("t --threads four"), &["threads"], &[]).unwrap();
+        assert!(bad.usize_opt("threads").is_err());
     }
 
     #[test]

@@ -127,6 +127,11 @@ pub struct ExperimentConfig {
     /// pass a constructed backend directly, so the field is informational
     /// for them.
     pub backend: BackendKind,
+    /// Worker-thread budget for the reference backend (`[runtime]`'s
+    /// `threads` key; the `--threads` CLI flag overrides it). `None` defers
+    /// to `METATT_THREADS` / host auto-detection; `0` is rejected at parse
+    /// time.
+    pub threads: Option<usize>,
 }
 
 impl ExperimentConfig {
@@ -150,6 +155,20 @@ impl ExperimentConfig {
         let backend = BackendKind::from_name(&str_field("backend", "ref"))?;
         let rank = doc.get("rank").and_then(|v| v.as_usize()).unwrap_or(8);
         let alpha = doc.get("alpha").and_then(|v| v.as_f64()).unwrap_or(4.0) as f32;
+        let threads = match doc.get("runtime").and_then(|r| r.get("threads")) {
+            None => None,
+            Some(v) => match v.as_usize() {
+                Some(0) => {
+                    return Err(
+                        "[runtime] threads = 0 is invalid: use threads = 1 for \
+                         serial execution or remove the key to auto-detect"
+                            .to_string(),
+                    )
+                }
+                Some(n) => Some(n),
+                None => return Err("[runtime] threads must be a positive integer".to_string()),
+            },
+        };
         let tasks = match doc.get("tasks").and_then(|v| v.as_arr()) {
             Some(arr) => arr
                 .iter()
@@ -188,7 +207,7 @@ impl ExperimentConfig {
                 train.eval_cap = v;
             }
         }
-        Ok(ExperimentConfig { model, adapter, rank, alpha, tasks, train, backend })
+        Ok(ExperimentConfig { model, adapter, rank, alpha, tasks, train, backend, threads })
     }
 }
 
@@ -244,6 +263,20 @@ seed = 2025
         assert_eq!(cfg.train.epochs, 20);
         assert_eq!(cfg.tasks, vec!["mrpc_syn"]);
         assert_eq!(cfg.backend, BackendKind::Ref);
+    }
+
+    #[test]
+    fn runtime_threads_parse_and_reject_zero() {
+        let doc = toml::parse("model = \"tiny\"\n[runtime]\nthreads = 4\n").unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.threads, Some(4));
+        // Unset: defer to env/auto.
+        let doc = toml::parse("model = \"tiny\"").unwrap();
+        assert_eq!(ExperimentConfig::from_json(&doc).unwrap().threads, None);
+        // threads = 0 must fail with a helpful message, not panic downstream.
+        let doc = toml::parse("model = \"tiny\"\n[runtime]\nthreads = 0\n").unwrap();
+        let err = ExperimentConfig::from_json(&doc).unwrap_err();
+        assert!(err.contains("threads = 1"), "unhelpful: {err}");
     }
 
     #[test]

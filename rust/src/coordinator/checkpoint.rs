@@ -38,14 +38,25 @@ pub fn save(path: &Path, tensors: &[(String, Tensor)]) -> Result<(), String> {
     f.write_all(&buf).map_err(|e| format!("write {}: {e}", path.display()))
 }
 
+/// Hard cap on tensor rank: nothing in the layout exceeds 4-D, so a larger
+/// header value is corruption, not data.
+const MAX_NDIM: usize = 16;
+
 /// Load named tensors in stored order.
+///
+/// Header fields come from disk and may be corrupted (or adversarial), so
+/// every count is validated against the bytes actually present *before* it
+/// sizes an allocation, and all products use checked arithmetic — a crafted
+/// `u64::MAX`-dimension shape must produce a clean `Err`, not a wrapped
+/// multiply in release mode followed by a bogus `take` length or OOM.
 pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>, String> {
     let mut f = std::fs::File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
     let mut buf = Vec::new();
     f.read_to_end(&mut buf).map_err(|e| format!("read {}: {e}", path.display()))?;
     let mut pos = 0usize;
     let take = |pos: &mut usize, n: usize| -> Result<&[u8], String> {
-        if *pos + n > buf.len() {
+        // `pos + n` cannot wrap: pos <= buf.len() and n is validated below.
+        if n > buf.len() - *pos {
             return Err("truncated checkpoint".into());
         }
         let s = &buf[*pos..*pos + n];
@@ -56,17 +67,47 @@ pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>, String> {
         return Err(format!("{}: bad magic (not a MetaTT checkpoint)", path.display()));
     }
     let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    // Every tensor costs >= 8 header bytes; cap the preallocation by what
+    // the file could possibly hold instead of trusting the raw u32.
+    let max_plausible = (buf.len() - pos) / 8;
+    if n > max_plausible {
+        return Err(format!(
+            "checkpoint header claims {n} tensors but only {} bytes remain",
+            buf.len() - pos
+        ));
+    }
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
         let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
             .map_err(|_| "bad tensor name".to_string())?;
         let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-        let mut shape = Vec::with_capacity(ndim);
-        for _ in 0..ndim {
-            shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+        if ndim > MAX_NDIM {
+            return Err(format!("tensor '{name}': implausible rank {ndim}"));
         }
-        let numel: usize = shape.iter().product();
+        let mut shape = Vec::with_capacity(ndim);
+        let mut numel_u64: u64 = 1;
+        for _ in 0..ndim {
+            let dim = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+            numel_u64 = numel_u64
+                .checked_mul(dim)
+                .ok_or_else(|| format!("tensor '{name}': shape product overflows"))?;
+            let dim_usize = usize::try_from(dim)
+                .map_err(|_| format!("tensor '{name}': dimension {dim} exceeds usize"))?;
+            shape.push(dim_usize);
+        }
+        let byte_len = numel_u64
+            .checked_mul(4)
+            .ok_or_else(|| format!("tensor '{name}': byte length overflows"))?;
+        // Validate against the remaining bytes before any allocation.
+        let remaining = (buf.len() - pos) as u64;
+        if byte_len > remaining {
+            return Err(format!(
+                "tensor '{name}': header claims {byte_len} data bytes but only \
+                 {remaining} remain"
+            ));
+        }
+        let numel = numel_u64 as usize; // <= remaining/4, fits usize
         let raw = take(&mut pos, numel * 4)?;
         let data: Vec<f32> = raw
             .chunks_exact(4)
@@ -113,5 +154,86 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Build a crafted checkpoint: magic, tensor count, then one tensor
+    /// header with the given shape dims and (possibly missing) data bytes.
+    fn crafted(shape_dims: &[u64], data_bytes: usize) -> Vec<u8> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        let name = b"t";
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name);
+        buf.extend_from_slice(&(shape_dims.len() as u32).to_le_bytes());
+        for &d in shape_dims {
+            buf.extend_from_slice(&d.to_le_bytes());
+        }
+        buf.resize(buf.len() + data_bytes, 0u8);
+        buf
+    }
+
+    fn write_and_load(tag: &str, bytes: &[u8]) -> Result<Vec<(String, Tensor)>, String> {
+        let dir = std::env::temp_dir().join("metatt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("crafted_{tag}.bin"));
+        std::fs::write(&path, bytes).unwrap();
+        let res = load(&path);
+        std::fs::remove_file(&path).ok();
+        res
+    }
+
+    #[test]
+    fn crafted_shape_product_overflow_is_rejected() {
+        // u64::MAX * 2 wraps in release if multiplied unchecked; the loader
+        // must reject it cleanly instead of computing a bogus take length.
+        let err = write_and_load("overflow", &crafted(&[u64::MAX, 2], 0)).unwrap_err();
+        assert!(err.contains("overflow"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn crafted_numel_times_four_overflow_is_rejected() {
+        // numel fits u64 but numel*4 wraps: 2^62 elements.
+        let err = write_and_load("x4", &crafted(&[1u64 << 62], 0)).unwrap_err();
+        assert!(
+            err.contains("overflow") || err.contains("remain"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn crafted_oversized_numel_is_rejected_before_allocating() {
+        // A "1 TB tensor" header over an 8-byte body must fail on the
+        // remaining-bytes check, never preallocate.
+        let err = write_and_load("huge", &crafted(&[1u64 << 38], 8)).unwrap_err();
+        assert!(err.contains("remain"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn crafted_tensor_count_is_capped_by_file_size() {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // 4 billion tensors
+        let err = write_and_load("count", &buf).unwrap_err();
+        assert!(err.contains("tensors"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn crafted_implausible_rank_is_rejected() {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(b't');
+        buf.extend_from_slice(&1000u32.to_le_bytes()); // ndim = 1000
+        let err = write_and_load("rank", &buf).unwrap_err();
+        assert!(err.contains("rank"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn truncated_data_is_rejected() {
+        // Valid 4x4 header but only half the f32 payload present.
+        let err = write_and_load("trunc", &crafted(&[4, 4], 32)).unwrap_err();
+        assert!(err.contains("remain"), "unexpected error: {err}");
     }
 }

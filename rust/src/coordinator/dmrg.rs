@@ -129,12 +129,17 @@ pub fn run_dmrg(
 
     // Verify the whole rank ladder is executable before starting (on the
     // PJRT backend this checks the manifest; the ref backend synthesizes
-    // every rank's layout, so the ladder is always available).
+    // every rank's layout, so the ladder is always available). Each rank's
+    // check is independent — fan out across the backend's worker budget.
     let ladder = cfg.schedule.ranks_visited(cfg.start_rank);
-    for &r in &ladder {
+    let checks = crate::util::threadpool::par_map(&ladder, backend.threads(), |&r| {
         backend
             .entry(&make_spec(StepKind::Train, model, kind, r, cfg.train.batch_size))
-            .with_context(|| format!("rank-{r} artifact missing for the DMRG ladder"))?;
+            .map(|_| ())
+            .with_context(|| format!("rank-{r} artifact missing for the DMRG ladder"))
+    });
+    for c in checks {
+        c?;
     }
 
     // Frozen inputs are rank-independent; assemble once, re-bind per rank.

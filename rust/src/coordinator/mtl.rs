@@ -106,21 +106,26 @@ pub fn run_mtl(
     let train_runner = backend.bind(&train_spec, &frozen)?;
     let eval_runner = backend.bind(&eval_spec, &frozen)?;
 
-    // Data: generate + downsample per the paper's protocol.
+    // Data: generate + downsample per the paper's protocol. Generation is
+    // per-task-seeded (independent), so it fans out across the backend's
+    // worker budget; downsampling shares one RNG stream and stays serial
+    // in task order so the draw sequence never depends on the thread count.
     let mut data_rng = Pcg64::with_stream(cfg.train.seed, 0xd011 + tasks.len() as u64);
-    let datasets: Vec<Dataset> = tasks
-        .iter()
-        .map(|t| {
-            let info = t.info();
-            let full = t.generate_at(
-                info.train_size.min(cfg.per_task_cap * 2),
-                info.eval_size,
-                cfg.train.seed,
-                dims.max_seq,
-                dims.vocab,
-            );
-            downsample(&full, cfg.per_task_cap, cfg.eval_cap, &mut data_rng)
-        })
+    let generated: Vec<Dataset> = crate::util::threadpool::par_map(tasks, backend.threads(), |t| {
+        let info = t.info();
+        t.generate_at(
+            info.train_size.min(cfg.per_task_cap * 2),
+            info.eval_size,
+            cfg.train.seed,
+            dims.max_seq,
+            dims.vocab,
+        )
+    });
+    // (Peak memory holds all T pre-downsample sets at once — the price of
+    // parallel generation; each is freed as its downsample completes.)
+    let datasets: Vec<Dataset> = generated
+        .into_iter()
+        .map(|full| downsample(&full, cfg.per_task_cap, cfg.eval_cap, &mut data_rng))
         .collect();
 
     let mut rng = Pcg64::with_stream(cfg.train.seed, 0x3417);

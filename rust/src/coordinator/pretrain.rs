@@ -58,6 +58,12 @@ pub fn pretrain(
     let names: Vec<String> = named.into_iter().map(|(n, _)| n).collect();
 
     let runner = backend.bind(&spec, &std::sync::Arc::new(HashMap::new()))?;
+    println!(
+        "[pretrain {}] backend: {} ({} worker threads)",
+        preset.name(),
+        backend.platform(),
+        backend.threads()
+    );
     let dims = preset.dims(1);
     let mut corpus = MlmCorpus::new(dims.vocab, spec.seq, cfg.seed);
     let sched = LrSchedule::new(cfg.lr, cfg.steps, cfg.warmup as f32 / cfg.steps.max(1) as f32);

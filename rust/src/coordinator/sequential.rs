@@ -82,6 +82,7 @@ pub fn run_sequential(
             tasks: vec![task.name().to_string()],
             train: train.clone(),
             backend: backend.kind(),
+            threads: Some(backend.threads()),
         };
         SingleTaskTrainer::prepare(backend, &exp, task, checkpoint)
     }

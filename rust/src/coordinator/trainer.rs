@@ -294,6 +294,7 @@ pub fn run_single_task(
         tasks: vec![task.name().to_string()],
         train: train.clone(),
         backend: backend.kind(),
+        threads: Some(backend.threads()),
     };
     let trainer = SingleTaskTrainer::prepare(backend, &exp, task, checkpoint)
         .with_context(|| format!("prepare {} on {}", adapter_spec.kind.name(), task.name()))?;

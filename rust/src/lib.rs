@@ -32,7 +32,7 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`tensor`] | dense f32 host tensors (DMRG, optimizer, metrics) |
+//! | [`tensor`] | dense f32 host tensors; blocked matmul kernel family with row-band parallelism (`*_mt`) |
 //! | [`linalg`] | Householder QR + Jacobi SVD (+ truncated SVD) |
 //! | [`tt`] | tensor-train container, MetaTT variants, DMRG sweep |
 //! | [`adapters`] | parameter layouts + analytic counts for all baselines |
@@ -42,8 +42,9 @@
 //! | [`runtime`] | `Backend`/`Step` seam: pure-rust ref executor, spec-derived I/O layouts, artifact registry, PJRT cache (feature `pjrt`) |
 //! | [`coordinator`] | trainers (single-task, MTL, DMRG), checkpoints |
 //! | [`bench`] | micro-bench harness + paper-style table emitters |
-//! | [`config`] | experiment configuration (TOML, incl. backend selection) |
+//! | [`config`] | experiment configuration (TOML, incl. backend + `[runtime] threads`) |
 //! | [`cli`] | launcher argument parsing |
+//! | [`util`] | PCG RNG, JSON/TOML, thread pools: FIFO [`util::threadpool::ThreadPool`] for coordinator fan-out and the scoped pool (`scope_for` / `scope_map` / `scope_rows`) that runs borrowed parallel regions inside kernels — 1-thread and N-thread runs are bit-identical |
 
 pub mod adapters;
 pub mod bench;

@@ -40,6 +40,9 @@ commands:
 options shared:
   --backend ref|pjrt   execution backend (default ref: hermetic pure-rust
                        CPU; pjrt needs `--features pjrt` + `make artifacts`)
+  --threads N          worker threads for the ref backend's step execution
+                       (default: METATT_THREADS or host parallelism; results
+                       are bit-identical for any N)
   --model PRESET       model preset (default tiny)
   --artifacts DIR      HLO artifact dir for the pjrt backend (default artifacts)
 ";
@@ -52,7 +55,7 @@ fn main() {
 }
 
 const OPTS: &[&str] = &[
-    "task-a", "task-b", "config", "backend",
+    "task-a", "task-b", "config", "backend", "threads",
     "model", "steps", "lr", "seed", "task", "tasks", "adapter", "rank", "alpha",
     "epochs", "batch", "init", "train-cap", "eval-cap", "artifacts", "schedule",
     "start-rank", "requests", "warmup-ratio", "grad-clip",
@@ -78,13 +81,35 @@ fn run() -> Result<()> {
     }
 }
 
-/// Build the execution backend selected by `--backend` (default: the
-/// hermetic pure-rust reference backend).
-fn backend_for(args: &Args) -> Result<Box<dyn Backend>> {
-    let kind = BackendKind::from_name(&args.str_or("backend", "ref"))
-        .map_err(|e| anyhow!(e))?;
+/// Resolve the worker-thread budget: `--threads` wins, then a TOML
+/// `[runtime] threads` (run command), then `METATT_THREADS` / host auto.
+fn threads_for(args: &Args, toml_threads: Option<usize>) -> Result<usize> {
+    let explicit = args.usize_opt("threads").map_err(|e| anyhow!(e))?;
+    metatt::util::threadpool::resolve_threads(explicit.or(toml_threads))
+        .map_err(|e| anyhow!(e))
+}
+
+/// Build the execution backend. The kind comes from `--backend` (or
+/// `default_kind` when the flag is absent — the `run` command passes the
+/// TOML's choice); the thread budget from `--threads` > `toml_threads` >
+/// env/auto.
+fn backend_with(
+    args: &Args,
+    default_kind: BackendKind,
+    toml_threads: Option<usize>,
+) -> Result<Box<dyn Backend>> {
+    let kind = match args.get("backend") {
+        Some(name) => BackendKind::from_name(name).map_err(|e| anyhow!(e))?,
+        None => default_kind,
+    };
     let artifacts = args.str_or("artifacts", "artifacts");
-    make_backend(kind, Path::new(&artifacts))
+    make_backend(kind, Path::new(&artifacts), threads_for(args, toml_threads)?)
+}
+
+/// Backend selected by `--backend` (default ref: the hermetic pure-rust
+/// reference backend).
+fn backend_for(args: &Args) -> Result<Box<dyn Backend>> {
+    backend_with(args, BackendKind::Ref, None)
 }
 
 /// `metatt run --config configs/foo.toml` — config-file-driven single run.
@@ -95,14 +120,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("run needs --config <file.toml>"))?;
     let cfg = metatt::config::ExperimentConfig::from_toml(Path::new(path))
         .map_err(|e| anyhow!(e))?;
-    // The TOML picks the backend; an explicit --backend flag overrides it.
-    let backend = match args.get("backend") {
-        Some(_) => backend_for(args)?,
-        None => {
-            let artifacts = args.str_or("artifacts", "artifacts");
-            make_backend(cfg.backend, Path::new(&artifacts))?
-        }
-    };
+    // The TOML picks the backend and threads; explicit flags override.
+    let backend = backend_with(args, cfg.backend, cfg.threads)?;
     let ckpt = ckpt_for(args, cfg.model);
     let spec = cfg.adapter_spec();
     if cfg.tasks.len() > 1 {

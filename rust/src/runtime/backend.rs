@@ -111,6 +111,13 @@ pub trait Backend: Send + Sync {
     /// hot-swap telemetry.
     fn cached_executables(&self) -> usize;
 
+    /// Worker-thread budget this backend executes steps with. Coordinators
+    /// use it for their own fan-out (e.g. parallel dataset generation);
+    /// backends without host-side parallelism report 1.
+    fn threads(&self) -> usize {
+        1
+    }
+
     /// The MLM pretraining spec for a preset.
     fn pretrain_spec(&self, preset: ModelPreset) -> Result<ArtifactSpec>;
 
@@ -119,18 +126,27 @@ pub trait Backend: Send + Sync {
 }
 
 /// Construct a backend by kind. `artifact_dir` is only read by the PJRT
-/// backend (manifest + HLO files); the reference backend ignores it.
-pub fn make_backend(kind: BackendKind, artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+/// backend (manifest + HLO files); `threads` (>= 1) is the worker budget
+/// of the reference backend's step execution — PJRT delegates threading to
+/// XLA and ignores it.
+pub fn make_backend(
+    kind: BackendKind,
+    artifact_dir: &Path,
+    threads: usize,
+) -> Result<Box<dyn Backend>> {
     match kind {
         BackendKind::Ref => {
             let _ = artifact_dir;
-            Ok(Box::new(super::RefBackend::new()))
+            Ok(Box::new(super::RefBackend::with_threads(threads)?))
         }
         #[cfg(feature = "pjrt")]
-        BackendKind::Pjrt => Ok(Box::new(super::Runtime::new(artifact_dir)?)),
+        BackendKind::Pjrt => {
+            let _ = threads;
+            Ok(Box::new(super::Runtime::new(artifact_dir)?))
+        }
         #[cfg(not(feature = "pjrt"))]
         BackendKind::Pjrt => {
-            let _ = artifact_dir;
+            let _ = (artifact_dir, threads);
             anyhow::bail!(
                 "backend 'pjrt' is not compiled into this binary — rebuild with \
                  `cargo build --features pjrt` (and real PJRT bindings), or use \
@@ -141,15 +157,18 @@ pub fn make_backend(kind: BackendKind, artifact_dir: &Path) -> Result<Box<dyn Ba
 }
 
 /// Backend selection from the environment: `METATT_BACKEND` (ref|pjrt,
-/// default ref) and `METATT_ARTIFACTS` (default "artifacts"). Used by the
-/// bench binaries and examples so one env var flips the whole harness.
+/// default ref), `METATT_ARTIFACTS` (default "artifacts"), and
+/// `METATT_THREADS` (default: host parallelism). Used by the bench
+/// binaries and examples so env vars flip the whole harness.
 pub fn backend_from_env() -> Result<Box<dyn Backend>> {
     let kind = match std::env::var("METATT_BACKEND") {
         Ok(v) => BackendKind::from_name(&v).map_err(anyhow::Error::msg)?,
         Err(_) => BackendKind::Ref,
     };
     let dir = std::env::var("METATT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
-    make_backend(kind, Path::new(&dir))
+    let threads =
+        crate::util::threadpool::resolve_threads(None).map_err(anyhow::Error::msg)?;
+    make_backend(kind, Path::new(&dir), threads)
 }
 
 #[cfg(test)]
@@ -166,15 +185,22 @@ mod tests {
 
     #[test]
     fn ref_backend_constructs_without_artifacts() {
-        let b = make_backend(BackendKind::Ref, Path::new("/nonexistent")).unwrap();
+        let b = make_backend(BackendKind::Ref, Path::new("/nonexistent"), 2).unwrap();
         assert_eq!(b.kind(), BackendKind::Ref);
         assert_eq!(b.cached_executables(), 0);
+        assert_eq!(b.threads(), 2);
+    }
+
+    #[test]
+    fn zero_threads_is_a_clean_error() {
+        let err = make_backend(BackendKind::Ref, Path::new("."), 0).unwrap_err();
+        assert!(format!("{err:#}").contains(">= 1"), "{err:#}");
     }
 
     #[cfg(not(feature = "pjrt"))]
     #[test]
     fn pjrt_backend_requires_feature() {
-        let err = make_backend(BackendKind::Pjrt, Path::new("artifacts")).unwrap_err();
+        let err = make_backend(BackendKind::Pjrt, Path::new("artifacts"), 1).unwrap_err();
         assert!(format!("{err:#}").contains("--features pjrt"));
     }
 }

@@ -15,6 +15,15 @@
 //! array, all sliced accumulations are contiguous chunks — no strided
 //! scatter is ever needed. Gradients are checked against central finite
 //! differences in `tests/ref_backend.rs`.
+//!
+//! **Parallel execution.** Every step entry point takes a thread budget
+//! (plumbed from `--threads` via the backend). Inside a step the work is
+//! data-parallel along structurally independent axes: the big GEMMs split
+//! output row bands (`tensor::ops::*_mt`), attention fans out per
+//! (batch, head), and the LayerNorm / GELU / MLM-softmax row loops split
+//! row bands. Cross-row *reductions* (bias column sums, LN γ/β grads, the
+//! scalar loss) always run in a fixed serial order, so 1-thread and
+//! N-thread executions are **bit-identical** (`tests/determinism.rs`).
 
 use super::registry::{ArtifactEntry, IoSpec};
 use crate::adapters::AdapterKind;
@@ -23,12 +32,25 @@ use crate::data::{Batch, MlmBatch};
 use crate::tensor::Tensor;
 use crate::tt::MetaTtKind;
 use crate::util::rng::Pcg64;
+use crate::util::threadpool::{scope_map, scope_rows, SharedSliceMut};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
 const PAD_ID: i32 = 0;
 const LN_EPS: f32 = 1e-5;
 const MASK_NEG: f32 = -1e9;
+
+/// Minimum elementwise work (elements touched) for a row loop to go
+/// parallel; below it region dispatch costs more than the loop.
+const PAR_MIN_ELEMS: usize = 1 << 14;
+
+/// Minimum rows per band for the row-parallel loops.
+const ROW_BAND: usize = 16;
+
+/// Gate a thread budget on the amount of work: serial below the threshold.
+fn gate(threads: usize, work: usize) -> usize {
+    crate::util::threadpool::gated_threads(threads, work, PAR_MIN_ELEMS)
+}
 
 // ---------------------------------------------------------------------------
 // Small dense helpers.
@@ -140,54 +162,93 @@ struct LnCache {
 }
 
 /// `y = (x - μ)/sqrt(var + ε) · g + b` per row (biased variance, as jnp.var).
-fn layer_norm(x: &Tensor, gamma: &[f32], beta: &[f32]) -> (Tensor, LnCache) {
+/// Rows are independent and band-split across `threads`; each row's stats
+/// are computed by exactly one worker, so thread count never changes bits.
+fn layer_norm(
+    x: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    threads: usize,
+) -> (Tensor, LnCache) {
     let (n, d) = (x.shape()[0], x.shape()[1]);
     let mut xhat = Tensor::zeros(&[n, d]);
     let mut y = Tensor::zeros(&[n, d]);
     let mut inv_std = vec![0.0f32; n];
-    for i in 0..n {
-        let row = &x.data()[i * d..(i + 1) * d];
-        let mu = row.iter().sum::<f32>() / d as f32;
-        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-        let inv = 1.0 / (var + LN_EPS).sqrt();
-        inv_std[i] = inv;
-        for j in 0..d {
-            let xh = (row[j] - mu) * inv;
-            xhat.data_mut()[i * d + j] = xh;
-            y.data_mut()[i * d + j] = xh * gamma[j] + beta[j];
-        }
+    {
+        let xs = x.data();
+        let xhs = SharedSliceMut::new(xhat.data_mut());
+        let ys = SharedSliceMut::new(y.data_mut());
+        let invs = SharedSliceMut::new(&mut inv_std);
+        scope_rows(gate(threads, n * d), n, ROW_BAND, |band| {
+            // SAFETY: bands are disjoint row ranges; each buffer is sliced
+            // to this band only.
+            let xh_band = unsafe { xhs.range_mut(band.start * d, band.end * d) };
+            let y_band = unsafe { ys.range_mut(band.start * d, band.end * d) };
+            let inv_band = unsafe { invs.range_mut(band.start, band.end) };
+            for i in band.clone() {
+                let row = &xs[i * d..(i + 1) * d];
+                let o = (i - band.start) * d;
+                let mu = row.iter().sum::<f32>() / d as f32;
+                let var =
+                    row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+                let inv = 1.0 / (var + LN_EPS).sqrt();
+                inv_band[i - band.start] = inv;
+                for j in 0..d {
+                    let xh = (row[j] - mu) * inv;
+                    xh_band[o + j] = xh;
+                    y_band[o + j] = xh * gamma[j] + beta[j];
+                }
+            }
+        });
     }
     (y, LnCache { xhat, inv_std })
 }
 
 /// LayerNorm backward. Returns dx; if `dgb` is Some((dgamma, dbeta)) the
-/// parameter gradients are accumulated into the provided buffers.
+/// parameter gradients are accumulated into the provided buffers. The dx
+/// rows are band-parallel; the γ/β reduction runs in a fixed serial row
+/// order so its accumulation never depends on the thread count.
 fn layer_norm_backward(
     dy: &Tensor,
     cache: &LnCache,
     gamma: &[f32],
-    mut dgb: Option<(&mut [f32], &mut [f32])>,
+    dgb: Option<(&mut [f32], &mut [f32])>,
+    threads: usize,
 ) -> Tensor {
     let (n, d) = (dy.shape()[0], dy.shape()[1]);
     let mut dx = Tensor::zeros(&[n, d]);
-    for i in 0..n {
-        let dyr = &dy.data()[i * d..(i + 1) * d];
-        let xhr = &cache.xhat.data()[i * d..(i + 1) * d];
-        let mut m1 = 0.0f32; // mean of dxhat
-        let mut m2 = 0.0f32; // mean of dxhat ∘ xhat
-        for j in 0..d {
-            let dxh = dyr[j] * gamma[j];
-            m1 += dxh;
-            m2 += dxh * xhr[j];
-        }
-        m1 /= d as f32;
-        m2 /= d as f32;
-        let inv = cache.inv_std[i];
-        for j in 0..d {
-            let dxh = dyr[j] * gamma[j];
-            dx.data_mut()[i * d + j] = (dxh - m1 - xhr[j] * m2) * inv;
-        }
-        if let Some((ref mut dg, ref mut db)) = dgb {
+    {
+        let dys = dy.data();
+        let xhs = cache.xhat.data();
+        let dxs = SharedSliceMut::new(dx.data_mut());
+        scope_rows(gate(threads, n * d), n, ROW_BAND, |band| {
+            // SAFETY: bands are disjoint row ranges of dx.
+            let dx_band = unsafe { dxs.range_mut(band.start * d, band.end * d) };
+            for i in band.clone() {
+                let dyr = &dys[i * d..(i + 1) * d];
+                let xhr = &xhs[i * d..(i + 1) * d];
+                let o = (i - band.start) * d;
+                let mut m1 = 0.0f32; // mean of dxhat
+                let mut m2 = 0.0f32; // mean of dxhat ∘ xhat
+                for j in 0..d {
+                    let dxh = dyr[j] * gamma[j];
+                    m1 += dxh;
+                    m2 += dxh * xhr[j];
+                }
+                m1 /= d as f32;
+                m2 /= d as f32;
+                let inv = cache.inv_std[i];
+                for j in 0..d {
+                    let dxh = dyr[j] * gamma[j];
+                    dx_band[o + j] = (dxh - m1 - xhr[j] * m2) * inv;
+                }
+            }
+        });
+    }
+    if let Some((dg, db)) = dgb {
+        for i in 0..n {
+            let dyr = &dy.data()[i * d..(i + 1) * d];
+            let xhr = &cache.xhat.data()[i * d..(i + 1) * d];
             for j in 0..d {
                 dg[j] += dyr[j] * xhr[j];
                 db[j] += dyr[j];
@@ -331,12 +392,21 @@ struct AdapterCtx<'a> {
     heads: usize,
     matrices: usize,
     d: usize,
+    /// Thread budget for the activation-sized GEMMs (the r×r factor
+    /// products stay serial — they are far below the parallel threshold).
+    threads: usize,
     /// VeRA's frozen shared projections (seed-fixed), built once per step.
     vera_frozen: Option<(Tensor, Tensor)>,
 }
 
 impl<'a> AdapterCtx<'a> {
-    fn new(entry: &ArtifactEntry, params: &'a [Tensor], alpha: f32, task: usize) -> Result<Self> {
+    fn new(
+        entry: &ArtifactEntry,
+        params: &'a [Tensor],
+        alpha: f32,
+        task: usize,
+        threads: usize,
+    ) -> Result<Self> {
         let dims = dims_of(entry)?;
         let kind = match entry.spec.adapter.as_str() {
             "full" | "none" => None,
@@ -365,6 +435,7 @@ impl<'a> AdapterCtx<'a> {
             heads: dims.h,
             matrices: 2,
             d: dims.d,
+            threads,
             vera_frozen,
         })
     }
@@ -373,14 +444,15 @@ impl<'a> AdapterCtx<'a> {
     fn apply(&self, x: &Tensor, layer: usize, matrix: usize) -> (Tensor, AdapterCache) {
         let (n, d, r) = (x.shape()[0], self.d, self.rank);
         let a = self.alpha;
+        let th = self.threads;
         match self.kind {
             None => (Tensor::zeros(&[n, d]), AdapterCache::None),
             Some(AdapterKind::MetaTt(MetaTtKind::FourD)) => {
                 let [g1, g2, g3, g4] = self.p4();
                 let mid = chunk_mat(g2, layer, r, r).matmul(&chunk_mat(g3, matrix, r, r));
-                let xg1 = x.matmul(g1);
+                let xg1 = x.matmul_mt(g1, th);
                 let xgm = xg1.matmul(&mid);
-                let delta = xgm.matmul(g4).scale(a);
+                let delta = xgm.matmul_mt(g4, th).scale(a);
                 (delta, AdapterCache::Tt4 { xg1, xgm, mid })
             }
             Some(AdapterKind::MetaTt(MetaTtKind::FourPlusOneD)) => {
@@ -391,22 +463,22 @@ impl<'a> AdapterCtx<'a> {
                 let ab = ca.matmul(&cb);
                 let bc = cb.matmul(&cc);
                 let mid = ab.matmul(&cc);
-                let xg1 = x.matmul(g1);
+                let xg1 = x.matmul_mt(g1, th);
                 let xgm = xg1.matmul(&mid);
-                let delta = xgm.matmul(g5).scale(a);
+                let delta = xgm.matmul_mt(g5, th).scale(a);
                 (delta, AdapterCache::Tt4p1 { xg1, xgm, ca, ab, bc, mid })
             }
             Some(AdapterKind::MetaTt(MetaTtKind::FiveD)) => {
                 let [g1, g2, g3, g4, g5] = self.p5();
                 let dh = d / self.heads;
                 let lm = chunk_mat(g2, layer, r, r).matmul(&chunk_mat(g3, matrix, r, r));
-                let xg1 = x.matmul(g1);
+                let xg1 = x.matmul_mt(g1, th);
                 let xlm = xg1.matmul(&lm);
                 let mut delta = Tensor::zeros(&[n, d]);
                 let mut xh = Vec::with_capacity(self.heads);
                 for hh in 0..self.heads {
                     let xhh = xlm.matmul(&chunk_mat(g4, hh, r, r));
-                    let y = xhh.matmul(g5).scale(a); // (n, dh)
+                    let y = xhh.matmul_mt(g5, th).scale(a); // (n, dh)
                     add_block(&mut delta, 0, hh * dh, &y);
                     xh.push(xhh);
                 }
@@ -417,8 +489,8 @@ impl<'a> AdapterCtx<'a> {
                 let idx = layer * self.matrices + matrix;
                 let am = chunk_mat(pa, idx, d, r);
                 let bm = chunk_mat(pb, idx, r, d);
-                let xa = x.matmul(&am);
-                let delta = xa.matmul(&bm).scale(a);
+                let xa = x.matmul_mt(&am, th);
+                let delta = xa.matmul_mt(&bm, th).scale(a);
                 (delta, AdapterCache::Lora { xa })
             }
             Some(AdapterKind::VeRa) => {
@@ -426,9 +498,9 @@ impl<'a> AdapterCtx<'a> {
                 let idx = layer * self.matrices + matrix;
                 let dvec = &self.params[0].data()[idx * r..(idx + 1) * r];
                 let bvec = &self.params[1].data()[idx * d..(idx + 1) * d];
-                let xa = x.matmul(fa);
+                let xa = x.matmul_mt(fa, th);
                 let t = mul_cols(&xa, dvec);
-                let tb = t.matmul(fb);
+                let tb = t.matmul_mt(fb, th);
                 let delta = mul_cols(&tb, bvec).scale(a);
                 (delta, AdapterCache::Vera { xa, tb })
             }
@@ -436,9 +508,9 @@ impl<'a> AdapterCtx<'a> {
                 let (u, sall, vmat) = (&self.params[0], &self.params[1], &self.params[2]);
                 let idx = layer * self.matrices + matrix;
                 let sm = chunk_mat(sall, idx, r, r);
-                let xu = x.matmul(u);
+                let xu = x.matmul_mt(u, th);
                 let xus = xu.matmul(&sm);
-                let delta = xus.matmul(vmat).scale(a);
+                let delta = xus.matmul_mt(vmat, th).scale(a);
                 (delta, AdapterCache::Lotr { xu, xus, sm })
             }
             Some(AdapterKind::Full) => (Tensor::zeros(&[n, d]), AdapterCache::None),
@@ -458,30 +530,31 @@ impl<'a> AdapterCtx<'a> {
         sink: &mut GradSink,
     ) {
         let (d, r) = (self.d, self.rank);
+        let th = self.threads;
         let dya = dy.scale(self.alpha); // fold α once
         match (self.kind, cache) {
             (None, _) | (Some(AdapterKind::Full), _) => {}
             (Some(AdapterKind::MetaTt(MetaTtKind::FourD)), AdapterCache::Tt4 { xg1, xgm, mid }) => {
                 let [g1, g2, g3, g4] = self.p4();
-                sink.add_all("g4", &xgm.t_matmul(&dya));
-                let dxgm = dya.matmul_t(g4);
-                let dmid = xg1.t_matmul(&dxgm);
+                sink.add_all("g4", &xgm.t_matmul_mt(&dya, th));
+                let dxgm = dya.matmul_t_mt(g4, th);
+                let dmid = xg1.t_matmul_mt(&dxgm, th);
                 let g2l = chunk_mat(g2, layer, r, r);
                 let g3m = chunk_mat(g3, matrix, r, r);
                 sink.add_chunk("g2", layer * r * r, dmid.matmul_t(&g3m).data());
                 sink.add_chunk("g3", matrix * r * r, g2l.t_matmul(&dmid).data());
                 let dxg1 = dxgm.matmul_t(mid);
-                sink.add_all("g1", &x.t_matmul(&dxg1));
-                dx.axpy(1.0, &dxg1.matmul_t(g1));
+                sink.add_all("g1", &x.t_matmul_mt(&dxg1, th));
+                dx.axpy(1.0, &dxg1.matmul_t_mt(g1, th));
             }
             (
                 Some(AdapterKind::MetaTt(MetaTtKind::FourPlusOneD)),
                 AdapterCache::Tt4p1 { xg1, xgm, ca, ab, bc, mid },
             ) => {
                 let [g1, _g2, _g3, g4, g5] = self.p5();
-                sink.add_all("g5", &xgm.t_matmul(&dya));
-                let dxgm = dya.matmul_t(g5);
-                let dmid = xg1.t_matmul(&dxgm);
+                sink.add_all("g5", &xgm.t_matmul_mt(&dya, th));
+                let dxgm = dya.matmul_t_mt(g5, th);
+                let dmid = xg1.t_matmul_mt(&dxgm, th);
                 let cc = chunk_mat(g4, matrix, r, r);
                 sink.add_chunk("g2", layer * r * r, dmid.matmul_t(bc).data());
                 sink.add_chunk(
@@ -491,8 +564,8 @@ impl<'a> AdapterCtx<'a> {
                 );
                 sink.add_chunk("g4", matrix * r * r, ab.t_matmul(&dmid).data());
                 let dxg1 = dxgm.matmul_t(mid);
-                sink.add_all("g1", &x.t_matmul(&dxg1));
-                dx.axpy(1.0, &dxg1.matmul_t(g1));
+                sink.add_all("g1", &x.t_matmul_mt(&dxg1, th));
+                dx.axpy(1.0, &dxg1.matmul_t_mt(g1, th));
             }
             (
                 Some(AdapterKind::MetaTt(MetaTtKind::FiveD)),
@@ -504,30 +577,30 @@ impl<'a> AdapterCtx<'a> {
                 let mut dxlm = Tensor::zeros(&[n, r]);
                 for hh in 0..self.heads {
                     let dyh = block(&dya, 0, n, hh * dh, dh);
-                    sink.add_all("g5", &xh[hh].t_matmul(&dyh));
-                    let dxh = dyh.matmul_t(g5);
-                    sink.add_chunk("g4", hh * r * r, xlm.t_matmul(&dxh).data());
+                    sink.add_all("g5", &xh[hh].t_matmul_mt(&dyh, th));
+                    let dxh = dyh.matmul_t_mt(g5, th);
+                    sink.add_chunk("g4", hh * r * r, xlm.t_matmul_mt(&dxh, th).data());
                     let g4h = chunk_mat(g4, hh, r, r);
                     dxlm.axpy(1.0, &dxh.matmul_t(&g4h));
                 }
-                let dlm = xg1.t_matmul(&dxlm);
+                let dlm = xg1.t_matmul_mt(&dxlm, th);
                 let g2l = chunk_mat(g2, layer, r, r);
                 let g3m = chunk_mat(g3, matrix, r, r);
                 sink.add_chunk("g2", layer * r * r, dlm.matmul_t(&g3m).data());
                 sink.add_chunk("g3", matrix * r * r, g2l.t_matmul(&dlm).data());
                 let dxg1 = dxlm.matmul_t(lm);
-                sink.add_all("g1", &x.t_matmul(&dxg1));
-                dx.axpy(1.0, &dxg1.matmul_t(g1));
+                sink.add_all("g1", &x.t_matmul_mt(&dxg1, th));
+                dx.axpy(1.0, &dxg1.matmul_t_mt(g1, th));
             }
             (Some(AdapterKind::LoRa), AdapterCache::Lora { xa }) => {
                 let (pa, pb) = (&self.params[0], &self.params[1]);
                 let idx = layer * self.matrices + matrix;
                 let am = chunk_mat(pa, idx, d, r);
                 let bm = chunk_mat(pb, idx, r, d);
-                sink.add_chunk("lora_b", idx * r * d, xa.t_matmul(&dya).data());
-                let dxa = dya.matmul_t(&bm);
-                sink.add_chunk("lora_a", idx * d * r, x.t_matmul(&dxa).data());
-                dx.axpy(1.0, &dxa.matmul_t(&am));
+                sink.add_chunk("lora_b", idx * r * d, xa.t_matmul_mt(&dya, th).data());
+                let dxa = dya.matmul_t_mt(&bm, th);
+                sink.add_chunk("lora_a", idx * d * r, x.t_matmul_mt(&dxa, th).data());
+                dx.axpy(1.0, &dxa.matmul_t_mt(&am, th));
             }
             (Some(AdapterKind::VeRa), AdapterCache::Vera { xa, tb }) => {
                 let (fa, fb) = self.vera_frozen.as_ref().expect("vera frozen");
@@ -536,20 +609,20 @@ impl<'a> AdapterCtx<'a> {
                 let bvec = &self.params[1].data()[idx * d..(idx + 1) * d];
                 sink.add_chunk("vera_b", idx * d, &colsum_mul(&dya, tb));
                 let dtb = mul_cols(&dya, bvec);
-                let dt = dtb.matmul_t(fb);
+                let dt = dtb.matmul_t_mt(fb, th);
                 sink.add_chunk("vera_d", idx * r, &colsum_mul(&dt, xa));
                 let dxa = mul_cols(&dt, dvec);
-                dx.axpy(1.0, &dxa.matmul_t(fa));
+                dx.axpy(1.0, &dxa.matmul_t_mt(fa, th));
             }
             (Some(AdapterKind::LoTr), AdapterCache::Lotr { xu, xus, sm }) => {
                 let (u, _sall, vmat) = (&self.params[0], &self.params[1], &self.params[2]);
                 let idx = layer * self.matrices + matrix;
-                sink.add_all("lotr_v", &xus.t_matmul(&dya));
-                let dxus = dya.matmul_t(vmat);
-                sink.add_chunk("lotr_s", idx * r * r, xu.t_matmul(&dxus).data());
+                sink.add_all("lotr_v", &xus.t_matmul_mt(&dya, th));
+                let dxus = dya.matmul_t_mt(vmat, th);
+                sink.add_chunk("lotr_s", idx * r * r, xu.t_matmul_mt(&dxus, th).data());
                 let dxu = dxus.matmul_t(sm);
-                sink.add_all("lotr_u", &x.t_matmul(&dxu));
-                dx.axpy(1.0, &dxu.matmul_t(u));
+                sink.add_all("lotr_u", &x.t_matmul_mt(&dxu, th));
+                dx.axpy(1.0, &dxu.matmul_t_mt(u, th));
             }
             (kind, _) => panic!("adapter cache mismatch for {kind:?}"),
         }
@@ -607,28 +680,39 @@ struct EncoderCache {
 }
 
 /// Run the encoder; returns final hidden states (n × d) plus the cache the
-/// backward pass consumes.
+/// backward pass consumes. `threads` is the step's worker budget; all
+/// parallel splits are along independent rows / (batch, head) pairs so the
+/// output is identical for any value.
 fn encoder_forward(
     dims: &Dims,
     w: &Weights,
     adapter: &AdapterCtx,
     tokens: &[i32],
+    threads: usize,
 ) -> (Tensor, EncoderCache) {
     let Dims { b, s, n, d, h, dh, f, l, .. } = *dims;
-    // Embeddings: token + learned position.
+    // Embeddings: token + learned position (row-parallel gather).
     let tok_emb = w.get("tok_emb");
     let pos_emb = w.get("pos_emb");
     let mut x_emb = Tensor::zeros(&[n, d]);
-    for i in 0..n {
-        let tok = tokens[i] as usize;
-        let pos = i % s;
-        let te = &tok_emb.data()[tok * d..(tok + 1) * d];
-        let pe = &pos_emb.data()[pos * d..(pos + 1) * d];
-        for j in 0..d {
-            x_emb.data_mut()[i * d + j] = te[j] + pe[j];
-        }
+    {
+        let xs = SharedSliceMut::new(x_emb.data_mut());
+        scope_rows(gate(threads, n * d), n, ROW_BAND, |band| {
+            // SAFETY: bands are disjoint row ranges of x_emb.
+            let dst = unsafe { xs.range_mut(band.start * d, band.end * d) };
+            for i in band.clone() {
+                let tok = tokens[i] as usize;
+                let pos = i % s;
+                let te = &tok_emb.data()[tok * d..(tok + 1) * d];
+                let pe = &pos_emb.data()[pos * d..(pos + 1) * d];
+                let o = (i - band.start) * d;
+                for j in 0..d {
+                    dst[o + j] = te[j] + pe[j];
+                }
+            }
+        });
     }
-    let (x0, emb_ln) = layer_norm(&x_emb, w.vec("emb_ln_g"), w.vec("emb_ln_b"));
+    let (x0, emb_ln) = layer_norm(&x_emb, w.vec("emb_ln_g"), w.vec("emb_ln_b"), threads);
 
     let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
     let mut x = x0;
@@ -641,75 +725,91 @@ fn encoder_forward(
         let wv = chunk_mat(w.get("wv"), layer, d, d);
         let (dq, ad_q) = adapter.apply(&x_in, layer, 0);
         let (dv, ad_v) = adapter.apply(&x_in, layer, 1);
-        let mut q = x_in.matmul(&wq);
+        let mut q = x_in.matmul_mt(&wq, threads);
         add_row_bias(&mut q, w.row("bq", layer, d));
         q.axpy(1.0, &dq);
-        let mut k = x_in.matmul(&wk);
+        let mut k = x_in.matmul_mt(&wk, threads);
         add_row_bias(&mut k, w.row("bk", layer, d));
-        let mut v = x_in.matmul(&wv);
+        let mut v = x_in.matmul_mt(&wv, threads);
         add_row_bias(&mut v, w.row("bv", layer, d));
         v.axpy(1.0, &dv);
 
-        // Pad-masked multi-head attention.
+        // Pad-masked multi-head attention: the (batch, head) pairs are
+        // independent, so they fan out across workers; each pair's block is
+        // computed by one worker and assembled serially in pair order.
+        let attn_threads = gate(threads, b * h * s * s * dh);
+        let head_blocks = scope_map(attn_threads, b * h, |pair| {
+            let (bi, hi) = (pair / h, pair % h);
+            let qh = block(&q, bi * s, s, hi * dh, dh);
+            let kh = block(&k, bi * s, s, hi * dh, dh);
+            let vh = block(&v, bi * s, s, hi * dh, dh);
+            let mut scores = qh.matmul_t(&kh).scale(inv_sqrt_dh);
+            for key in 0..s {
+                if tokens[bi * s + key] == PAD_ID {
+                    for query in 0..s {
+                        let val = scores.at(query, key) + MASK_NEG;
+                        scores.set(query, key, val);
+                    }
+                }
+            }
+            // Row-wise stable softmax.
+            let mut probs = scores;
+            for qi in 0..s {
+                let row = &mut probs.data_mut()[qi * s..(qi + 1) * s];
+                let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                let mut z = 0.0f32;
+                for v in row.iter_mut() {
+                    *v = (*v - mx).exp();
+                    z += *v;
+                }
+                for v in row.iter_mut() {
+                    *v /= z;
+                }
+            }
+            let ctx_h = probs.matmul(&vh);
+            (probs, ctx_h)
+        });
         let mut ctx = Tensor::zeros(&[n, d]);
         let mut probs_all = Vec::with_capacity(b * h);
-        for bi in 0..b {
-            for hi in 0..h {
-                let qh = block(&q, bi * s, s, hi * dh, dh);
-                let kh = block(&k, bi * s, s, hi * dh, dh);
-                let vh = block(&v, bi * s, s, hi * dh, dh);
-                let mut scores = qh.matmul_t(&kh).scale(inv_sqrt_dh);
-                for key in 0..s {
-                    if tokens[bi * s + key] == PAD_ID {
-                        for query in 0..s {
-                            let val = scores.at(query, key) + MASK_NEG;
-                            scores.set(query, key, val);
-                        }
-                    }
-                }
-                // Row-wise stable softmax.
-                let mut probs = scores;
-                for qi in 0..s {
-                    let row = &mut probs.data_mut()[qi * s..(qi + 1) * s];
-                    let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-                    let mut z = 0.0f32;
-                    for v in row.iter_mut() {
-                        *v = (*v - mx).exp();
-                        z += *v;
-                    }
-                    for v in row.iter_mut() {
-                        *v /= z;
-                    }
-                }
-                let ctx_h = probs.matmul(&vh);
-                add_block(&mut ctx, bi * s, hi * dh, &ctx_h);
-                probs_all.push(probs);
-            }
+        for (pair, (probs, ctx_h)) in head_blocks.into_iter().enumerate() {
+            let (bi, hi) = (pair / h, pair % h);
+            add_block(&mut ctx, bi * s, hi * dh, &ctx_h);
+            probs_all.push(probs);
         }
         let wo = chunk_mat(w.get("wo"), layer, d, d);
-        let mut attn_out = ctx.matmul(&wo);
+        let mut attn_out = ctx.matmul_mt(&wo, threads);
         add_row_bias(&mut attn_out, w.row("bo", layer, d));
         let (x_mid, ln1) = layer_norm(
             &x_in.add(&attn_out),
             w.row("ln1_g", layer, d),
             w.row("ln1_b", layer, d),
+            threads,
         );
 
-        // GELU MLP.
+        // GELU MLP (tanh GELU is the most expensive elementwise op in the
+        // step — band-parallel over rows).
         let w1 = chunk_mat(w.get("w1"), layer, d, f);
         let w2 = chunk_mat(w.get("w2"), layer, f, d);
-        let mut u = x_mid.matmul(&w1);
+        let mut u = x_mid.matmul_mt(&w1, threads);
         add_row_bias(&mut u, w.row("b1", layer, f));
         let mut g = u.clone();
-        for v in g.data_mut() {
-            *v = gelu(*v);
+        {
+            let gs = SharedSliceMut::new(g.data_mut());
+            scope_rows(gate(threads, n * f), n, ROW_BAND, |band| {
+                // SAFETY: bands are disjoint row ranges of g.
+                let dst = unsafe { gs.range_mut(band.start * f, band.end * f) };
+                for v in dst.iter_mut() {
+                    *v = gelu(*v);
+                }
+            });
         }
-        let mut m_out = g.matmul(&w2);
+        let mut m_out = g.matmul_mt(&w2, threads);
         add_row_bias(&mut m_out, w.row("b2", layer, d));
         let (x_out, ln2) = layer_norm(
             &x_mid.add(&m_out),
             w.row("ln2_g", layer, d),
             w.row("ln2_b", layer, d),
+            threads,
         );
 
         layers.push(LayerCache {
@@ -739,6 +839,7 @@ fn encoder_forward(
 /// Reverse pass through the encoder. `d_hidden` is ∂L/∂(final hidden states).
 /// Adapter grads always flow into `sink`; encoder-weight grads only when
 /// `train_encoder` (full FT / pretraining).
+#[allow(clippy::too_many_arguments)]
 fn encoder_backward(
     dims: &Dims,
     w: &Weights,
@@ -748,6 +849,7 @@ fn encoder_backward(
     d_hidden: Tensor,
     sink: &mut GradSink,
     train_encoder: bool,
+    threads: usize,
 ) {
     let Dims { b, s, n, d, h, dh, f, l, .. } = *dims;
     let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
@@ -763,6 +865,7 @@ fn encoder_backward(
             &lc.ln2,
             w.row("ln2_g", layer, d),
             train_encoder.then_some((&mut dg_buf[..], &mut db_buf[..])),
+            threads,
         );
         if train_encoder {
             sink.add_chunk("ln2_g", layer * d, &dg_buf);
@@ -774,19 +877,27 @@ fn encoder_backward(
         let w2 = chunk_mat(w.get("w2"), layer, f, d);
         let d_mout = &d_res2; // residual: d(m_out) = d_res2, d(x_mid) += d_res2
         if train_encoder {
-            sink.add_chunk("w2", layer * f * d, lc.g.t_matmul(d_mout).data());
+            sink.add_chunk("w2", layer * f * d, lc.g.t_matmul_mt(d_mout, threads).data());
             sink.add_chunk("b2", layer * d, &colsum(d_mout));
         }
-        let mut dgelu = d_mout.matmul_t(&w2); // (n, f)
-        for (dv, &uv) in dgelu.data_mut().iter_mut().zip(lc.u.data()) {
-            *dv *= gelu_prime(uv);
+        let mut dgelu = d_mout.matmul_t_mt(&w2, threads); // (n, f)
+        {
+            let dgs = SharedSliceMut::new(dgelu.data_mut());
+            let us = lc.u.data();
+            scope_rows(gate(threads, n * f), n, ROW_BAND, |band| {
+                // SAFETY: bands are disjoint row ranges of dgelu.
+                let dst = unsafe { dgs.range_mut(band.start * f, band.end * f) };
+                for (dv, &uv) in dst.iter_mut().zip(&us[band.start * f..band.end * f]) {
+                    *dv *= gelu_prime(uv);
+                }
+            });
         }
         if train_encoder {
-            sink.add_chunk("w1", layer * d * f, lc.x_mid.t_matmul(&dgelu).data());
+            sink.add_chunk("w1", layer * d * f, lc.x_mid.t_matmul_mt(&dgelu, threads).data());
             sink.add_chunk("b1", layer * f, &colsum(&dgelu));
         }
         let mut d_xmid = d_res2.clone();
-        d_xmid.axpy(1.0, &dgelu.matmul_t(&w1));
+        d_xmid.axpy(1.0, &dgelu.matmul_t_mt(&w1, threads));
 
         // --- LN1 over (x_in + attn_out).
         let mut dg_buf = vec![0.0f32; d];
@@ -796,6 +907,7 @@ fn encoder_backward(
             &lc.ln1,
             w.row("ln1_g", layer, d),
             train_encoder.then_some((&mut dg_buf[..], &mut db_buf[..])),
+            threads,
         );
         if train_encoder {
             sink.add_chunk("ln1_g", layer * d, &dg_buf);
@@ -805,40 +917,45 @@ fn encoder_backward(
         // --- Output projection: attn_out = ctx·wo + bo.
         let wo = chunk_mat(w.get("wo"), layer, d, d);
         if train_encoder {
-            sink.add_chunk("wo", layer * d * d, lc.ctx.t_matmul(&d_res1).data());
+            sink.add_chunk("wo", layer * d * d, lc.ctx.t_matmul_mt(&d_res1, threads).data());
             sink.add_chunk("bo", layer * d, &colsum(&d_res1));
         }
-        let d_ctx = d_res1.matmul_t(&wo);
+        let d_ctx = d_res1.matmul_t_mt(&wo, threads);
 
-        // --- Attention backward per (batch, head).
+        // --- Attention backward per (batch, head): independent pairs fan
+        // out; their dq/dk/dv blocks are assembled serially in pair order.
+        let attn_threads = gate(threads, b * h * s * s * dh);
+        let grads = scope_map(attn_threads, b * h, |pair| {
+            let (bi, hi) = (pair / h, pair % h);
+            let probs = &lc.probs[pair];
+            let qh = block(&lc.q, bi * s, s, hi * dh, dh);
+            let kh = block(&lc.k, bi * s, s, hi * dh, dh);
+            let vh = block(&lc.v, bi * s, s, hi * dh, dh);
+            let d_ctx_h = block(&d_ctx, bi * s, s, hi * dh, dh);
+            let d_probs = d_ctx_h.matmul_t(&vh); // (s, s)
+            let d_vh = probs.t_matmul(&d_ctx_h);
+            // Softmax backward, row-wise.
+            let mut d_scores = Tensor::zeros(&[s, s]);
+            for qi in 0..s {
+                let pr = &probs.data()[qi * s..(qi + 1) * s];
+                let dp = &d_probs.data()[qi * s..(qi + 1) * s];
+                let dot: f32 = pr.iter().zip(dp).map(|(&p, &g)| p * g).sum();
+                for key in 0..s {
+                    d_scores.data_mut()[qi * s + key] = pr[key] * (dp[key] - dot);
+                }
+            }
+            let d_qh = d_scores.matmul(&kh).scale(inv_sqrt_dh);
+            let d_kh = d_scores.t_matmul(&qh).scale(inv_sqrt_dh);
+            (d_qh, d_kh, d_vh)
+        });
         let mut dq = Tensor::zeros(&[n, d]);
         let mut dk = Tensor::zeros(&[n, d]);
         let mut dv = Tensor::zeros(&[n, d]);
-        for bi in 0..b {
-            for hi in 0..h {
-                let probs = &lc.probs[bi * h + hi];
-                let qh = block(&lc.q, bi * s, s, hi * dh, dh);
-                let kh = block(&lc.k, bi * s, s, hi * dh, dh);
-                let vh = block(&lc.v, bi * s, s, hi * dh, dh);
-                let d_ctx_h = block(&d_ctx, bi * s, s, hi * dh, dh);
-                let d_probs = d_ctx_h.matmul_t(&vh); // (s, s)
-                let d_vh = probs.t_matmul(&d_ctx_h);
-                // Softmax backward, row-wise.
-                let mut d_scores = Tensor::zeros(&[s, s]);
-                for qi in 0..s {
-                    let pr = &probs.data()[qi * s..(qi + 1) * s];
-                    let dp = &d_probs.data()[qi * s..(qi + 1) * s];
-                    let dot: f32 = pr.iter().zip(dp).map(|(&p, &g)| p * g).sum();
-                    for key in 0..s {
-                        d_scores.data_mut()[qi * s + key] = pr[key] * (dp[key] - dot);
-                    }
-                }
-                let d_qh = d_scores.matmul(&kh).scale(inv_sqrt_dh);
-                let d_kh = d_scores.t_matmul(&qh).scale(inv_sqrt_dh);
-                add_block(&mut dq, bi * s, hi * dh, &d_qh);
-                add_block(&mut dk, bi * s, hi * dh, &d_kh);
-                add_block(&mut dv, bi * s, hi * dh, &d_vh);
-            }
+        for (pair, (d_qh, d_kh, d_vh)) in grads.into_iter().enumerate() {
+            let (bi, hi) = (pair / h, pair % h);
+            add_block(&mut dq, bi * s, hi * dh, &d_qh);
+            add_block(&mut dk, bi * s, hi * dh, &d_kh);
+            add_block(&mut dv, bi * s, hi * dh, &d_vh);
         }
 
         // --- Projections + adapters back to the layer input.
@@ -846,15 +963,15 @@ fn encoder_backward(
         let wk = chunk_mat(w.get("wk"), layer, d, d);
         let wv = chunk_mat(w.get("wv"), layer, d, d);
         let mut d_xin = d_res1; // residual branch
-        d_xin.axpy(1.0, &dq.matmul_t(&wq));
-        d_xin.axpy(1.0, &dk.matmul_t(&wk));
-        d_xin.axpy(1.0, &dv.matmul_t(&wv));
+        d_xin.axpy(1.0, &dq.matmul_t_mt(&wq, threads));
+        d_xin.axpy(1.0, &dk.matmul_t_mt(&wk, threads));
+        d_xin.axpy(1.0, &dv.matmul_t_mt(&wv, threads));
         if train_encoder {
-            sink.add_chunk("wq", layer * d * d, lc.x_in.t_matmul(&dq).data());
+            sink.add_chunk("wq", layer * d * d, lc.x_in.t_matmul_mt(&dq, threads).data());
             sink.add_chunk("bq", layer * d, &colsum(&dq));
-            sink.add_chunk("wk", layer * d * d, lc.x_in.t_matmul(&dk).data());
+            sink.add_chunk("wk", layer * d * d, lc.x_in.t_matmul_mt(&dk, threads).data());
             sink.add_chunk("bk", layer * d, &colsum(&dk));
-            sink.add_chunk("wv", layer * d * d, lc.x_in.t_matmul(&dv).data());
+            sink.add_chunk("wv", layer * d * d, lc.x_in.t_matmul_mt(&dv, threads).data());
             sink.add_chunk("bv", layer * d, &colsum(&dv));
         }
         adapter.backward(&lc.x_in, layer, 0, &lc.ad_q, &dq, &mut d_xin, sink);
@@ -870,6 +987,7 @@ fn encoder_backward(
         &cache.emb_ln,
         w.vec("emb_ln_g"),
         train_encoder.then_some((&mut dg_buf[..], &mut db_buf[..])),
+        threads,
     );
     if train_encoder {
         sink.add_chunk("emb_ln_g", 0, &dg_buf);
@@ -958,6 +1076,7 @@ fn validate_batch(entry: &ArtifactEntry, batch_size: usize, seq_len: usize) -> R
 }
 
 /// One fwd+bwd fine-tuning step. Returns (loss, grads in trainable order).
+/// `threads` is the worker budget; results are identical for any value.
 pub fn train_step(
     entry: &ArtifactEntry,
     frozen: &HashMap<String, Tensor>,
@@ -965,15 +1084,16 @@ pub fn train_step(
     batch: &Batch,
     task_id: i32,
     alpha: f32,
+    threads: usize,
 ) -> Result<(f32, Vec<Tensor>)> {
     validate_batch(entry, batch.batch_size, batch.seq_len)?;
     let dims = dims_of(entry)?;
     let task = task_id as usize;
     let w = Weights::build(entry, frozen, trainable)?;
-    let adapter = AdapterCtx::new(entry, trainable, alpha, task)?;
+    let adapter = AdapterCtx::new(entry, trainable, alpha, task, threads)?;
     let train_encoder = entry.spec.adapter == "full";
 
-    let (hidden, cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens);
+    let (hidden, cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens, threads);
     let logits = head_logits(&dims, &w, &hidden, task);
     let (loss, dlogits) = task_loss_grad(&logits, batch, dims.classes);
 
@@ -997,6 +1117,7 @@ pub fn train_step(
         d_hidden,
         &mut sink,
         train_encoder,
+        threads,
     );
     Ok((loss, sink.into_vec()))
 }
@@ -1009,13 +1130,14 @@ pub fn eval_step(
     batch: &Batch,
     task_id: i32,
     alpha: f32,
+    threads: usize,
 ) -> Result<Tensor> {
     validate_batch(entry, batch.batch_size, batch.seq_len)?;
     let dims = dims_of(entry)?;
     let task = task_id as usize;
     let w = Weights::build(entry, frozen, trainable)?;
-    let adapter = AdapterCtx::new(entry, trainable, alpha, task)?;
-    let (hidden, _cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens);
+    let adapter = AdapterCtx::new(entry, trainable, alpha, task, threads)?;
+    let (hidden, _cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens, threads);
     Ok(head_logits(&dims, &w, &hidden, task))
 }
 
@@ -1025,6 +1147,7 @@ pub fn pretrain_step(
     entry: &ArtifactEntry,
     trainable: &[Tensor],
     batch: &MlmBatch,
+    threads: usize,
 ) -> Result<(f32, Vec<Tensor>)> {
     validate_batch(entry, batch.batch_size, batch.seq_len)?;
     let dims = dims_of(entry)?;
@@ -1039,43 +1162,57 @@ pub fn pretrain_step(
         heads: dims.h,
         matrices: 2,
         d: dims.d,
+        threads,
         vera_frozen: None,
     };
-    let (hidden, cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens);
+    let (hidden, cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens, threads);
 
-    // Weight-tied MLM head over every position.
+    // Weight-tied MLM head over every position. The vocab softmax is the
+    // most expensive row loop of the whole pretrain step: rows fan out
+    // across workers; the scalar loss reduces serially in row order so the
+    // sum never depends on the thread count.
     let tok_emb = w.get("tok_emb"); // (v, d)
-    let logits = hidden.matmul_t(tok_emb); // (n, v)
+    let logits = hidden.matmul_t_mt(tok_emb, threads); // (n, v)
     let wsum: f32 = batch.weights.iter().sum::<f32>().max(1e-6);
     let (n, v) = (dims.n, dims.v);
-    let mut loss = 0.0f64;
     let mut dlogits = Tensor::zeros(&[n, v]);
-    for i in 0..n {
-        let wgt = batch.weights[i];
-        let row = &logits.data()[i * v..(i + 1) * v];
-        let target = batch.targets[i] as usize;
-        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-        let z: f32 = row.iter().map(|&x| (x - mx).exp()).sum();
-        let lz = z.ln() + mx;
-        if wgt != 0.0 {
-            loss += ((lz - row[target]) * wgt) as f64;
-        }
-        let scale = wgt / wsum;
-        if scale != 0.0 {
-            let drow = &mut dlogits.data_mut()[i * v..(i + 1) * v];
-            for c in 0..v {
-                let p = (row[c] - lz).exp();
-                drow[c] = p * scale;
+    let mut row_loss = vec![0.0f64; n];
+    {
+        let dls = SharedSliceMut::new(dlogits.data_mut());
+        let rls = SharedSliceMut::new(&mut row_loss);
+        scope_rows(gate(threads, n * v), n, ROW_BAND, |band| {
+            // SAFETY: bands are disjoint row ranges of dlogits / row_loss.
+            let d_band = unsafe { dls.range_mut(band.start * v, band.end * v) };
+            let l_band = unsafe { rls.range_mut(band.start, band.end) };
+            for i in band.clone() {
+                let wgt = batch.weights[i];
+                let row = &logits.data()[i * v..(i + 1) * v];
+                let target = batch.targets[i] as usize;
+                let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                let z: f32 = row.iter().map(|&x| (x - mx).exp()).sum();
+                let lz = z.ln() + mx;
+                if wgt != 0.0 {
+                    l_band[i - band.start] = ((lz - row[target]) * wgt) as f64;
+                }
+                let scale = wgt / wsum;
+                if scale != 0.0 {
+                    let drow = &mut d_band[(i - band.start) * v..(i - band.start + 1) * v];
+                    for c in 0..v {
+                        let p = (row[c] - lz).exp();
+                        drow[c] = p * scale;
+                    }
+                    drow[target] -= scale;
+                }
             }
-            drow[target] -= scale;
-        }
+        });
     }
+    let loss: f64 = row_loss.iter().sum(); // fixed row order
     let loss = (loss / wsum as f64) as f32;
 
     let mut sink = GradSink::new(entry.trainable_inputs());
     // Head: dh = dlogits · tok_emb ; d tok_emb += dlogitsᵀ · hidden.
-    let d_hidden = dlogits.matmul(tok_emb);
-    sink.add_all("tok_emb", &dlogits.t_matmul(&hidden));
+    let d_hidden = dlogits.matmul_mt(tok_emb, threads);
+    sink.add_all("tok_emb", &dlogits.t_matmul_mt(&hidden, threads));
     encoder_backward(
         &dims,
         &w,
@@ -1085,13 +1222,18 @@ pub fn pretrain_step(
         d_hidden,
         &mut sink,
         true,
+        threads,
     );
     Ok((loss, sink.into_vec()))
 }
 
 /// Raw positional apply (serving hot path): `y = x·g1·mid·g4` (TT families)
 /// or `y = x·a·b` (LoRA), α = 1 as baked into the AOT apply artifacts.
-pub fn apply_step(entry: &ArtifactEntry, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+pub fn apply_step(
+    entry: &ArtifactEntry,
+    inputs: &[Tensor],
+    threads: usize,
+) -> Result<Vec<Tensor>> {
     if inputs.len() != entry.inputs.len() {
         bail!(
             "apply expects {} inputs, got {}",
@@ -1110,9 +1252,14 @@ pub fn apply_step(entry: &ArtifactEntry, inputs: &[Tensor]) -> Result<Vec<Tensor
         }
     }
     let y = if entry.spec.adapter == "lora" {
-        inputs[0].matmul(&inputs[1]).matmul(&inputs[2])
+        inputs[0]
+            .matmul_mt(&inputs[1], threads)
+            .matmul_mt(&inputs[2], threads)
     } else {
-        inputs[0].matmul(&inputs[1]).matmul(&inputs[2]).matmul(&inputs[3])
+        inputs[0]
+            .matmul_mt(&inputs[1], threads)
+            .matmul_mt(&inputs[2], threads)
+            .matmul_mt(&inputs[3], threads)
     };
     Ok(vec![y])
 }
@@ -1142,11 +1289,11 @@ mod tests {
         let gamma: Vec<f32> = (0..8).map(|j| 1.0 + 0.1 * j as f32).collect();
         let beta = vec![0.05f32; 8];
         let dy = Tensor::randn(&[3, 8], 1.0, &mut rng);
-        let (_, cache) = layer_norm(&x, &gamma, &beta);
-        let dx = layer_norm_backward(&dy, &cache, &gamma, None);
+        let (_, cache) = layer_norm(&x, &gamma, &beta, 1);
+        let dx = layer_norm_backward(&dy, &cache, &gamma, None, 1);
         // Scalar objective: L = Σ y ∘ dy; check a handful of coordinates.
         let loss = |xp: &Tensor| -> f32 {
-            let (y, _) = layer_norm(xp, &gamma, &beta);
+            let (y, _) = layer_norm(xp, &gamma, &beta, 1);
             y.data().iter().zip(dy.data()).map(|(&a, &b)| a * b).sum()
         };
         let eps = 1e-3;

@@ -1,7 +1,9 @@
 //! Execution runtime: the backend seam, spec layouts, and step execution.
 //!
 //! * `backend` — the [`Backend`] / [`Step`] traits every coordinator is
-//!   written against, plus backend construction ([`make_backend`]).
+//!   written against, plus backend construction ([`make_backend`], which
+//!   takes the worker-thread budget resolved from `--threads` /
+//!   `[runtime] threads` / `METATT_THREADS`).
 //! * `layout` — spec-derived I/O layouts (the rust mirror of model.py);
 //!   lets any backend or test synthesize an [`ArtifactEntry`] offline.
 //! * `reference` — [`RefBackend`]: hermetic pure-rust CPU execution of

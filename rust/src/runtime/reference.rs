@@ -26,11 +26,32 @@ pub struct RefBackend {
     /// executable cache, reported through `cached_executables` so the DMRG
     /// hot-swap accounting works identically across backends.
     bound: Mutex<HashSet<String>>,
+    /// Worker-thread budget every bound step executes with. Results are
+    /// bit-identical for any value (tests/determinism.rs).
+    threads: usize,
 }
 
 impl RefBackend {
+    /// Backend with the environment-derived thread count (`METATT_THREADS`
+    /// when set and valid, else the host's available parallelism).
     pub fn new() -> RefBackend {
-        RefBackend { bound: Mutex::new(HashSet::new()) }
+        Self::with_threads(crate::util::threadpool::default_threads())
+            .expect("default_threads() >= 1")
+    }
+
+    /// Backend with an explicit thread count (>= 1; `0` is a configuration
+    /// error surfaced cleanly rather than a panic).
+    pub fn with_threads(threads: usize) -> Result<RefBackend> {
+        if threads == 0 {
+            bail!(
+                "backend thread count must be >= 1 (got 0): pass --threads 1 \
+                 for serial execution or omit the flag to auto-detect"
+            );
+        }
+        // Size the lazily-created kernel pool for this budget (no-op if a
+        // region already ran; the pool is capped at 16 workers regardless).
+        crate::util::threadpool::request_pool_capacity(threads);
+        Ok(RefBackend { bound: Mutex::new(HashSet::new()), threads })
     }
 }
 
@@ -53,9 +74,15 @@ impl Backend for RefBackend {
         format!(
             "backend: ref — pure-rust reference executor\n\
              artifacts: synthesized on demand (no manifest needed)\n\
+             worker threads: {}\n\
              steps bound this session: {}",
+            self.threads,
             self.cached_executables()
         )
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
     }
 
     fn entry(&self, spec: &ArtifactSpec) -> Result<ArtifactEntry> {
@@ -88,7 +115,11 @@ impl Backend for RefBackend {
         self.bound.lock().unwrap().insert(spec.stem());
         // Refcount bump only — the backbone is shared across every bound
         // step (train + eval runners, all DMRG ranks).
-        Ok(Box::new(RefStep { entry, frozen: Arc::clone(frozen) }))
+        Ok(Box::new(RefStep {
+            entry,
+            frozen: Arc::clone(frozen),
+            threads: self.threads,
+        }))
     }
 
     fn cached_executables(&self) -> usize {
@@ -128,10 +159,11 @@ impl Backend for RefBackend {
 }
 
 /// A bound reference step: the synthesized layout + a shared handle on the
-/// frozen weights.
+/// frozen weights + the backend's thread budget.
 struct RefStep {
     entry: ArtifactEntry,
     frozen: Arc<HashMap<String, Tensor>>,
+    threads: usize,
 }
 
 impl RefStep {
@@ -177,7 +209,15 @@ impl Step for RefStep {
             bail!("{} is not a train step", self.entry.spec.stem());
         }
         self.check_trainable(trainable)?;
-        encoder::train_step(&self.entry, &self.frozen, trainable, batch, task_id, alpha)
+        encoder::train_step(
+            &self.entry,
+            &self.frozen,
+            trainable,
+            batch,
+            task_id,
+            alpha,
+            self.threads,
+        )
     }
 
     fn run_eval(
@@ -191,7 +231,15 @@ impl Step for RefStep {
             bail!("{} is not an eval step", self.entry.spec.stem());
         }
         self.check_trainable(trainable)?;
-        encoder::eval_step(&self.entry, &self.frozen, trainable, batch, task_id, alpha)
+        encoder::eval_step(
+            &self.entry,
+            &self.frozen,
+            trainable,
+            batch,
+            task_id,
+            alpha,
+            self.threads,
+        )
     }
 
     fn run_pretrain(&self, trainable: &[Tensor], batch: &MlmBatch) -> Result<(f32, Vec<Tensor>)> {
@@ -199,12 +247,12 @@ impl Step for RefStep {
             bail!("{} is not a pretrain step", self.entry.spec.stem());
         }
         self.check_trainable(trainable)?;
-        encoder::pretrain_step(&self.entry, trainable, batch)
+        encoder::pretrain_step(&self.entry, trainable, batch, self.threads)
     }
 
     fn run_raw(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         match self.entry.spec.step {
-            StepKind::Apply => encoder::apply_step(&self.entry, inputs),
+            StepKind::Apply => encoder::apply_step(&self.entry, inputs, self.threads),
             _ => bail!(
                 "run_raw on the ref backend supports apply specs only (got {})",
                 self.entry.spec.stem()

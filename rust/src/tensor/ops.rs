@@ -1,68 +1,85 @@
 //! Tensor operations: matmul family, transpose, elementwise, reductions.
 //!
-//! Matmul is cache-blocked with an i-k-j loop order (unit-stride inner loop)
-//! which is plenty for the adapter-sized matrices the host touches. The
-//! bench `hotpath_micro` tracks its throughput so regressions are visible.
+//! The matmul family (`matmul`, `matmul_t`, `t_matmul`) is one cache-blocked
+//! kernel family (`matmul_into` / `matmul_t_into` / `t_matmul_into`): every
+//! variant tiles for L1/L2 reuse and, above [`PAR_MIN_MACS`] multiply-adds,
+//! splits contiguous *row bands* of the output across the scoped thread
+//! pool. Each output row is produced by exactly one worker with a fixed
+//! k-tile accumulation order, so results are bit-identical for any thread
+//! count (the determinism suite pins this). The `*_mt` methods take an
+//! explicit thread budget; the plain methods are the serial (threads = 1)
+//! shorthand every non-hot-path caller keeps using.
+//!
+//! The bench `hotpath_micro` tracks kernel throughput so regressions are
+//! visible; `BENCH_pr2.json` records the serial→parallel trajectory.
 
 use super::Tensor;
+use crate::util::threadpool::{gated_threads, scope_rows, SharedSliceMut};
 
-/// Cache block edge for the matmul micro-kernel (f32: 64*64*4B = 16 KB/tile,
+/// Cache block edge for the matmul micro-kernels (f32: 64*64*4B = 16 KB/tile,
 /// three tiles comfortably fit in L1+L2).
 const BLOCK: usize = 64;
 
+/// Multiply-add count (m·k·n) above which the kernels split row bands
+/// across worker threads. Below it a parallel region costs more than the
+/// arithmetic (dispatch is ~µs; 2^18 MACs is ~100 µs of scalar work).
+pub const PAR_MIN_MACS: usize = 1 << 18;
+
+/// Minimum output rows per band; finer splits shred cache tiles. The band
+/// partition itself is `threadpool::scope_rows` — one banding policy for
+/// kernels and encoder row loops alike.
+const MIN_BAND_ROWS: usize = 8;
+
+/// Thread budget for a kernel of `macs` multiply-adds: serial below
+/// [`PAR_MIN_MACS`], the caller's budget above it.
+fn kernel_threads(threads: usize, macs: usize) -> usize {
+    gated_threads(threads, macs, PAR_MIN_MACS)
+}
+
 impl Tensor {
-    /// Matrix product `self (m×k) · rhs (k×n)`.
+    /// Matrix product `self (m×k) · rhs (k×n)` (serial).
     pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        self.matmul_mt(rhs, 1)
+    }
+
+    /// Matrix product with an explicit thread budget.
+    pub fn matmul_mt(&self, rhs: &Tensor, threads: usize) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (k2, n) = (rhs.rows(), rhs.cols());
         assert_eq!(k, k2, "matmul inner dims: {:?} x {:?}", self.shape(), rhs.shape());
         let mut out = Tensor::zeros(&[m, n]);
-        matmul_into(self.data(), rhs.data(), out.data_mut(), m, k, n);
+        matmul_into(self.data(), rhs.data(), out.data_mut(), m, k, n, threads);
         out
     }
 
-    /// `self^T (k×m)^T=(m×k)? ` — computes `self.transpose() · rhs` without
-    /// materializing the transpose: self is (k×m), rhs is (k×n), out (m×n).
+    /// `self.transpose() · rhs` without materializing the transpose:
+    /// self is (k×m), rhs is (k×n), out (m×n). Serial.
     pub fn t_matmul(&self, rhs: &Tensor) -> Tensor {
+        self.t_matmul_mt(rhs, 1)
+    }
+
+    /// Transposed-left product with an explicit thread budget.
+    pub fn t_matmul_mt(&self, rhs: &Tensor, threads: usize) -> Tensor {
         let (k, m) = (self.rows(), self.cols());
         let (k2, n) = (rhs.rows(), rhs.cols());
         assert_eq!(k, k2, "t_matmul inner dims: {:?}^T x {:?}", self.shape(), rhs.shape());
         let mut out = Tensor::zeros(&[m, n]);
-        let (a, b, c) = (self.data(), rhs.data(), out.data_mut());
-        for kk in 0..k {
-            let brow = &b[kk * n..(kk + 1) * n];
-            for i in 0..m {
-                let aval = a[kk * m + i];
-                if aval == 0.0 {
-                    continue;
-                }
-                let crow = &mut c[i * n..(i + 1) * n];
-                for j in 0..n {
-                    crow[j] += aval * brow[j];
-                }
-            }
-        }
+        t_matmul_into(self.data(), rhs.data(), out.data_mut(), m, k, n, threads);
         out
     }
 
-    /// `self · rhs^T`: self (m×k), rhs (n×k), out (m×n).
+    /// `self · rhs^T`: self (m×k), rhs (n×k), out (m×n). Serial.
     pub fn matmul_t(&self, rhs: &Tensor) -> Tensor {
+        self.matmul_t_mt(rhs, 1)
+    }
+
+    /// Transposed-right product with an explicit thread budget.
+    pub fn matmul_t_mt(&self, rhs: &Tensor, threads: usize) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (n, k2) = (rhs.rows(), rhs.cols());
         assert_eq!(k, k2, "matmul_t inner dims: {:?} x {:?}^T", self.shape(), rhs.shape());
         let mut out = Tensor::zeros(&[m, n]);
-        let (a, b, c) = (self.data(), rhs.data(), out.data_mut());
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &b[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for t in 0..k {
-                    acc += arow[t] * brow[t];
-                }
-                c[i * n + j] = acc;
-            }
-        }
+        matmul_t_into(self.data(), rhs.data(), out.data_mut(), m, k, n, threads);
         out
     }
 
@@ -194,11 +211,32 @@ impl Tensor {
     }
 }
 
-/// Blocked matmul kernel: C (m×n) += A (m×k) · B (k×n); C must be zeroed.
-pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+/// Blocked matmul kernel: C (m×n) = A (m×k) · B (k×n); C must be zeroed.
+/// Splits row bands across `threads` workers above [`PAR_MIN_MACS`]; each
+/// output row keeps the serial k-tile accumulation order, so the result is
+/// bit-identical for every thread count.
+pub fn matmul_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    let cs = SharedSliceMut::new(c);
+    scope_rows(kernel_threads(threads, m * k * n), m, MIN_BAND_ROWS, |r| {
+        // SAFETY: bands are disjoint row ranges of c.
+        let c_band = unsafe { cs.range_mut(r.start * n, r.end * n) };
+        matmul_band(&a[r.start * k..r.end * k], b, c_band, r.end - r.start, k, n);
+    });
+}
+
+/// Serial blocked micro-kernel for one row band of C = A·B.
+fn matmul_band(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     for i0 in (0..m).step_by(BLOCK) {
         let i1 = (i0 + BLOCK).min(m);
         for k0 in (0..k).step_by(BLOCK) {
@@ -209,14 +247,111 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
                     let crow = &mut c[i * n..(i + 1) * n];
                     for kk in k0..k1 {
                         let aik = a[i * k + kk];
-                        if aik == 0.0 {
-                            continue;
-                        }
                         let brow = &b[kk * n..(kk + 1) * n];
                         for j in j0..j1 {
                             crow[j] += aik * brow[j];
                         }
                     }
+                }
+            }
+        }
+    }
+}
+
+/// Blocked transposed-right kernel: C (m×n) = A (m×k) · B (n×k)^T; C must
+/// be zeroed (the k-tiles accumulate into it, like the sibling kernels).
+/// Same banding/determinism contract as [`matmul_into`].
+pub fn matmul_t_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    let cs = SharedSliceMut::new(c);
+    scope_rows(kernel_threads(threads, m * k * n), m, MIN_BAND_ROWS, |r| {
+        // SAFETY: bands are disjoint row ranges of c.
+        let c_band = unsafe { cs.range_mut(r.start * n, r.end * n) };
+        matmul_t_band(&a[r.start * k..r.end * k], b, c_band, r.end - r.start, k, n);
+    });
+}
+
+/// Serial blocked micro-kernel for one row band of C = A·Bᵀ. Tiles over
+/// (j, k) so a BLOCK-row slab of B stays hot while all of A streams by;
+/// per-(i,j) accumulation runs k-tiles in ascending order.
+fn matmul_t_band(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(c.len(), m * n);
+    for j0 in (0..n).step_by(BLOCK) {
+        let j1 = (j0 + BLOCK).min(n);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in 0..m {
+                let arow = &a[i * k + k0..i * k + k1];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for j in j0..j1 {
+                    let brow = &b[j * k + k0..j * k + k1];
+                    let mut acc = crow[j];
+                    for (&av, &bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    crow[j] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Blocked transposed-left kernel: C (m×n) = A (k×m)^T · B (k×n); C must be
+/// zeroed. Same banding/determinism contract as [`matmul_into`]; bands
+/// split the m output rows (columns of A).
+pub fn t_matmul_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let cs = SharedSliceMut::new(c);
+    scope_rows(kernel_threads(threads, m * k * n), m, MIN_BAND_ROWS, |r| {
+        // SAFETY: bands are disjoint row ranges of c.
+        let c_band = unsafe { cs.range_mut(r.start * n, r.end * n) };
+        t_matmul_band(a, b, c_band, r, m, k, n);
+    });
+}
+
+/// Serial blocked micro-kernel for output rows `rows` of C = Aᵀ·B. The
+/// A reads are column-strided, so k is tiled to keep the touched A slab and
+/// the B tile resident; accumulation per (i, j) runs k-tiles in ascending
+/// order.
+fn t_matmul_band(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    rows: std::ops::Range<usize>,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let r0 = rows.start;
+    for k0 in (0..k).step_by(BLOCK) {
+        let k1 = (k0 + BLOCK).min(k);
+        for i in rows.clone() {
+            let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+            for kk in k0..k1 {
+                let aval = a[kk * m + i];
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += aval * brow[j];
                 }
             }
         }

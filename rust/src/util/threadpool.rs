@@ -1,16 +1,125 @@
-//! A small fixed-size thread pool with scoped parallel-map helpers.
+//! Thread pools: a fixed-size FIFO job pool for coordinator-level fan-out
+//! and a persistent **scoped** pool that powers the data-parallel kernels.
 //!
-//! The coordinator uses this for embarrassingly parallel work: generating
-//! synthetic datasets, running independent seeds of an experiment, and
-//! sweeping benchmark grids. No `tokio` in the offline registry, and the
-//! workloads are CPU-bound anyway, so plain `std::thread` + channels is the
-//! right tool.
+//! Two distinct workloads, two designs:
+//!
+//! * [`ThreadPool`] — coarse `'static` jobs (independent experiment seeds,
+//!   dataset generation, bench grids). Plain `std::thread` + channels.
+//! * [`ScopedPool`] / [`scope_for`] — the RefBackend hot path. A parallel
+//!   region lasts microseconds-to-milliseconds and borrows the caller's
+//!   stack (tensor slices), so jobs cannot be `'static` and per-region
+//!   thread spawning would dominate. The scoped pool keeps its workers
+//!   alive across regions and dispatches a *borrowed* closure by address;
+//!   the submitting call blocks until the region completes, which is what
+//!   makes the lifetime erasure sound (see `ScopedPool::run`).
+//!
+//! Thread-count resolution lives here too ([`resolve_threads`]): explicit
+//! config (`--threads` / `[runtime] threads`) wins, then the
+//! `METATT_THREADS` env var, then the host's available parallelism.
+//! `0` is always rejected with a helpful message rather than a panic.
+//!
+//! **Determinism contract:** none of the helpers change *what* is computed,
+//! only *where*. Every parallel consumer in the crate assigns each output
+//! row/band to exactly one worker and keeps per-row accumulation order
+//! fixed, so 1-thread and N-thread runs are bit-identical (asserted by
+//! `tests/determinism.rs`).
 
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::ops::Range;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Upper bound on auto-detected thread counts: beyond this the reference
+/// executor's memory bandwidth saturates long before the cores do.
+const MAX_AUTO_THREADS: usize = 8;
+
+/// Hard cap on the global scoped pool's worker count.
+const MAX_POOL_THREADS: usize = 16;
+
+static POOL: OnceLock<ScopedPool> = OnceLock::new();
+static POOL_FLOOR: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Register an explicit thread budget (from `--threads` / `[runtime]
+/// threads`) so the global scoped pool — sized lazily at its first parallel
+/// region — spawns enough workers to honor it. Backends call this at
+/// construction, which precedes any region; once the pool exists its size
+/// is frozen, so a late larger request warns instead of silently
+/// under-delivering.
+pub fn request_pool_capacity(threads: usize) {
+    POOL_FLOOR.fetch_max(threads, std::sync::atomic::Ordering::Relaxed);
+    if let Some(pool) = POOL.get() {
+        // +1: the caller of a region is itself a worker.
+        if threads > pool.size + 1 {
+            eprintln!(
+                "note: {} threads requested but the kernel pool was already \
+                 sized with {} workers at its first use — parallel regions \
+                 will use at most {} threads",
+                threads,
+                pool.size,
+                pool.size + 1
+            );
+        }
+    }
+}
+
+/// Thread budget gated on work size: serial below `min_work`, the caller's
+/// budget above it (region dispatch costs ~µs; don't pay it for tiny loops).
+pub fn gated_threads(threads: usize, work: usize, min_work: usize) -> usize {
+    if work < min_work {
+        1
+    } else {
+        threads
+    }
+}
+
+/// Resolve the effective worker-thread count.
+///
+/// Precedence: `explicit` (CLI/TOML) > `METATT_THREADS` env var > host
+/// `available_parallelism()` capped at [`MAX_AUTO_THREADS`]. A configured
+/// value of `0` is rejected with a helpful message (use `1` for serial
+/// execution, or omit the setting for auto-detection).
+pub fn resolve_threads(explicit: Option<usize>) -> Result<usize, String> {
+    match explicit {
+        Some(0) => Err(
+            "thread count must be >= 1 (got 0): use `1` for serial execution \
+             or omit the setting to auto-detect"
+                .to_string(),
+        ),
+        Some(n) => Ok(n),
+        None => match std::env::var("METATT_THREADS") {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(0) => Err(
+                    "METATT_THREADS must be >= 1 (got 0): use 1 for serial \
+                     execution or unset the variable to auto-detect"
+                        .to_string(),
+                ),
+                Ok(n) => Ok(n),
+                Err(_) => Err(format!(
+                    "METATT_THREADS expects a positive integer, got '{v}'"
+                )),
+            },
+            Err(_) => Ok(auto_threads()),
+        },
+    }
+}
+
+/// Host-derived default thread count (no env / config consulted).
+pub fn auto_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(MAX_AUTO_THREADS)
+}
+
+/// Best-effort resolution for infallible constructors: configured value if
+/// valid, host default otherwise.
+pub fn default_threads() -> usize {
+    resolve_threads(None).unwrap_or_else(|_| auto_threads())
+}
 
 /// Fixed-size worker pool. Jobs are executed FIFO; `join` blocks until the
 /// queue drains and workers exit.
@@ -20,9 +129,17 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
-    /// Spawn `n` workers (n >= 1).
-    pub fn new(n: usize) -> Self {
-        assert!(n >= 1);
+    /// Spawn `n` workers. `n == 0` is a configuration error (not a panic):
+    /// callers surface the message next to the `--threads` / `threads =`
+    /// setting that produced it.
+    pub fn new(n: usize) -> Result<Self, String> {
+        if n == 0 {
+            return Err(
+                "ThreadPool size must be >= 1 (got 0): use 1 for serial \
+                 execution or omit the setting to auto-detect"
+                    .to_string(),
+            );
+        }
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let workers = (0..n)
@@ -40,14 +157,14 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { sender: Some(tx), workers }
+        Ok(ThreadPool { sender: Some(tx), workers })
     }
 
-    /// Default-sized pool: available parallelism capped at 8 (experiment
-    /// trials are memory-hungry; more workers rarely help on this box).
+    /// Default-sized pool honoring the runtime configuration: the
+    /// `METATT_THREADS` env var when set (and valid), else the host's
+    /// available parallelism capped at [`MAX_AUTO_THREADS`].
     pub fn default_size() -> Self {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Self::new(n.min(8))
+        Self::new(default_threads()).expect("default_threads() >= 1")
     }
 
     /// Submit a job.
@@ -77,37 +194,368 @@ impl Drop for ThreadPool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scoped pool: persistent workers, borrowed closures, one region at a time.
+// ---------------------------------------------------------------------------
+
+/// Type-erased pointer to the region's `Fn(usize)` closure. Only valid
+/// while the submitting `run` call blocks; workers re-validate the region
+/// under the state lock before touching it.
+#[derive(Clone, Copy)]
+struct RegionJob {
+    f: *const (dyn Fn(usize) + Sync),
+}
+// SAFETY: the pointer is only dereferenced by workers registered in
+// `State::active`, and `ScopedPool::run` does not return (and therefore the
+// pointee cannot be dropped) until `active == 0` and all items completed.
+unsafe impl Send for RegionJob {}
+
+struct State {
+    /// Bumped per region so sleeping workers recognize fresh work.
+    epoch: u64,
+    /// `Some` while a region is being executed.
+    job: Option<RegionJob>,
+    /// Next item index to hand out.
+    next: usize,
+    /// Item count of the current region.
+    n: usize,
+    /// Completed item count.
+    done: usize,
+    /// Max pool workers allowed to join the current region.
+    limit: usize,
+    /// Pool workers that joined the current region.
+    joined: usize,
+    /// Pool workers currently registered on the region (inside the steal
+    /// loop). The caller only returns once this hits zero.
+    active: usize,
+    /// Set when any item's closure panicked; the caller re-raises after the
+    /// region drains (so no dangling job pointer survives the unwind).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// A persistent pool executing *scoped* parallel regions: `run` dispatches
+/// a borrowed `Fn(usize)` across the workers and blocks until every index
+/// has been processed. One region runs at a time (regions are short); a
+/// nested `run` from inside a region executes inline to avoid deadlock.
+pub struct ScopedPool {
+    shared: Arc<Shared>,
+    /// Serializes regions so `State` describes exactly one of them.
+    dispatch: Mutex<()>,
+    size: usize,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+thread_local! {
+    /// True while this thread is executing region items — used to run
+    /// nested regions inline (a worker blocking on `dispatch` while its own
+    /// region holds it would deadlock).
+    static IN_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+impl ScopedPool {
+    /// Spawn a scoped pool with `size` workers.
+    pub fn new(size: usize) -> ScopedPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                next: 0,
+                n: 0,
+                done: 0,
+                limit: 0,
+                joined: 0,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("metatt-scoped-{i}"))
+                    .spawn(move || Self::worker_loop(&shared))
+                    .expect("spawn scoped worker")
+            })
+            .collect();
+        ScopedPool { shared, dispatch: Mutex::new(()), size, workers }
+    }
+
+    /// The process-wide pool used by the parallel kernels. Sized once at
+    /// first use from the host parallelism, `METATT_THREADS`, and any
+    /// explicit budget registered via [`request_pool_capacity`] before the
+    /// first parallel region (backend construction does this), capped at
+    /// [`MAX_POOL_THREADS`]; idle workers cost nothing.
+    pub fn global() -> &'static ScopedPool {
+        POOL.get_or_init(|| {
+            let n = auto_threads()
+                .max(default_threads())
+                .max(POOL_FLOOR.load(std::sync::atomic::Ordering::Relaxed))
+                .clamp(1, MAX_POOL_THREADS);
+            // `run` uses the caller as one worker, so the pool only needs
+            // n - 1 helpers; keep at least one so threads=2 parallelizes.
+            ScopedPool::new((n.saturating_sub(1)).max(1))
+        })
+    }
+
+    fn worker_loop(shared: &Shared) {
+        let mut seen = 0u64;
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return;
+            }
+            let fresh = st.job.is_some() && st.epoch > seen;
+            if !fresh {
+                st = shared.work_cv.wait(st).unwrap();
+                continue;
+            }
+            seen = st.epoch;
+            if st.joined >= st.limit {
+                continue; // region already has its quota of workers
+            }
+            st.joined += 1;
+            st.active += 1;
+            let job = st.job.expect("fresh region has a job");
+            loop {
+                if st.next >= st.n {
+                    st.active -= 1;
+                    if st.active == 0 {
+                        shared.done_cv.notify_all();
+                    }
+                    break;
+                }
+                let i = st.next;
+                st.next += 1;
+                drop(st);
+                IN_REGION.with(|c| c.set(true));
+                // SAFETY: `run` blocks until active == 0, so `job.f`
+                // outlives this call. A panicking item is caught so the
+                // region's accounting still drains; the caller re-raises.
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                    (*job.f)(i)
+                }))
+                .is_ok();
+                IN_REGION.with(|c| c.set(false));
+                st = shared.state.lock().unwrap();
+                st.done += 1;
+                if !ok {
+                    st.panicked = true;
+                }
+                if st.done == st.n {
+                    shared.done_cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Execute `f(0..n)` across up to `threads` threads (the caller plus
+    /// pool workers), blocking until all items complete. `f` may freely
+    /// borrow the caller's stack. Items are handed out in order but run
+    /// concurrently; callers must make item writes disjoint.
+    pub fn run(&self, threads: usize, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let nested = IN_REGION.with(|c| c.get());
+        if threads <= 1 || n == 1 || nested {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let _region = self.dispatch.lock().unwrap();
+        // Lifetime erasure: raw pointers carry no lifetime. Sound because
+        // this call blocks until every worker has deregistered (active == 0),
+        // so the pointee outlives all dereferences.
+        let job = RegionJob { f: f as *const (dyn Fn(usize) + Sync) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job);
+            st.next = 0;
+            st.n = n;
+            st.done = 0;
+            st.limit = (threads - 1).min(self.size);
+            st.joined = 0;
+            st.active = 0;
+            st.panicked = false;
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is a full participant in its own region. Its panics
+        // are caught like a worker's so the region always drains and the
+        // job pointer is cleared before any unwind leaves this frame.
+        loop {
+            let i = {
+                let mut st = self.shared.state.lock().unwrap();
+                if st.next >= st.n {
+                    break;
+                }
+                let i = st.next;
+                st.next += 1;
+                i
+            };
+            IN_REGION.with(|c| c.set(true));
+            let ok =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_ok();
+            IN_REGION.with(|c| c.set(false));
+            let mut st = self.shared.state.lock().unwrap();
+            st.done += 1;
+            if !ok {
+                st.panicked = true;
+            }
+            if st.done == st.n {
+                self.shared.done_cv.notify_all();
+            }
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        while !(st.done == st.n && st.active == 0) {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        let panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        if panicked {
+            panic!("a parallel region item panicked (see worker output above)");
+        }
+    }
+}
+
+impl Drop for ScopedPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scope-style helpers over the global pool.
+// ---------------------------------------------------------------------------
+
+/// Scoped parallel-for over `0..n` on the global pool: `f(i)` runs from up
+/// to `threads` threads and may borrow the caller's stack. Blocks until all
+/// items complete.
+pub fn scope_for(threads: usize, n: usize, f: impl Fn(usize) + Sync) {
+    ScopedPool::global().run(threads, n, &f);
+}
+
+/// Scoped parallel map over `0..n`, preserving index order.
+pub fn scope_map<U: Send>(
+    threads: usize,
+    n: usize,
+    f: impl Fn(usize) -> U + Sync,
+) -> Vec<U> {
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    {
+        let cells: Vec<Mutex<&mut Option<U>>> = out.iter_mut().map(Mutex::new).collect();
+        scope_for(threads, n, |i| {
+            **cells[i].lock().unwrap() = Some(f(i));
+        });
+    }
+    out.into_iter().map(|v| v.expect("scope_map slot filled")).collect()
+}
+
+/// Split `0..rows` into contiguous bands of at least `min_rows` and run
+/// `f(band_range)` for each band in parallel (each row belongs to exactly
+/// one band, so per-row work — and accumulation order — is independent of
+/// the thread count). Serial when a single band suffices.
+pub fn scope_rows(
+    threads: usize,
+    rows: usize,
+    min_rows: usize,
+    f: impl Fn(Range<usize>) + Sync,
+) {
+    if rows == 0 {
+        return;
+    }
+    // Floor division so no band drops under `min_rows` (a ceil here could
+    // produce bands one row short of the cache-granularity floor).
+    let max_bands = (rows / min_rows.max(1)).max(1);
+    // A few bands per thread keeps stragglers short without shredding rows.
+    let bands = (threads * 2).clamp(1, max_bands);
+    if threads <= 1 || bands <= 1 {
+        f(0..rows);
+        return;
+    }
+    let band_rows = rows.div_ceil(bands);
+    let bands = rows.div_ceil(band_rows);
+    scope_for(threads, bands, |b| {
+        let lo = b * band_rows;
+        let hi = (lo + band_rows).min(rows);
+        f(lo..hi);
+    });
+}
+
+/// Shared mutable slice for disjoint-range parallel writes (the kernels'
+/// row-band output buffers). The *caller* guarantees ranges handed to
+/// concurrent workers never overlap; the type only carries the pointer
+/// across the closure boundary.
+pub struct SharedSliceMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _pd: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is restricted to `range_mut`, whose disjointness contract
+// the caller upholds; T: Send makes cross-thread writes sound.
+unsafe impl<T: Send> Send for SharedSliceMut<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSliceMut<'_, T> {}
+
+impl<'a, T> SharedSliceMut<'a, T> {
+    pub fn new(s: &'a mut [T]) -> Self {
+        SharedSliceMut { ptr: s.as_mut_ptr(), len: s.len(), _pd: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `[lo, hi)`.
+    ///
+    /// # Safety
+    /// Concurrent callers must use pairwise-disjoint ranges, and `hi <=
+    /// len` (checked). The borrow must end before the backing slice's
+    /// borrow does (guaranteed by the `'a` lifetime).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        assert!(lo <= hi && hi <= self.len, "range {lo}..{hi} out of {}", self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
 /// Parallel map over `items`, preserving order, with at most `threads`
-/// concurrent evaluations. `f` runs on borrowed scope threads, so it may
-/// capture references to the caller's stack.
+/// concurrent evaluations. `f` runs on pool threads but may capture
+/// references to the caller's stack (scope-style borrows).
 pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
 where
     T: Sync,
     U: Send,
     F: Fn(&T) -> U + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
-    if threads <= 1 || items.len() <= 1 {
-        return items.iter().map(&f).collect();
-    }
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
-    let out_cells: Vec<Mutex<&mut Option<U>>> =
-        out.iter_mut().map(Mutex::new).collect();
-    thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let val = f(&items[i]);
-                **out_cells[i].lock().unwrap() = Some(val);
-            });
-        }
-    });
-    drop(out_cells);
-    out.into_iter().map(|v| v.expect("par_map slot filled")).collect()
+    scope_map(threads, items.len(), |i| f(&items[i]))
 }
 
 #[cfg(test)]
@@ -117,7 +565,7 @@ mod tests {
 
     #[test]
     fn pool_runs_all_jobs() {
-        let pool = ThreadPool::new(4);
+        let pool = ThreadPool::new(4).unwrap();
         let counter = Arc::new(AtomicUsize::new(0));
         for _ in 0..100 {
             let c = Arc::clone(&counter);
@@ -127,6 +575,19 @@ mod tests {
         }
         pool.join();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn zero_sized_pool_is_a_clean_error() {
+        let err = ThreadPool::new(0).unwrap_err();
+        assert!(err.contains(">= 1"), "unhelpful message: {err}");
+    }
+
+    #[test]
+    fn resolve_threads_rejects_zero_and_accepts_explicit() {
+        assert!(resolve_threads(Some(0)).unwrap_err().contains(">= 1"));
+        assert_eq!(resolve_threads(Some(3)).unwrap(), 3);
+        assert!(default_threads() >= 1);
     }
 
     #[test]
@@ -150,5 +611,88 @@ mod tests {
         let items = vec![0usize, 1, 2];
         let out = par_map(&items, 2, |&i| base[i] + 1);
         assert_eq!(out, vec![11, 21, 31]);
+    }
+
+    #[test]
+    fn scope_for_covers_every_index_once() {
+        let n = 997;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        scope_for(4, n, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn scope_rows_partitions_rows_exactly() {
+        for rows in [0usize, 1, 7, 64, 1000] {
+            let hits: Vec<AtomicUsize> = (0..rows).map(|_| AtomicUsize::new(0)).collect();
+            scope_rows(4, rows, 8, |r| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn nested_regions_run_inline_without_deadlock() {
+        let total = AtomicUsize::new(0);
+        scope_for(4, 8, |_| {
+            // Inner region must not dead-lock on the dispatch mutex.
+            scope_for(4, 8, |_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn concurrent_regions_from_plain_threads_serialize() {
+        let total = AtomicUsize::new(0);
+        thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    scope_for(4, 100, |_| {
+                        total.fetch_add(1, Ordering::SeqCst);
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 300);
+    }
+
+    #[test]
+    fn panicking_region_item_propagates_not_hangs() {
+        let res = std::panic::catch_unwind(|| {
+            scope_for(4, 64, |i| {
+                if i == 33 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(res.is_err(), "region panic must propagate to the caller");
+        // The pool must still be usable afterwards.
+        let hits = AtomicUsize::new(0);
+        scope_for(4, 16, |_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn shared_slice_disjoint_writes() {
+        let mut v = vec![0usize; 100];
+        {
+            let sh = SharedSliceMut::new(&mut v);
+            scope_rows(4, 100, 10, |r| {
+                let band = unsafe { sh.range_mut(r.start, r.end) };
+                for (off, x) in band.iter_mut().enumerate() {
+                    *x = r.start + off;
+                }
+            });
+        }
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i));
     }
 }

@@ -1,0 +1,276 @@
+//! Determinism suite for the parallel execution engine.
+//!
+//! The PR-2 contract: threading changes *where* work runs, never *what* is
+//! computed. Concretely —
+//!
+//! 1. the parallel matmul kernel family must match the serial kernels
+//!    **bit-for-bit** on arbitrary rectangular shapes (including the
+//!    m=1 / n=1 / k=1 degenerate edges and non-multiple-of-block sizes);
+//! 2. full RefBackend train / eval / pretrain steps run with 1 thread and
+//!    N threads must produce bit-identical losses, gradients, and logits.
+//!
+//! Everything here is hermetic (ref backend, synthesized layouts).
+
+use metatt::data::{Batcher, MlmCorpus, TaskId};
+use metatt::runtime::{assemble_frozen, ArtifactSpec, Backend, RefBackend, StepKind};
+use metatt::tensor::{rel_err, Tensor};
+use metatt::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// Kernel parity: parallel vs serial, and both vs a naive oracle.
+// ---------------------------------------------------------------------------
+
+fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += a.at(i, t) * b.at(t, j);
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+/// Random rectangular shapes, biased toward the sizes where banding and
+/// blocking boundaries live, plus the degenerate edges.
+fn shapes() -> Vec<(usize, usize, usize)> {
+    let mut out = vec![
+        (0, 5, 7), // zero-row/col/inner edges must not panic
+        (5, 0, 7),
+        (5, 7, 0),
+        (1, 1, 1),
+        (1, 300, 300),
+        (300, 1, 300),
+        (300, 300, 1),
+        (1, 1, 513),
+        (513, 1, 1),
+        (2, 500, 2),
+        (63, 64, 65),
+        (128, 128, 128),
+        (257, 129, 65),
+        (256, 256, 256), // above the parallel threshold
+        (512, 64, 300),
+    ];
+    let mut rng = Pcg64::new(0x5eed);
+    for _ in 0..6 {
+        let dim = |r: &mut Pcg64| 1 + (r.next_u64() % 200) as usize;
+        out.push((dim(&mut rng), dim(&mut rng), dim(&mut rng)));
+    }
+    out
+}
+
+#[test]
+fn parallel_matmul_bitwise_matches_serial_on_rectangles() {
+    let mut rng = Pcg64::new(7);
+    for (m, k, n) in shapes() {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let serial = a.matmul_mt(&b, 1);
+        for threads in [2, 4, 7] {
+            let par = a.matmul_mt(&b, threads);
+            assert_eq!(serial, par, "matmul ({m},{k},{n}) threads={threads}");
+        }
+        assert!(
+            rel_err(&serial, &naive_matmul(&a, &b)) < 1e-4,
+            "matmul vs naive ({m},{k},{n})"
+        );
+    }
+}
+
+#[test]
+fn parallel_matmul_t_bitwise_matches_serial_on_rectangles() {
+    let mut rng = Pcg64::new(8);
+    for (m, k, n) in shapes() {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let serial = a.matmul_t_mt(&b, 1);
+        for threads in [2, 4, 7] {
+            let par = a.matmul_t_mt(&b, threads);
+            assert_eq!(serial, par, "matmul_t ({m},{k},{n}) threads={threads}");
+        }
+        assert!(
+            rel_err(&serial, &naive_matmul(&a, &b.transpose())) < 1e-4,
+            "matmul_t vs naive ({m},{k},{n})"
+        );
+    }
+}
+
+#[test]
+fn parallel_t_matmul_bitwise_matches_serial_on_rectangles() {
+    let mut rng = Pcg64::new(9);
+    for (m, k, n) in shapes() {
+        let a = Tensor::randn(&[k, m], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let serial = a.t_matmul_mt(&b, 1);
+        for threads in [2, 4, 7] {
+            let par = a.t_matmul_mt(&b, threads);
+            assert_eq!(serial, par, "t_matmul ({m},{k},{n}) threads={threads}");
+        }
+        assert!(
+            rel_err(&serial, &naive_matmul(&a.transpose(), &b)) < 1e-4,
+            "t_matmul vs naive ({m},{k},{n})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full-step determinism: 1 thread vs N threads, bit-identical.
+// ---------------------------------------------------------------------------
+
+fn tiny_spec(step: StepKind, adapter: &str, batch: usize, seq: usize) -> ArtifactSpec {
+    ArtifactSpec {
+        step,
+        model: "tiny".into(),
+        adapter: adapter.into(),
+        rank: 4,
+        classes: 2,
+        tasks: 1,
+        batch,
+        seq,
+    }
+}
+
+fn random_params(backend: &RefBackend, spec: &ArtifactSpec, seed: u64) -> Vec<Tensor> {
+    let entry = backend.entry(spec).unwrap();
+    let mut rng = Pcg64::new(seed);
+    entry
+        .trainable_inputs()
+        .iter()
+        .map(|io| Tensor::randn(&io.shape, 0.2, &mut rng))
+        .collect()
+}
+
+fn assert_tensors_bit_identical(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count");
+    for (i, (ta, tb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ta.shape(), tb.shape(), "{what}[{i}]: shape");
+        for (j, (&va, &vb)) in ta.data().iter().zip(tb.data()).enumerate() {
+            assert!(
+                va.to_bits() == vb.to_bits(),
+                "{what}[{i}] elem {j}: {va:?} != {vb:?} (bits differ)"
+            );
+        }
+    }
+}
+
+/// Run the same train step on 1-thread and N-thread backends; losses and
+/// every gradient must agree to the bit. Exercised per adapter family so
+/// each backward path's parallel splits are covered.
+fn check_train_step_determinism(adapter: &str) {
+    let (batch_n, seq) = (8, 16);
+    let spec = tiny_spec(StepKind::Train, adapter, batch_n, seq);
+    let ds = TaskId::MrpcSyn.generate_at(batch_n, batch_n, 3, seq, 512);
+    let batch = Batcher::new(batch_n).eval(&ds).remove(0);
+
+    let b1 = RefBackend::with_threads(1).unwrap();
+    let b4 = RefBackend::with_threads(4).unwrap();
+    let entry = b1.entry(&spec).unwrap();
+    let frozen = std::sync::Arc::new(
+        assemble_frozen(&entry, None, metatt::config::ModelPreset::Tiny).unwrap(),
+    );
+    let params = random_params(&b1, &spec, 42);
+
+    let s1 = b1.bind(&spec, &frozen).unwrap();
+    let s4 = b4.bind(&spec, &frozen).unwrap();
+    let (l1, g1) = s1.run_train(&params, &batch, 0, 1.5).unwrap();
+    let (l4, g4) = s4.run_train(&params, &batch, 0, 1.5).unwrap();
+    assert_eq!(l1.to_bits(), l4.to_bits(), "{adapter}: loss bits differ");
+    assert_tensors_bit_identical(&g1, &g4, &format!("{adapter} grads"));
+}
+
+#[test]
+fn train_step_bit_identical_across_thread_counts_metatt4d() {
+    check_train_step_determinism("metatt4d");
+}
+
+#[test]
+fn train_step_bit_identical_across_thread_counts_metatt5d() {
+    check_train_step_determinism("metatt5d");
+}
+
+#[test]
+fn train_step_bit_identical_across_thread_counts_lora() {
+    check_train_step_determinism("lora");
+}
+
+#[test]
+fn train_step_bit_identical_across_thread_counts_full_ft() {
+    // Full FT flows gradients through every encoder weight — covers the
+    // LN γ/β reductions, bias colsums, and the embedding scatter.
+    check_train_step_determinism("full");
+}
+
+#[test]
+fn eval_step_bit_identical_across_thread_counts() {
+    let (batch_n, seq) = (8, 16);
+    let spec = tiny_spec(StepKind::Eval, "metatt4d", batch_n, seq);
+    let ds = TaskId::RteSyn.generate_at(batch_n, batch_n, 5, seq, 512);
+    let batch = Batcher::new(batch_n).eval(&ds).remove(0);
+
+    let b1 = RefBackend::with_threads(1).unwrap();
+    let b4 = RefBackend::with_threads(4).unwrap();
+    let entry = b1.entry(&spec).unwrap();
+    let frozen = std::sync::Arc::new(
+        assemble_frozen(&entry, None, metatt::config::ModelPreset::Tiny).unwrap(),
+    );
+    let params = random_params(&b1, &spec, 11);
+    let logits1 = b1.bind(&spec, &frozen).unwrap().run_eval(&params, &batch, 0, 2.0).unwrap();
+    let logits4 = b4.bind(&spec, &frozen).unwrap().run_eval(&params, &batch, 0, 2.0).unwrap();
+    assert_tensors_bit_identical(
+        std::slice::from_ref(&logits1),
+        std::slice::from_ref(&logits4),
+        "eval logits",
+    );
+}
+
+#[test]
+fn pretrain_step_bit_identical_across_thread_counts() {
+    let spec = ArtifactSpec {
+        step: StepKind::Pretrain,
+        model: "tiny".into(),
+        adapter: "none".into(),
+        rank: 0,
+        classes: 1,
+        tasks: 1,
+        batch: 4,
+        seq: 16,
+    };
+    let b1 = RefBackend::with_threads(1).unwrap();
+    let b4 = RefBackend::with_threads(4).unwrap();
+    let params = random_params(&b1, &spec, 23);
+    let mut corpus = MlmCorpus::new(512, 16, 77);
+    let batch = corpus.next_batch(4);
+    let (l1, g1) = b1
+        .bind(&spec, &Default::default())
+        .unwrap()
+        .run_pretrain(&params, &batch)
+        .unwrap();
+    let (l4, g4) = b4
+        .bind(&spec, &Default::default())
+        .unwrap()
+        .run_pretrain(&params, &batch)
+        .unwrap();
+    assert_eq!(l1.to_bits(), l4.to_bits(), "pretrain loss bits differ");
+    assert_tensors_bit_identical(&g1, &g4, "pretrain grads");
+}
+
+#[test]
+fn apply_step_bit_identical_across_thread_counts() {
+    let b1 = RefBackend::with_threads(1).unwrap();
+    let b4 = RefBackend::with_threads(4).unwrap();
+    let spec = b1.apply_spec("metatt4d", 8).unwrap();
+    let entry = b1.entry(&spec).unwrap();
+    let mut rng = Pcg64::new(3);
+    let inputs: Vec<Tensor> = entry
+        .inputs
+        .iter()
+        .map(|io| Tensor::randn(&io.shape, 0.5, &mut rng))
+        .collect();
+    let y1 = b1.bind(&spec, &Default::default()).unwrap().run_raw(&inputs).unwrap();
+    let y4 = b4.bind(&spec, &Default::default()).unwrap().run_raw(&inputs).unwrap();
+    assert_tensors_bit_identical(&y1, &y4, "apply output");
+}
