@@ -26,6 +26,7 @@ use metatt::adapters::{AdapterKind, AdapterSpec};
 use metatt::bench::{bench, Stats};
 use metatt::config::ModelPreset;
 use metatt::data::TaskId;
+use metatt::optim::AdamW;
 use metatt::runtime::{
     assemble_frozen, backend_from_env, ArtifactSpec, Backend, RefBackend, Step, StepKind,
 };
@@ -33,6 +34,46 @@ use metatt::tensor::Tensor;
 use metatt::tt::{dmrg_sweep, InitStrategy, MetaTt, MetaTtKind};
 use metatt::util::json::Json;
 use metatt::util::rng::Pcg64;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counting wrapper over the system allocator: section 7 reports heap
+/// allocations per step so the zero-allocation contract is visible in the
+/// recorded numbers, not just in the test suite.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Heap allocations performed by one invocation of `f`.
+fn count_allocs(mut f: impl FnMut()) -> u64 {
+    let before = ALLOC_COUNT.load(Ordering::SeqCst);
+    f();
+    ALLOC_COUNT.load(Ordering::SeqCst) - before
+}
 
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::var("METATT_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
@@ -307,5 +348,130 @@ fn main() -> anyhow::Result<()> {
     ]);
     std::fs::write(&out_path, doc.to_pretty())?;
     println!("\n[saved] {out_path}");
+
+    // ---- 7. Zero-allocation hot path (PR 3): per-phase timing + allocs. --
+    // Single-thread, tiny/metatt4d — the configuration the allocation
+    // contract is pinned at. `arena_speedup` compares the pooled hot path
+    // against the allocate-per-intermediate reference mode on identical
+    // math (bit-identical results), isolating the allocator/memset cost.
+    println!("== 7. zero-allocation hot path (PR 3): phases + allocation counts ==");
+    let mut pr3: Vec<Json> = Vec::new();
+    let tspec = ArtifactSpec {
+        step: StepKind::Train,
+        model: "tiny".into(),
+        adapter: "metatt4d".into(),
+        rank: 8,
+        classes: 2,
+        tasks: 1,
+        batch: 16,
+        seq: dims.max_seq,
+    };
+    let espec = ArtifactSpec { step: StepKind::Eval, ..tspec.clone() };
+    let entry7 = RefBackend::with_config(1, true)?.entry(&tspec)?;
+    let frozen7 = std::sync::Arc::new(assemble_frozen(&entry7, None, model)?);
+    let params7 = spec8.init_params(&mut rng);
+    // (tag, fwd+bwd p50 seconds, train allocs/step) per arena mode.
+    let mut phase_stats: Vec<(String, f64, u64)> = Vec::new();
+    for arena in [true, false] {
+        let b = RefBackend::with_config(1, arena)?;
+        let train7 = b.bind(&tspec, &frozen7)?;
+        let eval7 = b.bind(&espec, &frozen7)?;
+        // Warm the arenas so steady state is what gets measured.
+        for _ in 0..2 {
+            let (_, g) = train7.run_train(&params7, batch, 0, 4.0)?;
+            train7.recycle(g);
+            std::hint::black_box(eval7.run_eval(&params7, batch, 0, 4.0)?);
+        }
+        let tag = if arena { "arena" } else { "no-arena" };
+        let fwd = bench(&format!("pr3/fwd-eval/{tag}"), scale(3), scale(25), || {
+            std::hint::black_box(eval7.run_eval(&params7, batch, 0, 4.0).unwrap());
+        });
+        let fwdbwd = bench(&format!("pr3/fwd+bwd-train/{tag}"), scale(3), scale(25), || {
+            let (loss, g) = train7.run_train(&params7, batch, 0, 4.0).unwrap();
+            std::hint::black_box(loss);
+            train7.recycle(g);
+        });
+        let train_allocs = count_allocs(|| {
+            let (_, g) = train7.run_train(&params7, batch, 0, 4.0).unwrap();
+            train7.recycle(g);
+        });
+        let eval_allocs = count_allocs(|| {
+            std::hint::black_box(eval7.run_eval(&params7, batch, 0, 4.0).unwrap());
+        });
+        println!(
+            "   {tag}: fwd {} | fwd+bwd {} | bwd≈{} | allocs/step: train {} eval {}",
+            Stats::fmt_time(fwd.p50),
+            Stats::fmt_time(fwdbwd.p50),
+            Stats::fmt_time((fwdbwd.p50 - fwd.p50).max(0.0)),
+            train_allocs,
+            eval_allocs
+        );
+        phase_stats.push((tag.to_string(), fwdbwd.p50, train_allocs));
+        pr3.push(Json::obj(vec![
+            ("phase", Json::str("fwd")),
+            ("mode", Json::str(tag)),
+            ("p50_s", Json::num(fwd.p50)),
+            ("allocs_per_step", Json::num(eval_allocs as f64)),
+        ]));
+        pr3.push(Json::obj(vec![
+            ("phase", Json::str("fwd+bwd")),
+            ("mode", Json::str(tag)),
+            ("p50_s", Json::num(fwdbwd.p50)),
+            ("bwd_approx_s", Json::num((fwdbwd.p50 - fwd.p50).max(0.0))),
+            ("allocs_per_step", Json::num(train_allocs as f64)),
+        ]));
+    }
+    let arena_speedup = phase_stats[1].1 / phase_stats[0].1;
+    println!(
+        "   arena speedup on fwd+bwd: {arena_speedup:.2}x (allocs/step {} -> {})",
+        phase_stats[1].2, phase_stats[0].2
+    );
+
+    // Adapter phase: the fused serving apply chain (the α=1 AOT shape).
+    let apply_spec7 = backend.apply_spec("metatt4d", 8)?;
+    let apply_entry7 = backend.entry(&apply_spec7)?;
+    let b_apply = RefBackend::with_config(1, true)?;
+    let apply_runner7 = b_apply.bind(&apply_spec7, &Default::default())?;
+    let apply_inputs: Vec<Tensor> = apply_entry7
+        .inputs
+        .iter()
+        .map(|io| Tensor::randn(&io.shape, 0.5, &mut rng))
+        .collect();
+    std::hint::black_box(apply_runner7.run_raw(&apply_inputs)?); // warm the arena
+    let adapter_stats = bench("pr3/adapter-apply", scale(3), scale(25), || {
+        std::hint::black_box(apply_runner7.run_raw(&apply_inputs).unwrap());
+    });
+    pr3.push(Json::obj(vec![
+        ("phase", Json::str("adapter")),
+        ("mode", Json::str("arena")),
+        ("p50_s", Json::num(adapter_stats.p50)),
+    ]));
+
+    // Optimizer phase: one AdamW update over the adapter's flat params.
+    let mut flat: Vec<f32> = params7.iter().flat_map(|t| t.data().to_vec()).collect();
+    let gflat: Vec<f32> = flat.iter().map(|&x| 0.01 * x + 1e-4).collect();
+    let mut opt = AdamW::new(flat.len(), 0.01);
+    let opt_stats = bench("pr3/optimizer-adamw", scale(3), scale(50), || {
+        opt.step(&mut flat, &gflat, 1e-3);
+        std::hint::black_box(flat[0]);
+    });
+    let opt_allocs = count_allocs(|| opt.step(&mut flat, &gflat, 1e-3));
+    pr3.push(Json::obj(vec![
+        ("phase", Json::str("optimizer")),
+        ("mode", Json::str("in-place")),
+        ("p50_s", Json::num(opt_stats.p50)),
+        ("allocs_per_step", Json::num(opt_allocs as f64)),
+    ]));
+
+    let pr3_path = std::env::var("METATT_BENCH_PR3_OUT")
+        .unwrap_or_else(|_| "BENCH_pr3.json".to_string());
+    let pr3_doc = Json::obj(vec![
+        ("bench", Json::str("hotpath_micro/zero-alloc")),
+        ("smoke", Json::Bool(smoke)),
+        ("arena_speedup_fwd_bwd", Json::num(arena_speedup)),
+        ("records", Json::Arr(pr3)),
+    ]);
+    std::fs::write(&pr3_path, pr3_doc.to_pretty())?;
+    println!("[saved] {pr3_path}");
     Ok(())
 }

@@ -27,10 +27,11 @@ impl Args {
     ) -> Result<Args, String> {
         let mut args = Args::default();
         let mut it = argv.iter().peekable();
-        if let Some(first) = it.peek() {
-            if !first.starts_with('-') {
-                args.command = it.next().unwrap().clone();
-            }
+        // Consume the subcommand iff the first token is not an option —
+        // `next_if` keeps peek+advance atomic, so there is no unwrap to
+        // panic on when argv is exhausted or starts with a flag.
+        if let Some(first) = it.next_if(|tok| !tok.starts_with('-')) {
+            args.command = first.clone();
         }
         while let Some(tok) = it.next() {
             if let Some(body) = tok.strip_prefix("--") {
@@ -168,6 +169,29 @@ mod tests {
     fn flag_with_value_rejected() {
         assert!(Args::parse(&argv("x --verbose=1"), &[], &["verbose"]).is_err());
         assert!(Args::parse(&argv("x --task"), &["task"], &[]).is_err());
+    }
+
+    #[test]
+    fn trailing_value_option_is_usage_error_not_panic() {
+        // A value-taking option as the *last* token must come back as a
+        // clean usage error at every argv position, including when it is
+        // the only token (no subcommand to consume first).
+        for cmdline in ["train --rank", "--rank", "train --task mrpc --rank"] {
+            let err = Args::parse(&argv(cmdline), &["rank", "task"], &[]).unwrap_err();
+            assert!(err.contains("expects a value"), "{cmdline}: {err}");
+        }
+    }
+
+    #[test]
+    fn option_first_argv_has_no_subcommand() {
+        // argv starting with an option: nothing is consumed as a command.
+        let a = Args::parse(&argv("--verbose train"), &["task"], &["verbose"]).unwrap();
+        assert_eq!(a.command, "");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["train"]);
+        // Empty argv parses to an empty command without panicking.
+        let e = Args::parse(&[], &[], &[]).unwrap();
+        assert_eq!(e.command, "");
     }
 
     #[test]

@@ -182,6 +182,8 @@ pub fn run_dmrg(
             }
             opt.step(&mut flat, &gflat, sched.lr_at(step));
             unflatten_all(&mut params, &flat);
+            // Return the consumed grad buffers to the backend's arena.
+            train_runner.recycle(grads);
             loss_sum += loss as f64;
             nb += 1;
             step += 1;

@@ -169,6 +169,8 @@ pub fn run_mtl(
             }
             opt.step(&mut flat, &gflat, sched.lr_at(step));
             unflatten_all(&mut params, &flat);
+            // Return the consumed grad buffers to the backend's arena.
+            train_runner.recycle(grads);
             loss_sum += loss as f64;
             step += 1;
         }

@@ -78,6 +78,8 @@ pub fn pretrain(
         clip_global_norm(&mut gflat, 1.0);
         opt.step(&mut flat, &gflat, sched.lr_at(step));
         unflatten_all(&mut params, &flat);
+        // Return the consumed grad buffers to the backend's arena.
+        runner.recycle(grads);
         final_loss = loss as f64;
         if step % cfg.log_every == 0 || step + 1 == cfg.steps {
             losses.push((step, loss as f64));

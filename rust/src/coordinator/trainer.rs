@@ -196,6 +196,8 @@ impl<'rt> SingleTaskTrainer<'rt> {
                 }
                 opt.step(&mut flat, &gflat, sched.lr_at(step));
                 unflatten_all(params, &flat);
+                // Return the consumed grad buffers to the backend's arena.
+                self.train_runner.recycle(grads);
                 loss_sum += loss as f64;
                 nb += 1;
                 step += 1;

@@ -32,7 +32,7 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`tensor`] | dense f32 host tensors; blocked matmul kernel family with row-band parallelism (`*_mt`) |
+//! | [`tensor`] | dense f32 host tensors; blocked matmul kernel family with row-band parallelism (`*_mt`); [`tensor::Workspace`] step arena behind the zero-allocation hot path |
 //! | [`linalg`] | Householder QR + Jacobi SVD (+ truncated SVD) |
 //! | [`tt`] | tensor-train container, MetaTT variants, DMRG sweep |
 //! | [`adapters`] | parameter layouts + analytic counts for all baselines |

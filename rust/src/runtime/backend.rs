@@ -80,6 +80,13 @@ pub trait Step {
 
     /// Raw positional execution (serving-apply / micro-bench path).
     fn run_raw(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Hand consumed step outputs (e.g. the gradient tensors of a train
+    /// step, after the optimizer has applied them) back to the backend.
+    /// The reference backend returns the buffers to its workspace arena so
+    /// the steady-state train loop performs zero heap allocations; other
+    /// backends may simply drop them (the default).
+    fn recycle(&self, _outputs: Vec<Tensor>) {}
 }
 
 /// An execution backend: resolves [`ArtifactSpec`]s to I/O layouts and binds

@@ -16,24 +16,49 @@
 //! scatter is ever needed. Gradients are checked against central finite
 //! differences in `tests/ref_backend.rs`.
 //!
+//! **Zero-allocation hot path (PR 3).** Every intermediate tensor of a step
+//! is checked out of the bound step's [`crate::tensor::Workspace`] arena
+//! (inside [`StepScratch`]) and recycled at the end of the step, so after a
+//! one-step warmup the steady-state train loop performs no heap allocations
+//! (`tests/alloc_regression.rs`). Three step-level GEMM savings ride on the
+//! same refactor:
+//!
+//! * **Shared TT prefix** — the first adapter GEMM (`x·G1`, `x·U`, `x·A`)
+//!   is identical for the Q and V applies of a layer; `apply_pair` /
+//!   `backward_pair` compute it once and, on the backward side, accumulate
+//!   the two matrices' prefix cotangents before the single `xᵀ·(…)` /
+//!   `(…)·G1ᵀ` projection pair.
+//! * **Per-step middle products** — the tiny r×r `mid` factors depend only
+//!   on the parameters, not the batch, so [`AdapterPre`] computes every
+//!   (layer, matrix) product once per step instead of once per apply.
+//! * **Packed frozen weights** — [`Packed`] holds one-time transposed
+//!   copies of the frozen projection/MLP/classifier weights, so the
+//!   backward `dY·Wᵀ` GEMMs run the streaming `matmul` orientation instead
+//!   of re-striding `matmul_t` every step. (Both orientations accumulate
+//!   k-ascending, so the swap is bit-exact.)
+//!
 //! **Parallel execution.** Every step entry point takes a thread budget
 //! (plumbed from `--threads` via the backend). Inside a step the work is
 //! data-parallel along structurally independent axes: the big GEMMs split
-//! output row bands (`tensor::ops::*_mt`), attention fans out per
-//! (batch, head), and the LayerNorm / GELU / MLM-softmax row loops split
-//! row bands. Cross-row *reductions* (bias column sums, LN γ/β grads, the
-//! scalar loss) always run in a fixed serial order, so 1-thread and
-//! N-thread executions are **bit-identical** (`tests/determinism.rs`).
+//! output row bands (`tensor::ops`), attention fans out per (batch, head)
+//! over flat pair-major buffers, and the LayerNorm / GELU / MLM-softmax row
+//! loops split row bands. Cross-row *reductions* (bias column sums, LN γ/β
+//! grads, the scalar loss) always run in a fixed serial order, so 1-thread
+//! and N-thread executions are **bit-identical**, with the arena on or off
+//! (`tests/determinism.rs`).
 
 use super::registry::{ArtifactEntry, IoSpec};
 use crate::adapters::AdapterKind;
 use crate::config::ModelPreset;
 use crate::data::{Batch, MlmBatch};
-use crate::tensor::Tensor;
+use crate::tensor::{
+    add_into, axpy_into, matmul_into, matmul_t_into, scale_into, softmax_rows_into,
+    t_matmul_into, Tensor, Workspace,
+};
 use crate::tt::MetaTtKind;
 use crate::util::rng::Pcg64;
-use crate::util::threadpool::{scope_map, scope_rows, SharedSliceMut};
-use anyhow::{anyhow, bail, Result};
+use crate::util::threadpool::{scope_for, scope_rows, SharedSliceMut};
+use anyhow::{bail, Result};
 use std::collections::HashMap;
 
 const PAD_ID: i32 = 0;
@@ -56,37 +81,6 @@ fn gate(threads: usize, work: usize) -> usize {
 // Small dense helpers.
 // ---------------------------------------------------------------------------
 
-/// Copy the `i`-th leading-axis slice of a stacked array as an (r × c)
-/// matrix. Works for any tensor whose trailing element count is r·c.
-fn chunk_mat(t: &Tensor, i: usize, r: usize, c: usize) -> Tensor {
-    let len = r * c;
-    Tensor::from_vec(&[r, c], t.data()[i * len..(i + 1) * len].to_vec())
-}
-
-/// Copy rows `[row0, row0+nrows)` × cols `[col0, col0+ncols)` of a matrix.
-fn block(m: &Tensor, row0: usize, nrows: usize, col0: usize, ncols: usize) -> Tensor {
-    let cols = m.shape()[1];
-    let mut out = Tensor::zeros(&[nrows, ncols]);
-    for i in 0..nrows {
-        let src = (row0 + i) * cols + col0;
-        out.data_mut()[i * ncols..(i + 1) * ncols]
-            .copy_from_slice(&m.data()[src..src + ncols]);
-    }
-    out
-}
-
-/// `dst[row0.., col0..] += src` for a (nrows × ncols) block.
-fn add_block(dst: &mut Tensor, row0: usize, col0: usize, src: &Tensor) {
-    let (nrows, ncols) = (src.shape()[0], src.shape()[1]);
-    let cols = dst.shape()[1];
-    for i in 0..nrows {
-        let d0 = (row0 + i) * cols + col0;
-        for j in 0..ncols {
-            dst.data_mut()[d0 + j] += src.data()[i * ncols + j];
-        }
-    }
-}
-
 /// `t[i, :] += bias` for every row.
 fn add_row_bias(t: &mut Tensor, bias: &[f32]) {
     let cols = t.shape()[1];
@@ -98,39 +92,124 @@ fn add_row_bias(t: &mut Tensor, bias: &[f32]) {
     }
 }
 
-/// Column sums of a matrix.
-fn colsum(t: &Tensor) -> Vec<f32> {
+/// Column sums of a matrix accumulated into `out` (rows in ascending order,
+/// so the reduction never depends on the thread count).
+fn colsum_acc(t: &Tensor, out: &mut [f32]) {
     let cols = t.shape()[1];
-    let mut out = vec![0.0f32; cols];
+    debug_assert_eq!(cols, out.len());
     for row in t.data().chunks_exact(cols) {
         for (o, v) in out.iter_mut().zip(row) {
             *o += *v;
         }
     }
-    out
 }
 
-/// Elementwise product with a per-column vector: `t[i, j] * v[j]`.
-fn mul_cols(t: &Tensor, v: &[f32]) -> Tensor {
+/// Elementwise product with a per-column vector into a workspace tensor:
+/// `out[i, j] = t[i, j] * v[j]`.
+fn mul_cols_ws(ws: &mut Workspace, t: &Tensor, v: &[f32]) -> Tensor {
     let cols = t.shape()[1];
     debug_assert_eq!(cols, v.len());
-    let mut out = t.clone();
-    for row in out.data_mut().chunks_exact_mut(cols) {
-        for (x, s) in row.iter_mut().zip(v) {
-            *x *= *s;
+    let mut out = ws.take(t.shape());
+    for (orow, trow) in out
+        .data_mut()
+        .chunks_exact_mut(cols)
+        .zip(t.data().chunks_exact(cols))
+    {
+        for ((o, &x), &s) in orow.iter_mut().zip(trow).zip(v) {
+            *o = x * s;
         }
     }
     out
 }
 
-/// Column sums of the elementwise product of two matrices (Σ_i a[i,j]·b[i,j]).
-fn colsum_mul(a: &Tensor, b: &Tensor) -> Vec<f32> {
+/// `dst[i, j] += t[i, j] * v[j]` (per-column scaling, accumulated).
+fn acc_mul_cols(dst: &mut Tensor, t: &Tensor, v: &[f32]) {
+    let cols = t.shape()[1];
+    debug_assert_eq!(dst.shape(), t.shape());
+    for (drow, trow) in dst
+        .data_mut()
+        .chunks_exact_mut(cols)
+        .zip(t.data().chunks_exact(cols))
+    {
+        for ((o, &x), &s) in drow.iter_mut().zip(trow).zip(v) {
+            *o += x * s;
+        }
+    }
+}
+
+/// `dst[i, j] += s · (t[i, j] * v[j])` — the VeRA delta application. The
+/// inner product is rounded before the scale so the result matches the
+/// historical two-step (`mul_cols` then scaled axpy) form bit-for-bit.
+fn acc_mul_cols_scaled(dst: &mut Tensor, t: &Tensor, v: &[f32], s: f32) {
+    let cols = t.shape()[1];
+    debug_assert_eq!(dst.shape(), t.shape());
+    for (drow, trow) in dst
+        .data_mut()
+        .chunks_exact_mut(cols)
+        .zip(t.data().chunks_exact(cols))
+    {
+        for ((o, &x), &c) in drow.iter_mut().zip(trow).zip(v) {
+            let z = x * c;
+            *o += s * z;
+        }
+    }
+}
+
+/// Column sums of the elementwise product of two matrices, accumulated:
+/// `out[j] += Σ_i a[i,j]·b[i,j]` (rows ascending — fixed reduction order).
+fn colsum_mul_acc(a: &Tensor, b: &Tensor, out: &mut [f32]) {
     debug_assert_eq!(a.shape(), b.shape());
     let cols = a.shape()[1];
-    let mut out = vec![0.0f32; cols];
+    debug_assert_eq!(cols, out.len());
     for (ra, rb) in a.data().chunks_exact(cols).zip(b.data().chunks_exact(cols)) {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += ra[j] * rb[j];
+        }
+    }
+}
+
+/// Copy rows `[row0, row0+nrows)` × cols `[col0, col0+ncols)` of a matrix
+/// into a workspace tensor.
+fn copy_block(
+    ws: &mut Workspace,
+    m: &Tensor,
+    row0: usize,
+    nrows: usize,
+    col0: usize,
+    ncols: usize,
+) -> Tensor {
+    let cols = m.shape()[1];
+    let mut out = ws.take(&[nrows, ncols]);
+    for i in 0..nrows {
+        let src = (row0 + i) * cols + col0;
+        out.data_mut()[i * ncols..(i + 1) * ncols]
+            .copy_from_slice(&m.data()[src..src + ncols]);
+    }
+    out
+}
+
+/// `dst[row0.., col0..] += s·src` for a (nrows × ncols) block; each product
+/// is rounded before the add (matches the historical scale-then-axpy form).
+fn add_block_scaled(dst: &mut Tensor, row0: usize, col0: usize, src: &Tensor, s: f32) {
+    let (nrows, ncols) = (src.shape()[0], src.shape()[1]);
+    let cols = dst.shape()[1];
+    for i in 0..nrows {
+        let d0 = (row0 + i) * cols + col0;
+        let drow = &mut dst.data_mut()[d0..d0 + ncols];
+        let srow = &src.data()[i * ncols..(i + 1) * ncols];
+        for (o, &x) in drow.iter_mut().zip(srow) {
+            *o += s * x;
+        }
+    }
+}
+
+/// Transposed copy of a row-major `rows × cols` slice (→ `cols × rows`).
+fn transpose_chunk(src: &[f32], rows: usize, cols: usize) -> Tensor {
+    debug_assert_eq!(src.len(), rows * cols);
+    let mut out = Tensor::zeros(&[cols, rows]);
+    for i in 0..rows {
         for j in 0..cols {
-            out[j] += ra[j] * rb[j];
+            out.data_mut()[j * rows + i] = src[i * cols + j];
         }
     }
     out
@@ -150,6 +229,96 @@ fn gelu_prime(u: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_K * u * u)
 }
 
+/// `gelu(u)` into a workspace tensor, row-band-parallel.
+fn gelu_ws(ws: &mut Workspace, u: &Tensor, threads: usize) -> Tensor {
+    let (n, f) = (u.shape()[0], u.shape()[1]);
+    let mut g = ws.take(&[n, f]);
+    {
+        let us = u.data();
+        let gs = SharedSliceMut::new(g.data_mut());
+        scope_rows(gate(threads, n * f), n, ROW_BAND, |band| {
+            // SAFETY: bands are disjoint row ranges of g.
+            let dst = unsafe { gs.range_mut(band.start * f, band.end * f) };
+            for (o, &x) in dst.iter_mut().zip(&us[band.start * f..band.end * f]) {
+                *o = gelu(x);
+            }
+        });
+    }
+    g
+}
+
+// ---------------------------------------------------------------------------
+// Workspace-backed GEMM shorthands.
+// ---------------------------------------------------------------------------
+
+/// `a · b` into a workspace tensor.
+fn mm(ws: &mut Workspace, a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[b.ndim() - 1];
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = ws.take(&[m, n]);
+    matmul_into(a.data(), b.data(), out.data_mut(), m, k, n, threads);
+    out
+}
+
+/// `a · Wᵀ` into a workspace tensor, for a layer-chunked weight: uses the
+/// packed transpose (streaming `matmul`) when available, else the strided
+/// `matmul_t` on the raw chunk. Both orientations accumulate k-ascending,
+/// so the two paths are bit-identical.
+fn mm_wt(
+    ws: &mut Workspace,
+    a: &Tensor,
+    packed_t: Option<&Tensor>,
+    w_chunk: &[f32],
+    out_cols: usize,
+    threads: usize,
+) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    debug_assert_eq!(w_chunk.len(), out_cols * k);
+    let mut out = ws.take(&[m, out_cols]);
+    match packed_t {
+        Some(t) => matmul_into(a.data(), t.data(), out.data_mut(), m, k, out_cols, threads),
+        None => matmul_t_into(a.data(), w_chunk, out.data_mut(), m, k, out_cols, threads),
+    }
+    out
+}
+
+/// `dst += a · Wᵀ` accumulated in place (the kernels accumulate into their
+/// output, so no temporary is needed).
+fn acc_mm_wt(
+    dst: &mut Tensor,
+    a: &Tensor,
+    packed_t: Option<&Tensor>,
+    w_chunk: &[f32],
+    out_cols: usize,
+    threads: usize,
+) {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    debug_assert_eq!(dst.len(), m * out_cols);
+    debug_assert_eq!(w_chunk.len(), out_cols * k);
+    match packed_t {
+        Some(t) => matmul_into(a.data(), t.data(), dst.data_mut(), m, k, out_cols, threads),
+        None => matmul_t_into(a.data(), w_chunk, dst.data_mut(), m, k, out_cols, threads),
+    }
+}
+
+/// `s · t` into a workspace tensor.
+fn scale_ws(ws: &mut Workspace, t: &Tensor, s: f32) -> Tensor {
+    let mut out = ws.take(t.shape());
+    for (o, &x) in out.data_mut().iter_mut().zip(t.data()) {
+        *o = s * x;
+    }
+    out
+}
+
+/// `a + b` into a workspace tensor.
+fn add_ws(ws: &mut Workspace, a: &Tensor, b: &Tensor) -> Tensor {
+    debug_assert_eq!(a.shape(), b.shape());
+    let mut out = ws.take(a.shape());
+    add_into(a.data(), b.data(), out.data_mut());
+    out
+}
+
 // ---------------------------------------------------------------------------
 // LayerNorm with cached normalization state.
 // ---------------------------------------------------------------------------
@@ -157,8 +326,15 @@ fn gelu_prime(u: f32) -> f32 {
 struct LnCache {
     /// Normalized input (x - μ)/σ, needed by both the output and the grads.
     xhat: Tensor,
-    /// 1/σ per row.
-    inv_std: Vec<f32>,
+    /// 1/σ per row (workspace-backed vector).
+    inv_std: Tensor,
+}
+
+impl LnCache {
+    fn recycle_into(self, ws: &mut Workspace) {
+        ws.recycle(self.xhat);
+        ws.recycle(self.inv_std);
+    }
 }
 
 /// `y = (x - μ)/sqrt(var + ε) · g + b` per row (biased variance, as jnp.var).
@@ -169,16 +345,17 @@ fn layer_norm(
     gamma: &[f32],
     beta: &[f32],
     threads: usize,
+    ws: &mut Workspace,
 ) -> (Tensor, LnCache) {
     let (n, d) = (x.shape()[0], x.shape()[1]);
-    let mut xhat = Tensor::zeros(&[n, d]);
-    let mut y = Tensor::zeros(&[n, d]);
-    let mut inv_std = vec![0.0f32; n];
+    let mut xhat = ws.take(&[n, d]);
+    let mut y = ws.take(&[n, d]);
+    let mut inv_std = ws.take(&[n]);
     {
         let xs = x.data();
         let xhs = SharedSliceMut::new(xhat.data_mut());
         let ys = SharedSliceMut::new(y.data_mut());
-        let invs = SharedSliceMut::new(&mut inv_std);
+        let invs = SharedSliceMut::new(inv_std.data_mut());
         scope_rows(gate(threads, n * d), n, ROW_BAND, |band| {
             // SAFETY: bands are disjoint row ranges; each buffer is sliced
             // to this band only.
@@ -204,22 +381,59 @@ fn layer_norm(
     (y, LnCache { xhat, inv_std })
 }
 
+/// Inference-mode LayerNorm: same bits as [`layer_norm`]'s `y`, but no
+/// normalization cache is materialized at all.
+fn layer_norm_infer(
+    x: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    threads: usize,
+    ws: &mut Workspace,
+) -> Tensor {
+    let (n, d) = (x.shape()[0], x.shape()[1]);
+    let mut y = ws.take(&[n, d]);
+    {
+        let xs = x.data();
+        let ys = SharedSliceMut::new(y.data_mut());
+        scope_rows(gate(threads, n * d), n, ROW_BAND, |band| {
+            // SAFETY: bands are disjoint row ranges of y.
+            let y_band = unsafe { ys.range_mut(band.start * d, band.end * d) };
+            for i in band.clone() {
+                let row = &xs[i * d..(i + 1) * d];
+                let o = (i - band.start) * d;
+                let mu = row.iter().sum::<f32>() / d as f32;
+                let var =
+                    row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+                let inv = 1.0 / (var + LN_EPS).sqrt();
+                for j in 0..d {
+                    let xh = (row[j] - mu) * inv;
+                    y_band[o + j] = xh * gamma[j] + beta[j];
+                }
+            }
+        });
+    }
+    y
+}
+
 /// LayerNorm backward. Returns dx; if `dgb` is Some((dgamma, dbeta)) the
-/// parameter gradients are accumulated into the provided buffers. The dx
-/// rows are band-parallel; the γ/β reduction runs in a fixed serial row
-/// order so its accumulation never depends on the thread count.
+/// parameter gradients are accumulated into the provided buffers (which may
+/// be the grad sink's chunks directly). The dx rows are band-parallel; the
+/// γ/β reduction runs in a fixed serial row order so its accumulation never
+/// depends on the thread count.
 fn layer_norm_backward(
     dy: &Tensor,
     cache: &LnCache,
     gamma: &[f32],
     dgb: Option<(&mut [f32], &mut [f32])>,
     threads: usize,
+    ws: &mut Workspace,
 ) -> Tensor {
     let (n, d) = (dy.shape()[0], dy.shape()[1]);
-    let mut dx = Tensor::zeros(&[n, d]);
+    let mut dx = ws.take(&[n, d]);
     {
         let dys = dy.data();
         let xhs = cache.xhat.data();
+        let invs = cache.inv_std.data();
         let dxs = SharedSliceMut::new(dx.data_mut());
         scope_rows(gate(threads, n * d), n, ROW_BAND, |band| {
             // SAFETY: bands are disjoint row ranges of dx.
@@ -237,7 +451,7 @@ fn layer_norm_backward(
                 }
                 m1 /= d as f32;
                 m2 /= d as f32;
-                let inv = cache.inv_std[i];
+                let inv = invs[i];
                 for j in 0..d {
                     let dxh = dyr[j] * gamma[j];
                     dx_band[o + j] = (dxh - m1 - xhr[j] * m2) * inv;
@@ -263,35 +477,62 @@ fn layer_norm_backward(
 // ---------------------------------------------------------------------------
 
 /// Accumulates gradients for the artifact's ordered trainable arrays.
-struct GradSink {
+/// Buffers are workspace checkouts; the name → index map is prebuilt once
+/// per bound step, so constructing a sink allocates nothing in steady
+/// state. Backward GEMMs accumulate *directly* into the chunks.
+struct GradSink<'a> {
     grads: Vec<Tensor>,
-    index: HashMap<String, usize>,
+    index: &'a HashMap<String, usize>,
 }
 
-impl GradSink {
-    fn new(specs: &[IoSpec]) -> GradSink {
-        let grads = specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
-        let index = specs
-            .iter()
-            .enumerate()
-            .map(|(i, s)| (s.name.clone(), i))
-            .collect();
+impl<'a> GradSink<'a> {
+    fn new(specs: &[IoSpec], index: &'a HashMap<String, usize>, ws: &mut Workspace) -> Self {
+        let mut grads = ws.take_vec();
+        for s in specs {
+            grads.push(ws.take(&s.shape));
+        }
         GradSink { grads, index }
+    }
+
+    fn idx(&self, name: &str) -> usize {
+        *self.index.get(name).unwrap_or_else(|| {
+            panic!("gradient for unknown trainable '{name}'")
+        })
+    }
+
+    /// `grad[name][offset..offset+len]` as a raw accumulation target.
+    fn chunk_mut(&mut self, name: &str, offset: usize, len: usize) -> &mut [f32] {
+        let i = self.idx(name);
+        &mut self.grads[i].data_mut()[offset..offset + len]
+    }
+
+    /// Two disjoint chunks of *different* trainable tensors at once (the
+    /// LayerNorm γ/β pair).
+    fn two_chunks_mut(
+        &mut self,
+        a: (&str, usize, usize),
+        b: (&str, usize, usize),
+    ) -> (&mut [f32], &mut [f32]) {
+        let ia = self.idx(a.0);
+        let ib = self.idx(b.0);
+        assert_ne!(ia, ib, "two_chunks_mut needs distinct tensors");
+        let hi = ia.max(ib);
+        let lo = ia.min(ib);
+        let (left, right) = self.grads.split_at_mut(hi);
+        let (t_lo, t_hi) = (&mut left[lo], &mut right[0]);
+        let (t_a, t_b) = if ia < ib { (t_lo, t_hi) } else { (t_hi, t_lo) };
+        (
+            &mut t_a.data_mut()[a.1..a.1 + a.2],
+            &mut t_b.data_mut()[b.1..b.1 + b.2],
+        )
     }
 
     /// `grad[name][offset..offset+len] += src` (contiguous chunk).
     fn add_chunk(&mut self, name: &str, offset: usize, src: &[f32]) {
-        let i = *self.index.get(name).unwrap_or_else(|| {
-            panic!("gradient for unknown trainable '{name}'")
-        });
-        let dst = &mut self.grads[i].data_mut()[offset..offset + src.len()];
+        let dst = self.chunk_mut(name, offset, src.len());
         for (d, s) in dst.iter_mut().zip(src) {
             *d += *s;
         }
-    }
-
-    fn add_all(&mut self, name: &str, src: &Tensor) {
-        self.add_chunk(name, 0, src.data());
     }
 
     fn into_vec(self) -> Vec<Tensor> {
@@ -300,45 +541,51 @@ impl GradSink {
 }
 
 // ---------------------------------------------------------------------------
-// Weight resolution: frozen map + ordered trainable slice, by name.
+// Weight resolution: prebuilt name index over frozen map + trainable slice.
 // ---------------------------------------------------------------------------
 
+/// Where a named weight lives for a bound step.
+#[derive(Clone, Copy, Debug)]
+enum WeightSlot {
+    /// In the backend's frozen map (looked up by name).
+    Frozen,
+    /// At this index of the per-call trainable slice.
+    Trainable(usize),
+}
+
+/// Per-call weight view: the bind-time name index plus the step's borrowed
+/// frozen map and trainable tensors. Resolution allocates nothing.
 struct Weights<'a> {
-    map: HashMap<&'a str, &'a Tensor>,
+    index: &'a HashMap<String, WeightSlot>,
+    frozen: &'a HashMap<String, Tensor>,
+    trainable: &'a [Tensor],
 }
 
 impl<'a> Weights<'a> {
-    fn build(
-        entry: &'a ArtifactEntry,
-        frozen: &'a HashMap<String, Tensor>,
-        trainable: &'a [Tensor],
-    ) -> Result<Weights<'a>> {
-        let mut map: HashMap<&str, &Tensor> = HashMap::new();
-        for io in entry.frozen_inputs() {
-            let t = frozen
-                .get(&io.name)
-                .ok_or_else(|| anyhow!("frozen input '{}' missing", io.name))?;
-            map.insert(io.name.as_str(), t);
+    fn get(&self, name: &str) -> &'a Tensor {
+        match self.index.get(name) {
+            Some(WeightSlot::Frozen) => self.frozen.get(name).unwrap_or_else(|| {
+                panic!("frozen weight '{name}' missing from the bound set")
+            }),
+            Some(WeightSlot::Trainable(i)) => &self.trainable[*i],
+            None => panic!("weight '{name}' not in the step layout"),
         }
-        for (io, t) in entry.trainable_inputs().iter().zip(trainable) {
-            map.insert(io.name.as_str(), t);
-        }
-        Ok(Weights { map })
     }
 
-    fn get(&self, name: &str) -> &Tensor {
-        self.map
-            .get(name)
-            .unwrap_or_else(|| panic!("weight '{name}' not resolved"))
-    }
-
-    fn vec(&self, name: &str) -> &[f32] {
+    fn vec(&self, name: &str) -> &'a [f32] {
         self.get(name).data()
     }
 
     /// Row `i` of a (rows, d) stacked vector array.
-    fn row(&self, name: &str, i: usize, d: usize) -> &[f32] {
+    fn row(&self, name: &str, i: usize, d: usize) -> &'a [f32] {
         &self.get(name).data()[i * d..(i + 1) * d]
+    }
+
+    /// The `i`-th leading-axis chunk of a stacked array, as a raw slice of
+    /// `len` elements (layer weight matrices are contiguous chunks — no
+    /// copy is ever needed on the forward orientation).
+    fn chunk(&self, name: &str, i: usize, len: usize) -> &'a [f32] {
+        &self.get(name).data()[i * len..(i + 1) * len]
     }
 }
 
@@ -379,14 +626,245 @@ fn dims_of(entry: &ArtifactEntry) -> Result<Dims> {
 }
 
 // ---------------------------------------------------------------------------
+// Packed frozen weights: one-time transposed copies for backward GEMMs.
+// ---------------------------------------------------------------------------
+
+/// Pre-transposed copies of the frozen encoder weights, packed once at bind
+/// time so every backward `dY·Wᵀ` runs the cache-friendly streaming
+/// orientation. Empty when the corresponding weights are trainable (full
+/// fine-tuning / pretraining) — those paths fall back to the strided
+/// `matmul_t`, exactly as before.
+#[derive(Default)]
+struct Packed {
+    wq_t: Vec<Tensor>,
+    wk_t: Vec<Tensor>,
+    wv_t: Vec<Tensor>,
+    wo_t: Vec<Tensor>,
+    w1_t: Vec<Tensor>,
+    w2_t: Vec<Tensor>,
+    /// Per-task transposed classifier heads (classes × d).
+    cls_w_t: Vec<Tensor>,
+}
+
+/// Transposed per-chunk copies of a stacked frozen array, or empty when the
+/// name is absent (trainable, or not part of this spec).
+fn pack_t(
+    frozen: &HashMap<String, Tensor>,
+    name: &str,
+    rows: usize,
+    cols: usize,
+    count: usize,
+) -> Vec<Tensor> {
+    match frozen.get(name) {
+        Some(t) if t.len() == count * rows * cols => (0..count)
+            .map(|i| {
+                transpose_chunk(&t.data()[i * rows * cols..(i + 1) * rows * cols], rows, cols)
+            })
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+impl Packed {
+    fn build(dims: &Dims, entry: &ArtifactEntry, frozen: &HashMap<String, Tensor>) -> Packed {
+        let (d, f, l) = (dims.d, dims.f, dims.l);
+        let tasks = entry.spec.tasks.max(1);
+        Packed {
+            wq_t: pack_t(frozen, "wq", d, d, l),
+            wk_t: pack_t(frozen, "wk", d, d, l),
+            wv_t: pack_t(frozen, "wv", d, d, l),
+            wo_t: pack_t(frozen, "wo", d, d, l),
+            w1_t: pack_t(frozen, "w1", d, f, l),
+            w2_t: pack_t(frozen, "w2", f, d, l),
+            cls_w_t: pack_t(frozen, "cls_w", d, dims.classes, tasks),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Step scratch: everything a bound step reuses across calls.
+// ---------------------------------------------------------------------------
+
+/// Per-bound-step reusable state: the workspace arena, the weight-name and
+/// gradient-name indices, the packed transposed frozen weights, the
+/// persistent adapter-precompute containers, and the pooled layer-cache
+/// vector. Owned by the backend's step behind a mutex; after a one-step
+/// warmup, running a step against this scratch allocates nothing.
+pub struct StepScratch {
+    ws: Workspace,
+    index: HashMap<String, WeightSlot>,
+    grad_index: HashMap<String, usize>,
+    packed: Packed,
+    pre: AdapterPre,
+    layers: Vec<LayerCache>,
+    /// Per-row f64 loss terms of the MLM objective (f64 lives outside the
+    /// f32 arena; the container persists so pretrain steps stay pooled).
+    row_loss: Vec<f64>,
+}
+
+impl StepScratch {
+    pub fn new(
+        entry: &ArtifactEntry,
+        frozen: &HashMap<String, Tensor>,
+        arena: bool,
+    ) -> Result<StepScratch> {
+        let dims = dims_of(entry)?;
+        let mut index = HashMap::new();
+        for io in entry.frozen_inputs() {
+            index.insert(io.name.clone(), WeightSlot::Frozen);
+        }
+        for (i, io) in entry.trainable_inputs().iter().enumerate() {
+            index.insert(io.name.clone(), WeightSlot::Trainable(i));
+        }
+        let grad_index = entry
+            .trainable_inputs()
+            .iter()
+            .enumerate()
+            .map(|(i, io)| (io.name.clone(), i))
+            .collect();
+        Ok(StepScratch {
+            ws: Workspace::new(arena),
+            index,
+            grad_index,
+            packed: Packed::build(&dims, entry, frozen),
+            pre: AdapterPre::default(),
+            layers: Vec::new(),
+            row_loss: Vec::new(),
+        })
+    }
+
+    /// The step's workspace (the backend's `recycle` hook feeds consumed
+    /// outputs back through this).
+    pub fn workspace_mut(&mut self) -> &mut Workspace {
+        &mut self.ws
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Adapter application (forward + backward), all Table-1 families.
 // ---------------------------------------------------------------------------
+
+/// Per-step adapter precomputations, stored in persistent containers so
+/// refilling them each step allocates nothing: every (layer, matrix) r×r
+/// `mid` product, the (4+1)D backward-only `ab`/`bc` factors, and VeRA's
+/// seed-fixed frozen projections.
+#[derive(Default)]
+struct AdapterPre {
+    /// `layer·matrices + matrix` → the r×r middle product of the chain.
+    mids: Vec<Tensor>,
+    /// (4+1)D backward only: `G2[l]·G3[t]` per layer.
+    ab: Vec<Tensor>,
+    /// (4+1)D backward only: `G3[t]·G4[m]` per matrix.
+    bc: Vec<Tensor>,
+    /// VeRA's frozen shared projections (A: d×r, B: r×d), seed-fixed.
+    vera: Option<(Tensor, Tensor)>,
+}
+
+impl AdapterPre {
+    /// Recompute the per-step products. `train` additionally materializes
+    /// the backward-only factors; inference forwards skip them.
+    #[allow(clippy::too_many_arguments)]
+    fn fill(
+        &mut self,
+        kind: Option<AdapterKind>,
+        dims: &Dims,
+        params: &[Tensor],
+        rank: usize,
+        task: usize,
+        matrices: usize,
+        train: bool,
+        ws: &mut Workspace,
+    ) {
+        debug_assert!(self.mids.is_empty() && self.ab.is_empty() && self.bc.is_empty());
+        let r = rank;
+        let rr = r * r;
+        match kind {
+            Some(AdapterKind::MetaTt(MetaTtKind::FourD))
+            | Some(AdapterKind::MetaTt(MetaTtKind::FiveD)) => {
+                let (g2, g3) = (&params[1], &params[2]);
+                for l in 0..dims.l {
+                    let g2l = &g2.data()[l * rr..(l + 1) * rr];
+                    for m in 0..matrices {
+                        let g3m = &g3.data()[m * rr..(m + 1) * rr];
+                        let mut mid = ws.take(&[r, r]);
+                        matmul_into(g2l, g3m, mid.data_mut(), r, r, r, 1);
+                        self.mids.push(mid);
+                    }
+                }
+            }
+            Some(AdapterKind::MetaTt(MetaTtKind::FourPlusOneD)) => {
+                let (g2, g3, g4) = (&params[1], &params[2], &params[3]);
+                let cb = &g3.data()[task * rr..(task + 1) * rr];
+                if train {
+                    for m in 0..matrices {
+                        let cc = &g4.data()[m * rr..(m + 1) * rr];
+                        let mut bcm = ws.take(&[r, r]);
+                        matmul_into(cb, cc, bcm.data_mut(), r, r, r, 1);
+                        self.bc.push(bcm);
+                    }
+                }
+                for l in 0..dims.l {
+                    let ca = &g2.data()[l * rr..(l + 1) * rr];
+                    let mut abl = ws.take(&[r, r]);
+                    matmul_into(ca, cb, abl.data_mut(), r, r, r, 1);
+                    for m in 0..matrices {
+                        let cc = &g4.data()[m * rr..(m + 1) * rr];
+                        let mut mid = ws.take(&[r, r]);
+                        matmul_into(abl.data(), cc, mid.data_mut(), r, r, r, 1);
+                        self.mids.push(mid);
+                    }
+                    if train {
+                        self.ab.push(abl);
+                    } else {
+                        ws.recycle(abl);
+                    }
+                }
+            }
+            Some(AdapterKind::VeRa) => {
+                // Mirror of model.py `_vera_frozen`: shared random A (d×r),
+                // B (r×d), seed-fixed so every step agrees. (The PJRT
+                // artifacts bake jax-PRNG draws; the reference backend uses
+                // its own fixed PCG stream — same distribution, different
+                // realization.) Generated once per bound step and kept —
+                // the draws are parameter-independent constants, so
+                // regenerating ~2·d·r normals per step would be exactly the
+                // per-step-constant recomputation this refactor removes.
+                if self.vera.is_none() {
+                    let d = dims.d;
+                    let mut rng = Pcg64::with_stream(7, 0x7e2a);
+                    let mut a = ws.take(&[d, r]);
+                    rng.fill_normal(a.data_mut(), 1.0 / (d as f32).sqrt());
+                    let mut b = ws.take(&[r, d]);
+                    rng.fill_normal(b.data_mut(), 1.0 / (r as f32).sqrt());
+                    self.vera = Some((a, b));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Return the per-step tensors to the workspace, keeping the containers
+    /// for the next step (VeRA's frozen projections persist — they are
+    /// step-invariant constants, like the packed weights).
+    fn recycle_into(&mut self, ws: &mut Workspace) {
+        for t in self.mids.drain(..) {
+            ws.recycle(t);
+        }
+        for t in self.ab.drain(..) {
+            ws.recycle(t);
+        }
+        for t in self.bc.drain(..) {
+            ws.recycle(t);
+        }
+    }
+}
 
 struct AdapterCtx<'a> {
     /// None for "full"/"none" (zero delta).
     kind: Option<AdapterKind>,
     params: &'a [Tensor],
     alpha: f32,
+    /// Task index ((4+1)D task-core slicing).
     task: usize,
     rank: usize,
     heads: usize,
@@ -395,262 +873,745 @@ struct AdapterCtx<'a> {
     /// Thread budget for the activation-sized GEMMs (the r×r factor
     /// products stay serial — they are far below the parallel threshold).
     threads: usize,
-    /// VeRA's frozen shared projections (seed-fixed), built once per step.
-    vera_frozen: Option<(Tensor, Tensor)>,
+    pre: &'a AdapterPre,
+}
+
+/// Resolve the adapter kind of a spec ("full"/"none" → None).
+fn adapter_kind_of(entry: &ArtifactEntry) -> Result<Option<AdapterKind>> {
+    Ok(match entry.spec.adapter.as_str() {
+        "full" | "none" => None,
+        name => match AdapterKind::from_name(name).map_err(anyhow::Error::msg)? {
+            AdapterKind::Full => None,
+            k => Some(k),
+        },
+    })
 }
 
 impl<'a> AdapterCtx<'a> {
-    fn new(
-        entry: &ArtifactEntry,
-        params: &'a [Tensor],
-        alpha: f32,
-        task: usize,
-        threads: usize,
-    ) -> Result<Self> {
-        let dims = dims_of(entry)?;
-        let kind = match entry.spec.adapter.as_str() {
-            "full" | "none" => None,
-            name => Some(AdapterKind::from_name(name).map_err(anyhow::Error::msg)?),
-        };
-        let vera_frozen = if matches!(kind, Some(AdapterKind::VeRa)) {
-            // Mirror of model.py `_vera_frozen`: shared random A (d×r),
-            // B (r×d), seed-fixed so every step agrees. (The PJRT artifacts
-            // bake jax-PRNG draws; the reference backend uses its own fixed
-            // PCG stream — same distribution, different realization.)
-            let r = entry.spec.rank;
-            let d = dims.d;
-            let mut rng = Pcg64::with_stream(7, 0x7e2a);
-            let a = Tensor::randn(&[d, r], 1.0 / (d as f32).sqrt(), &mut rng);
-            let b = Tensor::randn(&[r, d], 1.0 / (r as f32).sqrt(), &mut rng);
-            Some((a, b))
-        } else {
-            None
-        };
-        Ok(AdapterCtx {
-            kind,
-            params,
-            alpha,
-            task,
-            rank: entry.spec.rank,
-            heads: dims.h,
-            matrices: 2,
-            d: dims.d,
-            threads,
-            vera_frozen,
-        })
-    }
-
-    /// Adapter delta for activations `x` (n × d) at (layer, matrix).
-    fn apply(&self, x: &Tensor, layer: usize, matrix: usize) -> (Tensor, AdapterCache) {
+    /// Adapter deltas for both adapted matrices of `layer`, accumulated in
+    /// place: `q += α·Δ_{l,0}(x)`, `v += α·Δ_{l,1}(x)`. The x-side prefix
+    /// GEMM (`x·G1` / `x·U` / `x·A`) is computed once and shared.
+    fn apply_pair(
+        &self,
+        ws: &mut Workspace,
+        x: &Tensor,
+        layer: usize,
+        q: &mut Tensor,
+        v: &mut Tensor,
+    ) -> PairCache {
         let (n, d, r) = (x.shape()[0], self.d, self.rank);
         let a = self.alpha;
         let th = self.threads;
         match self.kind {
-            None => (Tensor::zeros(&[n, d]), AdapterCache::None),
-            Some(AdapterKind::MetaTt(MetaTtKind::FourD)) => {
-                let [g1, g2, g3, g4] = self.p4();
-                let mid = chunk_mat(g2, layer, r, r).matmul(&chunk_mat(g3, matrix, r, r));
-                let xg1 = x.matmul_mt(g1, th);
-                let xgm = xg1.matmul(&mid);
-                let delta = xgm.matmul_mt(g4, th).scale(a);
-                (delta, AdapterCache::Tt4 { xg1, xgm, mid })
-            }
-            Some(AdapterKind::MetaTt(MetaTtKind::FourPlusOneD)) => {
-                let [g1, g2, g3, g4, g5] = self.p5();
-                let ca = chunk_mat(g2, layer, r, r);
-                let cb = chunk_mat(g3, self.task, r, r);
-                let cc = chunk_mat(g4, matrix, r, r);
-                let ab = ca.matmul(&cb);
-                let bc = cb.matmul(&cc);
-                let mid = ab.matmul(&cc);
-                let xg1 = x.matmul_mt(g1, th);
-                let xgm = xg1.matmul(&mid);
-                let delta = xgm.matmul_mt(g5, th).scale(a);
-                (delta, AdapterCache::Tt4p1 { xg1, xgm, ca, ab, bc, mid })
+            None => PairCache::None,
+            Some(AdapterKind::Full) => PairCache::None,
+            Some(AdapterKind::MetaTt(MetaTtKind::FourD))
+            | Some(AdapterKind::MetaTt(MetaTtKind::FourPlusOneD)) => {
+                let g1 = &self.params[0];
+                let g_last = &self.params[self.params.len() - 1]; // g4 / g5
+                let xg1 = mm(ws, x, g1, th); // (n, r) — shared by Q and V
+                let mut pair = [None, None];
+                for (m, out) in [(0usize, &mut *q), (1, &mut *v)] {
+                    let mid = &self.pre.mids[layer * self.matrices + m];
+                    let mut xgm = ws.take(&[n, r]);
+                    matmul_into(xg1.data(), mid.data(), xgm.data_mut(), n, r, r, 1);
+                    let delta = mm(ws, &xgm, g_last, th); // (n, d)
+                    axpy_into(out.data_mut(), a, delta.data());
+                    ws.recycle(delta);
+                    pair[m] = Some(xgm);
+                }
+                PairCache::Tt {
+                    xg1,
+                    xgm_q: pair[0].take().expect("q cache"),
+                    xgm_v: pair[1].take().expect("v cache"),
+                }
             }
             Some(AdapterKind::MetaTt(MetaTtKind::FiveD)) => {
-                let [g1, g2, g3, g4, g5] = self.p5();
+                let g1 = &self.params[0];
+                let g4 = &self.params[3];
+                let g5 = &self.params[4];
                 let dh = d / self.heads;
-                let lm = chunk_mat(g2, layer, r, r).matmul(&chunk_mat(g3, matrix, r, r));
-                let xg1 = x.matmul_mt(g1, th);
-                let xlm = xg1.matmul(&lm);
-                let mut delta = Tensor::zeros(&[n, d]);
-                let mut xh = Vec::with_capacity(self.heads);
-                for hh in 0..self.heads {
-                    let xhh = xlm.matmul(&chunk_mat(g4, hh, r, r));
-                    let y = xhh.matmul_mt(g5, th).scale(a); // (n, dh)
-                    add_block(&mut delta, 0, hh * dh, &y);
-                    xh.push(xhh);
+                let rr = r * r;
+                let xg1 = mm(ws, x, g1, th);
+                let mut xlm_c = [None, None];
+                let mut xh_c = [None, None];
+                for (m, out) in [(0usize, &mut *q), (1, &mut *v)] {
+                    let lm = &self.pre.mids[layer * self.matrices + m];
+                    let mut xlm = ws.take(&[n, r]);
+                    matmul_into(xg1.data(), lm.data(), xlm.data_mut(), n, r, r, 1);
+                    let mut xh = ws.take(&[self.heads, n, r]);
+                    for hh in 0..self.heads {
+                        let g4h = &g4.data()[hh * rr..(hh + 1) * rr];
+                        {
+                            let blk = &mut xh.data_mut()[hh * n * r..(hh + 1) * n * r];
+                            matmul_into(xlm.data(), g4h, blk, n, r, r, 1);
+                        }
+                        let mut y = ws.take(&[n, dh]);
+                        matmul_into(
+                            &xh.data()[hh * n * r..(hh + 1) * n * r],
+                            g5.data(),
+                            y.data_mut(),
+                            n,
+                            r,
+                            dh,
+                            th,
+                        );
+                        add_block_scaled(out, 0, hh * dh, &y, a);
+                        ws.recycle(y);
+                    }
+                    xlm_c[m] = Some(xlm);
+                    xh_c[m] = Some(xh);
                 }
-                (delta, AdapterCache::Tt5 { xg1, xlm, lm, xh })
+                PairCache::Tt5 {
+                    xg1,
+                    xlm_q: xlm_c[0].take().expect("q cache"),
+                    xh_q: xh_c[0].take().expect("q cache"),
+                    xlm_v: xlm_c[1].take().expect("v cache"),
+                    xh_v: xh_c[1].take().expect("v cache"),
+                }
             }
             Some(AdapterKind::LoRa) => {
                 let (pa, pb) = (&self.params[0], &self.params[1]);
-                let idx = layer * self.matrices + matrix;
-                let am = chunk_mat(pa, idx, d, r);
-                let bm = chunk_mat(pb, idx, r, d);
-                let xa = x.matmul_mt(&am, th);
-                let delta = xa.matmul_mt(&bm, th).scale(a);
-                (delta, AdapterCache::Lora { xa })
+                let mut xa_c = [None, None];
+                for (m, out) in [(0usize, &mut *q), (1, &mut *v)] {
+                    let idx = layer * self.matrices + m;
+                    let am = &pa.data()[idx * d * r..(idx + 1) * d * r];
+                    let bm = &pb.data()[idx * r * d..(idx + 1) * r * d];
+                    let mut xa = ws.take(&[n, r]);
+                    matmul_into(x.data(), am, xa.data_mut(), n, d, r, th);
+                    let mut delta = ws.take(&[n, d]);
+                    matmul_into(xa.data(), bm, delta.data_mut(), n, r, d, th);
+                    axpy_into(out.data_mut(), a, delta.data());
+                    ws.recycle(delta);
+                    xa_c[m] = Some(xa);
+                }
+                PairCache::Lora {
+                    xa_q: xa_c[0].take().expect("q cache"),
+                    xa_v: xa_c[1].take().expect("v cache"),
+                }
             }
             Some(AdapterKind::VeRa) => {
-                let (fa, fb) = self.vera_frozen.as_ref().expect("vera frozen");
-                let idx = layer * self.matrices + matrix;
-                let dvec = &self.params[0].data()[idx * r..(idx + 1) * r];
-                let bvec = &self.params[1].data()[idx * d..(idx + 1) * d];
-                let xa = x.matmul_mt(fa, th);
-                let t = mul_cols(&xa, dvec);
-                let tb = t.matmul_mt(fb, th);
-                let delta = mul_cols(&tb, bvec).scale(a);
-                (delta, AdapterCache::Vera { xa, tb })
+                let (fa, fb) = self.pre.vera.as_ref().expect("vera frozen");
+                let xa = mm(ws, x, fa, th); // shared: fa is the same for Q and V
+                let mut tb_c = [None, None];
+                for (m, out) in [(0usize, &mut *q), (1, &mut *v)] {
+                    let idx = layer * self.matrices + m;
+                    let dvec = &self.params[0].data()[idx * r..(idx + 1) * r];
+                    let bvec = &self.params[1].data()[idx * d..(idx + 1) * d];
+                    let t = mul_cols_ws(ws, &xa, dvec);
+                    let tb = mm(ws, &t, fb, th);
+                    ws.recycle(t);
+                    acc_mul_cols_scaled(out, &tb, bvec, a);
+                    tb_c[m] = Some(tb);
+                }
+                PairCache::Vera {
+                    xa,
+                    tb_q: tb_c[0].take().expect("q cache"),
+                    tb_v: tb_c[1].take().expect("v cache"),
+                }
             }
             Some(AdapterKind::LoTr) => {
                 let (u, sall, vmat) = (&self.params[0], &self.params[1], &self.params[2]);
-                let idx = layer * self.matrices + matrix;
-                let sm = chunk_mat(sall, idx, r, r);
-                let xu = x.matmul_mt(u, th);
-                let xus = xu.matmul(&sm);
-                let delta = xus.matmul_mt(vmat, th).scale(a);
-                (delta, AdapterCache::Lotr { xu, xus, sm })
+                let rr = r * r;
+                let xu = mm(ws, x, u, th); // shared: U is global across (l, m)
+                let mut xus_c = [None, None];
+                for (m, out) in [(0usize, &mut *q), (1, &mut *v)] {
+                    let idx = layer * self.matrices + m;
+                    let sm = &sall.data()[idx * rr..(idx + 1) * rr];
+                    let mut xus = ws.take(&[n, r]);
+                    matmul_into(xu.data(), sm, xus.data_mut(), n, r, r, 1);
+                    let delta = mm(ws, &xus, vmat, th);
+                    axpy_into(out.data_mut(), a, delta.data());
+                    ws.recycle(delta);
+                    xus_c[m] = Some(xus);
+                }
+                PairCache::Lotr {
+                    xu,
+                    xus_q: xus_c[0].take().expect("q cache"),
+                    xus_v: xus_c[1].take().expect("v cache"),
+                }
             }
-            Some(AdapterKind::Full) => (Tensor::zeros(&[n, d]), AdapterCache::None),
         }
     }
 
-    /// Backward through the delta at (layer, matrix): accumulates parameter
-    /// grads into `sink` and `dx += ∂delta/∂x · dy`.
-    fn backward(
+    /// Backward through both deltas of `layer`: accumulates parameter grads
+    /// into `sink` and `dx += Σ_m ∂Δ_m/∂x · dy_m`. For the shared-prefix
+    /// families the per-matrix prefix cotangents are summed *before* the
+    /// final `xᵀ·(…)` / `(…)·G1ᵀ` projections, halving the big GEMMs.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_pair(
         &self,
+        ws: &mut Workspace,
         x: &Tensor,
         layer: usize,
-        matrix: usize,
-        cache: &AdapterCache,
-        dy: &Tensor,
+        cache: &PairCache,
+        dq: &Tensor,
+        dv: &Tensor,
         dx: &mut Tensor,
         sink: &mut GradSink,
     ) {
         let (d, r) = (self.d, self.rank);
+        let rr = r * r;
         let th = self.threads;
-        let dya = dy.scale(self.alpha); // fold α once
+        let n = dq.shape()[0];
+        let a = self.alpha;
         match (self.kind, cache) {
             (None, _) | (Some(AdapterKind::Full), _) => {}
-            (Some(AdapterKind::MetaTt(MetaTtKind::FourD)), AdapterCache::Tt4 { xg1, xgm, mid }) => {
-                let [g1, g2, g3, g4] = self.p4();
-                sink.add_all("g4", &xgm.t_matmul_mt(&dya, th));
-                let dxgm = dya.matmul_t_mt(g4, th);
-                let dmid = xg1.t_matmul_mt(&dxgm, th);
-                let g2l = chunk_mat(g2, layer, r, r);
-                let g3m = chunk_mat(g3, matrix, r, r);
-                sink.add_chunk("g2", layer * r * r, dmid.matmul_t(&g3m).data());
-                sink.add_chunk("g3", matrix * r * r, g2l.t_matmul(&dmid).data());
-                let dxg1 = dxgm.matmul_t(mid);
-                sink.add_all("g1", &x.t_matmul_mt(&dxg1, th));
-                dx.axpy(1.0, &dxg1.matmul_t_mt(g1, th));
+            (Some(AdapterKind::MetaTt(MetaTtKind::FourD)), PairCache::Tt { xg1, xgm_q, xgm_v }) => {
+                let (g1, g2, g3, g4) = (
+                    &self.params[0],
+                    &self.params[1],
+                    &self.params[2],
+                    &self.params[3],
+                );
+                let mut dxg1 = ws.take(&[n, r]);
+                for (m, dy, xgm) in [(0usize, dq, xgm_q), (1, dv, xgm_v)] {
+                    let dya = scale_ws(ws, dy, a);
+                    t_matmul_into(
+                        xgm.data(),
+                        dya.data(),
+                        sink.chunk_mut("g4", 0, r * d),
+                        r,
+                        n,
+                        d,
+                        th,
+                    );
+                    let mut dxgm = ws.take(&[n, r]);
+                    matmul_t_into(dya.data(), g4.data(), dxgm.data_mut(), n, d, r, th);
+                    ws.recycle(dya);
+                    let mut dmid = ws.take(&[r, r]);
+                    t_matmul_into(xg1.data(), dxgm.data(), dmid.data_mut(), r, n, r, th);
+                    let g3m = &g3.data()[m * rr..(m + 1) * rr];
+                    matmul_t_into(
+                        dmid.data(),
+                        g3m,
+                        sink.chunk_mut("g2", layer * rr, rr),
+                        r,
+                        r,
+                        r,
+                        1,
+                    );
+                    let g2l = &g2.data()[layer * rr..(layer + 1) * rr];
+                    t_matmul_into(
+                        g2l,
+                        dmid.data(),
+                        sink.chunk_mut("g3", m * rr, rr),
+                        r,
+                        r,
+                        r,
+                        1,
+                    );
+                    ws.recycle(dmid);
+                    let mid = &self.pre.mids[layer * self.matrices + m];
+                    matmul_t_into(dxgm.data(), mid.data(), dxg1.data_mut(), n, r, r, 1);
+                    ws.recycle(dxgm);
+                }
+                // Fused tail: one xᵀ·dxg1 and one dxg1·G1ᵀ for both matrices.
+                t_matmul_into(
+                    x.data(),
+                    dxg1.data(),
+                    sink.chunk_mut("g1", 0, d * r),
+                    d,
+                    n,
+                    r,
+                    th,
+                );
+                matmul_t_into(dxg1.data(), g1.data(), dx.data_mut(), n, r, d, th);
+                ws.recycle(dxg1);
             }
             (
                 Some(AdapterKind::MetaTt(MetaTtKind::FourPlusOneD)),
-                AdapterCache::Tt4p1 { xg1, xgm, ca, ab, bc, mid },
+                PairCache::Tt { xg1, xgm_q, xgm_v },
             ) => {
-                let [g1, _g2, _g3, g4, g5] = self.p5();
-                sink.add_all("g5", &xgm.t_matmul_mt(&dya, th));
-                let dxgm = dya.matmul_t_mt(g5, th);
-                let dmid = xg1.t_matmul_mt(&dxgm, th);
-                let cc = chunk_mat(g4, matrix, r, r);
-                sink.add_chunk("g2", layer * r * r, dmid.matmul_t(bc).data());
-                sink.add_chunk(
-                    "g3",
-                    self.task * r * r,
-                    ca.t_matmul(&dmid).matmul_t(&cc).data(),
+                let (g1, g5) = (&self.params[0], &self.params[4]);
+                let mut dxg1 = ws.take(&[n, r]);
+                for (m, dy, xgm) in [(0usize, dq, xgm_q), (1, dv, xgm_v)] {
+                    let dya = scale_ws(ws, dy, a);
+                    t_matmul_into(
+                        xgm.data(),
+                        dya.data(),
+                        sink.chunk_mut("g5", 0, r * d),
+                        r,
+                        n,
+                        d,
+                        th,
+                    );
+                    let mut dxgm = ws.take(&[n, r]);
+                    matmul_t_into(dya.data(), g5.data(), dxgm.data_mut(), n, d, r, th);
+                    ws.recycle(dya);
+                    let mut dmid = ws.take(&[r, r]);
+                    t_matmul_into(xg1.data(), dxgm.data(), dmid.data_mut(), r, n, r, th);
+                    // g2[l] += dmid·bc[m]ᵀ
+                    matmul_t_into(
+                        dmid.data(),
+                        self.pre.bc[m].data(),
+                        sink.chunk_mut("g2", layer * rr, rr),
+                        r,
+                        r,
+                        r,
+                        1,
+                    );
+                    // g3[t] += ca[l]ᵀ·dmid·cc[m]ᵀ (two r×r products)
+                    let ca = &self.params[1].data()[layer * rr..(layer + 1) * rr];
+                    let cc = &self.params[3].data()[m * rr..(m + 1) * rr];
+                    let mut tmp = ws.take(&[r, r]);
+                    t_matmul_into(ca, dmid.data(), tmp.data_mut(), r, r, r, 1);
+                    matmul_t_into(
+                        tmp.data(),
+                        cc,
+                        sink.chunk_mut("g3", self.task * rr, rr),
+                        r,
+                        r,
+                        r,
+                        1,
+                    );
+                    ws.recycle(tmp);
+                    // g4[m] += ab[l]ᵀ·dmid
+                    t_matmul_into(
+                        self.pre.ab[layer].data(),
+                        dmid.data(),
+                        sink.chunk_mut("g4", m * rr, rr),
+                        r,
+                        r,
+                        r,
+                        1,
+                    );
+                    ws.recycle(dmid);
+                    let mid = &self.pre.mids[layer * self.matrices + m];
+                    matmul_t_into(dxgm.data(), mid.data(), dxg1.data_mut(), n, r, r, 1);
+                    ws.recycle(dxgm);
+                }
+                t_matmul_into(
+                    x.data(),
+                    dxg1.data(),
+                    sink.chunk_mut("g1", 0, d * r),
+                    d,
+                    n,
+                    r,
+                    th,
                 );
-                sink.add_chunk("g4", matrix * r * r, ab.t_matmul(&dmid).data());
-                let dxg1 = dxgm.matmul_t(mid);
-                sink.add_all("g1", &x.t_matmul_mt(&dxg1, th));
-                dx.axpy(1.0, &dxg1.matmul_t_mt(g1, th));
+                matmul_t_into(dxg1.data(), g1.data(), dx.data_mut(), n, r, d, th);
+                ws.recycle(dxg1);
             }
             (
                 Some(AdapterKind::MetaTt(MetaTtKind::FiveD)),
-                AdapterCache::Tt5 { xg1, xlm, lm, xh },
+                PairCache::Tt5 { xg1, xlm_q, xh_q, xlm_v, xh_v },
             ) => {
-                let [g1, g2, g3, g4, g5] = self.p5();
+                let (g1, g2, g3, g4, g5) = (
+                    &self.params[0],
+                    &self.params[1],
+                    &self.params[2],
+                    &self.params[3],
+                    &self.params[4],
+                );
                 let dh = d / self.heads;
-                let n = dy.shape()[0];
-                let mut dxlm = Tensor::zeros(&[n, r]);
-                for hh in 0..self.heads {
-                    let dyh = block(&dya, 0, n, hh * dh, dh);
-                    sink.add_all("g5", &xh[hh].t_matmul_mt(&dyh, th));
-                    let dxh = dyh.matmul_t_mt(g5, th);
-                    sink.add_chunk("g4", hh * r * r, xlm.t_matmul_mt(&dxh, th).data());
-                    let g4h = chunk_mat(g4, hh, r, r);
-                    dxlm.axpy(1.0, &dxh.matmul_t(&g4h));
+                let mut dxg1 = ws.take(&[n, r]);
+                for (m, dy, xlm, xh) in
+                    [(0usize, dq, xlm_q, xh_q), (1, dv, xlm_v, xh_v)]
+                {
+                    let dya = scale_ws(ws, dy, a);
+                    let mut dxlm = ws.take(&[n, r]);
+                    for hh in 0..self.heads {
+                        let dyh = copy_block(ws, &dya, 0, n, hh * dh, dh);
+                        let xh_blk = &xh.data()[hh * n * r..(hh + 1) * n * r];
+                        t_matmul_into(
+                            xh_blk,
+                            dyh.data(),
+                            sink.chunk_mut("g5", 0, r * dh),
+                            r,
+                            n,
+                            dh,
+                            th,
+                        );
+                        let mut dxh = ws.take(&[n, r]);
+                        matmul_t_into(dyh.data(), g5.data(), dxh.data_mut(), n, dh, r, th);
+                        ws.recycle(dyh);
+                        t_matmul_into(
+                            xlm.data(),
+                            dxh.data(),
+                            sink.chunk_mut("g4", hh * rr, rr),
+                            r,
+                            n,
+                            r,
+                            th,
+                        );
+                        let g4h = &g4.data()[hh * rr..(hh + 1) * rr];
+                        matmul_t_into(dxh.data(), g4h, dxlm.data_mut(), n, r, r, 1);
+                        ws.recycle(dxh);
+                    }
+                    ws.recycle(dya);
+                    let mut dlm = ws.take(&[r, r]);
+                    t_matmul_into(xg1.data(), dxlm.data(), dlm.data_mut(), r, n, r, th);
+                    let g3m = &g3.data()[m * rr..(m + 1) * rr];
+                    matmul_t_into(
+                        dlm.data(),
+                        g3m,
+                        sink.chunk_mut("g2", layer * rr, rr),
+                        r,
+                        r,
+                        r,
+                        1,
+                    );
+                    let g2l = &g2.data()[layer * rr..(layer + 1) * rr];
+                    t_matmul_into(
+                        g2l,
+                        dlm.data(),
+                        sink.chunk_mut("g3", m * rr, rr),
+                        r,
+                        r,
+                        r,
+                        1,
+                    );
+                    ws.recycle(dlm);
+                    let lm = &self.pre.mids[layer * self.matrices + m];
+                    matmul_t_into(dxlm.data(), lm.data(), dxg1.data_mut(), n, r, r, 1);
+                    ws.recycle(dxlm);
                 }
-                let dlm = xg1.t_matmul_mt(&dxlm, th);
-                let g2l = chunk_mat(g2, layer, r, r);
-                let g3m = chunk_mat(g3, matrix, r, r);
-                sink.add_chunk("g2", layer * r * r, dlm.matmul_t(&g3m).data());
-                sink.add_chunk("g3", matrix * r * r, g2l.t_matmul(&dlm).data());
-                let dxg1 = dxlm.matmul_t(lm);
-                sink.add_all("g1", &x.t_matmul_mt(&dxg1, th));
-                dx.axpy(1.0, &dxg1.matmul_t_mt(g1, th));
+                t_matmul_into(
+                    x.data(),
+                    dxg1.data(),
+                    sink.chunk_mut("g1", 0, d * r),
+                    d,
+                    n,
+                    r,
+                    th,
+                );
+                matmul_t_into(dxg1.data(), g1.data(), dx.data_mut(), n, r, d, th);
+                ws.recycle(dxg1);
             }
-            (Some(AdapterKind::LoRa), AdapterCache::Lora { xa }) => {
+            (Some(AdapterKind::LoRa), PairCache::Lora { xa_q, xa_v }) => {
                 let (pa, pb) = (&self.params[0], &self.params[1]);
-                let idx = layer * self.matrices + matrix;
-                let am = chunk_mat(pa, idx, d, r);
-                let bm = chunk_mat(pb, idx, r, d);
-                sink.add_chunk("lora_b", idx * r * d, xa.t_matmul_mt(&dya, th).data());
-                let dxa = dya.matmul_t_mt(&bm, th);
-                sink.add_chunk("lora_a", idx * d * r, x.t_matmul_mt(&dxa, th).data());
-                dx.axpy(1.0, &dxa.matmul_t_mt(&am, th));
+                for (m, dy, xa) in [(0usize, dq, xa_q), (1, dv, xa_v)] {
+                    let idx = layer * self.matrices + m;
+                    let am = &pa.data()[idx * d * r..(idx + 1) * d * r];
+                    let bm = &pb.data()[idx * r * d..(idx + 1) * r * d];
+                    let dya = scale_ws(ws, dy, a);
+                    t_matmul_into(
+                        xa.data(),
+                        dya.data(),
+                        sink.chunk_mut("lora_b", idx * r * d, r * d),
+                        r,
+                        n,
+                        d,
+                        th,
+                    );
+                    let mut dxa = ws.take(&[n, r]);
+                    matmul_t_into(dya.data(), bm, dxa.data_mut(), n, d, r, th);
+                    ws.recycle(dya);
+                    t_matmul_into(
+                        x.data(),
+                        dxa.data(),
+                        sink.chunk_mut("lora_a", idx * d * r, d * r),
+                        d,
+                        n,
+                        r,
+                        th,
+                    );
+                    matmul_t_into(dxa.data(), am, dx.data_mut(), n, r, d, th);
+                    ws.recycle(dxa);
+                }
             }
-            (Some(AdapterKind::VeRa), AdapterCache::Vera { xa, tb }) => {
-                let (fa, fb) = self.vera_frozen.as_ref().expect("vera frozen");
-                let idx = layer * self.matrices + matrix;
-                let dvec = &self.params[0].data()[idx * r..(idx + 1) * r];
-                let bvec = &self.params[1].data()[idx * d..(idx + 1) * d];
-                sink.add_chunk("vera_b", idx * d, &colsum_mul(&dya, tb));
-                let dtb = mul_cols(&dya, bvec);
-                let dt = dtb.matmul_t_mt(fb, th);
-                sink.add_chunk("vera_d", idx * r, &colsum_mul(&dt, xa));
-                let dxa = mul_cols(&dt, dvec);
-                dx.axpy(1.0, &dxa.matmul_t_mt(fa, th));
+            (Some(AdapterKind::VeRa), PairCache::Vera { xa, tb_q, tb_v }) => {
+                let (fa, fb) = self.pre.vera.as_ref().expect("vera frozen");
+                let mut dsum = ws.take(&[n, r]);
+                for (m, dy, tb) in [(0usize, dq, tb_q), (1, dv, tb_v)] {
+                    let idx = layer * self.matrices + m;
+                    let dvec = &self.params[0].data()[idx * r..(idx + 1) * r];
+                    let bvec = &self.params[1].data()[idx * d..(idx + 1) * d];
+                    let dya = scale_ws(ws, dy, a);
+                    colsum_mul_acc(&dya, tb, sink.chunk_mut("vera_b", idx * d, d));
+                    let dtb = mul_cols_ws(ws, &dya, bvec);
+                    ws.recycle(dya);
+                    let mut dt = ws.take(&[n, r]);
+                    matmul_t_into(dtb.data(), fb.data(), dt.data_mut(), n, d, r, th);
+                    ws.recycle(dtb);
+                    colsum_mul_acc(&dt, xa, sink.chunk_mut("vera_d", idx * r, r));
+                    acc_mul_cols(&mut dsum, &dt, dvec);
+                    ws.recycle(dt);
+                }
+                // Fused: dx += (Σ_m dt_m ∘ d_m)·Aᵀ — one GEMM for both.
+                matmul_t_into(dsum.data(), fa.data(), dx.data_mut(), n, r, d, th);
+                ws.recycle(dsum);
             }
-            (Some(AdapterKind::LoTr), AdapterCache::Lotr { xu, xus, sm }) => {
-                let (u, _sall, vmat) = (&self.params[0], &self.params[1], &self.params[2]);
-                let idx = layer * self.matrices + matrix;
-                sink.add_all("lotr_v", &xus.t_matmul_mt(&dya, th));
-                let dxus = dya.matmul_t_mt(vmat, th);
-                sink.add_chunk("lotr_s", idx * r * r, xu.t_matmul_mt(&dxus, th).data());
-                let dxu = dxus.matmul_t(sm);
-                sink.add_all("lotr_u", &x.t_matmul_mt(&dxu, th));
-                dx.axpy(1.0, &dxu.matmul_t_mt(u, th));
+            (Some(AdapterKind::LoTr), PairCache::Lotr { xu, xus_q, xus_v }) => {
+                let (u, sall, vmat) = (&self.params[0], &self.params[1], &self.params[2]);
+                let mut dxu = ws.take(&[n, r]);
+                for (m, dy, xus) in [(0usize, dq, xus_q), (1, dv, xus_v)] {
+                    let idx = layer * self.matrices + m;
+                    let sm = &sall.data()[idx * rr..(idx + 1) * rr];
+                    let dya = scale_ws(ws, dy, a);
+                    t_matmul_into(
+                        xus.data(),
+                        dya.data(),
+                        sink.chunk_mut("lotr_v", 0, r * d),
+                        r,
+                        n,
+                        d,
+                        th,
+                    );
+                    let mut dxus = ws.take(&[n, r]);
+                    matmul_t_into(dya.data(), vmat.data(), dxus.data_mut(), n, d, r, th);
+                    ws.recycle(dya);
+                    t_matmul_into(
+                        xu.data(),
+                        dxus.data(),
+                        sink.chunk_mut("lotr_s", idx * rr, rr),
+                        r,
+                        n,
+                        r,
+                        th,
+                    );
+                    matmul_t_into(dxus.data(), sm, dxu.data_mut(), n, r, r, 1);
+                    ws.recycle(dxus);
+                }
+                // Fused: one xᵀ·dxu and one dxu·Uᵀ for both matrices.
+                t_matmul_into(
+                    x.data(),
+                    dxu.data(),
+                    sink.chunk_mut("lotr_u", 0, d * r),
+                    d,
+                    n,
+                    r,
+                    th,
+                );
+                matmul_t_into(dxu.data(), u.data(), dx.data_mut(), n, r, d, th);
+                ws.recycle(dxu);
             }
             (kind, _) => panic!("adapter cache mismatch for {kind:?}"),
         }
     }
+}
 
-    fn p4(&self) -> [&Tensor; 4] {
-        [&self.params[0], &self.params[1], &self.params[2], &self.params[3]]
-    }
+enum PairCache {
+    None,
+    /// MetaTT-4D / (4+1)D: shared `x·G1` plus the per-matrix `x·G1·mid`.
+    Tt { xg1: Tensor, xgm_q: Tensor, xgm_v: Tensor },
+    /// MetaTT-5D: shared `x·G1`, per-matrix `x·G1·lm` and per-head stack.
+    Tt5 { xg1: Tensor, xlm_q: Tensor, xh_q: Tensor, xlm_v: Tensor, xh_v: Tensor },
+    Lora { xa_q: Tensor, xa_v: Tensor },
+    /// VeRA: shared `x·A` plus the per-matrix `(x·A ∘ d)·B`.
+    Vera { xa: Tensor, tb_q: Tensor, tb_v: Tensor },
+    /// LoTR: shared `x·U` plus the per-matrix `x·U·S`.
+    Lotr { xu: Tensor, xus_q: Tensor, xus_v: Tensor },
+}
 
-    fn p5(&self) -> [&Tensor; 5] {
-        [
-            &self.params[0],
-            &self.params[1],
-            &self.params[2],
-            &self.params[3],
-            &self.params[4],
-        ]
+impl PairCache {
+    fn recycle_into(self, ws: &mut Workspace) {
+        match self {
+            PairCache::None => {}
+            PairCache::Tt { xg1, xgm_q, xgm_v } => {
+                ws.recycle_all([xg1, xgm_q, xgm_v]);
+            }
+            PairCache::Tt5 { xg1, xlm_q, xh_q, xlm_v, xh_v } => {
+                ws.recycle_all([xg1, xlm_q, xh_q, xlm_v, xh_v]);
+            }
+            PairCache::Lora { xa_q, xa_v } => ws.recycle_all([xa_q, xa_v]),
+            PairCache::Vera { xa, tb_q, tb_v } => ws.recycle_all([xa, tb_q, tb_v]),
+            PairCache::Lotr { xu, xus_q, xus_v } => ws.recycle_all([xu, xus_q, xus_v]),
+        }
     }
 }
 
-enum AdapterCache {
-    None,
-    Tt4 { xg1: Tensor, xgm: Tensor, mid: Tensor },
-    Tt4p1 { xg1: Tensor, xgm: Tensor, ca: Tensor, ab: Tensor, bc: Tensor, mid: Tensor },
-    Tt5 { xg1: Tensor, xlm: Tensor, lm: Tensor, xh: Vec<Tensor> },
-    Lora { xa: Tensor },
-    Vera { xa: Tensor, tb: Tensor },
-    Lotr { xu: Tensor, xus: Tensor, sm: Tensor },
+// ---------------------------------------------------------------------------
+// Pad-masked multi-head attention over flat pair-major buffers.
+// ---------------------------------------------------------------------------
+
+/// Gather the per-(batch, head) blocks of a (n×d) matrix into a flat
+/// `[b·h, s, dh]` buffer (each pair's block contiguous and row-major).
+fn gather_heads(
+    src: &Tensor,
+    dst: &mut Tensor,
+    b: usize,
+    s: usize,
+    h: usize,
+    dh: usize,
+    threads: usize,
+) {
+    let d = h * dh;
+    let ss = src.data();
+    let dsh = SharedSliceMut::new(dst.data_mut());
+    scope_for(gate(threads, b * h * s * dh), b * h, |pair| {
+        let (bi, hi) = (pair / h, pair % h);
+        // SAFETY: each pair owns its contiguous flat block.
+        let blk = unsafe { dsh.range_mut(pair * s * dh, (pair + 1) * s * dh) };
+        for si in 0..s {
+            let src_off = (bi * s + si) * d + hi * dh;
+            blk[si * dh..(si + 1) * dh].copy_from_slice(&ss[src_off..src_off + dh]);
+        }
+    });
+}
+
+/// Scatter-add flat `[b·h, s, dh]` head blocks back into a (n×d) matrix.
+/// Each element receives exactly one pair's contribution, so the result is
+/// independent of the thread count.
+fn scatter_heads_add(
+    src: &Tensor,
+    dst: &mut Tensor,
+    b: usize,
+    s: usize,
+    h: usize,
+    dh: usize,
+    threads: usize,
+) {
+    let d = h * dh;
+    let ss = src.data();
+    let dsh = SharedSliceMut::new(dst.data_mut());
+    scope_for(gate(threads, b * h * s * dh), b * h, |pair| {
+        let (bi, hi) = (pair / h, pair % h);
+        for si in 0..s {
+            let dst_off = (bi * s + si) * d + hi * dh;
+            // SAFETY: (pair, row) destination segments are pairwise disjoint.
+            let seg = unsafe { dsh.range_mut(dst_off, dst_off + dh) };
+            let srow = &ss[(pair * s + si) * dh..(pair * s + si + 1) * dh];
+            for (o, &x) in seg.iter_mut().zip(srow) {
+                *o += x;
+            }
+        }
+    });
+}
+
+/// Attention forward: returns the context (n×d) and the attention
+/// probabilities as one flat `[b·h, s, s]` tensor (the backward cache).
+/// The (batch, head) pairs are independent and fan out across workers; all
+/// per-pair temporaries live in pre-checked-out flat buffers, so the
+/// parallel region itself allocates nothing.
+fn attention_forward(
+    dims: &Dims,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    tokens: &[i32],
+    threads: usize,
+    ws: &mut Workspace,
+) -> (Tensor, Tensor) {
+    let Dims { b, s, n, d, h, dh, .. } = *dims;
+    let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+    let mut qh = ws.take(&[b * h, s, dh]);
+    gather_heads(q, &mut qh, b, s, h, dh, threads);
+    let mut kh = ws.take(&[b * h, s, dh]);
+    gather_heads(k, &mut kh, b, s, h, dh, threads);
+    let mut vh = ws.take(&[b * h, s, dh]);
+    gather_heads(v, &mut vh, b, s, h, dh, threads);
+    let mut probs = ws.take(&[b * h, s, s]);
+    let mut ctxh = ws.take(&[b * h, s, dh]);
+    {
+        let qs = qh.data();
+        let ks = kh.data();
+        let vs = vh.data();
+        let ps = SharedSliceMut::new(probs.data_mut());
+        let cs = SharedSliceMut::new(ctxh.data_mut());
+        scope_for(gate(threads, b * h * s * s * dh), b * h, |pair| {
+            let bi = pair / h;
+            let q_blk = &qs[pair * s * dh..(pair + 1) * s * dh];
+            let k_blk = &ks[pair * s * dh..(pair + 1) * s * dh];
+            let v_blk = &vs[pair * s * dh..(pair + 1) * s * dh];
+            // SAFETY: each pair owns its flat probs / ctx blocks.
+            let p_blk = unsafe { ps.range_mut(pair * s * s, (pair + 1) * s * s) };
+            matmul_t_into(q_blk, k_blk, p_blk, s, dh, s, 1);
+            scale_into(p_blk, inv_sqrt_dh);
+            for key in 0..s {
+                if tokens[bi * s + key] == PAD_ID {
+                    for query in 0..s {
+                        p_blk[query * s + key] += MASK_NEG;
+                    }
+                }
+            }
+            softmax_rows_into(p_blk, s, s);
+            let c_blk = unsafe { cs.range_mut(pair * s * dh, (pair + 1) * s * dh) };
+            matmul_into(p_blk, v_blk, c_blk, s, s, dh, 1);
+        });
+    }
+    ws.recycle(qh);
+    ws.recycle(kh);
+    ws.recycle(vh);
+    let mut ctx = ws.take(&[n, d]);
+    scatter_heads_add(&ctxh, &mut ctx, b, s, h, dh, threads);
+    ws.recycle(ctxh);
+    (ctx, probs)
+}
+
+/// Attention backward: d(ctx) → (dq, dk, dv), all (n×d). Per-pair math in
+/// flat buffers, same fan-out and determinism contract as the forward.
+#[allow(clippy::too_many_arguments)]
+fn attention_backward(
+    dims: &Dims,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    probs: &Tensor,
+    d_ctx: &Tensor,
+    threads: usize,
+    ws: &mut Workspace,
+) -> (Tensor, Tensor, Tensor) {
+    let Dims { b, s, n, d, h, dh, .. } = *dims;
+    let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+    let mut qh = ws.take(&[b * h, s, dh]);
+    gather_heads(q, &mut qh, b, s, h, dh, threads);
+    let mut kh = ws.take(&[b * h, s, dh]);
+    gather_heads(k, &mut kh, b, s, h, dh, threads);
+    let mut vh = ws.take(&[b * h, s, dh]);
+    gather_heads(v, &mut vh, b, s, h, dh, threads);
+    let mut dctxh = ws.take(&[b * h, s, dh]);
+    gather_heads(d_ctx, &mut dctxh, b, s, h, dh, threads);
+    let mut dscores = ws.take(&[b * h, s, s]);
+    let mut dqh = ws.take(&[b * h, s, dh]);
+    let mut dkh = ws.take(&[b * h, s, dh]);
+    let mut dvh = ws.take(&[b * h, s, dh]);
+    {
+        let qs = qh.data();
+        let ks = kh.data();
+        let vs = vh.data();
+        let dcs = dctxh.data();
+        let prs = probs.data();
+        let dss = SharedSliceMut::new(dscores.data_mut());
+        let dqs = SharedSliceMut::new(dqh.data_mut());
+        let dks = SharedSliceMut::new(dkh.data_mut());
+        let dvs = SharedSliceMut::new(dvh.data_mut());
+        scope_for(gate(threads, b * h * s * s * dh), b * h, |pair| {
+            let q_blk = &qs[pair * s * dh..(pair + 1) * s * dh];
+            let k_blk = &ks[pair * s * dh..(pair + 1) * s * dh];
+            let v_blk = &vs[pair * s * dh..(pair + 1) * s * dh];
+            let dc_blk = &dcs[pair * s * dh..(pair + 1) * s * dh];
+            let p_blk = &prs[pair * s * s..(pair + 1) * s * s];
+            // SAFETY: each pair owns its flat output blocks.
+            let ds_blk = unsafe { dss.range_mut(pair * s * s, (pair + 1) * s * s) };
+            let dq_blk = unsafe { dqs.range_mut(pair * s * dh, (pair + 1) * s * dh) };
+            let dk_blk = unsafe { dks.range_mut(pair * s * dh, (pair + 1) * s * dh) };
+            let dv_blk = unsafe { dvs.range_mut(pair * s * dh, (pair + 1) * s * dh) };
+            // d_probs = d_ctx_h · vhᵀ ; d_vh = probsᵀ · d_ctx_h.
+            matmul_t_into(dc_blk, v_blk, ds_blk, s, dh, s, 1);
+            t_matmul_into(p_blk, dc_blk, dv_blk, s, s, dh, 1);
+            // Softmax backward, row-wise, in place over d_probs.
+            for qi in 0..s {
+                let pr = &p_blk[qi * s..(qi + 1) * s];
+                let dp = &mut ds_blk[qi * s..(qi + 1) * s];
+                let dot: f32 = pr.iter().zip(dp.iter()).map(|(&p, &g)| p * g).sum();
+                for (dpv, &p) in dp.iter_mut().zip(pr) {
+                    *dpv = p * (*dpv - dot);
+                }
+            }
+            // d_qh = d_scores·kh·s ; d_kh = d_scoresᵀ·qh·s.
+            matmul_into(ds_blk, k_blk, dq_blk, s, s, dh, 1);
+            scale_into(dq_blk, inv_sqrt_dh);
+            t_matmul_into(ds_blk, q_blk, dk_blk, s, s, dh, 1);
+            scale_into(dk_blk, inv_sqrt_dh);
+        });
+    }
+    ws.recycle(qh);
+    ws.recycle(kh);
+    ws.recycle(vh);
+    ws.recycle(dctxh);
+    ws.recycle(dscores);
+    let mut dq = ws.take(&[n, d]);
+    scatter_heads_add(&dqh, &mut dq, b, s, h, dh, threads);
+    let mut dk = ws.take(&[n, d]);
+    scatter_heads_add(&dkh, &mut dk, b, s, h, dh, threads);
+    let mut dv = ws.take(&[n, d]);
+    scatter_heads_add(&dvh, &mut dv, b, s, h, dh, threads);
+    ws.recycle(dqh);
+    ws.recycle(dkh);
+    ws.recycle(dvh);
+    (dq, dk, dv)
 }
 
 // ---------------------------------------------------------------------------
@@ -662,10 +1623,9 @@ struct LayerCache {
     q: Tensor,
     k: Tensor,
     v: Tensor,
-    ad_q: AdapterCache,
-    ad_v: AdapterCache,
-    /// Attention probabilities per (batch · head), each (s × s).
-    probs: Vec<Tensor>,
+    pair: PairCache,
+    /// Attention probabilities, flat `[b·h, s, s]`.
+    probs: Tensor,
     ctx: Tensor,
     ln1: LnCache,
     x_mid: Tensor,
@@ -674,27 +1634,30 @@ struct LayerCache {
     ln2: LnCache,
 }
 
-struct EncoderCache {
-    emb_ln: LnCache,
-    layers: Vec<LayerCache>,
+impl LayerCache {
+    fn recycle_into(self, ws: &mut Workspace) {
+        ws.recycle_all([
+            self.x_in, self.q, self.k, self.v, self.probs, self.ctx, self.x_mid, self.u,
+            self.g,
+        ]);
+        self.pair.recycle_into(ws);
+        self.ln1.recycle_into(ws);
+        self.ln2.recycle_into(ws);
+    }
 }
 
-/// Run the encoder; returns final hidden states (n × d) plus the cache the
-/// backward pass consumes. `threads` is the step's worker budget; all
-/// parallel splits are along independent rows / (batch, head) pairs so the
-/// output is identical for any value.
-fn encoder_forward(
+/// Token + learned-position embedding gather (row-parallel).
+fn embed(
     dims: &Dims,
     w: &Weights,
-    adapter: &AdapterCtx,
     tokens: &[i32],
     threads: usize,
-) -> (Tensor, EncoderCache) {
-    let Dims { b, s, n, d, h, dh, f, l, .. } = *dims;
-    // Embeddings: token + learned position (row-parallel gather).
+    ws: &mut Workspace,
+) -> Tensor {
+    let Dims { s, n, d, .. } = *dims;
     let tok_emb = w.get("tok_emb");
     let pos_emb = w.get("pos_emb");
-    let mut x_emb = Tensor::zeros(&[n, d]);
+    let mut x_emb = ws.take(&[n, d]);
     {
         let xs = SharedSliceMut::new(x_emb.data_mut());
         scope_rows(gate(threads, n * d), n, ROW_BAND, |band| {
@@ -712,175 +1675,249 @@ fn encoder_forward(
             }
         });
     }
-    let (x0, emb_ln) = layer_norm(&x_emb, w.vec("emb_ln_g"), w.vec("emb_ln_b"), threads);
+    x_emb
+}
 
-    let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+/// Q/K/V projections with the layer's adapter deltas applied to Q and V.
+#[allow(clippy::too_many_arguments)]
+fn project_qkv(
+    dims: &Dims,
+    w: &Weights,
+    adapter: &AdapterCtx,
+    x_in: &Tensor,
+    layer: usize,
+    threads: usize,
+    ws: &mut Workspace,
+) -> (Tensor, Tensor, Tensor, PairCache) {
+    let Dims { n, d, .. } = *dims;
+    let mut q = ws.take(&[n, d]);
+    matmul_into(x_in.data(), w.chunk("wq", layer, d * d), q.data_mut(), n, d, d, threads);
+    add_row_bias(&mut q, w.row("bq", layer, d));
+    let mut k = ws.take(&[n, d]);
+    matmul_into(x_in.data(), w.chunk("wk", layer, d * d), k.data_mut(), n, d, d, threads);
+    add_row_bias(&mut k, w.row("bk", layer, d));
+    let mut v = ws.take(&[n, d]);
+    matmul_into(x_in.data(), w.chunk("wv", layer, d * d), v.data_mut(), n, d, d, threads);
+    add_row_bias(&mut v, w.row("bv", layer, d));
+    let pair = adapter.apply_pair(ws, x_in, layer, &mut q, &mut v);
+    (q, k, v, pair)
+}
+
+/// Run the encoder; returns final hidden states (n × d) plus the embedding
+/// LN cache; per-layer caches are pushed onto `layers` (the scratch's
+/// pooled vector). `threads` is the step's worker budget; all parallel
+/// splits are along independent rows / (batch, head) pairs so the output is
+/// identical for any value.
+#[allow(clippy::too_many_arguments)]
+fn encoder_forward(
+    dims: &Dims,
+    w: &Weights,
+    adapter: &AdapterCtx,
+    tokens: &[i32],
+    threads: usize,
+    ws: &mut Workspace,
+    layers: &mut Vec<LayerCache>,
+) -> (Tensor, LnCache) {
+    debug_assert!(layers.is_empty(), "stale layer caches");
+    let Dims { n, d, f, l, .. } = *dims;
+    let x_emb = embed(dims, w, tokens, threads, ws);
+    let (x0, emb_ln) = layer_norm(&x_emb, w.vec("emb_ln_g"), w.vec("emb_ln_b"), threads, ws);
+    ws.recycle(x_emb);
+
     let mut x = x0;
-    let mut layers = Vec::with_capacity(l);
     for layer in 0..l {
         let x_in = x;
-        // Projections with adapters on Q (m=0) and V (m=1).
-        let wq = chunk_mat(w.get("wq"), layer, d, d);
-        let wk = chunk_mat(w.get("wk"), layer, d, d);
-        let wv = chunk_mat(w.get("wv"), layer, d, d);
-        let (dq, ad_q) = adapter.apply(&x_in, layer, 0);
-        let (dv, ad_v) = adapter.apply(&x_in, layer, 1);
-        let mut q = x_in.matmul_mt(&wq, threads);
-        add_row_bias(&mut q, w.row("bq", layer, d));
-        q.axpy(1.0, &dq);
-        let mut k = x_in.matmul_mt(&wk, threads);
-        add_row_bias(&mut k, w.row("bk", layer, d));
-        let mut v = x_in.matmul_mt(&wv, threads);
-        add_row_bias(&mut v, w.row("bv", layer, d));
-        v.axpy(1.0, &dv);
-
-        // Pad-masked multi-head attention: the (batch, head) pairs are
-        // independent, so they fan out across workers; each pair's block is
-        // computed by one worker and assembled serially in pair order.
-        let attn_threads = gate(threads, b * h * s * s * dh);
-        let head_blocks = scope_map(attn_threads, b * h, |pair| {
-            let (bi, hi) = (pair / h, pair % h);
-            let qh = block(&q, bi * s, s, hi * dh, dh);
-            let kh = block(&k, bi * s, s, hi * dh, dh);
-            let vh = block(&v, bi * s, s, hi * dh, dh);
-            let mut scores = qh.matmul_t(&kh).scale(inv_sqrt_dh);
-            for key in 0..s {
-                if tokens[bi * s + key] == PAD_ID {
-                    for query in 0..s {
-                        let val = scores.at(query, key) + MASK_NEG;
-                        scores.set(query, key, val);
-                    }
-                }
-            }
-            // Row-wise stable softmax.
-            let mut probs = scores;
-            for qi in 0..s {
-                let row = &mut probs.data_mut()[qi * s..(qi + 1) * s];
-                let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-                let mut z = 0.0f32;
-                for v in row.iter_mut() {
-                    *v = (*v - mx).exp();
-                    z += *v;
-                }
-                for v in row.iter_mut() {
-                    *v /= z;
-                }
-            }
-            let ctx_h = probs.matmul(&vh);
-            (probs, ctx_h)
-        });
-        let mut ctx = Tensor::zeros(&[n, d]);
-        let mut probs_all = Vec::with_capacity(b * h);
-        for (pair, (probs, ctx_h)) in head_blocks.into_iter().enumerate() {
-            let (bi, hi) = (pair / h, pair % h);
-            add_block(&mut ctx, bi * s, hi * dh, &ctx_h);
-            probs_all.push(probs);
-        }
-        let wo = chunk_mat(w.get("wo"), layer, d, d);
-        let mut attn_out = ctx.matmul_mt(&wo, threads);
-        add_row_bias(&mut attn_out, w.row("bo", layer, d));
-        let (x_mid, ln1) = layer_norm(
-            &x_in.add(&attn_out),
-            w.row("ln1_g", layer, d),
-            w.row("ln1_b", layer, d),
+        let (q, k, v, pair) = project_qkv(dims, w, adapter, &x_in, layer, threads, ws);
+        let (ctx, probs) = attention_forward(dims, &q, &k, &v, tokens, threads, ws);
+        let mut attn_out = ws.take(&[n, d]);
+        matmul_into(
+            ctx.data(),
+            w.chunk("wo", layer, d * d),
+            attn_out.data_mut(),
+            n,
+            d,
+            d,
             threads,
         );
+        add_row_bias(&mut attn_out, w.row("bo", layer, d));
+        let res1 = add_ws(ws, &x_in, &attn_out);
+        ws.recycle(attn_out);
+        let (x_mid, ln1) =
+            layer_norm(&res1, w.row("ln1_g", layer, d), w.row("ln1_b", layer, d), threads, ws);
+        ws.recycle(res1);
 
         // GELU MLP (tanh GELU is the most expensive elementwise op in the
         // step — band-parallel over rows).
-        let w1 = chunk_mat(w.get("w1"), layer, d, f);
-        let w2 = chunk_mat(w.get("w2"), layer, f, d);
-        let mut u = x_mid.matmul_mt(&w1, threads);
-        add_row_bias(&mut u, w.row("b1", layer, f));
-        let mut g = u.clone();
-        {
-            let gs = SharedSliceMut::new(g.data_mut());
-            scope_rows(gate(threads, n * f), n, ROW_BAND, |band| {
-                // SAFETY: bands are disjoint row ranges of g.
-                let dst = unsafe { gs.range_mut(band.start * f, band.end * f) };
-                for v in dst.iter_mut() {
-                    *v = gelu(*v);
-                }
-            });
-        }
-        let mut m_out = g.matmul_mt(&w2, threads);
-        add_row_bias(&mut m_out, w.row("b2", layer, d));
-        let (x_out, ln2) = layer_norm(
-            &x_mid.add(&m_out),
-            w.row("ln2_g", layer, d),
-            w.row("ln2_b", layer, d),
+        let mut u = ws.take(&[n, f]);
+        matmul_into(
+            x_mid.data(),
+            w.chunk("w1", layer, d * f),
+            u.data_mut(),
+            n,
+            d,
+            f,
             threads,
         );
+        add_row_bias(&mut u, w.row("b1", layer, f));
+        let g = gelu_ws(ws, &u, threads);
+        let mut m_out = ws.take(&[n, d]);
+        matmul_into(
+            g.data(),
+            w.chunk("w2", layer, f * d),
+            m_out.data_mut(),
+            n,
+            f,
+            d,
+            threads,
+        );
+        add_row_bias(&mut m_out, w.row("b2", layer, d));
+        let res2 = add_ws(ws, &x_mid, &m_out);
+        ws.recycle(m_out);
+        let (x_out, ln2) =
+            layer_norm(&res2, w.row("ln2_g", layer, d), w.row("ln2_b", layer, d), threads, ws);
+        ws.recycle(res2);
 
-        layers.push(LayerCache {
-            x_in,
-            q,
-            k,
-            v,
-            ad_q,
-            ad_v,
-            probs: probs_all,
-            ctx,
-            ln1,
-            x_mid,
-            u,
-            g,
-            ln2,
-        });
+        layers.push(LayerCache { x_in, q, k, v, pair, probs, ctx, ln1, x_mid, u, g, ln2 });
         x = x_out;
     }
-    (x, EncoderCache { emb_ln, layers })
+    (x, emb_ln)
+}
+
+/// Inference-mode encoder forward: bit-identical hidden states, but no
+/// backward cache is built at all — every intermediate (LN stats, attention
+/// probabilities, adapter prefixes, layer activations) is recycled as soon
+/// as its consumer has run. This is what `eval_step` / serving use.
+fn encoder_forward_infer(
+    dims: &Dims,
+    w: &Weights,
+    adapter: &AdapterCtx,
+    tokens: &[i32],
+    threads: usize,
+    ws: &mut Workspace,
+) -> Tensor {
+    let Dims { n, d, f, l, .. } = *dims;
+    let x_emb = embed(dims, w, tokens, threads, ws);
+    let x0 = layer_norm_infer(&x_emb, w.vec("emb_ln_g"), w.vec("emb_ln_b"), threads, ws);
+    ws.recycle(x_emb);
+
+    let mut x = x0;
+    for layer in 0..l {
+        let x_in = x;
+        let (q, k, v, pair) = project_qkv(dims, w, adapter, &x_in, layer, threads, ws);
+        pair.recycle_into(ws);
+        let (ctx, probs) = attention_forward(dims, &q, &k, &v, tokens, threads, ws);
+        ws.recycle_all([q, k, v, probs]);
+        let mut attn_out = ws.take(&[n, d]);
+        matmul_into(
+            ctx.data(),
+            w.chunk("wo", layer, d * d),
+            attn_out.data_mut(),
+            n,
+            d,
+            d,
+            threads,
+        );
+        add_row_bias(&mut attn_out, w.row("bo", layer, d));
+        ws.recycle(ctx);
+        let res1 = add_ws(ws, &x_in, &attn_out);
+        ws.recycle(attn_out);
+        ws.recycle(x_in);
+        let x_mid =
+            layer_norm_infer(&res1, w.row("ln1_g", layer, d), w.row("ln1_b", layer, d), threads, ws);
+        ws.recycle(res1);
+
+        let mut u = ws.take(&[n, f]);
+        matmul_into(
+            x_mid.data(),
+            w.chunk("w1", layer, d * f),
+            u.data_mut(),
+            n,
+            d,
+            f,
+            threads,
+        );
+        add_row_bias(&mut u, w.row("b1", layer, f));
+        let g = gelu_ws(ws, &u, threads);
+        ws.recycle(u);
+        let mut m_out = ws.take(&[n, d]);
+        matmul_into(
+            g.data(),
+            w.chunk("w2", layer, f * d),
+            m_out.data_mut(),
+            n,
+            f,
+            d,
+            threads,
+        );
+        add_row_bias(&mut m_out, w.row("b2", layer, d));
+        ws.recycle(g);
+        let res2 = add_ws(ws, &x_mid, &m_out);
+        ws.recycle(m_out);
+        ws.recycle(x_mid);
+        let x_out =
+            layer_norm_infer(&res2, w.row("ln2_g", layer, d), w.row("ln2_b", layer, d), threads, ws);
+        ws.recycle(res2);
+        x = x_out;
+    }
+    x
 }
 
 // ---------------------------------------------------------------------------
 // Encoder backward.
 // ---------------------------------------------------------------------------
 
-/// Reverse pass through the encoder. `d_hidden` is ∂L/∂(final hidden states).
-/// Adapter grads always flow into `sink`; encoder-weight grads only when
-/// `train_encoder` (full FT / pretraining).
+/// Reverse pass through the encoder. `d_hidden` is ∂L/∂(final hidden
+/// states). Adapter grads always flow into `sink`; encoder-weight grads
+/// only when `train_encoder` (full FT / pretraining). Layer caches are
+/// drained off `layers` and recycled as each layer completes, so the
+/// scratch vector is empty (capacity retained) on return.
 #[allow(clippy::too_many_arguments)]
 fn encoder_backward(
     dims: &Dims,
     w: &Weights,
     adapter: &AdapterCtx,
+    packed: &Packed,
     tokens: &[i32],
-    cache: &EncoderCache,
+    layers: &mut Vec<LayerCache>,
+    emb_ln: LnCache,
     d_hidden: Tensor,
     sink: &mut GradSink,
     train_encoder: bool,
     threads: usize,
+    ws: &mut Workspace,
 ) {
-    let Dims { b, s, n, d, h, dh, f, l, .. } = *dims;
-    let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+    let Dims { s, n, d, f, .. } = *dims;
     let mut dx = d_hidden; // gradient w.r.t. the current layer's output
-    for layer in (0..l).rev() {
-        let lc = &cache.layers[layer];
+    while let Some(lc) = layers.pop() {
+        let layer = layers.len();
 
         // --- LN2 over (x_mid + m_out).
-        let mut dg_buf = vec![0.0f32; d];
-        let mut db_buf = vec![0.0f32; d];
-        let d_res2 = layer_norm_backward(
-            &dx,
-            &lc.ln2,
-            w.row("ln2_g", layer, d),
-            train_encoder.then_some((&mut dg_buf[..], &mut db_buf[..])),
-            threads,
-        );
-        if train_encoder {
-            sink.add_chunk("ln2_g", layer * d, &dg_buf);
-            sink.add_chunk("ln2_b", layer * d, &db_buf);
-        }
+        let d_res2 = if train_encoder {
+            let (dg, db) =
+                sink.two_chunks_mut(("ln2_g", layer * d, d), ("ln2_b", layer * d, d));
+            layer_norm_backward(&dx, &lc.ln2, w.row("ln2_g", layer, d), Some((dg, db)), threads, ws)
+        } else {
+            layer_norm_backward(&dx, &lc.ln2, w.row("ln2_g", layer, d), None, threads, ws)
+        };
+        ws.recycle(dx);
 
         // --- MLP: m_out = gelu(x_mid·w1 + b1)·w2 + b2.
-        let w1 = chunk_mat(w.get("w1"), layer, d, f);
-        let w2 = chunk_mat(w.get("w2"), layer, f, d);
-        let d_mout = &d_res2; // residual: d(m_out) = d_res2, d(x_mid) += d_res2
+        // residual: d(m_out) = d_res2, d(x_mid) += d_res2
+        let w1c = w.chunk("w1", layer, d * f);
+        let w2c = w.chunk("w2", layer, f * d);
         if train_encoder {
-            sink.add_chunk("w2", layer * f * d, lc.g.t_matmul_mt(d_mout, threads).data());
-            sink.add_chunk("b2", layer * d, &colsum(d_mout));
+            t_matmul_into(
+                lc.g.data(),
+                d_res2.data(),
+                sink.chunk_mut("w2", layer * f * d, f * d),
+                f,
+                n,
+                d,
+                threads,
+            );
+            colsum_acc(&d_res2, sink.chunk_mut("b2", layer * d, d));
         }
-        let mut dgelu = d_mout.matmul_t_mt(&w2, threads); // (n, f)
+        let mut dgelu = mm_wt(ws, &d_res2, packed.w2_t.get(layer), w2c, f, threads);
         {
             let dgs = SharedSliceMut::new(dgelu.data_mut());
             let us = lc.u.data();
@@ -893,105 +1930,110 @@ fn encoder_backward(
             });
         }
         if train_encoder {
-            sink.add_chunk("w1", layer * d * f, lc.x_mid.t_matmul_mt(&dgelu, threads).data());
-            sink.add_chunk("b1", layer * f, &colsum(&dgelu));
+            t_matmul_into(
+                lc.x_mid.data(),
+                dgelu.data(),
+                sink.chunk_mut("w1", layer * d * f, d * f),
+                d,
+                n,
+                f,
+                threads,
+            );
+            colsum_acc(&dgelu, sink.chunk_mut("b1", layer * f, f));
         }
-        let mut d_xmid = d_res2.clone();
-        d_xmid.axpy(1.0, &dgelu.matmul_t_mt(&w1, threads));
+        let mut d_xmid = ws.take(&[n, d]);
+        d_xmid.data_mut().copy_from_slice(d_res2.data());
+        acc_mm_wt(&mut d_xmid, &dgelu, packed.w1_t.get(layer), w1c, d, threads);
+        ws.recycle(d_res2);
+        ws.recycle(dgelu);
 
         // --- LN1 over (x_in + attn_out).
-        let mut dg_buf = vec![0.0f32; d];
-        let mut db_buf = vec![0.0f32; d];
-        let d_res1 = layer_norm_backward(
-            &d_xmid,
-            &lc.ln1,
-            w.row("ln1_g", layer, d),
-            train_encoder.then_some((&mut dg_buf[..], &mut db_buf[..])),
-            threads,
-        );
-        if train_encoder {
-            sink.add_chunk("ln1_g", layer * d, &dg_buf);
-            sink.add_chunk("ln1_b", layer * d, &db_buf);
-        }
+        let d_res1 = if train_encoder {
+            let (dg, db) =
+                sink.two_chunks_mut(("ln1_g", layer * d, d), ("ln1_b", layer * d, d));
+            layer_norm_backward(&d_xmid, &lc.ln1, w.row("ln1_g", layer, d), Some((dg, db)), threads, ws)
+        } else {
+            layer_norm_backward(&d_xmid, &lc.ln1, w.row("ln1_g", layer, d), None, threads, ws)
+        };
+        ws.recycle(d_xmid);
 
         // --- Output projection: attn_out = ctx·wo + bo.
-        let wo = chunk_mat(w.get("wo"), layer, d, d);
+        let woc = w.chunk("wo", layer, d * d);
         if train_encoder {
-            sink.add_chunk("wo", layer * d * d, lc.ctx.t_matmul_mt(&d_res1, threads).data());
-            sink.add_chunk("bo", layer * d, &colsum(&d_res1));
+            t_matmul_into(
+                lc.ctx.data(),
+                d_res1.data(),
+                sink.chunk_mut("wo", layer * d * d, d * d),
+                d,
+                n,
+                d,
+                threads,
+            );
+            colsum_acc(&d_res1, sink.chunk_mut("bo", layer * d, d));
         }
-        let d_ctx = d_res1.matmul_t_mt(&wo, threads);
+        let d_ctx = mm_wt(ws, &d_res1, packed.wo_t.get(layer), woc, d, threads);
 
-        // --- Attention backward per (batch, head): independent pairs fan
-        // out; their dq/dk/dv blocks are assembled serially in pair order.
-        let attn_threads = gate(threads, b * h * s * s * dh);
-        let grads = scope_map(attn_threads, b * h, |pair| {
-            let (bi, hi) = (pair / h, pair % h);
-            let probs = &lc.probs[pair];
-            let qh = block(&lc.q, bi * s, s, hi * dh, dh);
-            let kh = block(&lc.k, bi * s, s, hi * dh, dh);
-            let vh = block(&lc.v, bi * s, s, hi * dh, dh);
-            let d_ctx_h = block(&d_ctx, bi * s, s, hi * dh, dh);
-            let d_probs = d_ctx_h.matmul_t(&vh); // (s, s)
-            let d_vh = probs.t_matmul(&d_ctx_h);
-            // Softmax backward, row-wise.
-            let mut d_scores = Tensor::zeros(&[s, s]);
-            for qi in 0..s {
-                let pr = &probs.data()[qi * s..(qi + 1) * s];
-                let dp = &d_probs.data()[qi * s..(qi + 1) * s];
-                let dot: f32 = pr.iter().zip(dp).map(|(&p, &g)| p * g).sum();
-                for key in 0..s {
-                    d_scores.data_mut()[qi * s + key] = pr[key] * (dp[key] - dot);
-                }
-            }
-            let d_qh = d_scores.matmul(&kh).scale(inv_sqrt_dh);
-            let d_kh = d_scores.t_matmul(&qh).scale(inv_sqrt_dh);
-            (d_qh, d_kh, d_vh)
-        });
-        let mut dq = Tensor::zeros(&[n, d]);
-        let mut dk = Tensor::zeros(&[n, d]);
-        let mut dv = Tensor::zeros(&[n, d]);
-        for (pair, (d_qh, d_kh, d_vh)) in grads.into_iter().enumerate() {
-            let (bi, hi) = (pair / h, pair % h);
-            add_block(&mut dq, bi * s, hi * dh, &d_qh);
-            add_block(&mut dk, bi * s, hi * dh, &d_kh);
-            add_block(&mut dv, bi * s, hi * dh, &d_vh);
-        }
+        // --- Attention backward per (batch, head).
+        let (dq, dk, dv) =
+            attention_backward(dims, &lc.q, &lc.k, &lc.v, &lc.probs, &d_ctx, threads, ws);
+        ws.recycle(d_ctx);
 
         // --- Projections + adapters back to the layer input.
-        let wq = chunk_mat(w.get("wq"), layer, d, d);
-        let wk = chunk_mat(w.get("wk"), layer, d, d);
-        let wv = chunk_mat(w.get("wv"), layer, d, d);
-        let mut d_xin = d_res1; // residual branch
-        d_xin.axpy(1.0, &dq.matmul_t_mt(&wq, threads));
-        d_xin.axpy(1.0, &dk.matmul_t_mt(&wk, threads));
-        d_xin.axpy(1.0, &dv.matmul_t_mt(&wv, threads));
+        let wqc = w.chunk("wq", layer, d * d);
+        let wkc = w.chunk("wk", layer, d * d);
+        let wvc = w.chunk("wv", layer, d * d);
+        let mut d_xin = d_res1; // residual branch seeds the accumulator
+        acc_mm_wt(&mut d_xin, &dq, packed.wq_t.get(layer), wqc, d, threads);
+        acc_mm_wt(&mut d_xin, &dk, packed.wk_t.get(layer), wkc, d, threads);
+        acc_mm_wt(&mut d_xin, &dv, packed.wv_t.get(layer), wvc, d, threads);
         if train_encoder {
-            sink.add_chunk("wq", layer * d * d, lc.x_in.t_matmul_mt(&dq, threads).data());
-            sink.add_chunk("bq", layer * d, &colsum(&dq));
-            sink.add_chunk("wk", layer * d * d, lc.x_in.t_matmul_mt(&dk, threads).data());
-            sink.add_chunk("bk", layer * d, &colsum(&dk));
-            sink.add_chunk("wv", layer * d * d, lc.x_in.t_matmul_mt(&dv, threads).data());
-            sink.add_chunk("bv", layer * d, &colsum(&dv));
+            t_matmul_into(
+                lc.x_in.data(),
+                dq.data(),
+                sink.chunk_mut("wq", layer * d * d, d * d),
+                d,
+                n,
+                d,
+                threads,
+            );
+            colsum_acc(&dq, sink.chunk_mut("bq", layer * d, d));
+            t_matmul_into(
+                lc.x_in.data(),
+                dk.data(),
+                sink.chunk_mut("wk", layer * d * d, d * d),
+                d,
+                n,
+                d,
+                threads,
+            );
+            colsum_acc(&dk, sink.chunk_mut("bk", layer * d, d));
+            t_matmul_into(
+                lc.x_in.data(),
+                dv.data(),
+                sink.chunk_mut("wv", layer * d * d, d * d),
+                d,
+                n,
+                d,
+                threads,
+            );
+            colsum_acc(&dv, sink.chunk_mut("bv", layer * d, d));
         }
-        adapter.backward(&lc.x_in, layer, 0, &lc.ad_q, &dq, &mut d_xin, sink);
-        adapter.backward(&lc.x_in, layer, 1, &lc.ad_v, &dv, &mut d_xin, sink);
+        adapter.backward_pair(ws, &lc.x_in, layer, &lc.pair, &dq, &dv, &mut d_xin, sink);
+        ws.recycle_all([dq, dk, dv]);
+        lc.recycle_into(ws);
         dx = d_xin;
     }
 
     // --- Embedding LN + scatter.
-    let mut dg_buf = vec![0.0f32; d];
-    let mut db_buf = vec![0.0f32; d];
-    let d_emb = layer_norm_backward(
-        &dx,
-        &cache.emb_ln,
-        w.vec("emb_ln_g"),
-        train_encoder.then_some((&mut dg_buf[..], &mut db_buf[..])),
-        threads,
-    );
+    let d_emb = if train_encoder {
+        let (dg, db) = sink.two_chunks_mut(("emb_ln_g", 0, d), ("emb_ln_b", 0, d));
+        layer_norm_backward(&dx, &emb_ln, w.vec("emb_ln_g"), Some((dg, db)), threads, ws)
+    } else {
+        layer_norm_backward(&dx, &emb_ln, w.vec("emb_ln_g"), None, threads, ws)
+    };
+    ws.recycle(dx);
+    emb_ln.recycle_into(ws);
     if train_encoder {
-        sink.add_chunk("emb_ln_g", 0, &dg_buf);
-        sink.add_chunk("emb_ln_b", 0, &db_buf);
         for i in 0..n {
             let tok = tokens[i] as usize;
             let pos = i % s;
@@ -1000,24 +2042,34 @@ fn encoder_backward(
             sink.add_chunk("pos_emb", pos * d, row);
         }
     }
+    ws.recycle(d_emb);
 }
 
 // ---------------------------------------------------------------------------
 // Task head + losses.
 // ---------------------------------------------------------------------------
 
-/// CLS-pooled logits through the frozen per-task head.
-fn head_logits(dims: &Dims, w: &Weights, hidden: &Tensor, task: usize) -> Tensor {
+/// CLS-pooled logits through the frozen per-task head (workspace-backed).
+fn head_logits(
+    dims: &Dims,
+    w: &Weights,
+    hidden: &Tensor,
+    task: usize,
+    threads: usize,
+    ws: &mut Workspace,
+) -> Tensor {
     let Dims { b, s, d, classes, .. } = *dims;
-    let cls_w = chunk_mat(w.get("cls_w"), task, d, classes);
+    let cls_w = w.chunk("cls_w", task, d * classes);
     let cls_b = &w.get("cls_b").data()[task * classes..(task + 1) * classes];
-    let mut pooled = Tensor::zeros(&[b, d]);
+    let mut pooled = ws.take(&[b, d]);
     for bi in 0..b {
         let src = &hidden.data()[bi * s * d..bi * s * d + d]; // CLS row
         pooled.data_mut()[bi * d..(bi + 1) * d].copy_from_slice(src);
     }
-    let mut logits = pooled.matmul(&cls_w);
+    let mut logits = ws.take(&[b, classes]);
+    matmul_into(pooled.data(), cls_w, logits.data_mut(), b, d, classes, threads);
     add_row_bias(&mut logits, cls_b);
+    ws.recycle(pooled);
     logits
 }
 
@@ -1027,10 +2079,11 @@ fn task_loss_grad(
     logits: &Tensor,
     batch: &Batch,
     classes: usize,
+    ws: &mut Workspace,
 ) -> (f32, Tensor) {
     let b = batch.batch_size;
     let wsum: f32 = batch.weights.iter().sum::<f32>().max(1e-6);
-    let mut dlogits = Tensor::zeros(&[b, classes]);
+    let mut dlogits = ws.take(&[b, classes]);
     let mut loss = 0.0f64;
     if classes == 1 {
         for i in 0..b {
@@ -1076,7 +2129,11 @@ fn validate_batch(entry: &ArtifactEntry, batch_size: usize, seq_len: usize) -> R
 }
 
 /// One fwd+bwd fine-tuning step. Returns (loss, grads in trainable order).
-/// `threads` is the worker budget; results are identical for any value.
+/// `threads` is the worker budget; results are identical for any value and
+/// for the arena on or off. The returned gradient tensors are workspace
+/// checkouts — hand them back through `Step::recycle` once consumed to keep
+/// the steady-state loop allocation-free.
+#[allow(clippy::too_many_arguments)]
 pub fn train_step(
     entry: &ArtifactEntry,
     frozen: &HashMap<String, Tensor>,
@@ -1085,44 +2142,70 @@ pub fn train_step(
     task_id: i32,
     alpha: f32,
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<(f32, Vec<Tensor>)> {
     validate_batch(entry, batch.batch_size, batch.seq_len)?;
     let dims = dims_of(entry)?;
     let task = task_id as usize;
-    let w = Weights::build(entry, frozen, trainable)?;
-    let adapter = AdapterCtx::new(entry, trainable, alpha, task, threads)?;
+    let kind = adapter_kind_of(entry)?;
     let train_encoder = entry.spec.adapter == "full";
+    let StepScratch { ws, index, grad_index, packed, pre, layers, .. } = scratch;
+    let w = Weights { index: &*index, frozen, trainable };
+    pre.fill(kind, &dims, trainable, entry.spec.rank, task, 2, true, ws);
+    let adapter = AdapterCtx {
+        kind,
+        params: trainable,
+        alpha,
+        task,
+        rank: entry.spec.rank,
+        heads: dims.h,
+        matrices: 2,
+        d: dims.d,
+        threads,
+        pre: &*pre,
+    };
 
-    let (hidden, cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens, threads);
-    let logits = head_logits(&dims, &w, &hidden, task);
-    let (loss, dlogits) = task_loss_grad(&logits, batch, dims.classes);
+    let (hidden, emb_ln) = encoder_forward(&dims, &w, &adapter, &batch.tokens, threads, ws, layers);
+    let logits = head_logits(&dims, &w, &hidden, task, threads, ws);
+    let (loss, dlogits) = task_loss_grad(&logits, batch, dims.classes, ws);
+    ws.recycle(logits);
+    ws.recycle(hidden);
 
     // Head is frozen: only ∂/∂pooled flows back, scattered into CLS rows.
-    let cls_w = chunk_mat(w.get("cls_w"), task, dims.d, dims.classes);
-    let d_pooled = dlogits.matmul_t(&cls_w); // (b, d)
-    let mut d_hidden = Tensor::zeros(&[dims.n, dims.d]);
+    let cls_chunk = w.chunk("cls_w", task, dims.d * dims.classes);
+    let d_pooled = mm_wt(ws, &dlogits, packed.cls_w_t.get(task), cls_chunk, dims.d, threads);
+    ws.recycle(dlogits);
+    let mut d_hidden = ws.take(&[dims.n, dims.d]);
     for bi in 0..dims.b {
         let dst = bi * dims.s * dims.d;
         let src = &d_pooled.data()[bi * dims.d..(bi + 1) * dims.d];
         d_hidden.data_mut()[dst..dst + dims.d].copy_from_slice(src);
     }
+    ws.recycle(d_pooled);
 
-    let mut sink = GradSink::new(entry.trainable_inputs());
+    let mut sink = GradSink::new(entry.trainable_inputs(), &*grad_index, ws);
     encoder_backward(
         &dims,
         &w,
         &adapter,
+        packed,
         &batch.tokens,
-        &cache,
+        layers,
+        emb_ln,
         d_hidden,
         &mut sink,
         train_encoder,
         threads,
+        ws,
     );
+    pre.recycle_into(ws);
     Ok((loss, sink.into_vec()))
 }
 
-/// One fwd (eval) step. Returns logits `[batch, classes]`.
+/// One fwd (eval) step. Returns logits `[batch, classes]`. Runs the
+/// cache-free inference forward: no layer caches, no backward-only adapter
+/// products, every intermediate recycled in place.
+#[allow(clippy::too_many_arguments)]
 pub fn eval_step(
     entry: &ArtifactEntry,
     frozen: &HashMap<String, Tensor>,
@@ -1131,28 +2214,48 @@ pub fn eval_step(
     task_id: i32,
     alpha: f32,
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<Tensor> {
     validate_batch(entry, batch.batch_size, batch.seq_len)?;
     let dims = dims_of(entry)?;
     let task = task_id as usize;
-    let w = Weights::build(entry, frozen, trainable)?;
-    let adapter = AdapterCtx::new(entry, trainable, alpha, task, threads)?;
-    let (hidden, _cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens, threads);
-    Ok(head_logits(&dims, &w, &hidden, task))
+    let kind = adapter_kind_of(entry)?;
+    let StepScratch { ws, index, pre, .. } = scratch;
+    let w = Weights { index: &*index, frozen, trainable };
+    pre.fill(kind, &dims, trainable, entry.spec.rank, task, 2, false, ws);
+    let adapter = AdapterCtx {
+        kind,
+        params: trainable,
+        alpha,
+        task,
+        rank: entry.spec.rank,
+        heads: dims.h,
+        matrices: 2,
+        d: dims.d,
+        threads,
+        pre: &*pre,
+    };
+    let hidden = encoder_forward_infer(&dims, &w, &adapter, &batch.tokens, threads, ws);
+    let logits = head_logits(&dims, &w, &hidden, task, threads, ws);
+    ws.recycle(hidden);
+    pre.recycle_into(ws);
+    Ok(logits)
 }
 
 /// One MLM pretraining step over all encoder weights (weight-tied output
 /// head: logits = h · tok_embᵀ). Returns (loss, grads).
 pub fn pretrain_step(
     entry: &ArtifactEntry,
+    frozen: &HashMap<String, Tensor>,
     trainable: &[Tensor],
     batch: &MlmBatch,
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<(f32, Vec<Tensor>)> {
     validate_batch(entry, batch.batch_size, batch.seq_len)?;
     let dims = dims_of(entry)?;
-    let empty = HashMap::new();
-    let w = Weights::build(entry, &empty, trainable)?;
+    let StepScratch { ws, index, grad_index, packed, pre, layers, row_loss } = scratch;
+    let w = Weights { index: &*index, frozen, trainable };
     let adapter = AdapterCtx {
         kind: None,
         params: trainable,
@@ -1163,23 +2266,25 @@ pub fn pretrain_step(
         matrices: 2,
         d: dims.d,
         threads,
-        vera_frozen: None,
+        pre: &*pre,
     };
-    let (hidden, cache) = encoder_forward(&dims, &w, &adapter, &batch.tokens, threads);
+    let (hidden, emb_ln) = encoder_forward(&dims, &w, &adapter, &batch.tokens, threads, ws, layers);
 
     // Weight-tied MLM head over every position. The vocab softmax is the
     // most expensive row loop of the whole pretrain step: rows fan out
     // across workers; the scalar loss reduces serially in row order so the
     // sum never depends on the thread count.
     let tok_emb = w.get("tok_emb"); // (v, d)
-    let logits = hidden.matmul_t_mt(tok_emb, threads); // (n, v)
+    let (n, v, d) = (dims.n, dims.v, dims.d);
+    let mut logits = ws.take(&[n, v]);
+    matmul_t_into(hidden.data(), tok_emb.data(), logits.data_mut(), n, d, v, threads);
     let wsum: f32 = batch.weights.iter().sum::<f32>().max(1e-6);
-    let (n, v) = (dims.n, dims.v);
-    let mut dlogits = Tensor::zeros(&[n, v]);
-    let mut row_loss = vec![0.0f64; n];
+    let mut dlogits = ws.take(&[n, v]);
+    row_loss.clear();
+    row_loss.resize(n, 0.0);
     {
         let dls = SharedSliceMut::new(dlogits.data_mut());
-        let rls = SharedSliceMut::new(&mut row_loss);
+        let rls = SharedSliceMut::new(&mut row_loss[..]);
         scope_rows(gate(threads, n * v), n, ROW_BAND, |band| {
             // SAFETY: bands are disjoint row ranges of dlogits / row_loss.
             let d_band = unsafe { dls.range_mut(band.start * v, band.end * v) };
@@ -1206,33 +2311,49 @@ pub fn pretrain_step(
             }
         });
     }
+    ws.recycle(logits);
     let loss: f64 = row_loss.iter().sum(); // fixed row order
     let loss = (loss / wsum as f64) as f32;
 
-    let mut sink = GradSink::new(entry.trainable_inputs());
+    let mut sink = GradSink::new(entry.trainable_inputs(), &*grad_index, ws);
     // Head: dh = dlogits · tok_emb ; d tok_emb += dlogitsᵀ · hidden.
-    let d_hidden = dlogits.matmul_mt(tok_emb, threads);
-    sink.add_all("tok_emb", &dlogits.t_matmul_mt(&hidden, threads));
+    let d_hidden = mm(ws, &dlogits, tok_emb, threads);
+    t_matmul_into(
+        dlogits.data(),
+        hidden.data(),
+        sink.chunk_mut("tok_emb", 0, v * d),
+        v,
+        n,
+        d,
+        threads,
+    );
+    ws.recycle(dlogits);
+    ws.recycle(hidden);
     encoder_backward(
         &dims,
         &w,
         &adapter,
+        packed,
         &batch.tokens,
-        &cache,
+        layers,
+        emb_ln,
         d_hidden,
         &mut sink,
         true,
         threads,
+        ws,
     );
     Ok((loss, sink.into_vec()))
 }
 
 /// Raw positional apply (serving hot path): `y = x·g1·mid·g4` (TT families)
 /// or `y = x·a·b` (LoRA), α = 1 as baked into the AOT apply artifacts.
+/// Intermediates come from the step workspace; only the output escapes.
 pub fn apply_step(
     entry: &ArtifactEntry,
     inputs: &[Tensor],
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<Vec<Tensor>> {
     if inputs.len() != entry.inputs.len() {
         bail!(
@@ -1251,17 +2372,30 @@ pub fn apply_step(
             );
         }
     }
+    let ws = scratch.workspace_mut();
     let y = if entry.spec.adapter == "lora" {
-        inputs[0]
-            .matmul_mt(&inputs[1], threads)
-            .matmul_mt(&inputs[2], threads)
+        let xa = mm(ws, &inputs[0], &inputs[1], threads);
+        let y = inputs_mm_out(&xa, &inputs[2], threads);
+        ws.recycle(xa);
+        y
     } else {
-        inputs[0]
-            .matmul_mt(&inputs[1], threads)
-            .matmul_mt(&inputs[2], threads)
-            .matmul_mt(&inputs[3], threads)
+        let xg = mm(ws, &inputs[0], &inputs[1], threads);
+        let xm = mm(ws, &xg, &inputs[2], threads);
+        ws.recycle(xg);
+        let y = inputs_mm_out(&xm, &inputs[3], threads);
+        ws.recycle(xm);
+        y
     };
     Ok(vec![y])
+}
+
+/// Final apply GEMM into a plain (escaping) tensor.
+fn inputs_mm_out(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[b.ndim() - 1];
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(a.data(), b.data(), out.data_mut(), m, k, n, threads);
+    out
 }
 
 #[cfg(test)]
@@ -1284,17 +2418,21 @@ mod tests {
 
     #[test]
     fn layer_norm_backward_matches_finite_difference() {
+        let mut ws = Workspace::new(true);
         let mut rng = Pcg64::new(9);
         let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
         let gamma: Vec<f32> = (0..8).map(|j| 1.0 + 0.1 * j as f32).collect();
         let beta = vec![0.05f32; 8];
         let dy = Tensor::randn(&[3, 8], 1.0, &mut rng);
-        let (_, cache) = layer_norm(&x, &gamma, &beta, 1);
-        let dx = layer_norm_backward(&dy, &cache, &gamma, None, 1);
+        let (_, cache) = layer_norm(&x, &gamma, &beta, 1, &mut ws);
+        let dx = layer_norm_backward(&dy, &cache, &gamma, None, 1, &mut ws);
         // Scalar objective: L = Σ y ∘ dy; check a handful of coordinates.
-        let loss = |xp: &Tensor| -> f32 {
-            let (y, _) = layer_norm(xp, &gamma, &beta, 1);
-            y.data().iter().zip(dy.data()).map(|(&a, &b)| a * b).sum()
+        let mut loss = |xp: &Tensor| -> f32 {
+            let (y, c) = layer_norm(xp, &gamma, &beta, 1, &mut ws);
+            let l = y.data().iter().zip(dy.data()).map(|(&a, &b)| a * b).sum();
+            c.recycle_into(&mut ws);
+            ws.recycle(y);
+            l
         };
         let eps = 1e-3;
         for &(i, j) in &[(0usize, 0usize), (1, 3), (2, 7)] {
@@ -1309,31 +2447,85 @@ mod tests {
     }
 
     #[test]
+    fn layer_norm_infer_matches_cached_forward_bitwise() {
+        let mut ws = Workspace::new(true);
+        let mut rng = Pcg64::new(12);
+        let x = Tensor::randn(&[5, 16], 1.3, &mut rng);
+        let gamma: Vec<f32> = (0..16).map(|j| 0.8 + 0.05 * j as f32).collect();
+        let beta: Vec<f32> = (0..16).map(|j| 0.01 * j as f32).collect();
+        let (y, cache) = layer_norm(&x, &gamma, &beta, 1, &mut ws);
+        let y_inf = layer_norm_infer(&x, &gamma, &beta, 1, &mut ws);
+        assert_eq!(y, y_inf, "inference LN must be bit-identical");
+        cache.recycle_into(&mut ws);
+    }
+
+    #[test]
     fn block_helpers_roundtrip() {
+        let mut ws = Workspace::new(true);
         let mut rng = Pcg64::new(2);
         let m = Tensor::randn(&[6, 10], 1.0, &mut rng);
-        let blk = block(&m, 2, 3, 4, 5);
+        let blk = copy_block(&mut ws, &m, 2, 3, 4, 5);
         assert_eq!(blk.shape(), &[3, 5]);
         assert_eq!(blk.at(0, 0), m.at(2, 4));
         assert_eq!(blk.at(2, 4), m.at(4, 8));
         let mut dst = Tensor::zeros(&[6, 10]);
-        add_block(&mut dst, 2, 4, &blk);
-        assert_eq!(block(&dst, 2, 3, 4, 5), blk);
+        add_block_scaled(&mut dst, 2, 4, &blk, 2.0);
+        assert_eq!(dst.at(2, 4), 2.0 * m.at(2, 4));
+        assert_eq!(dst.at(4, 8), 2.0 * m.at(4, 8));
         assert_eq!(dst.at(0, 0), 0.0);
     }
 
     #[test]
-    fn colsum_and_mul_cols() {
+    fn transpose_chunk_roundtrips() {
+        let mut rng = Pcg64::new(3);
+        let m = Tensor::randn(&[4, 7], 1.0, &mut rng);
+        let t = transpose_chunk(m.data(), 4, 7);
+        assert_eq!(t.shape(), &[7, 4]);
+        for i in 0..4 {
+            for j in 0..7 {
+                assert_eq!(t.at(j, i), m.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn column_helpers_accumulate() {
+        let mut ws = Workspace::new(true);
         let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
-        assert_eq!(colsum(&t), vec![5., 7., 9.]);
-        let m = mul_cols(&t, &[2.0, 0.0, 1.0]);
+        let mut cs = vec![1.0f32; 3];
+        colsum_acc(&t, &mut cs);
+        assert_close(&cs, &[6., 8., 10.], 1e-6, 1e-6, "colsum_acc");
+        let m = mul_cols_ws(&mut ws, &t, &[2.0, 0.0, 1.0]);
         assert_eq!(m.data(), &[2., 0., 3., 8., 0., 6.]);
-        assert_close(
-            &colsum_mul(&t, &t),
-            &[17.0, 29.0, 45.0],
-            1e-6,
-            1e-6,
-            "colsum_mul",
+        let mut cm = vec![0.0f32; 3];
+        colsum_mul_acc(&t, &t, &mut cm);
+        assert_close(&cm, &[17.0, 29.0, 45.0], 1e-6, 1e-6, "colsum_mul_acc");
+        // acc_mul_cols / acc_mul_cols_scaled against the manual forms.
+        let mut acc = Tensor::zeros(&[2, 3]);
+        acc_mul_cols(&mut acc, &t, &[1.0, 2.0, 3.0]);
+        assert_eq!(acc.data(), &[1., 4., 9., 4., 10., 18.]);
+        let mut acc2 = Tensor::zeros(&[2, 3]);
+        acc_mul_cols_scaled(&mut acc2, &t, &[1.0, 2.0, 3.0], 0.5);
+        assert_eq!(acc2.data(), &[0.5, 2., 4.5, 2., 5., 9.]);
+    }
+
+    #[test]
+    fn gather_scatter_heads_roundtrip() {
+        let mut ws = Workspace::new(true);
+        let (b, s, h, dh) = (2usize, 3usize, 2usize, 2usize);
+        let d = h * dh;
+        let mut rng = Pcg64::new(4);
+        let src = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+        let mut flat = ws.take(&[b * h, s, dh]);
+        gather_heads(&src, &mut flat, b, s, h, dh, 1);
+        // pair (bi=1, hi=0), row 2 must equal src row (1*3+2), cols 0..2.
+        let pair = 2; // bi=1, hi=0
+        assert_eq!(
+            &flat.data()[(pair * s + 2) * dh..(pair * s + 2) * dh + dh],
+            &src.data()[(3 + 2) * d..(3 + 2) * d + dh],
         );
+        let mut back = ws.take(&[b * s, d]);
+        scatter_heads_add(&flat, &mut back, b, s, h, dh, 1);
+        assert_eq!(back, src, "gather→scatter must reconstruct the matrix");
     }
 }

@@ -29,6 +29,19 @@ pub struct RefBackend {
     /// Worker-thread budget every bound step executes with. Results are
     /// bit-identical for any value (tests/determinism.rs).
     threads: usize,
+    /// Whether bound steps use the workspace arena (zero-allocation hot
+    /// path). Results are bit-identical either way; off is the plain
+    /// allocate-per-intermediate reference mode.
+    arena: bool,
+}
+
+/// Arena default from the environment: on unless `METATT_ARENA` is set to
+/// `0` / `off` / `false`.
+fn arena_from_env() -> bool {
+    !matches!(
+        std::env::var("METATT_ARENA").as_deref(),
+        Ok("0") | Ok("off") | Ok("false")
+    )
 }
 
 impl RefBackend {
@@ -40,8 +53,15 @@ impl RefBackend {
     }
 
     /// Backend with an explicit thread count (>= 1; `0` is a configuration
-    /// error surfaced cleanly rather than a panic).
+    /// error surfaced cleanly rather than a panic). The workspace arena is
+    /// on unless disabled via `METATT_ARENA=0`.
     pub fn with_threads(threads: usize) -> Result<RefBackend> {
+        Self::with_config(threads, arena_from_env())
+    }
+
+    /// Backend with explicit thread count *and* arena mode (the determinism
+    /// suite pins arena-on == arena-off bit-identity through this).
+    pub fn with_config(threads: usize, arena: bool) -> Result<RefBackend> {
         if threads == 0 {
             bail!(
                 "backend thread count must be >= 1 (got 0): pass --threads 1 \
@@ -51,7 +71,7 @@ impl RefBackend {
         // Size the lazily-created kernel pool for this budget (no-op if a
         // region already ran; the pool is capped at 16 workers regardless).
         crate::util::threadpool::request_pool_capacity(threads);
-        Ok(RefBackend { bound: Mutex::new(HashSet::new()), threads })
+        Ok(RefBackend { bound: Mutex::new(HashSet::new()), threads, arena })
     }
 }
 
@@ -75,8 +95,10 @@ impl Backend for RefBackend {
             "backend: ref — pure-rust reference executor\n\
              artifacts: synthesized on demand (no manifest needed)\n\
              worker threads: {}\n\
+             workspace arena: {}\n\
              steps bound this session: {}",
             self.threads,
+            if self.arena { "on (zero-allocation steady state)" } else { "off" },
             self.cached_executables()
         )
     }
@@ -113,12 +135,17 @@ impl Backend for RefBackend {
             }
         }
         self.bound.lock().unwrap().insert(spec.stem());
-        // Refcount bump only — the backbone is shared across every bound
-        // step (train + eval runners, all DMRG ranks).
+        // One-time per-bind work: weight-name indices, packed transposed
+        // frozen weights for the backward GEMM orientation, and the step's
+        // workspace arena. Refcount bump only for the frozen map itself —
+        // the backbone is shared across every bound step (train + eval
+        // runners, all DMRG ranks).
+        let scratch = encoder::StepScratch::new(&entry, frozen, self.arena)?;
         Ok(Box::new(RefStep {
             entry,
             frozen: Arc::clone(frozen),
             threads: self.threads,
+            scratch: Mutex::new(scratch),
         }))
     }
 
@@ -159,11 +186,13 @@ impl Backend for RefBackend {
 }
 
 /// A bound reference step: the synthesized layout + a shared handle on the
-/// frozen weights + the backend's thread budget.
+/// frozen weights + the backend's thread budget + the per-step scratch
+/// (workspace arena, weight indices, packed transposed frozen weights).
 struct RefStep {
     entry: ArtifactEntry,
     frozen: Arc<HashMap<String, Tensor>>,
     threads: usize,
+    scratch: Mutex<encoder::StepScratch>,
 }
 
 impl RefStep {
@@ -209,6 +238,7 @@ impl Step for RefStep {
             bail!("{} is not a train step", self.entry.spec.stem());
         }
         self.check_trainable(trainable)?;
+        let mut scratch = self.scratch.lock().unwrap();
         encoder::train_step(
             &self.entry,
             &self.frozen,
@@ -217,6 +247,7 @@ impl Step for RefStep {
             task_id,
             alpha,
             self.threads,
+            &mut scratch,
         )
     }
 
@@ -231,6 +262,7 @@ impl Step for RefStep {
             bail!("{} is not an eval step", self.entry.spec.stem());
         }
         self.check_trainable(trainable)?;
+        let mut scratch = self.scratch.lock().unwrap();
         encoder::eval_step(
             &self.entry,
             &self.frozen,
@@ -239,6 +271,7 @@ impl Step for RefStep {
             task_id,
             alpha,
             self.threads,
+            &mut scratch,
         )
     }
 
@@ -247,17 +280,34 @@ impl Step for RefStep {
             bail!("{} is not a pretrain step", self.entry.spec.stem());
         }
         self.check_trainable(trainable)?;
-        encoder::pretrain_step(&self.entry, trainable, batch, self.threads)
+        let mut scratch = self.scratch.lock().unwrap();
+        encoder::pretrain_step(
+            &self.entry,
+            &self.frozen,
+            trainable,
+            batch,
+            self.threads,
+            &mut scratch,
+        )
     }
 
     fn run_raw(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         match self.entry.spec.step {
-            StepKind::Apply => encoder::apply_step(&self.entry, inputs, self.threads),
+            StepKind::Apply => {
+                let mut scratch = self.scratch.lock().unwrap();
+                encoder::apply_step(&self.entry, inputs, self.threads, &mut scratch)
+            }
             _ => bail!(
                 "run_raw on the ref backend supports apply specs only (got {})",
                 self.entry.spec.stem()
             ),
         }
+    }
+
+    fn recycle(&self, outputs: Vec<Tensor>) {
+        // Consumed step outputs (gradient tensors) go back to the arena so
+        // the steady-state train loop stays allocation-free.
+        self.scratch.lock().unwrap().workspace_mut().recycle_vec(outputs);
     }
 }
 

@@ -9,8 +9,10 @@
 //! artifacts; host tensors touch only adapter-sized data (KBs to low MBs).
 
 mod ops;
+mod workspace;
 
 pub use ops::*;
+pub use workspace::Workspace;
 
 /// Row-major dense f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

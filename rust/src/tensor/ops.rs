@@ -211,10 +211,12 @@ impl Tensor {
     }
 }
 
-/// Blocked matmul kernel: C (m×n) = A (m×k) · B (k×n); C must be zeroed.
-/// Splits row bands across `threads` workers above [`PAR_MIN_MACS`]; each
-/// output row keeps the serial k-tile accumulation order, so the result is
-/// bit-identical for every thread count.
+/// Blocked matmul kernel: C (m×n) += A (m×k) · B (k×n). The kernel
+/// *accumulates* into C — zero it first for a plain product; the encoder's
+/// backward exploits the accumulation to fuse `dst += A·B` without a
+/// temporary. Splits row bands across `threads` workers above
+/// [`PAR_MIN_MACS`]; each output row keeps the serial k-tile accumulation
+/// order, so the result is bit-identical for every thread count.
 pub fn matmul_into(
     a: &[f32],
     b: &[f32],
@@ -258,8 +260,8 @@ fn matmul_band(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
     }
 }
 
-/// Blocked transposed-right kernel: C (m×n) = A (m×k) · B (n×k)^T; C must
-/// be zeroed (the k-tiles accumulate into it, like the sibling kernels).
+/// Blocked transposed-right kernel: C (m×n) += A (m×k) · B (n×k)^T
+/// (accumulating, like the sibling kernels — zero C for a plain product).
 /// Same banding/determinism contract as [`matmul_into`].
 pub fn matmul_t_into(
     a: &[f32],
@@ -306,9 +308,10 @@ fn matmul_t_band(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
     }
 }
 
-/// Blocked transposed-left kernel: C (m×n) = A (k×m)^T · B (k×n); C must be
-/// zeroed. Same banding/determinism contract as [`matmul_into`]; bands
-/// split the m output rows (columns of A).
+/// Blocked transposed-left kernel: C (m×n) += A (k×m)^T · B (k×n)
+/// (accumulating — zero C for a plain product). Same banding/determinism
+/// contract as [`matmul_into`]; bands split the m output rows (columns of
+/// A).
 pub fn t_matmul_into(
     a: &[f32],
     b: &[f32],
@@ -355,6 +358,48 @@ fn t_matmul_band(
                 }
             }
         }
+    }
+}
+
+/// In-place row-wise numerically-stable softmax over a row-major
+/// `rows × cols` buffer (the attention-probability transform).
+pub fn softmax_rows_into(x: &mut [f32], rows: usize, cols: usize) {
+    debug_assert_eq!(x.len(), rows * cols);
+    for row in x.chunks_exact_mut(cols) {
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            z += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= z;
+        }
+    }
+}
+
+/// Slice axpy: `dst += s * src` (each product rounded once, then added —
+/// identical to `Tensor::axpy` on the same data).
+pub fn axpy_into(dst: &mut [f32], s: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d += s * x;
+    }
+}
+
+/// Elementwise sum into a destination buffer: `dst = a + b`.
+pub fn add_into(a: &[f32], b: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), dst.len());
+    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *d = x + y;
+    }
+}
+
+/// In-place scalar multiply.
+pub fn scale_into(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
     }
 }
 
@@ -448,6 +493,64 @@ mod tests {
         a.axpy(0.5, &b);
         assert_eq!(a.data(), &[2.0, 2.0, 2.0, 2.0]);
         assert_eq!(a.scale(0.5).data(), &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn kernels_accumulate_into_nonzero_output() {
+        // The encoder's backward fuses `dst += A·B` through the kernels'
+        // accumulation semantics; pin it for all three orientations.
+        let mut rng = Pcg64::new(11);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[7, 4], 1.0, &mut rng);
+        let base = Tensor::randn(&[5, 4], 1.0, &mut rng);
+        let mut c = base.clone();
+        matmul_into(a.data(), b.data(), c.data_mut(), 5, 7, 4, 1);
+        let want = base.add(&a.matmul(&b));
+        assert!(rel_err(&c, &want) < 1e-5, "matmul_into accumulate");
+        let bt = b.transpose(); // (4, 7)
+        let mut c2 = base.clone();
+        matmul_t_into(a.data(), bt.data(), c2.data_mut(), 5, 7, 4, 1);
+        assert!(rel_err(&c2, &want) < 1e-5, "matmul_t_into accumulate");
+        let at = a.transpose(); // (7, 5)
+        let mut c3 = base.clone();
+        t_matmul_into(at.data(), b.data(), c3.data_mut(), 5, 7, 4, 1);
+        assert!(rel_err(&c3, &want) < 1e-5, "t_matmul_into accumulate");
+    }
+
+    #[test]
+    fn in_place_ops_match_tensor_ops() {
+        let mut rng = Pcg64::new(6);
+        // softmax_rows_into matches a per-row manual softmax.
+        let t = Tensor::randn(&[3, 5], 2.0, &mut rng);
+        let mut s = t.data().to_vec();
+        softmax_rows_into(&mut s, 3, 5);
+        for i in 0..3 {
+            let row = &s[i * 5..(i + 1) * 5];
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {i} sums to {sum}");
+            // Ordering preserved (softmax is monotone).
+            let src = &t.data()[i * 5..(i + 1) * 5];
+            for a in 0..5 {
+                for b in 0..5 {
+                    assert_eq!(src[a] < src[b], row[a] < row[b]);
+                }
+            }
+        }
+        // axpy_into is bitwise-identical to Tensor::axpy.
+        let mut a = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        let mut raw = a.data().to_vec();
+        a.axpy(0.3, &b);
+        axpy_into(&mut raw, 0.3, b.data());
+        assert_eq!(a.data(), &raw[..]);
+        // add_into matches Tensor::add; scale_into matches Tensor::scale.
+        let c = Tensor::randn(&[2, 3], 1.0, &mut rng);
+        let d = Tensor::randn(&[2, 3], 1.0, &mut rng);
+        let mut sum = vec![0.0f32; 6];
+        add_into(c.data(), d.data(), &mut sum);
+        assert_eq!(&sum[..], c.add(&d).data());
+        scale_into(&mut sum, 0.5);
+        assert_eq!(&sum[..], c.add(&d).scale(0.5).data());
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! Step-scoped workspace arena: a bump-style pool of reusable f32 buffers.
+//!
+//! The reference backend's hot loop (train / eval / apply steps) used to
+//! heap-allocate every intermediate tensor of every step. The [`Workspace`]
+//! turns that traffic into pool checkouts: [`Workspace::take`] hands out a
+//! zero-filled [`Tensor`] — reusing a previously recycled buffer of the same
+//! element count when one is available — and [`Workspace::recycle`] returns
+//! a tensor's storage to the pool. After a one-step warmup every shape the
+//! step touches has a pooled buffer, so the steady-state step performs no
+//! heap allocations (pinned by `tests/alloc_regression.rs`).
+//!
+//! **Determinism contract:** a pooled checkout is indistinguishable from a
+//! fresh `Tensor::zeros` — same shape, same zero fill — so arena-on and
+//! arena-off runs are bit-identical (`tests/determinism.rs`). The arena is
+//! per-bound-step (behind the step's mutex), never shared across threads;
+//! parallel regions only ever see raw slices of checked-out buffers.
+//!
+//! Buffers are keyed by *element count*, not shape: an `[n, d]` buffer can
+//! be reissued as `[b·h, s, dh]`. Shape vectors are retained alongside the
+//! data (a `Vec<usize>` is a heap allocation too) and normalized to
+//! [`MAX_NDIM`] capacity on recycle so reshaping a pooled buffer to a
+//! higher-rank shape never reallocates in steady state.
+
+use super::Tensor;
+use std::collections::HashMap;
+
+/// Highest tensor rank the crate uses (LoRA params are `[l, m, d, r]`).
+/// Pooled shape vectors are grown to this capacity once, on recycle.
+const MAX_NDIM: usize = 4;
+
+/// Pool of reusable tensor buffers plus spare `Vec<Tensor>` containers.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    enabled: bool,
+    /// Free tensors keyed by element count.
+    free: HashMap<usize, Vec<Tensor>>,
+    /// Spare tensor-vector containers (capacity preserved across steps).
+    spare_vecs: Vec<Vec<Tensor>>,
+    takes: u64,
+    hits: u64,
+}
+
+impl Workspace {
+    /// A workspace; `enabled = false` degrades every checkout to a plain
+    /// allocation (the arena-off reference mode the determinism suite
+    /// compares against).
+    pub fn new(enabled: bool) -> Workspace {
+        Workspace { enabled, ..Default::default() }
+    }
+
+    /// Whether checkouts actually pool (vs plain allocation).
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Zero-filled tensor of `shape`, reusing a pooled buffer of the same
+    /// element count when available.
+    pub fn take(&mut self, shape: &[usize]) -> Tensor {
+        let numel: usize = shape.iter().product();
+        if !self.enabled || numel == 0 {
+            return Tensor::zeros(shape);
+        }
+        self.takes += 1;
+        if let Some(list) = self.free.get_mut(&numel) {
+            if let Some(mut t) = list.pop() {
+                self.hits += 1;
+                t.data.fill(0.0);
+                t.shape.clear();
+                t.shape.extend_from_slice(shape);
+                return t;
+            }
+        }
+        Tensor::zeros(shape)
+    }
+
+    /// Return a tensor's storage (data + shape vector) to the pool.
+    pub fn recycle(&mut self, mut t: Tensor) {
+        if !self.enabled || t.data.is_empty() {
+            return;
+        }
+        // Normalize the shape vector's capacity once so a later `take` with
+        // a higher-rank shape extends in place instead of reallocating.
+        if t.shape.capacity() < MAX_NDIM {
+            let extra = MAX_NDIM - t.shape.len();
+            t.shape.reserve(extra);
+        }
+        self.free.entry(t.data.len()).or_default().push(t);
+    }
+
+    /// Recycle every tensor of an iterator.
+    pub fn recycle_all(&mut self, ts: impl IntoIterator<Item = Tensor>) {
+        for t in ts {
+            self.recycle(t);
+        }
+    }
+
+    /// Check out an empty `Vec<Tensor>` container (capacity preserved from
+    /// a prior [`Workspace::recycle_vec`]).
+    pub fn take_vec(&mut self) -> Vec<Tensor> {
+        self.spare_vecs.pop().unwrap_or_default()
+    }
+
+    /// Recycle the tensors of `v` and keep the emptied container for reuse.
+    pub fn recycle_vec(&mut self, mut v: Vec<Tensor>) {
+        for t in v.drain(..) {
+            self.recycle(t);
+        }
+        if self.enabled {
+            self.spare_vecs.push(v);
+        }
+    }
+
+    /// Number of buffers currently pooled.
+    pub fn pooled_tensors(&self) -> usize {
+        self.free.values().map(|v| v.len()).sum()
+    }
+
+    /// Total pooled f32 payload in bytes.
+    pub fn pooled_bytes(&self) -> usize {
+        self.free
+            .iter()
+            .map(|(numel, v)| numel * v.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// (checkouts, pool hits) since construction — the warmup telemetry.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.takes, self.hits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_matches_fresh_zeros() {
+        let mut ws = Workspace::new(true);
+        let a = ws.take(&[3, 4]);
+        assert_eq!(a, Tensor::zeros(&[3, 4]));
+        ws.recycle(a);
+        // Recycled buffer comes back zeroed even after being dirtied.
+        let mut b = ws.take(&[4, 3]);
+        assert_eq!(b, Tensor::zeros(&[4, 3]));
+        b.data_mut()[5] = 7.0;
+        ws.recycle(b);
+        let c = ws.take(&[2, 6]);
+        assert_eq!(c, Tensor::zeros(&[2, 6]));
+    }
+
+    #[test]
+    fn pool_reuses_by_element_count() {
+        let mut ws = Workspace::new(true);
+        let a = ws.take(&[8, 8]);
+        ws.recycle(a);
+        let _b = ws.take(&[4, 16]); // same numel, different shape: pool hit
+        let (takes, hits) = ws.stats();
+        assert_eq!(takes, 2);
+        assert_eq!(hits, 1);
+        assert_eq!(ws.pooled_tensors(), 0);
+    }
+
+    #[test]
+    fn rank_growth_after_recycle_normalization() {
+        let mut ws = Workspace::new(true);
+        // A 2-D buffer reissued as 4-D must not need a bigger shape vec.
+        let a = ws.take(&[4, 4]);
+        ws.recycle(a);
+        let b = ws.take(&[2, 2, 2, 2]);
+        assert_eq!(b.shape(), &[2, 2, 2, 2]);
+        assert_eq!(b.len(), 16);
+    }
+
+    #[test]
+    fn disabled_workspace_is_plain_allocation() {
+        let mut ws = Workspace::new(false);
+        let a = ws.take(&[5, 5]);
+        assert_eq!(a, Tensor::zeros(&[5, 5]));
+        ws.recycle(a);
+        assert_eq!(ws.pooled_tensors(), 0);
+        let (takes, hits) = ws.stats();
+        assert_eq!((takes, hits), (0, 0));
+    }
+
+    #[test]
+    fn vec_containers_round_trip() {
+        let mut ws = Workspace::new(true);
+        let mut v = ws.take_vec();
+        v.push(ws.take(&[2, 2]));
+        v.push(ws.take(&[3]));
+        ws.recycle_vec(v);
+        assert_eq!(ws.pooled_tensors(), 2);
+        let v2 = ws.take_vec();
+        assert!(v2.is_empty());
+        assert!(v2.capacity() >= 2, "container capacity must be preserved");
+    }
+
+    #[test]
+    fn zero_sized_shapes_are_not_pooled() {
+        let mut ws = Workspace::new(true);
+        let a = ws.take(&[0, 5]);
+        assert!(a.is_empty());
+        ws.recycle(a);
+        assert_eq!(ws.pooled_tensors(), 0);
+    }
+}

@@ -257,6 +257,11 @@ impl MetaTt {
     /// B = G_last) so serving does exactly two GEMMs like LoRA.
     pub fn fold_for_serving(&self, task: usize) -> Vec<Vec<(Tensor, Tensor)>> {
         let g1 = self.chain.core(0).reshape(&[self.dims.d_in, self.chain.core(0).shape()[2]]);
+        // Boundary factors are (l, m)-invariant — materialize them once
+        // outside the loops instead of re-squeezing/re-scaling per pair
+        // (the same prefix-reuse the reference backend's step applies).
+        let g_last = self.last_core_matrix();
+        let g1_scaled = g1.scale(self.alpha);
         let mut out = Vec::with_capacity(self.dims.layers);
         for l in 0..self.dims.layers {
             let mut row = Vec::with_capacity(self.dims.matrices);
@@ -264,31 +269,30 @@ impl MetaTt {
                 let (a, b) = match self.kind {
                     MetaTtKind::FourD => {
                         let mid = self.chain.middle_product(1, 2, &[l, m]);
-                        (g1.matmul(&mid).scale(self.alpha), self.last_core_matrix())
+                        (g1.matmul(&mid).scale(self.alpha), g_last.clone())
                     }
                     MetaTtKind::FourPlusOneD => {
                         let mid = self.chain.middle_product(1, 3, &[l, task, m]);
-                        (g1.matmul(&mid).scale(self.alpha), self.last_core_matrix())
+                        (g1.matmul(&mid).scale(self.alpha), g_last.clone())
                     }
                     MetaTtKind::FiveD => {
                         // Fold heads into a block-diagonal-free form: build the
                         // full (r1 x D_out) right factor for this (l, m).
                         let lm = self.chain.middle_product(1, 2, &[l, m]);
-                        let g5 = self.last_core_matrix();
                         let dh = self.dims.d_out / self.dims.heads;
                         let r1 = g1.cols();
                         let mut right = Tensor::zeros(&[r1, self.dims.d_out]);
                         for h in 0..self.dims.heads {
                             let rh = lm
                                 .matmul(&self.chain.slice(3, h))
-                                .matmul(&g5); // r1 x dh
+                                .matmul(&g_last); // r1 x dh
                             for i in 0..r1 {
                                 for j in 0..dh {
                                     right.set(i, h * dh + j, rh.at(i, j));
                                 }
                             }
                         }
-                        (g1.scale(self.alpha), right)
+                        (g1_scaled.clone(), right)
                     }
                 };
                 row.push((a, b));

@@ -157,29 +157,46 @@ fn assert_tensors_bit_identical(a: &[Tensor], b: &[Tensor], what: &str) {
     }
 }
 
-/// Run the same train step on 1-thread and N-thread backends; losses and
-/// every gradient must agree to the bit. Exercised per adapter family so
-/// each backward path's parallel splits are covered.
+/// Run the same train step on 1-thread and N-thread backends — and with
+/// the workspace arena on and off — losses and every gradient must agree
+/// to the bit across all combinations. Exercised per adapter family so
+/// each backward path's parallel splits and pooled buffers are covered.
 fn check_train_step_determinism(adapter: &str) {
     let (batch_n, seq) = (8, 16);
     let spec = tiny_spec(StepKind::Train, adapter, batch_n, seq);
     let ds = TaskId::MrpcSyn.generate_at(batch_n, batch_n, 3, seq, 512);
     let batch = Batcher::new(batch_n).eval(&ds).remove(0);
 
-    let b1 = RefBackend::with_threads(1).unwrap();
-    let b4 = RefBackend::with_threads(4).unwrap();
-    let entry = b1.entry(&spec).unwrap();
+    let reference = RefBackend::with_config(1, true).unwrap(); // serial, arena on
+    let entry = reference.entry(&spec).unwrap();
     let frozen = std::sync::Arc::new(
         assemble_frozen(&entry, None, metatt::config::ModelPreset::Tiny).unwrap(),
     );
-    let params = random_params(&b1, &spec, 42);
+    let params = random_params(&reference, &spec, 42);
 
-    let s1 = b1.bind(&spec, &frozen).unwrap();
-    let s4 = b4.bind(&spec, &frozen).unwrap();
-    let (l1, g1) = s1.run_train(&params, &batch, 0, 1.5).unwrap();
-    let (l4, g4) = s4.run_train(&params, &batch, 0, 1.5).unwrap();
-    assert_eq!(l1.to_bits(), l4.to_bits(), "{adapter}: loss bits differ");
-    assert_tensors_bit_identical(&g1, &g4, &format!("{adapter} grads"));
+    let s_ref = reference.bind(&spec, &frozen).unwrap();
+    let (l_ref, g_ref) = s_ref.run_train(&params, &batch, 0, 1.5).unwrap();
+    // Second step on the same (now warmed) arena: pooled buffers must not
+    // leak state between steps.
+    let (l_warm, g_warm) = s_ref.run_train(&params, &batch, 0, 1.5).unwrap();
+    assert_eq!(l_ref.to_bits(), l_warm.to_bits(), "{adapter}: warmed arena drifted");
+    assert_tensors_bit_identical(&g_ref, &g_warm, &format!("{adapter} warmed grads"));
+
+    for (threads, arena) in [(4usize, true), (1, false), (4, false)] {
+        let b = RefBackend::with_config(threads, arena).unwrap();
+        let s = b.bind(&spec, &frozen).unwrap();
+        let (l, g) = s.run_train(&params, &batch, 0, 1.5).unwrap();
+        assert_eq!(
+            l_ref.to_bits(),
+            l.to_bits(),
+            "{adapter}: loss bits differ (threads={threads}, arena={arena})"
+        );
+        assert_tensors_bit_identical(
+            &g_ref,
+            &g,
+            &format!("{adapter} grads (threads={threads}, arena={arena})"),
+        );
+    }
 }
 
 #[test]
@@ -200,30 +217,60 @@ fn train_step_bit_identical_across_thread_counts_lora() {
 #[test]
 fn train_step_bit_identical_across_thread_counts_full_ft() {
     // Full FT flows gradients through every encoder weight — covers the
-    // LN γ/β reductions, bias colsums, and the embedding scatter.
+    // LN γ/β reductions, bias colsums, and the embedding scatter. With no
+    // frozen projections there are no packed transposes either, so this
+    // also pins the strided-fallback backward orientation.
     check_train_step_determinism("full");
 }
 
 #[test]
-fn eval_step_bit_identical_across_thread_counts() {
+fn train_step_bit_identical_across_thread_counts_metatt4p1d() {
+    // The (4+1)D task-core routing plus the per-step ab/bc precompute.
+    check_train_step_determinism("metatt4p1d");
+}
+
+#[test]
+fn train_step_bit_identical_across_thread_counts_vera() {
+    // VeRA's shared frozen projections + fused dx accumulation.
+    check_train_step_determinism("vera");
+}
+
+#[test]
+fn train_step_bit_identical_across_thread_counts_lotr() {
+    // LoTR's shared x·U prefix + fused backward tail.
+    check_train_step_determinism("lotr");
+}
+
+#[test]
+fn eval_step_bit_identical_across_thread_counts_and_arena() {
     let (batch_n, seq) = (8, 16);
     let spec = tiny_spec(StepKind::Eval, "metatt4d", batch_n, seq);
     let ds = TaskId::RteSyn.generate_at(batch_n, batch_n, 5, seq, 512);
     let batch = Batcher::new(batch_n).eval(&ds).remove(0);
 
-    let b1 = RefBackend::with_threads(1).unwrap();
-    let b4 = RefBackend::with_threads(4).unwrap();
-    let entry = b1.entry(&spec).unwrap();
+    let reference = RefBackend::with_config(1, true).unwrap();
+    let entry = reference.entry(&spec).unwrap();
     let frozen = std::sync::Arc::new(
         assemble_frozen(&entry, None, metatt::config::ModelPreset::Tiny).unwrap(),
     );
-    let params = random_params(&b1, &spec, 11);
-    let logits1 = b1.bind(&spec, &frozen).unwrap().run_eval(&params, &batch, 0, 2.0).unwrap();
-    let logits4 = b4.bind(&spec, &frozen).unwrap().run_eval(&params, &batch, 0, 2.0).unwrap();
+    let params = random_params(&reference, &spec, 11);
+    let s_ref = reference.bind(&spec, &frozen).unwrap();
+    let logits_ref = s_ref.run_eval(&params, &batch, 0, 2.0).unwrap();
+    // Warmed cache-free forward must be bit-stable too.
+    let logits_warm = s_ref.run_eval(&params, &batch, 0, 2.0).unwrap();
+    for (threads, arena) in [(1usize, true), (4, true), (1, false), (4, false)] {
+        let b = RefBackend::with_config(threads, arena).unwrap();
+        let logits = b.bind(&spec, &frozen).unwrap().run_eval(&params, &batch, 0, 2.0).unwrap();
+        assert_tensors_bit_identical(
+            std::slice::from_ref(&logits_ref),
+            std::slice::from_ref(&logits),
+            &format!("eval logits (threads={threads}, arena={arena})"),
+        );
+    }
     assert_tensors_bit_identical(
-        std::slice::from_ref(&logits1),
-        std::slice::from_ref(&logits4),
-        "eval logits",
+        std::slice::from_ref(&logits_ref),
+        std::slice::from_ref(&logits_warm),
+        "eval logits (warmed arena)",
     );
 }
 
