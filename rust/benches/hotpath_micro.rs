@@ -17,20 +17,26 @@
 //!   6. **Threading scaling** (PR 2): the parallel kernel family and
 //!      encoder steps at 1 vs N worker threads, emitted as
 //!      `BENCH_pr2.json` so the perf trajectory is recorded per commit.
+//!   7. **Zero-allocation hot path** (PR 3): per-phase p50s + allocs/step
+//!      + arena speedup, emitted as `BENCH_pr3.json`.
+//!   8. **Packed register-tiled GEMM** (PR 4): per-shape GFLOP/s and the
+//!      speedup over the retired PR 3 blocked kernel (kept here as the
+//!      baseline and asserted bit-identical first), emitted as
+//!      `BENCH_pr4.json`.
 //!
 //! `METATT_BENCH_SMOKE=1` runs a fast subset with tiny iteration counts —
 //! CI uses it to catch kernel regressions (crashes, determinism breaks,
 //! pathological slowdowns) without paying full measurement cost.
 
 use metatt::adapters::{AdapterKind, AdapterSpec};
-use metatt::bench::{bench, Stats};
+use metatt::bench::{bench, save_record, Stats};
 use metatt::config::ModelPreset;
 use metatt::data::TaskId;
 use metatt::optim::AdamW;
 use metatt::runtime::{
     assemble_frozen, backend_from_env, ArtifactSpec, Backend, RefBackend, Step, StepKind,
 };
-use metatt::tensor::Tensor;
+use metatt::tensor::{matmul_into, PackScratch, Tensor, PAR_MIN_MACS};
 use metatt::tt::{dmrg_sweep, InitStrategy, MetaTt, MetaTtKind};
 use metatt::util::json::Json;
 use metatt::util::rng::Pcg64;
@@ -73,6 +79,52 @@ fn count_allocs(mut f: impl FnMut()) -> u64 {
     let before = ALLOC_COUNT.load(Ordering::SeqCst);
     f();
     ALLOC_COUNT.load(Ordering::SeqCst) - before
+}
+
+/// The retired PR 3 cache-blocked matmul, kept here as the §8 baseline
+/// (the packed register-tiled kernel replaced it in `tensor::ops`). Same
+/// row-band policy (min 8 rows, [`PAR_MIN_MACS`] gate) and the same
+/// per-element k-ascending accumulation order — which is exactly why the
+/// packed kernel must reproduce its output bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn pr3_blocked_matmul(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    use metatt::util::threadpool::{gated_threads, scope_rows, SharedSliceMut};
+    const BLOCK: usize = 64;
+    let th = gated_threads(threads, m * k * n, PAR_MIN_MACS);
+    let cs = SharedSliceMut::new(c);
+    scope_rows(th, m, 8, |r| {
+        // SAFETY: bands are disjoint row ranges of c.
+        let c_band = unsafe { cs.range_mut(r.start * n, r.end * n) };
+        let a_band = &a[r.start * k..r.end * k];
+        let mb = r.end - r.start;
+        for i0 in (0..mb).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(mb);
+            for k0 in (0..k).step_by(BLOCK) {
+                let k1 = (k0 + BLOCK).min(k);
+                for j0 in (0..n).step_by(BLOCK) {
+                    let j1 = (j0 + BLOCK).min(n);
+                    for i in i0..i1 {
+                        let crow = &mut c_band[i * n..(i + 1) * n];
+                        for kk in k0..k1 {
+                            let aik = a_band[i * k + kk];
+                            let brow = &b[kk * n..(kk + 1) * n];
+                            for j in j0..j1 {
+                                crow[j] += aik * brow[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
 }
 
 fn main() -> anyhow::Result<()> {
@@ -336,8 +388,6 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let out_path = std::env::var("METATT_BENCH_OUT")
-        .unwrap_or_else(|_| "BENCH_pr2.json".to_string());
     let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
     let doc = Json::obj(vec![
         ("bench", Json::str("hotpath_micro/threading")),
@@ -346,8 +396,8 @@ fn main() -> anyhow::Result<()> {
         ("smoke", Json::Bool(smoke)),
         ("records", Json::Arr(records)),
     ]);
-    std::fs::write(&out_path, doc.to_pretty())?;
-    println!("\n[saved] {out_path}");
+    println!();
+    save_record("pr2", &doc)?;
 
     // ---- 7. Zero-allocation hot path (PR 3): per-phase timing + allocs. --
     // Single-thread, tiny/metatt4d — the configuration the allocation
@@ -463,15 +513,83 @@ fn main() -> anyhow::Result<()> {
         ("allocs_per_step", Json::num(opt_allocs as f64)),
     ]));
 
-    let pr3_path = std::env::var("METATT_BENCH_PR3_OUT")
-        .unwrap_or_else(|_| "BENCH_pr3.json".to_string());
     let pr3_doc = Json::obj(vec![
         ("bench", Json::str("hotpath_micro/zero-alloc")),
         ("smoke", Json::Bool(smoke)),
         ("arena_speedup_fwd_bwd", Json::num(arena_speedup)),
         ("records", Json::Arr(pr3)),
     ]);
-    std::fs::write(&pr3_path, pr3_doc.to_pretty())?;
-    println!("[saved] {pr3_path}");
+    save_record("pr3", &pr3_doc)?;
+
+    // ---- 8. Packed register-tiled GEMM (PR 4) vs the PR 3 blocked kernel.
+    // Two gates ride on the measurement: the packed kernel must reproduce
+    // the retired blocked kernel bit-for-bit (identical per-element
+    // k-ascending accumulation), and the recorded `packed_speedup` tracks
+    // the register-tiling win per shape at 1 and N threads.
+    println!("\n== 8. packed GEMM (PR 4): GFLOP/s + speedup vs the PR 3 blocked kernel ==");
+    let mut pr4: Vec<Json> = Vec::new();
+    let mut packs = PackScratch::new();
+    for &(m, k, n) in &[
+        (256usize, 256usize, 256usize),
+        (512, 512, 512),
+        (768, 256, 768),
+        (1024, 256, 64), // skinny adapter-projection shape
+    ] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut c_packed = vec![0.0f32; m * n];
+        let mut c_blocked = vec![0.0f32; m * n];
+        for threads in [1usize, par_threads] {
+            c_packed.fill(0.0);
+            matmul_into(a.data(), b.data(), &mut c_packed, m, k, n, threads, &mut packs);
+            c_blocked.fill(0.0);
+            pr3_blocked_matmul(a.data(), b.data(), &mut c_blocked, m, k, n, threads);
+            assert!(
+                c_packed.iter().zip(&c_blocked).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "packed kernel drifted from the PR 3 blocked kernel ({m}x{k}x{n}, t{threads})"
+            );
+            let packed = bench(
+                &format!("packed/{m}x{k}x{n}/t{threads}"),
+                scale(3),
+                scale(15),
+                || {
+                    c_packed.fill(0.0);
+                    matmul_into(a.data(), b.data(), &mut c_packed, m, k, n, threads, &mut packs);
+                    std::hint::black_box(&c_packed);
+                },
+            );
+            let blocked = bench(
+                &format!("blocked/{m}x{k}x{n}/t{threads}"),
+                scale(3),
+                scale(15),
+                || {
+                    c_blocked.fill(0.0);
+                    pr3_blocked_matmul(a.data(), b.data(), &mut c_blocked, m, k, n, threads);
+                    std::hint::black_box(&c_blocked);
+                },
+            );
+            let flops = 2.0 * (m * k * n) as f64;
+            let speedup = blocked.p50 / packed.p50;
+            println!(
+                "   {m}x{k}x{n} t{threads}: {:.2} GFLOP/s packed vs {:.2} blocked ({speedup:.2}x)",
+                flops / packed.p50 / 1e9,
+                flops / blocked.p50 / 1e9
+            );
+            pr4.push(Json::obj(vec![
+                ("shape", Json::str(format!("{m}x{k}x{n}"))),
+                ("threads", Json::num(threads as f64)),
+                ("packed_gflops", Json::num(flops / packed.p50 / 1e9)),
+                ("blocked_gflops", Json::num(flops / blocked.p50 / 1e9)),
+                ("packed_speedup", Json::num(speedup)),
+            ]));
+        }
+    }
+    let pr4_doc = Json::obj(vec![
+        ("bench", Json::str("hotpath_micro/packed-gemm")),
+        ("threads", Json::num(par_threads as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("records", Json::Arr(pr4)),
+    ]);
+    save_record("pr4", &pr4_doc)?;
     Ok(())
 }

@@ -174,6 +174,38 @@ impl Table {
     }
 }
 
+/// Where the record `BENCH_<name>.json` lands: the working directory by
+/// default, overridable via `METATT_BENCH_<NAME>_OUT` (read-only env
+/// access — nothing here ever mutates the environment). The pr2 record
+/// also honors the pre-PR-4 spelling `METATT_BENCH_OUT`, which
+/// hotpath_micro used before emission was centralized here.
+pub fn record_path(name: &str) -> String {
+    if let Ok(p) = std::env::var(format!("METATT_BENCH_{}_OUT", name.to_uppercase())) {
+        return p;
+    }
+    if name == "pr2" {
+        if let Ok(p) = std::env::var("METATT_BENCH_OUT") {
+            return p;
+        }
+    }
+    format!("BENCH_{name}.json")
+}
+
+/// Serialize a record document to `path` (pretty JSON).
+fn write_record_to(path: &str, doc: &crate::util::json::Json) -> std::io::Result<()> {
+    std::fs::write(path, doc.to_pretty())
+}
+
+/// Persist a per-PR benchmark record at [`record_path`] and print where it
+/// landed. One helper so PR-specific bench sections share the env/path
+/// logic instead of copy-pasting it.
+pub fn save_record(name: &str, doc: &crate::util::json::Json) -> std::io::Result<()> {
+    let path = record_path(name);
+    write_record_to(&path, doc)?;
+    println!("[saved] {path}");
+    Ok(())
+}
+
 /// Format `mean(std-err-in-last-digit)` the way the paper prints metrics,
 /// e.g. 88.6(4) for 88.6 ± 0.4. Values in percent.
 pub fn paper_fmt(mean: f64, stderr: f64) -> String {
@@ -233,5 +265,20 @@ mod tests {
         assert!(Stats::fmt_time(2e-3).ends_with("ms"));
         assert!(Stats::fmt_time(2e-6).ends_with("µs"));
         assert!(Stats::fmt_time(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn record_path_and_write_round_trip() {
+        use crate::util::json::Json;
+        // Default path derivation (no env mutation: set_var in a parallel
+        // test harness races other tests' env reads).
+        assert_eq!(record_path("testrec"), "BENCH_testrec.json");
+        // The writer half, against an explicit temp path.
+        let path = std::env::temp_dir().join("metatt_bench_testrec.json");
+        let doc = Json::obj(vec![("ok", Json::Bool(true))]);
+        write_record_to(path.to_str().unwrap(), &doc).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"ok\""), "record body: {body}");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -31,11 +31,21 @@
 //! * **Per-step middle products** — the tiny r×r `mid` factors depend only
 //!   on the parameters, not the batch, so [`AdapterPre`] computes every
 //!   (layer, matrix) product once per step instead of once per apply.
-//! * **Packed frozen weights** — [`Packed`] holds one-time transposed
-//!   copies of the frozen projection/MLP/classifier weights, so the
-//!   backward `dY·Wᵀ` GEMMs run the streaming `matmul` orientation instead
-//!   of re-striding `matmul_t` every step. (Both orientations accumulate
-//!   k-ascending, so the swap is bit-exact.)
+//! **Packed GEMMs (PR 4).** Every matmul in a step runs the packed
+//! register-tiled kernel family (`tensor::ops`). Workspace-reachable call
+//! sites hand the kernels the arena's aligned pack scratch
+//! (`Workspace::packs`), so panel packing allocates nothing in steady
+//! state; the per-(batch, head) attention GEMMs execute *inside* parallel
+//! regions where the arena is unreachable and use the kernels'
+//! per-worker-thread `*_into_local` scratch instead (persistent pool
+//! workers keep it warm). Packing preserves the per-element k-ascending
+//! accumulation order, so step results are bit-identical to the PR 3
+//! blocked kernels. The kernel's pack step also absorbs operand
+//! transposes, which retired PR 3's bind-time `Packed` transposed copies
+//! of the frozen weights: backward `dY·Wᵀ` runs `matmul_t` directly on the
+//! forward-orientation chunk at full speed (and, per the long-standing
+//! contract, the exact same bits), halving per-bound-step frozen-weight
+//! memory.
 //!
 //! **Parallel execution.** Every step entry point takes a thread budget
 //! (plumbed from `--threads` via the backend). Inside a step the work is
@@ -52,8 +62,9 @@ use crate::adapters::AdapterKind;
 use crate::config::ModelPreset;
 use crate::data::{Batch, MlmBatch};
 use crate::tensor::{
-    add_into, axpy_into, matmul_into, matmul_t_into, scale_into, softmax_rows_into,
-    t_matmul_into, Tensor, Workspace,
+    add_into, axpy_into, matmul_into, matmul_into_local, matmul_t_into,
+    matmul_t_into_local, scale_into, softmax_rows_into, t_matmul_into,
+    t_matmul_into_local, Tensor, Workspace,
 };
 use crate::tt::MetaTtKind;
 use crate::util::rng::Pcg64;
@@ -203,18 +214,6 @@ fn add_block_scaled(dst: &mut Tensor, row0: usize, col0: usize, src: &Tensor, s:
     }
 }
 
-/// Transposed copy of a row-major `rows × cols` slice (→ `cols × rows`).
-fn transpose_chunk(src: &[f32], rows: usize, cols: usize) -> Tensor {
-    debug_assert_eq!(src.len(), rows * cols);
-    let mut out = Tensor::zeros(&[cols, rows]);
-    for i in 0..rows {
-        for j in 0..cols {
-            out.data_mut()[j * rows + i] = src[i * cols + j];
-        }
-    }
-    out
-}
-
 // tanh-approximate GELU (jax.nn.gelu default) and its derivative.
 const GELU_C: f32 = 0.797_884_6; // sqrt(2/π)
 const GELU_K: f32 = 0.044_715;
@@ -257,18 +256,16 @@ fn mm(ws: &mut Workspace, a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
     let n = b.shape()[b.ndim() - 1];
     debug_assert_eq!(b.len(), k * n);
     let mut out = ws.take(&[m, n]);
-    matmul_into(a.data(), b.data(), out.data_mut(), m, k, n, threads);
+    matmul_into(a.data(), b.data(), out.data_mut(), m, k, n, threads, ws.packs());
     out
 }
 
-/// `a · Wᵀ` into a workspace tensor, for a layer-chunked weight: uses the
-/// packed transpose (streaming `matmul`) when available, else the strided
-/// `matmul_t` on the raw chunk. Both orientations accumulate k-ascending,
-/// so the two paths are bit-identical.
+/// `a · Wᵀ` into a workspace tensor, for a layer-chunked weight in its
+/// forward orientation. The packed kernel's B-pack absorbs the transpose
+/// (contiguous source-row reads), so no pre-transposed copy is ever needed.
 fn mm_wt(
     ws: &mut Workspace,
     a: &Tensor,
-    packed_t: Option<&Tensor>,
     w_chunk: &[f32],
     out_cols: usize,
     threads: usize,
@@ -276,30 +273,24 @@ fn mm_wt(
     let (m, k) = (a.shape()[0], a.shape()[1]);
     debug_assert_eq!(w_chunk.len(), out_cols * k);
     let mut out = ws.take(&[m, out_cols]);
-    match packed_t {
-        Some(t) => matmul_into(a.data(), t.data(), out.data_mut(), m, k, out_cols, threads),
-        None => matmul_t_into(a.data(), w_chunk, out.data_mut(), m, k, out_cols, threads),
-    }
+    matmul_t_into(a.data(), w_chunk, out.data_mut(), m, k, out_cols, threads, ws.packs());
     out
 }
 
 /// `dst += a · Wᵀ` accumulated in place (the kernels accumulate into their
-/// output, so no temporary is needed).
+/// output, so no temporary is needed). `ws` supplies the pack scratch.
 fn acc_mm_wt(
     dst: &mut Tensor,
     a: &Tensor,
-    packed_t: Option<&Tensor>,
     w_chunk: &[f32],
     out_cols: usize,
     threads: usize,
+    ws: &mut Workspace,
 ) {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     debug_assert_eq!(dst.len(), m * out_cols);
     debug_assert_eq!(w_chunk.len(), out_cols * k);
-    match packed_t {
-        Some(t) => matmul_into(a.data(), t.data(), dst.data_mut(), m, k, out_cols, threads),
-        None => matmul_t_into(a.data(), w_chunk, dst.data_mut(), m, k, out_cols, threads),
-    }
+    matmul_t_into(a.data(), w_chunk, dst.data_mut(), m, k, out_cols, threads, ws.packs());
 }
 
 /// `s · t` into a workspace tensor.
@@ -626,75 +617,20 @@ fn dims_of(entry: &ArtifactEntry) -> Result<Dims> {
 }
 
 // ---------------------------------------------------------------------------
-// Packed frozen weights: one-time transposed copies for backward GEMMs.
-// ---------------------------------------------------------------------------
-
-/// Pre-transposed copies of the frozen encoder weights, packed once at bind
-/// time so every backward `dY·Wᵀ` runs the cache-friendly streaming
-/// orientation. Empty when the corresponding weights are trainable (full
-/// fine-tuning / pretraining) — those paths fall back to the strided
-/// `matmul_t`, exactly as before.
-#[derive(Default)]
-struct Packed {
-    wq_t: Vec<Tensor>,
-    wk_t: Vec<Tensor>,
-    wv_t: Vec<Tensor>,
-    wo_t: Vec<Tensor>,
-    w1_t: Vec<Tensor>,
-    w2_t: Vec<Tensor>,
-    /// Per-task transposed classifier heads (classes × d).
-    cls_w_t: Vec<Tensor>,
-}
-
-/// Transposed per-chunk copies of a stacked frozen array, or empty when the
-/// name is absent (trainable, or not part of this spec).
-fn pack_t(
-    frozen: &HashMap<String, Tensor>,
-    name: &str,
-    rows: usize,
-    cols: usize,
-    count: usize,
-) -> Vec<Tensor> {
-    match frozen.get(name) {
-        Some(t) if t.len() == count * rows * cols => (0..count)
-            .map(|i| {
-                transpose_chunk(&t.data()[i * rows * cols..(i + 1) * rows * cols], rows, cols)
-            })
-            .collect(),
-        _ => Vec::new(),
-    }
-}
-
-impl Packed {
-    fn build(dims: &Dims, entry: &ArtifactEntry, frozen: &HashMap<String, Tensor>) -> Packed {
-        let (d, f, l) = (dims.d, dims.f, dims.l);
-        let tasks = entry.spec.tasks.max(1);
-        Packed {
-            wq_t: pack_t(frozen, "wq", d, d, l),
-            wk_t: pack_t(frozen, "wk", d, d, l),
-            wv_t: pack_t(frozen, "wv", d, d, l),
-            wo_t: pack_t(frozen, "wo", d, d, l),
-            w1_t: pack_t(frozen, "w1", d, f, l),
-            w2_t: pack_t(frozen, "w2", f, d, l),
-            cls_w_t: pack_t(frozen, "cls_w", d, dims.classes, tasks),
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
 // Step scratch: everything a bound step reuses across calls.
 // ---------------------------------------------------------------------------
 
-/// Per-bound-step reusable state: the workspace arena, the weight-name and
-/// gradient-name indices, the packed transposed frozen weights, the
-/// persistent adapter-precompute containers, and the pooled layer-cache
-/// vector. Owned by the backend's step behind a mutex; after a one-step
-/// warmup, running a step against this scratch allocates nothing.
+/// Per-bound-step reusable state: the workspace arena (which owns the GEMM
+/// pack scratch), the weight-name and gradient-name indices, the persistent
+/// adapter-precompute containers, and the pooled layer-cache vector. Owned
+/// by the backend's step behind a mutex; after a one-step warmup, running a
+/// step against this scratch allocates nothing. (PR 3's bind-time
+/// transposed frozen-weight copies are gone: the packed kernel's B-pack
+/// absorbs the backward transpose at full speed, bit-identically.)
 pub struct StepScratch {
     ws: Workspace,
     index: HashMap<String, WeightSlot>,
     grad_index: HashMap<String, usize>,
-    packed: Packed,
     pre: AdapterPre,
     layers: Vec<LayerCache>,
     /// Per-row f64 loss terms of the MLM objective (f64 lives outside the
@@ -703,12 +639,11 @@ pub struct StepScratch {
 }
 
 impl StepScratch {
-    pub fn new(
-        entry: &ArtifactEntry,
-        frozen: &HashMap<String, Tensor>,
-        arena: bool,
-    ) -> Result<StepScratch> {
-        let dims = dims_of(entry)?;
+    pub fn new(entry: &ArtifactEntry, arena: bool) -> Result<StepScratch> {
+        // Validates the spec's model preset at bind time (the historical
+        // bind contract), even though the dims themselves are re-derived
+        // per step call.
+        dims_of(entry)?;
         let mut index = HashMap::new();
         for io in entry.frozen_inputs() {
             index.insert(io.name.clone(), WeightSlot::Frozen);
@@ -726,7 +661,6 @@ impl StepScratch {
             ws: Workspace::new(arena),
             index,
             grad_index,
-            packed: Packed::build(&dims, entry, frozen),
             pre: AdapterPre::default(),
             layers: Vec::new(),
             row_loss: Vec::new(),
@@ -787,7 +721,7 @@ impl AdapterPre {
                     for m in 0..matrices {
                         let g3m = &g3.data()[m * rr..(m + 1) * rr];
                         let mut mid = ws.take(&[r, r]);
-                        matmul_into(g2l, g3m, mid.data_mut(), r, r, r, 1);
+                        matmul_into(g2l, g3m, mid.data_mut(), r, r, r, 1, ws.packs());
                         self.mids.push(mid);
                     }
                 }
@@ -799,18 +733,18 @@ impl AdapterPre {
                     for m in 0..matrices {
                         let cc = &g4.data()[m * rr..(m + 1) * rr];
                         let mut bcm = ws.take(&[r, r]);
-                        matmul_into(cb, cc, bcm.data_mut(), r, r, r, 1);
+                        matmul_into(cb, cc, bcm.data_mut(), r, r, r, 1, ws.packs());
                         self.bc.push(bcm);
                     }
                 }
                 for l in 0..dims.l {
                     let ca = &g2.data()[l * rr..(l + 1) * rr];
                     let mut abl = ws.take(&[r, r]);
-                    matmul_into(ca, cb, abl.data_mut(), r, r, r, 1);
+                    matmul_into(ca, cb, abl.data_mut(), r, r, r, 1, ws.packs());
                     for m in 0..matrices {
                         let cc = &g4.data()[m * rr..(m + 1) * rr];
                         let mut mid = ws.take(&[r, r]);
-                        matmul_into(abl.data(), cc, mid.data_mut(), r, r, r, 1);
+                        matmul_into(abl.data(), cc, mid.data_mut(), r, r, r, 1, ws.packs());
                         self.mids.push(mid);
                     }
                     if train {
@@ -845,7 +779,7 @@ impl AdapterPre {
 
     /// Return the per-step tensors to the workspace, keeping the containers
     /// for the next step (VeRA's frozen projections persist — they are
-    /// step-invariant constants, like the packed weights).
+    /// step-invariant constants).
     fn recycle_into(&mut self, ws: &mut Workspace) {
         for t in self.mids.drain(..) {
             ws.recycle(t);
@@ -914,7 +848,7 @@ impl<'a> AdapterCtx<'a> {
                 for (m, out) in [(0usize, &mut *q), (1, &mut *v)] {
                     let mid = &self.pre.mids[layer * self.matrices + m];
                     let mut xgm = ws.take(&[n, r]);
-                    matmul_into(xg1.data(), mid.data(), xgm.data_mut(), n, r, r, 1);
+                    matmul_into(xg1.data(), mid.data(), xgm.data_mut(), n, r, r, 1, ws.packs());
                     let delta = mm(ws, &xgm, g_last, th); // (n, d)
                     axpy_into(out.data_mut(), a, delta.data());
                     ws.recycle(delta);
@@ -938,13 +872,13 @@ impl<'a> AdapterCtx<'a> {
                 for (m, out) in [(0usize, &mut *q), (1, &mut *v)] {
                     let lm = &self.pre.mids[layer * self.matrices + m];
                     let mut xlm = ws.take(&[n, r]);
-                    matmul_into(xg1.data(), lm.data(), xlm.data_mut(), n, r, r, 1);
+                    matmul_into(xg1.data(), lm.data(), xlm.data_mut(), n, r, r, 1, ws.packs());
                     let mut xh = ws.take(&[self.heads, n, r]);
                     for hh in 0..self.heads {
                         let g4h = &g4.data()[hh * rr..(hh + 1) * rr];
                         {
                             let blk = &mut xh.data_mut()[hh * n * r..(hh + 1) * n * r];
-                            matmul_into(xlm.data(), g4h, blk, n, r, r, 1);
+                            matmul_into(xlm.data(), g4h, blk, n, r, r, 1, ws.packs());
                         }
                         let mut y = ws.take(&[n, dh]);
                         matmul_into(
@@ -955,6 +889,7 @@ impl<'a> AdapterCtx<'a> {
                             r,
                             dh,
                             th,
+                            ws.packs(),
                         );
                         add_block_scaled(out, 0, hh * dh, &y, a);
                         ws.recycle(y);
@@ -978,9 +913,9 @@ impl<'a> AdapterCtx<'a> {
                     let am = &pa.data()[idx * d * r..(idx + 1) * d * r];
                     let bm = &pb.data()[idx * r * d..(idx + 1) * r * d];
                     let mut xa = ws.take(&[n, r]);
-                    matmul_into(x.data(), am, xa.data_mut(), n, d, r, th);
+                    matmul_into(x.data(), am, xa.data_mut(), n, d, r, th, ws.packs());
                     let mut delta = ws.take(&[n, d]);
-                    matmul_into(xa.data(), bm, delta.data_mut(), n, r, d, th);
+                    matmul_into(xa.data(), bm, delta.data_mut(), n, r, d, th, ws.packs());
                     axpy_into(out.data_mut(), a, delta.data());
                     ws.recycle(delta);
                     xa_c[m] = Some(xa);
@@ -1019,7 +954,7 @@ impl<'a> AdapterCtx<'a> {
                     let idx = layer * self.matrices + m;
                     let sm = &sall.data()[idx * rr..(idx + 1) * rr];
                     let mut xus = ws.take(&[n, r]);
-                    matmul_into(xu.data(), sm, xus.data_mut(), n, r, r, 1);
+                    matmul_into(xu.data(), sm, xus.data_mut(), n, r, r, 1, ws.packs());
                     let delta = mm(ws, &xus, vmat, th);
                     axpy_into(out.data_mut(), a, delta.data());
                     ws.recycle(delta);
@@ -1075,12 +1010,13 @@ impl<'a> AdapterCtx<'a> {
                         n,
                         d,
                         th,
+                        ws.packs(),
                     );
                     let mut dxgm = ws.take(&[n, r]);
-                    matmul_t_into(dya.data(), g4.data(), dxgm.data_mut(), n, d, r, th);
+                    matmul_t_into(dya.data(), g4.data(), dxgm.data_mut(), n, d, r, th, ws.packs());
                     ws.recycle(dya);
                     let mut dmid = ws.take(&[r, r]);
-                    t_matmul_into(xg1.data(), dxgm.data(), dmid.data_mut(), r, n, r, th);
+                    t_matmul_into(xg1.data(), dxgm.data(), dmid.data_mut(), r, n, r, th, ws.packs());
                     let g3m = &g3.data()[m * rr..(m + 1) * rr];
                     matmul_t_into(
                         dmid.data(),
@@ -1090,6 +1026,7 @@ impl<'a> AdapterCtx<'a> {
                         r,
                         r,
                         1,
+                        ws.packs(),
                     );
                     let g2l = &g2.data()[layer * rr..(layer + 1) * rr];
                     t_matmul_into(
@@ -1100,10 +1037,11 @@ impl<'a> AdapterCtx<'a> {
                         r,
                         r,
                         1,
+                        ws.packs(),
                     );
                     ws.recycle(dmid);
                     let mid = &self.pre.mids[layer * self.matrices + m];
-                    matmul_t_into(dxgm.data(), mid.data(), dxg1.data_mut(), n, r, r, 1);
+                    matmul_t_into(dxgm.data(), mid.data(), dxg1.data_mut(), n, r, r, 1, ws.packs());
                     ws.recycle(dxgm);
                 }
                 // Fused tail: one xᵀ·dxg1 and one dxg1·G1ᵀ for both matrices.
@@ -1115,8 +1053,9 @@ impl<'a> AdapterCtx<'a> {
                     n,
                     r,
                     th,
+                    ws.packs(),
                 );
-                matmul_t_into(dxg1.data(), g1.data(), dx.data_mut(), n, r, d, th);
+                matmul_t_into(dxg1.data(), g1.data(), dx.data_mut(), n, r, d, th, ws.packs());
                 ws.recycle(dxg1);
             }
             (
@@ -1135,12 +1074,13 @@ impl<'a> AdapterCtx<'a> {
                         n,
                         d,
                         th,
+                        ws.packs(),
                     );
                     let mut dxgm = ws.take(&[n, r]);
-                    matmul_t_into(dya.data(), g5.data(), dxgm.data_mut(), n, d, r, th);
+                    matmul_t_into(dya.data(), g5.data(), dxgm.data_mut(), n, d, r, th, ws.packs());
                     ws.recycle(dya);
                     let mut dmid = ws.take(&[r, r]);
-                    t_matmul_into(xg1.data(), dxgm.data(), dmid.data_mut(), r, n, r, th);
+                    t_matmul_into(xg1.data(), dxgm.data(), dmid.data_mut(), r, n, r, th, ws.packs());
                     // g2[l] += dmid·bc[m]ᵀ
                     matmul_t_into(
                         dmid.data(),
@@ -1150,12 +1090,13 @@ impl<'a> AdapterCtx<'a> {
                         r,
                         r,
                         1,
+                        ws.packs(),
                     );
                     // g3[t] += ca[l]ᵀ·dmid·cc[m]ᵀ (two r×r products)
                     let ca = &self.params[1].data()[layer * rr..(layer + 1) * rr];
                     let cc = &self.params[3].data()[m * rr..(m + 1) * rr];
                     let mut tmp = ws.take(&[r, r]);
-                    t_matmul_into(ca, dmid.data(), tmp.data_mut(), r, r, r, 1);
+                    t_matmul_into(ca, dmid.data(), tmp.data_mut(), r, r, r, 1, ws.packs());
                     matmul_t_into(
                         tmp.data(),
                         cc,
@@ -1164,6 +1105,7 @@ impl<'a> AdapterCtx<'a> {
                         r,
                         r,
                         1,
+                        ws.packs(),
                     );
                     ws.recycle(tmp);
                     // g4[m] += ab[l]ᵀ·dmid
@@ -1175,10 +1117,11 @@ impl<'a> AdapterCtx<'a> {
                         r,
                         r,
                         1,
+                        ws.packs(),
                     );
                     ws.recycle(dmid);
                     let mid = &self.pre.mids[layer * self.matrices + m];
-                    matmul_t_into(dxgm.data(), mid.data(), dxg1.data_mut(), n, r, r, 1);
+                    matmul_t_into(dxgm.data(), mid.data(), dxg1.data_mut(), n, r, r, 1, ws.packs());
                     ws.recycle(dxgm);
                 }
                 t_matmul_into(
@@ -1189,8 +1132,9 @@ impl<'a> AdapterCtx<'a> {
                     n,
                     r,
                     th,
+                    ws.packs(),
                 );
-                matmul_t_into(dxg1.data(), g1.data(), dx.data_mut(), n, r, d, th);
+                matmul_t_into(dxg1.data(), g1.data(), dx.data_mut(), n, r, d, th, ws.packs());
                 ws.recycle(dxg1);
             }
             (
@@ -1222,9 +1166,10 @@ impl<'a> AdapterCtx<'a> {
                             n,
                             dh,
                             th,
+                            ws.packs(),
                         );
                         let mut dxh = ws.take(&[n, r]);
-                        matmul_t_into(dyh.data(), g5.data(), dxh.data_mut(), n, dh, r, th);
+                        matmul_t_into(dyh.data(), g5.data(), dxh.data_mut(), n, dh, r, th, ws.packs());
                         ws.recycle(dyh);
                         t_matmul_into(
                             xlm.data(),
@@ -1234,14 +1179,15 @@ impl<'a> AdapterCtx<'a> {
                             n,
                             r,
                             th,
+                            ws.packs(),
                         );
                         let g4h = &g4.data()[hh * rr..(hh + 1) * rr];
-                        matmul_t_into(dxh.data(), g4h, dxlm.data_mut(), n, r, r, 1);
+                        matmul_t_into(dxh.data(), g4h, dxlm.data_mut(), n, r, r, 1, ws.packs());
                         ws.recycle(dxh);
                     }
                     ws.recycle(dya);
                     let mut dlm = ws.take(&[r, r]);
-                    t_matmul_into(xg1.data(), dxlm.data(), dlm.data_mut(), r, n, r, th);
+                    t_matmul_into(xg1.data(), dxlm.data(), dlm.data_mut(), r, n, r, th, ws.packs());
                     let g3m = &g3.data()[m * rr..(m + 1) * rr];
                     matmul_t_into(
                         dlm.data(),
@@ -1251,6 +1197,7 @@ impl<'a> AdapterCtx<'a> {
                         r,
                         r,
                         1,
+                        ws.packs(),
                     );
                     let g2l = &g2.data()[layer * rr..(layer + 1) * rr];
                     t_matmul_into(
@@ -1261,10 +1208,11 @@ impl<'a> AdapterCtx<'a> {
                         r,
                         r,
                         1,
+                        ws.packs(),
                     );
                     ws.recycle(dlm);
                     let lm = &self.pre.mids[layer * self.matrices + m];
-                    matmul_t_into(dxlm.data(), lm.data(), dxg1.data_mut(), n, r, r, 1);
+                    matmul_t_into(dxlm.data(), lm.data(), dxg1.data_mut(), n, r, r, 1, ws.packs());
                     ws.recycle(dxlm);
                 }
                 t_matmul_into(
@@ -1275,8 +1223,9 @@ impl<'a> AdapterCtx<'a> {
                     n,
                     r,
                     th,
+                    ws.packs(),
                 );
-                matmul_t_into(dxg1.data(), g1.data(), dx.data_mut(), n, r, d, th);
+                matmul_t_into(dxg1.data(), g1.data(), dx.data_mut(), n, r, d, th, ws.packs());
                 ws.recycle(dxg1);
             }
             (Some(AdapterKind::LoRa), PairCache::Lora { xa_q, xa_v }) => {
@@ -1294,9 +1243,10 @@ impl<'a> AdapterCtx<'a> {
                         n,
                         d,
                         th,
+                        ws.packs(),
                     );
                     let mut dxa = ws.take(&[n, r]);
-                    matmul_t_into(dya.data(), bm, dxa.data_mut(), n, d, r, th);
+                    matmul_t_into(dya.data(), bm, dxa.data_mut(), n, d, r, th, ws.packs());
                     ws.recycle(dya);
                     t_matmul_into(
                         x.data(),
@@ -1306,8 +1256,9 @@ impl<'a> AdapterCtx<'a> {
                         n,
                         r,
                         th,
+                        ws.packs(),
                     );
-                    matmul_t_into(dxa.data(), am, dx.data_mut(), n, r, d, th);
+                    matmul_t_into(dxa.data(), am, dx.data_mut(), n, r, d, th, ws.packs());
                     ws.recycle(dxa);
                 }
             }
@@ -1323,14 +1274,14 @@ impl<'a> AdapterCtx<'a> {
                     let dtb = mul_cols_ws(ws, &dya, bvec);
                     ws.recycle(dya);
                     let mut dt = ws.take(&[n, r]);
-                    matmul_t_into(dtb.data(), fb.data(), dt.data_mut(), n, d, r, th);
+                    matmul_t_into(dtb.data(), fb.data(), dt.data_mut(), n, d, r, th, ws.packs());
                     ws.recycle(dtb);
                     colsum_mul_acc(&dt, xa, sink.chunk_mut("vera_d", idx * r, r));
                     acc_mul_cols(&mut dsum, &dt, dvec);
                     ws.recycle(dt);
                 }
                 // Fused: dx += (Σ_m dt_m ∘ d_m)·Aᵀ — one GEMM for both.
-                matmul_t_into(dsum.data(), fa.data(), dx.data_mut(), n, r, d, th);
+                matmul_t_into(dsum.data(), fa.data(), dx.data_mut(), n, r, d, th, ws.packs());
                 ws.recycle(dsum);
             }
             (Some(AdapterKind::LoTr), PairCache::Lotr { xu, xus_q, xus_v }) => {
@@ -1348,9 +1299,10 @@ impl<'a> AdapterCtx<'a> {
                         n,
                         d,
                         th,
+                        ws.packs(),
                     );
                     let mut dxus = ws.take(&[n, r]);
-                    matmul_t_into(dya.data(), vmat.data(), dxus.data_mut(), n, d, r, th);
+                    matmul_t_into(dya.data(), vmat.data(), dxus.data_mut(), n, d, r, th, ws.packs());
                     ws.recycle(dya);
                     t_matmul_into(
                         xu.data(),
@@ -1360,8 +1312,9 @@ impl<'a> AdapterCtx<'a> {
                         n,
                         r,
                         th,
+                        ws.packs(),
                     );
-                    matmul_t_into(dxus.data(), sm, dxu.data_mut(), n, r, r, 1);
+                    matmul_t_into(dxus.data(), sm, dxu.data_mut(), n, r, r, 1, ws.packs());
                     ws.recycle(dxus);
                 }
                 // Fused: one xᵀ·dxu and one dxu·Uᵀ for both matrices.
@@ -1373,8 +1326,9 @@ impl<'a> AdapterCtx<'a> {
                     n,
                     r,
                     th,
+                    ws.packs(),
                 );
-                matmul_t_into(dxu.data(), u.data(), dx.data_mut(), n, r, d, th);
+                matmul_t_into(dxu.data(), u.data(), dx.data_mut(), n, r, d, th, ws.packs());
                 ws.recycle(dxu);
             }
             (kind, _) => panic!("adapter cache mismatch for {kind:?}"),
@@ -1507,7 +1461,9 @@ fn attention_forward(
             let v_blk = &vs[pair * s * dh..(pair + 1) * s * dh];
             // SAFETY: each pair owns its flat probs / ctx blocks.
             let p_blk = unsafe { ps.range_mut(pair * s * s, (pair + 1) * s * s) };
-            matmul_t_into(q_blk, k_blk, p_blk, s, dh, s, 1);
+            // In-region GEMMs use the per-worker pack scratch: the arena
+            // lives outside this parallel region.
+            matmul_t_into_local(q_blk, k_blk, p_blk, s, dh, s, 1);
             scale_into(p_blk, inv_sqrt_dh);
             for key in 0..s {
                 if tokens[bi * s + key] == PAD_ID {
@@ -1518,7 +1474,7 @@ fn attention_forward(
             }
             softmax_rows_into(p_blk, s, s);
             let c_blk = unsafe { cs.range_mut(pair * s * dh, (pair + 1) * s * dh) };
-            matmul_into(p_blk, v_blk, c_blk, s, s, dh, 1);
+            matmul_into_local(p_blk, v_blk, c_blk, s, s, dh, 1);
         });
     }
     ws.recycle(qh);
@@ -1578,9 +1534,10 @@ fn attention_backward(
             let dq_blk = unsafe { dqs.range_mut(pair * s * dh, (pair + 1) * s * dh) };
             let dk_blk = unsafe { dks.range_mut(pair * s * dh, (pair + 1) * s * dh) };
             let dv_blk = unsafe { dvs.range_mut(pair * s * dh, (pair + 1) * s * dh) };
-            // d_probs = d_ctx_h · vhᵀ ; d_vh = probsᵀ · d_ctx_h.
-            matmul_t_into(dc_blk, v_blk, ds_blk, s, dh, s, 1);
-            t_matmul_into(p_blk, dc_blk, dv_blk, s, s, dh, 1);
+            // d_probs = d_ctx_h · vhᵀ ; d_vh = probsᵀ · d_ctx_h. (Per-worker
+            // pack scratch: the arena lives outside this parallel region.)
+            matmul_t_into_local(dc_blk, v_blk, ds_blk, s, dh, s, 1);
+            t_matmul_into_local(p_blk, dc_blk, dv_blk, s, s, dh, 1);
             // Softmax backward, row-wise, in place over d_probs.
             for qi in 0..s {
                 let pr = &p_blk[qi * s..(qi + 1) * s];
@@ -1591,9 +1548,9 @@ fn attention_backward(
                 }
             }
             // d_qh = d_scores·kh·s ; d_kh = d_scoresᵀ·qh·s.
-            matmul_into(ds_blk, k_blk, dq_blk, s, s, dh, 1);
+            matmul_into_local(ds_blk, k_blk, dq_blk, s, s, dh, 1);
             scale_into(dq_blk, inv_sqrt_dh);
-            t_matmul_into(ds_blk, q_blk, dk_blk, s, s, dh, 1);
+            t_matmul_into_local(ds_blk, q_blk, dk_blk, s, s, dh, 1);
             scale_into(dk_blk, inv_sqrt_dh);
         });
     }
@@ -1691,13 +1648,13 @@ fn project_qkv(
 ) -> (Tensor, Tensor, Tensor, PairCache) {
     let Dims { n, d, .. } = *dims;
     let mut q = ws.take(&[n, d]);
-    matmul_into(x_in.data(), w.chunk("wq", layer, d * d), q.data_mut(), n, d, d, threads);
+    matmul_into(x_in.data(), w.chunk("wq", layer, d * d), q.data_mut(), n, d, d, threads, ws.packs());
     add_row_bias(&mut q, w.row("bq", layer, d));
     let mut k = ws.take(&[n, d]);
-    matmul_into(x_in.data(), w.chunk("wk", layer, d * d), k.data_mut(), n, d, d, threads);
+    matmul_into(x_in.data(), w.chunk("wk", layer, d * d), k.data_mut(), n, d, d, threads, ws.packs());
     add_row_bias(&mut k, w.row("bk", layer, d));
     let mut v = ws.take(&[n, d]);
-    matmul_into(x_in.data(), w.chunk("wv", layer, d * d), v.data_mut(), n, d, d, threads);
+    matmul_into(x_in.data(), w.chunk("wv", layer, d * d), v.data_mut(), n, d, d, threads, ws.packs());
     add_row_bias(&mut v, w.row("bv", layer, d));
     let pair = adapter.apply_pair(ws, x_in, layer, &mut q, &mut v);
     (q, k, v, pair)
@@ -1738,6 +1695,7 @@ fn encoder_forward(
             d,
             d,
             threads,
+            ws.packs(),
         );
         add_row_bias(&mut attn_out, w.row("bo", layer, d));
         let res1 = add_ws(ws, &x_in, &attn_out);
@@ -1757,6 +1715,7 @@ fn encoder_forward(
             d,
             f,
             threads,
+            ws.packs(),
         );
         add_row_bias(&mut u, w.row("b1", layer, f));
         let g = gelu_ws(ws, &u, threads);
@@ -1769,6 +1728,7 @@ fn encoder_forward(
             f,
             d,
             threads,
+            ws.packs(),
         );
         add_row_bias(&mut m_out, w.row("b2", layer, d));
         let res2 = add_ws(ws, &x_mid, &m_out);
@@ -1816,6 +1776,7 @@ fn encoder_forward_infer(
             d,
             d,
             threads,
+            ws.packs(),
         );
         add_row_bias(&mut attn_out, w.row("bo", layer, d));
         ws.recycle(ctx);
@@ -1835,6 +1796,7 @@ fn encoder_forward_infer(
             d,
             f,
             threads,
+            ws.packs(),
         );
         add_row_bias(&mut u, w.row("b1", layer, f));
         let g = gelu_ws(ws, &u, threads);
@@ -1848,6 +1810,7 @@ fn encoder_forward_infer(
             f,
             d,
             threads,
+            ws.packs(),
         );
         add_row_bias(&mut m_out, w.row("b2", layer, d));
         ws.recycle(g);
@@ -1876,7 +1839,6 @@ fn encoder_backward(
     dims: &Dims,
     w: &Weights,
     adapter: &AdapterCtx,
-    packed: &Packed,
     tokens: &[i32],
     layers: &mut Vec<LayerCache>,
     emb_ln: LnCache,
@@ -1914,10 +1876,11 @@ fn encoder_backward(
                 n,
                 d,
                 threads,
+                ws.packs(),
             );
             colsum_acc(&d_res2, sink.chunk_mut("b2", layer * d, d));
         }
-        let mut dgelu = mm_wt(ws, &d_res2, packed.w2_t.get(layer), w2c, f, threads);
+        let mut dgelu = mm_wt(ws, &d_res2, w2c, f, threads);
         {
             let dgs = SharedSliceMut::new(dgelu.data_mut());
             let us = lc.u.data();
@@ -1938,12 +1901,13 @@ fn encoder_backward(
                 n,
                 f,
                 threads,
+                ws.packs(),
             );
             colsum_acc(&dgelu, sink.chunk_mut("b1", layer * f, f));
         }
         let mut d_xmid = ws.take(&[n, d]);
         d_xmid.data_mut().copy_from_slice(d_res2.data());
-        acc_mm_wt(&mut d_xmid, &dgelu, packed.w1_t.get(layer), w1c, d, threads);
+        acc_mm_wt(&mut d_xmid, &dgelu, w1c, d, threads, ws);
         ws.recycle(d_res2);
         ws.recycle(dgelu);
 
@@ -1968,10 +1932,11 @@ fn encoder_backward(
                 n,
                 d,
                 threads,
+                ws.packs(),
             );
             colsum_acc(&d_res1, sink.chunk_mut("bo", layer * d, d));
         }
-        let d_ctx = mm_wt(ws, &d_res1, packed.wo_t.get(layer), woc, d, threads);
+        let d_ctx = mm_wt(ws, &d_res1, woc, d, threads);
 
         // --- Attention backward per (batch, head).
         let (dq, dk, dv) =
@@ -1983,9 +1948,9 @@ fn encoder_backward(
         let wkc = w.chunk("wk", layer, d * d);
         let wvc = w.chunk("wv", layer, d * d);
         let mut d_xin = d_res1; // residual branch seeds the accumulator
-        acc_mm_wt(&mut d_xin, &dq, packed.wq_t.get(layer), wqc, d, threads);
-        acc_mm_wt(&mut d_xin, &dk, packed.wk_t.get(layer), wkc, d, threads);
-        acc_mm_wt(&mut d_xin, &dv, packed.wv_t.get(layer), wvc, d, threads);
+        acc_mm_wt(&mut d_xin, &dq, wqc, d, threads, ws);
+        acc_mm_wt(&mut d_xin, &dk, wkc, d, threads, ws);
+        acc_mm_wt(&mut d_xin, &dv, wvc, d, threads, ws);
         if train_encoder {
             t_matmul_into(
                 lc.x_in.data(),
@@ -1995,6 +1960,7 @@ fn encoder_backward(
                 n,
                 d,
                 threads,
+                ws.packs(),
             );
             colsum_acc(&dq, sink.chunk_mut("bq", layer * d, d));
             t_matmul_into(
@@ -2005,6 +1971,7 @@ fn encoder_backward(
                 n,
                 d,
                 threads,
+                ws.packs(),
             );
             colsum_acc(&dk, sink.chunk_mut("bk", layer * d, d));
             t_matmul_into(
@@ -2015,6 +1982,7 @@ fn encoder_backward(
                 n,
                 d,
                 threads,
+                ws.packs(),
             );
             colsum_acc(&dv, sink.chunk_mut("bv", layer * d, d));
         }
@@ -2067,7 +2035,7 @@ fn head_logits(
         pooled.data_mut()[bi * d..(bi + 1) * d].copy_from_slice(src);
     }
     let mut logits = ws.take(&[b, classes]);
-    matmul_into(pooled.data(), cls_w, logits.data_mut(), b, d, classes, threads);
+    matmul_into(pooled.data(), cls_w, logits.data_mut(), b, d, classes, threads, ws.packs());
     add_row_bias(&mut logits, cls_b);
     ws.recycle(pooled);
     logits
@@ -2149,7 +2117,7 @@ pub fn train_step(
     let task = task_id as usize;
     let kind = adapter_kind_of(entry)?;
     let train_encoder = entry.spec.adapter == "full";
-    let StepScratch { ws, index, grad_index, packed, pre, layers, .. } = scratch;
+    let StepScratch { ws, index, grad_index, pre, layers, .. } = scratch;
     let w = Weights { index: &*index, frozen, trainable };
     pre.fill(kind, &dims, trainable, entry.spec.rank, task, 2, true, ws);
     let adapter = AdapterCtx {
@@ -2173,7 +2141,7 @@ pub fn train_step(
 
     // Head is frozen: only ∂/∂pooled flows back, scattered into CLS rows.
     let cls_chunk = w.chunk("cls_w", task, dims.d * dims.classes);
-    let d_pooled = mm_wt(ws, &dlogits, packed.cls_w_t.get(task), cls_chunk, dims.d, threads);
+    let d_pooled = mm_wt(ws, &dlogits, cls_chunk, dims.d, threads);
     ws.recycle(dlogits);
     let mut d_hidden = ws.take(&[dims.n, dims.d]);
     for bi in 0..dims.b {
@@ -2188,7 +2156,6 @@ pub fn train_step(
         &dims,
         &w,
         &adapter,
-        packed,
         &batch.tokens,
         layers,
         emb_ln,
@@ -2254,7 +2221,7 @@ pub fn pretrain_step(
 ) -> Result<(f32, Vec<Tensor>)> {
     validate_batch(entry, batch.batch_size, batch.seq_len)?;
     let dims = dims_of(entry)?;
-    let StepScratch { ws, index, grad_index, packed, pre, layers, row_loss } = scratch;
+    let StepScratch { ws, index, grad_index, pre, layers, row_loss } = scratch;
     let w = Weights { index: &*index, frozen, trainable };
     let adapter = AdapterCtx {
         kind: None,
@@ -2277,7 +2244,7 @@ pub fn pretrain_step(
     let tok_emb = w.get("tok_emb"); // (v, d)
     let (n, v, d) = (dims.n, dims.v, dims.d);
     let mut logits = ws.take(&[n, v]);
-    matmul_t_into(hidden.data(), tok_emb.data(), logits.data_mut(), n, d, v, threads);
+    matmul_t_into(hidden.data(), tok_emb.data(), logits.data_mut(), n, d, v, threads, ws.packs());
     let wsum: f32 = batch.weights.iter().sum::<f32>().max(1e-6);
     let mut dlogits = ws.take(&[n, v]);
     row_loss.clear();
@@ -2326,6 +2293,7 @@ pub fn pretrain_step(
         n,
         d,
         threads,
+        ws.packs(),
     );
     ws.recycle(dlogits);
     ws.recycle(hidden);
@@ -2333,7 +2301,6 @@ pub fn pretrain_step(
         &dims,
         &w,
         &adapter,
-        packed,
         &batch.tokens,
         layers,
         emb_ln,
@@ -2389,12 +2356,13 @@ pub fn apply_step(
     Ok(vec![y])
 }
 
-/// Final apply GEMM into a plain (escaping) tensor.
+/// Final apply GEMM into a plain (escaping) tensor (per-thread pack
+/// scratch: the output allocates anyway, and no workspace is in scope).
 fn inputs_mm_out(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let n = b.shape()[b.ndim() - 1];
     let mut out = Tensor::zeros(&[m, n]);
-    matmul_into(a.data(), b.data(), out.data_mut(), m, k, n, threads);
+    matmul_into_local(a.data(), b.data(), out.data_mut(), m, k, n, threads);
     out
 }
 
@@ -2473,19 +2441,6 @@ mod tests {
         assert_eq!(dst.at(2, 4), 2.0 * m.at(2, 4));
         assert_eq!(dst.at(4, 8), 2.0 * m.at(4, 8));
         assert_eq!(dst.at(0, 0), 0.0);
-    }
-
-    #[test]
-    fn transpose_chunk_roundtrips() {
-        let mut rng = Pcg64::new(3);
-        let m = Tensor::randn(&[4, 7], 1.0, &mut rng);
-        let t = transpose_chunk(m.data(), 4, 7);
-        assert_eq!(t.shape(), &[7, 4]);
-        for i in 0..4 {
-            for j in 0..7 {
-                assert_eq!(t.at(j, i), m.at(i, j));
-            }
-        }
     }
 
     #[test]

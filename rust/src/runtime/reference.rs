@@ -135,12 +135,15 @@ impl Backend for RefBackend {
             }
         }
         self.bound.lock().unwrap().insert(spec.stem());
-        // One-time per-bind work: weight-name indices, packed transposed
-        // frozen weights for the backward GEMM orientation, and the step's
-        // workspace arena. Refcount bump only for the frozen map itself —
-        // the backbone is shared across every bound step (train + eval
-        // runners, all DMRG ranks).
-        let scratch = encoder::StepScratch::new(&entry, frozen, self.arena)?;
+        // One-time per-bind work: weight-name indices and the step's
+        // workspace arena — which owns the aligned pack scratch the packed
+        // GEMM kernels check their A/B panel buffers out of, so a warmed
+        // step packs without allocating. (No transposed frozen-weight
+        // copies anymore: the kernel's pack step absorbs the backward
+        // transpose bit-identically.) Refcount bump only for the frozen
+        // map itself — the backbone is shared across every bound step
+        // (train + eval runners, all DMRG ranks).
+        let scratch = encoder::StepScratch::new(&entry, self.arena)?;
         Ok(Box::new(RefStep {
             entry,
             frozen: Arc::clone(frozen),

@@ -1,18 +1,21 @@
 //! Dense f32 tensor substrate.
 //!
 //! The rust side of the stack needs host-side numerics for everything the
-//! HLO artifacts do *not* cover: the DMRG sweep (merge / SVD / truncate /
-//! re-split of TT cores), optimizer state, adapter materialization checks,
-//! and metric computation. This module provides a small row-major ND array
-//! with the operations those consumers use. It is deliberately not a BLAS —
-//! the hot numerical path of training lives in the AOT-compiled XLA
-//! artifacts; host tensors touch only adapter-sized data (KBs to low MBs).
+//! HLO artifacts do *not* cover — and, since the pure-rust reference
+//! backend became the default executor, for the full training hot path
+//! too: the DMRG sweep (merge / SVD / truncate / re-split of TT cores),
+//! optimizer state, adapter materialization checks, metric computation,
+//! and every encoder GEMM. The matmul family is a packed register-tiled
+//! (BLIS-style) kernel (`ops`), its panel scratch comes 64-byte-aligned
+//! from the step workspace arena (`workspace`), and both preserve the
+//! crate-wide bit-determinism contract: thread count, arena mode, and
+//! packing change *where* work runs, never a single output bit.
 
 mod ops;
 mod workspace;
 
 pub use ops::*;
-pub use workspace::Workspace;
+pub use workspace::{AlignedBuf, PackScratch, Workspace};
 
 /// Row-major dense f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

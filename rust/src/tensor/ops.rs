@@ -1,39 +1,128 @@
-//! Tensor operations: matmul family, transpose, elementwise, reductions.
+//! Tensor operations: the packed GEMM family, blocked transpose,
+//! elementwise ops, reductions.
 //!
-//! The matmul family (`matmul`, `matmul_t`, `t_matmul`) is one cache-blocked
-//! kernel family (`matmul_into` / `matmul_t_into` / `t_matmul_into`): every
-//! variant tiles for L1/L2 reuse and, above [`PAR_MIN_MACS`] multiply-adds,
-//! splits contiguous *row bands* of the output across the scoped thread
-//! pool. Each output row is produced by exactly one worker with a fixed
-//! k-tile accumulation order, so results are bit-identical for any thread
-//! count (the determinism suite pins this). The `*_mt` methods take an
-//! explicit thread budget; the plain methods are the serial (threads = 1)
-//! shorthand every non-hot-path caller keeps using.
+//! # The packed register-tiled GEMM (PR 4)
 //!
-//! The bench `hotpath_micro` tracks kernel throughput so regressions are
-//! visible; `BENCH_pr2.json` records the serial→parallel trajectory.
+//! All three matmul orientations — `matmul` (A·B), `matmul_t` (A·Bᵀ) and
+//! `t_matmul` (Aᵀ·B) — are one BLIS-style kernel: operands are first
+//! *packed* into panel buffers and a fixed-size register-tiled microkernel
+//! then does every flop out of those panels.
+//!
+//! * **Packing.** A is repacked into [`MR`]-row panels laid out so each k
+//!   step reads one contiguous MR-column; B is repacked into [`NR`]-wide
+//!   column panels, contiguous per k step. The pack absorbs the transpose:
+//!   a transposed operand only changes how the packer *reads* its source,
+//!   so the three orientations collapse into one inner kernel and the old
+//!   orientation-specific `*_band` loops are gone. Edge panels are
+//!   zero-padded to full width (padded lanes multiply zeros and are never
+//!   stored back).
+//! * **Microkernel.** An MR×NR accumulator array lives in registers; the
+//!   j-dimension (NR lanes) auto-vectorizes. The k loop is tiled by [`KC`]
+//!   so the active A panel (MR·KC floats) and B panel (NR·KC floats) stay
+//!   cache-resident.
+//! * **Bit-identity.** Vector lanes span *columns*, never k: each output
+//!   element keeps one scalar accumulation chain that starts from the
+//!   prior C value and adds `a·b` products in strictly ascending k order
+//!   (KC tiles ascending, k ascending within a tile; the C tile round-trips
+//!   through memory exactly between KC tiles). That is precisely the
+//!   per-element sequence of the PR 2/3 blocked kernels, so the packed
+//!   kernels are bit-identical to them — and to each other across thread
+//!   counts, arena modes, and orientations (pinned by
+//!   `tests/gemm_props.rs` against a scalar k-ascending oracle and by the
+//!   unmodified `tests/determinism.rs`).
+//! * **Threading.** Above [`PAR_MIN_MACS`] multiply-adds the output is
+//!   split into contiguous *panel bands* (`threadpool::scope_rows` over
+//!   MR-panels): workers share the one packed B and each packs + consumes
+//!   its own disjoint slice of packed A, so B is packed once per GEMM and
+//!   every C row still belongs to exactly one worker.
+//! * **Tiny products.** Below [`PACK_MIN_MACS`] multiply-adds (the r×r
+//!   adapter factor chains) packing would cost a meaningful fraction of
+//!   the arithmetic, so a direct serial loop runs the same k-ascending
+//!   per-element chain instead — bit-identical by the same argument, and
+//!   pinned by the same oracle tests on both sides of the threshold.
+//! * **Pack buffers.** Panels live in 64-byte-aligned grow-only scratch
+//!   ([`crate::tensor::PackScratch`]). Workspace-reachable call sites pass
+//!   the arena's scratch (`Workspace::packs`) so a warmed step packs with
+//!   zero heap allocations (`tests/alloc_regression.rs`); the `*_into_local`
+//!   variants use a per-thread scratch for sites inside parallel regions
+//!   (attention's per-(batch, head) GEMMs) and for the `Tensor`
+//!   conveniences — pool workers are persistent, so that scratch also
+//!   reaches a steady state. Deliberate trade-off: both operands pack in
+//!   full (no NC/MC outer blocking), so a scratch's high-water mark is
+//!   ~the largest padded `m·k + k·n` its owner ever issues — megabytes at
+//!   this crate's model shapes, held for the owner's lifetime. Cache-sized
+//!   NC-strip packing would bound that but forces workers to resynchronize
+//!   per strip, complicating the share-one-packed-B banding the
+//!   determinism contract leans on; revisit only if operand sizes outgrow
+//!   the arena budget. Likewise, step-invariant (frozen-weight) operands
+//!   currently re-pack on every call — a bind-time packed-panel cache is
+//!   the designated follow-up (ROADMAP) if profile data shows the pack
+//!   fraction mattering at larger vocab/hidden sizes.
+//!
+//! The bench `hotpath_micro` §8 tracks per-shape GFLOP/s and the speedup
+//! over the retired PR 3 blocked kernel (`BENCH_pr4.json`).
 
+use super::workspace::PackScratch;
 use super::Tensor;
 use crate::util::threadpool::{gated_threads, scope_rows, SharedSliceMut};
+use std::cell::RefCell;
+use std::ops::Range;
 
-/// Cache block edge for the matmul micro-kernels (f32: 64*64*4B = 16 KB/tile,
-/// three tiles comfortably fit in L1+L2).
-const BLOCK: usize = 64;
+/// Microkernel tile height: rows of A (and C) per packed A panel. Four
+/// independent accumulation chains per column hide FP add latency without
+/// spilling the MR×NR accumulator block out of registers.
+pub const MR: usize = 4;
 
-/// Multiply-add count (m·k·n) above which the kernels split row bands
+/// Microkernel tile width: columns of B (and C) per packed B panel. Eight
+/// f32 lanes = two SSE / one AVX vector per accumulator row; lanes span
+/// columns, so vectorization never touches the k accumulation order.
+pub const NR: usize = 8;
+
+/// k-tile edge: the microkernel consumes packed panels KC rows of k at a
+/// time so an (MR + NR)·KC·4-byte panel pair (~12 KB) stays cache-resident
+/// while a C tile round-trips through it.
+const KC: usize = 256;
+
+/// Multiply-add count (m·k·n) above which the kernel splits panel bands
 /// across worker threads. Below it a parallel region costs more than the
 /// arithmetic (dispatch is ~µs; 2^18 MACs is ~100 µs of scalar work).
 pub const PAR_MIN_MACS: usize = 1 << 18;
 
-/// Minimum output rows per band; finer splits shred cache tiles. The band
-/// partition itself is `threadpool::scope_rows` — one banding policy for
-/// kernels and encoder row loops alike.
-const MIN_BAND_ROWS: usize = 8;
+/// Minimum MR-panels per worker band (= 8 output rows); finer splits shred
+/// the packed-panel reuse.
+const MIN_BAND_PANELS: usize = 2;
+
+/// Multiply-add count below which packing costs more than it saves (the
+/// r×r adapter factor products: pack traffic ≈ (1/(mp·MR) + 1/(np·NR)) of
+/// the FLOPs plus padding waste, so sub-16³ shapes run a direct k-ascending
+/// loop instead — the per-element rounding chain, and therefore every
+/// output bit, is identical either way).
+const PACK_MIN_MACS: usize = 1 << 12;
+
+/// Blocked-transpose tile edge: a TB×TB f32 tile (4 KB) of source plus its
+/// transposed destination fit L1 together.
+const TB: usize = 32;
 
 /// Thread budget for a kernel of `macs` multiply-adds: serial below
 /// [`PAR_MIN_MACS`], the caller's budget above it.
 fn kernel_threads(threads: usize, macs: usize) -> usize {
     gated_threads(threads, macs, PAR_MIN_MACS)
+}
+
+/// Packed sizes (A-pack, B-pack) in f32 elements for an `(m × k) · (k × n)`
+/// product: panels are zero-padded to full MR / NR width. Identical for
+/// every orientation — transposes change only the packer's read pattern.
+pub fn pack_sizes(m: usize, k: usize, n: usize) -> (usize, usize) {
+    (m.div_ceil(MR) * MR * k, n.div_ceil(NR) * NR * k)
+}
+
+thread_local! {
+    /// Per-thread pack scratch for GEMMs issued where no workspace arena is
+    /// reachable: call sites inside parallel regions (each worker packs in
+    /// its own scratch) and the allocating `Tensor` conveniences. Pool
+    /// workers are persistent, so after warmup these grow-only buffers stop
+    /// allocating too.
+    static LOCAL_PACKS: RefCell<PackScratch> = RefCell::new(PackScratch::new());
 }
 
 impl Tensor {
@@ -48,7 +137,7 @@ impl Tensor {
         let (k2, n) = (rhs.rows(), rhs.cols());
         assert_eq!(k, k2, "matmul inner dims: {:?} x {:?}", self.shape(), rhs.shape());
         let mut out = Tensor::zeros(&[m, n]);
-        matmul_into(self.data(), rhs.data(), out.data_mut(), m, k, n, threads);
+        matmul_into_local(self.data(), rhs.data(), out.data_mut(), m, k, n, threads);
         out
     }
 
@@ -64,7 +153,7 @@ impl Tensor {
         let (k2, n) = (rhs.rows(), rhs.cols());
         assert_eq!(k, k2, "t_matmul inner dims: {:?}^T x {:?}", self.shape(), rhs.shape());
         let mut out = Tensor::zeros(&[m, n]);
-        t_matmul_into(self.data(), rhs.data(), out.data_mut(), m, k, n, threads);
+        t_matmul_into_local(self.data(), rhs.data(), out.data_mut(), m, k, n, threads);
         out
     }
 
@@ -79,19 +168,15 @@ impl Tensor {
         let (n, k2) = (rhs.rows(), rhs.cols());
         assert_eq!(k, k2, "matmul_t inner dims: {:?} x {:?}^T", self.shape(), rhs.shape());
         let mut out = Tensor::zeros(&[m, n]);
-        matmul_t_into(self.data(), rhs.data(), out.data_mut(), m, k, n, threads);
+        matmul_t_into_local(self.data(), rhs.data(), out.data_mut(), m, k, n, threads);
         out
     }
 
-    /// 2-D transpose (copies).
+    /// 2-D transpose (copies, tile-blocked — see [`transpose_into`]).
     pub fn transpose(&self) -> Tensor {
         let (m, n) = (self.rows(), self.cols());
         let mut out = Tensor::zeros(&[n, m]);
-        for i in 0..m {
-            for j in 0..n {
-                out.data_mut()[j * m + i] = self.data()[i * n + j];
-            }
-        }
+        transpose_into(self.data(), out.data_mut(), m, n);
         out
     }
 
@@ -211,12 +296,30 @@ impl Tensor {
     }
 }
 
-/// Blocked matmul kernel: C (m×n) += A (m×k) · B (k×n). The kernel
+// ---------------------------------------------------------------------------
+// The packed GEMM engine.
+// ---------------------------------------------------------------------------
+
+/// Operand orientation of a GEMM. The packed sizes and the microkernel are
+/// orientation-independent; only the packers read their sources differently.
+#[derive(Clone, Copy, Debug)]
+enum Orient {
+    /// C += A (m×k) · B (k×n)
+    Nn,
+    /// C += A (m×k) · B (n×k)ᵀ
+    Nt,
+    /// C += A (k×m)ᵀ · B (k×n)
+    Tn,
+}
+
+/// Packed matmul kernel: C (m×n) += A (m×k) · B (k×n). The kernel
 /// *accumulates* into C — zero it first for a plain product; the encoder's
 /// backward exploits the accumulation to fuse `dst += A·B` without a
-/// temporary. Splits row bands across `threads` workers above
-/// [`PAR_MIN_MACS`]; each output row keeps the serial k-tile accumulation
-/// order, so the result is bit-identical for every thread count.
+/// temporary. Splits MR-panel bands across `threads` workers above
+/// [`PAR_MIN_MACS`]; each output element keeps the serial k-ascending
+/// accumulation order, so the result is bit-identical for every thread
+/// count (and to the retired PR 3 blocked kernels).
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_into(
     a: &[f32],
     b: &[f32],
@@ -225,44 +328,18 @@ pub fn matmul_into(
     k: usize,
     n: usize,
     threads: usize,
+    packs: &mut PackScratch,
 ) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    let cs = SharedSliceMut::new(c);
-    scope_rows(kernel_threads(threads, m * k * n), m, MIN_BAND_ROWS, |r| {
-        // SAFETY: bands are disjoint row ranges of c.
-        let c_band = unsafe { cs.range_mut(r.start * n, r.end * n) };
-        matmul_band(&a[r.start * k..r.end * k], b, c_band, r.end - r.start, k, n);
-    });
+    gemm(Orient::Nn, a, b, c, m, k, n, threads, packs);
 }
 
-/// Serial blocked micro-kernel for one row band of C = A·B.
-fn matmul_band(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
-        for k0 in (0..k).step_by(BLOCK) {
-            let k1 = (k0 + BLOCK).min(k);
-            for j0 in (0..n).step_by(BLOCK) {
-                let j1 = (j0 + BLOCK).min(n);
-                for i in i0..i1 {
-                    let crow = &mut c[i * n..(i + 1) * n];
-                    for kk in k0..k1 {
-                        let aik = a[i * k + kk];
-                        let brow = &b[kk * n..(kk + 1) * n];
-                        for j in j0..j1 {
-                            crow[j] += aik * brow[j];
-                        }
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// Blocked transposed-right kernel: C (m×n) += A (m×k) · B (n×k)^T
+/// Packed transposed-right kernel: C (m×n) += A (m×k) · B (n×k)ᵀ
 /// (accumulating, like the sibling kernels — zero C for a plain product).
-/// Same banding/determinism contract as [`matmul_into`].
+/// Same banding/determinism contract as [`matmul_into`]: the pack step
+/// absorbs the transpose of B.
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_t_into(
     a: &[f32],
     b: &[f32],
@@ -271,47 +348,18 @@ pub fn matmul_t_into(
     k: usize,
     n: usize,
     threads: usize,
+    packs: &mut PackScratch,
 ) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), m * n);
-    let cs = SharedSliceMut::new(c);
-    scope_rows(kernel_threads(threads, m * k * n), m, MIN_BAND_ROWS, |r| {
-        // SAFETY: bands are disjoint row ranges of c.
-        let c_band = unsafe { cs.range_mut(r.start * n, r.end * n) };
-        matmul_t_band(&a[r.start * k..r.end * k], b, c_band, r.end - r.start, k, n);
-    });
+    gemm(Orient::Nt, a, b, c, m, k, n, threads, packs);
 }
 
-/// Serial blocked micro-kernel for one row band of C = A·Bᵀ. Tiles over
-/// (j, k) so a BLOCK-row slab of B stays hot while all of A streams by;
-/// per-(i,j) accumulation runs k-tiles in ascending order.
-fn matmul_t_band(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(c.len(), m * n);
-    for j0 in (0..n).step_by(BLOCK) {
-        let j1 = (j0 + BLOCK).min(n);
-        for k0 in (0..k).step_by(BLOCK) {
-            let k1 = (k0 + BLOCK).min(k);
-            for i in 0..m {
-                let arow = &a[i * k + k0..i * k + k1];
-                let crow = &mut c[i * n..(i + 1) * n];
-                for j in j0..j1 {
-                    let brow = &b[j * k + k0..j * k + k1];
-                    let mut acc = crow[j];
-                    for (&av, &bv) in arow.iter().zip(brow) {
-                        acc += av * bv;
-                    }
-                    crow[j] = acc;
-                }
-            }
-        }
-    }
-}
-
-/// Blocked transposed-left kernel: C (m×n) += A (k×m)^T · B (k×n)
+/// Packed transposed-left kernel: C (m×n) += A (k×m)ᵀ · B (k×n)
 /// (accumulating — zero C for a plain product). Same banding/determinism
-/// contract as [`matmul_into`]; bands split the m output rows (columns of
-/// A).
+/// contract as [`matmul_into`]: the pack step absorbs the transpose of A,
+/// and bands split the m output rows (columns of A) at panel granularity.
+#[allow(clippy::too_many_arguments)]
 pub fn t_matmul_into(
     a: &[f32],
     b: &[f32],
@@ -320,46 +368,312 @@ pub fn t_matmul_into(
     k: usize,
     n: usize,
     threads: usize,
+    packs: &mut PackScratch,
 ) {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    let cs = SharedSliceMut::new(c);
-    scope_rows(kernel_threads(threads, m * k * n), m, MIN_BAND_ROWS, |r| {
-        // SAFETY: bands are disjoint row ranges of c.
-        let c_band = unsafe { cs.range_mut(r.start * n, r.end * n) };
-        t_matmul_band(a, b, c_band, r, m, k, n);
-    });
+    gemm(Orient::Tn, a, b, c, m, k, n, threads, packs);
 }
 
-/// Serial blocked micro-kernel for output rows `rows` of C = Aᵀ·B. The
-/// A reads are column-strided, so k is tiled to keep the touched A slab and
-/// the B tile resident; accumulation per (i, j) runs k-tiles in ascending
-/// order.
-fn t_matmul_band(
+/// [`matmul_into`] with the per-thread pack scratch — for call sites with
+/// no workspace in reach (parallel-region bodies, `Tensor` conveniences).
+pub fn matmul_into_local(
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
-    rows: std::ops::Range<usize>,
     m: usize,
     k: usize,
     n: usize,
+    threads: usize,
 ) {
-    let r0 = rows.start;
-    for k0 in (0..k).step_by(BLOCK) {
-        let k1 = (k0 + BLOCK).min(k);
-        for i in rows.clone() {
-            let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
-            for kk in k0..k1 {
-                let aval = a[kk * m + i];
+    LOCAL_PACKS.with(|p| matmul_into(a, b, c, m, k, n, threads, &mut p.borrow_mut()));
+}
+
+/// [`matmul_t_into`] with the per-thread pack scratch.
+pub fn matmul_t_into_local(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    LOCAL_PACKS.with(|p| matmul_t_into(a, b, c, m, k, n, threads, &mut p.borrow_mut()));
+}
+
+/// [`t_matmul_into`] with the per-thread pack scratch.
+pub fn t_matmul_into_local(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    LOCAL_PACKS.with(|p| t_matmul_into(a, b, c, m, k, n, threads, &mut p.borrow_mut()));
+}
+
+/// The one packed kernel behind all three orientations.
+#[allow(clippy::too_many_arguments)]
+fn gemm(
+    orient: Orient,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    packs: &mut PackScratch,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return; // k == 0 leaves C unchanged: the kernel accumulates.
+    }
+    if m * k * n < PACK_MIN_MACS {
+        return gemm_small(orient, a, b, c, m, k, n);
+    }
+    let (mp, np) = (m.div_ceil(MR), n.div_ceil(NR));
+    let (apack, bpack) = packs.for_shape(m, k, n);
+    pack_b(orient, b, bpack, k, n);
+    let bp: &[f32] = bpack;
+    let th = kernel_threads(threads, m * k * n);
+    let cs = SharedSliceMut::new(c);
+    let aps = SharedSliceMut::new(apack);
+    scope_rows(th, mp, MIN_BAND_PANELS, |pr| {
+        let row0 = pr.start * MR;
+        let row1 = (pr.end * MR).min(m);
+        // SAFETY: panel bands are disjoint, so this band's C row range and
+        // packed-A region are touched by exactly one worker.
+        let c_band = unsafe { cs.range_mut(row0 * n, row1 * n) };
+        let a_band = unsafe { aps.range_mut(pr.start * k * MR, pr.end * k * MR) };
+        pack_a(orient, a, a_band, pr.clone(), m, k);
+        // KC tiles ascending, panels inside: every (i, j) accumulates its
+        // k products in ascending order with exact C round-trips between
+        // tiles — the bit-identity invariant.
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            for q in 0..np {
+                let bpanel = &bp[q * k * NR + k0 * NR..q * k * NR + (k0 + kc) * NR];
+                let nr_eff = NR.min(n - q * NR);
+                for p in pr.clone() {
+                    let po = (p - pr.start) * k * MR;
+                    let apanel = &a_band[po + k0 * MR..po + (k0 + kc) * MR];
+                    let mr_eff = MR.min(m - p * MR);
+                    let coff = (p * MR - row0) * n + q * NR;
+                    micro_tile(apanel, bpanel, &mut c_band[coff..], n, mr_eff, nr_eff);
+                }
+            }
+            k0 += kc;
+        }
+    });
+}
+
+/// Direct serial path for sub-[`PACK_MIN_MACS`] products (the r×r adapter
+/// factors): everything fits in L1, so panel packing would cost a
+/// meaningful fraction of the arithmetic. Each element accumulates the
+/// same k-ascending chain as the packed path — bit-identical output.
+fn gemm_small(orient: Orient, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    match orient {
+        Orient::Nn => {
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (kk, &aik) in arow.iter().enumerate() {
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+        Orient::Nt => {
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cv, brow) in crow.iter_mut().zip(b.chunks_exact(k)) {
+                    let mut acc = *cv;
+                    for (&av, &bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    *cv = acc;
+                }
+            }
+        }
+        Orient::Tn => {
+            for kk in 0..k {
+                let arow = &a[kk * m..(kk + 1) * m];
                 let brow = &b[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    crow[j] += aval * brow[j];
+                for (i, &aval) in arow.iter().enumerate() {
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aval * bv;
+                    }
                 }
             }
         }
     }
 }
+
+/// Pack the A-side panels for `panels` (each MR rows of the logical
+/// (m × k) A) into `dst`, column-major within each panel so the microkernel
+/// reads one contiguous MR-chunk per k step. Rows past `m` pad with zeros.
+fn pack_a(orient: Orient, a: &[f32], dst: &mut [f32], panels: Range<usize>, m: usize, k: usize) {
+    debug_assert_eq!(dst.len(), (panels.end - panels.start) * k * MR);
+    match orient {
+        // A is (m × k) row-major: stream each panel row, scatter MR-strided.
+        Orient::Nn | Orient::Nt => {
+            for (pi, dst_p) in dst.chunks_exact_mut(k * MR).enumerate() {
+                let row0 = (panels.start + pi) * MR;
+                for i in 0..MR {
+                    let row = row0 + i;
+                    if row < m {
+                        for (kk, &v) in a[row * k..(row + 1) * k].iter().enumerate() {
+                            dst_p[kk * MR + i] = v;
+                        }
+                    } else {
+                        for kk in 0..k {
+                            dst_p[kk * MR + i] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        // A is (k × m): the pack absorbs the transpose — each k row of the
+        // source contributes one contiguous MR-chunk per panel.
+        Orient::Tn => {
+            for (pi, dst_p) in dst.chunks_exact_mut(k * MR).enumerate() {
+                let col0 = (panels.start + pi) * MR;
+                let w = MR.min(m - col0);
+                for kk in 0..k {
+                    let src = &a[kk * m + col0..kk * m + col0 + w];
+                    let out = &mut dst_p[kk * MR..(kk + 1) * MR];
+                    out[..w].copy_from_slice(src);
+                    for v in &mut out[w..] {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack all NR-wide B panels of the logical (k × n) B into `bpack`; columns
+/// past `n` pad with zeros.
+fn pack_b(orient: Orient, b: &[f32], bpack: &mut [f32], k: usize, n: usize) {
+    let np = n.div_ceil(NR);
+    debug_assert_eq!(bpack.len(), np * NR * k);
+    match orient {
+        // B is (k × n) row-major: fill panel-major (q outer) so every
+        // write is sequential within one panel buffer. The reads stride by
+        // n, but consecutive panels read adjacent 32-byte column strips —
+        // the k-cache-line working set of a strip stays resident across
+        // panel passes, whereas a kk-outer order would keep `np` strided
+        // write streams alive at once and thrash wide-n packs (MLP f,
+        // vocab-sized GEMMs).
+        Orient::Nn | Orient::Tn => {
+            for (q, dst_q) in bpack.chunks_exact_mut(k * NR).enumerate() {
+                let j0 = q * NR;
+                let w = NR.min(n - j0);
+                for kk in 0..k {
+                    let dst = &mut dst_q[kk * NR..(kk + 1) * NR];
+                    dst[..w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+                    for v in &mut dst[w..] {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        // B is (n × k): the pack absorbs the transpose — each logical
+        // column j is a contiguous source row, scattered NR-strided into
+        // its panel.
+        Orient::Nt => {
+            for (q, dst_q) in bpack.chunks_exact_mut(k * NR).enumerate() {
+                for j in 0..NR {
+                    let row = q * NR + j;
+                    if row < n {
+                        for (kk, &v) in b[row * k..(row + 1) * k].iter().enumerate() {
+                            dst_q[kk * NR + j] = v;
+                        }
+                    } else {
+                        for kk in 0..k {
+                            dst_q[kk * NR + j] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One MR×NR output tile over a KC-bounded k range: load C, run the
+/// register-tiled inner kernel, store C. `c` starts at the tile's top-left
+/// element with row stride `ldc`; only the `mr_eff × nr_eff` valid region
+/// is loaded and stored (padded panel lanes accumulate zeros into dead
+/// accumulator slots).
+fn micro_tile(
+    apanel: &[f32],
+    bpanel: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (i, accrow) in acc.iter_mut().enumerate().take(mr_eff) {
+        accrow[..nr_eff].copy_from_slice(&c[i * ldc..i * ldc + nr_eff]);
+    }
+    // The register-tiled inner loop: one contiguous MR-chunk of A and one
+    // NR-chunk of B per k step; lanes span columns, each (i, j) keeps a
+    // single k-ascending chain.
+    for (av, bv) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        let av: &[f32; MR] = av.try_into().expect("MR chunk");
+        let bv: &[f32; NR] = bv.try_into().expect("NR chunk");
+        for (accrow, &ai) in acc.iter_mut().zip(av) {
+            for (slot, &bj) in accrow.iter_mut().zip(bv) {
+                *slot += ai * bj;
+            }
+        }
+    }
+    for (i, accrow) in acc.iter().enumerate().take(mr_eff) {
+        c[i * ldc..i * ldc + nr_eff].copy_from_slice(&accrow[..nr_eff]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked transpose.
+// ---------------------------------------------------------------------------
+
+/// Tile-blocked transpose of a row-major `rows × cols` slice into the
+/// row-major `cols × rows` destination. A naive element loop walks the
+/// destination with a `rows`-stride and evicts every cache line `TB` times;
+/// blocking on TB×TB tiles keeps both the source rows and the destination
+/// columns of a tile resident. (`Tensor::transpose` routes through this;
+/// the GEMM family itself never materializes a transpose — its pack step
+/// absorbs operand orientation.)
+pub fn transpose_into(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    for i0 in (0..rows).step_by(TB) {
+        let i1 = (i0 + TB).min(rows);
+        for j0 in (0..cols).step_by(TB) {
+            let j1 = (j0 + TB).min(cols);
+            for i in i0..i1 {
+                let srow = &src[i * cols..(i + 1) * cols];
+                for j in j0..j1 {
+                    dst[j * rows + i] = srow[j];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise / reduction helpers.
+// ---------------------------------------------------------------------------
 
 /// In-place row-wise numerically-stable softmax over a row-major
 /// `rows × cols` buffer (the attention-probability transform).
@@ -444,6 +758,14 @@ mod tests {
     }
 
     #[test]
+    fn pack_sizes_round_up_to_panels() {
+        assert_eq!(pack_sizes(1, 3, 1), (MR * 3, NR * 3));
+        assert_eq!(pack_sizes(MR, 2, NR), (MR * 2, NR * 2));
+        assert_eq!(pack_sizes(MR + 1, 2, NR + 1), (2 * MR * 2, 2 * NR * 2));
+        assert_eq!(pack_sizes(0, 5, 7), (0, NR * 5));
+    }
+
+    #[test]
     fn transpose_variants_agree() {
         let mut rng = Pcg64::new(2);
         let a = Tensor::randn(&[9, 13], 1.0, &mut rng);
@@ -457,6 +779,21 @@ mod tests {
         let got2 = a.matmul_t(&c);
         let want2 = a.matmul(&c.transpose());
         assert!(rel_err(&got2, &want2) < 1e-5);
+    }
+
+    #[test]
+    fn blocked_transpose_matches_elementwise_on_tile_straddling_shapes() {
+        let mut rng = Pcg64::new(21);
+        for &(r, c) in &[(1usize, 1usize), (1, 200), (200, 1), (31, 33), (64, 64), (97, 45)] {
+            let t = Tensor::randn(&[r, c], 1.0, &mut rng);
+            let tt = t.transpose();
+            assert_eq!(tt.shape(), &[c, r]);
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(tt.at(j, i), t.at(i, j), "({r},{c}) at ({i},{j})");
+                }
+            }
+        }
     }
 
     #[test]
@@ -500,21 +837,40 @@ mod tests {
         // The encoder's backward fuses `dst += A·B` through the kernels'
         // accumulation semantics; pin it for all three orientations.
         let mut rng = Pcg64::new(11);
+        let mut packs = PackScratch::new();
         let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
         let b = Tensor::randn(&[7, 4], 1.0, &mut rng);
         let base = Tensor::randn(&[5, 4], 1.0, &mut rng);
         let mut c = base.clone();
-        matmul_into(a.data(), b.data(), c.data_mut(), 5, 7, 4, 1);
+        matmul_into(a.data(), b.data(), c.data_mut(), 5, 7, 4, 1, &mut packs);
         let want = base.add(&a.matmul(&b));
         assert!(rel_err(&c, &want) < 1e-5, "matmul_into accumulate");
         let bt = b.transpose(); // (4, 7)
         let mut c2 = base.clone();
-        matmul_t_into(a.data(), bt.data(), c2.data_mut(), 5, 7, 4, 1);
+        matmul_t_into(a.data(), bt.data(), c2.data_mut(), 5, 7, 4, 1, &mut packs);
         assert!(rel_err(&c2, &want) < 1e-5, "matmul_t_into accumulate");
         let at = a.transpose(); // (7, 5)
         let mut c3 = base.clone();
-        t_matmul_into(at.data(), b.data(), c3.data_mut(), 5, 7, 4, 1);
+        t_matmul_into(at.data(), b.data(), c3.data_mut(), 5, 7, 4, 1, &mut packs);
         assert!(rel_err(&c3, &want) < 1e-5, "t_matmul_into accumulate");
+    }
+
+    #[test]
+    fn arena_and_local_pack_paths_are_bit_identical() {
+        // The `*_into_local` variants only swap where the pack scratch
+        // lives; the packed panels — and therefore the bits — must match.
+        let mut rng = Pcg64::new(13);
+        let (m, k, n) = (37, 29, 21);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut packs = PackScratch::new();
+        let mut c_arena = vec![0.0f32; m * n];
+        matmul_into(a.data(), b.data(), &mut c_arena, m, k, n, 1, &mut packs);
+        let mut c_local = vec![0.0f32; m * n];
+        matmul_into_local(a.data(), b.data(), &mut c_local, m, k, n, 1);
+        for (x, y) in c_arena.iter().zip(&c_local) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -20,15 +20,149 @@
 //! data (a `Vec<usize>` is a heap allocation too) and normalized to
 //! [`MAX_NDIM`] capacity on recycle so reshaping a pooled buffer to a
 //! higher-rank shape never reallocates in steady state.
+//!
+//! **Pack buffers (PR 4).** The packed GEMM family
+//! ([`crate::tensor::matmul_into`] and siblings) needs two panel-packing
+//! scratch buffers per product. Those checkouts come from the workspace's
+//! [`PackScratch`] — a grow-only pair of [`AlignedBuf`]s, **64-byte
+//! aligned** (cache-line / SIMD alignment) and recycled in place across
+//! GEMMs, so packing never heap-allocates in steady state and every
+//! recycled checkout stays aligned (asserted by the unit tests here).
+//! Plain [`Workspace::take`] tensor checkouts intentionally keep their
+//! `Vec<f32>` storage (element alignment only): `Tensor::from_vec` /
+//! `into_vec` are zero-copy public API, and `Vec` cannot carry a stronger
+//! alignment — the bandwidth-critical panel buffers are where the 64-byte
+//! guarantee pays, so that is where it lives.
 
 use super::Tensor;
+use std::alloc::Layout;
 use std::collections::HashMap;
 
 /// Highest tensor rank the crate uses (LoRA params are `[l, m, d, r]`).
 /// Pooled shape vectors are grown to this capacity once, on recycle.
 const MAX_NDIM: usize = 4;
 
-/// Pool of reusable tensor buffers plus spare `Vec<Tensor>` containers.
+// ---------------------------------------------------------------------------
+// Aligned scratch storage for the GEMM pack panels.
+// ---------------------------------------------------------------------------
+
+/// A grow-only f32 scratch buffer whose storage is always **64-byte
+/// aligned** ([`AlignedBuf::ALIGN`]). `Vec<f32>` cannot guarantee more than
+/// the element alignment, so the pack buffers of the packed GEMM kernels —
+/// which want cache-line-aligned, SIMD-friendly panels — use this type
+/// instead. Growth discards contents (it is scratch, fully rewritten by
+/// every pack) and the capacity never shrinks, so steady-state reuse
+/// performs no heap allocation.
+#[derive(Debug)]
+pub struct AlignedBuf {
+    ptr: *mut f32,
+    cap: usize,
+}
+
+// SAFETY: AlignedBuf is an owning handle to a unique allocation; access
+// goes through `&mut self`, so moving the handle across threads is sound.
+unsafe impl Send for AlignedBuf {}
+
+impl AlignedBuf {
+    /// Alignment (bytes) of every allocation: one x86 cache line, and a
+    /// superset of every vector-register alignment the kernels could want.
+    pub const ALIGN: usize = 64;
+
+    pub fn new() -> AlignedBuf {
+        AlignedBuf { ptr: std::ptr::null_mut(), cap: 0 }
+    }
+
+    fn layout(cap: usize) -> Layout {
+        Layout::from_size_align(cap * std::mem::size_of::<f32>(), Self::ALIGN)
+            .expect("aligned-buffer layout")
+    }
+
+    /// Current capacity in f32 elements.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Storage pointer (for alignment assertions; null while empty).
+    pub fn as_ptr(&self) -> *const f32 {
+        self.ptr
+    }
+
+    /// Mutable view of the first `n` elements, growing (re-allocating
+    /// aligned) when `n` exceeds the capacity. Contents are unspecified
+    /// after growth — callers fully overwrite the region they use.
+    pub fn slice_to(&mut self, n: usize) -> &mut [f32] {
+        if n == 0 {
+            return &mut [];
+        }
+        if n > self.cap {
+            self.grow(n);
+        }
+        // SAFETY: `ptr` is a live allocation of `cap >= n` f32s (zeroed at
+        // allocation time, hence initialized), uniquely borrowed via &mut.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, n) }
+    }
+
+    fn grow(&mut self, n: usize) {
+        // SAFETY: the layout has non-zero size (n > 0 checked by callers).
+        let fresh = unsafe { std::alloc::alloc_zeroed(Self::layout(n)) } as *mut f32;
+        assert!(!fresh.is_null(), "aligned pack-buffer allocation failed ({n} f32s)");
+        self.release();
+        self.ptr = fresh;
+        self.cap = n;
+    }
+
+    fn release(&mut self) {
+        if !self.ptr.is_null() {
+            // SAFETY: `ptr` was allocated with exactly this layout.
+            unsafe { std::alloc::dealloc(self.ptr as *mut u8, Self::layout(self.cap)) };
+            self.ptr = std::ptr::null_mut();
+            self.cap = 0;
+        }
+    }
+}
+
+impl Default for AlignedBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+/// The pack-buffer pair of the packed GEMM family: an A-side (MR-panel) and
+/// a B-side (NR-panel) scratch buffer. Checkouts through
+/// [`PackScratch::for_shape`] are 64-byte aligned and grow-only — after a
+/// warmup step every GEMM shape the step issues fits the pooled capacity,
+/// preserving the zero-allocation hot-path invariant
+/// (`tests/alloc_regression.rs`).
+#[derive(Debug, Default)]
+pub struct PackScratch {
+    a: AlignedBuf,
+    b: AlignedBuf,
+}
+
+impl PackScratch {
+    pub fn new() -> PackScratch {
+        PackScratch::default()
+    }
+
+    /// The (A-pack, B-pack) buffers sized for an `(m × k) · (k × n)`
+    /// product. Orientation does not matter: transposed operands pack into
+    /// the same panel sizes ([`crate::tensor::pack_sizes`]) — the packer
+    /// absorbs the transpose on the read side.
+    pub fn for_shape(&mut self, m: usize, k: usize, n: usize) -> (&mut [f32], &mut [f32]) {
+        let (an, bn) = super::ops::pack_sizes(m, k, n);
+        let PackScratch { a, b } = self;
+        (a.slice_to(an), b.slice_to(bn))
+    }
+}
+
+/// Pool of reusable tensor buffers plus spare `Vec<Tensor>` containers and
+/// the step's GEMM pack scratch.
 #[derive(Debug, Default)]
 pub struct Workspace {
     enabled: bool,
@@ -36,6 +170,11 @@ pub struct Workspace {
     free: HashMap<usize, Vec<Tensor>>,
     /// Spare tensor-vector containers (capacity preserved across steps).
     spare_vecs: Vec<Vec<Tensor>>,
+    /// Aligned pack-buffer pair for the packed GEMM kernels. Scratch, not
+    /// observable state: it is reused even when the arena is disabled (the
+    /// kernels fully overwrite the regions they read back, so arena-off
+    /// results are still bit-identical).
+    packs: PackScratch,
     takes: u64,
     hits: u64,
 }
@@ -127,6 +266,13 @@ impl Workspace {
     pub fn stats(&self) -> (u64, u64) {
         (self.takes, self.hits)
     }
+
+    /// The step's GEMM pack scratch (aligned A/B panel buffers). Handed to
+    /// the `*_into` kernels at every workspace-reachable call site so pack
+    /// buffers come from the arena rather than per-call allocations.
+    pub fn packs(&mut self) -> &mut PackScratch {
+        &mut self.packs
+    }
 }
 
 #[cfg(test)]
@@ -202,5 +348,66 @@ mod tests {
         assert!(a.is_empty());
         ws.recycle(a);
         assert_eq!(ws.pooled_tensors(), 0);
+    }
+
+    fn assert_aligned(p: *const f32, what: &str) {
+        assert_eq!(
+            p as usize % AlignedBuf::ALIGN,
+            0,
+            "{what}: pointer {p:?} not {}-byte aligned",
+            AlignedBuf::ALIGN
+        );
+    }
+
+    #[test]
+    fn pack_checkouts_are_64_byte_aligned_and_recycled_aligned() {
+        let mut ws = Workspace::new(true);
+        // Fresh checkout: both pack buffers aligned.
+        {
+            let (a, b) = ws.packs().for_shape(13, 17, 29);
+            assert_aligned(a.as_ptr(), "fresh A pack");
+            assert_aligned(b.as_ptr(), "fresh B pack");
+            a.fill(1.0);
+            b.fill(2.0);
+        }
+        // Recycled (same-capacity) checkout: alignment must survive reuse.
+        let p0 = {
+            let (a, _) = ws.packs().for_shape(13, 17, 29);
+            assert_aligned(a.as_ptr(), "recycled A pack");
+            a.as_ptr() as usize
+        };
+        // Same shape again: no growth, identical storage (true recycling).
+        let p1 = ws.packs().for_shape(13, 17, 29).0.as_ptr() as usize;
+        assert_eq!(p0, p1, "same-shape checkout must reuse the pooled buffer");
+        // Growth re-aligns; shrinking requests keep the larger capacity.
+        {
+            let (a, b) = ws.packs().for_shape(200, 64, 96);
+            assert_aligned(a.as_ptr(), "grown A pack");
+            assert_aligned(b.as_ptr(), "grown B pack");
+        }
+        let cap_after_big = {
+            let (a, _) = ws.packs().for_shape(2, 2, 2);
+            assert_aligned(a.as_ptr(), "small checkout after growth");
+            a.len()
+        };
+        assert_eq!(cap_after_big, super::super::ops::pack_sizes(2, 2, 2).0);
+    }
+
+    #[test]
+    fn aligned_buf_zero_len_and_grow_cycle() {
+        let mut buf = AlignedBuf::new();
+        assert_eq!(buf.capacity(), 0);
+        assert!(buf.slice_to(0).is_empty());
+        let first = buf.slice_to(7).as_ptr() as usize;
+        assert_eq!(first % AlignedBuf::ALIGN, 0);
+        assert_eq!(buf.capacity(), 7);
+        // Fresh storage is zero-initialized.
+        assert!(buf.slice_to(7).iter().all(|&v| v == 0.0));
+        buf.slice_to(7).fill(3.5);
+        // No growth on a smaller request; contents intact (scratch reuse).
+        assert_eq!(buf.slice_to(3), &[3.5, 3.5, 3.5]);
+        buf.slice_to(1000);
+        assert_eq!(buf.capacity(), 1000);
+        assert_eq!(buf.slice_to(1000).as_ptr() as usize % AlignedBuf::ALIGN, 0);
     }
 }

@@ -11,7 +11,9 @@
 //!   thread spawning would dominate. The scoped pool keeps its workers
 //!   alive across regions and dispatches a *borrowed* closure by address;
 //!   the submitting call blocks until the region completes, which is what
-//!   makes the lifetime erasure sound (see `ScopedPool::run`).
+//!   makes the lifetime erasure sound (see `ScopedPool::run`). Workers are
+//!   persistent, so per-worker-thread state (the packed-GEMM `*_into_local`
+//!   pack scratch) warms up once and is reused across regions.
 //!
 //! Thread-count resolution lives here too ([`resolve_threads`]): explicit
 //! config (`--threads` / `[runtime] threads`) wins, then the
@@ -478,6 +480,11 @@ pub fn scope_map<U: Send>(
 /// `f(band_range)` for each band in parallel (each row belongs to exactly
 /// one band, so per-row work — and accumulation order — is independent of
 /// the thread count). Serial when a single band suffices.
+///
+/// The unit is whatever the caller says it is: the encoder's row loops band
+/// over output rows, while the packed GEMM kernels band over *MR-panels*
+/// of packed A (each band packs its own panel slice and shares one packed
+/// B), so the banding policy lives here either way.
 pub fn scope_rows(
     threads: usize,
     rows: usize,

@@ -1,0 +1,259 @@
+//! Property suite for the packed register-tiled GEMM family (PR 4).
+//!
+//! The packed kernels' documented contract is *per-element*: every output
+//! element starts from its prior C value and accumulates `a·b` products in
+//! strictly ascending k order, one mul-rounding and one add-rounding per
+//! step — vector lanes span columns, never k. That sequence is exactly what
+//! the retired PR 2/3 blocked kernels computed, so the oracle below (a
+//! direct transcription of the contract) simultaneously pins:
+//!
+//! 1. **bit-identity with the PR 3 kernels** for every shape/orientation,
+//! 2. **thread-count independence** (1 vs 4 workers),
+//! 3. **pack-scratch independence** (arena `PackScratch` vs the
+//!    per-thread `*_into_local` scratch),
+//! 4. the **accumulate-into-C** semantics the encoder backward fuses on.
+//!
+//! Shapes cover the degenerate edges (m/n/k = 0 and 1), single-panel and
+//! panel-straddling sizes, non-multiples of the MR/NR/KC tiles, and random
+//! rectangles. Numerical sanity against a float64-free naive product is
+//! checked with a relative tolerance on top of the bitwise pins.
+
+use metatt::tensor::{
+    matmul_into, matmul_into_local, matmul_t_into, matmul_t_into_local, rel_err,
+    t_matmul_into, t_matmul_into_local, PackScratch, Tensor,
+};
+use metatt::util::rng::Pcg64;
+
+/// The documented per-element contract, transcribed literally: for each
+/// (i, j), start from C and fold `a_ik · b_kj` in ascending k with f32
+/// rounding at every step. This is bit-for-bit what the PR 3 blocked
+/// kernels (and therefore the packed kernels) must produce.
+#[allow(clippy::too_many_arguments)]
+fn oracle(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    at: impl Fn(usize, usize) -> usize,
+    bt: impl Fn(usize, usize) -> usize,
+) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = c[i * n + j];
+            for t in 0..k {
+                acc += a[at(i, t)] * b[bt(t, j)];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+fn shapes() -> Vec<(usize, usize, usize)> {
+    let mut out = vec![
+        // Degenerate edges: empty dims must not touch C (accumulate) nor panic.
+        (0, 5, 7),
+        (5, 0, 7),
+        (5, 7, 0),
+        (1, 1, 1),
+        // Single partial panels.
+        (3, 5, 5),
+        (4, 9, 8),
+        // Panel-straddling, non-multiples of MR=4 / NR=8. The first two sit
+        // below the small-product threshold (direct k-ascending path), the
+        // rest go through packing — the oracle must match bitwise on both
+        // sides of the dispatch.
+        (5, 3, 9),
+        (17, 23, 10),
+        (63, 65, 7),
+        (129, 100, 17),
+        // Above the parallel threshold; straddles the KC=256 k-tile too.
+        (96, 300, 40),
+        (260, 70, 40),
+    ];
+    let mut rng = Pcg64::new(0xbead);
+    for _ in 0..4 {
+        let dim = |r: &mut Pcg64| 1 + (r.next_u64() % 90) as usize;
+        out.push((dim(&mut rng), dim(&mut rng), dim(&mut rng)));
+    }
+    out
+}
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (idx, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what}: elem {idx}: {g:?} != {w:?} (bits differ)"
+        );
+    }
+}
+
+fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += a.at(i, t) * b.at(t, j);
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+/// Exercise one orientation across shapes, thread counts, scratch kinds,
+/// and a nonzero C base (the accumulate contract), against the oracle.
+#[allow(clippy::too_many_arguments)]
+fn check_orientation(
+    name: &str,
+    seed: u64,
+    a_shape: impl Fn(usize, usize) -> [usize; 2],
+    b_shape: impl Fn(usize, usize) -> [usize; 2],
+    at: impl Fn(usize, usize, usize, usize) -> usize + Copy,
+    bt: impl Fn(usize, usize, usize, usize) -> usize + Copy,
+    run: impl Fn(&[f32], &[f32], &mut [f32], usize, usize, usize, usize, &mut PackScratch),
+    run_local: impl Fn(&[f32], &[f32], &mut [f32], usize, usize, usize, usize),
+) {
+    let mut rng = Pcg64::new(seed);
+    let mut packs = PackScratch::new();
+    for (m, k, n) in shapes() {
+        let a = Tensor::randn(&a_shape(m, k), 1.0, &mut rng);
+        let b = Tensor::randn(&b_shape(k, n), 1.0, &mut rng);
+        let base = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let mut want = base.data().to_vec();
+        oracle(
+            a.data(),
+            b.data(),
+            &mut want,
+            m,
+            k,
+            n,
+            |i, t| at(i, t, m, k),
+            |t, j| bt(t, j, k, n),
+        );
+        for threads in [1usize, 4] {
+            let mut got = base.data().to_vec();
+            run(a.data(), b.data(), &mut got, m, k, n, threads, &mut packs);
+            assert_bits(&got, &want, &format!("{name} ({m},{k},{n}) t{threads} arena"));
+            let mut got_local = base.data().to_vec();
+            run_local(a.data(), b.data(), &mut got_local, m, k, n, threads);
+            assert_bits(
+                &got_local,
+                &want,
+                &format!("{name} ({m},{k},{n}) t{threads} local"),
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_matmul_bitwise_matches_k_ascending_oracle() {
+    check_orientation(
+        "matmul",
+        7,
+        |m, k| [m, k],
+        |k, n| [k, n],
+        |i, t, _m, k| i * k + t,
+        |t, j, _k, n| t * n + j,
+        matmul_into,
+        matmul_into_local,
+    );
+}
+
+#[test]
+fn packed_matmul_t_bitwise_matches_k_ascending_oracle() {
+    // B is (n × k); the pack absorbs the transpose.
+    check_orientation(
+        "matmul_t",
+        8,
+        |m, k| [m, k],
+        |k, n| [n, k],
+        |i, t, _m, k| i * k + t,
+        |t, j, k, _n| j * k + t,
+        matmul_t_into,
+        matmul_t_into_local,
+    );
+}
+
+#[test]
+fn packed_t_matmul_bitwise_matches_k_ascending_oracle() {
+    // A is (k × m); the pack absorbs the transpose.
+    check_orientation(
+        "t_matmul",
+        9,
+        |m, k| [k, m],
+        |k, n| [k, n],
+        |i, t, m, _k| t * m + i,
+        |t, j, _k, n| t * n + j,
+        t_matmul_into,
+        t_matmul_into_local,
+    );
+}
+
+#[test]
+fn packed_kernels_are_numerically_sane_vs_naive() {
+    // The bitwise oracle pins the rounding sequence; this pins plain
+    // mathematical correctness on a handful of rectangles per orientation.
+    let mut rng = Pcg64::new(42);
+    for &(m, k, n) in &[(33usize, 47usize, 29usize), (64, 64, 64), (7, 200, 3)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        assert!(rel_err(&a.matmul(&b), &naive(&a, &b)) < 1e-4, "matmul ({m},{k},{n})");
+        let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
+        assert!(
+            rel_err(&a.matmul_t(&bt), &naive(&a, &bt.transpose())) < 1e-4,
+            "matmul_t ({m},{k},{n})"
+        );
+        let at = Tensor::randn(&[k, m], 1.0, &mut rng);
+        assert!(
+            rel_err(&at.t_matmul(&b), &naive(&at.transpose(), &b)) < 1e-4,
+            "t_matmul ({m},{k},{n})"
+        );
+    }
+}
+
+#[test]
+fn degenerate_dims_leave_accumulator_untouched() {
+    // k == 0 contributes nothing; m == 0 / n == 0 produce empty outputs.
+    let mut packs = PackScratch::new();
+    let base: Vec<f32> = (0..15).map(|x| x as f32 - 7.0).collect();
+    let mut c = base.clone();
+    matmul_into(&[], &[], &mut c, 3, 0, 5, 4, &mut packs);
+    assert_bits(&c, &base, "k=0 accumulate");
+    let mut c2 = base.clone();
+    matmul_t_into(&[], &[], &mut c2, 3, 0, 5, 1, &mut packs);
+    assert_bits(&c2, &base, "k=0 matmul_t accumulate");
+    let mut c3 = base.clone();
+    t_matmul_into(&[], &[], &mut c3, 3, 0, 5, 1, &mut packs);
+    assert_bits(&c3, &base, "k=0 t_matmul accumulate");
+    let mut empty: Vec<f32> = vec![];
+    matmul_into(&[], &[1.0, 2.0], &mut empty, 0, 1, 2, 1, &mut packs);
+    matmul_into(&[1.0, 2.0], &[], &mut empty, 2, 1, 0, 1, &mut packs);
+}
+
+#[test]
+fn shared_scratch_across_mixed_shapes_is_stateless() {
+    // Interleave differently-shaped and differently-oriented GEMMs through
+    // ONE scratch: stale panel contents from a previous (larger) pack must
+    // never leak into a later product's bits.
+    let mut rng = Pcg64::new(1234);
+    let mut packs = PackScratch::new();
+    let big_a = Tensor::randn(&[96, 120], 1.0, &mut rng);
+    let big_b = Tensor::randn(&[120, 72], 1.0, &mut rng);
+    let mut big_c = vec![0.0f32; 96 * 72];
+    matmul_into(big_a.data(), big_b.data(), &mut big_c, 96, 120, 72, 4, &mut packs);
+    for (m, k, n) in [(5usize, 3usize, 9usize), (12, 40, 4), (33, 7, 31)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let mut got = vec![0.0f32; m * n];
+        matmul_t_into(a.data(), b.data(), &mut got, m, k, n, 1, &mut packs);
+        let mut want = vec![0.0f32; m * n];
+        let mut fresh = PackScratch::new();
+        matmul_t_into(a.data(), b.data(), &mut want, m, k, n, 1, &mut fresh);
+        assert_bits(&got, &want, &format!("shared-scratch ({m},{k},{n})"));
+    }
+}
