@@ -16,6 +16,8 @@ pub struct Stats {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    /// Tail percentile (the serving-latency SLO number).
+    pub p99: f64,
 }
 
 impl Stats {
@@ -32,6 +34,7 @@ impl Stats {
             min: samples[0],
             p50: pct(0.50),
             p95: pct(0.95),
+            p99: pct(0.99),
             samples,
         }
     }
@@ -232,6 +235,8 @@ mod tests {
         assert!((s.mean - 2.5).abs() < 1e-12);
         assert_eq!(s.min, 1.0);
         assert!(s.p95 >= s.p50);
+        assert!(s.p99 >= s.p95);
+        assert_eq!(s.p99, 4.0);
     }
 
     #[test]

@@ -2,22 +2,84 @@
 //!
 //! Format (little-endian):
 //! ```text
-//! magic "MTT1" | u32 n_tensors
+//! v1: magic "MTT1" | u32 n_tensors
+//! v2: magic "MTT2" | u32 meta_len | meta JSON bytes | u32 n_tensors
 //! per tensor: u32 name_len | name bytes | u32 ndim | u64 dims... | f32 data...
 //! ```
 //! Used for the pretrained frozen backbone (written by `metatt pretrain`,
-//! read by every fine-tuning run) and for trained adapter states.
+//! read by every fine-tuning run) and for trained adapter states. The v2
+//! header carries a small named-metadata section ([`CheckpointMeta`]:
+//! adapter family, rank, task count, α, model preset) so consumers like
+//! `metatt serve --checkpoint` can validate compatibility up front instead
+//! of failing on a shape mismatch deep inside bind. v1 files keep loading
+//! unchanged ([`load`] / [`load_with_meta`] accept both).
 
 use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"MTT1";
+const MAGIC_V2: &[u8; 4] = b"MTT2";
 
-/// Save named tensors. Order is preserved.
-pub fn save(path: &Path, tensors: &[(String, Tensor)]) -> Result<(), String> {
+/// Cap on the v2 metadata section: the meta JSON is a handful of scalar
+/// fields, so anything larger is corruption, not data.
+const MAX_META_LEN: usize = 1 << 16;
+
+/// Named metadata describing the adapter state a checkpoint holds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    /// Adapter family name ("metatt4d", "metatt4p1d", …).
+    pub adapter: String,
+    /// TT interior rank (or the family's rank parameter).
+    pub rank: usize,
+    /// Number of tasks the adapter was trained over (task-core arity).
+    pub tasks: usize,
+    /// Scaling α the adapter was trained with.
+    pub alpha: f32,
+    /// Model preset the adapter sizes itself against.
+    pub model: String,
+}
+
+impl CheckpointMeta {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("adapter", Json::str(self.adapter.clone())),
+            ("rank", Json::num(self.rank as f64)),
+            ("tasks", Json::num(self.tasks as f64)),
+            ("alpha", Json::num(self.alpha)),
+            ("model", Json::str(self.model.clone())),
+        ])
+    }
+
+    fn from_json(doc: &Json) -> Result<CheckpointMeta, String> {
+        let s = |k: &str| {
+            doc.get(k)
+                .and_then(|v| v.as_str())
+                .map(|v| v.to_string())
+                .ok_or_else(|| format!("checkpoint meta missing '{k}'"))
+        };
+        let n = |k: &str| {
+            doc.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("checkpoint meta missing '{k}'"))
+        };
+        Ok(CheckpointMeta {
+            adapter: s("adapter")?,
+            rank: n("rank")?,
+            tasks: n("tasks")?,
+            alpha: doc
+                .get("alpha")
+                .and_then(|v| v.as_f64())
+                .ok_or("checkpoint meta missing 'alpha'")? as f32,
+            model: s("model")?,
+        })
+    }
+}
+
+/// Serialize the per-tensor body shared by both container versions.
+fn body_bytes(tensors: &[(String, Tensor)]) -> Vec<u8> {
     let mut buf: Vec<u8> = Vec::new();
-    buf.extend_from_slice(MAGIC);
     buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
     for (name, t) in tensors {
         let nb = name.as_bytes();
@@ -31,25 +93,60 @@ pub fn save(path: &Path, tensors: &[(String, Tensor)]) -> Result<(), String> {
             buf.extend_from_slice(&v.to_le_bytes());
         }
     }
+    buf
+}
+
+fn write_file(path: &Path, buf: &[u8]) -> Result<(), String> {
     if let Some(parent) = path.parent() {
         let _ = std::fs::create_dir_all(parent);
     }
     let mut f = std::fs::File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
-    f.write_all(&buf).map_err(|e| format!("write {}: {e}", path.display()))
+    f.write_all(buf).map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+/// Save named tensors (v1 container, no metadata). Order is preserved.
+pub fn save(path: &Path, tensors: &[(String, Tensor)]) -> Result<(), String> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&body_bytes(tensors));
+    write_file(path, &buf)
+}
+
+/// Save named tensors with a [`CheckpointMeta`] header (v2 container).
+pub fn save_with_meta(
+    path: &Path,
+    meta: &CheckpointMeta,
+    tensors: &[(String, Tensor)],
+) -> Result<(), String> {
+    let meta_bytes = meta.to_json().to_string().into_bytes();
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC_V2);
+    buf.extend_from_slice(&(meta_bytes.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&meta_bytes);
+    buf.extend_from_slice(&body_bytes(tensors));
+    write_file(path, &buf)
 }
 
 /// Hard cap on tensor rank: nothing in the layout exceeds 4-D, so a larger
 /// header value is corruption, not data.
 const MAX_NDIM: usize = 16;
 
-/// Load named tensors in stored order.
+/// Load named tensors in stored order (metadata, if any, discarded).
+pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>, String> {
+    load_with_meta(path).map(|(_, tensors)| tensors)
+}
+
+/// Load named tensors plus the v2 metadata header when present (legacy v1
+/// files return `None` metadata).
 ///
 /// Header fields come from disk and may be corrupted (or adversarial), so
 /// every count is validated against the bytes actually present *before* it
 /// sizes an allocation, and all products use checked arithmetic — a crafted
 /// `u64::MAX`-dimension shape must produce a clean `Err`, not a wrapped
 /// multiply in release mode followed by a bogus `take` length or OOM.
-pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>, String> {
+pub fn load_with_meta(
+    path: &Path,
+) -> Result<(Option<CheckpointMeta>, Vec<(String, Tensor)>), String> {
     let mut f = std::fs::File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
     let mut buf = Vec::new();
     f.read_to_end(&mut buf).map_err(|e| format!("read {}: {e}", path.display()))?;
@@ -63,9 +160,21 @@ pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>, String> {
         *pos += n;
         Ok(s)
     };
-    if take(&mut pos, 4)? != MAGIC {
+    let magic: [u8; 4] = take(&mut pos, 4)?.try_into().unwrap();
+    let meta = if &magic == MAGIC {
+        None
+    } else if &magic == MAGIC_V2 {
+        let meta_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        if meta_len > MAX_META_LEN {
+            return Err(format!("checkpoint meta section implausibly large ({meta_len} bytes)"));
+        }
+        let raw = take(&mut pos, meta_len)?;
+        let text = std::str::from_utf8(raw).map_err(|_| "checkpoint meta is not UTF-8")?;
+        let doc = json::parse(text).map_err(|e| format!("checkpoint meta: {e}"))?;
+        Some(CheckpointMeta::from_json(&doc)?)
+    } else {
         return Err(format!("{}: bad magic (not a MetaTT checkpoint)", path.display()));
-    }
+    };
     let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
     // Every tensor costs >= 8 header bytes; cap the preallocation by what
     // the file could possibly hold instead of trusting the raw u32.
@@ -118,7 +227,7 @@ pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>, String> {
     if pos != buf.len() {
         return Err("trailing bytes in checkpoint".into());
     }
-    Ok(out)
+    Ok((meta, out))
 }
 
 #[cfg(test)]
@@ -144,6 +253,65 @@ mod tests {
             assert_eq!(t0, t1);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    fn demo_meta() -> CheckpointMeta {
+        CheckpointMeta {
+            adapter: "metatt4p1d".into(),
+            rank: 6,
+            tasks: 3,
+            alpha: 1.5,
+            model: "tiny".into(),
+        }
+    }
+
+    #[test]
+    fn v2_meta_roundtrips_and_v1_loads_as_legacy() {
+        let mut rng = Pcg64::new(2);
+        let tensors = vec![("g1".to_string(), Tensor::randn(&[8, 4], 1.0, &mut rng))];
+        let dir = std::env::temp_dir().join("metatt_ckpt_test");
+        let v2 = dir.join("meta.bin");
+        save_with_meta(&v2, &demo_meta(), &tensors).unwrap();
+        let (meta, loaded) = load_with_meta(&v2).unwrap();
+        assert_eq!(meta.as_ref(), Some(&demo_meta()));
+        assert_eq!(loaded, tensors);
+        // The meta-unaware `load` reads v2 files too (meta skipped).
+        assert_eq!(load(&v2).unwrap(), tensors);
+        // Legacy v1 files come back with no metadata, tensors intact.
+        let v1 = dir.join("legacy.bin");
+        save(&v1, &tensors).unwrap();
+        let (meta1, loaded1) = load_with_meta(&v1).unwrap();
+        assert!(meta1.is_none());
+        assert_eq!(loaded1, tensors);
+        std::fs::remove_file(&v2).ok();
+        std::fs::remove_file(&v1).ok();
+    }
+
+    #[test]
+    fn v2_with_corrupt_meta_is_rejected() {
+        let dir = std::env::temp_dir().join("metatt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Truncated meta section: header claims more bytes than present.
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"MTT2");
+        buf.extend_from_slice(&100u32.to_le_bytes());
+        buf.extend_from_slice(b"{}"); // only 2 of the promised 100 bytes
+        let p = dir.join("trunc_meta.bin");
+        std::fs::write(&p, &buf).unwrap();
+        assert!(load_with_meta(&p).unwrap_err().contains("truncated"));
+        std::fs::remove_file(&p).ok();
+        // Valid-length but incomplete meta JSON: a clean field error.
+        let meta_json = b"{\"adapter\": \"lora\"}";
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"MTT2");
+        buf.extend_from_slice(&(meta_json.len() as u32).to_le_bytes());
+        buf.extend_from_slice(meta_json);
+        buf.extend_from_slice(&0u32.to_le_bytes()); // zero tensors
+        let p = dir.join("partial_meta.bin");
+        std::fs::write(&p, &buf).unwrap();
+        let err = load_with_meta(&p).unwrap_err();
+        assert!(err.contains("meta missing"), "unexpected: {err}");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

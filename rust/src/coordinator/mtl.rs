@@ -45,6 +45,9 @@ pub struct MtlResult {
     pub best_mean: f64,
     /// Per-task metric at the best-mean epoch.
     pub best_per_task: Vec<f64>,
+    /// Final trained adapter tensors (export layout) — what `metatt mtl
+    /// --save-adapter` checkpoints for the serving engine.
+    pub params: Vec<crate::tensor::Tensor>,
 }
 
 /// Joint training configuration on top of [`TrainConfig`].
@@ -212,5 +215,6 @@ pub fn run_mtl(
         best_mean: best.mean_metric,
         best_per_task: best.metrics.clone(),
         epochs,
+        params,
     })
 }

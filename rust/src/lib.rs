@@ -40,7 +40,8 @@
 //! | [`data`] | synthetic GLUE suite + MLM pretraining corpus |
 //! | [`metrics`] | accuracy, Matthews, Spearman, seed aggregation |
 //! | [`runtime`] | `Backend`/`Step` seam: pure-rust ref executor, spec-derived I/O layouts, artifact registry, PJRT cache (feature `pjrt`) |
-//! | [`coordinator`] | trainers (single-task, MTL, DMRG), checkpoints |
+//! | [`serving`] | multi-task serving engine: bounded admission queue, dynamic same-task batcher, per-task folded-adapter LRU cache with checkpoint hot-swap, closed-loop load generator (`BENCH_pr5.json`) |
+//! | [`coordinator`] | trainers (single-task, MTL, DMRG), checkpoints (v2 container carries adapter metadata) |
 //! | [`bench`] | micro-bench harness + paper-style table emitters |
 //! | [`config`] | experiment configuration (TOML, incl. backend + `[runtime] threads`) |
 //! | [`cli`] | launcher argument parsing |
@@ -56,6 +57,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;
+pub mod serving;
 pub mod tensor;
 pub mod testutil;
 pub mod tt;

@@ -6,7 +6,7 @@
 //!   train     --task mrpc_syn    single-task fine-tuning (Table-1 protocol)
 //!   mtl       --tasks a,b,c      joint multi-task training (Table-2)
 //!   dmrg      --task mrpc_syn    AdamW + DMRG rank-annealing (Figs 2/6)
-//!   serve     --requests N       folded-adapter serving loop (apply artifact)
+//!   serve     --requests N       multi-task serving engine + load generator
 //!
 //! Every run appends a JSONL record under results/.
 
@@ -16,7 +16,7 @@ use metatt::cli::Args;
 use metatt::config::{ModelPreset, TrainConfig};
 use metatt::coordinator::{self, results, DmrgConfig, MtlConfig, PretrainConfig};
 use metatt::data::TaskId;
-use metatt::runtime::{checkpoint_path, make_backend, Backend, BackendKind, Step};
+use metatt::runtime::{checkpoint_path, make_backend, Backend, BackendKind};
 use metatt::tt::{InitStrategy, RankSchedule};
 use metatt::util::json::Json;
 use std::path::Path;
@@ -26,16 +26,34 @@ metatt <command> [options]
 
 commands:
   info       show backend status (and artifact manifest, pjrt backend)
-  pretrain   --model tiny|small|base_sim --steps N [--lr F] [--seed N]
-  train      --task T --adapter A --rank R [--alpha F] [--epochs N]
+  pretrain   MLM-pretrain the frozen backbone
+             --model tiny|small|base_sim [--steps N] [--lr F] [--seed N]
+  train      single-task fine-tuning (Table-1 protocol)
+             --task T [--adapter A] [--rank R] [--alpha F] [--epochs N]
              [--batch N] [--lr F] [--seed N] [--init ze-id-id-id]
-             [--train-cap N] [--no-checkpoint]
-  mtl        --tasks a,b,c --adapter A --rank R [--alpha F] [--epochs N] ...
-  dmrg       --task T [--adapter metatt5d] [--start-rank 10]
-             [--schedule e:r,e:r,...] [--epochs N] [--seed N]
-  seq        --task-a A --task-b B — sequential A→B→A transfer (forgetting)
-  serve      --requests N [--rank R] — run the folded adapter apply step
-  run        --config configs/foo.toml — config-file-driven run
+             [--train-cap N] [--eval-cap N] [--warmup-ratio F]
+             [--grad-clip F] [--save-adapter FILE] [--no-checkpoint]
+  mtl        joint multi-task training with a task core (Table-2)
+             --tasks a,b,c [--adapter metatt4p1d] [--rank R] [--alpha F]
+             [--epochs N] [--batch N] [--lr F] [--seed N] [--train-cap N]
+             [--eval-cap N] [--warmup-ratio F] [--grad-clip F]
+             [--save-adapter FILE] [--no-checkpoint]
+  dmrg       AdamW + DMRG rank-annealing (Figs 2/6)
+             --task T [--adapter metatt5d] [--start-rank 10]
+             [--schedule e:r,e:r,...] [--alpha F] [--epochs N] [--seed N]
+  seq        sequential A->B->A transfer / forgetting measurement
+             --task-a A --task-b B [--adapter A] [--rank R] [--alpha F]
+             [--epochs N] [--batch N] [--lr F] [--seed N] [--no-checkpoint]
+  serve      multi-task serving engine: queue -> dynamic batcher -> per-task
+             folded-adapter cache -> workers, driven by the closed-loop load
+             generator; records BENCH_pr5.json
+             [--requests N] [--clients C] [--num-tasks T] [--classes K]
+             [--adapter A] [--rank R] [--alpha F] [--checkpoint FILE]
+             [--max-batch B] [--batch-deadline-ms MS] [--serve-workers W]
+             [--queue-cap N] [--cache-cap N] [--mix w1,w2,...]
+             [--think-us U] [--seed N] [--no-checkpoint]
+  run        config-file-driven run
+             --config configs/foo.toml
 
 options shared:
   --backend ref|pjrt   execution backend (default ref: hermetic pure-rust
@@ -59,6 +77,10 @@ const OPTS: &[&str] = &[
     "model", "steps", "lr", "seed", "task", "tasks", "adapter", "rank", "alpha",
     "epochs", "batch", "init", "train-cap", "eval-cap", "artifacts", "schedule",
     "start-rank", "requests", "warmup-ratio", "grad-clip",
+    // serve engine + load generator, and the adapter-checkpoint writer
+    "clients", "num-tasks", "classes", "checkpoint", "max-batch",
+    "batch-deadline-ms", "serve-workers", "queue-cap", "cache-cap", "mix",
+    "think-us", "save-adapter",
 ];
 const FLAGS: &[&str] = &["help", "no-checkpoint", "verbose"];
 
@@ -216,6 +238,49 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
     Ok(t)
 }
 
+/// `--save-adapter PATH`: checkpoint trained adapter tensors in the v2
+/// (metadata) container so `metatt serve --checkpoint PATH` can validate
+/// and serve them. No-op when the flag is absent.
+fn save_adapter_if_requested(
+    args: &Args,
+    spec: &AdapterSpec,
+    model: ModelPreset,
+    params: &[metatt::tensor::Tensor],
+) -> Result<()> {
+    let Some(path) = args.get("save-adapter") else {
+        return Ok(());
+    };
+    if matches!(spec.kind, metatt::adapters::AdapterKind::Full) {
+        bail!("--save-adapter covers adapter states; full fine-tuning saves through the pretrain checkpoint format");
+    }
+    let specs = spec.param_specs();
+    anyhow::ensure!(
+        specs.len() == params.len(),
+        "adapter state has {} tensors, layout wants {}",
+        params.len(),
+        specs.len()
+    );
+    let meta = metatt::coordinator::checkpoint::CheckpointMeta {
+        adapter: spec.kind.name(),
+        rank: spec.rank,
+        tasks: spec.dims.tasks,
+        alpha: spec.alpha,
+        model: model.name().to_string(),
+    };
+    let named: Vec<(String, metatt::tensor::Tensor)> = specs
+        .iter()
+        .map(|p| p.name.clone())
+        .zip(params.iter().cloned())
+        .collect();
+    metatt::coordinator::checkpoint::save_with_meta(Path::new(path), &meta, &named)
+        .map_err(|e| anyhow!(e))?;
+    println!(
+        "saved adapter checkpoint ({} rank {} over {} tasks) to {path}",
+        meta.adapter, meta.rank, meta.tasks
+    );
+    Ok(())
+}
+
 fn ckpt_for(args: &Args, model: ModelPreset) -> Option<std::path::PathBuf> {
     if args.flag("no-checkpoint") {
         return None;
@@ -323,6 +388,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     println!("best {}: {:.4}", task.info().metric.name(), res.best_metric);
+    save_adapter_if_requested(args, &spec, model, &res.params)?;
     results::append_record(
         "train",
         &Json::obj(vec![
@@ -382,6 +448,7 @@ fn cmd_mtl(args: &Args) -> Result<()> {
         );
     }
     println!("best mean metric: {:.4} {:?}", res.best_mean, res.best_per_task);
+    save_adapter_if_requested(args, &spec, model, &res.params)?;
     results::append_record(
         "mtl",
         &Json::obj(vec![
@@ -475,35 +542,191 @@ fn cmd_dmrg(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `metatt serve` — the multi-task serving engine driven by the in-process
+/// closed-loop load generator. The adapter state comes from `--checkpoint`
+/// (a v2 container's metadata is validated against — and fills in — the
+/// adapter flags) or, without one, a seeded normal-init MetaTT so the
+/// pipeline is exercisable out of the box. Emits `BENCH_pr5.json` via
+/// `bench::save_record` (env override `METATT_BENCH_PR5_OUT`).
 fn cmd_serve(args: &Args) -> Result<()> {
-    use metatt::tensor::Tensor;
+    use metatt::coordinator::checkpoint as ckpt;
+    use metatt::serving::{self, EngineConfig, LoadGenConfig, ServingEngine};
+    use metatt::tt::{CoreInit, InitStrategy};
     use metatt::util::rng::Pcg64;
-    let requests = args.usize_or("requests", 100).map_err(|e| anyhow!(e))?;
-    let rank = args.usize_or("rank", 8).map_err(|e| anyhow!(e))?;
-    let adapter = args.str_or("adapter", "metatt4d");
+    use std::time::Duration;
+
+    let mut model = parse_model(args)?;
+    let mut adapter =
+        AdapterKind::from_name(&args.str_or("adapter", "metatt4p1d")).map_err(|e| anyhow!(e))?;
+    let mut rank = args.usize_or("rank", 8).map_err(|e| anyhow!(e))?;
+    let mut alpha = args.f32_or("alpha", 2.0).map_err(|e| anyhow!(e))?;
+    let mut num_tasks = args.usize_or("num-tasks", 3).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+
+    // Adapter state: checkpoint tensors (+ metadata validation/adoption),
+    // or a deterministic synthetic adapter when no checkpoint is given.
+    let loaded = match args.get("checkpoint") {
+        Some(p) => {
+            let (meta, tensors) =
+                ckpt::load_with_meta(Path::new(p)).map_err(|e| anyhow!(e))?;
+            if let Some(m) = &meta {
+                // Explicitly-passed flags must agree with the metadata;
+                // unset flags adopt it — so `serve --checkpoint f` alone
+                // serves exactly what was trained.
+                if args.get("adapter").is_none() {
+                    adapter = AdapterKind::from_name(&m.adapter).map_err(|e| anyhow!(e))?;
+                } else if adapter.name() != m.adapter {
+                    bail!(
+                        "--adapter {} conflicts with checkpoint metadata ({})",
+                        adapter.name(),
+                        m.adapter
+                    );
+                }
+                if args.get("rank").is_none() {
+                    rank = m.rank;
+                } else if rank != m.rank {
+                    bail!("--rank {rank} conflicts with checkpoint metadata ({})", m.rank);
+                }
+                if args.get("num-tasks").is_none() {
+                    num_tasks = m.tasks;
+                } else if num_tasks != m.tasks {
+                    bail!(
+                        "--num-tasks {num_tasks} conflicts with checkpoint metadata ({})",
+                        m.tasks
+                    );
+                }
+                if args.get("alpha").is_none() {
+                    alpha = m.alpha;
+                } else if (alpha - m.alpha).abs() > 1e-6 {
+                    bail!("--alpha {alpha} conflicts with checkpoint metadata ({})", m.alpha);
+                }
+                if args.get("model").is_none() {
+                    model = ModelPreset::from_name(&m.model).map_err(|e| anyhow!(e))?;
+                } else if model.name() != m.model {
+                    bail!(
+                        "--model {} conflicts with checkpoint metadata ({})",
+                        model.name(),
+                        m.model
+                    );
+                }
+                println!(
+                    "checkpoint metadata: {} rank {} over {} tasks (model {}, alpha {})",
+                    m.adapter, m.rank, m.tasks, m.model, m.alpha
+                );
+            } else {
+                println!("note: legacy checkpoint (no metadata) — trusting the adapter flags");
+            }
+            Some(tensors)
+        }
+        None => None,
+    };
+
+    let cfg = EngineConfig {
+        model,
+        adapter,
+        rank,
+        alpha,
+        num_tasks,
+        classes: args.usize_or("classes", 2).map_err(|e| anyhow!(e))?,
+        max_batch: args.usize_or("max-batch", 8).map_err(|e| anyhow!(e))?,
+        batch_deadline: Duration::from_millis(
+            args.u64_or("batch-deadline-ms", 2).map_err(|e| anyhow!(e))?,
+        ),
+        queue_capacity: args.usize_or("queue-cap", 256).map_err(|e| anyhow!(e))?,
+        workers: args.usize_or("serve-workers", 2).map_err(|e| anyhow!(e))?,
+        cache_capacity: args
+            .usize_or("cache-cap", num_tasks.max(2))
+            .map_err(|e| anyhow!(e))?,
+    };
+    // Guard before any chain construction: metatt_from_tensors /
+    // build_metatt panic on non-TT families, the engine only folds TT.
+    let AdapterKind::MetaTt(tt_kind) = adapter else {
+        bail!("serve folds TT adapters only (got '{}')", adapter.name());
+    };
+    let aspec = serving::adapter_spec_for(&cfg);
+    let tt = match &loaded {
+        Some(tensors) => serving::metatt_from_tensors(&aspec, tensors).map_err(|e| anyhow!(e))?,
+        None => {
+            let init = InitStrategy { cores: vec![CoreInit::Normal; tt_kind.order()] };
+            aspec.build_metatt_with(&mut Pcg64::with_stream(seed, 0xada9), Some(&init))
+        }
+    };
+
     let backend = backend_for(args)?;
-    let spec = backend.apply_spec(&adapter, rank)?;
-    let entry = backend.entry(&spec)?;
-    let runner = backend.bind(&spec, &Default::default())?;
-    let mut rng = Pcg64::new(1);
-    let inputs: Vec<Tensor> = entry
-        .inputs
-        .iter()
-        .map(|io| Tensor::randn(&io.shape, 0.5, &mut rng))
-        .collect();
-    let t0 = std::time::Instant::now();
-    for _ in 0..requests {
-        let out = runner.run_raw(&inputs)?;
-        std::hint::black_box(out);
+    let backbone = ckpt_for(args, model);
+    let engine = ServingEngine::new(backend.as_ref(), cfg, tt, backbone.as_deref())?;
+
+    let requests = args.usize_or("requests", 100).map_err(|e| anyhow!(e))?;
+    let clients = args.usize_or("clients", 4).map_err(|e| anyhow!(e))?;
+    if requests == 0 || clients == 0 {
+        bail!("--requests and --clients must be >= 1");
     }
-    let dt = t0.elapsed().as_secs_f64();
-    let n = entry.inputs[0].shape[0];
+    let mix: Vec<f64> = match args.get("mix") {
+        None => Vec::new(),
+        Some(v) => {
+            let weights: Vec<f64> = v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow!("--mix expects comma-separated weights, got '{p}'"))
+                })
+                .collect::<Result<_>>()?;
+            // Validate here, not inside the load-client threads, so a bad
+            // flag is a flag error rather than "load client panicked".
+            if weights.len() != num_tasks {
+                bail!("--mix has {} weights but {num_tasks} tasks are served", weights.len());
+            }
+            if weights.iter().any(|w| !w.is_finite() || *w < 0.0) {
+                bail!("--mix weights must be finite and >= 0 (got {v})");
+            }
+            if weights.iter().sum::<f64>() <= 0.0 {
+                bail!("--mix needs at least one positive weight");
+            }
+            weights
+        }
+    };
+    let lcfg = LoadGenConfig {
+        clients,
+        requests_per_client: requests.div_ceil(clients).max(1),
+        seed,
+        task_mix: mix,
+        think_us: args.u64_or("think-us", 0).map_err(|e| anyhow!(e))?,
+    };
+
+    let report = serving::run_load(&engine, &lcfg)?;
+    let stats = engine.stats();
+    let cache = engine.cache_stats();
+    let lookups = (cache.hits + cache.folds).max(1);
     println!(
-        "served {requests} apply calls ({} tokens each) in {:.3}s — {:.1} req/s, {:.1}k tok/s",
-        n,
-        dt,
-        requests as f64 / dt,
-        requests as f64 * n as f64 / dt / 1e3
+        "served {} requests over {} tasks in {:.3}s — {:.1} req/s\n\
+         latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms\n\
+         {} batches (mean fill {:.2}/{})  cache hit rate {:.1}% ({} folds, {} evictions)",
+        report.total_requests,
+        engine.config().num_tasks,
+        report.elapsed,
+        report.throughput_rps,
+        report.latency.p50 * 1e3,
+        report.latency.p95 * 1e3,
+        report.latency.p99 * 1e3,
+        stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64,
+        engine.config().max_batch,
+        100.0 * cache.hits as f64 / lookups as f64,
+        cache.folds,
+        cache.evictions
+    );
+    let doc = serving::report_json(&engine, &lcfg, &report);
+    metatt::bench::save_record("pr5", &doc)?;
+    results::append_record(
+        "serve",
+        &Json::obj(vec![
+            ("adapter", Json::str(engine.config().adapter.name())),
+            ("num_tasks", Json::num(engine.config().num_tasks as f64)),
+            ("requests", Json::num(report.total_requests as f64)),
+            ("throughput_rps", Json::num(report.throughput_rps)),
+            ("p99_ms", Json::num(report.latency.p99 * 1e3)),
+        ]),
     );
     Ok(())
 }

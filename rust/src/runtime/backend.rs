@@ -81,6 +81,25 @@ pub trait Step {
     /// Raw positional execution (serving-apply / micro-bench path).
     fn run_raw(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
 
+    /// Batched folded-adapter serving forward (eval-spec steps only): the
+    /// cache-free inference encoder with per-(layer, matrix) pre-folded
+    /// factor pairs from [`crate::tt::MetaTt::fold_for_serving`] in place
+    /// of the family adapter math, CLS-pooled through the frozen head of
+    /// `task_id`. Logits land in `out` (`batch · classes`, row-major) —
+    /// nothing escapes the backend's workspace, so a warmed serving tick
+    /// allocates nothing. This is the multi-task serving engine's hot
+    /// path ([`crate::serving`]); backends without a host-side serving
+    /// forward report unsupported.
+    fn run_serve(
+        &self,
+        _pairs: &[Vec<(Tensor, Tensor)>],
+        _tokens: &[i32],
+        _task_id: i32,
+        _out: &mut [f32],
+    ) -> Result<()> {
+        anyhow::bail!("this backend has no folded-adapter serving path")
+    }
+
     /// Hand consumed step outputs (e.g. the gradient tensors of a train
     /// step, after the optimizer has applied them) back to the backend.
     /// The reference backend returns the buffers to its workspace arena so

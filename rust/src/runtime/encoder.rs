@@ -62,15 +62,16 @@ use crate::adapters::AdapterKind;
 use crate::config::ModelPreset;
 use crate::data::{Batch, MlmBatch};
 use crate::tensor::{
-    add_into, axpy_into, matmul_into, matmul_into_local, matmul_t_into,
-    matmul_t_into_local, scale_into, softmax_rows_into, t_matmul_into,
-    t_matmul_into_local, Tensor, Workspace,
+    add_into, axpy_into, matmul_into, matmul_into_local, matmul_into_prepacked,
+    matmul_t_into, matmul_t_into_local, scale_into, softmax_rows_into, t_matmul_into,
+    t_matmul_into_local, PackedB, Tensor, Workspace,
 };
 use crate::tt::MetaTtKind;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::{scope_for, scope_rows, SharedSliceMut};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 const PAD_ID: i32 = 0;
 const LN_EPS: f32 = 1e-5;
@@ -545,11 +546,13 @@ enum WeightSlot {
 }
 
 /// Per-call weight view: the bind-time name index plus the step's borrowed
-/// frozen map and trainable tensors. Resolution allocates nothing.
+/// frozen map, trainable tensors, and the bind-time packed-panel copies of
+/// the frozen layer weights. Resolution allocates nothing.
 struct Weights<'a> {
     index: &'a HashMap<String, WeightSlot>,
     frozen: &'a HashMap<String, Tensor>,
     trainable: &'a [Tensor],
+    packed: &'a HashMap<String, Vec<PackedB>>,
 }
 
 impl<'a> Weights<'a> {
@@ -577,6 +580,53 @@ impl<'a> Weights<'a> {
     /// copy is ever needed on the forward orientation).
     fn chunk(&self, name: &str, i: usize, len: usize) -> &'a [f32] {
         &self.get(name).data()[i * len..(i + 1) * len]
+    }
+
+    /// The bind-time packed-panel copy of layer chunk `i` of a frozen
+    /// weight, when one was built. Gated on the weight actually being
+    /// frozen *for this step*: full fine-tuning trains these arrays, and
+    /// its frozen map (assembled from a pretrained checkpoint) may still
+    /// carry their initial values — serving those stale panels instead of
+    /// the live trainable tensor would silently freeze the forward.
+    fn packed_chunk(&self, name: &str, i: usize) -> Option<&'a PackedB> {
+        match self.index.get(name) {
+            Some(WeightSlot::Frozen) => self.packed.get(name).and_then(|v| v.get(i)),
+            _ => None,
+        }
+    }
+}
+
+/// Forward `x·W` GEMM against a layer chunk of a stacked weight, routed
+/// through the bind-time packed-panel copy when one exists. Bit-identical
+/// either way — the cache only skips the per-call B pack.
+#[allow(clippy::too_many_arguments)]
+fn frozen_mm(
+    w: &Weights,
+    name: &str,
+    layer: usize,
+    x: &Tensor,
+    out: &mut Tensor,
+    k: usize,
+    n_cols: usize,
+    threads: usize,
+    ws: &mut Workspace,
+) {
+    let m = x.shape()[0];
+    match w.packed_chunk(name, layer) {
+        Some(p) => {
+            debug_assert_eq!((p.k(), p.n()), (k, n_cols));
+            matmul_into_prepacked(x.data(), p, out.data_mut(), m, threads, ws.packs());
+        }
+        None => matmul_into(
+            x.data(),
+            w.chunk(name, layer, k * n_cols),
+            out.data_mut(),
+            m,
+            k,
+            n_cols,
+            threads,
+            ws.packs(),
+        ),
     }
 }
 
@@ -622,11 +672,16 @@ fn dims_of(entry: &ArtifactEntry) -> Result<Dims> {
 
 /// Per-bound-step reusable state: the workspace arena (which owns the GEMM
 /// pack scratch), the weight-name and gradient-name indices, the persistent
-/// adapter-precompute containers, and the pooled layer-cache vector. Owned
-/// by the backend's step behind a mutex; after a one-step warmup, running a
-/// step against this scratch allocates nothing. (PR 3's bind-time
-/// transposed frozen-weight copies are gone: the packed kernel's B-pack
-/// absorbs the backward transpose at full speed, bit-identically.)
+/// adapter-precompute containers, the pooled layer-cache vector, and the
+/// bind-time packed-panel copies of the frozen layer weights. (PR 3's
+/// bind-time *transposed* frozen-weight copies stay gone: the packed
+/// kernel's B-pack absorbs the backward transpose bit-identically. The
+/// `packed` map below is the ROADMAP follow-up on the *forward* side —
+/// NR-panel packs of the step-invariant `x·W` operands, built once per
+/// bind so the forward GEMMs of every train/eval/serving call skip the
+/// per-call `pack_b` at the same memory cost as the deleted PR 3 copies.)
+/// Owned by the backend's step behind a mutex; after a one-step warmup,
+/// running a step against this scratch allocates nothing.
 pub struct StepScratch {
     ws: Workspace,
     index: HashMap<String, WeightSlot>,
@@ -636,10 +691,57 @@ pub struct StepScratch {
     /// Per-row f64 loss terms of the MLM objective (f64 lives outside the
     /// f32 arena; the container persists so pretrain steps stay pooled).
     row_loss: Vec<f64>,
+    /// Bind-time NR-panel packs of the frozen per-layer weight chunks in
+    /// their forward orientation (`wq`/`wk`/`wv`/`wo`/`w1`/`w2`), indexed
+    /// by layer. Shared (`Arc`) across every step bound against the same
+    /// frozen map — train + eval runners, all DMRG ranks, every serving
+    /// worker pay the panel memory once (the backend builds it via
+    /// [`pack_frozen_weights`] and caches per backbone). Backward `dY·Wᵀ`
+    /// GEMMs keep their per-call pack (caching the transposed orientation
+    /// too would double the memory again).
+    packed: Arc<PackedFrozen>,
+}
+
+/// Map of frozen stacked-weight name → per-layer-chunk packed panels.
+pub type PackedFrozen = HashMap<String, Vec<PackedB>>;
+
+/// The per-layer GEMM operand families worth packing at bind time.
+const PACKED_FAMILIES: [&str; 6] = ["wq", "wk", "wv", "wo", "w1", "w2"];
+
+/// Build the bind-time packed-panel cache for a frozen-weight map: every
+/// step-invariant per-layer forward operand present in the map (stacked
+/// `[l, k, n]`) is packed once in its forward orientation. A pure function
+/// of the map — which is what lets backends share the result across every
+/// spec bound against the same backbone `Arc`. Callers must invoke this
+/// only for specs that freeze these arrays (the backend skips it for full
+/// fine-tuning / pretrain / apply binds, whose frozen maps either lack the
+/// families or — full FT with a pretrained checkpoint — carry values no
+/// lookup may ever return; `Weights::packed_chunk` gates on the slot as
+/// the second line of defense). Bit-identity is free — the cached panels
+/// come from the same packer the per-call path runs.
+pub fn pack_frozen_weights(frozen: &HashMap<String, Tensor>) -> PackedFrozen {
+    let mut packed = PackedFrozen::new();
+    for name in PACKED_FAMILIES {
+        let Some(t) = frozen.get(name) else { continue };
+        if t.ndim() != 3 {
+            continue;
+        }
+        let (l, k, n) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+        let chunk = k * n;
+        let per_layer = (0..l)
+            .map(|li| PackedB::pack(&t.data()[li * chunk..(li + 1) * chunk], k, n))
+            .collect();
+        packed.insert(name.to_string(), per_layer);
+    }
+    packed
 }
 
 impl StepScratch {
-    pub fn new(entry: &ArtifactEntry, arena: bool) -> Result<StepScratch> {
+    pub fn new(
+        entry: &ArtifactEntry,
+        arena: bool,
+        packed: Arc<PackedFrozen>,
+    ) -> Result<StepScratch> {
         // Validates the spec's model preset at bind time (the historical
         // bind contract), even though the dims themselves are re-derived
         // per step call.
@@ -664,6 +766,7 @@ impl StepScratch {
             pre: AdapterPre::default(),
             layers: Vec::new(),
             row_loss: Vec::new(),
+            packed,
         })
     }
 
@@ -1635,6 +1738,28 @@ fn embed(
     x_emb
 }
 
+/// Base Q/K/V projections (frozen weights + biases, no adapter delta).
+fn project_qkv_base(
+    dims: &Dims,
+    w: &Weights,
+    x_in: &Tensor,
+    layer: usize,
+    threads: usize,
+    ws: &mut Workspace,
+) -> (Tensor, Tensor, Tensor) {
+    let Dims { n, d, .. } = *dims;
+    let mut q = ws.take(&[n, d]);
+    frozen_mm(w, "wq", layer, x_in, &mut q, d, d, threads, ws);
+    add_row_bias(&mut q, w.row("bq", layer, d));
+    let mut k = ws.take(&[n, d]);
+    frozen_mm(w, "wk", layer, x_in, &mut k, d, d, threads, ws);
+    add_row_bias(&mut k, w.row("bk", layer, d));
+    let mut v = ws.take(&[n, d]);
+    frozen_mm(w, "wv", layer, x_in, &mut v, d, d, threads, ws);
+    add_row_bias(&mut v, w.row("bv", layer, d));
+    (q, k, v)
+}
+
 /// Q/K/V projections with the layer's adapter deltas applied to Q and V.
 #[allow(clippy::too_many_arguments)]
 fn project_qkv(
@@ -1646,18 +1771,51 @@ fn project_qkv(
     threads: usize,
     ws: &mut Workspace,
 ) -> (Tensor, Tensor, Tensor, PairCache) {
-    let Dims { n, d, .. } = *dims;
-    let mut q = ws.take(&[n, d]);
-    matmul_into(x_in.data(), w.chunk("wq", layer, d * d), q.data_mut(), n, d, d, threads, ws.packs());
-    add_row_bias(&mut q, w.row("bq", layer, d));
-    let mut k = ws.take(&[n, d]);
-    matmul_into(x_in.data(), w.chunk("wk", layer, d * d), k.data_mut(), n, d, d, threads, ws.packs());
-    add_row_bias(&mut k, w.row("bk", layer, d));
-    let mut v = ws.take(&[n, d]);
-    matmul_into(x_in.data(), w.chunk("wv", layer, d * d), v.data_mut(), n, d, d, threads, ws.packs());
-    add_row_bias(&mut v, w.row("bv", layer, d));
+    let (mut q, k, mut v) = project_qkv_base(dims, w, x_in, layer, threads, ws);
     let pair = adapter.apply_pair(ws, x_in, layer, &mut q, &mut v);
     (q, k, v, pair)
+}
+
+/// Serving-path adapter delta: `q += x·A₀·B₀`, `v += x·A₁·B₁` with α (and
+/// the whole middle of the TT chain) pre-folded into A by
+/// [`crate::tt::MetaTt::fold_for_serving`]. The kernels accumulate into
+/// their output, so each delta fuses into the projection without a
+/// temporary; only the per-matrix `x·A` prefix is a workspace checkout.
+fn apply_folded_pair(
+    ws: &mut Workspace,
+    x: &Tensor,
+    pair: &[(Tensor, Tensor)],
+    q: &mut Tensor,
+    v: &mut Tensor,
+    threads: usize,
+) {
+    let n = x.shape()[0];
+    for (m, out) in [(0usize, &mut *q), (1, &mut *v)] {
+        let (a, b) = &pair[m];
+        let (d_in, ra) = (a.shape()[0], a.shape()[1]);
+        debug_assert_eq!(x.shape()[1], d_in);
+        let mut xa = ws.take(&[n, ra]);
+        matmul_into(x.data(), a.data(), xa.data_mut(), n, d_in, ra, threads, ws.packs());
+        matmul_into(
+            xa.data(),
+            b.data(),
+            out.data_mut(),
+            n,
+            ra,
+            b.shape()[1],
+            threads,
+            ws.packs(),
+        );
+        ws.recycle(xa);
+    }
+}
+
+/// Adapter representation for the inference forward: the trainable family
+/// parameters (the eval path) or pre-folded per-(layer, matrix) factor
+/// pairs (the serving path — family-agnostic, two GEMMs per delta).
+enum InferAdapter<'a> {
+    Family(AdapterCtx<'a>),
+    Folded(&'a [Vec<(Tensor, Tensor)>]),
 }
 
 /// Run the encoder; returns final hidden states (n × d) plus the embedding
@@ -1687,16 +1845,7 @@ fn encoder_forward(
         let (q, k, v, pair) = project_qkv(dims, w, adapter, &x_in, layer, threads, ws);
         let (ctx, probs) = attention_forward(dims, &q, &k, &v, tokens, threads, ws);
         let mut attn_out = ws.take(&[n, d]);
-        matmul_into(
-            ctx.data(),
-            w.chunk("wo", layer, d * d),
-            attn_out.data_mut(),
-            n,
-            d,
-            d,
-            threads,
-            ws.packs(),
-        );
+        frozen_mm(w, "wo", layer, &ctx, &mut attn_out, d, d, threads, ws);
         add_row_bias(&mut attn_out, w.row("bo", layer, d));
         let res1 = add_ws(ws, &x_in, &attn_out);
         ws.recycle(attn_out);
@@ -1707,29 +1856,11 @@ fn encoder_forward(
         // GELU MLP (tanh GELU is the most expensive elementwise op in the
         // step — band-parallel over rows).
         let mut u = ws.take(&[n, f]);
-        matmul_into(
-            x_mid.data(),
-            w.chunk("w1", layer, d * f),
-            u.data_mut(),
-            n,
-            d,
-            f,
-            threads,
-            ws.packs(),
-        );
+        frozen_mm(w, "w1", layer, &x_mid, &mut u, d, f, threads, ws);
         add_row_bias(&mut u, w.row("b1", layer, f));
         let g = gelu_ws(ws, &u, threads);
         let mut m_out = ws.take(&[n, d]);
-        matmul_into(
-            g.data(),
-            w.chunk("w2", layer, f * d),
-            m_out.data_mut(),
-            n,
-            f,
-            d,
-            threads,
-            ws.packs(),
-        );
+        frozen_mm(w, "w2", layer, &g, &mut m_out, f, d, threads, ws);
         add_row_bias(&mut m_out, w.row("b2", layer, d));
         let res2 = add_ws(ws, &x_mid, &m_out);
         ws.recycle(m_out);
@@ -1746,11 +1877,13 @@ fn encoder_forward(
 /// Inference-mode encoder forward: bit-identical hidden states, but no
 /// backward cache is built at all — every intermediate (LN stats, attention
 /// probabilities, adapter prefixes, layer activations) is recycled as soon
-/// as its consumer has run. This is what `eval_step` / serving use.
+/// as its consumer has run. `adapter` selects the delta form: the trainable
+/// family parameters (`eval_step`) or pre-folded factor pairs
+/// (`serve_step` — the multi-task serving engine's hot path).
 fn encoder_forward_infer(
     dims: &Dims,
     w: &Weights,
-    adapter: &AdapterCtx,
+    adapter: &InferAdapter,
     tokens: &[i32],
     threads: usize,
     ws: &mut Workspace,
@@ -1763,21 +1896,22 @@ fn encoder_forward_infer(
     let mut x = x0;
     for layer in 0..l {
         let x_in = x;
-        let (q, k, v, pair) = project_qkv(dims, w, adapter, &x_in, layer, threads, ws);
-        pair.recycle_into(ws);
+        let (q, k, v) = match adapter {
+            InferAdapter::Family(ctx) => {
+                let (q, k, v, pair) = project_qkv(dims, w, ctx, &x_in, layer, threads, ws);
+                pair.recycle_into(ws);
+                (q, k, v)
+            }
+            InferAdapter::Folded(pairs) => {
+                let (mut q, k, mut v) = project_qkv_base(dims, w, &x_in, layer, threads, ws);
+                apply_folded_pair(ws, &x_in, &pairs[layer], &mut q, &mut v, threads);
+                (q, k, v)
+            }
+        };
         let (ctx, probs) = attention_forward(dims, &q, &k, &v, tokens, threads, ws);
         ws.recycle_all([q, k, v, probs]);
         let mut attn_out = ws.take(&[n, d]);
-        matmul_into(
-            ctx.data(),
-            w.chunk("wo", layer, d * d),
-            attn_out.data_mut(),
-            n,
-            d,
-            d,
-            threads,
-            ws.packs(),
-        );
+        frozen_mm(w, "wo", layer, &ctx, &mut attn_out, d, d, threads, ws);
         add_row_bias(&mut attn_out, w.row("bo", layer, d));
         ws.recycle(ctx);
         let res1 = add_ws(ws, &x_in, &attn_out);
@@ -1788,30 +1922,12 @@ fn encoder_forward_infer(
         ws.recycle(res1);
 
         let mut u = ws.take(&[n, f]);
-        matmul_into(
-            x_mid.data(),
-            w.chunk("w1", layer, d * f),
-            u.data_mut(),
-            n,
-            d,
-            f,
-            threads,
-            ws.packs(),
-        );
+        frozen_mm(w, "w1", layer, &x_mid, &mut u, d, f, threads, ws);
         add_row_bias(&mut u, w.row("b1", layer, f));
         let g = gelu_ws(ws, &u, threads);
         ws.recycle(u);
         let mut m_out = ws.take(&[n, d]);
-        matmul_into(
-            g.data(),
-            w.chunk("w2", layer, f * d),
-            m_out.data_mut(),
-            n,
-            f,
-            d,
-            threads,
-            ws.packs(),
-        );
+        frozen_mm(w, "w2", layer, &g, &mut m_out, f, d, threads, ws);
         add_row_bias(&mut m_out, w.row("b2", layer, d));
         ws.recycle(g);
         let res2 = add_ws(ws, &x_mid, &m_out);
@@ -2117,8 +2233,8 @@ pub fn train_step(
     let task = task_id as usize;
     let kind = adapter_kind_of(entry)?;
     let train_encoder = entry.spec.adapter == "full";
-    let StepScratch { ws, index, grad_index, pre, layers, .. } = scratch;
-    let w = Weights { index: &*index, frozen, trainable };
+    let StepScratch { ws, index, grad_index, pre, layers, packed, .. } = scratch;
+    let w = Weights { index: &*index, frozen, trainable, packed: &**packed };
     pre.fill(kind, &dims, trainable, entry.spec.rank, task, 2, true, ws);
     let adapter = AdapterCtx {
         kind,
@@ -2187,10 +2303,10 @@ pub fn eval_step(
     let dims = dims_of(entry)?;
     let task = task_id as usize;
     let kind = adapter_kind_of(entry)?;
-    let StepScratch { ws, index, pre, .. } = scratch;
-    let w = Weights { index: &*index, frozen, trainable };
+    let StepScratch { ws, index, pre, packed, .. } = scratch;
+    let w = Weights { index: &*index, frozen, trainable, packed: &**packed };
     pre.fill(kind, &dims, trainable, entry.spec.rank, task, 2, false, ws);
-    let adapter = AdapterCtx {
+    let adapter = InferAdapter::Family(AdapterCtx {
         kind,
         params: trainable,
         alpha,
@@ -2201,12 +2317,90 @@ pub fn eval_step(
         d: dims.d,
         threads,
         pre: &*pre,
-    };
+    });
     let hidden = encoder_forward_infer(&dims, &w, &adapter, &batch.tokens, threads, ws);
     let logits = head_logits(&dims, &w, &hidden, task, threads, ws);
     ws.recycle(hidden);
     pre.recycle_into(ws);
     Ok(logits)
+}
+
+/// One batched serving forward (the multi-task engine's hot path): the
+/// cache-free inference encoder over **pre-folded** adapter factor pairs
+/// (`MetaTt::fold_for_serving` — family-agnostic, exactly two extra GEMMs
+/// per adapted projection), CLS-pooled through the frozen head of `task_id`.
+/// Logits are written into `out` (`batch · classes`, row-major) and nothing
+/// escapes the workspace, so a warmed serving tick performs zero heap
+/// allocations (pinned by `tests/alloc_regression.rs`).
+///
+/// Every row of the batch depends only on its own tokens (row-banded GEMMs,
+/// per-row LayerNorm/softmax, per-(batch, head) attention), so a response's
+/// bits are independent of which other requests were coalesced into the
+/// batch — the property that makes dynamic batching transparent to clients
+/// (pinned by `tests/serving.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_step(
+    entry: &ArtifactEntry,
+    frozen: &HashMap<String, Tensor>,
+    pairs: &[Vec<(Tensor, Tensor)>],
+    tokens: &[i32],
+    task_id: i32,
+    threads: usize,
+    scratch: &mut StepScratch,
+    out: &mut [f32],
+) -> Result<()> {
+    let dims = dims_of(entry)?;
+    if tokens.len() != dims.n {
+        bail!(
+            "serve: {} tokens supplied, spec {} wants {} ({} x {})",
+            tokens.len(),
+            entry.spec.stem(),
+            dims.n,
+            dims.b,
+            dims.s
+        );
+    }
+    if task_id < 0 || task_id as usize >= entry.spec.tasks.max(1) {
+        bail!("serve: task {} out of range ({} heads)", task_id, entry.spec.tasks.max(1));
+    }
+    if pairs.len() != dims.l {
+        bail!("serve: folded adapter has {} layers, model has {}", pairs.len(), dims.l);
+    }
+    for (l, row) in pairs.iter().enumerate() {
+        if row.len() != 2 {
+            bail!("serve: layer {l} folds {} matrices, expected 2 (Q, V)", row.len());
+        }
+        for (m, (a, b)) in row.iter().enumerate() {
+            let ra = a.shape()[a.ndim() - 1];
+            if a.shape() != &[dims.d, ra][..] || b.shape() != &[ra, dims.d][..] {
+                bail!(
+                    "serve: folded pair (layer {l}, matrix {m}) has shapes {:?}/{:?}, \
+                     want [{d}, r]/[r, {d}]",
+                    a.shape(),
+                    b.shape(),
+                    d = dims.d
+                );
+            }
+        }
+    }
+    if out.len() != dims.b * dims.classes {
+        bail!(
+            "serve: output buffer holds {} floats, batch {} x {} classes needs {}",
+            out.len(),
+            dims.b,
+            dims.classes,
+            dims.b * dims.classes
+        );
+    }
+    let StepScratch { ws, index, packed, .. } = scratch;
+    let w = Weights { index: &*index, frozen, trainable: &[], packed: &**packed };
+    let hidden =
+        encoder_forward_infer(&dims, &w, &InferAdapter::Folded(pairs), tokens, threads, ws);
+    let logits = head_logits(&dims, &w, &hidden, task_id as usize, threads, ws);
+    ws.recycle(hidden);
+    out.copy_from_slice(logits.data());
+    ws.recycle(logits);
+    Ok(())
 }
 
 /// One MLM pretraining step over all encoder weights (weight-tied output
@@ -2221,8 +2415,8 @@ pub fn pretrain_step(
 ) -> Result<(f32, Vec<Tensor>)> {
     validate_batch(entry, batch.batch_size, batch.seq_len)?;
     let dims = dims_of(entry)?;
-    let StepScratch { ws, index, grad_index, pre, layers, row_loss } = scratch;
-    let w = Weights { index: &*index, frozen, trainable };
+    let StepScratch { ws, index, grad_index, pre, layers, row_loss, packed } = scratch;
+    let w = Weights { index: &*index, frozen, trainable, packed: &**packed };
     let adapter = AdapterCtx {
         kind: None,
         params: trainable,

@@ -18,9 +18,10 @@ use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::collections::HashSet;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 
-/// Pure-rust CPU backend. Stateless apart from bind telemetry.
+/// Pure-rust CPU backend. Stateless apart from bind telemetry and the
+/// per-backbone packed-panel cache.
 pub struct RefBackend {
     /// Stems of every spec bound so far — the analogue of the PJRT
     /// executable cache, reported through `cached_executables` so the DMRG
@@ -33,6 +34,13 @@ pub struct RefBackend {
     /// path). Results are bit-identical either way; off is the plain
     /// allocate-per-intermediate reference mode.
     arena: bool,
+    /// Bind-time packed-panel caches, keyed by the identity of the frozen
+    /// `Arc` they were built from: every step bound against the same
+    /// backbone (train + eval runners, all DMRG ranks, every serving
+    /// worker) shares ONE packed copy of the frozen layer weights. Weak
+    /// keys keep the cache from pinning dropped backbones; dead entries
+    /// are pruned on the next bind.
+    packed: Mutex<Vec<(Weak<HashMap<String, Tensor>>, Arc<encoder::PackedFrozen>)>>,
 }
 
 /// Arena default from the environment: on unless `METATT_ARENA` is set to
@@ -71,7 +79,31 @@ impl RefBackend {
         // Size the lazily-created kernel pool for this budget (no-op if a
         // region already ran; the pool is capped at 16 workers regardless).
         crate::util::threadpool::request_pool_capacity(threads);
-        Ok(RefBackend { bound: Mutex::new(HashSet::new()), threads, arena })
+        Ok(RefBackend {
+            bound: Mutex::new(HashSet::new()),
+            threads,
+            arena,
+            packed: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The shared packed-panel copy of `frozen`'s layer weights, built on
+    /// the first bind against this backbone and reused (refcounted) by
+    /// every later bind of the same `Arc`. Identity is pointer equality on
+    /// a *live* entry: dead weak entries are pruned first, so a recycled
+    /// allocation address can never alias a stale cache line.
+    fn packed_frozen(&self, frozen: &Arc<HashMap<String, Tensor>>) -> Arc<encoder::PackedFrozen> {
+        let mut cache = self.packed.lock().unwrap();
+        cache.retain(|(weak, _)| weak.strong_count() > 0);
+        if let Some((_, packed)) = cache
+            .iter()
+            .find(|(weak, _)| std::ptr::eq(weak.as_ptr(), Arc::as_ptr(frozen)))
+        {
+            return Arc::clone(packed);
+        }
+        let packed = Arc::new(encoder::pack_frozen_weights(frozen));
+        cache.push((Arc::downgrade(frozen), Arc::clone(&packed)));
+        packed
     }
 }
 
@@ -135,15 +167,31 @@ impl Backend for RefBackend {
             }
         }
         self.bound.lock().unwrap().insert(spec.stem());
-        // One-time per-bind work: weight-name indices and the step's
-        // workspace arena — which owns the aligned pack scratch the packed
-        // GEMM kernels check their A/B panel buffers out of, so a warmed
-        // step packs without allocating. (No transposed frozen-weight
-        // copies anymore: the kernel's pack step absorbs the backward
-        // transpose bit-identically.) Refcount bump only for the frozen
-        // map itself — the backbone is shared across every bound step
-        // (train + eval runners, all DMRG ranks).
-        let scratch = encoder::StepScratch::new(&entry, self.arena)?;
+        // One-time per-bind work: weight-name indices, the step's workspace
+        // arena — which owns the aligned pack scratch the packed GEMM
+        // kernels check their A/B panel buffers out of, so a warmed step
+        // packs without allocating — and the bind-time packed-panel copies
+        // of the frozen layer weights (forward orientation), so the
+        // forward GEMMs of every subsequent call skip the per-call B pack
+        // entirely. (Backward `dY·Wᵀ` keeps its per-call pack: the kernel
+        // absorbs the transpose bit-identically, and caching both
+        // orientations would double the footprint.) Refcount bumps only
+        // for the frozen map and its shared packed panels — the backbone
+        // AND its packed copy are shared across every bound step (train +
+        // eval runners, all DMRG ranks, every serving worker).
+        // Only specs that actually *freeze* the per-layer weights consult
+        // the cache: full fine-tuning freezes just the classifier heads
+        // (its frozen map may still carry checkpointed encoder arrays the
+        // forward must never read from a stale pack), and pretrain/apply
+        // specs freeze nothing — all of those get an empty map instead of
+        // packing panels no lookup could ever return.
+        let packs_apply = entry.frozen_inputs().iter().any(|io| io.name == "wq");
+        let packed = if packs_apply {
+            self.packed_frozen(frozen)
+        } else {
+            Arc::new(encoder::PackedFrozen::new())
+        };
+        let scratch = encoder::StepScratch::new(&entry, self.arena, packed)?;
         Ok(Box::new(RefStep {
             entry,
             frozen: Arc::clone(frozen),
@@ -305,6 +353,32 @@ impl Step for RefStep {
                 self.entry.spec.stem()
             ),
         }
+    }
+
+    fn run_serve(
+        &self,
+        pairs: &[Vec<(Tensor, Tensor)>],
+        tokens: &[i32],
+        task_id: i32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if self.entry.spec.step != StepKind::Eval {
+            bail!(
+                "run_serve needs an eval-spec step (got {})",
+                self.entry.spec.stem()
+            );
+        }
+        let mut scratch = self.scratch.lock().unwrap();
+        encoder::serve_step(
+            &self.entry,
+            &self.frozen,
+            pairs,
+            tokens,
+            task_id,
+            self.threads,
+            &mut scratch,
+            out,
+        )
     }
 
     fn recycle(&self, outputs: Vec<Tensor>) {

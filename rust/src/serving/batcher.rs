@@ -1,0 +1,172 @@
+//! Dynamic same-task batching over the admission queue.
+//!
+//! A worker's [`BatchPolicy::next_batch`] blocks for the first available
+//! request, which pins the batch's task, then coalesces further same-task
+//! requests until the batch is full (`max_batch`) or the `deadline` tick
+//! since the first pop elapses. Mixed-task traffic never stalls: requests
+//! of *other* tasks stay queued for the next worker (or the next call),
+//! and workers waiting out a deadline release the queue lock, so admission
+//! and other workers' pops proceed concurrently.
+//!
+//! Batching is **transparent** to clients: every row of the padded serving
+//! batch depends only on its own tokens (see `runtime`'s `serve_step`), so
+//! a response's bits are independent of which requests happened to share
+//! its batch — the timing-dependent coalescing below never shows up in
+//! results, only in the batch-size histogram.
+
+use super::request::{AdmissionQueue, Pending};
+use std::time::{Duration, Instant};
+
+/// Dynamic-batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Hard batch-size cap (= the bound eval spec's batch dimension).
+    pub max_batch: usize,
+    /// How long a partially-filled batch waits for same-task stragglers
+    /// after its first request was popped. Zero = never wait (greedy).
+    pub deadline: Duration,
+}
+
+impl BatchPolicy {
+    /// Pop the next batch: blocks for the first request, coalesces same-task
+    /// arrivals up to `max_batch` or the deadline. Returns `None` once the
+    /// queue is closed *and* drained — the worker-shutdown signal.
+    pub(crate) fn next_batch(&self, q: &AdmissionQueue) -> Option<Vec<Pending>> {
+        debug_assert!(self.max_batch >= 1);
+        let mut inner = q.inner.lock().unwrap();
+        // Phase 1: block for the batch's first request.
+        let first = loop {
+            if let Some(p) = inner.queue.pop_front() {
+                break p;
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = q.not_empty.wait(inner).unwrap();
+        };
+        let task = first.req.task;
+        let mut batch = Vec::with_capacity(self.max_batch);
+        batch.push(first);
+        // The pop above freed a slot — wake blocked producers NOW, not
+        // after the deadline wait: a parked same-task producer is exactly
+        // the straggler the deadline window exists to absorb.
+        q.not_full.notify_all();
+        // Phase 2: coalesce same-task requests, waiting out the deadline
+        // when the batch is short. Each pass drains every same-task entry
+        // currently queued (other tasks are left in admission order).
+        let t0 = Instant::now();
+        loop {
+            let before = batch.len();
+            let mut i = 0;
+            while batch.len() < self.max_batch && i < inner.queue.len() {
+                if inner.queue[i].req.task == task {
+                    // remove(i) preserves the relative order of the rest.
+                    batch.push(inner.queue.remove(i).expect("index in range"));
+                } else {
+                    i += 1;
+                }
+            }
+            if batch.len() > before {
+                // More slots freed; unpark producers before (possibly)
+                // sleeping on the deadline.
+                q.not_full.notify_all();
+            }
+            if batch.len() >= self.max_batch || inner.closed {
+                break;
+            }
+            let waited = t0.elapsed();
+            if waited >= self.deadline {
+                break;
+            }
+            let (guard, _timeout) = q
+                .not_empty
+                .wait_timeout(inner, self.deadline - waited)
+                .unwrap();
+            inner = guard;
+            // Loop: drain whatever arrived, then re-check the deadline.
+        }
+        drop(inner);
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::request::{response_channel, Request};
+    use std::sync::mpsc::Receiver;
+    use std::sync::Arc;
+
+    fn push(q: &AdmissionQueue, id: u64, task: usize) -> Receiver<super::super::Response> {
+        let (tx, rx) = response_channel();
+        q.submit(Pending {
+            req: Request { id, task, tokens: vec![1] },
+            tx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        rx
+    }
+
+    #[test]
+    fn coalesces_same_task_and_leaves_others_queued() {
+        let q = AdmissionQueue::new(16);
+        let _rxs: Vec<_> = [(0u64, 0usize), (1, 1), (2, 0), (3, 0), (4, 1)]
+            .iter()
+            .map(|&(id, t)| push(&q, id, t))
+            .collect();
+        let policy = BatchPolicy { max_batch: 8, deadline: Duration::ZERO };
+        let b0 = policy.next_batch(&q).unwrap();
+        assert_eq!(
+            b0.iter().map(|p| p.req.id).collect::<Vec<_>>(),
+            vec![0, 2, 3],
+            "first batch takes every queued task-0 request"
+        );
+        let b1 = policy.next_batch(&q).unwrap();
+        assert_eq!(b1.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![1, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn max_batch_caps_a_burst() {
+        let q = AdmissionQueue::new(16);
+        let _rxs: Vec<_> = (0..5).map(|id| push(&q, id, 7)).collect();
+        let policy = BatchPolicy { max_batch: 2, deadline: Duration::ZERO };
+        let sizes: Vec<usize> = (0..3)
+            .map(|_| policy.next_batch(&q).unwrap().len())
+            .collect();
+        assert_eq!(sizes, vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn deadline_picks_up_late_same_task_arrivals() {
+        let q = Arc::new(AdmissionQueue::new(16));
+        let _rx0 = push(&q, 0, 3);
+        let q2 = Arc::clone(&q);
+        let feeder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            push(&q2, 1, 3)
+        });
+        let policy = BatchPolicy { max_batch: 4, deadline: Duration::from_millis(300) };
+        let b = policy.next_batch(&q).unwrap();
+        let _rx1 = feeder.join().unwrap();
+        assert_eq!(
+            b.iter().map(|p| p.req.id).collect::<Vec<_>>(),
+            vec![0, 1],
+            "the deadline window must absorb the late arrival"
+        );
+    }
+
+    #[test]
+    fn closed_and_drained_queue_ends_the_worker_loop() {
+        let q = AdmissionQueue::new(4);
+        let _rx = push(&q, 0, 0);
+        q.close();
+        let policy = BatchPolicy { max_batch: 4, deadline: Duration::from_millis(50) };
+        // The admitted request still comes out (no deadline wait once
+        // closed), then the loop signal.
+        let b = policy.next_batch(&q).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(policy.next_batch(&q).is_none());
+    }
+}

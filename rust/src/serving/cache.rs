@@ -1,0 +1,323 @@
+//! Per-task folded-adapter cache with LRU eviction, generation counters,
+//! and snapshot reads during hot-swap.
+//!
+//! The store holds the *chain-form* MetaTT adapter of the currently-loaded
+//! checkpoint and lazily folds it per task
+//! ([`crate::tt::MetaTt::fold_for_serving`], paper §2.4) the first time
+//! that task is requested — one fold per (generation, task), LRU-evicted
+//! beyond the capacity.
+//!
+//! **Hot-swap.** [`AdapterStore::reload`] installs a freshly-loaded adapter
+//! as a new *generation* without draining in-flight work: readers take a
+//! snapshot `Arc` of the current generation (the only shared lock on the
+//! read path is a briefly-held `RwLock` read guard around that clone) and
+//! keep using it for the batch they are executing even while a reload
+//! swaps the current pointer underneath them. Folded factors are immutable
+//! once published (`Arc<FoldedAdapter>`), so a batch never observes a
+//! half-updated adapter, and the generation id stamped on every response
+//! tells clients which checkpoint answered them. (Within one generation,
+//! lookups share a per-generation mutex — see [`AdapterStore::get`] for
+//! the fold-under-lock trade-off.)
+
+use crate::adapters::AdapterSpec;
+use crate::tensor::Tensor;
+use crate::tt::MetaTt;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Immutable folded factors for one (generation, task-slice): per
+/// (layer, matrix) pairs `(A = α·G1·mid, B = G_last)`, ready for the
+/// two-GEMM serving delta.
+#[derive(Debug)]
+pub struct FoldedAdapter {
+    /// Cache key the fold was computed for (the task index for the (4+1)D
+    /// task core; 0 for the task-free 4D/5D families).
+    pub key: usize,
+    /// Generation the factors were folded from.
+    pub generation: u64,
+    /// `pairs[layer][matrix]` factor pairs.
+    pub pairs: Vec<Vec<(Tensor, Tensor)>>,
+}
+
+struct LruEntry {
+    key: usize,
+    stamp: u64,
+    folded: Arc<FoldedAdapter>,
+}
+
+struct LruInner {
+    entries: Vec<LruEntry>,
+    clock: u64,
+}
+
+/// One loaded checkpoint: the chain-form adapter plus its fold cache.
+struct Generation {
+    id: u64,
+    tt: MetaTt,
+    folded: Mutex<LruInner>,
+}
+
+/// Cumulative cache counters (monotone across reloads).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Folded-adapter lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to run `fold_for_serving` (misses).
+    pub folds: u64,
+    /// Entries displaced by LRU pressure.
+    pub evictions: u64,
+    /// Reloads installed since construction.
+    pub reloads: u64,
+}
+
+/// The serving engine's adapter state: current generation + fold cache.
+pub struct AdapterStore {
+    current: RwLock<Arc<Generation>>,
+    capacity: usize,
+    hits: AtomicU64,
+    folds: AtomicU64,
+    evictions: AtomicU64,
+    reloads: AtomicU64,
+}
+
+impl AdapterStore {
+    /// Store over an initial adapter; `capacity` bounds the folded entries
+    /// kept per generation (>= 1).
+    pub fn new(tt: MetaTt, capacity: usize) -> AdapterStore {
+        assert!(capacity >= 1, "folded-adapter cache capacity must be >= 1");
+        AdapterStore {
+            current: RwLock::new(Arc::new(Generation {
+                id: 0,
+                tt,
+                folded: Mutex::new(LruInner { entries: Vec::new(), clock: 0 }),
+            })),
+            capacity,
+            hits: AtomicU64::new(0),
+            folds: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+        }
+    }
+
+    /// Current generation id (0 for the construction-time adapter).
+    pub fn generation(&self) -> u64 {
+        self.current.read().unwrap().id
+    }
+
+    /// Install a new adapter as the next generation. In-flight batches keep
+    /// their snapshot of the old generation; new lookups see the new one.
+    /// The fold cache starts empty (old folds describe old parameters).
+    pub fn reload(&self, tt: MetaTt) {
+        let mut cur = self.current.write().unwrap();
+        let id = cur.id + 1;
+        *cur = Arc::new(Generation {
+            id,
+            tt,
+            folded: Mutex::new(LruInner { entries: Vec::new(), clock: 0 }),
+        });
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Folded factors for `task` from the current generation, folding on
+    /// first use. The fold runs under the generation's cache lock so each
+    /// (generation, task) folds exactly once — the deliberate trade-off is
+    /// that while a fold is in progress, other lookups on the same
+    /// generation (including hits) wait on that lock; folds are
+    /// rank-sized-GEMM cheap and happen once per (generation, task), so a
+    /// per-entry once-cell is left as a ROADMAP follow-up rather than
+    /// complexity here. Reload hot-swap is unaffected: the generation
+    /// snapshot above is taken before this lock.
+    pub fn get(&self, task: usize) -> Arc<FoldedAdapter> {
+        // Snapshot the generation: after this clone, a concurrent reload
+        // cannot invalidate anything this lookup (or the batch built on
+        // it) touches.
+        let generation = self.current.read().unwrap().clone();
+        let key = if generation.tt.distinct_tasks() > 1 { task } else { 0 };
+        let mut lru = generation.folded.lock().unwrap();
+        lru.clock += 1;
+        let stamp = lru.clock;
+        if let Some(e) = lru.entries.iter_mut().find(|e| e.key == key) {
+            e.stamp = stamp;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(&e.folded);
+        }
+        self.folds.fetch_add(1, Ordering::Relaxed);
+        let folded = Arc::new(FoldedAdapter {
+            key,
+            generation: generation.id,
+            pairs: generation.tt.fold_for_serving(key),
+        });
+        if lru.entries.len() >= self.capacity {
+            let victim = lru
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i)
+                .expect("non-empty LRU");
+            lru.entries.swap_remove(victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        lru.entries.push(LruEntry { key, stamp, folded: Arc::clone(&folded) });
+        folded
+    }
+
+    /// Cumulative counters (hit rate = hits / (hits + folds)).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            folds: self.folds.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Rebuild the chain-form MetaTT adapter from a checkpoint's named tensors
+/// (export layout, the names of [`AdapterSpec::param_specs`]). Shapes are
+/// validated up front so a mismatched checkpoint fails with a field-level
+/// error instead of a panic deep inside `import_cores`.
+pub fn metatt_from_tensors(
+    spec: &AdapterSpec,
+    tensors: &[(String, Tensor)],
+) -> Result<MetaTt, String> {
+    let by_name: HashMap<&str, &Tensor> =
+        tensors.iter().map(|(n, t)| (n.as_str(), t)).collect();
+    let mut cores = Vec::new();
+    for p in spec.param_specs() {
+        let t = by_name
+            .get(p.name.as_str())
+            .ok_or_else(|| format!("checkpoint missing adapter core '{}'", p.name))?;
+        if t.shape() != &p.shape[..] {
+            return Err(format!(
+                "adapter core '{}': checkpoint shape {:?}, spec wants {:?} \
+                 (adapter {}, rank {})",
+                p.name,
+                t.shape(),
+                p.shape,
+                spec.kind.name(),
+                spec.rank
+            ));
+        }
+        cores.push((*t).clone());
+    }
+    // Build a correctly-shaped chain, then overwrite every core with the
+    // checkpoint values (seed irrelevant — fully overwritten).
+    let mut rng = crate::util::rng::Pcg64::new(0);
+    let mut tt = spec.build_metatt_with(&mut rng, None);
+    tt.import_cores(&cores);
+    Ok(tt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::AdapterKind;
+    use crate::config::ModelPreset;
+    use crate::tt::{InitStrategy, MetaTtKind};
+    use crate::util::rng::Pcg64;
+
+    fn demo_spec(tasks: usize) -> AdapterSpec {
+        AdapterSpec::new(
+            AdapterKind::MetaTt(MetaTtKind::FourPlusOneD),
+            4,
+            1.5,
+            ModelPreset::Tiny.dims(tasks),
+        )
+    }
+
+    fn demo_tt(seed: u64, tasks: usize) -> MetaTt {
+        let spec = demo_spec(tasks);
+        let init = InitStrategy {
+            cores: vec![crate::tt::CoreInit::Normal; MetaTtKind::FourPlusOneD.order()],
+        };
+        spec.build_metatt_with(&mut Pcg64::new(seed), Some(&init))
+    }
+
+    #[test]
+    fn fold_once_then_hit_then_evict_lru() {
+        let store = AdapterStore::new(demo_tt(1, 3), 2);
+        let a0 = store.get(0);
+        let again = store.get(0);
+        assert!(Arc::ptr_eq(&a0, &again), "second lookup must be a cache hit");
+        let _a1 = store.get(1);
+        assert_eq!(store.stats().folds, 2);
+        assert_eq!(store.stats().hits, 1);
+        assert_eq!(store.stats().evictions, 0);
+        // Touch task 0 so task 1 is the LRU victim, then insert task 2.
+        let _ = store.get(0);
+        let _ = store.get(2);
+        assert_eq!(store.stats().evictions, 1);
+        // Task 0 survived (recently used): another lookup is a hit.
+        let hits_before = store.stats().hits;
+        let _ = store.get(0);
+        assert_eq!(store.stats().hits, hits_before + 1);
+        // Task 1 was evicted: refetch refolds.
+        let folds_before = store.stats().folds;
+        let _ = store.get(1);
+        assert_eq!(store.stats().folds, folds_before + 1);
+    }
+
+    #[test]
+    fn reload_bumps_generation_without_invalidating_snapshots() {
+        let store = AdapterStore::new(demo_tt(1, 3), 4);
+        let old = store.get(1);
+        assert_eq!(old.generation, 0);
+        store.reload(demo_tt(2, 3));
+        assert_eq!(store.generation(), 1);
+        assert_eq!(store.stats().reloads, 1);
+        // The pre-reload snapshot stays fully usable (in-flight batch).
+        assert_eq!(old.pairs.len(), ModelPreset::Tiny.dims(3).layers);
+        // New lookups fold from the new parameters.
+        let new = store.get(1);
+        assert_eq!(new.generation, 1);
+        assert!(
+            new.pairs[0][0].0 != old.pairs[0][0].0,
+            "new generation must carry the reloaded parameters"
+        );
+    }
+
+    #[test]
+    fn task_free_families_share_one_cache_slot() {
+        let spec = AdapterSpec::new(
+            AdapterKind::MetaTt(MetaTtKind::FourD),
+            4,
+            1.0,
+            ModelPreset::Tiny.dims(1),
+        );
+        let init = InitStrategy {
+            cores: vec![crate::tt::CoreInit::Normal; 4],
+        };
+        let tt = spec.build_metatt_with(&mut Pcg64::new(9), Some(&init));
+        let store = AdapterStore::new(tt, 2);
+        let a = store.get(0);
+        let b = store.get(5); // any task index maps to the shared slot
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(store.stats().folds, 1);
+    }
+
+    #[test]
+    fn metatt_from_tensors_roundtrips_and_validates() {
+        let tt = demo_tt(3, 3);
+        let spec = demo_spec(3);
+        let named: Vec<(String, Tensor)> = spec
+            .param_specs()
+            .iter()
+            .zip(tt.export_cores())
+            .map(|(p, t)| (p.name.clone(), t))
+            .collect();
+        let rebuilt = metatt_from_tensors(&spec, &named).unwrap();
+        for k in 0..tt.chain.order() {
+            assert_eq!(tt.chain.core(k), rebuilt.chain.core(k), "core {k}");
+        }
+        // Missing core → clean error.
+        let err = metatt_from_tensors(&spec, &named[1..]).unwrap_err();
+        assert!(err.contains("missing adapter core"), "{err}");
+        // Wrong shape → clean error naming the core.
+        let mut bad = named.clone();
+        bad[0].1 = Tensor::zeros(&[2, 2]);
+        let err = metatt_from_tensors(&spec, &bad).unwrap_err();
+        assert!(err.contains("g1"), "{err}");
+    }
+}

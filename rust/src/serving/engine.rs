@@ -1,0 +1,374 @@
+//! The multi-task serving engine: admission queue → dynamic batcher →
+//! per-task folded-adapter cache → worker execution on the ref backend.
+//!
+//! One engine binds a single eval-spec step layout (batch = `max_batch`)
+//! against the frozen backbone and serves T tasks through it. Each worker
+//! thread binds its **own** step, so warmed serving ticks run concurrently
+//! on private workspace arenas (zero heap allocations per tick, pinned by
+//! `tests/alloc_regression.rs`) while the thread budget *inside* a tick is
+//! the backend's `--threads` kernel banding.
+//!
+//! Short batches are padded by repeating the first request's row; padding
+//! rows are computed and discarded. Every row of the batch depends only on
+//! its own tokens, so a response's bits are independent of batch
+//! composition — 1-worker and N-worker engines answer a given request
+//! stream bit-identically (`tests/serving.rs`).
+
+use super::batcher::BatchPolicy;
+use super::cache::{AdapterStore, CacheStats};
+use super::request::{
+    response_channel, AdmissionQueue, Pending, Request, Response, ResponseHandle,
+};
+use crate::adapters::{AdapterKind, AdapterSpec};
+use crate::config::ModelPreset;
+use crate::runtime::{assemble_frozen, ArtifactSpec, Backend, StepKind};
+use crate::tensor::Tensor;
+use crate::tt::MetaTt;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Engine configuration (CLI flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub model: ModelPreset,
+    /// Adapter family (must be a MetaTT variant — folding is the TT story).
+    pub adapter: AdapterKind,
+    pub rank: usize,
+    pub alpha: f32,
+    /// Number of served tasks (classifier-head arity; task-core arity for
+    /// the (4+1)D family).
+    pub num_tasks: usize,
+    /// Classes per task head (synthetic GLUE-style tasks are binary).
+    pub classes: usize,
+    /// Dynamic-batch cap = the bound eval spec's batch dimension.
+    pub max_batch: usize,
+    /// How long a short batch waits for same-task stragglers.
+    pub batch_deadline: Duration,
+    /// Admission-queue bound (producers block beyond it).
+    pub queue_capacity: usize,
+    /// Worker threads executing batches (each binds its own step).
+    pub workers: usize,
+    /// Folded-adapter LRU capacity (entries per generation).
+    pub cache_capacity: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            model: ModelPreset::Tiny,
+            adapter: AdapterKind::MetaTt(crate::tt::MetaTtKind::FourPlusOneD),
+            rank: 8,
+            alpha: 2.0,
+            num_tasks: 3,
+            classes: 2,
+            max_batch: 8,
+            batch_deadline: Duration::from_millis(2),
+            queue_capacity: 256,
+            workers: 2,
+            cache_capacity: 8,
+        }
+    }
+}
+
+/// Execution counters, all monotone (read with [`ServingEngine::stats`]).
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub batches: u64,
+    pub requests: u64,
+    /// `hist[k]` = batches that carried exactly k real requests (index 0
+    /// unused).
+    pub batch_hist: Vec<u64>,
+}
+
+struct StatsInner {
+    batches: AtomicU64,
+    requests: AtomicU64,
+    hist: Mutex<Vec<u64>>,
+}
+
+/// The engine. Holds no worker threads itself — [`ServingEngine::serve`]
+/// scopes them around a caller-supplied driver closure, so the engine can
+/// borrow the backend and still be used from plain tests and the CLI.
+pub struct ServingEngine<'b> {
+    backend: &'b dyn Backend,
+    cfg: EngineConfig,
+    spec: ArtifactSpec,
+    seq: usize,
+    vocab: usize,
+    frozen: Arc<HashMap<String, Tensor>>,
+    store: AdapterStore,
+    queue: AdmissionQueue,
+    policy: BatchPolicy,
+    stats: StatsInner,
+    next_id: AtomicU64,
+}
+
+impl<'b> ServingEngine<'b> {
+    /// Build an engine over `backend`, serving `tt` (chain form, typically
+    /// rebuilt from a checkpoint via
+    /// [`super::cache::metatt_from_tensors`]). `backbone` points at a
+    /// pretrained-backbone checkpoint; None falls back to the seeded
+    /// deterministic backbone (same rule as training).
+    pub fn new(
+        backend: &'b dyn Backend,
+        cfg: EngineConfig,
+        tt: MetaTt,
+        backbone: Option<&Path>,
+    ) -> Result<ServingEngine<'b>> {
+        if cfg.max_batch < 1 || cfg.workers < 1 || cfg.num_tasks < 1 || cfg.classes < 1 {
+            bail!("serving config: max_batch, workers, num_tasks, classes must all be >= 1");
+        }
+        if cfg.queue_capacity < 1 || cfg.cache_capacity < 1 {
+            bail!("serving config: queue_capacity and cache_capacity must be >= 1");
+        }
+        let AdapterKind::MetaTt(kind) = cfg.adapter else {
+            bail!(
+                "serving folds TT adapters only (got '{}'); train MetaTT variants \
+                 for multi-task serving",
+                cfg.adapter.name()
+            );
+        };
+        let dims = cfg.model.dims(cfg.num_tasks);
+        validate_adapter_fit(kind, &cfg, &tt)?;
+        let spec = ArtifactSpec {
+            step: StepKind::Eval,
+            model: cfg.model.name().to_string(),
+            adapter: cfg.adapter.name(),
+            rank: cfg.rank,
+            classes: cfg.classes,
+            tasks: cfg.num_tasks,
+            batch: cfg.max_batch,
+            seq: dims.max_seq,
+        };
+        let entry = backend.entry(&spec)?;
+        let frozen = Arc::new(assemble_frozen(&entry, backbone, cfg.model)?);
+        let store = AdapterStore::new(tt, cfg.cache_capacity);
+        let queue = AdmissionQueue::new(cfg.queue_capacity);
+        let policy = BatchPolicy { max_batch: cfg.max_batch, deadline: cfg.batch_deadline };
+        let hist = vec![0u64; cfg.max_batch + 1];
+        Ok(ServingEngine {
+            backend,
+            cfg,
+            spec,
+            seq: dims.max_seq,
+            vocab: dims.vocab,
+            frozen,
+            store,
+            queue,
+            policy,
+            stats: StatsInner {
+                batches: AtomicU64::new(0),
+                requests: AtomicU64::new(0),
+                hist: Mutex::new(hist),
+            },
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Sequence length every request must be tokenized to.
+    pub fn seq_len(&self) -> usize {
+        self.seq
+    }
+
+    /// Vocabulary bound for request token ids.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Current adapter-store generation (bumped by [`Self::reload`]).
+    pub fn generation(&self) -> u64 {
+        self.store.generation()
+    }
+
+    /// Folded-adapter cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.store.stats()
+    }
+
+    /// Execution counters (batch-size histogram index = real requests).
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            batches: self.stats.batches.load(Ordering::Relaxed),
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            batch_hist: self.stats.hist.lock().unwrap().clone(),
+        }
+    }
+
+    /// Hot-swap the adapter to a new chain state (e.g. a freshly-loaded
+    /// checkpoint) without draining in-flight batches: they finish on the
+    /// generation they snapshotted; subsequent batches fold from the new
+    /// one.
+    pub fn reload(&self, tt: MetaTt) -> Result<()> {
+        let AdapterKind::MetaTt(kind) = self.cfg.adapter else {
+            unreachable!("constructor enforces a MetaTT adapter");
+        };
+        validate_adapter_fit(kind, &self.cfg, &tt)?;
+        self.store.reload(tt);
+        Ok(())
+    }
+
+    /// Admit one request (blocking while the queue is full). The returned
+    /// handle resolves to the [`Response`] once a worker's batch carried it.
+    pub fn submit(&self, task: usize, tokens: Vec<i32>) -> Result<ResponseHandle> {
+        if task >= self.cfg.num_tasks {
+            bail!("task {task} out of range ({} served)", self.cfg.num_tasks);
+        }
+        if tokens.len() != self.seq {
+            bail!("request has {} tokens, spec wants {}", tokens.len(), self.seq);
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
+            bail!("token id {t} outside [0, {})", self.vocab);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = response_channel();
+        self.queue
+            .submit(Pending {
+                req: Request { id, task, tokens },
+                tx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|e| anyhow!(e))?;
+        Ok(ResponseHandle { id, rx })
+    }
+
+    /// Run the engine: spawn the worker pool, hand control to `driver`
+    /// (submit requests, reload checkpoints, …), then close the queue,
+    /// drain, and join. Worker failures — errors *or* panics — surface as
+    /// the returned error; a failing worker aborts the queue (close +
+    /// drop every queued request), so clients blocked on handles observe
+    /// a receive error instead of hanging and blocked producers wake up.
+    pub fn serve<R>(&self, driver: impl FnOnce(&Self) -> R) -> Result<R> {
+        std::thread::scope(|scope| {
+            let workers: Vec<_> = (0..self.cfg.workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        // catch_unwind so a panicking worker still runs the
+                        // fail-fast abort (a poisoned unwrap must not leave
+                        // admitted requests waiting on no one).
+                        let res = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| self.worker_loop()),
+                        );
+                        match res {
+                            Ok(Ok(())) => Ok(()),
+                            Ok(Err(e)) => {
+                                self.queue.abort();
+                                Err(e)
+                            }
+                            Err(_) => {
+                                self.queue.abort();
+                                Err(anyhow!("a serving worker panicked"))
+                            }
+                        }
+                    })
+                })
+                .collect();
+            // The driver is unwind-guarded too: a panicking driver (e.g. a
+            // failing test assertion) must still close the queue, or the
+            // scope would block forever joining workers parked on it. The
+            // panic is re-raised after the pool has shut down.
+            let out =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| driver(self)));
+            self.queue.close();
+            let mut first_err = None;
+            for w in workers {
+                match w.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                    Err(_) => {
+                        first_err =
+                            first_err.or(Some(anyhow!("a serving worker panicked")));
+                    }
+                }
+            }
+            let out = match out {
+                Ok(v) => v,
+                Err(payload) => std::panic::resume_unwind(payload),
+            };
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(out),
+            }
+        })
+    }
+
+    /// One worker: bind a private step, then batch → fold-lookup → execute
+    /// → fulfil until the queue closes. The token and logit buffers are
+    /// reused across ticks, so a warmed tick's only allocations are the
+    /// per-response logit vectors handed to clients.
+    fn worker_loop(&self) -> Result<()> {
+        let step = self.backend.bind(&self.spec, &self.frozen)?;
+        let (b, s, classes) = (self.cfg.max_batch, self.seq, self.cfg.classes);
+        let mut tokens = vec![0i32; b * s];
+        let mut logits = vec![0f32; b * classes];
+        while let Some(batch) = self.policy.next_batch(&self.queue) {
+            let task = batch[0].req.task;
+            let folded = self.store.get(task);
+            for (i, p) in batch.iter().enumerate() {
+                tokens[i * s..(i + 1) * s].copy_from_slice(&p.req.tokens);
+            }
+            // Pad short batches by repeating row 0 (valid tokens; output
+            // rows beyond the real requests are simply never read).
+            for i in batch.len()..b {
+                let (head, tail) = tokens.split_at_mut(i * s);
+                tail[..s].copy_from_slice(&head[..s]);
+            }
+            step.run_serve(&folded.pairs, &tokens, task as i32, &mut logits)?;
+            self.stats.batches.fetch_add(1, Ordering::Relaxed);
+            self.stats.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            self.stats.hist.lock().unwrap()[batch.len()] += 1;
+            let rows = batch.len();
+            for (i, p) in batch.into_iter().enumerate() {
+                // A dropped receiver (client gave up) is not an engine
+                // error; ignore the send result.
+                let _ = p.tx.send(Response {
+                    id: p.req.id,
+                    task,
+                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                    batch_rows: rows,
+                    generation: folded.generation,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build an [`AdapterSpec`] matching an engine config (shared by the CLI
+/// and tests when constructing or checkpointing adapters for serving).
+pub fn adapter_spec_for(cfg: &EngineConfig) -> AdapterSpec {
+    AdapterSpec::new(cfg.adapter, cfg.rank, cfg.alpha, cfg.model.dims(cfg.num_tasks))
+}
+
+/// Reject an adapter state that cannot serve this config. The task arity
+/// is structural only for the (4+1)D task core — a task-free 4D/5D adapter
+/// may serve any number of per-task heads.
+fn validate_adapter_fit(
+    kind: crate::tt::MetaTtKind,
+    cfg: &EngineConfig,
+    tt: &MetaTt,
+) -> Result<()> {
+    let want = MetaTt::dims_from_model(kind, &cfg.model.dims(cfg.num_tasks));
+    let mut got = tt.dims;
+    if kind != crate::tt::MetaTtKind::FourPlusOneD {
+        got.tasks = want.tasks;
+    }
+    if tt.kind != kind || got != want {
+        bail!(
+            "adapter state does not fit the serving config: state is {:?} over \
+             {:?}, config wants {:?} over {:?}",
+            tt.kind,
+            tt.dims,
+            kind,
+            want
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,335 @@
+//! Deterministic closed-loop load generator + the `BENCH_pr5.json` record.
+//!
+//! C client threads each replay a seeded request stream against an
+//! in-process [`ServingEngine`]: sample a task from the configured mix,
+//! generate that request's tokens, submit, block on the response, repeat
+//! (optionally with think time — the closed-loop "arrival pattern" knob:
+//! zero think time is a saturating burst, larger values approach an open
+//! trickle). Request *content* is a pure function of `(seed, client,
+//! index)` — [`request_stream`] exposes exactly the stream a client
+//! replays, which is what the parity and determinism tests in
+//! `tests/serving.rs` re-derive — while timing (and therefore batch
+//! composition) is free to vary; responses are bit-identical regardless.
+
+use super::engine::ServingEngine;
+use super::request::Response;
+use crate::bench::Stats;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, Result};
+use std::time::{Duration, Instant};
+
+/// Load-generation knobs.
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests each client issues.
+    pub requests_per_client: usize,
+    /// Stream seed: request content is a pure function of (seed, client,
+    /// request index).
+    pub seed: u64,
+    /// Per-task mix weights (len = engine num_tasks); empty = uniform.
+    pub task_mix: Vec<f64>,
+    /// Think time between a response and the client's next request (µs).
+    pub think_us: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> LoadGenConfig {
+        LoadGenConfig {
+            clients: 4,
+            requests_per_client: 25,
+            seed: 7,
+            task_mix: Vec::new(),
+            think_us: 0,
+        }
+    }
+}
+
+/// What one load run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub total_requests: usize,
+    pub elapsed: f64,
+    pub throughput_rps: f64,
+    /// End-to-end (submit → response) latency in seconds.
+    pub latency: Stats,
+    /// Requests per task.
+    pub per_task: Vec<u64>,
+}
+
+/// The deterministic request stream of one client: `(task, tokens)` for
+/// request `index`. Tests replay this to compute reference responses for
+/// the exact traffic a load run produced.
+pub fn request_stream(
+    cfg: &LoadGenConfig,
+    num_tasks: usize,
+    seq: usize,
+    vocab: usize,
+    client: usize,
+    count: usize,
+) -> Vec<(usize, Vec<i32>)> {
+    let mut rng = client_rng(cfg.seed, client);
+    let cum = cumulative_mix(&cfg.task_mix, num_tasks);
+    (0..count)
+        .map(|_| {
+            let task = sample_task(&mut rng, &cum);
+            let tokens = request_tokens(&mut rng, seq, vocab);
+            (task, tokens)
+        })
+        .collect()
+}
+
+fn client_rng(seed: u64, client: usize) -> Pcg64 {
+    Pcg64::with_stream(seed, 0x10ad ^ (client as u64).wrapping_mul(0x9e37_79b9))
+}
+
+/// One request's token ids: seq draws from `[1, vocab)` (0 is the pad id,
+/// which the attention mask treats as absent — synthetic requests keep
+/// every position real).
+pub fn request_tokens(rng: &mut Pcg64, seq: usize, vocab: usize) -> Vec<i32> {
+    (0..seq).map(|_| 1 + rng.uniform_usize(vocab - 1) as i32).collect()
+}
+
+fn cumulative_mix(weights: &[f64], num_tasks: usize) -> Vec<f64> {
+    let w: Vec<f64> = if weights.is_empty() {
+        vec![1.0; num_tasks]
+    } else {
+        assert_eq!(weights.len(), num_tasks, "task mix length != num tasks");
+        assert!(
+            weights.iter().all(|x| x.is_finite() && *x >= 0.0),
+            "task mix weights must be finite and >= 0 (got {weights:?})"
+        );
+        weights.to_vec()
+    };
+    let total: f64 = w.iter().sum();
+    assert!(total > 0.0, "task mix must have positive total weight");
+    let mut acc = 0.0;
+    w.iter()
+        .map(|x| {
+            acc += x / total;
+            acc
+        })
+        .collect()
+}
+
+fn sample_task(rng: &mut Pcg64, cum: &[f64]) -> usize {
+    let u = rng.uniform_f64();
+    cum.iter().position(|&c| u < c).unwrap_or(cum.len() - 1)
+}
+
+/// Drive the engine with `cfg.clients` closed-loop clients and fold the
+/// per-request latencies into a [`LoadReport`]. Responses are checked for
+/// id/task consistency; logits validation belongs to the test suite.
+///
+/// A short warmup wave (round-robin over every task, sized to the worker
+/// pool, its own RNG stream) runs before the clock starts and is excluded
+/// from the latency/throughput measurements, so the recorded percentiles
+/// reflect steady-state serving rather than worker bind + first-tick arena
+/// growth + cold folds. (Engine-side counters — batches, cache folds —
+/// still include the warmup ticks; folds happen once either way.)
+pub fn run_load(engine: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadReport> {
+    if cfg.clients == 0 || cfg.requests_per_client == 0 {
+        anyhow::bail!(
+            "load generator needs >= 1 client and >= 1 request per client \
+             (got {} x {})",
+            cfg.clients,
+            cfg.requests_per_client
+        );
+    }
+    let num_tasks = engine.config().num_tasks;
+    let (seq, vocab) = (engine.seq_len(), engine.vocab());
+    let (elapsed, per_client): (f64, Vec<(Vec<f64>, Vec<u64>)>) = engine.serve(|eng| {
+        let mut wrng = Pcg64::with_stream(cfg.seed, 0x3a97);
+        let warm = (eng.config().workers * 2).max(num_tasks);
+        for i in 0..warm {
+            let tokens = request_tokens(&mut wrng, seq, vocab);
+            eng.submit(i % num_tasks, tokens)?
+                .wait()
+                .map_err(|e| anyhow!(e))?;
+        }
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..cfg.clients)
+                .map(|client| {
+                    scope.spawn(move || -> Result<(Vec<f64>, Vec<u64>)> {
+                        let stream = request_stream(
+                            cfg,
+                            num_tasks,
+                            seq,
+                            vocab,
+                            client,
+                            cfg.requests_per_client,
+                        );
+                        let mut lats = Vec::with_capacity(stream.len());
+                        let mut per_task = vec![0u64; num_tasks];
+                        for (task, tokens) in stream {
+                            let sent = Instant::now();
+                            let handle = eng.submit(task, tokens)?;
+                            let resp: Response =
+                                handle.wait().map_err(|e| anyhow!(e))?;
+                            lats.push(sent.elapsed().as_secs_f64());
+                            if resp.task != task {
+                                return Err(anyhow!(
+                                    "response task {} for a task-{task} request",
+                                    resp.task
+                                ));
+                            }
+                            per_task[task] += 1;
+                            if cfg.think_us > 0 {
+                                std::thread::sleep(Duration::from_micros(cfg.think_us));
+                            }
+                        }
+                        Ok((lats, per_task))
+                    })
+                })
+                .collect();
+            let mut results = Vec::with_capacity(handles.len());
+            for h in handles {
+                results.push(h.join().map_err(|_| anyhow!("load client panicked"))??);
+            }
+            Ok((t0.elapsed().as_secs_f64(), results))
+        })
+    })??;
+    let mut lats = Vec::new();
+    let mut per_task = vec![0u64; num_tasks];
+    for (l, p) in per_client {
+        lats.extend(l);
+        for (dst, src) in per_task.iter_mut().zip(&p) {
+            *dst += src;
+        }
+    }
+    let total = lats.len();
+    Ok(LoadReport {
+        total_requests: total,
+        elapsed,
+        throughput_rps: total as f64 / elapsed.max(1e-9),
+        latency: Stats::from_samples(lats),
+        per_task,
+    })
+}
+
+/// Assemble the `BENCH_pr5.json` document from a load run: latency
+/// percentiles, throughput, the batch-size histogram, and cache counters.
+pub fn report_json(engine: &ServingEngine, cfg: &LoadGenConfig, report: &LoadReport) -> Json {
+    let ecfg = engine.config();
+    let stats = engine.stats();
+    let cache = engine.cache_stats();
+    let lookups = cache.hits + cache.folds;
+    let mean_fill = if stats.batches > 0 {
+        stats.requests as f64 / stats.batches as f64
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("bench", Json::str("serving_engine")),
+        (
+            "config",
+            Json::obj(vec![
+                ("model", Json::str(ecfg.model.name())),
+                ("adapter", Json::str(ecfg.adapter.name())),
+                ("rank", Json::num(ecfg.rank as f64)),
+                ("num_tasks", Json::num(ecfg.num_tasks as f64)),
+                ("classes", Json::num(ecfg.classes as f64)),
+                ("max_batch", Json::num(ecfg.max_batch as f64)),
+                (
+                    "batch_deadline_ms",
+                    Json::num(ecfg.batch_deadline.as_secs_f64() * 1e3),
+                ),
+                ("workers", Json::num(ecfg.workers as f64)),
+                ("cache_capacity", Json::num(ecfg.cache_capacity as f64)),
+                ("clients", Json::num(cfg.clients as f64)),
+                ("requests_per_client", Json::num(cfg.requests_per_client as f64)),
+                ("seed", Json::num(cfg.seed as f64)),
+                ("think_us", Json::num(cfg.think_us as f64)),
+            ]),
+        ),
+        (
+            "load",
+            Json::obj(vec![
+                ("requests", Json::num(report.total_requests as f64)),
+                ("elapsed_s", Json::num(report.elapsed)),
+                ("throughput_rps", Json::num(report.throughput_rps)),
+                (
+                    "latency_s",
+                    Json::obj(vec![
+                        ("mean", Json::num(report.latency.mean)),
+                        ("p50", Json::num(report.latency.p50)),
+                        ("p95", Json::num(report.latency.p95)),
+                        ("p99", Json::num(report.latency.p99)),
+                    ]),
+                ),
+                (
+                    "per_task",
+                    Json::Arr(report.per_task.iter().map(|&n| Json::num(n as f64)).collect()),
+                ),
+            ]),
+        ),
+        (
+            "batches",
+            Json::obj(vec![
+                ("count", Json::num(stats.batches as f64)),
+                ("mean_fill", Json::num(mean_fill)),
+                (
+                    "size_histogram",
+                    Json::Arr(
+                        stats.batch_hist.iter().map(|&n| Json::num(n as f64)).collect(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "cache",
+            Json::obj(vec![
+                ("hits", Json::num(cache.hits as f64)),
+                ("folds", Json::num(cache.folds as f64)),
+                ("evictions", Json::num(cache.evictions as f64)),
+                ("reloads", Json::num(cache.reloads as f64)),
+                (
+                    "hit_rate",
+                    Json::num(if lookups > 0 {
+                        cache.hits as f64 / lookups as f64
+                    } else {
+                        0.0
+                    }),
+                ),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_stream_is_deterministic_and_respects_the_mix() {
+        let cfg = LoadGenConfig {
+            seed: 11,
+            task_mix: vec![1.0, 0.0, 3.0],
+            ..Default::default()
+        };
+        let a = request_stream(&cfg, 3, 8, 64, 0, 50);
+        let b = request_stream(&cfg, 3, 8, 64, 0, 50);
+        assert_eq!(a, b, "same (seed, client) must replay the same stream");
+        let other = request_stream(&cfg, 3, 8, 64, 1, 50);
+        assert_ne!(a, other, "clients must draw distinct streams");
+        // Zero-weight tasks never appear; tokens stay in [1, vocab).
+        for (task, tokens) in &a {
+            assert_ne!(*task, 1, "zero-weight task sampled");
+            assert!(tokens.iter().all(|&t| t >= 1 && t < 64));
+            assert_eq!(tokens.len(), 8);
+        }
+        // The heavier task dominates.
+        let t2 = a.iter().filter(|(t, _)| *t == 2).count();
+        assert!(t2 > 25, "weight-3 task drew only {t2}/50");
+    }
+
+    #[test]
+    #[should_panic(expected = "task mix length")]
+    fn wrong_mix_length_is_rejected() {
+        let cfg = LoadGenConfig { task_mix: vec![1.0], ..Default::default() };
+        let _ = request_stream(&cfg, 3, 8, 64, 0, 1);
+    }
+}

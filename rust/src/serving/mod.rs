@@ -1,0 +1,44 @@
+//! Multi-task serving engine over folded MetaTT adapters.
+//!
+//! MetaTT's deployment story (paper §2.4, and the TT-LoRA line of work):
+//! one frozen backbone, one compact TT adapter whose middle cores index
+//! layer, matrix type, and **task** — so serving many tasks means swapping
+//! tiny folded factor pairs, never the model. This module turns that into
+//! a real multi-tenant request path:
+//!
+//! ```text
+//! submit → [AdmissionQueue]  bounded, blocking backpressure
+//!        → [BatchPolicy]     dynamic same-task batching (max_batch /
+//!                            batch-deadline tick, padding-free semantics:
+//!                            row bits never depend on batchmates)
+//!        → [AdapterStore]    per-task fold_for_serving cache — lazy fold,
+//!                            LRU eviction, generation counters, snapshot
+//!                            reads through checkpoint hot-swap
+//!        → worker            Step::run_serve on the ref backend: the
+//!                            cache-free inference forward + two folded
+//!                            GEMMs per adapted projection, zero-allocation
+//!                            once warmed
+//!        → Response          per-request one-shot channel
+//! ```
+//!
+//! [`loadgen`] adds the deterministic closed-loop load generator that
+//! drives the engine in-process and emits `BENCH_pr5.json` (latency
+//! percentiles, throughput, batch-size histogram, cache hit rate).
+//!
+//! Entry points: [`ServingEngine::new`] → [`ServingEngine::serve`] with a
+//! driver closure; [`run_load`] for a full measured run (what `metatt
+//! serve` does).
+
+mod batcher;
+mod cache;
+mod engine;
+mod loadgen;
+mod request;
+
+pub use batcher::BatchPolicy;
+pub use cache::{metatt_from_tensors, AdapterStore, CacheStats, FoldedAdapter};
+pub use engine::{adapter_spec_for, EngineConfig, EngineStats, ServingEngine};
+pub use loadgen::{
+    report_json, request_stream, request_tokens, run_load, LoadGenConfig, LoadReport,
+};
+pub use request::{AdmissionQueue, Request, Response, ResponseHandle};

@@ -1,0 +1,204 @@
+//! Request/response types and the bounded admission queue.
+//!
+//! The queue is the engine's front door: [`AdmissionQueue::submit`] blocks
+//! (bounded backpressure) until a slot frees up or the engine shuts down,
+//! and workers drain it through the dynamic batcher
+//! ([`crate::serving::BatchPolicy`]). Each submission carries a one-shot
+//! response channel, so fulfilment never goes back through a shared lock.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// One classification request: a task index and one example's token ids
+/// (exactly the spec's sequence length, pre-tokenized).
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Engine-assigned id (unique per engine instance).
+    pub id: u64,
+    /// Task index (selects the folded adapter slice and the frozen head).
+    pub task: usize,
+    /// Token ids, length = spec seq, each in `[0, vocab)`.
+    pub tokens: Vec<i32>,
+}
+
+/// The engine's answer to one [`Request`].
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub task: usize,
+    /// Per-class logits through the task's frozen head.
+    pub logits: Vec<f32>,
+    /// How many real requests shared this request's batch (telemetry; the
+    /// logits bits are independent of it).
+    pub batch_rows: usize,
+    /// Adapter-store generation the folded factors came from.
+    pub generation: u64,
+}
+
+/// A queued request plus its completion channel and admission timestamp.
+pub(crate) struct Pending {
+    pub req: Request,
+    pub tx: mpsc::Sender<Response>,
+    #[allow(dead_code)] // queue-delay telemetry hook; latency is client-side
+    pub enqueued: Instant,
+}
+
+/// Client-side handle to one in-flight request.
+pub struct ResponseHandle {
+    pub id: u64,
+    pub(crate) rx: mpsc::Receiver<Response>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives. Errors if the engine dropped the
+    /// request (worker failure / shutdown before execution).
+    pub fn wait(self) -> Result<Response, String> {
+        self.rx
+            .recv()
+            .map_err(|_| format!("request {} dropped before a response was produced", self.id))
+    }
+}
+
+pub(crate) struct QueueInner {
+    pub queue: VecDeque<Pending>,
+    pub closed: bool,
+}
+
+/// Bounded MPMC admission queue: producers block when full, workers block
+/// when empty, `close` wakes everyone for shutdown (already-admitted
+/// requests still drain).
+pub struct AdmissionQueue {
+    pub(crate) inner: Mutex<QueueInner>,
+    pub(crate) not_empty: Condvar,
+    pub(crate) not_full: Condvar,
+    capacity: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> AdmissionQueue {
+        assert!(capacity >= 1, "admission queue capacity must be >= 1");
+        AdmissionQueue {
+            inner: Mutex::new(QueueInner { queue: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Admit a request, blocking while the queue is at capacity. Errors
+    /// once the queue is closed.
+    pub(crate) fn submit(&self, p: Pending) -> Result<(), String> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err("serving engine is shut down".into());
+            }
+            if inner.queue.len() < self.capacity {
+                inner.queue.push_back(p);
+                // Batching workers may all be parked in deadline waits on
+                // `not_empty`; wake every one so the first-request waiter
+                // is never starved by a filler.
+                self.not_empty.notify_all();
+                return Ok(());
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Close the queue: new submissions fail, workers drain what's left
+    /// and then observe the closed flag.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Fail-fast close: close AND drop every queued request. Dropping a
+    /// `Pending` drops its response sender, so blocked clients observe a
+    /// receive error instead of hanging forever — this is the worker-failure
+    /// path, where nothing may remain that no one will ever execute.
+    pub fn abort(&self) {
+        let drained = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.closed = true;
+            self.not_empty.notify_all();
+            self.not_full.notify_all();
+            std::mem::take(&mut inner.queue)
+        };
+        // Senders drop outside the lock.
+        drop(drained);
+    }
+
+    /// Requests currently waiting (diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One-shot completion channel for a request (engine + tests).
+pub(crate) fn response_channel() -> (mpsc::Sender<Response>, mpsc::Receiver<Response>) {
+    mpsc::channel()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(id: u64, task: usize) -> (Pending, mpsc::Receiver<Response>) {
+        let (tx, rx) = response_channel();
+        (
+            Pending {
+                req: Request { id, task, tokens: vec![1, 2, 3] },
+                tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn submit_and_close_semantics() {
+        let q = AdmissionQueue::new(2);
+        let (p0, _rx0) = pending(0, 0);
+        let (p1, _rx1) = pending(1, 1);
+        q.submit(p0).unwrap();
+        q.submit(p1).unwrap();
+        assert_eq!(q.len(), 2);
+        q.close();
+        let (p2, _rx2) = pending(2, 0);
+        assert!(q.submit(p2).is_err(), "closed queue must reject submissions");
+        // Already-admitted requests are still visible for draining.
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn bounded_capacity_blocks_until_a_worker_drains() {
+        use std::sync::Arc;
+        let q = Arc::new(AdmissionQueue::new(1));
+        let (p0, _rx0) = pending(0, 0);
+        q.submit(p0).unwrap();
+        // A second submit must block until the queue has room.
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let (p1, rx1) = pending(1, 0);
+            q2.submit(p1).map(|_| rx1)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "second submit should still be parked");
+        // Drain one; the parked producer gets its slot.
+        {
+            let mut inner = q.inner.lock().unwrap();
+            let _ = inner.queue.pop_front();
+            q.not_full.notify_all();
+        }
+        h.join().unwrap().unwrap();
+        assert_eq!(q.len(), 1);
+    }
+}

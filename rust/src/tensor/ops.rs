@@ -62,7 +62,7 @@
 //! The bench `hotpath_micro` §8 tracks per-shape GFLOP/s and the speedup
 //! over the retired PR 3 blocked kernel (`BENCH_pr4.json`).
 
-use super::workspace::PackScratch;
+use super::workspace::{AlignedBuf, PackScratch};
 use super::Tensor;
 use crate::util::threadpool::{gated_threads, scope_rows, SharedSliceMut};
 use std::cell::RefCell;
@@ -415,6 +415,105 @@ pub fn t_matmul_into_local(
     LOCAL_PACKS.with(|p| t_matmul_into(a, b, c, m, k, n, threads, &mut p.borrow_mut()));
 }
 
+// ---------------------------------------------------------------------------
+// Pre-packed right-hand operands (bind-time panel cache, ROADMAP item).
+// ---------------------------------------------------------------------------
+
+/// A pre-packed GEMM right-hand operand: the NR-panel form of a logical
+/// row-major `(k × n)` B, produced by the exact same `pack_b` the per-call
+/// path runs, held in an owned 64-byte-aligned buffer.
+///
+/// Step-invariant operands — frozen layer weights in their forward
+/// orientation, folded serving factors — can be packed once at bind/fold
+/// time; every subsequent [`matmul_into_prepacked`] then skips the per-call
+/// B pack (and its ~2× B read/write traffic) entirely. Bit-identity holds
+/// by construction: the cached panel bytes equal a fresh pack's, the
+/// microkernel consumes them with the same k-ascending per-element chain,
+/// and sub-[`PACK_MIN_MACS`] products run a scalar loop over the panels
+/// whose per-element chain matches `gemm_small` exactly.
+#[derive(Debug)]
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    buf: AlignedBuf,
+}
+
+impl PackedB {
+    /// Pack a row-major `(k × n)` operand (the forward `x·W` orientation).
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB {
+        assert_eq!(b.len(), k * n, "PackedB::pack: {} elements for ({k} x {n})", b.len());
+        let len = n.div_ceil(NR) * NR * k;
+        let mut buf = AlignedBuf::new();
+        pack_b(Orient::Nn, b, buf.slice_to(len), k, n);
+        PackedB { k, n, buf }
+    }
+
+    /// Inner (k) dimension of the logical operand.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output-column (n) dimension of the logical operand.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Bytes held by the panel copy (bind-time memory telemetry).
+    pub fn panel_bytes(&self) -> usize {
+        self.n.div_ceil(NR) * NR * self.k * std::mem::size_of::<f32>()
+    }
+
+    fn panels(&self) -> &[f32] {
+        self.buf.as_slice(self.n.div_ceil(NR) * NR * self.k)
+    }
+}
+
+/// [`matmul_into`] against a [`PackedB`]: `C (m×n) += A (m×k) · B`, with
+/// the per-call B pack skipped. Accumulates into C like every kernel in
+/// the family, and is bit-identical to the on-the-fly path for every shape
+/// and thread count (pinned by `prepacked_b_is_bit_identical` below and by
+/// `tests/gemm_props.rs`).
+pub fn matmul_into_prepacked(
+    a: &[f32],
+    bp: &PackedB,
+    c: &mut [f32],
+    m: usize,
+    threads: usize,
+    packs: &mut PackScratch,
+) {
+    let (k, n) = (bp.k, bp.n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if m * k * n < PACK_MIN_MACS {
+        return gemm_small_panels(a, bp.panels(), c, m, k, n);
+    }
+    // Only the A-side scratch is needed; request a zero-width B pack.
+    let (apack, _) = packs.for_shape(m, k, 0);
+    gemm_from_panels(Orient::Nn, a, bp.panels(), apack, c, m, k, n, threads);
+}
+
+/// Serial small-product path reading B from its NR-panels: every output
+/// element accumulates its k products in ascending order — exactly the
+/// chain of [`gemm_small`]'s Nn arm, so prepacked small products keep the
+/// family-wide bit-identity contract.
+fn gemm_small_panels(a: &[f32], bp: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            for (q, cchunk) in crow.chunks_mut(NR).enumerate() {
+                let brow = &bp[q * k * NR + kk * NR..q * k * NR + (kk + 1) * NR];
+                for (cv, &bv) in cchunk.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+}
+
 /// The one packed kernel behind all three orientations.
 #[allow(clippy::too_many_arguments)]
 fn gemm(
@@ -435,10 +534,29 @@ fn gemm(
     if m * k * n < PACK_MIN_MACS {
         return gemm_small(orient, a, b, c, m, k, n);
     }
-    let (mp, np) = (m.div_ceil(MR), n.div_ceil(NR));
     let (apack, bpack) = packs.for_shape(m, k, n);
     pack_b(orient, b, bpack, k, n);
-    let bp: &[f32] = bpack;
+    gemm_from_panels(orient, a, bpack, apack, c, m, k, n, threads);
+}
+
+/// The banding + microkernel body shared by the pack-on-call path and the
+/// prepacked-B path ([`matmul_into_prepacked`]). `orient` governs only how
+/// the A packer reads its source; `bp` already holds the NR-panels of the
+/// logical `(k × n)` B.
+#[allow(clippy::too_many_arguments)]
+fn gemm_from_panels(
+    orient: Orient,
+    a: &[f32],
+    bp: &[f32],
+    apack: &mut [f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    let (mp, np) = (m.div_ceil(MR), n.div_ceil(NR));
+    debug_assert_eq!(bp.len(), np * NR * k);
     let th = kernel_threads(threads, m * k * n);
     let cs = SharedSliceMut::new(c);
     let aps = SharedSliceMut::new(apack);
@@ -853,6 +971,39 @@ mod tests {
         let mut c3 = base.clone();
         t_matmul_into(at.data(), b.data(), c3.data_mut(), 5, 7, 4, 1, &mut packs);
         assert!(rel_err(&c3, &want) < 1e-5, "t_matmul_into accumulate");
+    }
+
+    #[test]
+    fn prepacked_b_is_bit_identical() {
+        // A bind-time PackedB must produce the same bits as the per-call
+        // pack on both sides of the small-product threshold, accumulating
+        // into non-zero C, at 1 and 4 threads.
+        let mut rng = Pcg64::new(17);
+        let mut packs = PackScratch::new();
+        for &(m, k, n) in &[
+            (1usize, 4usize, 4usize), // tiny: panel-reading scalar path
+            (3, 5, 7),                // ragged tiny
+            (8, 8, 8),                // just under the pack threshold
+            (64, 64, 64),             // packed path, exact panels
+            (37, 129, 21),            // packed path, ragged panels
+            (130, 70, 90),            // packed path, ragged everything
+        ] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let base = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let bp = PackedB::pack(b.data(), k, n);
+            assert_eq!((bp.k(), bp.n()), (k, n));
+            assert!(bp.panel_bytes() >= k * n * 4);
+            for threads in [1usize, 4] {
+                let mut c0 = base.clone();
+                matmul_into(a.data(), b.data(), c0.data_mut(), m, k, n, threads, &mut packs);
+                let mut c1 = base.clone();
+                matmul_into_prepacked(a.data(), &bp, c1.data_mut(), m, threads, &mut packs);
+                for (x, y) in c0.data().iter().zip(c1.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n}) threads={threads}");
+                }
+            }
+        }
     }
 
     #[test]

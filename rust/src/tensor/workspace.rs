@@ -59,9 +59,14 @@ pub struct AlignedBuf {
     cap: usize,
 }
 
-// SAFETY: AlignedBuf is an owning handle to a unique allocation; access
+// SAFETY: AlignedBuf is an owning handle to a unique allocation; mutation
 // goes through `&mut self`, so moving the handle across threads is sound.
 unsafe impl Send for AlignedBuf {}
+
+// SAFETY: shared references only expose reads (`as_slice` / `capacity` /
+// `as_ptr`); every write path takes `&mut self`, so `&AlignedBuf` can be
+// shared across threads like any read-only slice.
+unsafe impl Sync for AlignedBuf {}
 
 impl AlignedBuf {
     /// Alignment (bytes) of every allocation: one x86 cache line, and a
@@ -85,6 +90,22 @@ impl AlignedBuf {
     /// Storage pointer (for alignment assertions; null while empty).
     pub fn as_ptr(&self) -> *const f32 {
         self.ptr
+    }
+
+    /// Read-only view of the first `n` elements (`n` must be within the
+    /// current capacity). Storage is zero-initialized at allocation and
+    /// only ever written through `slice_to`, so the view is always
+    /// initialized. This is what lets a pre-packed GEMM operand
+    /// ([`crate::tensor::PackedB`]) be *shared* across worker bands: reads
+    /// need only `&self`.
+    pub fn as_slice(&self, n: usize) -> &[f32] {
+        if n == 0 {
+            return &[];
+        }
+        assert!(n <= self.cap, "as_slice({n}) beyond capacity {}", self.cap);
+        // SAFETY: `ptr` is a live allocation of `cap >= n` initialized f32s;
+        // shared borrows of self forbid concurrent mutation.
+        unsafe { std::slice::from_raw_parts(self.ptr, n) }
     }
 
     /// Mutable view of the first `n` elements, growing (re-allocating
@@ -406,6 +427,9 @@ mod tests {
         buf.slice_to(7).fill(3.5);
         // No growth on a smaller request; contents intact (scratch reuse).
         assert_eq!(buf.slice_to(3), &[3.5, 3.5, 3.5]);
+        // The shared read view sees the same storage.
+        assert_eq!(buf.as_slice(3), &[3.5, 3.5, 3.5]);
+        assert!(buf.as_slice(0).is_empty());
         buf.slice_to(1000);
         assert_eq!(buf.capacity(), 1000);
         assert_eq!(buf.slice_to(1000).as_ptr() as usize % AlignedBuf::ALIGN, 0);

@@ -251,11 +251,28 @@ impl MetaTt {
         }
     }
 
+    /// Number of tasks the adapter distinguishes: the task-core arity for
+    /// the (4+1)D variant, 1 for the task-free 4D/5D variants (every task
+    /// folds to the same factors). The serving engine's folded-adapter
+    /// cache keys on this.
+    pub fn distinct_tasks(&self) -> usize {
+        match self.kind {
+            MetaTtKind::FourPlusOneD => self.dims.tasks,
+            _ => 1,
+        }
+    }
+
     /// Pre-merge the middle cores into the boundary for serving (paper §2.4:
     /// "merge the middle tensor cores with G1 or G4 once the adapters are
     /// trained"). Returns per-(l,m[,t]) factor pairs (A = G1·mid scaled by α,
-    /// B = G_last) so serving does exactly two GEMMs like LoRA.
+    /// B = G_last) so serving does exactly two GEMMs like LoRA. The task
+    /// index only selects a slice for the (4+1)D task core; 4D/5D ignore it.
     pub fn fold_for_serving(&self, task: usize) -> Vec<Vec<(Tensor, Tensor)>> {
+        assert!(
+            self.kind != MetaTtKind::FourPlusOneD || task < self.dims.tasks,
+            "fold_for_serving: task {task} out of range ({} tasks)",
+            self.dims.tasks
+        );
         let g1 = self.chain.core(0).reshape(&[self.dims.d_in, self.chain.core(0).shape()[2]]);
         // Boundary factors are (l, m)-invariant — materialize them once
         // outside the loops instead of re-squeezing/re-scaling per pair
@@ -462,23 +479,57 @@ mod tests {
     }
 
     #[test]
-    fn folded_serving_form_matches_apply() {
+    fn folded_serving_form_matches_apply_all_families_and_tasks() {
+        // Serving-parity pin for EVERY adapter family and EVERY task index
+        // (the serving engine folds lazily per task, so no (family, task)
+        // combination may drift from the trained apply path).
         let mut rng = Pcg64::new(6);
+        let dims = dims4();
         for kind in [MetaTtKind::FourD, MetaTtKind::FiveD, MetaTtKind::FourPlusOneD] {
             let init = InitStrategy {
                 cores: vec![super::super::init::CoreInit::Normal; kind.order()],
             };
-            let tt = MetaTt::new(kind, dims4(), 3, 1.3, &init, &mut rng);
-            let folded = tt.fold_for_serving(1);
+            let tt = MetaTt::new(kind, dims, 3, 1.3, &init, &mut rng);
             let x = Tensor::randn(&[4, 16], 1.0, &mut rng);
-            for l in 0..3 {
-                for m in 0..2 {
-                    let (a, b) = &folded[l][m];
-                    let got = x.matmul(a).matmul(b);
-                    let want = tt.apply(&x, l, m, 1);
-                    assert!(rel_err(&got, &want) < 1e-4, "{:?} l={l} m={m}", kind);
+            for task in 0..dims.tasks {
+                let folded = tt.fold_for_serving(task);
+                assert_eq!(folded.len(), dims.layers, "{kind:?}");
+                for (l, row) in folded.iter().enumerate() {
+                    assert_eq!(row.len(), dims.matrices, "{kind:?} l={l}");
+                    for (m, (a, b)) in row.iter().enumerate() {
+                        // Uniform serving shape contract: A is (D_in × r),
+                        // B is (r × D_out) for every family.
+                        assert_eq!(a.shape()[0], dims.d_in, "{kind:?}");
+                        assert_eq!(b.shape()[1], dims.d_out, "{kind:?}");
+                        assert_eq!(a.shape()[1], b.shape()[0], "{kind:?}");
+                        let got = x.matmul(a).matmul(b);
+                        let want = tt.apply(&x, l, m, task);
+                        let err = rel_err(&got, &want);
+                        assert!(err < 1e-4, "{kind:?} t={task} l={l} m={m}: {err}");
+                    }
                 }
             }
+            // Task-free families fold identically for every task index.
+            if kind != MetaTtKind::FourPlusOneD {
+                assert_eq!(tt.distinct_tasks(), 1);
+                let f0 = tt.fold_for_serving(0);
+                let f2 = tt.fold_for_serving(2);
+                for l in 0..dims.layers {
+                    for m in 0..dims.matrices {
+                        assert_eq!(f0[l][m], f2[l][m], "{kind:?} fold must ignore task");
+                    }
+                }
+            } else {
+                assert_eq!(tt.distinct_tasks(), dims.tasks);
+            }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn fold_rejects_out_of_range_task_for_task_core() {
+        let mut rng = Pcg64::new(7);
+        let tt = MetaTt::new_default(MetaTtKind::FourPlusOneD, dims4(), 3, 1.0, &mut rng);
+        let _ = tt.fold_for_serving(99);
     }
 }

@@ -45,10 +45,12 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
+use metatt::adapters::{AdapterKind, AdapterSpec};
 use metatt::config::ModelPreset;
 use metatt::data::{Batcher, TaskId};
 use metatt::runtime::{assemble_frozen, ArtifactSpec, Backend, RefBackend, StepKind};
 use metatt::tensor::Tensor;
+use metatt::tt::{CoreInit, InitStrategy, MetaTtKind};
 use metatt::util::rng::Pcg64;
 
 fn allocs() -> u64 {
@@ -110,5 +112,51 @@ fn warmed_train_step_is_allocation_free_with_arena() {
         min_delta, 0,
         "warmed-up train step heap-allocated (min over 5 steps); \
          an intermediate is bypassing the workspace arena"
+    );
+
+    // --- Serving tick (PR 5): a warmed folded-adapter `run_serve` must
+    // also be allocation-free — logits are written into a caller buffer,
+    // the folded factors are pre-built, and the frozen forward GEMMs run
+    // off the bind-time packed panels. (Same test body: the allocation
+    // counter is process-global, see the module docs.)
+    let serve_spec = ArtifactSpec {
+        step: StepKind::Eval,
+        model: "tiny".into(),
+        adapter: "metatt4d".into(),
+        rank: 4,
+        classes: 2,
+        tasks: 1,
+        batch: 8,
+        seq: 16,
+    };
+    let serve_step = backend.bind(&serve_spec, &frozen).unwrap();
+    let aspec = AdapterSpec::new(
+        AdapterKind::MetaTt(MetaTtKind::FourD),
+        4,
+        1.5,
+        ModelPreset::Tiny.dims(1),
+    );
+    let init = InitStrategy { cores: vec![CoreInit::Normal; 4] };
+    let tt = aspec.build_metatt_with(&mut rng, Some(&init));
+    let folded = tt.fold_for_serving(0);
+    let tokens = batch.tokens.clone(); // 8 x 16, valid ids
+    let mut out = vec![0f32; 8 * 2];
+    serve_step.run_serve(&folded, &tokens, 0, &mut out).unwrap();
+    let ref_logits = out.clone();
+    serve_step.run_serve(&folded, &tokens, 0, &mut out).unwrap();
+    let mut min_serve_delta = u64::MAX;
+    for _ in 0..5 {
+        let before = allocs();
+        serve_step.run_serve(&folded, &tokens, 0, &mut out).unwrap();
+        let after = allocs();
+        min_serve_delta = min_serve_delta.min(after - before);
+        for (a, b) in out.iter().zip(&ref_logits) {
+            assert_eq!(a.to_bits(), b.to_bits(), "serving logits drifted across ticks");
+        }
+    }
+    assert_eq!(
+        min_serve_delta, 0,
+        "warmed-up serving tick heap-allocated (min over 5 ticks); \
+         the folded-inference path is bypassing the workspace arena"
     );
 }

@@ -19,8 +19,9 @@
 //! checked with a relative tolerance on top of the bitwise pins.
 
 use metatt::tensor::{
-    matmul_into, matmul_into_local, matmul_t_into, matmul_t_into_local, rel_err,
-    t_matmul_into, t_matmul_into_local, PackScratch, Tensor,
+    matmul_into, matmul_into_local, matmul_into_prepacked, matmul_t_into,
+    matmul_t_into_local, rel_err, t_matmul_into, t_matmul_into_local, PackScratch,
+    PackedB, Tensor,
 };
 use metatt::util::rng::Pcg64;
 
@@ -192,6 +193,38 @@ fn packed_t_matmul_bitwise_matches_k_ascending_oracle() {
         t_matmul_into,
         t_matmul_into_local,
     );
+}
+
+#[test]
+fn prepacked_b_bitwise_matches_k_ascending_oracle() {
+    // The bind-time PackedB cache (PR 5) must keep the exact per-element
+    // contract of the per-call path: same shapes, same thread counts, same
+    // accumulate-into-C semantics, identical bits — on both sides of the
+    // small-product dispatch.
+    let mut rng = Pcg64::new(10);
+    let mut packs = PackScratch::new();
+    for (m, k, n) in shapes() {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let base = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let mut want = base.data().to_vec();
+        oracle(
+            a.data(),
+            b.data(),
+            &mut want,
+            m,
+            k,
+            n,
+            |i, t| i * k + t,
+            |t, j| t * n + j,
+        );
+        let bp = PackedB::pack(b.data(), k, n);
+        for threads in [1usize, 4] {
+            let mut got = base.data().to_vec();
+            matmul_into_prepacked(a.data(), &bp, &mut got, m, threads, &mut packs);
+            assert_bits(&got, &want, &format!("prepacked ({m},{k},{n}) t{threads}"));
+        }
+    }
 }
 
 #[test]

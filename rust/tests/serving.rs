@@ -1,0 +1,326 @@
+//! End-to-end tests for the multi-task serving engine (PR 5).
+//!
+//! The load-bearing properties:
+//!
+//! 1. **Batching transparency** — a response that traveled the full
+//!    queue → dynamic-batcher → folded-cache → worker path is bit-identical
+//!    to a *direct single-request* `run_serve` forward (batch-1 spec bound
+//!    straight on the backend) for the same task and tokens. Every row of a
+//!    serving batch depends only on its own tokens, so coalescing and
+//!    padding never leak into results.
+//! 2. **Worker-count determinism** — 1-worker and N-worker engines answer
+//!    the same seeded request stream bit-identically, even though their
+//!    batch compositions differ.
+//! 3. **Serving ≈ training forward** — folded-path logits agree with the
+//!    family-path `run_eval` logits to FP-reassociation tolerance (exact
+//!    parity of the fold itself is pinned per family/task in tt::meta).
+//! 4. **Checkpoint round-trip** — the engine serves adapter state written
+//!    through the v2 (metadata) checkpoint container.
+//! 5. **Hot-swap** — `reload` bumps the generation served to later
+//!    requests without invalidating earlier ones.
+
+use metatt::adapters::AdapterKind;
+use metatt::config::ModelPreset;
+use metatt::coordinator::checkpoint::{self, CheckpointMeta};
+use metatt::data::Batch;
+use metatt::runtime::{assemble_frozen, ArtifactSpec, Backend, RefBackend, StepKind};
+use metatt::serving::{
+    adapter_spec_for, metatt_from_tensors, request_stream, EngineConfig, LoadGenConfig,
+    Response, ServingEngine,
+};
+use metatt::tt::{CoreInit, InitStrategy, MetaTt, MetaTtKind};
+use metatt::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+const TASKS: usize = 3;
+const RANK: usize = 4;
+const ALPHA: f32 = 1.3;
+
+fn engine_cfg(workers: usize, max_batch: usize) -> EngineConfig {
+    EngineConfig {
+        model: ModelPreset::Tiny,
+        adapter: AdapterKind::MetaTt(MetaTtKind::FourPlusOneD),
+        rank: RANK,
+        alpha: ALPHA,
+        num_tasks: TASKS,
+        classes: 2,
+        max_batch,
+        batch_deadline: Duration::from_millis(1),
+        queue_capacity: 128,
+        workers,
+        cache_capacity: TASKS,
+    }
+}
+
+/// A deterministic non-zero adapter state for the test config.
+fn demo_tt(seed: u64) -> MetaTt {
+    let spec = adapter_spec_for(&engine_cfg(1, 4));
+    let init = InitStrategy {
+        cores: vec![CoreInit::Normal; MetaTtKind::FourPlusOneD.order()],
+    };
+    spec.build_metatt_with(&mut Pcg64::new(seed), Some(&init))
+}
+
+/// The deterministic request stream the tests replay on both sides.
+fn demo_stream(count: usize) -> Vec<(usize, Vec<i32>)> {
+    let dims = ModelPreset::Tiny.dims(TASKS);
+    let lcfg = LoadGenConfig { seed: 21, ..Default::default() };
+    request_stream(&lcfg, TASKS, dims.max_seq, dims.vocab, 0, count)
+}
+
+/// Run `stream` through a full engine and return the responses in request
+/// order.
+fn serve_stream(
+    backend: &dyn Backend,
+    cfg: EngineConfig,
+    tt: MetaTt,
+    stream: &[(usize, Vec<i32>)],
+) -> Vec<Response> {
+    let engine = ServingEngine::new(backend, cfg, tt, None).unwrap();
+    engine
+        .serve(|eng| {
+            let handles: Vec<_> = stream
+                .iter()
+                .map(|(task, tokens)| eng.submit(*task, tokens.clone()).unwrap())
+                .collect();
+            handles.into_iter().map(|h| h.wait().unwrap()).collect::<Vec<_>>()
+        })
+        .unwrap()
+}
+
+/// Direct single-request folded forward: a batch-1 eval spec bound straight
+/// on the backend, bypassing queue/batcher/cache entirely.
+fn single_request_logits(
+    backend: &RefBackend,
+    tt: &MetaTt,
+    task: usize,
+    tokens: &[i32],
+) -> Vec<f32> {
+    let dims = ModelPreset::Tiny.dims(TASKS);
+    let spec = ArtifactSpec {
+        step: StepKind::Eval,
+        model: "tiny".into(),
+        adapter: "metatt4p1d".into(),
+        rank: RANK,
+        classes: 2,
+        tasks: TASKS,
+        batch: 1,
+        seq: dims.max_seq,
+    };
+    let entry = backend.entry(&spec).unwrap();
+    let frozen = Arc::new(assemble_frozen(&entry, None, ModelPreset::Tiny).unwrap());
+    let step = backend.bind(&spec, &frozen).unwrap();
+    let folded = tt.fold_for_serving(task);
+    let mut out = vec![0f32; 2];
+    step.run_serve(&folded, tokens, task as i32, &mut out).unwrap();
+    out
+}
+
+#[test]
+fn engine_responses_are_bit_identical_to_direct_single_request_forwards() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let tt = demo_tt(5);
+    let stream = demo_stream(24);
+    let responses = serve_stream(&backend, engine_cfg(2, 4), tt.clone(), &stream);
+    assert_eq!(responses.len(), stream.len());
+    for (resp, (task, tokens)) in responses.iter().zip(&stream) {
+        assert_eq!(resp.task, *task);
+        assert_eq!(resp.logits.len(), 2);
+        assert!(resp.batch_rows >= 1 && resp.batch_rows <= 4);
+        let want = single_request_logits(&backend, &tt, *task, tokens);
+        for (g, w) in resp.logits.iter().zip(&want) {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "request {} (task {task}): batched {g:?} != direct {w:?}",
+                resp.id
+            );
+        }
+    }
+}
+
+#[test]
+fn one_and_four_worker_engines_answer_bit_identically() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let stream = demo_stream(32);
+    let serial = serve_stream(&backend, engine_cfg(1, 4), demo_tt(5), &stream);
+    let parallel = serve_stream(&backend, engine_cfg(4, 4), demo_tt(5), &stream);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.task, b.task);
+        for (x, y) in a.logits.iter().zip(&b.logits) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "request {}: 1-worker and 4-worker logits differ",
+                a.id
+            );
+        }
+    }
+}
+
+#[test]
+fn serving_logits_match_the_family_eval_forward_numerically() {
+    // The folded factors reassociate the TT contraction (A = G1·mid is
+    // merged), so serving vs run_eval is an FP-tolerance comparison; the
+    // fold's exact algebra is pinned separately in tt::meta tests.
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let tt = demo_tt(5);
+    let stream = demo_stream(8);
+    let responses = serve_stream(&backend, engine_cfg(2, 4), tt.clone(), &stream);
+    let dims = ModelPreset::Tiny.dims(TASKS);
+    let spec = ArtifactSpec {
+        step: StepKind::Eval,
+        model: "tiny".into(),
+        adapter: "metatt4p1d".into(),
+        rank: RANK,
+        classes: 2,
+        tasks: TASKS,
+        batch: 1,
+        seq: dims.max_seq,
+    };
+    let entry = backend.entry(&spec).unwrap();
+    let frozen = Arc::new(assemble_frozen(&entry, None, ModelPreset::Tiny).unwrap());
+    let step = backend.bind(&spec, &frozen).unwrap();
+    let params = tt.export_cores();
+    for (resp, (task, tokens)) in responses.iter().zip(&stream) {
+        let batch = Batch {
+            tokens: tokens.clone(),
+            labels: vec![0],
+            scores: vec![0.0],
+            weights: vec![1.0],
+            batch_size: 1,
+            seq_len: dims.max_seq,
+        };
+        let logits = step.run_eval(&params, &batch, *task as i32, ALPHA).unwrap();
+        for (c, (&g, &w)) in resp.logits.iter().zip(logits.data()).enumerate() {
+            let scale = w.abs().max(1.0);
+            assert!(
+                ((g - w) / scale).abs() < 1e-3,
+                "request {} class {c}: serving {g} vs eval {w}",
+                resp.id
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_serves_state_from_a_v2_checkpoint_and_hot_swaps_generations() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let tt = demo_tt(9);
+    // Round-trip the adapter through the v2 (metadata) container.
+    let aspec = adapter_spec_for(&engine_cfg(1, 4));
+    let named: Vec<(String, metatt::tensor::Tensor)> = aspec
+        .param_specs()
+        .iter()
+        .zip(tt.export_cores())
+        .map(|(p, t)| (p.name.clone(), t))
+        .collect();
+    let meta = CheckpointMeta {
+        adapter: "metatt4p1d".into(),
+        rank: RANK,
+        tasks: TASKS,
+        alpha: ALPHA,
+        model: "tiny".into(),
+    };
+    let path = std::env::temp_dir().join("metatt_serving_test_adapter.bin");
+    checkpoint::save_with_meta(&path, &meta, &named).unwrap();
+    let (loaded_meta, tensors) = checkpoint::load_with_meta(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded_meta.unwrap(), meta);
+    let restored = metatt_from_tensors(&aspec, &tensors).unwrap();
+
+    let stream = demo_stream(6);
+    let engine =
+        ServingEngine::new(&backend, engine_cfg(2, 4), restored.clone(), None).unwrap();
+    let (before, after) = engine
+        .serve(|eng| {
+            let before: Vec<Response> = stream
+                .iter()
+                .map(|(t, tok)| eng.submit(*t, tok.clone()).unwrap().wait().unwrap())
+                .collect();
+            eng.reload(demo_tt(10)).unwrap();
+            let after: Vec<Response> = stream
+                .iter()
+                .map(|(t, tok)| eng.submit(*t, tok.clone()).unwrap().wait().unwrap())
+                .collect();
+            (before, after)
+        })
+        .unwrap();
+    // Pre-reload responses came from generation 0 and match the
+    // checkpointed state exactly (round-trip is lossless).
+    for (resp, (task, tokens)) in before.iter().zip(&stream) {
+        assert_eq!(resp.generation, 0);
+        let want = single_request_logits(&backend, &tt, *task, tokens);
+        for (g, w) in resp.logits.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "checkpointed state drifted");
+        }
+    }
+    // Post-reload responses come from generation 1 with different values.
+    let mut any_diff = false;
+    for (resp, b) in after.iter().zip(&before) {
+        assert_eq!(resp.generation, 1);
+        any_diff |= resp.logits != b.logits;
+    }
+    assert!(any_diff, "reloaded adapter must change at least one response");
+    assert_eq!(engine.generation(), 1);
+    assert_eq!(engine.cache_stats().reloads, 1);
+    // Dimension-incompatible reloads are rejected up front. (Rank is
+    // deliberately NOT structural — the folded serving form is
+    // rank-agnostic — so probe with a different task-core arity.)
+    let cfg_bad = EngineConfig { num_tasks: TASKS + 2, ..engine_cfg(1, 4) };
+    let bad_tt = {
+        let spec = adapter_spec_for(&cfg_bad);
+        let init = InitStrategy {
+            cores: vec![CoreInit::Normal; MetaTtKind::FourPlusOneD.order()],
+        };
+        spec.build_metatt_with(&mut Pcg64::new(3), Some(&init))
+    };
+    assert!(engine.reload(bad_tt).is_err(), "wrong task arity must be rejected");
+}
+
+#[test]
+fn engine_validates_requests_and_config() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let engine = ServingEngine::new(&backend, engine_cfg(1, 4), demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    engine
+        .serve(|eng| {
+            assert!(eng.submit(TASKS, vec![1; seq]).is_err(), "task out of range");
+            assert!(eng.submit(0, vec![1; seq - 1]).is_err(), "short token row");
+            assert!(eng.submit(0, vec![-1; seq]).is_err(), "negative token id");
+            let vocab = eng.vocab() as i32;
+            assert!(eng.submit(0, vec![vocab; seq]).is_err(), "token beyond vocab");
+            // A valid request still flows.
+            let resp = eng.submit(1, vec![1; seq]).unwrap().wait().unwrap();
+            assert_eq!(resp.task, 1);
+        })
+        .unwrap();
+    // Non-TT adapters cannot be folded for serving.
+    let cfg = EngineConfig { adapter: AdapterKind::LoRa, ..engine_cfg(1, 4) };
+    assert!(ServingEngine::new(&backend, cfg, demo_tt(5), None).is_err());
+}
+
+#[test]
+fn cache_counters_reflect_per_task_folding() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let engine = ServingEngine::new(&backend, engine_cfg(1, 2), demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    engine
+        .serve(|eng| {
+            for task in [0usize, 1, 0, 2, 1, 0] {
+                eng.submit(task, vec![2; seq]).unwrap().wait().unwrap();
+            }
+        })
+        .unwrap();
+    let cache = engine.cache_stats();
+    assert_eq!(cache.folds, TASKS as u64, "one fold per distinct task");
+    assert!(cache.hits >= 1, "repeat tasks must hit the cache");
+    assert_eq!(cache.evictions, 0, "capacity covers all tasks here");
+    let stats = engine.stats();
+    assert_eq!(stats.requests, 6);
+    assert!(stats.batches >= 3, "distinct tasks cannot share a batch");
+    let histogram_total: u64 = stats.batch_hist.iter().sum();
+    assert_eq!(histogram_total, stats.batches);
+}
