@@ -27,7 +27,17 @@ impl Stats {
         let n = samples.len() as f64;
         let mean = samples.iter().sum::<f64>() / n;
         let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
-        let pct = |p: f64| samples[((p * (samples.len() - 1) as f64).round() as usize).min(samples.len() - 1)];
+        // Linear interpolation between order statistics (type-7 estimator,
+        // the numpy/R default). Round-to-nearest-rank collapses p95/p99
+        // onto the max (or onto each other) for small n, which biased the
+        // BENCH tail numbers exactly where tails matter.
+        let pct = |p: f64| {
+            let rank = p * (samples.len() - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let frac = rank - lo as f64;
+            samples[lo] + frac * (samples[hi] - samples[lo])
+        };
         Stats {
             mean,
             std: var.sqrt(),
@@ -54,12 +64,13 @@ impl Stats {
 
     pub fn summary(&self) -> String {
         format!(
-            "mean {} ± {}  (min {}, p50 {}, p95 {}, n={})",
+            "mean {} ± {}  (min {}, p50 {}, p95 {}, p99 {}, n={})",
             Self::fmt_time(self.mean),
             Self::fmt_time(self.std),
             Self::fmt_time(self.min),
             Self::fmt_time(self.p50),
             Self::fmt_time(self.p95),
+            Self::fmt_time(self.p99),
             self.samples.len()
         )
     }
@@ -236,7 +247,36 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert!(s.p95 >= s.p50);
         assert!(s.p99 >= s.p95);
-        assert_eq!(s.p99, 4.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate_between_order_statistics() {
+        // n=4: ranks are p*(n-1). The old round-to-nearest-rank estimator
+        // returned s[2]=3.0 for p50 and s[3]=4.0 for both p95 and p99 —
+        // the median was biased a whole sample upward and the two tail
+        // percentiles collapsed onto the max (and onto each other).
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.p50 - 2.5).abs() < 1e-12, "median of 4 samples, got {}", s.p50);
+        assert!((s.p95 - 3.85).abs() < 1e-12, "p95 rank 2.85, got {}", s.p95);
+        assert!((s.p99 - 3.97).abs() < 1e-12, "p99 rank 2.97, got {}", s.p99);
+        assert!(s.p99 < 4.0 && s.p95 < s.p99, "tails must not collapse onto the max");
+        // Exact-integer ranks land on the order statistic itself.
+        let t = Stats::from_samples(vec![10.0, 20.0, 30.0]);
+        assert_eq!(t.p50, 20.0);
+        // A single sample is every percentile.
+        let one = Stats::from_samples(vec![7.0]);
+        assert_eq!((one.p50, one.p95, one.p99), (7.0, 7.0, 7.0));
+        // Unsorted input is sorted first.
+        let u = Stats::from_samples(vec![4.0, 1.0, 3.0, 2.0]);
+        assert!((u.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_prints_the_slo_tail() {
+        // The doc comment calls p99 "the serving-latency SLO number";
+        // summary() must actually print it.
+        let s = Stats::from_samples(vec![1.0; 5]);
+        assert!(s.summary().contains("p99"), "summary omits p99: {}", s.summary());
     }
 
     #[test]

@@ -99,7 +99,8 @@ pub fn eval_metric(
         MetricKind::Accuracy => metrics::accuracy(&preds, &golds),
         MetricKind::Matthews => metrics::matthews_corr(&preds, &golds)
             .ok_or_else(|| anyhow!("matthews metric on non-binary labels"))?,
-        MetricKind::Spearman => metrics::spearman_corr(&pred_scores, &gold_scores),
+        MetricKind::Spearman => metrics::spearman_corr(&pred_scores, &gold_scores)
+            .ok_or_else(|| anyhow!("spearman metric on non-finite scores (diverged run?)"))?,
     })
 }
 

@@ -44,14 +44,25 @@ commands:
   seq        sequential A->B->A transfer / forgetting measurement
              --task-a A --task-b B [--adapter A] [--rank R] [--alpha F]
              [--epochs N] [--batch N] [--lr F] [--seed N] [--no-checkpoint]
-  serve      multi-task serving engine: queue -> dynamic batcher -> per-task
-             folded-adapter cache -> workers, driven by the closed-loop load
-             generator; records BENCH_pr5.json
+  serve      multi-task serving engine: queue -> EDF batcher (deadlines,
+             priorities, overload shedding) -> per-task folded-adapter
+             cache -> workers; in-process closed-loop load generator by
+             default, records BENCH_pr5.json
              [--requests N] [--clients C] [--num-tasks T] [--classes K]
              [--adapter A] [--rank R] [--alpha F] [--checkpoint FILE]
              [--max-batch B] [--batch-deadline-ms MS] [--serve-workers W]
              [--queue-cap N] [--cache-cap N] [--mix w1,w2,...]
              [--think-us U] [--seed N] [--no-checkpoint]
+             [--deadline-ms MS] [--priority P]   per-request deadline/class
+             modes (mutually exclusive, default = in-process load gen):
+             --listen ADDR    TCP front-end (MTS1 wire protocol); stops
+                              after --serve-secs N seconds (0 = until
+                              killed), then drains gracefully
+             --connect ADDR   closed-loop TCP clients against a listener
+             --overload       closed-loop capacity probe, then open-loop
+                              Poisson arrivals at --overload-mults m,m,...
+                              times capacity (--overload-requests arrivals
+                              per level); records BENCH_pr6.json
   run        config-file-driven run
              --config configs/foo.toml
 
@@ -81,8 +92,11 @@ const OPTS: &[&str] = &[
     "clients", "num-tasks", "classes", "checkpoint", "max-batch",
     "batch-deadline-ms", "serve-workers", "queue-cap", "cache-cap", "mix",
     "think-us", "save-adapter",
+    // serve front-end modes: TCP listener / TCP client / overload sweep
+    "listen", "connect", "serve-secs", "deadline-ms", "priority",
+    "overload-mults", "overload-requests",
 ];
-const FLAGS: &[&str] = &["help", "no-checkpoint", "verbose"];
+const FLAGS: &[&str] = &["help", "no-checkpoint", "verbose", "overload"];
 
 fn run() -> Result<()> {
     let args = Args::from_env(OPTS, FLAGS).map_err(|e| anyhow!(e))?;
@@ -563,6 +577,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut num_tasks = args.usize_or("num-tasks", 3).map_err(|e| anyhow!(e))?;
     let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
 
+    // Per-request scheduling knobs, shared by every mode: a relative
+    // deadline (0 = none) and a priority class (lower = more urgent).
+    let deadline = match args.u64_or("deadline-ms", 0).map_err(|e| anyhow!(e))? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
+    let priority = {
+        let p = args.usize_or("priority", 0).map_err(|e| anyhow!(e))?;
+        if p > u8::MAX as usize {
+            bail!("--priority must fit in a byte (lower = more urgent), got {p}");
+        }
+        p as u8
+    };
+
+    // Client mode needs no engine (the server owns the model): dispatch
+    // before any backbone/adapter loading.
+    if let Some(addr) = args.get("connect") {
+        return serve_connect(args, addr, seed, deadline, priority);
+    }
+
     // Adapter state: checkpoint tensors (+ metadata validation/adoption),
     // or a deterministic synthetic adapter when no checkpoint is given.
     let loaded = match args.get("checkpoint") {
@@ -656,59 +690,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backbone = ckpt_for(args, model);
     let engine = ServingEngine::new(backend.as_ref(), cfg, tt, backbone.as_deref())?;
 
+    if let Some(addr) = args.get("listen") {
+        return serve_listen(args, &engine, addr);
+    }
+
     let requests = args.usize_or("requests", 100).map_err(|e| anyhow!(e))?;
     let clients = args.usize_or("clients", 4).map_err(|e| anyhow!(e))?;
     if requests == 0 || clients == 0 {
         bail!("--requests and --clients must be >= 1");
     }
-    let mix: Vec<f64> = match args.get("mix") {
-        None => Vec::new(),
-        Some(v) => {
-            let weights: Vec<f64> = v
-                .split(',')
-                .map(|p| {
-                    p.trim()
-                        .parse::<f64>()
-                        .map_err(|_| anyhow!("--mix expects comma-separated weights, got '{p}'"))
-                })
-                .collect::<Result<_>>()?;
-            // Validate here, not inside the load-client threads, so a bad
-            // flag is a flag error rather than "load client panicked".
-            if weights.len() != num_tasks {
-                bail!("--mix has {} weights but {num_tasks} tasks are served", weights.len());
-            }
-            if weights.iter().any(|w| !w.is_finite() || *w < 0.0) {
-                bail!("--mix weights must be finite and >= 0 (got {v})");
-            }
-            if weights.iter().sum::<f64>() <= 0.0 {
-                bail!("--mix needs at least one positive weight");
-            }
-            weights
-        }
-    };
     let lcfg = LoadGenConfig {
         clients,
         requests_per_client: requests.div_ceil(clients).max(1),
         seed,
-        task_mix: mix,
+        task_mix: parse_mix(args, num_tasks)?,
         think_us: args.u64_or("think-us", 0).map_err(|e| anyhow!(e))?,
+        deadline,
+        priority,
     };
 
+    if args.flag("overload") {
+        return serve_overload(args, &engine, &lcfg, deadline, priority);
+    }
+
     let report = serving::run_load(&engine, &lcfg)?;
-    let stats = engine.stats();
+    // Batch/queue statistics come from the report's measured window (the
+    // warmup wave is excluded); cache counters are engine-lifetime.
+    let stats = &report.engine;
     let cache = engine.cache_stats();
     let lookups = (cache.hits + cache.folds).max(1);
     println!(
-        "served {} requests over {} tasks in {:.3}s — {:.1} req/s\n\
-         latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms\n\
+        "served {} requests over {} tasks in {:.3}s — {:.1} req/s ({} expired)\n\
+         latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  queue wait mean {:.2}ms\n\
          {} batches (mean fill {:.2}/{})  cache hit rate {:.1}% ({} folds, {} evictions)",
         report.total_requests,
         engine.config().num_tasks,
         report.elapsed,
         report.throughput_rps,
+        report.expired,
         report.latency.p50 * 1e3,
         report.latency.p95 * 1e3,
         report.latency.p99 * 1e3,
+        stats.queue_wait_mean_s() * 1e3,
         stats.batches,
         stats.requests as f64 / stats.batches.max(1) as f64,
         engine.config().max_batch,
@@ -726,6 +749,236 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("requests", Json::num(report.total_requests as f64)),
             ("throughput_rps", Json::num(report.throughput_rps)),
             ("p99_ms", Json::num(report.latency.p99 * 1e3)),
+        ]),
+    );
+    Ok(())
+}
+
+/// Parse `--mix` into task weights, validated against the served arity
+/// here rather than inside load-client threads (a bad flag should be a
+/// flag error, not "load client panicked").
+fn parse_mix(args: &Args, num_tasks: usize) -> Result<Vec<f64>> {
+    let Some(v) = args.get("mix") else {
+        return Ok(Vec::new());
+    };
+    let weights: Vec<f64> = v
+        .split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow!("--mix expects comma-separated weights, got '{p}'"))
+        })
+        .collect::<Result<_>>()?;
+    if weights.len() != num_tasks {
+        bail!("--mix has {} weights but {num_tasks} tasks are served", weights.len());
+    }
+    if weights.iter().any(|w| !w.is_finite() || *w < 0.0) {
+        bail!("--mix weights must be finite and >= 0 (got {v})");
+    }
+    if weights.iter().sum::<f64>() <= 0.0 {
+        bail!("--mix needs at least one positive weight");
+    }
+    Ok(weights)
+}
+
+/// `serve --listen ADDR`: run the TCP front-end until `--serve-secs`
+/// elapses (0 = until the process is killed), then drain gracefully —
+/// stop accepting, finish every admitted request, close sockets.
+fn serve_listen(
+    args: &Args,
+    engine: &metatt::serving::ServingEngine<'_>,
+    addr: &str,
+) -> Result<()> {
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+    let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+    let local = listener.local_addr().map_err(|e| anyhow!(e))?;
+    let secs = args.u64_or("serve-secs", 0).map_err(|e| anyhow!(e))?;
+    println!(
+        "listening on {local} (MTS1; {} tasks, seq {}, vocab {}, {} classes){}",
+        engine.config().num_tasks,
+        engine.seq_len(),
+        engine.vocab(),
+        engine.config().classes,
+        if secs > 0 { format!(" — stopping after {secs}s") } else { String::new() }
+    );
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let net = engine.serve(|eng| {
+        if secs > 0 {
+            let sd = Arc::clone(&shutdown);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_secs(secs));
+                sd.store(true, Ordering::Relaxed);
+            });
+        }
+        metatt::serving::serve_net(eng, listener, &shutdown)
+    })??;
+    let stats = engine.stats();
+    println!(
+        "front-end drained: {} connections, {} request frames — {} computed, \
+         {} shed, {} batches",
+        net.connections, net.requests, stats.requests, stats.shed, stats.batches
+    );
+    results::append_record(
+        "serve_net",
+        &Json::obj(vec![
+            ("addr", Json::str(local.to_string())),
+            ("connections", Json::num(net.connections as f64)),
+            ("requests", Json::num(net.requests as f64)),
+            ("computed", Json::num(stats.requests as f64)),
+            ("shed", Json::num(stats.shed as f64)),
+        ]),
+    );
+    Ok(())
+}
+
+/// `serve --connect ADDR`: closed-loop TCP clients against a listener.
+/// Request streams are derived from the server's hello, so the same
+/// `(seed, client, index)` asks the same question as the in-process mode.
+fn serve_connect(
+    args: &Args,
+    addr: &str,
+    seed: u64,
+    deadline: Option<std::time::Duration>,
+    priority: u8,
+) -> Result<()> {
+    use metatt::serving::{self, LoadGenConfig};
+    use std::time::Duration;
+    let requests = args.usize_or("requests", 100).map_err(|e| anyhow!(e))?;
+    let clients = args.usize_or("clients", 4).map_err(|e| anyhow!(e))?;
+    if requests == 0 || clients == 0 {
+        bail!("--requests and --clients must be >= 1");
+    }
+    let timeout = Duration::from_secs(10);
+    // Probe once for the hello: validates the endpoint and gives --mix a
+    // task arity to check against before the client fleet launches.
+    let probe = serving::NetClient::connect_retry(addr, timeout)?;
+    let hello = probe.hello;
+    drop(probe);
+    println!(
+        "server {addr}: {} tasks, seq {}, vocab {}, {} classes",
+        hello.num_tasks, hello.seq, hello.vocab, hello.classes
+    );
+    let lcfg = LoadGenConfig {
+        clients,
+        requests_per_client: requests.div_ceil(clients).max(1),
+        seed,
+        task_mix: parse_mix(args, hello.num_tasks)?,
+        think_us: args.u64_or("think-us", 0).map_err(|e| anyhow!(e))?,
+        deadline,
+        priority,
+    };
+    let report = serving::run_net_load(addr, &lcfg, timeout)?;
+    let (p50, p95, p99) =
+        report.latency.as_ref().map_or((0.0, 0.0, 0.0), |l| (l.p50, l.p95, l.p99));
+    println!(
+        "{} round trips in {:.3}s — {:.1} req/s computed, {} expired, {} errors\n\
+         latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms",
+        report.total,
+        report.elapsed,
+        report.throughput_rps,
+        report.expired,
+        report.errors,
+        p50 * 1e3,
+        p95 * 1e3,
+        p99 * 1e3
+    );
+    if report.errors > 0 {
+        bail!("{} requests came back as protocol/validation errors", report.errors);
+    }
+    results::append_record(
+        "serve_net_client",
+        &Json::obj(vec![
+            ("addr", Json::str(addr)),
+            ("requests", Json::num(report.total as f64)),
+            ("throughput_rps", Json::num(report.throughput_rps)),
+            ("expired", Json::num(report.expired as f64)),
+            ("p99_ms", Json::num(p99 * 1e3)),
+        ]),
+    );
+    Ok(())
+}
+
+/// `serve --overload`: the `BENCH_pr6.json` experiment — measure
+/// closed-loop capacity, then offer open-loop Poisson arrivals at each
+/// configured multiple of it and record goodput / shed / tail latency.
+fn serve_overload(
+    args: &Args,
+    engine: &metatt::serving::ServingEngine<'_>,
+    capacity: &metatt::serving::LoadGenConfig,
+    deadline: Option<std::time::Duration>,
+    priority: u8,
+) -> Result<()> {
+    use metatt::serving::{self, OverloadConfig};
+    use std::time::Duration;
+    let mults: Vec<f64> = match args.get("overload-mults") {
+        None => vec![0.5, 1.0, 2.0, 4.0],
+        Some(v) => v
+            .split(',')
+            .map(|p| {
+                p.trim().parse::<f64>().map_err(|_| {
+                    anyhow!("--overload-mults expects comma-separated numbers, got '{p}'")
+                })
+            })
+            .collect::<Result<_>>()?,
+    };
+    let ocfg = OverloadConfig {
+        // Capacity is probed without deadlines: it measures what the
+        // engine *can* do; the levels then hold that rate to a deadline.
+        capacity: serving::LoadGenConfig { deadline: None, ..capacity.clone() },
+        mults,
+        requests_per_level: args.usize_or("overload-requests", 200).map_err(|e| anyhow!(e))?,
+        deadline: deadline.unwrap_or(Duration::from_millis(50)),
+        priority,
+    };
+    let report = serving::run_overload_bench(engine, &ocfg)?;
+    println!(
+        "capacity: {:.1} req/s (closed loop, {} clients, p99 {:.2}ms); \
+         deadline {:.0}ms",
+        report.capacity_rps,
+        ocfg.capacity.clients,
+        report.capacity.latency.p99 * 1e3,
+        ocfg.deadline.as_secs_f64() * 1e3
+    );
+    for (mult, r) in &report.levels {
+        let p99 = r.latency.as_ref().map_or(0.0, |l| l.p99);
+        println!(
+            "x{mult:<4} offered {:>7.1} rps -> goodput {:>7.1} rps  ok {:>4}  \
+             shed {:>4}  rejected {:>4}  p99 {:>7.2}ms",
+            r.offered_rps,
+            r.goodput_rps,
+            r.ok,
+            r.expired,
+            r.rejected,
+            p99 * 1e3
+        );
+    }
+    let doc = serving::overload_report_json(engine, &ocfg, &report);
+    metatt::bench::save_record("pr6", &doc)?;
+    results::append_record(
+        "serve_overload",
+        &Json::obj(vec![
+            ("capacity_rps", Json::num(report.capacity_rps)),
+            ("deadline_ms", Json::num(ocfg.deadline.as_secs_f64() * 1e3)),
+            (
+                "levels",
+                Json::Arr(
+                    report
+                        .levels
+                        .iter()
+                        .map(|(m, r)| {
+                            Json::obj(vec![
+                                ("mult", Json::num(*m)),
+                                ("goodput_rps", Json::num(r.goodput_rps)),
+                                ("shed", Json::num(r.expired as f64)),
+                                ("rejected", Json::num(r.rejected as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ]),
     );
     Ok(())

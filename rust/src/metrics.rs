@@ -44,19 +44,32 @@ pub fn matthews_corr(pred: &[usize], gold: &[usize]) -> Option<f64> {
 
 /// Spearman rank correlation between two score vectors (average ranks for
 /// ties).
-pub fn spearman_corr(a: &[f32], b: &[f32]) -> f64 {
+///
+/// Returns `None` when any score is non-finite (NaN/±inf): ranks are
+/// undefined there, and the old `partial_cmp(..).unwrap_or(Equal)` sort
+/// silently corrupted *every* rank around a single NaN, yielding a
+/// plausible-looking garbage correlation. Callers decide whether a
+/// non-finite score vector is an error (mirrors [`matthews_corr`]).
+pub fn spearman_corr(a: &[f32], b: &[f32]) -> Option<f64> {
     assert_eq!(a.len(), b.len());
+    if a.iter().chain(b).any(|x| !x.is_finite()) {
+        return None;
+    }
     if a.len() < 2 {
-        return 0.0;
+        return Some(0.0);
     }
     let ra = ranks(a);
     let rb = ranks(b);
-    pearson(&ra, &rb)
+    Some(pearson(&ra, &rb))
 }
 
 fn ranks(xs: &[f32]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap_or(std::cmp::Ordering::Equal));
+    // Inputs are pre-checked finite, so partial_cmp is total here; the
+    // expect documents (and enforces) that contract.
+    idx.sort_by(|&i, &j| {
+        xs[i].partial_cmp(&xs[j]).expect("ranks() requires finite scores")
+    });
     let mut out = vec![0.0f64; xs.len()];
     let mut i = 0;
     while i < idx.len() {
@@ -170,16 +183,33 @@ mod tests {
     fn spearman_monotone_is_one() {
         let a = [1.0f32, 2.0, 3.0, 4.0];
         let b = [10.0f32, 20.0, 30.0, 40.0];
-        assert!((spearman_corr(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((spearman_corr(&a, &b).unwrap() - 1.0).abs() < 1e-12);
         let c = [4.0f32, 3.0, 2.0, 1.0];
-        assert!((spearman_corr(&a, &c) + 1.0).abs() < 1e-12);
+        assert!((spearman_corr(&a, &c).unwrap() + 1.0).abs() < 1e-12);
     }
 
     #[test]
     fn spearman_handles_ties() {
         let a = [1.0f32, 1.0, 2.0, 3.0];
         let b = [1.0f32, 1.0, 2.0, 3.0];
-        assert!((spearman_corr(&a, &b) - 1.0).abs() < 1e-9);
+        assert!((spearman_corr(&a, &b).unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_rejects_non_finite_scores() {
+        // A single NaN used to silently corrupt every rank (the sort's
+        // unwrap_or(Equal) made the comparator non-transitive) and return
+        // a plausible-looking value; now it is a clean None.
+        let a = [1.0f32, f32::NAN, 3.0, 4.0];
+        let b = [10.0f32, 20.0, 30.0, 40.0];
+        assert_eq!(spearman_corr(&a, &b), None);
+        assert_eq!(spearman_corr(&b, &a), None, "NaN on either side");
+        let inf = [1.0f32, f32::INFINITY, 3.0, 4.0];
+        assert_eq!(spearman_corr(&inf, &b), None);
+        // Finite inputs are unaffected.
+        assert!(spearman_corr(&b, &b).is_some());
+        // Degenerate short inputs keep the 0-by-convention value.
+        assert_eq!(spearman_corr(&[1.0f32], &[2.0f32]), Some(0.0));
     }
 
     #[test]

@@ -1,20 +1,32 @@
-//! Dynamic same-task batching over the admission queue.
+//! Dynamic same-task batching with deadline-aware ordering and shedding.
 //!
-//! A worker's [`BatchPolicy::next_batch`] blocks for the first available
-//! request, which pins the batch's task, then coalesces further same-task
-//! requests until the batch is full (`max_batch`) or the `deadline` tick
-//! since the first pop elapses. Mixed-task traffic never stalls: requests
-//! of *other* tasks stay queued for the next worker (or the next call),
-//! and workers waiting out a deadline release the queue lock, so admission
-//! and other workers' pops proceed concurrently.
+//! A worker's [`BatchPolicy::next_batch`] first **sheds** every queued
+//! request whose deadline has already passed (no compute is spent on dead
+//! work — the worker answers them with an explicit expired status), then
+//! blocks for the most *urgent* runnable request — ordered by priority
+//! class, then earliest deadline, then admission order
+//! ([`Pending::cmp_urgency`]) — which pins the batch's task. It then
+//! coalesces further same-task requests *in urgency order* until the batch
+//! is full (`max_batch`) or the `deadline` tick since the first pop
+//! elapses. Mixed-task traffic never stalls: requests of *other* tasks
+//! stay queued for the next worker (or the next call), and workers waiting
+//! out a tick release the queue lock, so admission and other workers' pops
+//! proceed concurrently.
+//!
+//! Under overload this is EDF within a priority class: the requests most
+//! likely to still meet their deadlines run first, and the ones that
+//! cannot are shed at the queue, which is what keeps goodput near the
+//! saturation throughput instead of collapsing (`BENCH_pr6.json`).
 //!
 //! Batching is **transparent** to clients: every row of the padded serving
 //! batch depends only on its own tokens (see `runtime`'s `serve_step`), so
 //! a response's bits are independent of which requests happened to share
 //! its batch — the timing-dependent coalescing below never shows up in
-//! results, only in the batch-size histogram.
+//! results, only in the batch-size histogram and in *which* requests get
+//! shed under saturation.
 
 use super::request::{AdmissionQueue, Pending};
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// Dynamic-batching knobs.
@@ -27,17 +39,89 @@ pub struct BatchPolicy {
     pub deadline: Duration,
 }
 
+/// What one `next_batch` call drained: requests to execute (all one task,
+/// urgency-ordered) and requests shed because their deadline had passed.
+/// `run` may be empty when everything drained this tick was already dead.
+pub(crate) struct DrainedBatch {
+    pub run: Vec<Pending>,
+    pub shed: Vec<Pending>,
+}
+
+/// Remove every expired request from `queue` into `shed`, preserving the
+/// relative order of survivors. Returns how many were shed.
+fn shed_expired(queue: &mut VecDeque<Pending>, shed: &mut Vec<Pending>, now: Instant) -> usize {
+    let before = shed.len();
+    let mut i = 0;
+    while i < queue.len() {
+        if queue[i].expired_at(now) {
+            shed.push(queue.remove(i).expect("index in range"));
+        } else {
+            i += 1;
+        }
+    }
+    shed.len() - before
+}
+
+/// Index of the most urgent request (None on an empty queue).
+fn most_urgent(queue: &VecDeque<Pending>) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for i in 0..queue.len() {
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                if queue[i].cmp_urgency(&queue[b]).is_lt() {
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Index of the most urgent request of `task` (None if no such request).
+fn most_urgent_of_task(queue: &VecDeque<Pending>, task: usize) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for i in 0..queue.len() {
+        if queue[i].req.task != task {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                if queue[i].cmp_urgency(&queue[b]).is_lt() {
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    best
+}
+
 impl BatchPolicy {
-    /// Pop the next batch: blocks for the first request, coalesces same-task
-    /// arrivals up to `max_batch` or the deadline. Returns `None` once the
+    /// Drain the next batch: sheds expired requests, blocks for the most
+    /// urgent runnable one, coalesces same-task arrivals in urgency order
+    /// up to `max_batch` or the tick deadline. Returns `None` once the
     /// queue is closed *and* drained — the worker-shutdown signal.
-    pub(crate) fn next_batch(&self, q: &AdmissionQueue) -> Option<Vec<Pending>> {
+    pub(crate) fn next_batch(&self, q: &AdmissionQueue) -> Option<DrainedBatch> {
         debug_assert!(self.max_batch >= 1);
         let mut inner = q.inner.lock().unwrap();
-        // Phase 1: block for the batch's first request.
+        let mut shed: Vec<Pending> = Vec::new();
+        // Phase 1: block for the batch's first (most urgent) live request,
+        // shedding dead ones as they are encountered. If a pass sheds
+        // something but finds nothing runnable, hand the sheds back now so
+        // their clients get answered promptly instead of waiting out an
+        // arrival.
         let first = loop {
-            if let Some(p) = inner.queue.pop_front() {
-                break p;
+            let now = Instant::now();
+            if shed_expired(&mut inner.queue, &mut shed, now) > 0 {
+                q.not_full.notify_all();
+            }
+            if let Some(i) = most_urgent(&inner.queue) {
+                break inner.queue.remove(i).expect("index in range");
+            }
+            if !shed.is_empty() {
+                drop(inner);
+                return Some(DrainedBatch { run: Vec::new(), shed });
             }
             if inner.closed {
                 return None;
@@ -48,27 +132,27 @@ impl BatchPolicy {
         let mut batch = Vec::with_capacity(self.max_batch);
         batch.push(first);
         // The pop above freed a slot — wake blocked producers NOW, not
-        // after the deadline wait: a parked same-task producer is exactly
-        // the straggler the deadline window exists to absorb.
+        // after the tick wait: a parked same-task producer is exactly
+        // the straggler the tick window exists to absorb.
         q.not_full.notify_all();
-        // Phase 2: coalesce same-task requests, waiting out the deadline
-        // when the batch is short. Each pass drains every same-task entry
-        // currently queued (other tasks are left in admission order).
+        // Phase 2: coalesce same-task requests in urgency order, waiting
+        // out the tick when the batch is short. Each pass sheds anything
+        // that expired during the wait (any task — dead work is dead work)
+        // and extracts the most urgent same-task survivors.
         let t0 = Instant::now();
         loop {
-            let before = batch.len();
-            let mut i = 0;
-            while batch.len() < self.max_batch && i < inner.queue.len() {
-                if inner.queue[i].req.task == task {
-                    // remove(i) preserves the relative order of the rest.
-                    batch.push(inner.queue.remove(i).expect("index in range"));
-                } else {
-                    i += 1;
+            let before = batch.len() + shed.len();
+            let now = Instant::now();
+            shed_expired(&mut inner.queue, &mut shed, now);
+            while batch.len() < self.max_batch {
+                match most_urgent_of_task(&inner.queue, task) {
+                    Some(i) => batch.push(inner.queue.remove(i).expect("index in range")),
+                    None => break,
                 }
             }
-            if batch.len() > before {
+            if batch.len() + shed.len() > before {
                 // More slots freed; unpark producers before (possibly)
-                // sleeping on the deadline.
+                // sleeping on the tick.
                 q.not_full.notify_all();
             }
             if batch.len() >= self.max_batch || inner.closed {
@@ -83,10 +167,10 @@ impl BatchPolicy {
                 .wait_timeout(inner, self.deadline - waited)
                 .unwrap();
             inner = guard;
-            // Loop: drain whatever arrived, then re-check the deadline.
+            // Loop: drain whatever arrived, then re-check the tick.
         }
         drop(inner);
-        Some(batch)
+        Some(DrainedBatch { run: batch, shed })
     }
 }
 
@@ -97,15 +181,31 @@ mod tests {
     use std::sync::mpsc::Receiver;
     use std::sync::Arc;
 
-    fn push(q: &AdmissionQueue, id: u64, task: usize) -> Receiver<super::super::Response> {
+    fn push_with(
+        q: &AdmissionQueue,
+        id: u64,
+        task: usize,
+        priority: u8,
+        deadline: Option<Duration>,
+    ) -> Receiver<super::super::Response> {
         let (tx, rx) = response_channel();
+        let now = Instant::now();
         q.submit(Pending {
-            req: Request { id, task, tokens: vec![1] },
+            req: Request { id, task, tokens: vec![1], priority },
             tx,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
         })
         .unwrap();
         rx
+    }
+
+    fn push(q: &AdmissionQueue, id: u64, task: usize) -> Receiver<super::super::Response> {
+        push_with(q, id, task, 0, None)
+    }
+
+    fn ids(ps: &[Pending]) -> Vec<u64> {
+        ps.iter().map(|p| p.req.id).collect()
     }
 
     #[test]
@@ -117,13 +217,10 @@ mod tests {
             .collect();
         let policy = BatchPolicy { max_batch: 8, deadline: Duration::ZERO };
         let b0 = policy.next_batch(&q).unwrap();
-        assert_eq!(
-            b0.iter().map(|p| p.req.id).collect::<Vec<_>>(),
-            vec![0, 2, 3],
-            "first batch takes every queued task-0 request"
-        );
+        assert_eq!(ids(&b0.run), vec![0, 2, 3], "first batch takes every queued task-0 request");
+        assert!(b0.shed.is_empty());
         let b1 = policy.next_batch(&q).unwrap();
-        assert_eq!(b1.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![1, 4]);
+        assert_eq!(ids(&b1.run), vec![1, 4]);
         assert!(q.is_empty());
     }
 
@@ -133,7 +230,7 @@ mod tests {
         let _rxs: Vec<_> = (0..5).map(|id| push(&q, id, 7)).collect();
         let policy = BatchPolicy { max_batch: 2, deadline: Duration::ZERO };
         let sizes: Vec<usize> = (0..3)
-            .map(|_| policy.next_batch(&q).unwrap().len())
+            .map(|_| policy.next_batch(&q).unwrap().run.len())
             .collect();
         assert_eq!(sizes, vec![2, 2, 1]);
     }
@@ -150,11 +247,7 @@ mod tests {
         let policy = BatchPolicy { max_batch: 4, deadline: Duration::from_millis(300) };
         let b = policy.next_batch(&q).unwrap();
         let _rx1 = feeder.join().unwrap();
-        assert_eq!(
-            b.iter().map(|p| p.req.id).collect::<Vec<_>>(),
-            vec![0, 1],
-            "the deadline window must absorb the late arrival"
-        );
+        assert_eq!(ids(&b.run), vec![0, 1], "the tick window must absorb the late arrival");
     }
 
     #[test]
@@ -163,10 +256,76 @@ mod tests {
         let _rx = push(&q, 0, 0);
         q.close();
         let policy = BatchPolicy { max_batch: 4, deadline: Duration::from_millis(50) };
-        // The admitted request still comes out (no deadline wait once
-        // closed), then the loop signal.
+        // The admitted request still comes out (no tick wait once closed),
+        // then the loop signal.
         let b = policy.next_batch(&q).unwrap();
-        assert_eq!(b.len(), 1);
+        assert_eq!(b.run.len(), 1);
+        assert!(policy.next_batch(&q).is_none());
+    }
+
+    #[test]
+    fn edf_orders_the_batch_and_picks_its_members() {
+        let q = AdmissionQueue::new(16);
+        // Same task, admitted in id order with shuffled deadlines.
+        let _r0 = push_with(&q, 0, 2, 0, Some(Duration::from_millis(500)));
+        let _r1 = push_with(&q, 1, 2, 0, Some(Duration::from_millis(100)));
+        let _r2 = push_with(&q, 2, 2, 0, None);
+        let _r3 = push_with(&q, 3, 2, 0, Some(Duration::from_millis(300)));
+        let policy = BatchPolicy { max_batch: 3, deadline: Duration::ZERO };
+        let b = policy.next_batch(&q).unwrap();
+        assert_eq!(
+            ids(&b.run),
+            vec![1, 3, 0],
+            "earliest deadlines fill the capped batch; deadline-free waits"
+        );
+        let b2 = policy.next_batch(&q).unwrap();
+        assert_eq!(ids(&b2.run), vec![2]);
+    }
+
+    #[test]
+    fn priority_class_dominates_deadlines_and_picks_the_task() {
+        let q = AdmissionQueue::new(16);
+        // An earlier-deadline class-1 request on task 0 vs a later-deadline
+        // class-0 request on task 1: the class-0 one pins the batch's task.
+        // (Both deadlines are far enough out never to expire in-test.)
+        let _r0 = push_with(&q, 0, 0, 1, Some(Duration::from_secs(2)));
+        let _r1 = push_with(&q, 1, 1, 0, Some(Duration::from_secs(5)));
+        let _r2 = push_with(&q, 2, 1, 0, None);
+        let policy = BatchPolicy { max_batch: 4, deadline: Duration::ZERO };
+        let b = policy.next_batch(&q).unwrap();
+        assert_eq!(ids(&b.run), vec![1, 2], "priority class pins the batch task");
+        let b2 = policy.next_batch(&q).unwrap();
+        assert_eq!(ids(&b2.run), vec![0]);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_not_run() {
+        let q = AdmissionQueue::new(16);
+        // Admitted already-expired (zero relative deadline): by the time a
+        // worker drains, now >= deadline deterministically.
+        let _r0 = push_with(&q, 0, 0, 0, Some(Duration::ZERO));
+        let _r1 = push_with(&q, 1, 0, 0, None);
+        let _r2 = push_with(&q, 2, 1, 0, Some(Duration::ZERO));
+        let policy = BatchPolicy { max_batch: 4, deadline: Duration::ZERO };
+        let b = policy.next_batch(&q).unwrap();
+        assert_eq!(ids(&b.run), vec![1], "live request runs");
+        let mut shed = ids(&b.shed);
+        shed.sort_unstable();
+        assert_eq!(shed, vec![0, 2], "dead requests shed across tasks");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn all_expired_drain_returns_an_empty_run() {
+        let q = AdmissionQueue::new(16);
+        let _r0 = push_with(&q, 0, 0, 0, Some(Duration::ZERO));
+        let _r1 = push_with(&q, 1, 3, 0, Some(Duration::ZERO));
+        let policy = BatchPolicy { max_batch: 4, deadline: Duration::from_millis(200) };
+        let b = policy.next_batch(&q).unwrap();
+        assert!(b.run.is_empty(), "nothing runnable");
+        assert_eq!(b.shed.len(), 2, "both dead requests handed back immediately");
+        // And the worker loop signal still works after.
+        q.close();
         assert!(policy.next_batch(&q).is_none());
     }
 }

@@ -18,6 +18,7 @@ use super::batcher::BatchPolicy;
 use super::cache::{AdapterStore, CacheStats};
 use super::request::{
     response_channel, AdmissionQueue, Pending, Request, Response, ResponseHandle,
+    ResponseStatus,
 };
 use crate::adapters::{AdapterKind, AdapterSpec};
 use crate::config::ModelPreset;
@@ -77,16 +78,73 @@ impl Default for EngineConfig {
 /// Execution counters, all monotone (read with [`ServingEngine::stats`]).
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
+    /// Batches executed (shed-only drains are not batches).
     pub batches: u64,
+    /// Requests computed (excludes shed).
     pub requests: u64,
+    /// Requests shed at the queue: their deadline passed before a worker
+    /// reached them, so they were answered `Expired` with zero compute.
+    pub shed: u64,
+    /// Open-loop submissions refused because the admission queue was full
+    /// (`try_submit_with`); blocking `submit` never increments this.
+    pub rejected: u64,
+    /// Total µs *computed* requests spent queued (admission → drain). Shed
+    /// requests are excluded — their wait ends in an answer, not service,
+    /// and counting them would make overload look like queue-delay.
+    pub queue_us_sum: u64,
+    /// Largest single computed-request queue delay seen, in µs.
+    pub queue_us_max: u64,
     /// `hist[k]` = batches that carried exactly k real requests (index 0
     /// unused).
     pub batch_hist: Vec<u64>,
 }
 
+impl EngineStats {
+    /// Mean queue delay of computed requests, in seconds.
+    pub fn queue_wait_mean_s(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.queue_us_sum as f64 / self.requests as f64 * 1e-6
+        }
+    }
+
+    /// Counter deltas since `base` (an earlier snapshot of the same
+    /// engine). Lets a measured window — e.g. post-warmup load generation —
+    /// report its own traffic instead of cumulative-since-construction
+    /// numbers. `queue_us_max` is the window's running max only when it
+    /// grew; a stale max from before the window cannot be subtracted out,
+    /// so it is reported as 0 if unchanged (no new maximum in-window).
+    pub fn delta_since(&self, base: &EngineStats) -> EngineStats {
+        let hist = self
+            .batch_hist
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| n - base.batch_hist.get(i).copied().unwrap_or(0))
+            .collect();
+        EngineStats {
+            batches: self.batches - base.batches,
+            requests: self.requests - base.requests,
+            shed: self.shed - base.shed,
+            rejected: self.rejected - base.rejected,
+            queue_us_sum: self.queue_us_sum - base.queue_us_sum,
+            queue_us_max: if self.queue_us_max > base.queue_us_max {
+                self.queue_us_max
+            } else {
+                0
+            },
+            batch_hist: hist,
+        }
+    }
+}
+
 struct StatsInner {
     batches: AtomicU64,
     requests: AtomicU64,
+    shed: AtomicU64,
+    rejected: AtomicU64,
+    queue_us_sum: AtomicU64,
+    queue_us_max: AtomicU64,
     hist: Mutex<Vec<u64>>,
 }
 
@@ -105,6 +163,9 @@ pub struct ServingEngine<'b> {
     policy: BatchPolicy,
     stats: StatsInner,
     next_id: AtomicU64,
+    /// Construction instant — the zero point of [`Self::now_us`] and every
+    /// [`Response::done_us`] stamp.
+    epoch: Instant,
 }
 
 impl<'b> ServingEngine<'b> {
@@ -163,9 +224,14 @@ impl<'b> ServingEngine<'b> {
             stats: StatsInner {
                 batches: AtomicU64::new(0),
                 requests: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+                rejected: AtomicU64::new(0),
+                queue_us_sum: AtomicU64::new(0),
+                queue_us_max: AtomicU64::new(0),
                 hist: Mutex::new(hist),
             },
             next_id: AtomicU64::new(0),
+            epoch: Instant::now(),
         })
     }
 
@@ -198,8 +264,20 @@ impl<'b> ServingEngine<'b> {
         EngineStats {
             batches: self.stats.batches.load(Ordering::Relaxed),
             requests: self.stats.requests.load(Ordering::Relaxed),
+            shed: self.stats.shed.load(Ordering::Relaxed),
+            rejected: self.stats.rejected.load(Ordering::Relaxed),
+            queue_us_sum: self.stats.queue_us_sum.load(Ordering::Relaxed),
+            queue_us_max: self.stats.queue_us_max.load(Ordering::Relaxed),
             batch_hist: self.stats.hist.lock().unwrap().clone(),
         }
+    }
+
+    /// Microseconds since engine construction — the clock every
+    /// [`Response::done_us`] is stamped against. Load generators measure
+    /// submit→done on this clock so a lagging collector thread cannot
+    /// inflate latencies.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
     }
 
     /// Hot-swap the adapter to a new chain state (e.g. a freshly-loaded
@@ -217,7 +295,57 @@ impl<'b> ServingEngine<'b> {
 
     /// Admit one request (blocking while the queue is full). The returned
     /// handle resolves to the [`Response`] once a worker's batch carried it.
+    /// No deadline, default priority — see [`Self::submit_with`].
     pub fn submit(&self, task: usize, tokens: Vec<i32>) -> Result<ResponseHandle> {
+        self.submit_with(task, tokens, None, 0)
+    }
+
+    /// Admit one request with an optional relative deadline and a priority
+    /// class (lower = more urgent), blocking while the queue is full. The
+    /// deadline becomes absolute at admission; a worker that reaches the
+    /// request at or after it answers `Expired` without computing.
+    pub fn submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<ResponseHandle> {
+        let (p, rx) = self.make_pending(task, tokens, deadline, priority)?;
+        let id = p.req.id;
+        self.queue.submit(p).map_err(|e| anyhow!(e))?;
+        Ok(ResponseHandle { id, rx })
+    }
+
+    /// Non-blocking admission for open-loop load: `Ok(None)` means the
+    /// queue was full and the request was rejected (counted in
+    /// [`EngineStats::rejected`]) — the arrival process never blocks, which
+    /// is what makes offered load independent of service rate.
+    pub fn try_submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<Option<ResponseHandle>> {
+        let (p, rx) = self.make_pending(task, tokens, deadline, priority)?;
+        let id = p.req.id;
+        match self.queue.try_submit(p).map_err(|e| anyhow!(e))? {
+            true => Ok(Some(ResponseHandle { id, rx })),
+            false => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+        }
+    }
+
+    fn make_pending(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<(Pending, std::sync::mpsc::Receiver<Response>)> {
         if task >= self.cfg.num_tasks {
             bail!("task {task} out of range ({} served)", self.cfg.num_tasks);
         }
@@ -229,19 +357,26 @@ impl<'b> ServingEngine<'b> {
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = response_channel();
-        self.queue
-            .submit(Pending {
-                req: Request { id, task, tokens },
+        let now = Instant::now();
+        Ok((
+            Pending {
+                req: Request { id, task, tokens, priority },
                 tx,
-                enqueued: Instant::now(),
-            })
-            .map_err(|e| anyhow!(e))?;
-        Ok(ResponseHandle { id, rx })
+                enqueued: now,
+                deadline: deadline.map(|d| now + d),
+            },
+            rx,
+        ))
     }
 
     /// Run the engine: spawn the worker pool, hand control to `driver`
     /// (submit requests, reload checkpoints, …), then close the queue,
-    /// drain, and join. Worker failures — errors *or* panics — surface as
+    /// drain, and join. The close-then-join sequence is the **graceful
+    /// drain**: new submissions fail, but workers finish every
+    /// already-admitted request — computing live ones, answering expired
+    /// ones with `Expired` — before exiting, so no admitted request is
+    /// ever left unanswered on a clean shutdown (pinned in
+    /// `tests/serving.rs`). Worker failures — errors *or* panics — surface as
     /// the returned error; a failing worker aborts the queue (close +
     /// drop every queued request), so clients blocked on handles observe
     /// a receive error instead of hanging and blocked producers wake up.
@@ -299,20 +434,48 @@ impl<'b> ServingEngine<'b> {
         })
     }
 
-    /// One worker: bind a private step, then batch → fold-lookup → execute
-    /// → fulfil until the queue closes. The token and logit buffers are
-    /// reused across ticks, so a warmed tick's only allocations are the
-    /// per-response logit vectors handed to clients.
+    /// One worker: bind a private step, then drain → shed-answer →
+    /// fold-lookup → execute → fulfil until the queue closes. The token and
+    /// logit buffers are reused across ticks, so a warmed tick's only
+    /// allocations are the per-response logit vectors handed to clients.
     fn worker_loop(&self) -> Result<()> {
         let step = self.backend.bind(&self.spec, &self.frozen)?;
         let (b, s, classes) = (self.cfg.max_batch, self.seq, self.cfg.classes);
         let mut tokens = vec![0i32; b * s];
         let mut logits = vec![0f32; b * classes];
-        while let Some(batch) = self.policy.next_batch(&self.queue) {
+        while let Some(drained) = self.policy.next_batch(&self.queue) {
+            // Dead work first: answer shed requests with an explicit
+            // Expired status and zero compute.
+            if !drained.shed.is_empty() {
+                self.stats.shed.fetch_add(drained.shed.len() as u64, Ordering::Relaxed);
+                let done_us = self.now_us();
+                for p in drained.shed {
+                    let _ = p.tx.send(Response {
+                        id: p.req.id,
+                        task: p.req.task,
+                        status: ResponseStatus::Expired,
+                        logits: Vec::new(),
+                        batch_rows: 0,
+                        generation: 0,
+                        done_us,
+                    });
+                }
+            }
+            let batch = drained.run;
+            if batch.is_empty() {
+                continue;
+            }
+            let drained_at = Instant::now();
             let task = batch[0].req.task;
             let folded = self.store.get(task);
             for (i, p) in batch.iter().enumerate() {
                 tokens[i * s..(i + 1) * s].copy_from_slice(&p.req.tokens);
+                // Queue-delay telemetry: admission → drain, computed
+                // requests only.
+                let waited = drained_at.saturating_duration_since(p.enqueued);
+                let us = waited.as_micros() as u64;
+                self.stats.queue_us_sum.fetch_add(us, Ordering::Relaxed);
+                self.stats.queue_us_max.fetch_max(us, Ordering::Relaxed);
             }
             // Pad short batches by repeating row 0 (valid tokens; output
             // rows beyond the real requests are simply never read).
@@ -325,15 +488,18 @@ impl<'b> ServingEngine<'b> {
             self.stats.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
             self.stats.hist.lock().unwrap()[batch.len()] += 1;
             let rows = batch.len();
+            let done_us = self.now_us();
             for (i, p) in batch.into_iter().enumerate() {
                 // A dropped receiver (client gave up) is not an engine
                 // error; ignore the send result.
                 let _ = p.tx.send(Response {
                     id: p.req.id,
                     task,
+                    status: ResponseStatus::Ok,
                     logits: logits[i * classes..(i + 1) * classes].to_vec(),
                     batch_rows: rows,
                     generation: folded.generation,
+                    done_us,
                 });
             }
         }

@@ -1,18 +1,35 @@
-//! Deterministic closed-loop load generator + the `BENCH_pr5.json` record.
+//! Deterministic load generation: closed-loop clients (`BENCH_pr5.json`),
+//! an open-loop Poisson arrival mode, and the overload sweep behind
+//! `BENCH_pr6.json`.
 //!
-//! C client threads each replay a seeded request stream against an
-//! in-process [`ServingEngine`]: sample a task from the configured mix,
-//! generate that request's tokens, submit, block on the response, repeat
-//! (optionally with think time — the closed-loop "arrival pattern" knob:
-//! zero think time is a saturating burst, larger values approach an open
-//! trickle). Request *content* is a pure function of `(seed, client,
-//! index)` — [`request_stream`] exposes exactly the stream a client
-//! replays, which is what the parity and determinism tests in
-//! `tests/serving.rs` re-derive — while timing (and therefore batch
-//! composition) is free to vary; responses are bit-identical regardless.
+//! **Closed-loop** ([`run_load`]): C client threads each replay a seeded
+//! request stream — sample a task from the mix, generate tokens, submit,
+//! block on the response, repeat (optional think time). Offered load is
+//! coupled to service rate (a slow server slows its clients), which makes
+//! it a *capacity* probe, not an overload probe. Request content is a pure
+//! function of `(seed, client, index)` — [`request_stream`] exposes
+//! exactly the stream a client replays — while timing (and therefore
+//! batch composition) is free to vary; responses are bit-identical
+//! regardless.
+//!
+//! **Open-loop** ([`run_open_loop`]): a single arrival thread fires
+//! requests at a fixed Poisson rate regardless of how the engine is doing
+//! — admission is non-blocking (`try_submit_with`), so a saturated queue
+//! rejects arrivals instead of slowing them down. This is the only
+//! honest way to measure overload: offered load stays at the configured
+//! multiple of capacity while the engine sheds expired requests and
+//! refuses full-queue arrivals. Latency is measured on the engine's
+//! `done_us` clock (submit → completion), so a lagging collector cannot
+//! inflate the tail.
+//!
+//! **Overload sweep** ([`run_overload_bench`]): one `serve` session —
+//! warmup, a closed-loop capacity measurement, then an open-loop level at
+//! each requested multiple of that capacity — reported as per-window
+//! [`EngineStats`] deltas so warmup and earlier levels never contaminate
+//! a level's numbers.
 
-use super::engine::ServingEngine;
-use super::request::Response;
+use super::engine::{EngineStats, ServingEngine};
+use super::request::{Response, ResponseHandle, ResponseStatus};
 use crate::bench::Stats;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -33,6 +50,10 @@ pub struct LoadGenConfig {
     pub task_mix: Vec<f64>,
     /// Think time between a response and the client's next request (µs).
     pub think_us: u64,
+    /// Relative deadline attached to every request (None = no deadline).
+    pub deadline: Option<Duration>,
+    /// Priority class for every request (lower = more urgent).
+    pub priority: u8,
 }
 
 impl Default for LoadGenConfig {
@@ -43,20 +64,28 @@ impl Default for LoadGenConfig {
             seed: 7,
             task_mix: Vec::new(),
             think_us: 0,
+            deadline: None,
+            priority: 0,
         }
     }
 }
 
-/// What one load run measured.
+/// What one closed-loop run measured.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
     pub total_requests: usize,
     pub elapsed: f64,
     pub throughput_rps: f64,
-    /// End-to-end (submit → response) latency in seconds.
+    /// End-to-end (submit → response) latency in seconds, computed
+    /// responses only.
     pub latency: Stats,
-    /// Requests per task.
+    /// Computed responses per task.
     pub per_task: Vec<u64>,
+    /// Responses answered `Expired` (only possible with a deadline set).
+    pub expired: usize,
+    /// Engine counters for the measured window only: a snapshot delta that
+    /// excludes warmup traffic (and, inside a sweep, earlier phases).
+    pub engine: EngineStats,
 }
 
 /// The deterministic request stream of one client: `(task, tokens)` for
@@ -88,7 +117,16 @@ fn client_rng(seed: u64, client: usize) -> Pcg64 {
 /// One request's token ids: seq draws from `[1, vocab)` (0 is the pad id,
 /// which the attention mask treats as absent — synthetic requests keep
 /// every position real).
+///
+/// A degenerate single-token vocabulary has no non-pad ids to draw, so the
+/// request is all-pad (`vec![0; seq]`) — the only well-formed request such
+/// a model can receive. The guard matters: `vocab == 1` used to reach
+/// `Pcg64::uniform_usize(0)`, whose empty-range contract panics.
 pub fn request_tokens(rng: &mut Pcg64, seq: usize, vocab: usize) -> Vec<i32> {
+    assert!(vocab >= 1, "request_tokens needs a vocabulary of at least the pad id");
+    if vocab == 1 {
+        return vec![0; seq];
+    }
     (0..seq).map(|_| 1 + rng.uniform_usize(vocab - 1) as i32).collect()
 }
 
@@ -119,17 +157,26 @@ fn sample_task(rng: &mut Pcg64, cum: &[f64]) -> usize {
     cum.iter().position(|&c| u < c).unwrap_or(cum.len() - 1)
 }
 
-/// Drive the engine with `cfg.clients` closed-loop clients and fold the
-/// per-request latencies into a [`LoadReport`]. Responses are checked for
-/// id/task consistency; logits validation belongs to the test suite.
-///
-/// A short warmup wave (round-robin over every task, sized to the worker
-/// pool, its own RNG stream) runs before the clock starts and is excluded
-/// from the latency/throughput measurements, so the recorded percentiles
-/// reflect steady-state serving rather than worker bind + first-tick arena
-/// growth + cold folds. (Engine-side counters — batches, cache folds —
-/// still include the warmup ticks; folds happen once either way.)
-pub fn run_load(engine: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadReport> {
+/// Warm the engine before a measured window: a round-robin wave over every
+/// task, sized to the worker pool, on its own RNG stream. Covers worker
+/// bind + first-tick arena growth + the cold fold of each task's adapter.
+pub fn warmup_in(eng: &ServingEngine, seed: u64) -> Result<()> {
+    let num_tasks = eng.config().num_tasks;
+    let (seq, vocab) = (eng.seq_len(), eng.vocab());
+    let mut wrng = Pcg64::with_stream(seed, 0x3a97);
+    let warm = (eng.config().workers * 2).max(num_tasks);
+    for i in 0..warm {
+        let tokens = request_tokens(&mut wrng, seq, vocab);
+        eng.submit(i % num_tasks, tokens)?.wait().map_err(|e| anyhow!(e))?;
+    }
+    Ok(())
+}
+
+/// Closed-loop clients against an engine whose worker pool is already
+/// running (call inside a [`ServingEngine::serve`] driver, after
+/// [`warmup_in`]). The report's engine counters are the delta over this
+/// window only.
+pub fn closed_loop_in(eng: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadReport> {
     if cfg.clients == 0 || cfg.requests_per_client == 0 {
         anyhow::bail!(
             "load generator needs >= 1 client and >= 1 request per client \
@@ -138,83 +185,361 @@ pub fn run_load(engine: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadRepor
             cfg.requests_per_client
         );
     }
-    let num_tasks = engine.config().num_tasks;
-    let (seq, vocab) = (engine.seq_len(), engine.vocab());
-    let (elapsed, per_client): (f64, Vec<(Vec<f64>, Vec<u64>)>) = engine.serve(|eng| {
-        let mut wrng = Pcg64::with_stream(cfg.seed, 0x3a97);
-        let warm = (eng.config().workers * 2).max(num_tasks);
-        for i in 0..warm {
-            let tokens = request_tokens(&mut wrng, seq, vocab);
-            eng.submit(i % num_tasks, tokens)?
-                .wait()
-                .map_err(|e| anyhow!(e))?;
-        }
-        let t0 = Instant::now();
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..cfg.clients)
-                .map(|client| {
-                    scope.spawn(move || -> Result<(Vec<f64>, Vec<u64>)> {
-                        let stream = request_stream(
-                            cfg,
-                            num_tasks,
-                            seq,
-                            vocab,
-                            client,
-                            cfg.requests_per_client,
-                        );
-                        let mut lats = Vec::with_capacity(stream.len());
-                        let mut per_task = vec![0u64; num_tasks];
-                        for (task, tokens) in stream {
-                            let sent = Instant::now();
-                            let handle = eng.submit(task, tokens)?;
-                            let resp: Response =
-                                handle.wait().map_err(|e| anyhow!(e))?;
-                            lats.push(sent.elapsed().as_secs_f64());
-                            if resp.task != task {
-                                return Err(anyhow!(
-                                    "response task {} for a task-{task} request",
-                                    resp.task
-                                ));
-                            }
-                            per_task[task] += 1;
-                            if cfg.think_us > 0 {
-                                std::thread::sleep(Duration::from_micros(cfg.think_us));
-                            }
+    let num_tasks = eng.config().num_tasks;
+    let (seq, vocab) = (eng.seq_len(), eng.vocab());
+    let base = eng.stats();
+    let t0 = Instant::now();
+    let per_client: Vec<(Vec<f64>, Vec<u64>, usize)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|client| {
+                scope.spawn(move || -> Result<(Vec<f64>, Vec<u64>, usize)> {
+                    let stream = request_stream(
+                        cfg,
+                        num_tasks,
+                        seq,
+                        vocab,
+                        client,
+                        cfg.requests_per_client,
+                    );
+                    let mut lats = Vec::with_capacity(stream.len());
+                    let mut per_task = vec![0u64; num_tasks];
+                    let mut expired = 0usize;
+                    for (task, tokens) in stream {
+                        let sent = Instant::now();
+                        let handle =
+                            eng.submit_with(task, tokens, cfg.deadline, cfg.priority)?;
+                        let resp: Response = handle.wait().map_err(|e| anyhow!(e))?;
+                        if resp.task != task {
+                            return Err(anyhow!(
+                                "response task {} for a task-{task} request",
+                                resp.task
+                            ));
                         }
-                        Ok((lats, per_task))
-                    })
+                        match resp.status {
+                            ResponseStatus::Ok => {
+                                lats.push(sent.elapsed().as_secs_f64());
+                                per_task[task] += 1;
+                            }
+                            ResponseStatus::Expired => expired += 1,
+                        }
+                        if cfg.think_us > 0 {
+                            std::thread::sleep(Duration::from_micros(cfg.think_us));
+                        }
+                    }
+                    Ok((lats, per_task, expired))
                 })
-                .collect();
-            let mut results = Vec::with_capacity(handles.len());
-            for h in handles {
-                results.push(h.join().map_err(|_| anyhow!("load client panicked"))??);
-            }
-            Ok((t0.elapsed().as_secs_f64(), results))
-        })
-    })??;
+            })
+            .collect();
+        let mut results = Vec::with_capacity(handles.len());
+        for h in handles {
+            results.push(h.join().map_err(|_| anyhow!("load client panicked"))??);
+        }
+        Ok::<_, anyhow::Error>(results)
+    })?;
+    let elapsed = t0.elapsed().as_secs_f64();
     let mut lats = Vec::new();
     let mut per_task = vec![0u64; num_tasks];
-    for (l, p) in per_client {
+    let mut expired = 0usize;
+    for (l, p, e) in per_client {
         lats.extend(l);
+        expired += e;
         for (dst, src) in per_task.iter_mut().zip(&p) {
             *dst += src;
         }
     }
-    let total = lats.len();
+    let total = lats.len() + expired;
     Ok(LoadReport {
         total_requests: total,
         elapsed,
-        throughput_rps: total as f64 / elapsed.max(1e-9),
+        throughput_rps: lats.len() as f64 / elapsed.max(1e-9),
         latency: Stats::from_samples(lats),
         per_task,
+        expired,
+        engine: eng.stats().delta_since(&base),
     })
 }
 
-/// Assemble the `BENCH_pr5.json` document from a load run: latency
-/// percentiles, throughput, the batch-size histogram, and cache counters.
+/// Drive the engine with `cfg.clients` closed-loop clients and fold the
+/// per-request latencies into a [`LoadReport`]. The warmup wave runs
+/// before the clock starts; the report's latency, throughput, *and engine
+/// counters* (mean fill, batch histogram, queue waits) cover the measured
+/// window only — cumulative counters would let warmup ticks contaminate
+/// the fill statistics. (Cache counters stay cumulative: folds happen once
+/// either way and belong to the engine's lifetime, not a window.)
+pub fn run_load(engine: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadReport> {
+    engine.serve(|eng| {
+        warmup_in(eng, cfg.seed)?;
+        closed_loop_in(eng, cfg)
+    })?
+}
+
+/// Open-loop (Poisson) load knobs.
+#[derive(Clone, Debug)]
+pub struct OpenLoopConfig {
+    /// Offered arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// Total arrivals to offer.
+    pub requests: usize,
+    pub seed: u64,
+    /// Stream tag — give each level of a sweep its own so request content
+    /// differs across levels.
+    pub stream: usize,
+    /// Per-task mix weights (empty = uniform).
+    pub task_mix: Vec<f64>,
+    /// Relative deadline per request. Also the goodput criterion: a
+    /// computed response that finished after it does not count.
+    pub deadline: Option<Duration>,
+    pub priority: u8,
+}
+
+/// What one open-loop window measured.
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    /// Arrivals generated.
+    pub offered: usize,
+    /// Arrivals admitted to the queue.
+    pub admitted: usize,
+    /// Arrivals refused because the queue was full.
+    pub rejected: usize,
+    /// Computed responses.
+    pub ok: usize,
+    /// Responses shed with `Expired`.
+    pub expired: usize,
+    /// Admitted requests dropped without a response (worker failure only —
+    /// zero on a clean run, asserted by the drain test).
+    pub dropped: usize,
+    /// Computed responses that also met their deadline (== `ok` when no
+    /// deadline is configured).
+    pub deadline_met: usize,
+    /// First arrival → last response, seconds (engine clock).
+    pub elapsed: f64,
+    /// Arrivals actually offered per second (sleep jitter makes this
+    /// slightly off the configured rate).
+    pub offered_rps: f64,
+    /// Deadline-meeting responses per second — the number overload is
+    /// about.
+    pub goodput_rps: f64,
+    /// Computed responses per second (ignores deadlines).
+    pub achieved_rps: f64,
+    /// submit → done latency of computed responses (engine `done_us`
+    /// clock); None when nothing completed.
+    pub latency: Option<Stats>,
+    /// Engine counters for this window only.
+    pub engine: EngineStats,
+}
+
+/// Open-loop Poisson arrivals against a running engine (call inside a
+/// [`ServingEngine::serve`] driver). Arrivals are paced on an absolute
+/// schedule — if the generator falls behind it bursts to catch up, so the
+/// *average* offered rate holds. Admission never blocks: a full queue
+/// counts a rejection and the arrival process moves on.
+pub fn open_loop_in(eng: &ServingEngine, cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
+    if cfg.requests == 0 || !(cfg.rate_rps > 0.0) || !cfg.rate_rps.is_finite() {
+        anyhow::bail!(
+            "open loop needs >= 1 request and a positive finite rate (got {} @ {} rps)",
+            cfg.requests,
+            cfg.rate_rps
+        );
+    }
+    let num_tasks = eng.config().num_tasks;
+    let (seq, vocab) = (eng.seq_len(), eng.vocab());
+    let cum = cumulative_mix(&cfg.task_mix, num_tasks);
+    let mut rng = client_rng(cfg.seed, 0x0bee ^ cfg.stream);
+    let base = eng.stats();
+    let deadline_us = cfg.deadline.map(|d| d.as_micros() as u64);
+
+    let start = Instant::now();
+    let t0_us = eng.now_us();
+    let mut next_at = 0f64; // seconds since `start`, absolute schedule
+    let mut admitted: Vec<(u64, ResponseHandle)> = Vec::with_capacity(cfg.requests);
+    let mut rejected = 0usize;
+    for _ in 0..cfg.requests {
+        // Exponential inter-arrival gap: -ln(1-U)/λ, U ∈ [0, 1).
+        next_at += -(1.0 - rng.uniform_f64()).ln() / cfg.rate_rps;
+        let due = Duration::from_secs_f64(next_at);
+        let now = start.elapsed();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let task = sample_task(&mut rng, &cum);
+        let tokens = request_tokens(&mut rng, seq, vocab);
+        let submit_us = eng.now_us();
+        match eng.try_submit_with(task, tokens, cfg.deadline, cfg.priority)? {
+            Some(handle) => admitted.push((submit_us, handle)),
+            None => rejected += 1,
+        }
+    }
+    let arrival_window = start.elapsed().as_secs_f64();
+
+    // Collect. Handles buffer their responses, so waiting after the
+    // arrival window costs nothing; latency uses engine `done_us` stamps
+    // and is therefore independent of collection order.
+    let n_admitted = admitted.len();
+    let (mut ok, mut expired, mut dropped, mut met) = (0usize, 0usize, 0usize, 0usize);
+    let mut lats = Vec::with_capacity(n_admitted);
+    let mut last_done_us = t0_us;
+    for (submit_us, handle) in admitted {
+        match handle.wait() {
+            Ok(resp) => {
+                last_done_us = last_done_us.max(resp.done_us);
+                match resp.status {
+                    ResponseStatus::Ok => {
+                        ok += 1;
+                        let lat_us = resp.done_us.saturating_sub(submit_us);
+                        lats.push(lat_us as f64 * 1e-6);
+                        let in_time = match deadline_us {
+                            None => true,
+                            Some(d) => lat_us <= d,
+                        };
+                        if in_time {
+                            met += 1;
+                        }
+                    }
+                    ResponseStatus::Expired => expired += 1,
+                }
+            }
+            Err(_) => dropped += 1,
+        }
+    }
+    let elapsed = ((last_done_us - t0_us) as f64 * 1e-6).max(arrival_window).max(1e-9);
+    Ok(OpenLoopReport {
+        offered: cfg.requests,
+        admitted: n_admitted,
+        rejected,
+        ok,
+        expired,
+        dropped,
+        deadline_met: met,
+        elapsed,
+        offered_rps: cfg.requests as f64 / arrival_window.max(1e-9),
+        goodput_rps: met as f64 / elapsed,
+        achieved_rps: ok as f64 / elapsed,
+        latency: if lats.is_empty() { None } else { Some(Stats::from_samples(lats)) },
+        engine: eng.stats().delta_since(&base),
+    })
+}
+
+/// One full open-loop run: spawn the pool, warm up, offer, drain.
+pub fn run_open_loop(engine: &ServingEngine, cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
+    engine.serve(|eng| {
+        warmup_in(eng, cfg.seed)?;
+        open_loop_in(eng, cfg)
+    })?
+}
+
+/// Overload-sweep knobs (the `BENCH_pr6.json` experiment).
+#[derive(Clone, Debug)]
+pub struct OverloadConfig {
+    /// Closed-loop phase that measures saturation capacity.
+    pub capacity: LoadGenConfig,
+    /// Offered-load multiples of the measured capacity, one open-loop
+    /// level each.
+    pub mults: Vec<f64>,
+    /// Arrivals offered per level.
+    pub requests_per_level: usize,
+    /// Relative deadline per request at every level (the shed/goodput
+    /// criterion).
+    pub deadline: Duration,
+    pub priority: u8,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> OverloadConfig {
+        OverloadConfig {
+            capacity: LoadGenConfig::default(),
+            mults: vec![0.5, 1.0, 2.0, 4.0],
+            requests_per_level: 200,
+            deadline: Duration::from_millis(50),
+            priority: 0,
+        }
+    }
+}
+
+/// What the sweep measured.
+#[derive(Clone, Debug)]
+pub struct OverloadReport {
+    /// The closed-loop capacity phase.
+    pub capacity: LoadReport,
+    /// Saturation throughput the levels are scaled from, requests/s.
+    pub capacity_rps: f64,
+    /// `(multiple, open-loop report)` per level, in run order.
+    pub levels: Vec<(f64, OpenLoopReport)>,
+}
+
+/// Measure capacity closed-loop, then offer open-loop Poisson load at each
+/// multiple of it — all inside ONE `serve` session (an engine cannot serve
+/// twice: `serve` closes the queue on exit). Each phase reports its own
+/// [`EngineStats`] window.
+pub fn run_overload_bench(
+    engine: &ServingEngine,
+    cfg: &OverloadConfig,
+) -> Result<OverloadReport> {
+    if cfg.mults.is_empty() {
+        anyhow::bail!("overload sweep needs at least one load multiple");
+    }
+    if !(cfg.deadline > Duration::ZERO) {
+        anyhow::bail!("overload sweep needs a positive deadline (it defines goodput)");
+    }
+    engine.serve(|eng| {
+        warmup_in(eng, cfg.capacity.seed)?;
+        let capacity = closed_loop_in(eng, &cfg.capacity)?;
+        let capacity_rps = capacity.throughput_rps.max(1.0);
+        let mut levels = Vec::with_capacity(cfg.mults.len());
+        for (i, &mult) in cfg.mults.iter().enumerate() {
+            if !(mult > 0.0) || !mult.is_finite() {
+                anyhow::bail!("load multiple must be positive and finite (got {mult})");
+            }
+            let ol = OpenLoopConfig {
+                rate_rps: capacity_rps * mult,
+                requests: cfg.requests_per_level,
+                seed: cfg.capacity.seed,
+                stream: i + 1,
+                task_mix: cfg.capacity.task_mix.clone(),
+                deadline: Some(cfg.deadline),
+                priority: cfg.priority,
+            };
+            levels.push((mult, open_loop_in(eng, &ol)?));
+        }
+        Ok(OverloadReport { capacity, capacity_rps, levels })
+    })?
+}
+
+fn latency_json(s: &Stats) -> Json {
+    Json::obj(vec![
+        ("mean", Json::num(s.mean)),
+        ("p50", Json::num(s.p50)),
+        ("p95", Json::num(s.p95)),
+        ("p99", Json::num(s.p99)),
+    ])
+}
+
+fn engine_window_json(stats: &EngineStats) -> Json {
+    let mean_fill = if stats.batches > 0 {
+        stats.requests as f64 / stats.batches as f64
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("batches", Json::num(stats.batches as f64)),
+        ("requests", Json::num(stats.requests as f64)),
+        ("shed", Json::num(stats.shed as f64)),
+        ("rejected", Json::num(stats.rejected as f64)),
+        ("mean_fill", Json::num(mean_fill)),
+        ("queue_wait_mean_ms", Json::num(stats.queue_wait_mean_s() * 1e3)),
+        ("queue_wait_max_ms", Json::num(stats.queue_us_max as f64 * 1e-3)),
+        (
+            "size_histogram",
+            Json::Arr(stats.batch_hist.iter().map(|&n| Json::num(n as f64)).collect()),
+        ),
+    ])
+}
+
+/// Assemble the `BENCH_pr5.json` document from a closed-loop run: latency
+/// percentiles, throughput, the measured window's batch statistics, and
+/// cache counters.
 pub fn report_json(engine: &ServingEngine, cfg: &LoadGenConfig, report: &LoadReport) -> Json {
     let ecfg = engine.config();
-    let stats = engine.stats();
+    let stats = &report.engine;
     let cache = engine.cache_stats();
     let lookups = cache.hits + cache.folds;
     let mean_fill = if stats.batches > 0 {
@@ -243,6 +568,11 @@ pub fn report_json(engine: &ServingEngine, cfg: &LoadGenConfig, report: &LoadRep
                 ("requests_per_client", Json::num(cfg.requests_per_client as f64)),
                 ("seed", Json::num(cfg.seed as f64)),
                 ("think_us", Json::num(cfg.think_us as f64)),
+                (
+                    "deadline_ms",
+                    Json::num(cfg.deadline.map_or(0.0, |d| d.as_secs_f64() * 1e3)),
+                ),
+                ("priority", Json::num(cfg.priority as f64)),
             ]),
         ),
         (
@@ -251,15 +581,8 @@ pub fn report_json(engine: &ServingEngine, cfg: &LoadGenConfig, report: &LoadRep
                 ("requests", Json::num(report.total_requests as f64)),
                 ("elapsed_s", Json::num(report.elapsed)),
                 ("throughput_rps", Json::num(report.throughput_rps)),
-                (
-                    "latency_s",
-                    Json::obj(vec![
-                        ("mean", Json::num(report.latency.mean)),
-                        ("p50", Json::num(report.latency.p50)),
-                        ("p95", Json::num(report.latency.p95)),
-                        ("p99", Json::num(report.latency.p99)),
-                    ]),
-                ),
+                ("expired", Json::num(report.expired as f64)),
+                ("latency_s", latency_json(&report.latency)),
                 (
                     "per_task",
                     Json::Arr(report.per_task.iter().map(|&n| Json::num(n as f64)).collect()),
@@ -299,6 +622,76 @@ pub fn report_json(engine: &ServingEngine, cfg: &LoadGenConfig, report: &LoadRep
     ])
 }
 
+/// Assemble the `BENCH_pr6.json` document from an overload sweep: the
+/// measured capacity, then per level the offered rate, admission/shed
+/// accounting, goodput, and the tail of the computed-response latencies.
+pub fn overload_report_json(
+    engine: &ServingEngine,
+    cfg: &OverloadConfig,
+    report: &OverloadReport,
+) -> Json {
+    let ecfg = engine.config();
+    let levels = report
+        .levels
+        .iter()
+        .map(|(mult, r)| {
+            Json::obj(vec![
+                ("mult", Json::num(*mult)),
+                ("offered", Json::num(r.offered as f64)),
+                ("offered_rps", Json::num(r.offered_rps)),
+                ("admitted", Json::num(r.admitted as f64)),
+                ("rejected_full", Json::num(r.rejected as f64)),
+                ("ok", Json::num(r.ok as f64)),
+                ("shed_expired", Json::num(r.expired as f64)),
+                ("dropped", Json::num(r.dropped as f64)),
+                ("deadline_met", Json::num(r.deadline_met as f64)),
+                ("elapsed_s", Json::num(r.elapsed)),
+                ("goodput_rps", Json::num(r.goodput_rps)),
+                ("achieved_rps", Json::num(r.achieved_rps)),
+                (
+                    "latency_s",
+                    r.latency.as_ref().map_or(Json::Null, latency_json),
+                ),
+                ("engine", engine_window_json(&r.engine)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str("serving_overload")),
+        (
+            "config",
+            Json::obj(vec![
+                ("model", Json::str(ecfg.model.name())),
+                ("adapter", Json::str(ecfg.adapter.name())),
+                ("rank", Json::num(ecfg.rank as f64)),
+                ("num_tasks", Json::num(ecfg.num_tasks as f64)),
+                ("max_batch", Json::num(ecfg.max_batch as f64)),
+                ("workers", Json::num(ecfg.workers as f64)),
+                ("queue_capacity", Json::num(ecfg.queue_capacity as f64)),
+                ("seed", Json::num(cfg.capacity.seed as f64)),
+                ("capacity_clients", Json::num(cfg.capacity.clients as f64)),
+                (
+                    "capacity_requests_per_client",
+                    Json::num(cfg.capacity.requests_per_client as f64),
+                ),
+                ("requests_per_level", Json::num(cfg.requests_per_level as f64)),
+                ("deadline_ms", Json::num(cfg.deadline.as_secs_f64() * 1e3)),
+                ("priority", Json::num(cfg.priority as f64)),
+            ]),
+        ),
+        (
+            "capacity",
+            Json::obj(vec![
+                ("throughput_rps", Json::num(report.capacity.throughput_rps)),
+                ("requests", Json::num(report.capacity.total_requests as f64)),
+                ("latency_s", latency_json(&report.capacity.latency)),
+                ("engine", engine_window_json(&report.capacity.engine)),
+            ]),
+        ),
+        ("levels", Json::Arr(levels)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,6 +717,22 @@ mod tests {
         // The heavier task dominates.
         let t2 = a.iter().filter(|(t, _)| *t == 2).count();
         assert!(t2 > 25, "weight-3 task drew only {t2}/50");
+    }
+
+    #[test]
+    fn single_token_vocab_is_all_pad_not_a_panic() {
+        // vocab == 1 means the pad id is the whole vocabulary. The old code
+        // called uniform_usize(vocab - 1) == uniform_usize(0) here and
+        // panicked on the empty range; the contract is an all-pad request.
+        let mut rng = Pcg64::new(3);
+        let tokens = request_tokens(&mut rng, 6, 1);
+        assert_eq!(tokens, vec![0; 6]);
+        // A full stream over a degenerate vocab also survives.
+        let cfg = LoadGenConfig { seed: 5, ..Default::default() };
+        for (task, tokens) in request_stream(&cfg, 2, 4, 1, 0, 10) {
+            assert!(task < 2);
+            assert_eq!(tokens, vec![0; 4]);
+        }
     }
 
     #[test]

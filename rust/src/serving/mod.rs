@@ -21,24 +21,40 @@
 //!        → Response          per-request one-shot channel
 //! ```
 //!
-//! [`loadgen`] adds the deterministic closed-loop load generator that
-//! drives the engine in-process and emits `BENCH_pr5.json` (latency
-//! percentiles, throughput, batch-size histogram, cache hit rate).
+//! Requests carry an optional **deadline** and a **priority class**: the
+//! batcher orders by (priority, earliest deadline, admission) and *sheds*
+//! requests whose deadline passed before a worker reached them — answered
+//! with an explicit `Expired` status and zero compute, the overload valve
+//! that keeps goodput up when offered load exceeds capacity.
+//!
+//! [`net`] puts a TCP front-end on the same path: a length-prefixed binary
+//! protocol (`MTS1`, std::net only) whose server drains gracefully on
+//! shutdown. [`loadgen`] adds the deterministic closed-loop load generator
+//! (`BENCH_pr5.json`), an open-loop Poisson arrival mode, and the overload
+//! sweep behind `BENCH_pr6.json` (goodput / shed / tail latency at
+//! multiples of measured capacity).
 //!
 //! Entry points: [`ServingEngine::new`] → [`ServingEngine::serve`] with a
 //! driver closure; [`run_load`] for a full measured run (what `metatt
-//! serve` does).
+//! serve` does); [`serve_net`] inside a driver for the TCP front-end;
+//! [`run_overload_bench`] for the overload sweep.
 
 mod batcher;
 mod cache;
 mod engine;
 mod loadgen;
+pub mod net;
 mod request;
 
 pub use batcher::BatchPolicy;
 pub use cache::{metatt_from_tensors, AdapterStore, CacheStats, FoldedAdapter};
 pub use engine::{adapter_spec_for, EngineConfig, EngineStats, ServingEngine};
 pub use loadgen::{
-    report_json, request_stream, request_tokens, run_load, LoadGenConfig, LoadReport,
+    closed_loop_in, open_loop_in, overload_report_json, report_json, request_stream,
+    request_tokens, run_load, run_open_loop, run_overload_bench, warmup_in, LoadGenConfig,
+    LoadReport, OpenLoopConfig, OpenLoopReport, OverloadConfig, OverloadReport,
 };
-pub use request::{AdmissionQueue, Request, Response, ResponseHandle};
+pub use net::{
+    run_net_load, serve_net, NetClient, NetLoadReport, NetResponse, NetStats, WireStatus,
+};
+pub use request::{AdmissionQueue, Request, Response, ResponseHandle, ResponseStatus};

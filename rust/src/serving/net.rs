@@ -1,0 +1,806 @@
+//! TCP front-end: a length-prefixed binary protocol over `std::net` that
+//! makes the in-process engine — queue, EDF batcher, folded-adapter cache,
+//! abort path — reachable from outside the process.
+//!
+//! # Wire protocol (`MTS1`), all integers little-endian
+//!
+//! **Handshake.** The client sends the 4-byte magic `MTS1`; the server
+//! answers a 20-byte hello: magic `MTS1`, then `u32` seq-len, `u32` vocab,
+//! `u32` classes, `u32` num-tasks — everything a client needs to build
+//! valid requests without out-of-band configuration.
+//!
+//! **Request frame** (client → server): `u32` body length, then
+//! `u64` client-chosen request id · `u32` task · `u8` priority (lower =
+//! more urgent) · `u64` deadline in µs relative to server receipt (0 =
+//! none) · `u32` token count · that many `i32` token ids.
+//!
+//! **Response frame** (server → client): `u32` body length, then `u64` the
+//! echoed request id · `u8` status. For status `0` (ok) and `1` (expired —
+//! the deadline passed before a worker reached the request; it was shed,
+//! not computed): `u32` task · `u64` adapter generation · `u32` batch rows
+//! · `u32` logit count · that many `f32` logits (bit-exact: serving logits
+//! round-trip the wire unchanged; expired responses carry zero logits).
+//! For status `2` (error — validation or shutdown): `u32` message length ·
+//! UTF-8 message. Responses are written in request order per connection
+//! (pipelining is allowed; a connection may have many requests in flight).
+//!
+//! # Server lifecycle
+//!
+//! [`serve_net`] runs inside [`ServingEngine::serve`]'s driver slot: an
+//! accept loop (non-blocking + poll, so no self-connect tricks) hands each
+//! connection a reader thread (decode → `submit_with` — blocking admission
+//! is per-connection TCP backpressure) and a writer thread (await handles
+//! in order → encode). **Graceful drain** on shutdown: the accept loop
+//! stops taking connections, readers stop consuming new frames (an
+//! in-flight frame gets a grace period to finish arriving), writers flush
+//! every already-admitted response — workers are still running, so those
+//! handles all resolve — and only then are sockets closed. After the
+//! driver returns, `serve` closes the queue and the workers drain; no
+//! admitted request is ever dropped on a clean shutdown.
+
+use super::engine::ServingEngine;
+use super::request::{Response, ResponseHandle, ResponseStatus};
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Protocol magic + version ("MetaTT Serve v1").
+pub const WIRE_MAGIC: [u8; 4] = *b"MTS1";
+/// Largest accepted frame body (bytes) — a decode guard, not a tunable.
+pub const MAX_FRAME: usize = 1 << 22;
+
+const STATUS_OK: u8 = 0;
+const STATUS_EXPIRED: u8 = 1;
+const STATUS_ERROR: u8 = 2;
+
+/// How long the accept loop sleeps between polls.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Per-connection read timeout — the granularity at which readers notice
+/// the shutdown flag.
+const READ_TICK: Duration = Duration::from_millis(25);
+/// After shutdown, how long a half-received frame may keep a connection
+/// open before it is abandoned (the request was never admitted).
+const DRAIN_GRACE: Duration = Duration::from_secs(1);
+
+/// One parsed response frame (client side).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetResponse {
+    pub id: u64,
+    pub status: WireStatus,
+    pub task: usize,
+    pub generation: u64,
+    pub batch_rows: usize,
+    pub logits: Vec<f32>,
+    /// Populated for `WireStatus::Error` frames.
+    pub error: Option<String>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireStatus {
+    Ok,
+    Expired,
+    Error,
+}
+
+impl WireStatus {
+    fn from_u8(b: u8) -> Result<WireStatus> {
+        match b {
+            STATUS_OK => Ok(WireStatus::Ok),
+            STATUS_EXPIRED => Ok(WireStatus::Expired),
+            STATUS_ERROR => Ok(WireStatus::Error),
+            other => bail!("unknown response status byte {other}"),
+        }
+    }
+}
+
+/// Server-side counters from one [`serve_net`] run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetStats {
+    pub connections: u64,
+    /// Request frames decoded and admitted (or answered with an error).
+    pub requests: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Frame codecs (pure functions — unit-tested without sockets).
+// ---------------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Reader over a frame body with bounds-checked typed takes.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.at + n > self.buf.len() {
+            bail!("truncated frame: wanted {n} bytes at offset {}", self.at);
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!("{} trailing bytes after frame body", self.buf.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+/// Encode a full request frame (length prefix included).
+pub fn encode_request(
+    id: u64,
+    task: usize,
+    priority: u8,
+    deadline_us: u64,
+    tokens: &[i32],
+) -> Vec<u8> {
+    let body_len = 8 + 4 + 1 + 8 + 4 + 4 * tokens.len();
+    let mut buf = Vec::with_capacity(4 + body_len);
+    put_u32(&mut buf, body_len as u32);
+    put_u64(&mut buf, id);
+    put_u32(&mut buf, task as u32);
+    buf.push(priority);
+    put_u64(&mut buf, deadline_us);
+    put_u32(&mut buf, tokens.len() as u32);
+    for &t in tokens {
+        buf.extend_from_slice(&t.to_le_bytes());
+    }
+    buf
+}
+
+/// Decoded request frame body.
+pub struct WireRequest {
+    pub id: u64,
+    pub task: usize,
+    pub priority: u8,
+    /// Relative deadline in µs; 0 = none.
+    pub deadline_us: u64,
+    pub tokens: Vec<i32>,
+}
+
+/// Decode a request frame body (the bytes after the length prefix).
+pub fn decode_request(body: &[u8]) -> Result<WireRequest> {
+    let mut c = Cursor::new(body);
+    let id = c.u64()?;
+    let task = c.u32()? as usize;
+    let priority = c.u8()?;
+    let deadline_us = c.u64()?;
+    let n = c.u32()? as usize;
+    if n > MAX_FRAME / 4 {
+        bail!("request claims {n} tokens — frame cap exceeded");
+    }
+    let raw = c.take(4 * n)?;
+    let tokens = raw
+        .chunks_exact(4)
+        .map(|ch| i32::from_le_bytes(ch.try_into().unwrap()))
+        .collect();
+    c.done()?;
+    Ok(WireRequest { id, task, priority, deadline_us, tokens })
+}
+
+/// Encode an ok/expired response frame (length prefix included).
+pub fn encode_response(
+    id: u64,
+    status: WireStatus,
+    task: usize,
+    generation: u64,
+    batch_rows: usize,
+    logits: &[f32],
+) -> Vec<u8> {
+    debug_assert!(status != WireStatus::Error, "error frames carry a message instead");
+    let body_len = 8 + 1 + 4 + 8 + 4 + 4 + 4 * logits.len();
+    let mut buf = Vec::with_capacity(4 + body_len);
+    put_u32(&mut buf, body_len as u32);
+    put_u64(&mut buf, id);
+    buf.push(if status == WireStatus::Ok { STATUS_OK } else { STATUS_EXPIRED });
+    put_u32(&mut buf, task as u32);
+    put_u64(&mut buf, generation);
+    put_u32(&mut buf, batch_rows as u32);
+    put_u32(&mut buf, logits.len() as u32);
+    for &x in logits {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    buf
+}
+
+/// Encode an error response frame (length prefix included).
+pub fn encode_error(id: u64, msg: &str) -> Vec<u8> {
+    let msg = msg.as_bytes();
+    let msg = &msg[..msg.len().min(MAX_FRAME / 2)];
+    let body_len = 8 + 1 + 4 + msg.len();
+    let mut buf = Vec::with_capacity(4 + body_len);
+    put_u32(&mut buf, body_len as u32);
+    put_u64(&mut buf, id);
+    buf.push(STATUS_ERROR);
+    put_u32(&mut buf, msg.len() as u32);
+    buf.extend_from_slice(msg);
+    buf
+}
+
+/// Decode a response frame body (the bytes after the length prefix).
+pub fn decode_response(body: &[u8]) -> Result<NetResponse> {
+    let mut c = Cursor::new(body);
+    let id = c.u64()?;
+    let status = WireStatus::from_u8(c.u8()?)?;
+    if status == WireStatus::Error {
+        let n = c.u32()? as usize;
+        let msg = String::from_utf8_lossy(c.take(n)?).into_owned();
+        c.done()?;
+        return Ok(NetResponse {
+            id,
+            status,
+            task: 0,
+            generation: 0,
+            batch_rows: 0,
+            logits: Vec::new(),
+            error: Some(msg),
+        });
+    }
+    let task = c.u32()? as usize;
+    let generation = c.u64()?;
+    let batch_rows = c.u32()? as usize;
+    let n = c.u32()? as usize;
+    if n > MAX_FRAME / 4 {
+        bail!("response claims {n} logits — frame cap exceeded");
+    }
+    let raw = c.take(4 * n)?;
+    let logits = raw
+        .chunks_exact(4)
+        .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+        .collect();
+    c.done()?;
+    Ok(NetResponse { id, status, task, generation, batch_rows, logits, error: None })
+}
+
+fn encode_hello(engine: &ServingEngine) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(20);
+    buf.extend_from_slice(&WIRE_MAGIC);
+    put_u32(&mut buf, engine.seq_len() as u32);
+    put_u32(&mut buf, engine.vocab() as u32);
+    put_u32(&mut buf, engine.config().classes as u32);
+    put_u32(&mut buf, engine.config().num_tasks as u32);
+    buf
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+enum ReadStatus {
+    Done,
+    /// Clean EOF at a frame boundary.
+    Eof,
+    /// Shutdown requested while idle (or an in-flight frame overstayed the
+    /// drain grace period).
+    Idle,
+}
+
+/// Fill `buf` from a read-timeout stream. Timeouts are idle ticks: before
+/// any byte of `buf` arrives, a tick with the shutdown flag set returns
+/// [`ReadStatus::Idle`]; once bytes have arrived the frame is finished
+/// regardless (finish admitted work), bounded by [`DRAIN_GRACE`].
+fn read_exact_idle(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    shutdown: &AtomicBool,
+) -> std::io::Result<ReadStatus> {
+    let mut filled = 0;
+    let mut grace_from: Option<Instant> = None;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(ReadStatus::Eof)
+                } else {
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-frame",
+                    ))
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shutdown.load(Ordering::Relaxed) {
+                    if filled == 0 {
+                        return Ok(ReadStatus::Idle);
+                    }
+                    let from = *grace_from.get_or_insert_with(Instant::now);
+                    if from.elapsed() >= DRAIN_GRACE {
+                        return Ok(ReadStatus::Idle);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadStatus::Done)
+}
+
+/// One queued write: the client's id plus either a pending engine handle
+/// or an immediate error message.
+struct WriteCmd {
+    client_id: u64,
+    outcome: std::result::Result<ResponseHandle, String>,
+}
+
+fn response_frame(client_id: u64, resp: &Response) -> Vec<u8> {
+    let status = match resp.status {
+        ResponseStatus::Ok => WireStatus::Ok,
+        ResponseStatus::Expired => WireStatus::Expired,
+    };
+    encode_response(client_id, status, resp.task, resp.generation, resp.batch_rows, &resp.logits)
+}
+
+/// Await handles in request order and stream frames back. A write failure
+/// (client went away) stops writing; remaining handles are dropped, which
+/// is harmless — workers ignore dead response channels.
+fn writer_loop(stream: &mut TcpStream, rx: mpsc::Receiver<WriteCmd>) {
+    for cmd in rx {
+        let frame = match cmd.outcome {
+            Ok(handle) => match handle.wait() {
+                Ok(resp) => response_frame(cmd.client_id, &resp),
+                // Dropped before execution (worker failure / abort).
+                Err(e) => encode_error(cmd.client_id, &e),
+            },
+            Err(msg) => encode_error(cmd.client_id, &msg),
+        };
+        if stream.write_all(&frame).is_err() {
+            break;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+/// Read frames, admit them, and feed the writer until EOF, shutdown, or a
+/// connection error. Returns the number of request frames handled.
+fn reader_loop(
+    engine: &ServingEngine,
+    stream: &mut TcpStream,
+    shutdown: &AtomicBool,
+    tx: mpsc::Sender<WriteCmd>,
+) -> std::io::Result<u64> {
+    let mut served = 0u64;
+    loop {
+        let mut len4 = [0u8; 4];
+        match read_exact_idle(stream, &mut len4, shutdown)? {
+            ReadStatus::Done => {}
+            ReadStatus::Eof | ReadStatus::Idle => return Ok(served),
+        }
+        let body_len = u32::from_le_bytes(len4) as usize;
+        if body_len > MAX_FRAME {
+            // Protocol violation: answer nothing (we cannot trust the
+            // stream framing any more) and drop the connection.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame body of {body_len} bytes exceeds the {MAX_FRAME} cap"),
+            ));
+        }
+        let mut body = vec![0u8; body_len];
+        match read_exact_idle(stream, &mut body, shutdown)? {
+            ReadStatus::Done => {}
+            ReadStatus::Eof | ReadStatus::Idle => return Ok(served),
+        }
+        served += 1;
+        let cmd = match decode_request(&body) {
+            Ok(wire) => {
+                let deadline = if wire.deadline_us == 0 {
+                    None
+                } else {
+                    Some(Duration::from_micros(wire.deadline_us))
+                };
+                match engine.submit_with(wire.task, wire.tokens, deadline, wire.priority) {
+                    Ok(handle) => WriteCmd { client_id: wire.id, outcome: Ok(handle) },
+                    Err(e) => WriteCmd { client_id: wire.id, outcome: Err(format!("{e:#}")) },
+                }
+            }
+            // Undecodable body but intact framing: answer an error frame
+            // with the best-effort id 0 and keep the connection.
+            Err(e) => WriteCmd { client_id: 0, outcome: Err(format!("{e:#}")) },
+        };
+        if tx.send(cmd).is_err() {
+            // Writer died (client closed its read half) — stop reading.
+            return Ok(served);
+        }
+    }
+}
+
+fn handle_conn(
+    engine: &ServingEngine,
+    mut stream: TcpStream,
+    shutdown: &AtomicBool,
+) -> std::io::Result<u64> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(READ_TICK))?;
+    // Handshake: magic in, hello out.
+    let mut magic = [0u8; 4];
+    match read_exact_idle(&mut stream, &mut magic, shutdown)? {
+        ReadStatus::Done => {}
+        ReadStatus::Eof | ReadStatus::Idle => return Ok(0),
+    }
+    if magic != WIRE_MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad protocol magic (want MTS1)",
+        ));
+    }
+    stream.write_all(&encode_hello(engine))?;
+    let mut wstream = stream.try_clone()?;
+    let (tx, rx) = mpsc::channel::<WriteCmd>();
+    std::thread::scope(|scope| {
+        let writer = scope.spawn(move || writer_loop(&mut wstream, rx));
+        let served = reader_loop(engine, &mut stream, shutdown, tx);
+        // `tx` was moved into reader_loop and dropped there: the writer
+        // drains every queued response (workers are still running) and
+        // exits; joining it completes the flush-before-close drain.
+        let _ = writer.join();
+        served
+    })
+}
+
+/// Run the TCP front-end over `listener` until `shutdown` is set. Call
+/// inside [`ServingEngine::serve`]'s driver:
+///
+/// ```ignore
+/// engine.serve(|eng| net::serve_net(eng, listener, &shutdown))??;
+/// ```
+///
+/// Connection errors (bad magic, oversized frames, mid-frame EOF) drop
+/// that connection only; the listener keeps serving.
+pub fn serve_net(
+    engine: &ServingEngine,
+    listener: TcpListener,
+    shutdown: &AtomicBool,
+) -> Result<NetStats> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| anyhow!("listener nonblocking: {e}"))?;
+    let connections = AtomicU64::new(0);
+    let requests = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        while !shutdown.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    connections.fetch_add(1, Ordering::Relaxed);
+                    let requests = &requests;
+                    scope.spawn(move || {
+                        if let Ok(n) = handle_conn(engine, stream, shutdown) {
+                            requests.fetch_add(n, Ordering::Relaxed);
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(anyhow!("accept failed: {e}")),
+            }
+        }
+        // Scope exit joins every connection handler: readers stop at the
+        // shutdown flag, writers flush admitted responses, sockets close.
+        Ok(())
+    })?;
+    Ok(NetStats {
+        connections: connections.load(Ordering::Relaxed),
+        requests: requests.load(Ordering::Relaxed),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// What the server advertises at connect time.
+#[derive(Clone, Copy, Debug)]
+pub struct Hello {
+    pub seq: usize,
+    pub vocab: usize,
+    pub classes: usize,
+    pub num_tasks: usize,
+}
+
+/// A blocking client connection. Requests may be pipelined: `send` any
+/// number, then `recv` responses in the same order.
+pub struct NetClient {
+    stream: TcpStream,
+    pub hello: Hello,
+}
+
+impl NetClient {
+    /// Connect and handshake.
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let mut stream =
+            TcpStream::connect(addr).map_err(|e| anyhow!("connect {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .write_all(&WIRE_MAGIC)
+            .map_err(|e| anyhow!("handshake write: {e}"))?;
+        let mut hello = [0u8; 20];
+        stream
+            .read_exact(&mut hello)
+            .map_err(|e| anyhow!("handshake read: {e}"))?;
+        if hello[0..4] != WIRE_MAGIC {
+            bail!("server answered with bad magic (not a MetaTT serving endpoint?)");
+        }
+        let word =
+            |i: usize| u32::from_le_bytes(hello[i..i + 4].try_into().unwrap()) as usize;
+        Ok(NetClient {
+            stream,
+            hello: Hello {
+                seq: word(4),
+                vocab: word(8),
+                classes: word(12),
+                num_tasks: word(16),
+            },
+        })
+    }
+
+    /// Connect with retries — absorbs the server-startup race when the
+    /// client is launched right after the server process.
+    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<NetClient> {
+        let t0 = Instant::now();
+        loop {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if t0.elapsed() >= timeout {
+                        return Err(e.context(format!("gave up after {timeout:?}")));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Send one request frame (`deadline_us` 0 = no deadline).
+    pub fn send(
+        &mut self,
+        id: u64,
+        task: usize,
+        priority: u8,
+        deadline_us: u64,
+        tokens: &[i32],
+    ) -> Result<()> {
+        let frame = encode_request(id, task, priority, deadline_us, tokens);
+        self.stream.write_all(&frame).map_err(|e| anyhow!("send: {e}"))
+    }
+
+    /// Receive the next response frame (blocking).
+    pub fn recv(&mut self) -> Result<NetResponse> {
+        let mut len4 = [0u8; 4];
+        self.stream.read_exact(&mut len4).map_err(|e| anyhow!("recv: {e}"))?;
+        let body_len = u32::from_le_bytes(len4) as usize;
+        if body_len > MAX_FRAME {
+            bail!("response frame of {body_len} bytes exceeds the {MAX_FRAME} cap");
+        }
+        let mut body = vec![0u8; body_len];
+        self.stream.read_exact(&mut body).map_err(|e| anyhow!("recv body: {e}"))?;
+        decode_response(&body)
+    }
+
+    /// One closed-loop round trip.
+    pub fn call(
+        &mut self,
+        id: u64,
+        task: usize,
+        priority: u8,
+        deadline_us: u64,
+        tokens: &[i32],
+    ) -> Result<NetResponse> {
+        self.send(id, task, priority, deadline_us, tokens)?;
+        self.recv()
+    }
+}
+
+/// What a closed-loop TCP client run measured (client side).
+#[derive(Clone, Debug)]
+pub struct NetLoadReport {
+    pub total: usize,
+    /// Computed responses.
+    pub ok: usize,
+    /// Responses shed with `Expired`.
+    pub expired: usize,
+    /// Error frames (validation / shutdown).
+    pub errors: usize,
+    pub elapsed: f64,
+    /// Computed responses per second.
+    pub throughput_rps: f64,
+    /// send → receive round-trip of computed responses, seconds; None when
+    /// nothing completed.
+    pub latency: Option<crate::bench::Stats>,
+}
+
+/// Closed-loop clients over TCP: each thread opens its own connection,
+/// derives its deterministic request stream from the server's hello
+/// (seq/vocab/num-tasks travel in-band), and round-trips one request at a
+/// time. The network twin of [`super::loadgen::run_load`]'s client half —
+/// same streams, so a given `(seed, client, index)` asks the same question
+/// in-process and over the wire.
+pub fn run_net_load(
+    addr: &str,
+    cfg: &super::loadgen::LoadGenConfig,
+    connect_timeout: Duration,
+) -> Result<NetLoadReport> {
+    if cfg.clients == 0 || cfg.requests_per_client == 0 {
+        bail!(
+            "net load needs >= 1 client and >= 1 request per client (got {} x {})",
+            cfg.clients,
+            cfg.requests_per_client
+        );
+    }
+    let deadline_us = cfg.deadline.map_or(0, |d| d.as_micros() as u64);
+    let t0 = Instant::now();
+    let per_client: Vec<(Vec<f64>, usize, usize)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|client| {
+                scope.spawn(move || -> Result<(Vec<f64>, usize, usize)> {
+                    let mut conn = NetClient::connect_retry(addr, connect_timeout)?;
+                    let stream = super::loadgen::request_stream(
+                        cfg,
+                        conn.hello.num_tasks,
+                        conn.hello.seq,
+                        conn.hello.vocab,
+                        client,
+                        cfg.requests_per_client,
+                    );
+                    let mut lats = Vec::with_capacity(stream.len());
+                    let (mut expired, mut errors) = (0usize, 0usize);
+                    for (i, (task, tokens)) in stream.into_iter().enumerate() {
+                        let id = ((client as u64) << 32) | i as u64;
+                        let sent = Instant::now();
+                        let resp =
+                            conn.call(id, task, cfg.priority, deadline_us, &tokens)?;
+                        if resp.id != id {
+                            bail!("response id {} for request {id}", resp.id);
+                        }
+                        match resp.status {
+                            WireStatus::Ok => lats.push(sent.elapsed().as_secs_f64()),
+                            WireStatus::Expired => expired += 1,
+                            WireStatus::Error => errors += 1,
+                        }
+                        if cfg.think_us > 0 {
+                            std::thread::sleep(Duration::from_micros(cfg.think_us));
+                        }
+                    }
+                    Ok((lats, expired, errors))
+                })
+            })
+            .collect();
+        let mut results = Vec::with_capacity(handles.len());
+        for h in handles {
+            results.push(h.join().map_err(|_| anyhow!("net load client panicked"))??);
+        }
+        Ok::<_, anyhow::Error>(results)
+    })?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut lats = Vec::new();
+    let (mut expired, mut errors) = (0usize, 0usize);
+    for (l, e, x) in per_client {
+        lats.extend(l);
+        expired += e;
+        errors += x;
+    }
+    let ok = lats.len();
+    Ok(NetLoadReport {
+        total: ok + expired + errors,
+        ok,
+        expired,
+        errors,
+        elapsed,
+        throughput_rps: ok as f64 / elapsed.max(1e-9),
+        latency: if lats.is_empty() {
+            None
+        } else {
+            Some(crate::bench::Stats::from_samples(lats))
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_frame_round_trips() {
+        let tokens = vec![1i32, 5, 9, 1023, 0];
+        let frame = encode_request(42, 2, 3, 1_500_000, &tokens);
+        let body_len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+        assert_eq!(body_len, frame.len() - 4);
+        let wire = decode_request(&frame[4..]).unwrap();
+        assert_eq!(wire.id, 42);
+        assert_eq!(wire.task, 2);
+        assert_eq!(wire.priority, 3);
+        assert_eq!(wire.deadline_us, 1_500_000);
+        assert_eq!(wire.tokens, tokens);
+    }
+
+    #[test]
+    fn response_frame_round_trips_logit_bits() {
+        // Include values whose bit patterns are easy to corrupt: negative
+        // zero, subnormals, and a NaN payload.
+        let logits = vec![1.5f32, -0.0, f32::from_bits(0x0000_0001), f32::from_bits(0x7fc0_1234)];
+        let frame = encode_response(7, WireStatus::Ok, 1, 3, 4, &logits);
+        let got = decode_response(&frame[4..]).unwrap();
+        assert_eq!(got.id, 7);
+        assert_eq!(got.status, WireStatus::Ok);
+        assert_eq!(got.task, 1);
+        assert_eq!(got.generation, 3);
+        assert_eq!(got.batch_rows, 4);
+        assert_eq!(got.logits.len(), logits.len());
+        for (a, b) in got.logits.iter().zip(&logits) {
+            assert_eq!(a.to_bits(), b.to_bits(), "logit bits must survive the wire");
+        }
+        let expired = encode_response(8, WireStatus::Expired, 2, 0, 0, &[]);
+        let got = decode_response(&expired[4..]).unwrap();
+        assert_eq!(got.status, WireStatus::Expired);
+        assert!(got.logits.is_empty());
+    }
+
+    #[test]
+    fn error_frame_round_trips() {
+        let frame = encode_error(99, "task 7 out of range (3 served)");
+        let got = decode_response(&frame[4..]).unwrap();
+        assert_eq!(got.id, 99);
+        assert_eq!(got.status, WireStatus::Error);
+        assert_eq!(got.error.as_deref(), Some("task 7 out of range (3 served)"));
+    }
+
+    #[test]
+    fn malformed_frames_are_clean_errors() {
+        // Truncated body.
+        let frame = encode_request(1, 0, 0, 0, &[1, 2, 3]);
+        assert!(decode_request(&frame[4..frame.len() - 2]).is_err());
+        // Trailing garbage.
+        let mut long = frame[4..].to_vec();
+        long.push(0xab);
+        assert!(decode_request(&long).is_err());
+        // Token count beyond the frame cap.
+        let mut huge = Vec::new();
+        put_u64(&mut huge, 1);
+        put_u32(&mut huge, 0);
+        huge.push(0);
+        put_u64(&mut huge, 0);
+        put_u32(&mut huge, u32::MAX);
+        assert!(decode_request(&huge).is_err());
+        // Unknown status byte.
+        let mut bad = Vec::new();
+        put_u64(&mut bad, 1);
+        bad.push(17);
+        assert!(decode_response(&bad).is_err());
+    }
+}

@@ -15,12 +15,28 @@ use std::time::Instant;
 /// (exactly the spec's sequence length, pre-tokenized).
 #[derive(Clone, Debug)]
 pub struct Request {
-    /// Engine-assigned id (unique per engine instance).
+    /// Engine-assigned id (unique AND admission-ordered per engine
+    /// instance — the batcher's urgency tiebreak relies on monotonicity).
     pub id: u64,
     /// Task index (selects the folded adapter slice and the frozen head).
     pub task: usize,
     /// Token ids, length = spec seq, each in `[0, vocab)`.
     pub tokens: Vec<i32>,
+    /// Scheduling class: **lower value = more urgent** (nice-style). The
+    /// batcher orders by (priority, deadline, admission) — strict priority,
+    /// so a saturating high-priority stream can starve lower classes; that
+    /// is the intended overload contract (low classes shed via deadlines).
+    pub priority: u8,
+}
+
+/// How the engine answered a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResponseStatus {
+    /// Computed: `logits` carry the per-class scores.
+    Ok,
+    /// Shed: the deadline had already passed when a worker reached the
+    /// request, so no compute was spent; `logits` is empty.
+    Expired,
 }
 
 /// The engine's answer to one [`Request`].
@@ -28,21 +44,55 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub task: usize,
-    /// Per-class logits through the task's frozen head.
+    pub status: ResponseStatus,
+    /// Per-class logits through the task's frozen head (empty when shed).
     pub logits: Vec<f32>,
     /// How many real requests shared this request's batch (telemetry; the
-    /// logits bits are independent of it).
+    /// logits bits are independent of it). 0 when shed.
     pub batch_rows: usize,
-    /// Adapter-store generation the folded factors came from.
+    /// Adapter-store generation the folded factors came from (0 when shed —
+    /// no factors were looked up).
     pub generation: u64,
+    /// Microseconds since engine start when this response was produced.
+    /// Lets open-loop load generation measure completion-time latency and
+    /// deadline attainment without a collector thread in the timing path.
+    pub done_us: u64,
 }
 
-/// A queued request plus its completion channel and admission timestamp.
+/// A queued request plus its completion channel, admission timestamp, and
+/// absolute deadline (admission time + the client's relative deadline).
 pub(crate) struct Pending {
     pub req: Request,
     pub tx: mpsc::Sender<Response>,
-    #[allow(dead_code)] // queue-delay telemetry hook; latency is client-side
+    /// Admission timestamp — queue-delay telemetry (`EngineStats`) and the
+    /// base the absolute deadline was derived from.
     pub enqueued: Instant,
+    /// Absolute expiry: a worker that reaches this request at or after the
+    /// deadline sheds it instead of computing dead work. None = never.
+    pub deadline: Option<Instant>,
+}
+
+impl Pending {
+    pub(crate) fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Scheduling order: priority class first (lower = more urgent), then
+    /// earliest deadline (deadline-free requests sort after any deadline),
+    /// then admission order (ids are monotone).
+    pub(crate) fn cmp_urgency(&self, other: &Pending) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        self.req
+            .priority
+            .cmp(&other.req.priority)
+            .then_with(|| match (self.deadline, other.deadline) {
+                (Some(a), Some(b)) => a.cmp(&b),
+                (Some(_), None) => Ordering::Less,
+                (None, Some(_)) => Ordering::Greater,
+                (None, None) => Ordering::Equal,
+            })
+            .then_with(|| self.req.id.cmp(&other.req.id))
+    }
 }
 
 /// Client-side handle to one in-flight request.
@@ -107,6 +157,24 @@ impl AdmissionQueue {
         }
     }
 
+    /// Non-blocking admission for open-loop traffic: enqueue if a slot is
+    /// free, otherwise return `Ok(false)` immediately (the caller counts
+    /// an overload rejection; dropping `p` drops its response sender, so
+    /// any held handle observes a receive error). Errors once closed.
+    pub(crate) fn try_submit(&self, p: Pending) -> Result<bool, String> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err("serving engine is shut down".into());
+        }
+        if inner.queue.len() < self.capacity {
+            inner.queue.push_back(p);
+            self.not_empty.notify_all();
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
     /// Close the queue: new submissions fail, workers drain what's left
     /// and then observe the closed flag.
     pub fn close(&self) {
@@ -155,9 +223,10 @@ mod tests {
         let (tx, rx) = response_channel();
         (
             Pending {
-                req: Request { id, task, tokens: vec![1, 2, 3] },
+                req: Request { id, task, tokens: vec![1, 2, 3], priority: 0 },
                 tx,
                 enqueued: Instant::now(),
+                deadline: None,
             },
             rx,
         )
@@ -200,5 +269,58 @@ mod tests {
         }
         h.join().unwrap().unwrap();
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn try_submit_rejects_on_full_without_blocking() {
+        let q = AdmissionQueue::new(1);
+        let (p0, _rx0) = pending(0, 0);
+        assert_eq!(q.try_submit(p0), Ok(true));
+        let (p1, rx1) = pending(1, 0);
+        assert_eq!(q.try_submit(p1), Ok(false), "full queue must reject, not block");
+        // The rejected Pending was dropped with its sender: the handle
+        // side observes a disconnect instead of hanging.
+        assert!(rx1.recv().is_err());
+        assert_eq!(q.len(), 1);
+        q.close();
+        let (p2, _rx2) = pending(2, 0);
+        assert!(q.try_submit(p2).is_err(), "closed queue errors");
+    }
+
+    #[test]
+    fn urgency_orders_priority_then_deadline_then_admission() {
+        use std::cmp::Ordering;
+        use std::time::Duration;
+        let now = Instant::now();
+        let mk = |id: u64, priority: u8, deadline: Option<Duration>| {
+            let (tx, _rx) = response_channel();
+            (
+                Pending {
+                    req: Request { id, task: 0, tokens: vec![1], priority },
+                    tx,
+                    enqueued: now,
+                    deadline: deadline.map(|d| now + d),
+                },
+                _rx,
+            )
+        };
+        let (hi, _r0) = mk(5, 0, None);
+        let (lo, _r1) = mk(1, 3, Some(Duration::from_millis(1)));
+        assert_eq!(hi.cmp_urgency(&lo), Ordering::Less, "priority class dominates");
+        let (soon, _r2) = mk(9, 1, Some(Duration::from_millis(5)));
+        let (late, _r3) = mk(2, 1, Some(Duration::from_millis(50)));
+        assert_eq!(soon.cmp_urgency(&late), Ordering::Less, "EDF within a class");
+        let (none, _r4) = mk(0, 1, None);
+        assert_eq!(soon.cmp_urgency(&none), Ordering::Less, "deadline-free sorts last");
+        let (a, _r5) = mk(3, 1, None);
+        let (b, _r6) = mk(4, 1, None);
+        assert_eq!(a.cmp_urgency(&b), Ordering::Less, "admission order breaks ties");
+        // Expiry is inclusive: now >= deadline counts as expired, so a
+        // zero relative deadline is deterministically shed by any worker
+        // that reaches it strictly after admission.
+        let (z, _r7) = mk(7, 0, Some(Duration::ZERO));
+        assert!(z.expired_at(now + Duration::from_nanos(1)));
+        assert!(z.expired_at(now), "boundary instant counts as expired");
+        assert!(!late.expired_at(now));
     }
 }

@@ -68,8 +68,15 @@ impl Pcg64 {
     }
 
     /// Uniform usize in `[0, bound)`.
+    ///
+    /// # Panics
+    /// Panics on `bound == 0` (a uniform draw over an empty range is
+    /// undefined — callers with a possibly-empty range must guard it, see
+    /// e.g. `serving::request_tokens`'s single-token-vocab contract) and on
+    /// bounds beyond `u32::MAX` (the generator emits 32-bit draws).
     pub fn uniform_usize(&mut self, bound: usize) -> usize {
-        assert!(bound > 0 && bound <= u32::MAX as usize);
+        assert!(bound > 0, "uniform_usize bound must be positive (empty range)");
+        assert!(bound <= u32::MAX as usize, "uniform_usize bound exceeds u32::MAX");
         self.uniform_u32(bound as u32) as usize
     }
 
@@ -245,6 +252,16 @@ mod tests {
         assert_eq!(counts[1], 0);
         let ratio = counts[2] as f64 / counts[0] as f64;
         assert!((2.6..3.4).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "uniform_usize bound must be positive")]
+    fn uniform_usize_zero_bound_panics_loudly() {
+        // The empty-range contract is explicit, not an implicit assert
+        // without a message: callers that can see bound 0 (degenerate
+        // vocab) must guard before calling.
+        let mut rng = Pcg64::new(1);
+        let _ = rng.uniform_usize(0);
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! End-to-end tests for the TCP serving front-end (PR 6).
+//!
+//! The load-bearing properties:
+//!
+//! 1. **Wire transparency** — logits that traveled the MTS1 protocol are
+//!    bit-identical to a direct in-process `run_serve` forward for the
+//!    same task and tokens (f32 bits survive encode/decode).
+//! 2. **Deadline semantics over the wire** — an effectively-zero deadline
+//!    comes back with the explicit `Expired` status and no logits.
+//! 3. **Protocol robustness** — a bad handshake drops that connection
+//!    only; an invalid request gets an error frame and the connection
+//!    keeps serving.
+//! 4. **Graceful drain** — responses already admitted when the shutdown
+//!    flag rises are still flushed to the client before the socket closes.
+
+use metatt::adapters::AdapterKind;
+use metatt::config::ModelPreset;
+use metatt::runtime::{assemble_frozen, ArtifactSpec, Backend, RefBackend, StepKind};
+use metatt::serving::{
+    adapter_spec_for, serve_net, EngineConfig, NetClient, ServingEngine, WireStatus,
+};
+use metatt::tt::{CoreInit, InitStrategy, MetaTt, MetaTtKind};
+use metatt::util::rng::Pcg64;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const TASKS: usize = 3;
+const RANK: usize = 4;
+const ALPHA: f32 = 1.3;
+
+fn engine_cfg(workers: usize, max_batch: usize) -> EngineConfig {
+    EngineConfig {
+        model: ModelPreset::Tiny,
+        adapter: AdapterKind::MetaTt(MetaTtKind::FourPlusOneD),
+        rank: RANK,
+        alpha: ALPHA,
+        num_tasks: TASKS,
+        classes: 2,
+        max_batch,
+        batch_deadline: Duration::from_millis(1),
+        queue_capacity: 64,
+        workers,
+        cache_capacity: TASKS,
+    }
+}
+
+fn demo_tt(seed: u64) -> MetaTt {
+    let spec = adapter_spec_for(&engine_cfg(1, 4));
+    let init = InitStrategy {
+        cores: vec![CoreInit::Normal; MetaTtKind::FourPlusOneD.order()],
+    };
+    spec.build_metatt_with(&mut Pcg64::new(seed), Some(&init))
+}
+
+/// Direct single-request folded forward, bypassing the engine and the
+/// wire entirely — the bit-exactness reference.
+fn single_request_logits(
+    backend: &RefBackend,
+    tt: &MetaTt,
+    task: usize,
+    tokens: &[i32],
+) -> Vec<f32> {
+    let dims = ModelPreset::Tiny.dims(TASKS);
+    let spec = ArtifactSpec {
+        step: StepKind::Eval,
+        model: "tiny".into(),
+        adapter: "metatt4p1d".into(),
+        rank: RANK,
+        classes: 2,
+        tasks: TASKS,
+        batch: 1,
+        seq: dims.max_seq,
+    };
+    let entry = backend.entry(&spec).unwrap();
+    let frozen = Arc::new(assemble_frozen(&entry, None, ModelPreset::Tiny).unwrap());
+    let step = backend.bind(&spec, &frozen).unwrap();
+    let folded = tt.fold_for_serving(task);
+    let mut out = vec![0f32; 2];
+    step.run_serve(&folded, tokens, task as i32, &mut out).unwrap();
+    out
+}
+
+/// Run `body(addr)` against a loopback server for `engine`, then raise the
+/// shutdown flag and return (body result, server NetStats).
+fn with_server<T>(
+    engine: &ServingEngine<'_>,
+    body: impl FnOnce(&str) -> T,
+) -> (T, metatt::serving::NetStats) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let shutdown = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let server = scope.spawn(|| engine.serve(|eng| serve_net(eng, listener, &shutdown)));
+        let out = body(&addr);
+        shutdown.store(true, Ordering::Relaxed);
+        let net = server.join().unwrap().unwrap().unwrap();
+        (out, net)
+    })
+}
+
+#[test]
+fn wire_responses_are_bit_identical_to_direct_forwards() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let tt = demo_tt(5);
+    let engine =
+        ServingEngine::new(&backend, engine_cfg(2, 4), tt.clone(), None).unwrap();
+    let seq = engine.seq_len();
+    let vocab = engine.vocab() as i32;
+    let requests: Vec<(usize, Vec<i32>)> = (0..9)
+        .map(|i| (i % TASKS, (0..seq).map(|j| 1 + ((i * 7 + j) as i32 % (vocab - 1))).collect()))
+        .collect();
+    let (got, net) = with_server(&engine, |addr| {
+        let mut client = NetClient::connect_retry(addr, Duration::from_secs(10)).unwrap();
+        // The hello carries everything a client needs to build requests.
+        assert_eq!(client.hello.seq, seq);
+        assert_eq!(client.hello.vocab, vocab as usize);
+        assert_eq!(client.hello.classes, 2);
+        assert_eq!(client.hello.num_tasks, TASKS);
+        requests
+            .iter()
+            .enumerate()
+            .map(|(i, (task, tokens))| {
+                let resp = client.call(i as u64, *task, 0, 0, tokens).unwrap();
+                assert_eq!(resp.id, i as u64, "ids echo back");
+                assert_eq!(resp.status, WireStatus::Ok);
+                assert_eq!(resp.task, *task);
+                resp
+            })
+            .collect::<Vec<_>>()
+    });
+    assert_eq!(net.connections, 1);
+    assert_eq!(net.requests, requests.len() as u64);
+    for (resp, (task, tokens)) in got.iter().zip(&requests) {
+        let want = single_request_logits(&backend, &tt, *task, tokens);
+        assert_eq!(resp.logits.len(), want.len());
+        for (g, w) in resp.logits.iter().zip(&want) {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "task {task}: wire logits {g} != direct {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn near_zero_deadline_comes_back_expired_over_the_wire() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let engine = ServingEngine::new(&backend, engine_cfg(1, 1), demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    let ((ok, exp), _net) = with_server(&engine, |addr| {
+        let mut client = NetClient::connect_retry(addr, Duration::from_secs(10)).unwrap();
+        // Pipeline: a priority-0 no-deadline request to occupy the single
+        // worker, then a priority-1 request with a 1µs deadline. Strict
+        // priority keeps the second request queued behind the first's
+        // full forward (if both are visible at formation), so whenever
+        // its expiry is checked, far more than 1µs has passed since its
+        // admission — it must be shed, never computed.
+        client.send(0, 0, 0, 0, &vec![1; seq]).unwrap();
+        client.send(1, 0, 1, 1, &vec![2; seq]).unwrap();
+        let a = client.recv().unwrap();
+        let b = client.recv().unwrap();
+        // Responses arrive in request order per connection.
+        assert_eq!((a.id, b.id), (0, 1));
+        (a, b)
+    });
+    assert_eq!(ok.status, WireStatus::Ok);
+    assert_eq!(ok.logits.len(), 2);
+    assert_eq!(exp.status, WireStatus::Expired, "1µs deadline must be shed");
+    assert!(exp.logits.is_empty());
+    let stats = engine.stats();
+    assert_eq!(stats.shed, 1);
+    assert_eq!(stats.requests, 1);
+}
+
+#[test]
+fn bad_magic_drops_the_connection_but_not_the_server() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let engine = ServingEngine::new(&backend, engine_cfg(1, 4), demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    let (_, net) = with_server(&engine, |addr| {
+        // A client speaking the wrong protocol is disconnected without a
+        // hello…
+        let mut bad = TcpStream::connect(addr).unwrap();
+        bad.write_all(b"XXXX").unwrap();
+        let mut buf = [0u8; 1];
+        match bad.read(&mut buf) {
+            Ok(0) => {}                   // clean close
+            Ok(_) => panic!("server answered a bad-magic handshake"),
+            Err(_) => {}                  // reset is also a rejection
+        }
+        drop(bad);
+        // …and the listener keeps serving well-behaved clients.
+        let mut good = NetClient::connect_retry(addr, Duration::from_secs(10)).unwrap();
+        let resp = good.call(7, 1, 0, 0, &vec![3; seq]).unwrap();
+        assert_eq!(resp.status, WireStatus::Ok);
+        // An invalid request gets an error frame, not a dead socket.
+        let err = good.call(8, 99, 0, 0, &vec![3; seq]).unwrap();
+        assert_eq!(err.id, 8);
+        assert_eq!(err.status, WireStatus::Error);
+        assert!(
+            err.error.as_deref().unwrap_or("").contains("out of range"),
+            "error message should name the problem: {:?}",
+            err.error
+        );
+        // The connection survives the error frame.
+        let again = good.call(9, 0, 0, 0, &vec![4; seq]).unwrap();
+        assert_eq!(again.status, WireStatus::Ok);
+    });
+    assert_eq!(net.connections, 2);
+    assert_eq!(net.requests, 3, "the bad-magic connection served nothing");
+}
+
+#[test]
+fn shutdown_flushes_admitted_responses_before_closing() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let engine = ServingEngine::new(&backend, engine_cfg(2, 4), demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let shutdown = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let server = scope.spawn(|| engine.serve(|eng| serve_net(eng, listener, &shutdown)));
+        let mut client = NetClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+        let n = 6u64;
+        for i in 0..n {
+            client.send(i, (i as usize) % TASKS, 0, 0, &vec![1 + i as i32; seq]).unwrap();
+        }
+        // Raise shutdown while responses may still be in flight: the
+        // graceful drain must flush every admitted response first.
+        shutdown.store(true, Ordering::Relaxed);
+        for i in 0..n {
+            let resp = client.recv().unwrap_or_else(|e| {
+                panic!("response {i} lost across shutdown: {e}")
+            });
+            assert_eq!(resp.id, i);
+            assert_eq!(resp.status, WireStatus::Ok);
+        }
+        // After the drain the server closes the socket: the next read is
+        // a clean EOF, not a hang.
+        assert!(client.recv().is_err(), "socket must be closed after the drain");
+        let net = server.join().unwrap().unwrap().unwrap();
+        assert_eq!(net.requests, n);
+    });
+    assert_eq!(engine.stats().requests, 6);
+}

@@ -26,7 +26,7 @@ use metatt::data::Batch;
 use metatt::runtime::{assemble_frozen, ArtifactSpec, Backend, RefBackend, StepKind};
 use metatt::serving::{
     adapter_spec_for, metatt_from_tensors, request_stream, EngineConfig, LoadGenConfig,
-    Response, ServingEngine,
+    Response, ResponseStatus, ServingEngine,
 };
 use metatt::tt::{CoreInit, InitStrategy, MetaTt, MetaTtKind};
 use metatt::util::rng::Pcg64;
@@ -300,6 +300,154 @@ fn engine_validates_requests_and_config() {
     // Non-TT adapters cannot be folded for serving.
     let cfg = EngineConfig { adapter: AdapterKind::LoRa, ..engine_cfg(1, 4) };
     assert!(ServingEngine::new(&backend, cfg, demo_tt(5), None).is_err());
+}
+
+#[test]
+fn expired_requests_are_shed_answered_not_computed() {
+    // A zero relative deadline is expired the instant a worker reaches it
+    // (expiry is inclusive and batch formation happens strictly after
+    // admission), so this is deterministic: the request must come back
+    // `Expired` with empty logits, and the engine must have spent zero
+    // compute — no batch, no request counted, shed counted.
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let engine = ServingEngine::new(&backend, engine_cfg(1, 4), demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    let resp = engine
+        .serve(|eng| {
+            eng.submit_with(0, vec![1; seq], Some(Duration::ZERO), 0)
+                .unwrap()
+                .wait()
+                .unwrap()
+        })
+        .unwrap();
+    assert_eq!(resp.status, ResponseStatus::Expired);
+    assert!(resp.logits.is_empty(), "shed responses carry no logits");
+    assert_eq!(resp.batch_rows, 0);
+    assert_eq!(resp.generation, 0);
+    let stats = engine.stats();
+    assert_eq!(stats.shed, 1, "the shed counter must record it");
+    assert_eq!(stats.requests, 0, "a shed request is not a computed request");
+    assert_eq!(stats.batches, 0, "shed-only drains must not execute a batch");
+}
+
+#[test]
+fn graceful_drain_answers_every_admitted_request() {
+    // The driver submits a burst — live requests and guaranteed-expired
+    // ones — and returns the handles WITHOUT waiting. `serve` then closes
+    // the queue and drains: every admitted request must still resolve
+    // (computed or shed), i.e. zero admitted-but-unanswered on shutdown.
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let engine = ServingEngine::new(&backend, engine_cfg(2, 4), demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    let n = 12usize;
+    let handles = engine
+        .serve(|eng| {
+            (0..n)
+                .map(|i| {
+                    let deadline =
+                        if i % 3 == 0 { Some(Duration::ZERO) } else { None };
+                    eng.submit_with(i % TASKS, vec![1 + i as i32; seq], deadline, 0)
+                        .unwrap()
+                })
+                .collect::<Vec<_>>()
+        })
+        .unwrap();
+    assert_eq!(handles.len(), n);
+    let (mut ok, mut expired) = (0usize, 0usize);
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.wait().unwrap_or_else(|e| {
+            panic!("request {i} was admitted but never answered: {e}")
+        });
+        match resp.status {
+            ResponseStatus::Ok => {
+                assert_eq!(resp.logits.len(), 2);
+                ok += 1;
+            }
+            ResponseStatus::Expired => expired += 1,
+        }
+        // A deadline-free request can never be shed.
+        if i % 3 != 0 {
+            assert_eq!(resp.status, ResponseStatus::Ok, "request {i} had no deadline");
+        }
+    }
+    assert_eq!(ok + expired, n, "every admitted request is answered exactly once");
+    let stats = engine.stats();
+    assert_eq!(stats.requests + stats.shed, n as u64);
+}
+
+#[test]
+fn queue_delay_telemetry_sees_waiting_requests() {
+    // One worker, batch cap 1: a burst of requests serializes, so later
+    // requests measurably wait between admission and drain. Pins that
+    // `Pending.enqueued` feeds EngineStats queue-delay counters.
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let engine = ServingEngine::new(&backend, engine_cfg(1, 1), demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    engine
+        .serve(|eng| {
+            let handles: Vec<_> =
+                (0..8).map(|i| eng.submit(i % TASKS, vec![2; seq]).unwrap()).collect();
+            for h in handles {
+                h.wait().unwrap();
+            }
+        })
+        .unwrap();
+    let stats = engine.stats();
+    assert_eq!(stats.requests, 8);
+    assert!(
+        stats.queue_us_sum > 0,
+        "8 serialized requests must accumulate queue wait"
+    );
+    assert!(stats.queue_us_max > 0, "the last request waited for 7 ticks");
+    assert!(stats.queue_us_max as f64 * 1e-6 >= stats.queue_wait_mean_s());
+    assert!(stats.queue_wait_mean_s() > 0.0);
+}
+
+#[test]
+fn stats_delta_isolates_a_measured_window() {
+    // delta_since is what keeps warmup traffic out of reported batch
+    // statistics: counters snapshotted mid-run subtract cleanly.
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let engine = ServingEngine::new(&backend, engine_cfg(1, 4), demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    let (base, window) = engine
+        .serve(|eng| {
+            for _ in 0..3 {
+                eng.submit(0, vec![1; seq]).unwrap().wait().unwrap();
+            }
+            let base = eng.stats();
+            for _ in 0..2 {
+                eng.submit(1, vec![2; seq]).unwrap().wait().unwrap();
+            }
+            (base, eng.stats())
+        })
+        .unwrap();
+    assert_eq!(base.requests, 3);
+    let delta = window.delta_since(&base);
+    assert_eq!(delta.requests, 2, "the window must exclude earlier traffic");
+    assert_eq!(delta.shed, 0);
+    assert_eq!(delta.rejected, 0);
+    let hist_total: u64 = delta.batch_hist.iter().sum();
+    assert_eq!(hist_total, delta.batches, "windowed histogram matches windowed batches");
+    assert!(window.requests > base.requests);
+}
+
+#[test]
+fn full_queue_rejects_open_loop_admission_and_counts_it() {
+    // No worker pool is running (serve() not called), so the queue cannot
+    // drain: capacity 1 makes the second non-blocking admission a
+    // deterministic rejection, counted in EngineStats::rejected.
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let cfg = EngineConfig { queue_capacity: 1, ..engine_cfg(1, 4) };
+    let engine = ServingEngine::new(&backend, cfg, demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    let first = engine.try_submit_with(0, vec![1; seq], None, 0).unwrap();
+    assert!(first.is_some(), "an empty queue admits");
+    let second = engine.try_submit_with(0, vec![1; seq], None, 0).unwrap();
+    assert!(second.is_none(), "a full queue rejects without blocking");
+    let stats = engine.stats();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.requests, 0);
 }
 
 #[test]
