@@ -23,6 +23,11 @@
 //!      speedup over the retired PR 3 blocked kernel (kept here as the
 //!      baseline and asserted bit-identical first), emitted as
 //!      `BENCH_pr4.json`.
+//!   9. **Quantized serving dtypes** (PR 7): the folded-adapter serving
+//!      tick at f32 / bf16 / int8 packed storage — packed weight bytes
+//!      resident, ticks/s, and effective weight-stream GB/s per dtype,
+//!      emitted as `BENCH_pr7.json`. Asserts the quantized paths actually
+//!      move fewer bytes (bf16 < f32, int8 < bf16).
 //!
 //! `METATT_BENCH_SMOKE=1` runs a fast subset with tiny iteration counts —
 //! CI uses it to catch kernel regressions (crashes, determinism breaks,
@@ -34,9 +39,10 @@ use metatt::config::ModelPreset;
 use metatt::data::TaskId;
 use metatt::optim::AdamW;
 use metatt::runtime::{
-    assemble_frozen, backend_from_env, ArtifactSpec, Backend, RefBackend, Step, StepKind,
+    assemble_frozen, backend_from_env, pack_frozen_weights, packed_frozen_bytes,
+    ArtifactSpec, Backend, FoldedPairPacked, RefBackend, Step, StepKind,
 };
-use metatt::tensor::{matmul_into, PackScratch, Tensor, PAR_MIN_MACS};
+use metatt::tensor::{matmul_into, DtypeKind, PackScratch, Tensor, PAR_MIN_MACS};
 use metatt::tt::{dmrg_sweep, InitStrategy, MetaTt, MetaTtKind};
 use metatt::util::json::Json;
 use metatt::util::rng::Pcg64;
@@ -591,5 +597,88 @@ fn main() -> anyhow::Result<()> {
         ("records", Json::Arr(pr4)),
     ]);
     save_record("pr4", &pr4_doc)?;
+
+    // ---- 9. Quantized serving dtypes (PR 7). -----------------------------
+    // The serving read path binds packed frozen panels + packed folded
+    // adapter factors at a storage dtype chosen per bind (accumulation is
+    // always f32). Byte totals come straight from the packed buffers, so
+    // `weight_gb_per_s` is the effective weight-stream rate of one serving
+    // tick — the number that should rise as the dtype shrinks once the
+    // tick is memory-bound.
+    println!("\n== 9. quantized serving dtypes (PR 7): bytes + ticks/s per dtype ==");
+    let tasks9 = 3usize;
+    let dims9 = model.dims(tasks9);
+    let spec9 = ArtifactSpec {
+        step: StepKind::Eval,
+        model: "tiny".into(),
+        adapter: "metatt4p1d".into(),
+        rank: 8,
+        classes: 2,
+        tasks: tasks9,
+        batch: 1,
+        seq: dims9.max_seq,
+    };
+    let b9 = RefBackend::with_config(1, true)?;
+    let entry9 = b9.entry(&spec9)?;
+    let frozen9 = std::sync::Arc::new(assemble_frozen(&entry9, None, model)?);
+    let aspec9 = AdapterSpec::new(
+        AdapterKind::MetaTt(MetaTtKind::FourPlusOneD),
+        8,
+        2.0,
+        dims9,
+    );
+    let tt9 = aspec9.build_metatt_with(&mut rng, None);
+    let dense9 = tt9.fold_for_serving(0);
+    let tokens9 = vec![3i32; dims9.max_seq];
+    let mut pr7: Vec<Json> = Vec::new();
+    let mut bytes_by_kind: Vec<(DtypeKind, usize)> = Vec::new();
+    for kind in [DtypeKind::F32, DtypeKind::Bf16, DtypeKind::I8] {
+        let pairs9: Vec<Vec<FoldedPairPacked>> = dense9
+            .iter()
+            .map(|row| row.iter().map(|(a, b)| FoldedPairPacked::pack(a, b, kind)).collect())
+            .collect();
+        let fold_bytes: usize = pairs9.iter().flatten().map(|p| p.bytes()).sum();
+        let frozen_bytes = packed_frozen_bytes(&pack_frozen_weights(&frozen9, kind));
+        let total_bytes = frozen_bytes + fold_bytes;
+        let step9 = b9.bind_serve(&spec9, &frozen9, kind)?;
+        let mut out9 = vec![0f32; 2];
+        step9.run_serve_packed(&pairs9, &tokens9, 0, &mut out9)?; // warm the arena
+        let s = bench(&format!("serve-tick/{}", kind.name()), scale(3), scale(30), || {
+            step9.run_serve_packed(&pairs9, &tokens9, 0, &mut out9).unwrap();
+            std::hint::black_box(&out9);
+        });
+        let ticks_per_s = 1.0 / s.p50;
+        let gb_per_s = total_bytes as f64 / s.p50 / 1e9;
+        println!(
+            "   {:>4}: {:.1} KiB packed weights, {:.0} ticks/s, {:.2} GB/s weight stream",
+            kind.name(),
+            total_bytes as f64 / 1024.0,
+            ticks_per_s,
+            gb_per_s
+        );
+        pr7.push(Json::obj(vec![
+            ("dtype", Json::str(kind.name())),
+            ("frozen_packed_bytes", Json::num(frozen_bytes as f64)),
+            ("folded_packed_bytes", Json::num(fold_bytes as f64)),
+            ("total_packed_bytes", Json::num(total_bytes as f64)),
+            ("tick_p50_s", Json::num(s.p50)),
+            ("ticks_per_s", Json::num(ticks_per_s)),
+            ("weight_gb_per_s", Json::num(gb_per_s)),
+        ]));
+        bytes_by_kind.push((kind, total_bytes));
+    }
+    assert!(
+        bytes_by_kind[1].1 < bytes_by_kind[0].1 && bytes_by_kind[2].1 < bytes_by_kind[1].1,
+        "quantized serving must move fewer weight bytes: f32 {} / bf16 {} / int8 {}",
+        bytes_by_kind[0].1,
+        bytes_by_kind[1].1,
+        bytes_by_kind[2].1
+    );
+    let pr7_doc = Json::obj(vec![
+        ("bench", Json::str("hotpath_micro/serve-dtypes")),
+        ("smoke", Json::Bool(smoke)),
+        ("records", Json::Arr(pr7)),
+    ]);
+    save_record("pr7", &pr7_doc)?;
     Ok(())
 }

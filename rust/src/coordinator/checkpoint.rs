@@ -39,6 +39,13 @@ pub struct CheckpointMeta {
     pub alpha: f32,
     /// Model preset the adapter sizes itself against.
     pub model: String,
+    /// Storage dtype of the tensors in this container ("f32" for every
+    /// writer today — the trainer always checkpoints full precision).
+    /// `metatt serve --checkpoint` validates `--serve-dtype` against it:
+    /// an f32 source may serve at any dtype (quantization happens at
+    /// bind/fold), but a non-f32 source pins the serving dtype. Files
+    /// written before this field existed load as "f32".
+    pub dtype: String,
 }
 
 impl CheckpointMeta {
@@ -49,6 +56,7 @@ impl CheckpointMeta {
             ("tasks", Json::num(self.tasks as f64)),
             ("alpha", Json::num(self.alpha)),
             ("model", Json::str(self.model.clone())),
+            ("dtype", Json::str(self.dtype.clone())),
         ])
     }
 
@@ -73,6 +81,13 @@ impl CheckpointMeta {
                 .and_then(|v| v.as_f64())
                 .ok_or("checkpoint meta missing 'alpha'")? as f32,
             model: s("model")?,
+            // Absent in files written before the dtype field existed;
+            // every such writer stored full-precision tensors.
+            dtype: doc
+                .get("dtype")
+                .and_then(|v| v.as_str())
+                .unwrap_or("f32")
+                .to_string(),
         })
     }
 }
@@ -262,7 +277,27 @@ mod tests {
             tasks: 3,
             alpha: 1.5,
             model: "tiny".into(),
+            dtype: "f32".into(),
         }
+    }
+
+    #[test]
+    fn meta_without_dtype_defaults_to_f32() {
+        // Files written before the dtype field existed must keep loading.
+        let meta_json =
+            br#"{"adapter": "metatt4d", "rank": 4, "tasks": 1, "alpha": 1.0, "model": "tiny"}"#;
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"MTT2");
+        buf.extend_from_slice(&(meta_json.len() as u32).to_le_bytes());
+        buf.extend_from_slice(meta_json);
+        buf.extend_from_slice(&0u32.to_le_bytes()); // zero tensors
+        let dir = std::env::temp_dir().join("metatt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("no_dtype_meta.bin");
+        std::fs::write(&p, &buf).unwrap();
+        let (meta, _) = load_with_meta(&p).unwrap();
+        assert_eq!(meta.unwrap().dtype, "f32");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -51,7 +51,10 @@ commands:
              [--requests N] [--clients C] [--num-tasks T] [--classes K]
              [--adapter A] [--rank R] [--alpha F] [--checkpoint FILE]
              [--max-batch B] [--batch-deadline-ms MS] [--serve-workers W]
-             [--queue-cap N] [--cache-cap N] [--mix w1,w2,...]
+             [--queue-cap N] [--cache-cap BYTES] [--mix w1,w2,...]
+             [--serve-dtype f32|bf16|int8]   storage dtype for packed frozen
+                              panels + folded adapter factors (accumulation
+                              stays f32; default f32 = bit-exact)
              [--think-us U] [--seed N] [--no-checkpoint]
              [--deadline-ms MS] [--priority P]   per-request deadline/class
              modes (mutually exclusive, default = in-process load gen):
@@ -91,7 +94,7 @@ const OPTS: &[&str] = &[
     // serve engine + load generator, and the adapter-checkpoint writer
     "clients", "num-tasks", "classes", "checkpoint", "max-batch",
     "batch-deadline-ms", "serve-workers", "queue-cap", "cache-cap", "mix",
-    "think-us", "save-adapter",
+    "think-us", "save-adapter", "serve-dtype",
     // serve front-end modes: TCP listener / TCP client / overload sweep
     "listen", "connect", "serve-secs", "deadline-ms", "priority",
     "overload-mults", "overload-requests",
@@ -280,6 +283,7 @@ fn save_adapter_if_requested(
         tasks: spec.dims.tasks,
         alpha: spec.alpha,
         model: model.name().to_string(),
+        dtype: "f32".to_string(),
     };
     let named: Vec<(String, metatt::tensor::Tensor)> = specs
         .iter()
@@ -576,6 +580,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut alpha = args.f32_or("alpha", 2.0).map_err(|e| anyhow!(e))?;
     let mut num_tasks = args.usize_or("num-tasks", 3).map_err(|e| anyhow!(e))?;
     let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    let mut serve_dtype = match args.get("serve-dtype") {
+        Some(s) => metatt::tensor::DtypeKind::from_name(s)
+            .ok_or_else(|| anyhow!("--serve-dtype must be f32, bf16, or int8 (got '{s}')"))?,
+        None => metatt::tensor::DtypeKind::F32,
+    };
 
     // Per-request scheduling knobs, shared by every mode: a relative
     // deadline (0 = none) and a priority class (lower = more urgent).
@@ -643,9 +652,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         m.model
                     );
                 }
+                // Dtype: the checkpoint records its *storage* dtype. An
+                // f32 source may serve at any dtype (quantization happens
+                // at bind/fold time); a non-f32 source pins serving.
+                if args.get("serve-dtype").is_none() {
+                    serve_dtype = metatt::tensor::DtypeKind::from_name(&m.dtype)
+                        .ok_or_else(|| {
+                            anyhow!("checkpoint metadata has unknown dtype '{}'", m.dtype)
+                        })?;
+                } else if m.dtype != "f32" && serve_dtype.name() != m.dtype {
+                    bail!(
+                        "--serve-dtype {} conflicts with checkpoint storage dtype ({}); \
+                         only f32 checkpoints can be requantized at bind",
+                        serve_dtype.name(),
+                        m.dtype
+                    );
+                }
                 println!(
-                    "checkpoint metadata: {} rank {} over {} tasks (model {}, alpha {})",
-                    m.adapter, m.rank, m.tasks, m.model, m.alpha
+                    "checkpoint metadata: {} rank {} over {} tasks (model {}, alpha {}, dtype {})",
+                    m.adapter, m.rank, m.tasks, m.model, m.alpha, m.dtype
                 );
             } else {
                 println!("note: legacy checkpoint (no metadata) — trusting the adapter flags");
@@ -668,9 +693,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         queue_capacity: args.usize_or("queue-cap", 256).map_err(|e| anyhow!(e))?,
         workers: args.usize_or("serve-workers", 2).map_err(|e| anyhow!(e))?,
-        cache_capacity: args
-            .usize_or("cache-cap", num_tasks.max(2))
+        cache_capacity_bytes: args
+            .usize_or("cache-cap", 64 << 20)
             .map_err(|e| anyhow!(e))?,
+        dtype: serve_dtype,
     };
     // Guard before any chain construction: metatt_from_tensors /
     // build_metatt panic on non-TT families, the engine only folds TT.
@@ -722,7 +748,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "served {} requests over {} tasks in {:.3}s — {:.1} req/s ({} expired)\n\
          latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  queue wait mean {:.2}ms\n\
-         {} batches (mean fill {:.2}/{})  cache hit rate {:.1}% ({} folds, {} evictions)",
+         {} batches (mean fill {:.2}/{})  cache hit rate {:.1}% ({} folds, {} evictions)\n\
+         serve dtype {}  folded-adapter cache resident {:.1} KiB",
         report.total_requests,
         engine.config().num_tasks,
         report.elapsed,
@@ -737,7 +764,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.config().max_batch,
         100.0 * cache.hits as f64 / lookups as f64,
         cache.folds,
-        cache.evictions
+        cache.evictions,
+        engine.config().dtype.name(),
+        cache.bytes as f64 / 1024.0
     );
     let doc = serving::report_json(&engine, &lcfg, &report);
     metatt::bench::save_record("pr5", &doc)?;

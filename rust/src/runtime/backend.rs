@@ -14,10 +14,11 @@
 //! DMRG executable hot-swap, MTL task routing, and checkpointing logic is
 //! identical across backends.
 
+use super::encoder::FoldedPairPacked;
 use super::registry::{ArtifactEntry, ArtifactSpec};
 use crate::config::ModelPreset;
 use crate::data::{Batch, MlmBatch};
-use crate::tensor::Tensor;
+use crate::tensor::{DtypeKind, Tensor};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::path::Path;
@@ -100,6 +101,23 @@ pub trait Step {
         anyhow::bail!("this backend has no folded-adapter serving path")
     }
 
+    /// [`Step::run_serve`] over *pre-packed* folded factor pairs — the
+    /// dtype-selected serving hot path (PR 7). The pairs come from
+    /// [`FoldedPairPacked::pack`] at the dtype the step was bound with
+    /// ([`Backend::bind_serve`]); the f32 instantiation is bit-identical
+    /// to `run_serve` on the dense pairs, quantized instantiations carry
+    /// the dtype's tolerance contract. Only steps bound through
+    /// `bind_serve` are guaranteed to support this.
+    fn run_serve_packed(
+        &self,
+        _pairs: &[Vec<FoldedPairPacked>],
+        _tokens: &[i32],
+        _task_id: i32,
+        _out: &mut [f32],
+    ) -> Result<()> {
+        anyhow::bail!("this backend has no packed folded-adapter serving path")
+    }
+
     /// Hand consumed step outputs (e.g. the gradient tensors of a train
     /// step, after the optimizer has applied them) back to the backend.
     /// The reference backend returns the buffers to its workspace arena so
@@ -132,6 +150,26 @@ pub trait Backend: Send + Sync {
         spec: &ArtifactSpec,
         frozen: &Arc<HashMap<String, Tensor>>,
     ) -> Result<Box<dyn Step + 'a>>;
+
+    /// Bind a serving step whose frozen-panel storage dtype is selected at
+    /// bind time (`--serve-dtype`). `DtypeKind::F32` is exactly [`Backend::bind`]
+    /// (the bit-exact path); backends without a quantized serving path
+    /// reject the other dtypes here, at bind, rather than failing per tick.
+    fn bind_serve<'a>(
+        &'a self,
+        spec: &ArtifactSpec,
+        frozen: &Arc<HashMap<String, Tensor>>,
+        dtype: DtypeKind,
+    ) -> Result<Box<dyn Step + 'a>> {
+        match dtype {
+            DtypeKind::F32 => self.bind(spec, frozen),
+            other => anyhow::bail!(
+                "backend '{}' serves f32 only (requested --serve-dtype {})",
+                self.kind().name(),
+                other.name()
+            ),
+        }
+    }
 
     /// Number of distinct compiled/bound executables so far — the DMRG
     /// hot-swap telemetry.

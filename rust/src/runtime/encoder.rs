@@ -62,9 +62,9 @@ use crate::adapters::AdapterKind;
 use crate::config::ModelPreset;
 use crate::data::{Batch, MlmBatch};
 use crate::tensor::{
-    add_into, axpy_into, matmul_into, matmul_into_local, matmul_into_prepacked,
+    add_into, axpy_into, matmul_into, matmul_into_local, matmul_into_prepacked_any,
     matmul_t_into, matmul_t_into_local, scale_into, softmax_rows_into, t_matmul_into,
-    t_matmul_into_local, PackedB, Tensor, Workspace,
+    t_matmul_into_local, DtypeKind, PackedBAny, Tensor, Workspace,
 };
 use crate::tt::MetaTtKind;
 use crate::util::rng::Pcg64;
@@ -552,7 +552,7 @@ struct Weights<'a> {
     index: &'a HashMap<String, WeightSlot>,
     frozen: &'a HashMap<String, Tensor>,
     trainable: &'a [Tensor],
-    packed: &'a HashMap<String, Vec<PackedB>>,
+    packed: &'a HashMap<String, Vec<PackedBAny>>,
 }
 
 impl<'a> Weights<'a> {
@@ -588,7 +588,7 @@ impl<'a> Weights<'a> {
     /// its frozen map (assembled from a pretrained checkpoint) may still
     /// carry their initial values — serving those stale panels instead of
     /// the live trainable tensor would silently freeze the forward.
-    fn packed_chunk(&self, name: &str, i: usize) -> Option<&'a PackedB> {
+    fn packed_chunk(&self, name: &str, i: usize) -> Option<&'a PackedBAny> {
         match self.index.get(name) {
             Some(WeightSlot::Frozen) => self.packed.get(name).and_then(|v| v.get(i)),
             _ => None,
@@ -597,8 +597,12 @@ impl<'a> Weights<'a> {
 }
 
 /// Forward `x·W` GEMM against a layer chunk of a stacked weight, routed
-/// through the bind-time packed-panel copy when one exists. Bit-identical
-/// either way — the cache only skips the per-call B pack.
+/// through the bind-time packed-panel copy when one exists. For f32 packs
+/// (every train/eval bind) this is bit-identical to the on-the-fly path —
+/// the cache only skips the per-call B pack. Quantized packs (serving
+/// binds at `--serve-dtype bf16|int8`) decode the stored panels back to
+/// f32 inside the microkernel, so the product carries the dtype's
+/// quantization tolerance instead.
 #[allow(clippy::too_many_arguments)]
 fn frozen_mm(
     w: &Weights,
@@ -615,7 +619,7 @@ fn frozen_mm(
     match w.packed_chunk(name, layer) {
         Some(p) => {
             debug_assert_eq!((p.k(), p.n()), (k, n_cols));
-            matmul_into_prepacked(x.data(), p, out.data_mut(), m, threads, ws.packs());
+            matmul_into_prepacked_any(x.data(), p, out.data_mut(), m, threads, ws.packs());
         }
         None => matmul_into(
             x.data(),
@@ -702,8 +706,10 @@ pub struct StepScratch {
     packed: Arc<PackedFrozen>,
 }
 
-/// Map of frozen stacked-weight name → per-layer-chunk packed panels.
-pub type PackedFrozen = HashMap<String, Vec<PackedB>>;
+/// Map of frozen stacked-weight name → per-layer-chunk packed panels, at
+/// the storage dtype the step was bound with (f32 for every train/eval
+/// bind; `--serve-dtype` for serving binds).
+pub type PackedFrozen = HashMap<String, Vec<PackedBAny>>;
 
 /// The per-layer GEMM operand families worth packing at bind time.
 const PACKED_FAMILIES: [&str; 6] = ["wq", "wk", "wv", "wo", "w1", "w2"];
@@ -717,9 +723,10 @@ const PACKED_FAMILIES: [&str; 6] = ["wq", "wk", "wv", "wo", "w1", "w2"];
 /// fine-tuning / pretrain / apply binds, whose frozen maps either lack the
 /// families or — full FT with a pretrained checkpoint — carry values no
 /// lookup may ever return; `Weights::packed_chunk` gates on the slot as
-/// the second line of defense). Bit-identity is free — the cached panels
-/// come from the same packer the per-call path runs.
-pub fn pack_frozen_weights(frozen: &HashMap<String, Tensor>) -> PackedFrozen {
+/// the second line of defense). At `DtypeKind::F32` bit-identity is free —
+/// the cached panels come from the same packer the per-call path runs.
+/// Quantized kinds trade the dtype's tolerance for panel bandwidth.
+pub fn pack_frozen_weights(frozen: &HashMap<String, Tensor>, kind: DtypeKind) -> PackedFrozen {
     let mut packed = PackedFrozen::new();
     for name in PACKED_FAMILIES {
         let Some(t) = frozen.get(name) else { continue };
@@ -729,11 +736,49 @@ pub fn pack_frozen_weights(frozen: &HashMap<String, Tensor>) -> PackedFrozen {
         let (l, k, n) = (t.shape()[0], t.shape()[1], t.shape()[2]);
         let chunk = k * n;
         let per_layer = (0..l)
-            .map(|li| PackedB::pack(&t.data()[li * chunk..(li + 1) * chunk], k, n))
+            .map(|li| PackedBAny::pack(&t.data()[li * chunk..(li + 1) * chunk], k, n, kind))
             .collect();
         packed.insert(name.to_string(), per_layer);
     }
     packed
+}
+
+/// Total panel bytes a [`PackedFrozen`] cache holds — the per-tick frozen
+/// operand traffic the serving bandwidth telemetry reports.
+pub fn packed_frozen_bytes(packed: &PackedFrozen) -> usize {
+    packed.values().flatten().map(|p| p.panel_bytes()).sum()
+}
+
+/// A folded adapter factor pair (`A = [d, r]` α-pre-scaled, `B = [r, d]`,
+/// from [`crate::tt::MetaTt::fold_for_serving`]) pre-packed at a serving
+/// storage dtype. The serving engine's adapter cache holds these instead
+/// of dense tensors: the per-tick pack of both operands disappears, and at
+/// bf16/int8 the resident factor bytes shrink 2–4×. The f32 instantiation
+/// is bit-identical to running [`serve_step`] on the dense pair.
+#[derive(Debug)]
+pub struct FoldedPairPacked {
+    /// Packed `A` (`k = d`, `n = r`).
+    pub a: PackedBAny,
+    /// Packed `B` (`k = r`, `n = d`).
+    pub b: PackedBAny,
+}
+
+impl FoldedPairPacked {
+    /// Pack a dense folded `(A, B)` pair at `kind`. Shapes must be the
+    /// serving contract's `[d, r]` / `[r, d]`.
+    pub fn pack(a: &Tensor, b: &Tensor, kind: DtypeKind) -> FoldedPairPacked {
+        assert_eq!(a.ndim(), 2, "folded A must be a matrix, got {:?}", a.shape());
+        assert_eq!(b.ndim(), 2, "folded B must be a matrix, got {:?}", b.shape());
+        FoldedPairPacked {
+            a: PackedBAny::pack(a.data(), a.shape()[0], a.shape()[1], kind),
+            b: PackedBAny::pack(b.data(), b.shape()[0], b.shape()[1], kind),
+        }
+    }
+
+    /// Resident panel bytes of both factors (the byte-LRU accounting unit).
+    pub fn bytes(&self) -> usize {
+        self.a.panel_bytes() + self.b.panel_bytes()
+    }
 }
 
 impl StepScratch {
@@ -1810,12 +1855,38 @@ fn apply_folded_pair(
     }
 }
 
+/// [`apply_folded_pair`] over pre-packed factor pairs: both GEMMs route
+/// through [`matmul_into_prepacked_any`], skipping the per-tick B pack and
+/// decoding quantized panels in the microkernel. The f32 instantiation is
+/// bit-identical to the dense path (same kernels, same pack bytes).
+fn apply_folded_pair_packed(
+    ws: &mut Workspace,
+    x: &Tensor,
+    pair: &[FoldedPairPacked],
+    q: &mut Tensor,
+    v: &mut Tensor,
+    threads: usize,
+) {
+    let n = x.shape()[0];
+    for (m, out) in [(0usize, &mut *q), (1, &mut *v)] {
+        let p = &pair[m];
+        let ra = p.a.n();
+        debug_assert_eq!(x.shape()[1], p.a.k());
+        let mut xa = ws.take(&[n, ra]);
+        matmul_into_prepacked_any(x.data(), &p.a, xa.data_mut(), n, threads, ws.packs());
+        matmul_into_prepacked_any(xa.data(), &p.b, out.data_mut(), n, threads, ws.packs());
+        ws.recycle(xa);
+    }
+}
+
 /// Adapter representation for the inference forward: the trainable family
 /// parameters (the eval path) or pre-folded per-(layer, matrix) factor
-/// pairs (the serving path — family-agnostic, two GEMMs per delta).
+/// pairs (the serving path — family-agnostic, two GEMMs per delta), dense
+/// or pre-packed at a serving dtype.
 enum InferAdapter<'a> {
     Family(AdapterCtx<'a>),
     Folded(&'a [Vec<(Tensor, Tensor)>]),
+    FoldedPacked(&'a [Vec<FoldedPairPacked>]),
 }
 
 /// Run the encoder; returns final hidden states (n × d) plus the embedding
@@ -1905,6 +1976,11 @@ fn encoder_forward_infer(
             InferAdapter::Folded(pairs) => {
                 let (mut q, k, mut v) = project_qkv_base(dims, w, &x_in, layer, threads, ws);
                 apply_folded_pair(ws, &x_in, &pairs[layer], &mut q, &mut v, threads);
+                (q, k, v)
+            }
+            InferAdapter::FoldedPacked(pairs) => {
+                let (mut q, k, mut v) = project_qkv_base(dims, w, &x_in, layer, threads, ws);
+                apply_folded_pair_packed(ws, &x_in, &pairs[layer], &mut q, &mut v, threads);
                 (q, k, v)
             }
         };
@@ -2350,22 +2426,7 @@ pub fn serve_step(
     out: &mut [f32],
 ) -> Result<()> {
     let dims = dims_of(entry)?;
-    if tokens.len() != dims.n {
-        bail!(
-            "serve: {} tokens supplied, spec {} wants {} ({} x {})",
-            tokens.len(),
-            entry.spec.stem(),
-            dims.n,
-            dims.b,
-            dims.s
-        );
-    }
-    if task_id < 0 || task_id as usize >= entry.spec.tasks.max(1) {
-        bail!("serve: task {} out of range ({} heads)", task_id, entry.spec.tasks.max(1));
-    }
-    if pairs.len() != dims.l {
-        bail!("serve: folded adapter has {} layers, model has {}", pairs.len(), dims.l);
-    }
+    validate_serve_io(entry, &dims, tokens, task_id, pairs.len(), out)?;
     for (l, row) in pairs.iter().enumerate() {
         if row.len() != 2 {
             bail!("serve: layer {l} folds {} matrices, expected 2 (Q, V)", row.len());
@@ -2383,6 +2444,91 @@ pub fn serve_step(
             }
         }
     }
+    let StepScratch { ws, index, packed, .. } = scratch;
+    let w = Weights { index: &*index, frozen, trainable: &[], packed: &**packed };
+    let hidden =
+        encoder_forward_infer(&dims, &w, &InferAdapter::Folded(pairs), tokens, threads, ws);
+    let logits = head_logits(&dims, &w, &hidden, task_id as usize, threads, ws);
+    ws.recycle(hidden);
+    out.copy_from_slice(logits.data());
+    ws.recycle(logits);
+    Ok(())
+}
+
+/// [`serve_step`] over **pre-packed** folded factor pairs: the adapter
+/// GEMMs run [`matmul_into_prepacked_any`] against panels packed once at
+/// fold time ([`FoldedPairPacked::pack`]) instead of re-packing the dense
+/// factors every tick. At `DtypeKind::F32` the logits are bit-identical to
+/// [`serve_step`] on the dense pairs; quantized dtypes carry the dtype's
+/// tolerance contract (pinned by the parity tests in `tests/serving.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_step_packed(
+    entry: &ArtifactEntry,
+    frozen: &HashMap<String, Tensor>,
+    pairs: &[Vec<FoldedPairPacked>],
+    tokens: &[i32],
+    task_id: i32,
+    threads: usize,
+    scratch: &mut StepScratch,
+    out: &mut [f32],
+) -> Result<()> {
+    let dims = dims_of(entry)?;
+    validate_serve_io(entry, &dims, tokens, task_id, pairs.len(), out)?;
+    for (l, row) in pairs.iter().enumerate() {
+        if row.len() != 2 {
+            bail!("serve: layer {l} folds {} matrices, expected 2 (Q, V)", row.len());
+        }
+        for (m, p) in row.iter().enumerate() {
+            if p.a.k() != dims.d || p.b.k() != p.a.n() || p.b.n() != dims.d {
+                bail!(
+                    "serve: packed folded pair (layer {l}, matrix {m}) has shapes \
+                     [{}, {}]/[{}, {}], want [{d}, r]/[r, {d}]",
+                    p.a.k(),
+                    p.a.n(),
+                    p.b.k(),
+                    p.b.n(),
+                    d = dims.d
+                );
+            }
+        }
+    }
+    let StepScratch { ws, index, packed, .. } = scratch;
+    let w = Weights { index: &*index, frozen, trainable: &[], packed: &**packed };
+    let hidden =
+        encoder_forward_infer(&dims, &w, &InferAdapter::FoldedPacked(pairs), tokens, threads, ws);
+    let logits = head_logits(&dims, &w, &hidden, task_id as usize, threads, ws);
+    ws.recycle(hidden);
+    out.copy_from_slice(logits.data());
+    ws.recycle(logits);
+    Ok(())
+}
+
+/// The serve-entry validation shared by the dense and packed paths:
+/// token count, task range, folded layer count, and output buffer size.
+fn validate_serve_io(
+    entry: &ArtifactEntry,
+    dims: &Dims,
+    tokens: &[i32],
+    task_id: i32,
+    n_pair_layers: usize,
+    out: &[f32],
+) -> Result<()> {
+    if tokens.len() != dims.n {
+        bail!(
+            "serve: {} tokens supplied, spec {} wants {} ({} x {})",
+            tokens.len(),
+            entry.spec.stem(),
+            dims.n,
+            dims.b,
+            dims.s
+        );
+    }
+    if task_id < 0 || task_id as usize >= entry.spec.tasks.max(1) {
+        bail!("serve: task {} out of range ({} heads)", task_id, entry.spec.tasks.max(1));
+    }
+    if n_pair_layers != dims.l {
+        bail!("serve: folded adapter has {} layers, model has {}", n_pair_layers, dims.l);
+    }
     if out.len() != dims.b * dims.classes {
         bail!(
             "serve: output buffer holds {} floats, batch {} x {} classes needs {}",
@@ -2392,14 +2538,6 @@ pub fn serve_step(
             dims.b * dims.classes
         );
     }
-    let StepScratch { ws, index, packed, .. } = scratch;
-    let w = Weights { index: &*index, frozen, trainable: &[], packed: &**packed };
-    let hidden =
-        encoder_forward_infer(&dims, &w, &InferAdapter::Folded(pairs), tokens, threads, ws);
-    let logits = head_logits(&dims, &w, &hidden, task_id as usize, threads, ws);
-    ws.recycle(hidden);
-    out.copy_from_slice(logits.data());
-    ws.recycle(logits);
     Ok(())
 }
 

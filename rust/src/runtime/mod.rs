@@ -26,6 +26,9 @@ mod exec;
 
 pub use backbone::{assemble_frozen, checkpoint_path, init_encoder_weights};
 pub use backend::{backend_from_env, make_backend, Backend, BackendKind, Step};
+pub use encoder::{
+    pack_frozen_weights, packed_frozen_bytes, FoldedPairPacked, PackedFrozen,
+};
 pub use layout::{encoder_specs, frozen_specs, synthesize_entry, trainable_specs};
 pub use reference::RefBackend;
 pub use registry::{ArtifactEntry, ArtifactSpec, IoSpec, Manifest, StepKind};

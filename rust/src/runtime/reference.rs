@@ -14,7 +14,7 @@ use super::layout;
 use super::registry::{ArtifactEntry, ArtifactSpec, StepKind};
 use crate::config::ModelPreset;
 use crate::data::{Batch, MlmBatch};
-use crate::tensor::Tensor;
+use crate::tensor::{DtypeKind, Tensor};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::collections::HashSet;
@@ -34,13 +34,13 @@ pub struct RefBackend {
     /// path). Results are bit-identical either way; off is the plain
     /// allocate-per-intermediate reference mode.
     arena: bool,
-    /// Bind-time packed-panel caches, keyed by the identity of the frozen
-    /// `Arc` they were built from: every step bound against the same
-    /// backbone (train + eval runners, all DMRG ranks, every serving
-    /// worker) shares ONE packed copy of the frozen layer weights. Weak
-    /// keys keep the cache from pinning dropped backbones; dead entries
-    /// are pruned on the next bind.
-    packed: Mutex<Vec<(Weak<HashMap<String, Tensor>>, Arc<encoder::PackedFrozen>)>>,
+    /// Bind-time packed-panel caches, keyed by (identity of the frozen
+    /// `Arc` they were built from, storage dtype): every step bound against
+    /// the same backbone at the same dtype (train + eval runners, all DMRG
+    /// ranks, every serving worker) shares ONE packed copy of the frozen
+    /// layer weights. Weak keys keep the cache from pinning dropped
+    /// backbones; dead entries are pruned on the next bind.
+    packed: Mutex<Vec<(Weak<HashMap<String, Tensor>>, DtypeKind, Arc<encoder::PackedFrozen>)>>,
 }
 
 /// Arena default from the environment: on unless `METATT_ARENA` is set to
@@ -87,23 +87,89 @@ impl RefBackend {
         })
     }
 
-    /// The shared packed-panel copy of `frozen`'s layer weights, built on
-    /// the first bind against this backbone and reused (refcounted) by
-    /// every later bind of the same `Arc`. Identity is pointer equality on
-    /// a *live* entry: dead weak entries are pruned first, so a recycled
-    /// allocation address can never alias a stale cache line.
-    fn packed_frozen(&self, frozen: &Arc<HashMap<String, Tensor>>) -> Arc<encoder::PackedFrozen> {
+    /// The shared packed-panel copy of `frozen`'s layer weights at `kind`,
+    /// built on the first bind against this (backbone, dtype) and reused
+    /// (refcounted) by every later bind of the same `Arc` at the same
+    /// dtype. Identity is pointer equality on a *live* entry: dead weak
+    /// entries are pruned first, so a recycled allocation address can
+    /// never alias a stale cache line.
+    fn packed_frozen(
+        &self,
+        frozen: &Arc<HashMap<String, Tensor>>,
+        kind: DtypeKind,
+    ) -> Arc<encoder::PackedFrozen> {
         let mut cache = self.packed.lock().unwrap();
-        cache.retain(|(weak, _)| weak.strong_count() > 0);
-        if let Some((_, packed)) = cache
-            .iter()
-            .find(|(weak, _)| std::ptr::eq(weak.as_ptr(), Arc::as_ptr(frozen)))
-        {
+        cache.retain(|(weak, _, _)| weak.strong_count() > 0);
+        if let Some((_, _, packed)) = cache.iter().find(|(weak, k, _)| {
+            *k == kind && std::ptr::eq(weak.as_ptr(), Arc::as_ptr(frozen))
+        }) {
             return Arc::clone(packed);
         }
-        let packed = Arc::new(encoder::pack_frozen_weights(frozen));
-        cache.push((Arc::downgrade(frozen), Arc::clone(&packed)));
+        let packed = Arc::new(encoder::pack_frozen_weights(frozen, kind));
+        cache.push((Arc::downgrade(frozen), kind, Arc::clone(&packed)));
         packed
+    }
+
+    /// The shared bind body behind [`Backend::bind`] (always f32) and
+    /// [`Backend::bind_serve`] (dtype selected by `--serve-dtype`): frozen
+    /// set validation, bind telemetry, and the packed-panel cache lookup
+    /// at `dtype`.
+    fn bind_at<'a>(
+        &'a self,
+        spec: &ArtifactSpec,
+        frozen: &Arc<HashMap<String, Tensor>>,
+        dtype: DtypeKind,
+    ) -> Result<Box<dyn Step + 'a>> {
+        let entry = self.entry(spec)?;
+        // Validate the frozen set up front, exactly like the PJRT bind.
+        for io in entry.frozen_inputs() {
+            match frozen.get(&io.name) {
+                None => bail!(
+                    "frozen input '{}' missing for {}",
+                    io.name,
+                    spec.stem()
+                ),
+                Some(t) if t.shape() != &io.shape[..] => bail!(
+                    "frozen input '{}': shape {:?}, layout wants {:?}",
+                    io.name,
+                    t.shape(),
+                    io.shape
+                ),
+                _ => {}
+            }
+        }
+        self.bound.lock().unwrap().insert(spec.stem());
+        // One-time per-bind work: weight-name indices, the step's workspace
+        // arena — which owns the aligned pack scratch the packed GEMM
+        // kernels check their A/B panel buffers out of, so a warmed step
+        // packs without allocating — and the bind-time packed-panel copies
+        // of the frozen layer weights (forward orientation), so the
+        // forward GEMMs of every subsequent call skip the per-call B pack
+        // entirely. (Backward `dY·Wᵀ` keeps its per-call pack: the kernel
+        // absorbs the transpose bit-identically, and caching both
+        // orientations would double the footprint.) Refcount bumps only
+        // for the frozen map and its shared packed panels — the backbone
+        // AND its packed copy are shared across every bound step (train +
+        // eval runners, all DMRG ranks, every serving worker).
+        // Only specs that actually *freeze* the per-layer weights consult
+        // the cache: full fine-tuning freezes just the classifier heads
+        // (its frozen map may still carry checkpointed encoder arrays the
+        // forward must never read from a stale pack), and pretrain/apply
+        // specs freeze nothing — all of those get an empty map instead of
+        // packing panels no lookup could ever return.
+        let packs_apply = entry.frozen_inputs().iter().any(|io| io.name == "wq");
+        let packed = if packs_apply {
+            self.packed_frozen(frozen, dtype)
+        } else {
+            Arc::new(encoder::PackedFrozen::new())
+        };
+        let scratch = encoder::StepScratch::new(&entry, self.arena, packed)?;
+        Ok(Box::new(RefStep {
+            entry,
+            frozen: Arc::clone(frozen),
+            threads: self.threads,
+            scratch: Mutex::new(scratch),
+        }))
     }
 }
 
@@ -148,56 +214,26 @@ impl Backend for RefBackend {
         spec: &ArtifactSpec,
         frozen: &Arc<HashMap<String, Tensor>>,
     ) -> Result<Box<dyn Step + 'a>> {
-        let entry = self.entry(spec)?;
-        // Validate the frozen set up front, exactly like the PJRT bind.
-        for io in entry.frozen_inputs() {
-            match frozen.get(&io.name) {
-                None => bail!(
-                    "frozen input '{}' missing for {}",
-                    io.name,
-                    spec.stem()
-                ),
-                Some(t) if t.shape() != &io.shape[..] => bail!(
-                    "frozen input '{}': shape {:?}, layout wants {:?}",
-                    io.name,
-                    t.shape(),
-                    io.shape
-                ),
-                _ => {}
-            }
+        self.bind_at(spec, frozen, DtypeKind::F32)
+    }
+
+    fn bind_serve<'a>(
+        &'a self,
+        spec: &ArtifactSpec,
+        frozen: &Arc<HashMap<String, Tensor>>,
+        dtype: DtypeKind,
+    ) -> Result<Box<dyn Step + 'a>> {
+        // Quantized frozen panels are a *serving* precision trade; train
+        // and pretrain binds must never read them. `DtypeKind::F32` is
+        // exactly `bind` (same cache entry, bit-exact path).
+        if dtype != DtypeKind::F32 && spec.step != StepKind::Eval {
+            bail!(
+                "bind_serve at --serve-dtype {} needs an eval spec (got {})",
+                dtype.name(),
+                spec.stem()
+            );
         }
-        self.bound.lock().unwrap().insert(spec.stem());
-        // One-time per-bind work: weight-name indices, the step's workspace
-        // arena — which owns the aligned pack scratch the packed GEMM
-        // kernels check their A/B panel buffers out of, so a warmed step
-        // packs without allocating — and the bind-time packed-panel copies
-        // of the frozen layer weights (forward orientation), so the
-        // forward GEMMs of every subsequent call skip the per-call B pack
-        // entirely. (Backward `dY·Wᵀ` keeps its per-call pack: the kernel
-        // absorbs the transpose bit-identically, and caching both
-        // orientations would double the footprint.) Refcount bumps only
-        // for the frozen map and its shared packed panels — the backbone
-        // AND its packed copy are shared across every bound step (train +
-        // eval runners, all DMRG ranks, every serving worker).
-        // Only specs that actually *freeze* the per-layer weights consult
-        // the cache: full fine-tuning freezes just the classifier heads
-        // (its frozen map may still carry checkpointed encoder arrays the
-        // forward must never read from a stale pack), and pretrain/apply
-        // specs freeze nothing — all of those get an empty map instead of
-        // packing panels no lookup could ever return.
-        let packs_apply = entry.frozen_inputs().iter().any(|io| io.name == "wq");
-        let packed = if packs_apply {
-            self.packed_frozen(frozen)
-        } else {
-            Arc::new(encoder::PackedFrozen::new())
-        };
-        let scratch = encoder::StepScratch::new(&entry, self.arena, packed)?;
-        Ok(Box::new(RefStep {
-            entry,
-            frozen: Arc::clone(frozen),
-            threads: self.threads,
-            scratch: Mutex::new(scratch),
-        }))
+        self.bind_at(spec, frozen, dtype)
     }
 
     fn cached_executables(&self) -> usize {
@@ -370,6 +406,32 @@ impl Step for RefStep {
         }
         let mut scratch = self.scratch.lock().unwrap();
         encoder::serve_step(
+            &self.entry,
+            &self.frozen,
+            pairs,
+            tokens,
+            task_id,
+            self.threads,
+            &mut scratch,
+            out,
+        )
+    }
+
+    fn run_serve_packed(
+        &self,
+        pairs: &[Vec<encoder::FoldedPairPacked>],
+        tokens: &[i32],
+        task_id: i32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if self.entry.spec.step != StepKind::Eval {
+            bail!(
+                "run_serve_packed needs an eval-spec step (got {})",
+                self.entry.spec.stem()
+            );
+        }
+        let mut scratch = self.scratch.lock().unwrap();
+        encoder::serve_step_packed(
             &self.entry,
             &self.frozen,
             pairs,

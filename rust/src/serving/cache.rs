@@ -4,8 +4,14 @@
 //! The store holds the *chain-form* MetaTT adapter of the currently-loaded
 //! checkpoint and lazily folds it per task
 //! ([`crate::tt::MetaTt::fold_for_serving`], paper §2.4) the first time
-//! that task is requested — one fold per (generation, task), LRU-evicted
-//! beyond the capacity.
+//! that task is requested — one fold per (generation, task), with the
+//! folded factors pre-packed at the store's serving dtype
+//! ([`crate::runtime::FoldedPairPacked`]) so a worker tick runs the
+//! adapter GEMMs straight off resident panels. Entries are LRU-evicted
+//! past a **byte** budget: capacity is the resident panel footprint, not
+//! an entry count, so an operator can say "folded adapters may hold 64
+//! MiB" independent of rank/model/dtype (quantized dtypes fit 2–4× more
+//! tasks in the same budget).
 //!
 //! **Hot-swap.** [`AdapterStore::reload`] installs a freshly-loaded adapter
 //! as a new *generation* without draining in-flight work: readers take a
@@ -20,15 +26,16 @@
 //! the fold-under-lock trade-off.)
 
 use crate::adapters::AdapterSpec;
-use crate::tensor::Tensor;
+use crate::runtime::FoldedPairPacked;
+use crate::tensor::{DtypeKind, Tensor};
 use crate::tt::MetaTt;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 /// Immutable folded factors for one (generation, task-slice): per
-/// (layer, matrix) pairs `(A = α·G1·mid, B = G_last)`, ready for the
-/// two-GEMM serving delta.
+/// (layer, matrix) pairs `(A = α·G1·mid, B = G_last)`, pre-packed at the
+/// store's serving dtype, ready for the two-GEMM serving delta.
 #[derive(Debug)]
 pub struct FoldedAdapter {
     /// Cache key the fold was computed for (the task index for the (4+1)D
@@ -36,8 +43,11 @@ pub struct FoldedAdapter {
     pub key: usize,
     /// Generation the factors were folded from.
     pub generation: u64,
-    /// `pairs[layer][matrix]` factor pairs.
-    pub pairs: Vec<Vec<(Tensor, Tensor)>>,
+    /// `pairs[layer][matrix]` factor pairs, packed at the store's dtype.
+    pub pairs: Vec<Vec<FoldedPairPacked>>,
+    /// Resident panel bytes of every pair — this entry's charge against
+    /// the store's byte budget.
+    pub bytes: usize,
 }
 
 struct LruEntry {
@@ -49,6 +59,8 @@ struct LruEntry {
 struct LruInner {
     entries: Vec<LruEntry>,
     clock: u64,
+    /// Sum of `folded.bytes` over `entries`.
+    bytes: usize,
 }
 
 /// One loaded checkpoint: the chain-form adapter plus its fold cache.
@@ -58,7 +70,8 @@ struct Generation {
     folded: Mutex<LruInner>,
 }
 
-/// Cumulative cache counters (monotone across reloads).
+/// Cumulative cache counters (monotone across reloads), plus the current
+/// resident-byte gauge.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheStats {
     /// Folded-adapter lookups served from the cache.
@@ -69,12 +82,17 @@ pub struct CacheStats {
     pub evictions: u64,
     /// Reloads installed since construction.
     pub reloads: u64,
+    /// Resident folded-panel bytes of the *current* generation right now
+    /// (a gauge, not a counter: bounded by the store's byte capacity
+    /// whenever more than one entry is resident).
+    pub bytes: u64,
 }
 
 /// The serving engine's adapter state: current generation + fold cache.
 pub struct AdapterStore {
     current: RwLock<Arc<Generation>>,
-    capacity: usize,
+    capacity_bytes: usize,
+    dtype: DtypeKind,
     hits: AtomicU64,
     folds: AtomicU64,
     evictions: AtomicU64,
@@ -82,22 +100,30 @@ pub struct AdapterStore {
 }
 
 impl AdapterStore {
-    /// Store over an initial adapter; `capacity` bounds the folded entries
-    /// kept per generation (>= 1).
-    pub fn new(tt: MetaTt, capacity: usize) -> AdapterStore {
-        assert!(capacity >= 1, "folded-adapter cache capacity must be >= 1");
+    /// Store over an initial adapter; `capacity_bytes` bounds the resident
+    /// folded-panel footprint per generation (>= 1; the most recently
+    /// folded entry is always kept, so a single oversized fold still
+    /// serves). `dtype` is the storage dtype every fold is packed at.
+    pub fn new(tt: MetaTt, capacity_bytes: usize, dtype: DtypeKind) -> AdapterStore {
+        assert!(capacity_bytes >= 1, "folded-adapter cache byte capacity must be >= 1");
         AdapterStore {
             current: RwLock::new(Arc::new(Generation {
                 id: 0,
                 tt,
-                folded: Mutex::new(LruInner { entries: Vec::new(), clock: 0 }),
+                folded: Mutex::new(LruInner { entries: Vec::new(), clock: 0, bytes: 0 }),
             })),
-            capacity,
+            capacity_bytes,
+            dtype,
             hits: AtomicU64::new(0),
             folds: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             reloads: AtomicU64::new(0),
         }
+    }
+
+    /// The storage dtype folds are packed at.
+    pub fn dtype(&self) -> DtypeKind {
+        self.dtype
     }
 
     /// Current generation id (0 for the construction-time adapter).
@@ -114,7 +140,7 @@ impl AdapterStore {
         *cur = Arc::new(Generation {
             id,
             tt,
-            folded: Mutex::new(LruInner { entries: Vec::new(), clock: 0 }),
+            folded: Mutex::new(LruInner { entries: Vec::new(), clock: 0, bytes: 0 }),
         });
         self.reloads.fetch_add(1, Ordering::Relaxed);
     }
@@ -143,12 +169,27 @@ impl AdapterStore {
             return Arc::clone(&e.folded);
         }
         self.folds.fetch_add(1, Ordering::Relaxed);
+        let dense = generation.tt.fold_for_serving(key);
+        let pairs: Vec<Vec<FoldedPairPacked>> = dense
+            .iter()
+            .map(|row| {
+                row.iter().map(|(a, b)| FoldedPairPacked::pack(a, b, self.dtype)).collect()
+            })
+            .collect();
+        let bytes = pairs.iter().flatten().map(|p| p.bytes()).sum();
         let folded = Arc::new(FoldedAdapter {
             key,
             generation: generation.id,
-            pairs: generation.tt.fold_for_serving(key),
+            pairs,
+            bytes,
         });
-        if lru.entries.len() >= self.capacity {
+        lru.entries.push(LruEntry { key, stamp, folded: Arc::clone(&folded) });
+        lru.bytes += bytes;
+        // Evict least-recently-used entries until the resident footprint
+        // fits the byte budget. The just-inserted entry carries the max
+        // stamp, so it is only ever kept — a single fold larger than the
+        // whole budget still serves rather than thrashing.
+        while lru.bytes > self.capacity_bytes && lru.entries.len() > 1 {
             let victim = lru
                 .entries
                 .iter()
@@ -156,20 +197,27 @@ impl AdapterStore {
                 .min_by_key(|(_, e)| e.stamp)
                 .map(|(i, _)| i)
                 .expect("non-empty LRU");
-            lru.entries.swap_remove(victim);
+            let evicted = lru.entries.swap_remove(victim);
+            lru.bytes -= evicted.folded.bytes;
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
-        lru.entries.push(LruEntry { key, stamp, folded: Arc::clone(&folded) });
         folded
     }
 
-    /// Cumulative counters (hit rate = hits / (hits + folds)).
+    /// Cumulative counters (hit rate = hits / (hits + folds)) plus the
+    /// current generation's resident-byte gauge.
     pub fn stats(&self) -> CacheStats {
+        let bytes = {
+            let generation = self.current.read().unwrap().clone();
+            let lru = generation.folded.lock().unwrap();
+            lru.bytes as u64
+        };
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             folds: self.folds.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             reloads: self.reloads.load(Ordering::Relaxed),
+            bytes,
         }
     }
 }
@@ -235,20 +283,33 @@ mod tests {
         spec.build_metatt_with(&mut Pcg64::new(seed), Some(&init))
     }
 
+    /// Bytes one folded entry of the demo adapter occupies at `dtype`
+    /// (every task of one generation folds to the same shapes).
+    fn fold_bytes(dtype: DtypeKind) -> usize {
+        let probe = AdapterStore::new(demo_tt(1, 3), usize::MAX, dtype);
+        probe.get(0).bytes
+    }
+
     #[test]
     fn fold_once_then_hit_then_evict_lru() {
-        let store = AdapterStore::new(demo_tt(1, 3), 2);
+        // Budget exactly two entries' worth of bytes.
+        let per_entry = fold_bytes(DtypeKind::F32);
+        let store = AdapterStore::new(demo_tt(1, 3), 2 * per_entry, DtypeKind::F32);
         let a0 = store.get(0);
+        assert_eq!(a0.bytes, per_entry);
         let again = store.get(0);
         assert!(Arc::ptr_eq(&a0, &again), "second lookup must be a cache hit");
         let _a1 = store.get(1);
         assert_eq!(store.stats().folds, 2);
         assert_eq!(store.stats().hits, 1);
         assert_eq!(store.stats().evictions, 0);
-        // Touch task 0 so task 1 is the LRU victim, then insert task 2.
+        assert_eq!(store.stats().bytes, 2 * per_entry as u64);
+        // Touch task 0 so task 1 is the LRU victim, then insert task 2:
+        // three entries exceed the byte budget, so one must go.
         let _ = store.get(0);
         let _ = store.get(2);
         assert_eq!(store.stats().evictions, 1);
+        assert_eq!(store.stats().bytes, 2 * per_entry as u64);
         // Task 0 survived (recently used): another lookup is a hit.
         let hits_before = store.stats().hits;
         let _ = store.get(0);
@@ -260,8 +321,32 @@ mod tests {
     }
 
     #[test]
+    fn oversized_fold_is_kept_not_thrashed() {
+        // A byte budget smaller than a single entry still serves: the
+        // newest fold is always resident; older ones are evicted.
+        let store = AdapterStore::new(demo_tt(1, 3), 1, DtypeKind::F32);
+        let a0 = store.get(0);
+        assert!(a0.bytes > 1);
+        assert_eq!(store.stats().evictions, 0);
+        let _a1 = store.get(1);
+        assert_eq!(store.stats().evictions, 1, "task 0 displaced by task 1");
+        assert_eq!(store.stats().bytes, a0.bytes as u64, "exactly one entry resident");
+        // The in-hand Arc keeps the evicted fold usable for its batch.
+        assert_eq!(a0.pairs.len(), ModelPreset::Tiny.dims(3).layers);
+    }
+
+    #[test]
+    fn quantized_folds_shrink_the_resident_bytes() {
+        let f32b = fold_bytes(DtypeKind::F32);
+        let bf16b = fold_bytes(DtypeKind::Bf16);
+        let i8b = fold_bytes(DtypeKind::I8);
+        assert!(bf16b < f32b, "bf16 folds ({bf16b}) must beat f32 ({f32b})");
+        assert!(i8b < bf16b, "int8 folds ({i8b}) must beat bf16 ({bf16b})");
+    }
+
+    #[test]
     fn reload_bumps_generation_without_invalidating_snapshots() {
-        let store = AdapterStore::new(demo_tt(1, 3), 4);
+        let store = AdapterStore::new(demo_tt(1, 3), 64 << 20, DtypeKind::F32);
         let old = store.get(1);
         assert_eq!(old.generation, 0);
         store.reload(demo_tt(2, 3));
@@ -269,13 +354,10 @@ mod tests {
         assert_eq!(store.stats().reloads, 1);
         // The pre-reload snapshot stays fully usable (in-flight batch).
         assert_eq!(old.pairs.len(), ModelPreset::Tiny.dims(3).layers);
-        // New lookups fold from the new parameters.
+        // New lookups fold from the new generation (fresh cache).
         let new = store.get(1);
         assert_eq!(new.generation, 1);
-        assert!(
-            new.pairs[0][0].0 != old.pairs[0][0].0,
-            "new generation must carry the reloaded parameters"
-        );
+        assert!(!Arc::ptr_eq(&new, &old), "reload must refold, not reuse");
     }
 
     #[test]
@@ -290,7 +372,7 @@ mod tests {
             cores: vec![crate::tt::CoreInit::Normal; 4],
         };
         let tt = spec.build_metatt_with(&mut Pcg64::new(9), Some(&init));
-        let store = AdapterStore::new(tt, 2);
+        let store = AdapterStore::new(tt, 64 << 20, DtypeKind::F32);
         let a = store.get(0);
         let b = store.get(5); // any task index maps to the shared slot
         assert!(Arc::ptr_eq(&a, &b));

@@ -23,7 +23,7 @@ use super::request::{
 use crate::adapters::{AdapterKind, AdapterSpec};
 use crate::config::ModelPreset;
 use crate::runtime::{assemble_frozen, ArtifactSpec, Backend, StepKind};
-use crate::tensor::Tensor;
+use crate::tensor::{DtypeKind, Tensor};
 use crate::tt::MetaTt;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -53,8 +53,14 @@ pub struct EngineConfig {
     pub queue_capacity: usize,
     /// Worker threads executing batches (each binds its own step).
     pub workers: usize,
-    /// Folded-adapter LRU capacity (entries per generation).
-    pub cache_capacity: usize,
+    /// Folded-adapter LRU capacity in **bytes** of resident packed panels
+    /// per generation (the most recent fold is always kept).
+    pub cache_capacity_bytes: usize,
+    /// Storage dtype of the serving read path: the bind-time frozen panel
+    /// packs and the folded adapter factors (`--serve-dtype`). `F32` is
+    /// the bit-exact path; `Bf16`/`I8` trade the dtype's quantization
+    /// tolerance for 2–4× less resident panel traffic.
+    pub dtype: DtypeKind,
 }
 
 impl Default for EngineConfig {
@@ -70,7 +76,8 @@ impl Default for EngineConfig {
             batch_deadline: Duration::from_millis(2),
             queue_capacity: 256,
             workers: 2,
-            cache_capacity: 8,
+            cache_capacity_bytes: 64 << 20,
+            dtype: DtypeKind::F32,
         }
     }
 }
@@ -97,6 +104,10 @@ pub struct EngineStats {
     /// `hist[k]` = batches that carried exactly k real requests (index 0
     /// unused).
     pub batch_hist: Vec<u64>,
+    /// Resident folded-adapter panel bytes right now (a gauge mirrored
+    /// from [`CacheStats::bytes`], bounded by
+    /// [`EngineConfig::cache_capacity_bytes`] past the first fold).
+    pub cache_bytes: u64,
 }
 
 impl EngineStats {
@@ -134,6 +145,8 @@ impl EngineStats {
                 0
             },
             batch_hist: hist,
+            // A gauge, not a counter: the window reports the current value.
+            cache_bytes: self.cache_bytes,
         }
     }
 }
@@ -183,8 +196,8 @@ impl<'b> ServingEngine<'b> {
         if cfg.max_batch < 1 || cfg.workers < 1 || cfg.num_tasks < 1 || cfg.classes < 1 {
             bail!("serving config: max_batch, workers, num_tasks, classes must all be >= 1");
         }
-        if cfg.queue_capacity < 1 || cfg.cache_capacity < 1 {
-            bail!("serving config: queue_capacity and cache_capacity must be >= 1");
+        if cfg.queue_capacity < 1 || cfg.cache_capacity_bytes < 1 {
+            bail!("serving config: queue_capacity and cache_capacity_bytes must be >= 1");
         }
         let AdapterKind::MetaTt(kind) = cfg.adapter else {
             bail!(
@@ -207,7 +220,7 @@ impl<'b> ServingEngine<'b> {
         };
         let entry = backend.entry(&spec)?;
         let frozen = Arc::new(assemble_frozen(&entry, backbone, cfg.model)?);
-        let store = AdapterStore::new(tt, cfg.cache_capacity);
+        let store = AdapterStore::new(tt, cfg.cache_capacity_bytes, cfg.dtype);
         let queue = AdmissionQueue::new(cfg.queue_capacity);
         let policy = BatchPolicy { max_batch: cfg.max_batch, deadline: cfg.batch_deadline };
         let hist = vec![0u64; cfg.max_batch + 1];
@@ -269,6 +282,7 @@ impl<'b> ServingEngine<'b> {
             queue_us_sum: self.stats.queue_us_sum.load(Ordering::Relaxed),
             queue_us_max: self.stats.queue_us_max.load(Ordering::Relaxed),
             batch_hist: self.stats.hist.lock().unwrap().clone(),
+            cache_bytes: self.store.stats().bytes,
         }
     }
 
@@ -439,7 +453,7 @@ impl<'b> ServingEngine<'b> {
     /// logit buffers are reused across ticks, so a warmed tick's only
     /// allocations are the per-response logit vectors handed to clients.
     fn worker_loop(&self) -> Result<()> {
-        let step = self.backend.bind(&self.spec, &self.frozen)?;
+        let step = self.backend.bind_serve(&self.spec, &self.frozen, self.cfg.dtype)?;
         let (b, s, classes) = (self.cfg.max_batch, self.seq, self.cfg.classes);
         let mut tokens = vec![0i32; b * s];
         let mut logits = vec![0f32; b * classes];
@@ -483,7 +497,7 @@ impl<'b> ServingEngine<'b> {
                 let (head, tail) = tokens.split_at_mut(i * s);
                 tail[..s].copy_from_slice(&head[..s]);
             }
-            step.run_serve(&folded.pairs, &tokens, task as i32, &mut logits)?;
+            step.run_serve_packed(&folded.pairs, &tokens, task as i32, &mut logits)?;
             self.stats.batches.fetch_add(1, Ordering::Relaxed);
             self.stats.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
             self.stats.hist.lock().unwrap()[batch.len()] += 1;

@@ -563,7 +563,8 @@ pub fn report_json(engine: &ServingEngine, cfg: &LoadGenConfig, report: &LoadRep
                     Json::num(ecfg.batch_deadline.as_secs_f64() * 1e3),
                 ),
                 ("workers", Json::num(ecfg.workers as f64)),
-                ("cache_capacity", Json::num(ecfg.cache_capacity as f64)),
+                ("cache_capacity_bytes", Json::num(ecfg.cache_capacity_bytes as f64)),
+                ("serve_dtype", Json::str(ecfg.dtype.name())),
                 ("clients", Json::num(cfg.clients as f64)),
                 ("requests_per_client", Json::num(cfg.requests_per_client as f64)),
                 ("seed", Json::num(cfg.seed as f64)),
@@ -609,6 +610,7 @@ pub fn report_json(engine: &ServingEngine, cfg: &LoadGenConfig, report: &LoadRep
                 ("folds", Json::num(cache.folds as f64)),
                 ("evictions", Json::num(cache.evictions as f64)),
                 ("reloads", Json::num(cache.reloads as f64)),
+                ("resident_bytes", Json::num(cache.bytes as f64)),
                 (
                     "hit_rate",
                     Json::num(if lookups > 0 {

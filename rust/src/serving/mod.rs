@@ -11,12 +11,14 @@
 //!        → [BatchPolicy]     dynamic same-task batching (max_batch /
 //!                            batch-deadline tick, padding-free semantics:
 //!                            row bits never depend on batchmates)
-//!        → [AdapterStore]    per-task fold_for_serving cache — lazy fold,
-//!                            LRU eviction, generation counters, snapshot
+//!        → [AdapterStore]    per-task fold_for_serving cache — lazy fold +
+//!                            pack at the serve dtype, byte-budget LRU
+//!                            eviction, generation counters, snapshot
 //!                            reads through checkpoint hot-swap
-//!        → worker            Step::run_serve on the ref backend: the
+//!        → worker            Step::run_serve_packed on the ref backend: the
 //!                            cache-free inference forward + two folded
-//!                            GEMMs per adapted projection, zero-allocation
+//!                            GEMMs per adapted projection off pre-packed
+//!                            (optionally bf16/int8) panels, zero-allocation
 //!                            once warmed
 //!        → Response          per-request one-shot channel
 //! ```

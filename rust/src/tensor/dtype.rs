@@ -1,0 +1,275 @@
+//! Storage dtypes for the packed-operand seam (PR 7).
+//!
+//! The serving hot path is memory-bandwidth-bound: every tick streams the
+//! frozen packed-B panels and the folded adapter factors from RAM. The
+//! [`Dtype`] trait lets those *stored* operands shrink to bf16 (2 bytes)
+//! or int8-with-per-panel-scale (1 byte + 4 bytes per NR-panel) while the
+//! A-side activations and every accumulation chain stay f32 — the
+//! microkernel widens each stored element back to f32 (`decode`) before
+//! the multiply, so the k-ascending per-element accumulation order of the
+//! bit-determinism contract is untouched.
+//!
+//! Dtype is a property of a *packed panel*, chosen once at bind/fold time;
+//! nothing in the train path or the dense kernels changes. The f32
+//! instance is the identity encoding (copy in, copy out, scale ignored),
+//! which is what keeps the f32 packed path the bit-exact oracle: its
+//! `decode` compiles to a no-op and the generic kernels specialize to the
+//! exact pre-PR-7 instruction stream.
+//!
+//! Quantization error contract (pinned by the unit tests below and by the
+//! serving parity tests in `tests/serving.rs`):
+//!
+//! * **bf16** — round-to-nearest-even truncation of the top 16 bits; with
+//!   7 explicit mantissa bits the half-ulp error is at most 2⁻⁸ of the
+//!   element's magnitude. The per-panel scale is unused (always 1.0).
+//! * **int8** — symmetric per-panel scaling: `scale = max|panel| / 127`,
+//!   elements round to the nearest step, so `|decode(q) − v| ≤ scale / 2`
+//!   for every in-range element. A zero (or non-finite-max) panel encodes
+//!   with scale 1.0, mapping every finite element of an all-zero panel to
+//!   exactly 0.
+
+/// A storage dtype for packed GEMM operands. Implementations encode one
+/// NR-panel at a time ([`Dtype::quantize_panel`], which reports the panel's
+/// scale) and decode one element at a time inside the microkernel
+/// ([`Dtype::decode`]). All arithmetic downstream of `decode` is f32.
+///
+/// The `Default` bound doubles as the zero-initialization contract:
+/// `T::default()` must be the encoding of 0.0 and must be all-zero bytes
+/// (the aligned pack buffers are `alloc_zeroed`).
+pub trait Dtype: Copy + Send + Sync + std::fmt::Debug + Default + 'static {
+    /// Bytes per stored element (what the bandwidth telemetry counts).
+    const BYTES: usize;
+
+    /// Encode `src` into `dst` (same length), returning the panel scale to
+    /// pass back into [`Dtype::decode`] for every element of this panel.
+    fn quantize_panel(src: &[f32], dst: &mut [Self]) -> f32;
+
+    /// Widen one stored element back to f32 given its panel scale.
+    fn decode(self, scale: f32) -> f32;
+}
+
+impl Dtype for f32 {
+    const BYTES: usize = 4;
+
+    fn quantize_panel(src: &[f32], dst: &mut [f32]) -> f32 {
+        dst.copy_from_slice(src);
+        1.0
+    }
+
+    #[inline(always)]
+    fn decode(self, _scale: f32) -> f32 {
+        self
+    }
+}
+
+/// bfloat16: the top 16 bits of an f32 (1 sign, 8 exponent, 7 mantissa),
+/// converted with round-to-nearest-even. Same dynamic range as f32, ~2–3
+/// decimal digits of precision — the standard inference storage format.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Round-to-nearest-even truncation; NaN payloads are forced quiet so
+    /// the result is never an infinity-by-truncation.
+    pub fn from_f32(v: f32) -> Bf16 {
+        let bits = v.to_bits();
+        if v.is_nan() {
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let lsb = (bits >> 16) & 1;
+        Bf16(((bits + 0x7FFF + lsb) >> 16) as u16)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+impl Dtype for Bf16 {
+    const BYTES: usize = 2;
+
+    fn quantize_panel(src: &[f32], dst: &mut [Bf16]) -> f32 {
+        debug_assert_eq!(src.len(), dst.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = Bf16::from_f32(s);
+        }
+        1.0
+    }
+
+    #[inline(always)]
+    fn decode(self, _scale: f32) -> f32 {
+        self.to_f32()
+    }
+}
+
+impl Dtype for i8 {
+    const BYTES: usize = 1;
+
+    /// Symmetric per-panel quantization: `scale = max|panel| / 127`,
+    /// elements round to the nearest step and clamp to ±127 (the −128 code
+    /// is unused so the grid is symmetric). Degenerate panels (all zero,
+    /// or a non-finite max) take scale 1.0.
+    fn quantize_panel(src: &[f32], dst: &mut [i8]) -> f32 {
+        debug_assert_eq!(src.len(), dst.len());
+        let max = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if max.is_finite() && max > 0.0 { max / 127.0 } else { 1.0 };
+        let inv = 1.0 / scale;
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = (s * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+        scale
+    }
+
+    #[inline(always)]
+    fn decode(self, scale: f32) -> f32 {
+        self as f32 * scale
+    }
+}
+
+/// Runtime dtype selector: what `--serve-dtype` parses into and what the
+/// bind-time packed caches key on. Maps 1:1 onto the [`Dtype`] instances.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DtypeKind {
+    #[default]
+    F32,
+    Bf16,
+    I8,
+}
+
+impl DtypeKind {
+    /// Parse a CLI/metadata name. Accepts the canonical names only, so a
+    /// checkpoint written by a newer writer fails loudly rather than
+    /// silently serving the wrong precision.
+    pub fn from_name(name: &str) -> Option<DtypeKind> {
+        match name {
+            "f32" => Some(DtypeKind::F32),
+            "bf16" => Some(DtypeKind::Bf16),
+            "int8" => Some(DtypeKind::I8),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (round-trips through [`DtypeKind::from_name`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            DtypeKind::F32 => "f32",
+            DtypeKind::Bf16 => "bf16",
+            DtypeKind::I8 => "int8",
+        }
+    }
+
+    /// Bytes per stored element.
+    pub fn bytes(self) -> usize {
+        match self {
+            DtypeKind::F32 => f32::BYTES,
+            DtypeKind::Bf16 => Bf16::BYTES,
+            DtypeKind::I8 => i8::BYTES,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_panel(rng: &mut Pcg64, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, std);
+        v
+    }
+
+    #[test]
+    fn f32_roundtrip_is_identity() {
+        let mut rng = Pcg64::new(71);
+        let src = random_panel(&mut rng, 64, 3.0);
+        let mut dst = vec![0.0f32; 64];
+        let scale = f32::quantize_panel(&src, &mut dst);
+        assert_eq!(scale, 1.0);
+        for (&s, &d) in src.iter().zip(&dst) {
+            assert_eq!(s.to_bits(), d.decode(scale).to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_known_values_and_rne() {
+        assert_eq!(Bf16::from_f32(1.0).0, 0x3F80);
+        assert_eq!(Bf16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(Bf16::from_f32(0.0).0, 0x0000);
+        // Exactly-halfway values round to even: 1.0 + 2^-8 sits halfway
+        // between bf16 neighbours 1.0 (0x3F80, even) and 1.0078125
+        // (0x3F81, odd) and must land on the even one.
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(halfway).0, 0x3F80);
+        // Just above halfway rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(Bf16::from_f32(above).0, 0x3F81);
+        // NaN survives (quiet), never truncates to an infinity.
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn bf16_roundtrip_relative_error_bound() {
+        let mut rng = Pcg64::new(72);
+        for &std in &[0.02f32, 1.0, 750.0] {
+            let src = random_panel(&mut rng, 256, std);
+            let mut dst = vec![Bf16::default(); 256];
+            let scale = Bf16::quantize_panel(&src, &mut dst);
+            for (&s, &d) in src.iter().zip(&dst) {
+                let err = (d.decode(scale) - s).abs();
+                assert!(
+                    err <= s.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE,
+                    "bf16 {s} -> {} err {err}",
+                    d.decode(scale)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_half_step_bound() {
+        let mut rng = Pcg64::new(73);
+        for &std in &[0.005f32, 1.0, 40.0] {
+            let src = random_panel(&mut rng, 256, std);
+            let mut dst = vec![0i8; 256];
+            let scale = i8::quantize_panel(&src, &mut dst);
+            assert!(scale > 0.0 && scale.is_finite());
+            let max = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert!((scale - max / 127.0).abs() <= max * 1e-6);
+            for (&s, &q) in src.iter().zip(&dst) {
+                let err = (q.decode(scale) - s).abs();
+                // Nearest-step rounding: within half a quantization step
+                // (a hair of slack for the f32 divide/multiply round trip).
+                assert!(err <= scale * 0.5 + scale * 1e-5, "int8 {s} err {err} scale {scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_degenerate_panels() {
+        // All-zero panel: scale 1.0, every code 0.
+        let src = vec![0.0f32; 16];
+        let mut dst = vec![7i8; 16];
+        let scale = i8::quantize_panel(&src, &mut dst);
+        assert_eq!(scale, 1.0);
+        assert!(dst.iter().all(|&q| q == 0));
+        // The max element encodes to exactly ±127 and decodes to the max.
+        let src = vec![-4.0f32, 2.0, 4.0, 0.0];
+        let mut dst = vec![0i8; 4];
+        let scale = i8::quantize_panel(&src, &mut dst);
+        assert_eq!(dst[0], -127);
+        assert_eq!(dst[2], 127);
+        assert!((dst[2].decode(scale) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in [DtypeKind::F32, DtypeKind::Bf16, DtypeKind::I8] {
+            assert_eq!(DtypeKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(DtypeKind::from_name("fp16"), None);
+        assert_eq!(DtypeKind::F32.bytes(), 4);
+        assert_eq!(DtypeKind::Bf16.bytes(), 2);
+        assert_eq!(DtypeKind::I8.bytes(), 1);
+    }
+}

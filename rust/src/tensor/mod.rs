@@ -11,9 +11,11 @@
 //! crate-wide bit-determinism contract: thread count, arena mode, and
 //! packing change *where* work runs, never a single output bit.
 
+mod dtype;
 mod ops;
 mod workspace;
 
+pub use dtype::{Bf16, Dtype, DtypeKind};
 pub use ops::*;
 pub use workspace::{AlignedBuf, PackScratch, Workspace};
 

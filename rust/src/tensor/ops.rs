@@ -62,6 +62,7 @@
 //! The bench `hotpath_micro` §8 tracks per-shape GFLOP/s and the speedup
 //! over the retired PR 3 blocked kernel (`BENCH_pr4.json`).
 
+use super::dtype::{Bf16, Dtype, DtypeKind};
 use super::workspace::{AlignedBuf, PackScratch};
 use super::Tensor;
 use crate::util::threadpool::{gated_threads, scope_rows, SharedSliceMut};
@@ -98,6 +99,12 @@ const MIN_BAND_PANELS: usize = 2;
 /// loop instead — the per-element rounding chain, and therefore every
 /// output bit, is identical either way).
 const PACK_MIN_MACS: usize = 1 << 12;
+
+/// Source elements (k·n) above which [`pack_b`] bands its NR-panels across
+/// worker threads. Packing is pure bandwidth (~two touches per element),
+/// so the dispatch cost only amortizes on packs that stream at least a few
+/// hundred KB; below that the serial loop wins.
+const PACK_PAR_MIN_ELEMS: usize = 1 << 16;
 
 /// Blocked-transpose tile edge: a TB×TB f32 tile (4 KB) of source plus its
 /// transposed destination fit L1 together.
@@ -431,21 +438,59 @@ pub fn t_matmul_into_local(
 /// microkernel consumes them with the same k-ascending per-element chain,
 /// and sub-[`PACK_MIN_MACS`] products run a scalar loop over the panels
 /// whose per-element chain matches `gemm_small` exactly.
+///
+/// Generic over the storage [`Dtype`] (PR 7): a quantized pack stores the
+/// panels as [`Bf16`] or `i8` (one f32 scale per NR-panel, symmetric), and
+/// the kernels widen each element back to f32 right before the multiply —
+/// accumulation is always f32. The default `PackedB<f32>` is the identity
+/// encoding and stays the bit-exact oracle.
 #[derive(Debug)]
-pub struct PackedB {
+pub struct PackedB<T: Dtype = f32> {
     k: usize,
     n: usize,
-    buf: AlignedBuf,
+    buf: AlignedBuf<T>,
+    /// One scale per NR-panel for scaled encodings (`i8`); empty for the
+    /// scale-free encodings (`f32`, [`Bf16`]), which read as 1.0.
+    scales: Vec<f32>,
 }
 
-impl PackedB {
-    /// Pack a row-major `(k × n)` operand (the forward `x·W` orientation).
-    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB {
+impl PackedB<f32> {
+    /// Pack a row-major `(k × n)` operand (the forward `x·W` orientation)
+    /// at full precision — byte-for-byte the per-call pack's panels.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB<f32> {
         assert_eq!(b.len(), k * n, "PackedB::pack: {} elements for ({k} x {n})", b.len());
         let len = n.div_ceil(NR) * NR * k;
         let mut buf = AlignedBuf::new();
-        pack_b(Orient::Nn, b, buf.slice_to(len), k, n);
-        PackedB { k, n, buf }
+        pack_b(Orient::Nn, b, buf.slice_to(len), k, n, 1);
+        PackedB { k, n, buf, scales: Vec::new() }
+    }
+}
+
+impl<T: Dtype> PackedB<T> {
+    /// Pack a row-major `(k × n)` operand, encoding each zero-padded
+    /// NR-panel through [`Dtype::quantize_panel`]. For `T = f32` this
+    /// produces the same panel values as [`PackedB::pack`].
+    pub fn pack_dtype(b: &[f32], k: usize, n: usize) -> PackedB<T> {
+        assert_eq!(b.len(), k * n, "PackedB::pack_dtype: {} elements for ({k} x {n})", b.len());
+        let np = n.div_ceil(NR);
+        let len = np * NR * k;
+        let mut buf = AlignedBuf::new();
+        let dst = buf.slice_to(len);
+        let mut panel = vec![0.0f32; k * NR];
+        let mut scales = Vec::with_capacity(np);
+        for q in 0..np {
+            let j0 = q * NR;
+            let w = NR.min(n - j0);
+            for kk in 0..k {
+                let row = &mut panel[kk * NR..(kk + 1) * NR];
+                row[..w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+                for v in &mut row[w..] {
+                    *v = 0.0;
+                }
+            }
+            scales.push(T::quantize_panel(&panel, &mut dst[q * k * NR..(q + 1) * k * NR]));
+        }
+        PackedB { k, n, buf, scales }
     }
 
     /// Inner (k) dimension of the logical operand.
@@ -458,24 +503,88 @@ impl PackedB {
         self.n
     }
 
-    /// Bytes held by the panel copy (bind-time memory telemetry).
+    /// Bytes held by the panel copy plus its per-panel scales (bind-time
+    /// memory telemetry, and the serving bandwidth accounting).
     pub fn panel_bytes(&self) -> usize {
-        self.n.div_ceil(NR) * NR * self.k * std::mem::size_of::<f32>()
+        self.n.div_ceil(NR) * NR * self.k * T::BYTES
+            + self.scales.len() * std::mem::size_of::<f32>()
     }
 
-    fn panels(&self) -> &[f32] {
+    fn panels(&self) -> &[T] {
         self.buf.as_slice(self.n.div_ceil(NR) * NR * self.k)
+    }
+}
+
+/// A [`PackedB`] of runtime-selected storage dtype: what the bind-time
+/// frozen-panel cache and the folded-adapter store hold when the dtype is
+/// a `--serve-dtype` config value rather than a compile-time parameter.
+/// [`matmul_into_prepacked_any`] dispatches to the monomorphic kernels.
+#[derive(Debug)]
+pub enum PackedBAny {
+    F32(PackedB<f32>),
+    Bf16(PackedB<Bf16>),
+    I8(PackedB<i8>),
+}
+
+impl PackedBAny {
+    /// Pack a row-major `(k × n)` operand at the requested dtype. The F32
+    /// variant routes through [`PackedB::pack`], so an f32 `PackedBAny` is
+    /// byte-identical to the pre-dtype pack.
+    pub fn pack(b: &[f32], k: usize, n: usize, kind: DtypeKind) -> PackedBAny {
+        match kind {
+            DtypeKind::F32 => PackedBAny::F32(PackedB::pack(b, k, n)),
+            DtypeKind::Bf16 => PackedBAny::Bf16(PackedB::pack_dtype(b, k, n)),
+            DtypeKind::I8 => PackedBAny::I8(PackedB::pack_dtype(b, k, n)),
+        }
+    }
+
+    /// Storage dtype of the packed panels.
+    pub fn kind(&self) -> DtypeKind {
+        match self {
+            PackedBAny::F32(_) => DtypeKind::F32,
+            PackedBAny::Bf16(_) => DtypeKind::Bf16,
+            PackedBAny::I8(_) => DtypeKind::I8,
+        }
+    }
+
+    /// Inner (k) dimension of the logical operand.
+    pub fn k(&self) -> usize {
+        match self {
+            PackedBAny::F32(p) => p.k(),
+            PackedBAny::Bf16(p) => p.k(),
+            PackedBAny::I8(p) => p.k(),
+        }
+    }
+
+    /// Output-column (n) dimension of the logical operand.
+    pub fn n(&self) -> usize {
+        match self {
+            PackedBAny::F32(p) => p.n(),
+            PackedBAny::Bf16(p) => p.n(),
+            PackedBAny::I8(p) => p.n(),
+        }
+    }
+
+    /// Bytes held by the packed panels + scales — what a serving tick
+    /// streams for this operand.
+    pub fn panel_bytes(&self) -> usize {
+        match self {
+            PackedBAny::F32(p) => p.panel_bytes(),
+            PackedBAny::Bf16(p) => p.panel_bytes(),
+            PackedBAny::I8(p) => p.panel_bytes(),
+        }
     }
 }
 
 /// [`matmul_into`] against a [`PackedB`]: `C (m×n) += A (m×k) · B`, with
 /// the per-call B pack skipped. Accumulates into C like every kernel in
-/// the family, and is bit-identical to the on-the-fly path for every shape
-/// and thread count (pinned by `prepacked_b_is_bit_identical` below and by
-/// `tests/gemm_props.rs`).
-pub fn matmul_into_prepacked(
+/// the family; the `f32` instantiation is bit-identical to the on-the-fly
+/// path for every shape and thread count (pinned by
+/// `prepacked_b_is_bit_identical` below and by `tests/gemm_props.rs`),
+/// quantized instantiations decode per element and accumulate in f32.
+pub fn matmul_into_prepacked<T: Dtype>(
     a: &[f32],
-    bp: &PackedB,
+    bp: &PackedB<T>,
     c: &mut [f32],
     m: usize,
     threads: usize,
@@ -488,26 +597,53 @@ pub fn matmul_into_prepacked(
         return;
     }
     if m * k * n < PACK_MIN_MACS {
-        return gemm_small_panels(a, bp.panels(), c, m, k, n);
+        return gemm_small_panels(a, bp.panels(), &bp.scales, c, m, k, n);
     }
     // Only the A-side scratch is needed; request a zero-width B pack.
     let (apack, _) = packs.for_shape(m, k, 0);
-    gemm_from_panels(Orient::Nn, a, bp.panels(), apack, c, m, k, n, threads);
+    gemm_from_panels(Orient::Nn, a, bp.panels(), &bp.scales, apack, c, m, k, n, threads);
+}
+
+/// [`matmul_into_prepacked`] for a runtime-dtyped operand: one match, then
+/// the monomorphic kernel. The F32 arm is the bit-exact path.
+pub fn matmul_into_prepacked_any(
+    a: &[f32],
+    bp: &PackedBAny,
+    c: &mut [f32],
+    m: usize,
+    threads: usize,
+    packs: &mut PackScratch,
+) {
+    match bp {
+        PackedBAny::F32(p) => matmul_into_prepacked(a, p, c, m, threads, packs),
+        PackedBAny::Bf16(p) => matmul_into_prepacked(a, p, c, m, threads, packs),
+        PackedBAny::I8(p) => matmul_into_prepacked(a, p, c, m, threads, packs),
+    }
 }
 
 /// Serial small-product path reading B from its NR-panels: every output
 /// element accumulates its k products in ascending order — exactly the
 /// chain of [`gemm_small`]'s Nn arm, so prepacked small products keep the
-/// family-wide bit-identity contract.
-fn gemm_small_panels(a: &[f32], bp: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+/// family-wide bit-identity contract (at f32; quantized panels decode per
+/// element first, accumulation unchanged).
+fn gemm_small_panels<T: Dtype>(
+    a: &[f32],
+    bp: &[T],
+    scales: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for (kk, &aik) in arow.iter().enumerate() {
             for (q, cchunk) in crow.chunks_mut(NR).enumerate() {
+                let scale = scales.get(q).copied().unwrap_or(1.0);
                 let brow = &bp[q * k * NR + kk * NR..q * k * NR + (kk + 1) * NR];
                 for (cv, &bv) in cchunk.iter_mut().zip(brow) {
-                    *cv += aik * bv;
+                    *cv += aik * bv.decode(scale);
                 }
             }
         }
@@ -535,19 +671,22 @@ fn gemm(
         return gemm_small(orient, a, b, c, m, k, n);
     }
     let (apack, bpack) = packs.for_shape(m, k, n);
-    pack_b(orient, b, bpack, k, n);
-    gemm_from_panels(orient, a, bpack, apack, c, m, k, n, threads);
+    pack_b(orient, b, bpack, k, n, threads);
+    gemm_from_panels(orient, a, bpack, &[], apack, c, m, k, n, threads);
 }
 
 /// The banding + microkernel body shared by the pack-on-call path and the
 /// prepacked-B path ([`matmul_into_prepacked`]). `orient` governs only how
 /// the A packer reads its source; `bp` already holds the NR-panels of the
-/// logical `(k × n)` B.
+/// logical `(k × n)` B at storage dtype `T` with `scales` holding one f32
+/// per panel for scaled encodings (empty reads as 1.0 — the per-call f32
+/// path and the scale-free dtypes).
 #[allow(clippy::too_many_arguments)]
-fn gemm_from_panels(
+fn gemm_from_panels<T: Dtype>(
     orient: Orient,
     a: &[f32],
-    bp: &[f32],
+    bp: &[T],
+    scales: &[f32],
     apack: &mut [f32],
     c: &mut [f32],
     m: usize,
@@ -576,13 +715,14 @@ fn gemm_from_panels(
             let kc = KC.min(k - k0);
             for q in 0..np {
                 let bpanel = &bp[q * k * NR + k0 * NR..q * k * NR + (k0 + kc) * NR];
+                let scale = scales.get(q).copied().unwrap_or(1.0);
                 let nr_eff = NR.min(n - q * NR);
                 for p in pr.clone() {
                     let po = (p - pr.start) * k * MR;
                     let apanel = &a_band[po + k0 * MR..po + (k0 + kc) * MR];
                     let mr_eff = MR.min(m - p * MR);
                     let coff = (p * MR - row0) * n + q * NR;
-                    micro_tile(apanel, bpanel, &mut c_band[coff..], n, mr_eff, nr_eff);
+                    micro_tile(apanel, bpanel, scale, &mut c_band[coff..], n, mr_eff, nr_eff);
                 }
             }
             k0 += kc;
@@ -680,10 +820,36 @@ fn pack_a(orient: Orient, a: &[f32], dst: &mut [f32], panels: Range<usize>, m: u
 }
 
 /// Pack all NR-wide B panels of the logical (k × n) B into `bpack`; columns
-/// past `n` pad with zeros.
-fn pack_b(orient: Orient, b: &[f32], bpack: &mut [f32], k: usize, n: usize) {
+/// past `n` pad with zeros. Panels are independent (each reads its own
+/// column strip, writes its own contiguous `k·NR` chunk), so above
+/// [`PACK_PAR_MIN_ELEMS`] source elements the panel range is banded across
+/// `threads` workers — pure data movement into disjoint destinations, so
+/// the packed bytes (and therefore every downstream output bit) are
+/// identical at any thread count.
+fn pack_b(orient: Orient, b: &[f32], bpack: &mut [f32], k: usize, n: usize, threads: usize) {
     let np = n.div_ceil(NR);
     debug_assert_eq!(bpack.len(), np * NR * k);
+    let th = gated_threads(threads, k * n, PACK_PAR_MIN_ELEMS);
+    let bs = SharedSliceMut::new(bpack);
+    scope_rows(th, np, MIN_BAND_PANELS, |qr| {
+        // SAFETY: panel bands are disjoint — exactly one worker writes
+        // this contiguous run of packed panels.
+        let band = unsafe { bs.range_mut(qr.start * k * NR, qr.end * k * NR) };
+        pack_b_panels(orient, b, band, qr, k, n);
+    });
+}
+
+/// Pack the B panels of `panels` (NR columns each) into `dst` — the serial
+/// per-band body of [`pack_b`].
+fn pack_b_panels(
+    orient: Orient,
+    b: &[f32],
+    dst: &mut [f32],
+    panels: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(dst.len(), (panels.end - panels.start) * k * NR);
     match orient {
         // B is (k × n) row-major: fill panel-major (q outer) so every
         // write is sequential within one panel buffer. The reads stride by
@@ -693,8 +859,8 @@ fn pack_b(orient: Orient, b: &[f32], bpack: &mut [f32], k: usize, n: usize) {
         // write streams alive at once and thrash wide-n packs (MLP f,
         // vocab-sized GEMMs).
         Orient::Nn | Orient::Tn => {
-            for (q, dst_q) in bpack.chunks_exact_mut(k * NR).enumerate() {
-                let j0 = q * NR;
+            for (qi, dst_q) in dst.chunks_exact_mut(k * NR).enumerate() {
+                let j0 = (panels.start + qi) * NR;
                 let w = NR.min(n - j0);
                 for kk in 0..k {
                     let dst = &mut dst_q[kk * NR..(kk + 1) * NR];
@@ -709,9 +875,9 @@ fn pack_b(orient: Orient, b: &[f32], bpack: &mut [f32], k: usize, n: usize) {
         // column j is a contiguous source row, scattered NR-strided into
         // its panel.
         Orient::Nt => {
-            for (q, dst_q) in bpack.chunks_exact_mut(k * NR).enumerate() {
+            for (qi, dst_q) in dst.chunks_exact_mut(k * NR).enumerate() {
                 for j in 0..NR {
-                    let row = q * NR + j;
+                    let row = (panels.start + qi) * NR + j;
                     if row < n {
                         for (kk, &v) in b[row * k..(row + 1) * k].iter().enumerate() {
                             dst_q[kk * NR + j] = v;
@@ -731,10 +897,14 @@ fn pack_b(orient: Orient, b: &[f32], bpack: &mut [f32], k: usize, n: usize) {
 /// register-tiled inner kernel, store C. `c` starts at the tile's top-left
 /// element with row stride `ldc`; only the `mr_eff × nr_eff` valid region
 /// is loaded and stored (padded panel lanes accumulate zeros into dead
-/// accumulator slots).
-fn micro_tile(
+/// accumulator slots). The B panel is stored at dtype `T` and widened to
+/// f32 per element (`scale` is this panel's quantization scale); for
+/// `T = f32` the decode is the identity and the kernel is exactly the
+/// pre-dtype instruction stream.
+fn micro_tile<T: Dtype>(
     apanel: &[f32],
-    bpanel: &[f32],
+    bpanel: &[T],
+    scale: f32,
     c: &mut [f32],
     ldc: usize,
     mr_eff: usize,
@@ -746,12 +916,17 @@ fn micro_tile(
     }
     // The register-tiled inner loop: one contiguous MR-chunk of A and one
     // NR-chunk of B per k step; lanes span columns, each (i, j) keeps a
-    // single k-ascending chain.
+    // single k-ascending chain. Decode happens before the multiply, so
+    // every product and every add round in f32.
     for (av, bv) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
         let av: &[f32; MR] = av.try_into().expect("MR chunk");
-        let bv: &[f32; NR] = bv.try_into().expect("NR chunk");
+        let bv: &[T; NR] = bv.try_into().expect("NR chunk");
+        let mut bw = [0.0f32; NR];
+        for (w, &bj) in bw.iter_mut().zip(bv) {
+            *w = bj.decode(scale);
+        }
         for (accrow, &ai) in acc.iter_mut().zip(av) {
-            for (slot, &bj) in accrow.iter_mut().zip(bv) {
+            for (slot, &bj) in accrow.iter_mut().zip(&bw) {
                 *slot += ai * bj;
             }
         }
@@ -1004,6 +1179,100 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn parallel_pack_b_is_bit_identical() {
+        // pack_b bands NR-panels across workers above PACK_PAR_MIN_ELEMS
+        // source elements; it is pure data movement, so 1-thread and
+        // 4-thread GEMMs must agree bit-for-bit on both sides of the
+        // banding threshold.
+        let mut rng = Pcg64::new(23);
+        let mut packs = PackScratch::new();
+        for &(m, k, n) in &[
+            (40usize, 260usize, 300usize), // k·n ≈ 78k > PACK_PAR_MIN_ELEMS: banded pack
+            (40, 60, 70),                  // under the threshold: serial pack
+        ] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let mut c1 = vec![0.0f32; m * n];
+            matmul_into(a.data(), b.data(), &mut c1, m, k, n, 1, &mut packs);
+            let mut c4 = vec![0.0f32; m * n];
+            matmul_into(a.data(), b.data(), &mut c4, m, k, n, 4, &mut packs);
+            for (x, y) in c1.iter().zip(&c4) {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn dtyped_prepacked_f32_variant_is_bit_identical() {
+        // PackedBAny::F32 must route through the exact pre-dtype pack and
+        // kernel: same bits as the per-call path.
+        let mut rng = Pcg64::new(29);
+        let mut packs = PackScratch::new();
+        let (m, k, n) = (37usize, 64usize, 50usize);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bp = PackedBAny::pack(b.data(), k, n, DtypeKind::F32);
+        assert_eq!(bp.kind(), DtypeKind::F32);
+        assert_eq!((bp.k(), bp.n()), (k, n));
+        let mut c0 = vec![0.0f32; m * n];
+        matmul_into(a.data(), b.data(), &mut c0, m, k, n, 1, &mut packs);
+        let mut c1 = vec![0.0f32; m * n];
+        matmul_into_prepacked_any(a.data(), &bp, &mut c1, m, 1, &mut packs);
+        for (x, y) in c0.iter().zip(&c1) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn quantized_prepacked_matches_f32_within_tolerance() {
+        // bf16 / int8 packed operands decode per element and accumulate in
+        // f32; outputs stay within the dtype's quantization tolerance of
+        // the f32 product on both sides of the small-product threshold and
+        // at 1 and 4 threads.
+        let mut rng = Pcg64::new(31);
+        let mut packs = PackScratch::new();
+        for &(m, k, n) in &[(3usize, 5usize, 7usize), (37, 129, 21), (64, 64, 64)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let mut want = vec![0.0f32; m * n];
+            matmul_into(a.data(), b.data(), &mut want, m, k, n, 1, &mut packs);
+            for (kind, tol) in [(DtypeKind::Bf16, 5e-2f32), (DtypeKind::I8, 2e-1)] {
+                let bp = PackedBAny::pack(b.data(), k, n, kind);
+                assert_eq!(bp.kind(), kind);
+                // Quantized panels hold fewer bytes than the f32 pack.
+                let f32_bytes = PackedB::pack(b.data(), k, n).panel_bytes();
+                assert!(bp.panel_bytes() < f32_bytes, "{kind:?} ({m},{k},{n})");
+                for threads in [1usize, 4] {
+                    let mut got = vec![0.0f32; m * n];
+                    matmul_into_prepacked_any(a.data(), &bp, &mut got, m, threads, &mut packs);
+                    // k-length dot products of N(0,1) data have stddev √k;
+                    // normalize the error bound by that.
+                    let denom = (k as f32).sqrt();
+                    for (g, w) in got.iter().zip(&want) {
+                        assert!(
+                            (g - w).abs() / denom < tol,
+                            "{kind:?} ({m},{k},{n}) t={threads}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_pack_bytes_shrink_with_dtype() {
+        let (k, n) = (64usize, 48usize);
+        let b = vec![0.5f32; k * n];
+        let f32b = PackedBAny::pack(&b, k, n, DtypeKind::F32).panel_bytes();
+        let bf16b = PackedBAny::pack(&b, k, n, DtypeKind::Bf16).panel_bytes();
+        let i8b = PackedBAny::pack(&b, k, n, DtypeKind::I8).panel_bytes();
+        assert!(bf16b < f32b, "bf16 {bf16b} vs f32 {f32b}");
+        assert!(i8b < bf16b, "int8 {i8b} vs bf16 {bf16b}");
+        // int8 carries one f32 scale per NR-panel on top of 1-byte elems.
+        assert_eq!(i8b, n.div_ceil(NR) * NR * k + n.div_ceil(NR) * 4);
     }
 
     #[test]

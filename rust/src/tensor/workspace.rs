@@ -46,90 +46,47 @@ const MAX_NDIM: usize = 4;
 // Aligned scratch storage for the GEMM pack panels.
 // ---------------------------------------------------------------------------
 
-/// A grow-only f32 scratch buffer whose storage is always **64-byte
-/// aligned** ([`AlignedBuf::ALIGN`]). `Vec<f32>` cannot guarantee more than
-/// the element alignment, so the pack buffers of the packed GEMM kernels —
+/// A grow-only scratch buffer whose storage is always **64-byte aligned**
+/// (64 bytes, `AlignedBuf::ALIGN`). `Vec<T>` cannot guarantee more than the
+/// element alignment, so the pack buffers of the packed GEMM kernels —
 /// which want cache-line-aligned, SIMD-friendly panels — use this type
 /// instead. Growth discards contents (it is scratch, fully rewritten by
 /// every pack) and the capacity never shrinks, so steady-state reuse
 /// performs no heap allocation.
+///
+/// Generic over the stored element (PR 7): pack scratch stays
+/// `AlignedBuf<f32>` (the default), while bind-time packed panels store
+/// any [`crate::tensor::Dtype`]. The element must be `Copy` and treat
+/// all-zero bytes as a valid value (`alloc_zeroed` is the initializer) —
+/// true for `f32`, [`crate::tensor::Bf16`] and `i8`.
 #[derive(Debug)]
-pub struct AlignedBuf {
-    ptr: *mut f32,
+pub struct AlignedBuf<T = f32> {
+    ptr: *mut T,
     cap: usize,
 }
 
 // SAFETY: AlignedBuf is an owning handle to a unique allocation; mutation
-// goes through `&mut self`, so moving the handle across threads is sound.
-unsafe impl Send for AlignedBuf {}
+// goes through `&mut self`, so moving the handle across threads is sound
+// whenever the element itself is Send.
+unsafe impl<T: Send> Send for AlignedBuf<T> {}
 
 // SAFETY: shared references only expose reads (`as_slice` / `capacity` /
 // `as_ptr`); every write path takes `&mut self`, so `&AlignedBuf` can be
-// shared across threads like any read-only slice.
-unsafe impl Sync for AlignedBuf {}
+// shared across threads like any read-only slice of a Sync element.
+unsafe impl<T: Sync> Sync for AlignedBuf<T> {}
 
-impl AlignedBuf {
+impl<T> AlignedBuf<T> {
     /// Alignment (bytes) of every allocation: one x86 cache line, and a
     /// superset of every vector-register alignment the kernels could want.
     pub const ALIGN: usize = 64;
 
-    pub fn new() -> AlignedBuf {
+    pub fn new() -> AlignedBuf<T> {
         AlignedBuf { ptr: std::ptr::null_mut(), cap: 0 }
     }
 
     fn layout(cap: usize) -> Layout {
-        Layout::from_size_align(cap * std::mem::size_of::<f32>(), Self::ALIGN)
+        Layout::from_size_align(cap * std::mem::size_of::<T>(), Self::ALIGN)
             .expect("aligned-buffer layout")
-    }
-
-    /// Current capacity in f32 elements.
-    pub fn capacity(&self) -> usize {
-        self.cap
-    }
-
-    /// Storage pointer (for alignment assertions; null while empty).
-    pub fn as_ptr(&self) -> *const f32 {
-        self.ptr
-    }
-
-    /// Read-only view of the first `n` elements (`n` must be within the
-    /// current capacity). Storage is zero-initialized at allocation and
-    /// only ever written through `slice_to`, so the view is always
-    /// initialized. This is what lets a pre-packed GEMM operand
-    /// ([`crate::tensor::PackedB`]) be *shared* across worker bands: reads
-    /// need only `&self`.
-    pub fn as_slice(&self, n: usize) -> &[f32] {
-        if n == 0 {
-            return &[];
-        }
-        assert!(n <= self.cap, "as_slice({n}) beyond capacity {}", self.cap);
-        // SAFETY: `ptr` is a live allocation of `cap >= n` initialized f32s;
-        // shared borrows of self forbid concurrent mutation.
-        unsafe { std::slice::from_raw_parts(self.ptr, n) }
-    }
-
-    /// Mutable view of the first `n` elements, growing (re-allocating
-    /// aligned) when `n` exceeds the capacity. Contents are unspecified
-    /// after growth — callers fully overwrite the region they use.
-    pub fn slice_to(&mut self, n: usize) -> &mut [f32] {
-        if n == 0 {
-            return &mut [];
-        }
-        if n > self.cap {
-            self.grow(n);
-        }
-        // SAFETY: `ptr` is a live allocation of `cap >= n` f32s (zeroed at
-        // allocation time, hence initialized), uniquely borrowed via &mut.
-        unsafe { std::slice::from_raw_parts_mut(self.ptr, n) }
-    }
-
-    fn grow(&mut self, n: usize) {
-        // SAFETY: the layout has non-zero size (n > 0 checked by callers).
-        let fresh = unsafe { std::alloc::alloc_zeroed(Self::layout(n)) } as *mut f32;
-        assert!(!fresh.is_null(), "aligned pack-buffer allocation failed ({n} f32s)");
-        self.release();
-        self.ptr = fresh;
-        self.cap = n;
     }
 
     fn release(&mut self) {
@@ -142,13 +99,68 @@ impl AlignedBuf {
     }
 }
 
-impl Default for AlignedBuf {
+impl<T: Copy> AlignedBuf<T> {
+
+    /// Current capacity in elements.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Storage pointer (for alignment assertions; null while empty).
+    pub fn as_ptr(&self) -> *const T {
+        self.ptr
+    }
+
+    /// Read-only view of the first `n` elements (`n` must be within the
+    /// current capacity). Storage is zero-initialized at allocation and
+    /// only ever written through `slice_to`, so the view is always
+    /// initialized. This is what lets a pre-packed GEMM operand
+    /// ([`crate::tensor::PackedB`]) be *shared* across worker bands: reads
+    /// need only `&self`.
+    pub fn as_slice(&self, n: usize) -> &[T] {
+        if n == 0 {
+            return &[];
+        }
+        assert!(n <= self.cap, "as_slice({n}) beyond capacity {}", self.cap);
+        // SAFETY: `ptr` is a live allocation of `cap >= n` initialized
+        // elements; shared borrows of self forbid concurrent mutation.
+        unsafe { std::slice::from_raw_parts(self.ptr, n) }
+    }
+
+    /// Mutable view of the first `n` elements, growing (re-allocating
+    /// aligned) when `n` exceeds the capacity. Contents are unspecified
+    /// after growth — callers fully overwrite the region they use.
+    pub fn slice_to(&mut self, n: usize) -> &mut [T] {
+        if n == 0 {
+            return &mut [];
+        }
+        if n > self.cap {
+            self.grow(n);
+        }
+        // SAFETY: `ptr` is a live allocation of `cap >= n` elements (zeroed
+        // at allocation time, hence initialized — zero bytes are a valid
+        // value by the type's contract), uniquely borrowed via &mut.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, n) }
+    }
+
+    fn grow(&mut self, n: usize) {
+        // SAFETY: the layout has non-zero size (n > 0 checked by callers,
+        // and the stored dtypes are never zero-sized).
+        let fresh = unsafe { std::alloc::alloc_zeroed(Self::layout(n)) } as *mut T;
+        assert!(!fresh.is_null(), "aligned pack-buffer allocation failed ({n} elements)");
+        self.release();
+        self.ptr = fresh;
+        self.cap = n;
+    }
+}
+
+impl<T> Default for AlignedBuf<T> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl Drop for AlignedBuf {
+impl<T> Drop for AlignedBuf<T> {
     fn drop(&mut self) {
         self.release();
     }
@@ -373,10 +385,10 @@ mod tests {
 
     fn assert_aligned(p: *const f32, what: &str) {
         assert_eq!(
-            p as usize % AlignedBuf::ALIGN,
+            p as usize % AlignedBuf::<f32>::ALIGN,
             0,
             "{what}: pointer {p:?} not {}-byte aligned",
-            AlignedBuf::ALIGN
+            AlignedBuf::<f32>::ALIGN
         );
     }
 
@@ -420,7 +432,7 @@ mod tests {
         assert_eq!(buf.capacity(), 0);
         assert!(buf.slice_to(0).is_empty());
         let first = buf.slice_to(7).as_ptr() as usize;
-        assert_eq!(first % AlignedBuf::ALIGN, 0);
+        assert_eq!(first % AlignedBuf::<f32>::ALIGN, 0);
         assert_eq!(buf.capacity(), 7);
         // Fresh storage is zero-initialized.
         assert!(buf.slice_to(7).iter().all(|&v| v == 0.0));
@@ -432,6 +444,6 @@ mod tests {
         assert!(buf.as_slice(0).is_empty());
         buf.slice_to(1000);
         assert_eq!(buf.capacity(), 1000);
-        assert_eq!(buf.slice_to(1000).as_ptr() as usize % AlignedBuf::ALIGN, 0);
+        assert_eq!(buf.slice_to(1000).as_ptr() as usize % AlignedBuf::<f32>::ALIGN, 0);
     }
 }

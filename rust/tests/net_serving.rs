@@ -19,6 +19,7 @@ use metatt::runtime::{assemble_frozen, ArtifactSpec, Backend, RefBackend, StepKi
 use metatt::serving::{
     adapter_spec_for, serve_net, EngineConfig, NetClient, ServingEngine, WireStatus,
 };
+use metatt::tensor::DtypeKind;
 use metatt::tt::{CoreInit, InitStrategy, MetaTt, MetaTtKind};
 use metatt::util::rng::Pcg64;
 use std::io::{Read, Write};
@@ -43,7 +44,8 @@ fn engine_cfg(workers: usize, max_batch: usize) -> EngineConfig {
         batch_deadline: Duration::from_millis(1),
         queue_capacity: 64,
         workers,
-        cache_capacity: TASKS,
+        cache_capacity_bytes: 64 << 20,
+        dtype: DtypeKind::F32,
     }
 }
 

@@ -28,6 +28,7 @@ use metatt::serving::{
     adapter_spec_for, metatt_from_tensors, request_stream, EngineConfig, LoadGenConfig,
     Response, ResponseStatus, ServingEngine,
 };
+use metatt::tensor::DtypeKind;
 use metatt::tt::{CoreInit, InitStrategy, MetaTt, MetaTtKind};
 use metatt::util::rng::Pcg64;
 use std::sync::Arc;
@@ -49,8 +50,26 @@ fn engine_cfg(workers: usize, max_batch: usize) -> EngineConfig {
         batch_deadline: Duration::from_millis(1),
         queue_capacity: 128,
         workers,
-        cache_capacity: TASKS,
+        cache_capacity_bytes: 64 << 20,
+        dtype: DtypeKind::F32,
     }
+}
+
+/// `engine_cfg` with the adapter family and serving dtype swapped out —
+/// the quantized-parity tests sweep both axes.
+fn cfg_for(kind: MetaTtKind, dtype: DtypeKind) -> EngineConfig {
+    EngineConfig {
+        adapter: AdapterKind::MetaTt(kind),
+        dtype,
+        ..engine_cfg(2, 4)
+    }
+}
+
+/// A deterministic non-zero adapter state for an arbitrary TT family.
+fn tt_for(kind: MetaTtKind, seed: u64) -> MetaTt {
+    let spec = adapter_spec_for(&cfg_for(kind, DtypeKind::F32));
+    let init = InitStrategy { cores: vec![CoreInit::Normal; kind.order()] };
+    spec.build_metatt_with(&mut Pcg64::new(seed), Some(&init))
 }
 
 /// A deterministic non-zero adapter state for the test config.
@@ -223,6 +242,7 @@ fn engine_serves_state_from_a_v2_checkpoint_and_hot_swaps_generations() {
         tasks: TASKS,
         alpha: ALPHA,
         model: "tiny".into(),
+        dtype: "f32".into(),
     };
     let path = std::env::temp_dir().join("metatt_serving_test_adapter.bin");
     checkpoint::save_with_meta(&path, &meta, &named).unwrap();
@@ -448,6 +468,71 @@ fn full_queue_rejects_open_loop_admission_and_counts_it() {
     let stats = engine.stats();
     assert_eq!(stats.rejected, 1);
     assert_eq!(stats.requests, 0);
+}
+
+#[test]
+fn quantized_serving_tracks_f32_for_every_family_and_task() {
+    // Quantized binds store the packed frozen panels AND the folded
+    // adapter factors at reduced precision, so this is a tolerance
+    // comparison against the f32 engine (which itself is pinned
+    // bit-identical to the dense oracle above). Both engines replay the
+    // same deterministic stream, which covers every task index.
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let stream = demo_stream(24);
+    for task in 0..TASKS {
+        assert!(
+            stream.iter().any(|(t, _)| *t == task),
+            "seeded stream must exercise task {task}"
+        );
+    }
+    for kind in [MetaTtKind::FourD, MetaTtKind::FourPlusOneD, MetaTtKind::FiveD] {
+        let tt = tt_for(kind, 11);
+        let baseline =
+            serve_stream(&backend, cfg_for(kind, DtypeKind::F32), tt.clone(), &stream);
+        for (dtype, tol) in [(DtypeKind::Bf16, 5e-2f32), (DtypeKind::I8, 2.5e-1f32)] {
+            let got = serve_stream(&backend, cfg_for(kind, dtype), tt.clone(), &stream);
+            assert_eq!(got.len(), baseline.len());
+            for (q, f) in got.iter().zip(&baseline) {
+                assert_eq!(q.task, f.task);
+                assert_eq!(q.logits.len(), f.logits.len());
+                for (c, (&a, &b)) in q.logits.iter().zip(&f.logits).enumerate() {
+                    let scale = b.abs().max(1.0);
+                    assert!(
+                        ((a - b) / scale).abs() < tol,
+                        "{} task {} class {c}: {} logit {a} vs f32 {b}",
+                        kind.name(),
+                        q.task,
+                        dtype.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_serving_is_unchanged_by_the_dtype_seam() {
+    // The engine's f32 path routes through the same packers and kernels
+    // as before the dtype refactor; a quantized engine must answer with
+    // DIFFERENT bits (otherwise the dtype plumbing is a no-op).
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let tt = demo_tt(5);
+    let stream = demo_stream(8);
+    let f32_resp =
+        serve_stream(&backend, cfg_for(MetaTtKind::FourPlusOneD, DtypeKind::F32), tt.clone(), &stream);
+    for (resp, (task, tokens)) in f32_resp.iter().zip(&stream) {
+        let want = single_request_logits(&backend, &tt, *task, tokens);
+        for (g, w) in resp.logits.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "f32 packed path drifted from dense oracle");
+        }
+    }
+    let bf16_resp =
+        serve_stream(&backend, cfg_for(MetaTtKind::FourPlusOneD, DtypeKind::Bf16), tt, &stream);
+    let any_bit_diff = bf16_resp
+        .iter()
+        .zip(&f32_resp)
+        .any(|(a, b)| a.logits.iter().zip(&b.logits).any(|(x, y)| x.to_bits() != y.to_bits()));
+    assert!(any_bit_diff, "bf16 serving must actually round the weights");
 }
 
 #[test]
