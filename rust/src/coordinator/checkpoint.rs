@@ -13,14 +13,40 @@
 //! `metatt serve --checkpoint` can validate compatibility up front instead
 //! of failing on a shape mismatch deep inside bind. v1 files keep loading
 //! unchanged ([`load`] / [`load_with_meta`] accept both).
+//!
+//! **Crash safety (PR 8).** Writers append an 8-byte trailer — the magic
+//! `"MTTC"` followed by the little-endian IEEE CRC32 of every preceding
+//! byte — and land the file via temp-file + `sync_all` + atomic rename, so
+//! a crash mid-save can never replace a good checkpoint with a torn one
+//! (the hot-swap `reload` path reads either the old file or the new file,
+//! never half of each). The loader verifies and strips the trailer when
+//! the last 8 bytes carry the magic; trailer-less files from older writers
+//! keep loading through the original path.
 
 use crate::tensor::Tensor;
+use crate::util::fault::FaultPlan;
 use crate::util::json::{self, Json};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"MTT1";
 const MAGIC_V2: &[u8; 4] = b"MTT2";
+/// Trailer magic: `body | "MTTC" | u32 crc32(body | "MTTC"-preceding bytes)`.
+const TRAILER_MAGIC: &[u8; 4] = b"MTTC";
+
+/// IEEE CRC32 (reflected, polynomial 0xEDB88320) — the zlib/PNG variant.
+/// Bitwise, dependency-free; checkpoint saves are not write-bound.
+fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
 
 /// Cap on the v2 metadata section: the meta JSON is a handful of scalar
 /// fields, so anything larger is corruption, not data.
@@ -111,12 +137,44 @@ fn body_bytes(tensors: &[(String, Tensor)]) -> Vec<u8> {
     buf
 }
 
-fn write_file(path: &Path, buf: &[u8]) -> Result<(), String> {
+/// Crash-safe landing: append the CRC trailer, write a sibling temp file,
+/// fsync, and atomically rename over `path`. A reader racing the save — or
+/// a crash at any instant — observes either the previous complete file or
+/// the new complete file, never a prefix. `faults` may tear the write
+/// (`torn_write@save=N`): only half the temp file lands and the rename is
+/// skipped, simulating a crash mid-save.
+fn write_file(path: &Path, buf: &[u8], faults: Option<&FaultPlan>) -> Result<(), String> {
     if let Some(parent) = path.parent() {
         let _ = std::fs::create_dir_all(parent);
     }
-    let mut f = std::fs::File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
-    f.write_all(buf).map_err(|e| format!("write {}: {e}", path.display()))
+    let mut full = Vec::with_capacity(buf.len() + 8);
+    full.extend_from_slice(buf);
+    full.extend_from_slice(TRAILER_MAGIC);
+    full.extend_from_slice(&crc32(buf).to_le_bytes());
+    let file_name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "checkpoint".into());
+    let tmp = path.with_file_name(format!("{file_name}.tmp"));
+    if faults.is_some_and(|f| f.on_save()) {
+        let _ = std::fs::write(&tmp, &full[..full.len() / 2]);
+        return Err(format!(
+            "injected fault: torn write left {} partial; {} untouched",
+            tmp.display(),
+            path.display()
+        ));
+    }
+    let land = (|| -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&full)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+    })();
+    land.map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("write {}: {e}", path.display())
+    })
 }
 
 /// Save named tensors (v1 container, no metadata). Order is preserved.
@@ -124,7 +182,7 @@ pub fn save(path: &Path, tensors: &[(String, Tensor)]) -> Result<(), String> {
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
     buf.extend_from_slice(&body_bytes(tensors));
-    write_file(path, &buf)
+    write_file(path, &buf, None)
 }
 
 /// Save named tensors with a [`CheckpointMeta`] header (v2 container).
@@ -133,13 +191,25 @@ pub fn save_with_meta(
     meta: &CheckpointMeta,
     tensors: &[(String, Tensor)],
 ) -> Result<(), String> {
+    save_with_meta_faults(path, meta, tensors, None)
+}
+
+/// [`save_with_meta`] with an explicit fault plan: `torn_write@save=N`
+/// entries tear the Nth save (partial temp file, no rename) so chaos tests
+/// can pin that a crashed save never corrupts the live checkpoint.
+pub fn save_with_meta_faults(
+    path: &Path,
+    meta: &CheckpointMeta,
+    tensors: &[(String, Tensor)],
+    faults: Option<&FaultPlan>,
+) -> Result<(), String> {
     let meta_bytes = meta.to_json().to_string().into_bytes();
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC_V2);
     buf.extend_from_slice(&(meta_bytes.len() as u32).to_le_bytes());
     buf.extend_from_slice(&meta_bytes);
     buf.extend_from_slice(&body_bytes(tensors));
-    write_file(path, &buf)
+    write_file(path, &buf, faults)
 }
 
 /// Hard cap on tensor rank: nothing in the layout exceeds 4-D, so a larger
@@ -165,6 +235,22 @@ pub fn load_with_meta(
     let mut f = std::fs::File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
     let mut buf = Vec::new();
     f.read_to_end(&mut buf).map_err(|e| format!("read {}: {e}", path.display()))?;
+    // CRC trailer (see module docs): verify and strip when the last 8
+    // bytes carry the trailer magic; files from pre-trailer writers fall
+    // through to the original parse. A trailer-shaped tail whose checksum
+    // does not match is rejected — that is a torn or bit-flipped file, and
+    // the structural parse below cannot be trusted to catch it.
+    if buf.len() >= 12 && &buf[buf.len() - 8..buf.len() - 4] == TRAILER_MAGIC {
+        let stored = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        let body_len = buf.len() - 8;
+        if crc32(&buf[..body_len]) != stored {
+            return Err(format!(
+                "{}: checksum mismatch (torn or corrupted checkpoint write)",
+                path.display()
+            ));
+        }
+        buf.truncate(body_len);
+    }
     let mut pos = 0usize;
     let take = |pos: &mut usize, n: usize| -> Result<&[u8], String> {
         // `pos + n` cannot wrap: pos <= buf.len() and n is validated below.
@@ -438,5 +524,76 @@ mod tests {
         // Valid 4x4 header but only half the f32 payload present.
         let err = write_and_load("trunc", &crafted(&[4, 4], 32)).unwrap_err();
         assert!(err.contains("remain"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_reference_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn saved_files_carry_a_verifying_trailer_and_a_bit_flip_is_caught() {
+        let mut rng = Pcg64::new(4);
+        let tensors = vec![("g1".to_string(), Tensor::randn(&[8, 4], 1.0, &mut rng))];
+        let dir = std::env::temp_dir().join("metatt_ckpt_test");
+        let path = dir.join("crc.bin");
+        save(&path, &tensors).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[bytes.len() - 8..bytes.len() - 4], TRAILER_MAGIC);
+        assert_eq!(load(&path).unwrap(), tensors);
+        // Flip one payload bit: the structural parse would happily accept
+        // the mutated f32, so only the checksum can catch this.
+        bytes[20] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "unexpected: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_rejected_cleanly() {
+        let mut rng = Pcg64::new(5);
+        let tensors = vec![("g1".to_string(), Tensor::randn(&[8, 4], 1.0, &mut rng))];
+        let dir = std::env::temp_dir().join("metatt_ckpt_test");
+        let path = dir.join("torn_tail.bin");
+        save(&path, &tensors).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Drop the trailer plus part of the payload: falls through to the
+        // legacy parse, which sees a truncated body.
+        std::fs::write(&path, &bytes[..bytes.len() - 20]).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(
+            err.contains("remain") || err.contains("truncated"),
+            "unexpected: {err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn injected_torn_save_leaves_the_previous_checkpoint_intact() {
+        let mut rng = Pcg64::new(6);
+        let a = vec![("g1".to_string(), Tensor::randn(&[8, 4], 1.0, &mut rng))];
+        let b = vec![("g1".to_string(), Tensor::randn(&[8, 4], 1.0, &mut rng))];
+        let dir = std::env::temp_dir().join("metatt_ckpt_test");
+        let path = dir.join("atomic.bin");
+        save_with_meta(&path, &demo_meta(), &a).unwrap();
+        // Tear the *next* save: the error is surfaced, the temp file holds
+        // only a prefix, and the live checkpoint still loads as `a`.
+        let plan = FaultPlan::parse("torn_write@save=1").unwrap();
+        let err =
+            save_with_meta_faults(&path, &demo_meta(), &b, Some(&plan)).unwrap_err();
+        assert!(err.contains("torn write"), "unexpected: {err}");
+        let (meta, loaded) = load_with_meta(&path).unwrap();
+        assert_eq!(meta.unwrap(), demo_meta());
+        assert_eq!(loaded, a, "a torn save must never touch the live file");
+        // The torn temp file itself is rejected, not silently parsed.
+        let tmp = dir.join("atomic.bin.tmp");
+        assert!(load(&tmp).is_err(), "a torn prefix must not load");
+        // A retry with the fault spent lands normally (save counter = 2).
+        save_with_meta_faults(&path, &demo_meta(), &b, Some(&plan)).unwrap();
+        assert_eq!(load(&path).unwrap(), b);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&tmp).ok();
     }
 }

@@ -61,11 +61,21 @@ commands:
              --listen ADDR    TCP front-end (MTS1 wire protocol); stops
                               after --serve-secs N seconds (0 = until
                               killed), then drains gracefully
+                              [--drain-grace-ms MS]  post-shutdown grace
+                              for half-received frames (default 1000, > 0)
              --connect ADDR   closed-loop TCP clients against a listener
+                              [--net-timeout-ms MS]  socket read/write
+                              timeout (default 30000; 0 = block forever)
              --overload       closed-loop capacity probe, then open-loop
                               Poisson arrivals at --overload-mults m,m,...
                               times capacity (--overload-requests arrivals
-                              per level); records BENCH_pr6.json
+                              per level); records BENCH_pr6.json — or, with
+                              faults armed, a faulted-vs-clean twin sweep
+                              into BENCH_pr8.json
+             --faults SPEC    arm deterministic fault injection (also env
+                              METATT_FAULTS), e.g. \"worker_panic@tick=17,
+                              net_drop@frame=3,slow_tick=5ms@p=0.01,
+                              torn_write@save=2,seed=1\"
   run        config-file-driven run
              --config configs/foo.toml
 
@@ -98,6 +108,8 @@ const OPTS: &[&str] = &[
     // serve front-end modes: TCP listener / TCP client / overload sweep
     "listen", "connect", "serve-secs", "deadline-ms", "priority",
     "overload-mults", "overload-requests",
+    // fault injection + robustness knobs
+    "faults", "net-timeout-ms", "drain-grace-ms",
 ];
 const FLAGS: &[&str] = &["help", "no-checkpoint", "verbose", "overload"];
 
@@ -600,6 +612,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         p as u8
     };
 
+    // Fault injection: `--faults` wins, else the METATT_FAULTS env spec;
+    // an absent/empty spec leaves every injection point a no-op.
+    let faults = std::sync::Arc::new(match args.get("faults") {
+        Some(spec) => metatt::util::fault::FaultPlan::parse(spec).map_err(|e| anyhow!(e))?,
+        None => metatt::util::fault::FaultPlan::from_env().map_err(|e| anyhow!(e))?,
+    });
+    if faults.is_armed() {
+        println!("fault injection armed: {}", faults.spec());
+    }
+
     // Client mode needs no engine (the server owns the model): dispatch
     // before any backbone/adapter loading.
     if let Some(addr) = args.get("connect") {
@@ -697,6 +719,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .usize_or("cache-cap", 64 << 20)
             .map_err(|e| anyhow!(e))?,
         dtype: serve_dtype,
+        faults: std::sync::Arc::clone(&faults),
     };
     // Guard before any chain construction: metatt_from_tensors /
     // build_metatt panic on non-TT families, the engine only folds TT.
@@ -714,6 +737,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let backend = backend_for(args)?;
     let backbone = ckpt_for(args, model);
+    // A fault-free twin for the resilience comparison (`--overload` with
+    // faults armed): same config and adapter state, empty fault plan.
+    let twin = (args.flag("overload") && faults.is_armed()).then(|| {
+        (
+            EngineConfig {
+                faults: std::sync::Arc::new(metatt::util::fault::FaultPlan::empty()),
+                ..cfg.clone()
+            },
+            tt.clone(),
+        )
+    });
     let engine = ServingEngine::new(backend.as_ref(), cfg, tt, backbone.as_deref())?;
 
     if let Some(addr) = args.get("listen") {
@@ -736,6 +770,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     if args.flag("overload") {
+        if let Some((bcfg, btt)) = twin {
+            let baseline =
+                ServingEngine::new(backend.as_ref(), bcfg, btt, backbone.as_deref())?;
+            return serve_resilience(args, &engine, &baseline, &lcfg, deadline, priority);
+        }
         return serve_overload(args, &engine, &lcfg, deadline, priority);
     }
 
@@ -825,6 +864,13 @@ fn serve_listen(
     let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
     let local = listener.local_addr().map_err(|e| anyhow!(e))?;
     let secs = args.u64_or("serve-secs", 0).map_err(|e| anyhow!(e))?;
+    let grace_ms = args.u64_or("drain-grace-ms", 1000).map_err(|e| anyhow!(e))?;
+    if grace_ms == 0 {
+        bail!("--drain-grace-ms must be > 0 (half-received frames need time to finish)");
+    }
+    let net_cfg = metatt::serving::NetServerConfig {
+        drain_grace: Duration::from_millis(grace_ms),
+    };
     println!(
         "listening on {local} (MTS1; {} tasks, seq {}, vocab {}, {} classes){}",
         engine.config().num_tasks,
@@ -842,7 +888,7 @@ fn serve_listen(
                 sd.store(true, Ordering::Relaxed);
             });
         }
-        metatt::serving::serve_net(eng, listener, &shutdown)
+        metatt::serving::serve_net_with(eng, listener, &shutdown, &net_cfg)
     })??;
     let stats = engine.stats();
     println!(
@@ -873,17 +919,27 @@ fn serve_connect(
     deadline: Option<std::time::Duration>,
     priority: u8,
 ) -> Result<()> {
-    use metatt::serving::{self, LoadGenConfig};
+    use metatt::serving::{self, LoadGenConfig, NetClientConfig, RetryPolicy};
     use std::time::Duration;
     let requests = args.usize_or("requests", 100).map_err(|e| anyhow!(e))?;
     let clients = args.usize_or("clients", 4).map_err(|e| anyhow!(e))?;
     if requests == 0 || clients == 0 {
         bail!("--requests and --clients must be >= 1");
     }
-    let timeout = Duration::from_secs(10);
+    // Socket read/write timeout: a hung or partitioned server surfaces as
+    // a clean "timed out" error instead of a forever-blocked recv.
+    let io_timeout = match args.u64_or("net-timeout-ms", 30_000).map_err(|e| anyhow!(e))? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
+    let net = NetClientConfig {
+        connect_timeout: Duration::from_secs(10),
+        io_timeout,
+        retry: RetryPolicy { seed, ..RetryPolicy::default() },
+    };
     // Probe once for the hello: validates the endpoint and gives --mix a
     // task arity to check against before the client fleet launches.
-    let probe = serving::NetClient::connect_retry(addr, timeout)?;
+    let probe = serving::NetClient::connect_retry_with(addr, net.connect_timeout, io_timeout)?;
     let hello = probe.hello;
     drop(probe);
     println!(
@@ -899,12 +955,13 @@ fn serve_connect(
         deadline,
         priority,
     };
-    let report = serving::run_net_load(addr, &lcfg, timeout)?;
+    let report = serving::run_net_load(addr, &lcfg, &net)?;
     let (p50, p95, p99) =
         report.latency.as_ref().map_or((0.0, 0.0, 0.0), |l| (l.p50, l.p95, l.p99));
     println!(
         "{} round trips in {:.3}s — {:.1} req/s computed, {} expired, {} errors\n\
-         latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms",
+         latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms\n\
+         {} retried round trips, {} reconnects after connection loss",
         report.total,
         report.elapsed,
         report.throughput_rps,
@@ -912,7 +969,9 @@ fn serve_connect(
         report.errors,
         p50 * 1e3,
         p95 * 1e3,
-        p99 * 1e3
+        p99 * 1e3,
+        report.retries,
+        report.reconnects
     );
     if report.errors > 0 {
         bail!("{} requests came back as protocol/validation errors", report.errors);
@@ -925,6 +984,8 @@ fn serve_connect(
             ("throughput_rps", Json::num(report.throughput_rps)),
             ("expired", Json::num(report.expired as f64)),
             ("p99_ms", Json::num(p99 * 1e3)),
+            ("retries", Json::num(report.retries as f64)),
+            ("reconnects", Json::num(report.reconnects as f64)),
         ]),
     );
     Ok(())
@@ -933,14 +994,13 @@ fn serve_connect(
 /// `serve --overload`: the `BENCH_pr6.json` experiment — measure
 /// closed-loop capacity, then offer open-loop Poisson arrivals at each
 /// configured multiple of it and record goodput / shed / tail latency.
-fn serve_overload(
+fn overload_cfg(
     args: &Args,
-    engine: &metatt::serving::ServingEngine<'_>,
     capacity: &metatt::serving::LoadGenConfig,
     deadline: Option<std::time::Duration>,
     priority: u8,
-) -> Result<()> {
-    use metatt::serving::{self, OverloadConfig};
+) -> Result<metatt::serving::OverloadConfig> {
+    use metatt::serving::{LoadGenConfig, OverloadConfig};
     use std::time::Duration;
     let mults: Vec<f64> = match args.get("overload-mults") {
         None => vec![0.5, 1.0, 2.0, 4.0],
@@ -953,15 +1013,26 @@ fn serve_overload(
             })
             .collect::<Result<_>>()?,
     };
-    let ocfg = OverloadConfig {
+    Ok(OverloadConfig {
         // Capacity is probed without deadlines: it measures what the
         // engine *can* do; the levels then hold that rate to a deadline.
-        capacity: serving::LoadGenConfig { deadline: None, ..capacity.clone() },
+        capacity: LoadGenConfig { deadline: None, ..capacity.clone() },
         mults,
         requests_per_level: args.usize_or("overload-requests", 200).map_err(|e| anyhow!(e))?,
         deadline: deadline.unwrap_or(Duration::from_millis(50)),
         priority,
-    };
+    })
+}
+
+fn serve_overload(
+    args: &Args,
+    engine: &metatt::serving::ServingEngine<'_>,
+    capacity: &metatt::serving::LoadGenConfig,
+    deadline: Option<std::time::Duration>,
+    priority: u8,
+) -> Result<()> {
+    use metatt::serving;
+    let ocfg = overload_cfg(args, capacity, deadline, priority)?;
     let report = serving::run_overload_bench(engine, &ocfg)?;
     println!(
         "capacity: {:.1} req/s (closed loop, {} clients, p99 {:.2}ms); \
@@ -986,6 +1057,14 @@ fn serve_overload(
     }
     let doc = serving::overload_report_json(engine, &ocfg, &report);
     metatt::bench::save_record("pr6", &doc)?;
+    append_overload_record(&ocfg, &report);
+    Ok(())
+}
+
+fn append_overload_record(
+    ocfg: &metatt::serving::OverloadConfig,
+    report: &metatt::serving::OverloadReport,
+) {
     results::append_record(
         "serve_overload",
         &Json::obj(vec![
@@ -1003,6 +1082,70 @@ fn serve_overload(
                                 ("goodput_rps", Json::num(r.goodput_rps)),
                                 ("shed", Json::num(r.expired as f64)),
                                 ("rejected", Json::num(r.rejected as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    );
+}
+
+/// `serve --overload` with faults armed: the `BENCH_pr8.json` experiment.
+/// Runs the sweep twice over identical engine configs and seeds — faults
+/// armed, then the fault-free twin — and reports goodput retention plus
+/// the self-healing counters (restarts / quarantined / requeued) per level.
+fn serve_resilience(
+    args: &Args,
+    faulted_engine: &metatt::serving::ServingEngine<'_>,
+    baseline_engine: &metatt::serving::ServingEngine<'_>,
+    capacity: &metatt::serving::LoadGenConfig,
+    deadline: Option<std::time::Duration>,
+    priority: u8,
+) -> Result<()> {
+    use metatt::serving;
+    let ocfg = overload_cfg(args, capacity, deadline, priority)?;
+    let spec = faulted_engine.faults().spec().to_string();
+    println!("resilience sweep: faults \"{spec}\" vs fault-free twin");
+    let faulted = serving::run_overload_bench(faulted_engine, &ocfg)?;
+    let baseline = serving::run_overload_bench(baseline_engine, &ocfg)?;
+    for ((mult, f), (_, b)) in faulted.levels.iter().zip(&baseline.levels) {
+        let retention = if b.goodput_rps > 0.0 { f.goodput_rps / b.goodput_rps } else { 0.0 };
+        println!(
+            "x{mult:<4} goodput {:>7.1} rps faulted / {:>7.1} clean ({:>5.1}%)  \
+             restarts {:>3}  quarantined {:>3}  requeued {:>3}  errors {:>3}",
+            f.goodput_rps,
+            b.goodput_rps,
+            retention * 100.0,
+            f.engine.worker_restarts,
+            f.engine.quarantined,
+            f.engine.requeued,
+            f.errors
+        );
+    }
+    let doc = serving::resilience_report_json(faulted_engine, &ocfg, &spec, &faulted, &baseline);
+    metatt::bench::save_record("pr8", &doc)?;
+    results::append_record(
+        "serve_resilience",
+        &Json::obj(vec![
+            ("faults", Json::str(&spec)),
+            ("capacity_rps_faulted", Json::num(faulted.capacity_rps)),
+            ("capacity_rps_baseline", Json::num(baseline.capacity_rps)),
+            (
+                "levels",
+                Json::Arr(
+                    faulted
+                        .levels
+                        .iter()
+                        .zip(&baseline.levels)
+                        .map(|((m, f), (_, b))| {
+                            Json::obj(vec![
+                                ("mult", Json::num(*m)),
+                                ("goodput_rps_faulted", Json::num(f.goodput_rps)),
+                                ("goodput_rps_baseline", Json::num(b.goodput_rps)),
+                                ("worker_restarts", Json::num(f.engine.worker_restarts as f64)),
+                                ("quarantined", Json::num(f.engine.quarantined as f64)),
+                                ("requeued", Json::num(f.engine.requeued as f64)),
                             ])
                         })
                         .collect(),

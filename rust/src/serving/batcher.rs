@@ -78,11 +78,14 @@ fn most_urgent(queue: &VecDeque<Pending>) -> Option<usize> {
     best
 }
 
-/// Index of the most urgent request of `task` (None if no such request).
+/// Index of the most urgent coalescible request of `task` (None if no such
+/// request). Solo-flagged requests (quarantine retries) never coalesce —
+/// they must run in a batch of one, so a poisoned request can't take
+/// healthy batch-mates down with it.
 fn most_urgent_of_task(queue: &VecDeque<Pending>, task: usize) -> Option<usize> {
     let mut best: Option<usize> = None;
     for i in 0..queue.len() {
-        if queue[i].req.task != task {
+        if queue[i].req.task != task || queue[i].solo {
             continue;
         }
         match best {
@@ -129,12 +132,19 @@ impl BatchPolicy {
             inner = q.not_empty.wait(inner).unwrap();
         };
         let task = first.req.task;
+        let solo = first.solo;
         let mut batch = Vec::with_capacity(self.max_batch);
         batch.push(first);
         // The pop above freed a slot — wake blocked producers NOW, not
         // after the tick wait: a parked same-task producer is exactly
         // the straggler the tick window exists to absorb.
         q.not_full.notify_all();
+        // A solo (quarantine-retry) request runs alone: no coalescing, no
+        // tick wait.
+        if solo {
+            drop(inner);
+            return Some(DrainedBatch { run: batch, shed });
+        }
         // Phase 2: coalesce same-task requests in urgency order, waiting
         // out the tick when the batch is short. Each pass sheds anything
         // that expired during the wait (any task — dead work is dead work)
@@ -195,6 +205,22 @@ mod tests {
             tx,
             enqueued: now,
             deadline: deadline.map(|d| now + d),
+            panics: 0,
+            solo: false,
+        })
+        .unwrap();
+        rx
+    }
+
+    fn push_solo(q: &AdmissionQueue, id: u64, task: usize) -> Receiver<super::super::Response> {
+        let (tx, rx) = response_channel();
+        q.submit(Pending {
+            req: Request { id, task, tokens: vec![1], priority: 0 },
+            tx,
+            enqueued: Instant::now(),
+            deadline: None,
+            panics: 2,
+            solo: true,
         })
         .unwrap();
         rx
@@ -313,6 +339,31 @@ mod tests {
         shed.sort_unstable();
         assert_eq!(shed, vec![0, 2], "dead requests shed across tasks");
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn solo_requests_never_coalesce() {
+        let q = AdmissionQueue::new(16);
+        // A solo (quarantine-retry) request surrounded by same-task
+        // traffic: it runs in a batch of one, and the healthy requests
+        // batch together without it.
+        let _r0 = push_solo(&q, 0, 2);
+        let _r1 = push(&q, 1, 2);
+        let _r2 = push(&q, 2, 2);
+        let policy = BatchPolicy { max_batch: 8, deadline: Duration::ZERO };
+        let b0 = policy.next_batch(&q).unwrap();
+        assert_eq!(ids(&b0.run), vec![0], "the solo request runs alone");
+        let b1 = policy.next_batch(&q).unwrap();
+        assert_eq!(ids(&b1.run), vec![1, 2], "healthy requests still batch");
+        // And when a healthy request pins the batch first, the solo one is
+        // skipped by coalescing.
+        let _r3 = push(&q, 3, 4);
+        let _r4 = push_solo(&q, 4, 4);
+        let _r5 = push(&q, 5, 4);
+        let b2 = policy.next_batch(&q).unwrap();
+        assert_eq!(ids(&b2.run), vec![3, 5], "coalescing skips the solo request");
+        let b3 = policy.next_batch(&q).unwrap();
+        assert_eq!(ids(&b3.run), vec![4]);
     }
 
     #[test]

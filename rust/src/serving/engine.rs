@@ -25,6 +25,7 @@ use crate::config::ModelPreset;
 use crate::runtime::{assemble_frozen, ArtifactSpec, Backend, StepKind};
 use crate::tensor::{DtypeKind, Tensor};
 use crate::tt::MetaTt;
+use crate::util::fault::FaultPlan;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::path::Path;
@@ -61,6 +62,10 @@ pub struct EngineConfig {
     /// the bit-exact path; `Bf16`/`I8` trade the dtype's quantization
     /// tolerance for 2–4× less resident panel traffic.
     pub dtype: DtypeKind,
+    /// Fault-injection schedule (`--faults` / `METATT_FAULTS`). The
+    /// default empty plan disarms every hook at the cost of one relaxed
+    /// load per tick — the zero-alloc warmed serving tick is unchanged.
+    pub faults: Arc<FaultPlan>,
 }
 
 impl Default for EngineConfig {
@@ -78,6 +83,7 @@ impl Default for EngineConfig {
             workers: 2,
             cache_capacity_bytes: 64 << 20,
             dtype: DtypeKind::F32,
+            faults: Arc::new(FaultPlan::empty()),
         }
     }
 }
@@ -108,6 +114,15 @@ pub struct EngineStats {
     /// from [`CacheStats::bytes`], bounded by
     /// [`EngineConfig::cache_capacity_bytes`] past the first fold).
     pub cache_bytes: u64,
+    /// Worker supervision events: a batch execution panicked (or errored)
+    /// and the worker re-bound a fresh step instead of aborting the queue.
+    pub worker_restarts: u64,
+    /// Requests answered `Error` after repeatedly failing execution (their
+    /// batch panicked, the solo retry panicked again).
+    pub quarantined: u64,
+    /// Requests put back on the queue by supervision (each failed attempt
+    /// counts every batch member once).
+    pub requeued: u64,
 }
 
 impl EngineStats {
@@ -147,6 +162,9 @@ impl EngineStats {
             batch_hist: hist,
             // A gauge, not a counter: the window reports the current value.
             cache_bytes: self.cache_bytes,
+            worker_restarts: self.worker_restarts - base.worker_restarts,
+            quarantined: self.quarantined - base.quarantined,
+            requeued: self.requeued - base.requeued,
         }
     }
 }
@@ -159,6 +177,9 @@ struct StatsInner {
     queue_us_sum: AtomicU64,
     queue_us_max: AtomicU64,
     hist: Mutex<Vec<u64>>,
+    worker_restarts: AtomicU64,
+    quarantined: AtomicU64,
+    requeued: AtomicU64,
 }
 
 /// The engine. Holds no worker threads itself — [`ServingEngine::serve`]
@@ -242,6 +263,9 @@ impl<'b> ServingEngine<'b> {
                 queue_us_sum: AtomicU64::new(0),
                 queue_us_max: AtomicU64::new(0),
                 hist: Mutex::new(hist),
+                worker_restarts: AtomicU64::new(0),
+                quarantined: AtomicU64::new(0),
+                requeued: AtomicU64::new(0),
             },
             next_id: AtomicU64::new(0),
             epoch: Instant::now(),
@@ -283,7 +307,16 @@ impl<'b> ServingEngine<'b> {
             queue_us_max: self.stats.queue_us_max.load(Ordering::Relaxed),
             batch_hist: self.stats.hist.lock().unwrap().clone(),
             cache_bytes: self.store.stats().bytes,
+            worker_restarts: self.stats.worker_restarts.load(Ordering::Relaxed),
+            quarantined: self.stats.quarantined.load(Ordering::Relaxed),
+            requeued: self.stats.requeued.load(Ordering::Relaxed),
         }
+    }
+
+    /// The engine's fault-injection plan (threaded into the TCP front-end's
+    /// per-frame hook by [`super::net::serve_net`]).
+    pub fn faults(&self) -> &FaultPlan {
+        &self.cfg.faults
     }
 
     /// Microseconds since engine construction — the clock every
@@ -378,6 +411,8 @@ impl<'b> ServingEngine<'b> {
                 tx,
                 enqueued: now,
                 deadline: deadline.map(|d| now + d),
+                panics: 0,
+                solo: false,
             },
             rx,
         ))
@@ -390,10 +425,15 @@ impl<'b> ServingEngine<'b> {
     /// already-admitted request — computing live ones, answering expired
     /// ones with `Expired` — before exiting, so no admitted request is
     /// ever left unanswered on a clean shutdown (pinned in
-    /// `tests/serving.rs`). Worker failures — errors *or* panics — surface as
-    /// the returned error; a failing worker aborts the queue (close +
-    /// drop every queued request), so clients blocked on handles observe
-    /// a receive error instead of hanging and blocked producers wake up.
+    /// `tests/serving.rs`). Batch execution failures — errors *or* panics —
+    /// are **supervised** (PR 8): the worker counts a restart, requeues the
+    /// in-flight batch, and re-binds a fresh step; a request whose batch
+    /// fails twice is retried solo, and a solo failure answers it with an
+    /// explicit `Error` status (quarantine) while its former batch-mates
+    /// succeed. Only an unrecoverable worker failure — a step that cannot
+    /// (re)bind — aborts the queue (close + drop every queued request), so
+    /// even then clients observe a receive error instead of hanging and
+    /// blocked producers wake up.
     pub fn serve<R>(&self, driver: impl FnOnce(&Self) -> R) -> Result<R> {
         std::thread::scope(|scope| {
             let workers: Vec<_> = (0..self.cfg.workers)
@@ -451,9 +491,10 @@ impl<'b> ServingEngine<'b> {
     /// One worker: bind a private step, then drain → shed-answer →
     /// fold-lookup → execute → fulfil until the queue closes. The token and
     /// logit buffers are reused across ticks, so a warmed tick's only
-    /// allocations are the per-response logit vectors handed to clients.
+    /// allocations are the per-response logit vectors handed to clients
+    /// (the supervision guard's success path is allocation-free).
     fn worker_loop(&self) -> Result<()> {
-        let step = self.backend.bind_serve(&self.spec, &self.frozen, self.cfg.dtype)?;
+        let mut step = self.backend.bind_serve(&self.spec, &self.frozen, self.cfg.dtype)?;
         let (b, s, classes) = (self.cfg.max_batch, self.seq, self.cfg.classes);
         let mut tokens = vec![0i32; b * s];
         let mut logits = vec![0f32; b * classes];
@@ -472,6 +513,7 @@ impl<'b> ServingEngine<'b> {
                         batch_rows: 0,
                         generation: 0,
                         done_us,
+                        error: None,
                     });
                 }
             }
@@ -482,14 +524,17 @@ impl<'b> ServingEngine<'b> {
             let drained_at = Instant::now();
             let task = batch[0].req.task;
             let folded = self.store.get(task);
+            // Queue-delay telemetry is computed here but committed only on
+            // success — a supervised failure requeues the batch, and its
+            // eventual successful drain must be the one that counts.
+            let mut queue_us = 0u64;
+            let mut queue_us_max = 0u64;
             for (i, p) in batch.iter().enumerate() {
                 tokens[i * s..(i + 1) * s].copy_from_slice(&p.req.tokens);
-                // Queue-delay telemetry: admission → drain, computed
-                // requests only.
                 let waited = drained_at.saturating_duration_since(p.enqueued);
                 let us = waited.as_micros() as u64;
-                self.stats.queue_us_sum.fetch_add(us, Ordering::Relaxed);
-                self.stats.queue_us_max.fetch_max(us, Ordering::Relaxed);
+                queue_us += us;
+                queue_us_max = queue_us_max.max(us);
             }
             // Pad short batches by repeating row 0 (valid tokens; output
             // rows beyond the real requests are simply never read).
@@ -497,7 +542,30 @@ impl<'b> ServingEngine<'b> {
                 let (head, tail) = tokens.split_at_mut(i * s);
                 tail[..s].copy_from_slice(&head[..s]);
             }
-            step.run_serve_packed(&folded.pairs, &tokens, task as i32, &mut logits)?;
+            // Supervision guard: a panic (injected or real) or an execution
+            // error inside the forward must not take down the engine. On
+            // failure the batch is requeued (twice-failed requests retried
+            // solo, thrice-failed quarantined) and THIS worker re-binds a
+            // fresh step — its workspace may be mid-tick garbage after an
+            // unwind. `AssertUnwindSafe` is sound here precisely because
+            // the potentially-broken state (step, logits) is rebuilt /
+            // fully overwritten before reuse.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.cfg.faults.on_serve_tick();
+                step.run_serve_packed(&folded.pairs, &tokens, task as i32, &mut logits)
+            }));
+            let why = match run {
+                Ok(Ok(())) => None,
+                Ok(Err(e)) => Some(format!("batch execution failed: {e:#}")),
+                Err(_) => Some("worker panicked executing a batch".to_string()),
+            };
+            if let Some(why) = why {
+                self.supervise_failed_batch(batch, &why);
+                step = self.backend.bind_serve(&self.spec, &self.frozen, self.cfg.dtype)?;
+                continue;
+            }
+            self.stats.queue_us_sum.fetch_add(queue_us, Ordering::Relaxed);
+            self.stats.queue_us_max.fetch_max(queue_us_max, Ordering::Relaxed);
             self.stats.batches.fetch_add(1, Ordering::Relaxed);
             self.stats.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
             self.stats.hist.lock().unwrap()[batch.len()] += 1;
@@ -514,10 +582,50 @@ impl<'b> ServingEngine<'b> {
                     batch_rows: rows,
                     generation: folded.generation,
                     done_us,
+                    error: None,
                 });
             }
         }
         Ok(())
+    }
+
+    /// Self-healing after a failed batch execution: every member's failure
+    /// count rises; a request that has now failed twice goes back flagged
+    /// `solo` (retried in a batch of one), and a request that failed *as*
+    /// that batch-of-one is poisoned — it gets an explicit `Error` response
+    /// so its former batch-mates (already requeued separately) can succeed
+    /// without it. Requeued requests keep their original deadlines: one
+    /// that expires while retrying is still answered (`Expired`), never
+    /// silently dropped.
+    fn supervise_failed_batch(&self, batch: Vec<Pending>, why: &str) {
+        self.stats.worker_restarts.fetch_add(1, Ordering::Relaxed);
+        let single = batch.len() == 1;
+        let done_us = self.now_us();
+        let mut requeue = Vec::with_capacity(batch.len());
+        for mut p in batch {
+            p.panics = p.panics.saturating_add(1);
+            if single && p.panics >= 2 {
+                self.stats.quarantined.fetch_add(1, Ordering::Relaxed);
+                let _ = p.tx.send(Response {
+                    id: p.req.id,
+                    task: p.req.task,
+                    status: ResponseStatus::Error,
+                    logits: Vec::new(),
+                    batch_rows: 0,
+                    generation: 0,
+                    done_us,
+                    error: Some(format!(
+                        "request quarantined after {} failed executions ({why})",
+                        p.panics
+                    )),
+                });
+            } else {
+                p.solo = p.panics >= 2;
+                requeue.push(p);
+            }
+        }
+        self.stats.requeued.fetch_add(requeue.len() as u64, Ordering::Relaxed);
+        self.queue.requeue(requeue);
     }
 }
 

@@ -83,6 +83,9 @@ pub struct LoadReport {
     pub per_task: Vec<u64>,
     /// Responses answered `Expired` (only possible with a deadline set).
     pub expired: usize,
+    /// Responses answered `Error` (a request quarantined after repeated
+    /// execution failure — zero unless faults are armed).
+    pub errors: usize,
     /// Engine counters for the measured window only: a snapshot delta that
     /// excludes warmup traffic (and, inside a sweep, earlier phases).
     pub engine: EngineStats,
@@ -189,10 +192,11 @@ pub fn closed_loop_in(eng: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadRe
     let (seq, vocab) = (eng.seq_len(), eng.vocab());
     let base = eng.stats();
     let t0 = Instant::now();
-    let per_client: Vec<(Vec<f64>, Vec<u64>, usize)> = std::thread::scope(|scope| {
+    type ClientOut = (Vec<f64>, Vec<u64>, usize, usize);
+    let per_client: Vec<ClientOut> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.clients)
             .map(|client| {
-                scope.spawn(move || -> Result<(Vec<f64>, Vec<u64>, usize)> {
+                scope.spawn(move || -> Result<ClientOut> {
                     let stream = request_stream(
                         cfg,
                         num_tasks,
@@ -203,13 +207,13 @@ pub fn closed_loop_in(eng: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadRe
                     );
                     let mut lats = Vec::with_capacity(stream.len());
                     let mut per_task = vec![0u64; num_tasks];
-                    let mut expired = 0usize;
+                    let (mut expired, mut errors) = (0usize, 0usize);
                     for (task, tokens) in stream {
                         let sent = Instant::now();
                         let handle =
                             eng.submit_with(task, tokens, cfg.deadline, cfg.priority)?;
                         let resp: Response = handle.wait().map_err(|e| anyhow!(e))?;
-                        if resp.task != task {
+                        if resp.status != ResponseStatus::Error && resp.task != task {
                             return Err(anyhow!(
                                 "response task {} for a task-{task} request",
                                 resp.task
@@ -221,12 +225,13 @@ pub fn closed_loop_in(eng: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadRe
                                 per_task[task] += 1;
                             }
                             ResponseStatus::Expired => expired += 1,
+                            ResponseStatus::Error => errors += 1,
                         }
                         if cfg.think_us > 0 {
                             std::thread::sleep(Duration::from_micros(cfg.think_us));
                         }
                     }
-                    Ok((lats, per_task, expired))
+                    Ok((lats, per_task, expired, errors))
                 })
             })
             .collect();
@@ -239,15 +244,16 @@ pub fn closed_loop_in(eng: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadRe
     let elapsed = t0.elapsed().as_secs_f64();
     let mut lats = Vec::new();
     let mut per_task = vec![0u64; num_tasks];
-    let mut expired = 0usize;
-    for (l, p, e) in per_client {
+    let (mut expired, mut errors) = (0usize, 0usize);
+    for (l, p, e, x) in per_client {
         lats.extend(l);
         expired += e;
+        errors += x;
         for (dst, src) in per_task.iter_mut().zip(&p) {
             *dst += src;
         }
     }
-    let total = lats.len() + expired;
+    let total = lats.len() + expired + errors;
     Ok(LoadReport {
         total_requests: total,
         elapsed,
@@ -255,6 +261,7 @@ pub fn closed_loop_in(eng: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadRe
         latency: Stats::from_samples(lats),
         per_task,
         expired,
+        errors,
         engine: eng.stats().delta_since(&base),
     })
 }
@@ -305,6 +312,9 @@ pub struct OpenLoopReport {
     pub ok: usize,
     /// Responses shed with `Expired`.
     pub expired: usize,
+    /// Responses answered `Error` (quarantined requests — zero unless
+    /// faults are armed).
+    pub errors: usize,
     /// Admitted requests dropped without a response (worker failure only —
     /// zero on a clean run, asserted by the drain test).
     pub dropped: usize,
@@ -376,6 +386,7 @@ pub fn open_loop_in(eng: &ServingEngine, cfg: &OpenLoopConfig) -> Result<OpenLoo
     // and is therefore independent of collection order.
     let n_admitted = admitted.len();
     let (mut ok, mut expired, mut dropped, mut met) = (0usize, 0usize, 0usize, 0usize);
+    let mut errors = 0usize;
     let mut lats = Vec::with_capacity(n_admitted);
     let mut last_done_us = t0_us;
     for (submit_us, handle) in admitted {
@@ -396,6 +407,7 @@ pub fn open_loop_in(eng: &ServingEngine, cfg: &OpenLoopConfig) -> Result<OpenLoo
                         }
                     }
                     ResponseStatus::Expired => expired += 1,
+                    ResponseStatus::Error => errors += 1,
                 }
             }
             Err(_) => dropped += 1,
@@ -408,6 +420,7 @@ pub fn open_loop_in(eng: &ServingEngine, cfg: &OpenLoopConfig) -> Result<OpenLoo
         rejected,
         ok,
         expired,
+        errors,
         dropped,
         deadline_met: met,
         elapsed,
@@ -527,6 +540,9 @@ fn engine_window_json(stats: &EngineStats) -> Json {
         ("mean_fill", Json::num(mean_fill)),
         ("queue_wait_mean_ms", Json::num(stats.queue_wait_mean_s() * 1e3)),
         ("queue_wait_max_ms", Json::num(stats.queue_us_max as f64 * 1e-3)),
+        ("worker_restarts", Json::num(stats.worker_restarts as f64)),
+        ("quarantined", Json::num(stats.quarantined as f64)),
+        ("requeued", Json::num(stats.requeued as f64)),
         (
             "size_histogram",
             Json::Arr(stats.batch_hist.iter().map(|&n| Json::num(n as f64)).collect()),
@@ -645,6 +661,7 @@ pub fn overload_report_json(
                 ("rejected_full", Json::num(r.rejected as f64)),
                 ("ok", Json::num(r.ok as f64)),
                 ("shed_expired", Json::num(r.expired as f64)),
+                ("errors", Json::num(r.errors as f64)),
                 ("dropped", Json::num(r.dropped as f64)),
                 ("deadline_met", Json::num(r.deadline_met as f64)),
                 ("elapsed_s", Json::num(r.elapsed)),
@@ -688,6 +705,88 @@ pub fn overload_report_json(
                 ("requests", Json::num(report.capacity.total_requests as f64)),
                 ("latency_s", latency_json(&report.capacity.latency)),
                 ("engine", engine_window_json(&report.capacity.engine)),
+            ]),
+        ),
+        ("levels", Json::Arr(levels)),
+    ])
+}
+
+/// One level of the resilience comparison: the faulted run's self-healing
+/// counters next to its goodput, and the ratio against the fault-free twin.
+fn resilience_level_json(mult: f64, faulted: &OpenLoopReport, baseline: &OpenLoopReport) -> Json {
+    let overhead = if baseline.goodput_rps > 0.0 {
+        faulted.goodput_rps / baseline.goodput_rps
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("mult", Json::num(mult)),
+        ("goodput_rps_faulted", Json::num(faulted.goodput_rps)),
+        ("goodput_rps_baseline", Json::num(baseline.goodput_rps)),
+        // Goodput retained under faults, 1.0 = free self-healing.
+        ("goodput_retention", Json::num(overhead)),
+        ("ok", Json::num(faulted.ok as f64)),
+        ("errors", Json::num(faulted.errors as f64)),
+        ("shed_expired", Json::num(faulted.expired as f64)),
+        ("dropped", Json::num(faulted.dropped as f64)),
+        ("worker_restarts", Json::num(faulted.engine.worker_restarts as f64)),
+        ("quarantined", Json::num(faulted.engine.quarantined as f64)),
+        ("requeued", Json::num(faulted.engine.requeued as f64)),
+        (
+            "latency_s_faulted",
+            faulted.latency.as_ref().map_or(Json::Null, latency_json),
+        ),
+        (
+            "latency_s_baseline",
+            baseline.latency.as_ref().map_or(Json::Null, latency_json),
+        ),
+    ])
+}
+
+/// Assemble the `BENCH_pr8.json` document: two overload sweeps — one with
+/// the fault plan armed, one fault-free twin over the same engine config
+/// and seeds — compared level by level. `goodput_retention` is the
+/// resilience overhead: how much goodput supervision, requeueing, and
+/// quarantine preserve while faults are firing.
+pub fn resilience_report_json(
+    engine: &ServingEngine,
+    cfg: &OverloadConfig,
+    fault_spec: &str,
+    faulted: &OverloadReport,
+    baseline: &OverloadReport,
+) -> Json {
+    let ecfg = engine.config();
+    let levels = faulted
+        .levels
+        .iter()
+        .zip(&baseline.levels)
+        .map(|((mult, f), (_, b))| resilience_level_json(*mult, f, b))
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str("serving_resilience")),
+        (
+            "config",
+            Json::obj(vec![
+                ("model", Json::str(ecfg.model.name())),
+                ("adapter", Json::str(ecfg.adapter.name())),
+                ("rank", Json::num(ecfg.rank as f64)),
+                ("num_tasks", Json::num(ecfg.num_tasks as f64)),
+                ("max_batch", Json::num(ecfg.max_batch as f64)),
+                ("workers", Json::num(ecfg.workers as f64)),
+                ("queue_capacity", Json::num(ecfg.queue_capacity as f64)),
+                ("seed", Json::num(cfg.capacity.seed as f64)),
+                ("requests_per_level", Json::num(cfg.requests_per_level as f64)),
+                ("deadline_ms", Json::num(cfg.deadline.as_secs_f64() * 1e3)),
+                ("faults", Json::str(fault_spec)),
+            ]),
+        ),
+        (
+            "capacity",
+            Json::obj(vec![
+                ("throughput_rps_faulted", Json::num(faulted.capacity.throughput_rps)),
+                ("throughput_rps_baseline", Json::num(baseline.capacity.throughput_rps)),
+                ("errors", Json::num(faulted.capacity.errors as f64)),
+                ("engine_faulted", engine_window_json(&faulted.capacity.engine)),
             ]),
         ),
         ("levels", Json::Arr(levels)),

@@ -36,6 +36,14 @@
 //! sweep behind `BENCH_pr6.json` (goodput / shed / tail latency at
 //! multiples of measured capacity).
 //!
+//! The path is **self-healing** (PR 8): a worker that panics or errors on
+//! a batch is supervised — the batch is requeued, the worker re-binds a
+//! fresh step, and a request that keeps failing is bisected down and
+//! answered with an explicit `Error` (quarantine) instead of poisoning its
+//! batch-mates. [`RetryClient`] gives the TCP client reconnect-with-backoff
+//! and safe re-send; `crate::util::fault` injects deterministic faults at
+//! every seam so all of this is testable (`tests/chaos.rs`).
+//!
 //! Entry points: [`ServingEngine::new`] → [`ServingEngine::serve`] with a
 //! driver closure; [`run_load`] for a full measured run (what `metatt
 //! serve` does); [`serve_net`] inside a driver for the TCP front-end;
@@ -53,10 +61,13 @@ pub use cache::{metatt_from_tensors, AdapterStore, CacheStats, FoldedAdapter};
 pub use engine::{adapter_spec_for, EngineConfig, EngineStats, ServingEngine};
 pub use loadgen::{
     closed_loop_in, open_loop_in, overload_report_json, report_json, request_stream,
-    request_tokens, run_load, run_open_loop, run_overload_bench, warmup_in, LoadGenConfig,
-    LoadReport, OpenLoopConfig, OpenLoopReport, OverloadConfig, OverloadReport,
+    request_tokens, resilience_report_json, run_load, run_open_loop, run_overload_bench,
+    warmup_in, LoadGenConfig, LoadReport, OpenLoopConfig, OpenLoopReport, OverloadConfig,
+    OverloadReport,
 };
 pub use net::{
-    run_net_load, serve_net, NetClient, NetLoadReport, NetResponse, NetStats, WireStatus,
+    run_net_load, serve_net, serve_net_with, NetClient, NetClientConfig, NetLoadReport,
+    NetResponse, NetServerConfig, NetStats, RetryClient, RetryPolicy, WireStatus,
+    DEFAULT_NET_TIMEOUT,
 };
 pub use request::{AdmissionQueue, Request, Response, ResponseHandle, ResponseStatus};

@@ -41,6 +41,7 @@
 use super::engine::ServingEngine;
 use super::request::{Response, ResponseHandle, ResponseStatus};
 use anyhow::{anyhow, bail, Result};
+use crate::util::rng::Pcg64;
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -61,9 +62,26 @@ const ACCEPT_POLL: Duration = Duration::from_millis(5);
 /// Per-connection read timeout — the granularity at which readers notice
 /// the shutdown flag.
 const READ_TICK: Duration = Duration::from_millis(25);
-/// After shutdown, how long a half-received frame may keep a connection
-/// open before it is abandoned (the request was never admitted).
-const DRAIN_GRACE: Duration = Duration::from_secs(1);
+/// Default socket read/write timeout on the client side (`--net-timeout-ms`):
+/// a dead or wedged peer surfaces as a clean timeout error instead of a
+/// forever-blocked `recv`.
+pub const DEFAULT_NET_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Server-side tunables for [`serve_net_with`] (CLI flags map onto these;
+/// [`serve_net`] uses the defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct NetServerConfig {
+    /// After shutdown, how long a half-received frame may keep a
+    /// connection open before it is abandoned (the request was never
+    /// admitted). `--drain-grace-ms`, validated > 0 by the CLI.
+    pub drain_grace: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> NetServerConfig {
+        NetServerConfig { drain_grace: Duration::from_secs(1) }
+    }
+}
 
 /// One parsed response frame (client side).
 #[derive(Clone, Debug, PartialEq)]
@@ -308,11 +326,13 @@ enum ReadStatus {
 /// Fill `buf` from a read-timeout stream. Timeouts are idle ticks: before
 /// any byte of `buf` arrives, a tick with the shutdown flag set returns
 /// [`ReadStatus::Idle`]; once bytes have arrived the frame is finished
-/// regardless (finish admitted work), bounded by [`DRAIN_GRACE`].
+/// regardless (finish admitted work), bounded by the `grace` window
+/// ([`NetServerConfig::drain_grace`]).
 fn read_exact_idle(
     stream: &mut TcpStream,
     buf: &mut [u8],
     shutdown: &AtomicBool,
+    grace: Duration,
 ) -> std::io::Result<ReadStatus> {
     let mut filled = 0;
     let mut grace_from: Option<Instant> = None;
@@ -340,7 +360,7 @@ fn read_exact_idle(
                         return Ok(ReadStatus::Idle);
                     }
                     let from = *grace_from.get_or_insert_with(Instant::now);
-                    if from.elapsed() >= DRAIN_GRACE {
+                    if from.elapsed() >= grace {
                         return Ok(ReadStatus::Idle);
                     }
                 }
@@ -363,6 +383,12 @@ fn response_frame(client_id: u64, resp: &Response) -> Vec<u8> {
     let status = match resp.status {
         ResponseStatus::Ok => WireStatus::Ok,
         ResponseStatus::Expired => WireStatus::Expired,
+        // Quarantined (poisoned request): surface the engine's message as
+        // an error frame.
+        ResponseStatus::Error => {
+            let msg = resp.error.as_deref().unwrap_or("request failed execution");
+            return encode_error(client_id, msg);
+        }
     };
     encode_response(client_id, status, resp.task, resp.generation, resp.batch_rows, &resp.logits)
 }
@@ -393,12 +419,13 @@ fn reader_loop(
     engine: &ServingEngine,
     stream: &mut TcpStream,
     shutdown: &AtomicBool,
+    grace: Duration,
     tx: mpsc::Sender<WriteCmd>,
 ) -> std::io::Result<u64> {
     let mut served = 0u64;
     loop {
         let mut len4 = [0u8; 4];
-        match read_exact_idle(stream, &mut len4, shutdown)? {
+        match read_exact_idle(stream, &mut len4, shutdown, grace)? {
             ReadStatus::Done => {}
             ReadStatus::Eof | ReadStatus::Idle => return Ok(served),
         }
@@ -412,9 +439,19 @@ fn reader_loop(
             ));
         }
         let mut body = vec![0u8; body_len];
-        match read_exact_idle(stream, &mut body, shutdown)? {
+        match read_exact_idle(stream, &mut body, shutdown, grace)? {
             ReadStatus::Done => {}
             ReadStatus::Eof | ReadStatus::Idle => return Ok(served),
+        }
+        // Injected connection drop (`net_drop@frame=N`): abandon the
+        // just-read frame WITHOUT admitting it and stop reading. Returning
+        // Ok lets handle_conn's writer join flush every already-admitted
+        // response before the socket closes, so the client observes:
+        // pending responses, then EOF where this frame's response should
+        // be — exactly a mid-stream connection loss, which its retry layer
+        // must survive by re-sending on a fresh connection.
+        if engine.faults().on_net_frame() {
+            return Ok(served);
         }
         served += 1;
         let cmd = match decode_request(&body) {
@@ -444,12 +481,13 @@ fn handle_conn(
     engine: &ServingEngine,
     mut stream: TcpStream,
     shutdown: &AtomicBool,
+    grace: Duration,
 ) -> std::io::Result<u64> {
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(READ_TICK))?;
     // Handshake: magic in, hello out.
     let mut magic = [0u8; 4];
-    match read_exact_idle(&mut stream, &mut magic, shutdown)? {
+    match read_exact_idle(&mut stream, &mut magic, shutdown, grace)? {
         ReadStatus::Done => {}
         ReadStatus::Eof | ReadStatus::Idle => return Ok(0),
     }
@@ -464,7 +502,7 @@ fn handle_conn(
     let (tx, rx) = mpsc::channel::<WriteCmd>();
     std::thread::scope(|scope| {
         let writer = scope.spawn(move || writer_loop(&mut wstream, rx));
-        let served = reader_loop(engine, &mut stream, shutdown, tx);
+        let served = reader_loop(engine, &mut stream, shutdown, grace, tx);
         // `tx` was moved into reader_loop and dropped there: the writer
         // drains every queued response (workers are still running) and
         // exits; joining it completes the flush-before-close drain.
@@ -487,6 +525,18 @@ pub fn serve_net(
     listener: TcpListener,
     shutdown: &AtomicBool,
 ) -> Result<NetStats> {
+    serve_net_with(engine, listener, shutdown, &NetServerConfig::default())
+}
+
+/// [`serve_net`] with an explicit [`NetServerConfig`] (drain grace for
+/// idle connections after shutdown is signalled).
+pub fn serve_net_with(
+    engine: &ServingEngine,
+    listener: TcpListener,
+    shutdown: &AtomicBool,
+    cfg: &NetServerConfig,
+) -> Result<NetStats> {
+    let grace = cfg.drain_grace;
     listener
         .set_nonblocking(true)
         .map_err(|e| anyhow!("listener nonblocking: {e}"))?;
@@ -499,7 +549,7 @@ pub fn serve_net(
                     connections.fetch_add(1, Ordering::Relaxed);
                     let requests = &requests;
                     scope.spawn(move || {
-                        if let Ok(n) = handle_conn(engine, stream, shutdown) {
+                        if let Ok(n) = handle_conn(engine, stream, shutdown, grace) {
                             requests.fetch_add(n, Ordering::Relaxed);
                         }
                     });
@@ -541,19 +591,47 @@ pub struct NetClient {
     pub hello: Hello,
 }
 
+/// Translate a socket-timeout error kind into a clean, self-describing
+/// error. Blocking sockets report an elapsed `SO_RCVTIMEO`/`SO_SNDTIMEO`
+/// as `WouldBlock` (Unix) or `TimedOut` (Windows) — callers should see
+/// "timed out", not a platform errno.
+fn io_ctx(what: &str, e: std::io::Error) -> anyhow::Error {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            anyhow!("{what}: timed out waiting on the socket")
+        }
+        _ => anyhow!("{what}: {e}"),
+    }
+}
+
 impl NetClient {
-    /// Connect and handshake.
+    /// Connect and handshake with the default socket I/O timeout
+    /// ([`DEFAULT_NET_TIMEOUT`]). A hung or partitioned server therefore
+    /// surfaces as a clean "timed out" error rather than a permanent block.
     pub fn connect(addr: &str) -> Result<NetClient> {
+        Self::connect_with(addr, Some(DEFAULT_NET_TIMEOUT))
+    }
+
+    /// Connect and handshake with an explicit socket I/O timeout applied
+    /// to every read and write (`None` = block forever).
+    pub fn connect_with(addr: &str, io_timeout: Option<Duration>) -> Result<NetClient> {
         let mut stream =
             TcpStream::connect(addr).map_err(|e| anyhow!("connect {addr}: {e}"))?;
         stream.set_nodelay(true).ok();
         stream
+            .set_read_timeout(io_timeout)
+            .map_err(|e| anyhow!("set read timeout: {e}"))?;
+        stream
+            .set_write_timeout(io_timeout)
+            .map_err(|e| anyhow!("set write timeout: {e}"))?;
+        stream
             .write_all(&WIRE_MAGIC)
-            .map_err(|e| anyhow!("handshake write: {e}"))?;
+            .map_err(|e| io_ctx("handshake write", e))?;
         let mut hello = [0u8; 20];
         stream
             .read_exact(&mut hello)
-            .map_err(|e| anyhow!("handshake read: {e}"))?;
+            .map_err(|e| io_ctx("handshake read", e))?;
         if hello[0..4] != WIRE_MAGIC {
             bail!("server answered with bad magic (not a MetaTT serving endpoint?)");
         }
@@ -573,9 +651,19 @@ impl NetClient {
     /// Connect with retries — absorbs the server-startup race when the
     /// client is launched right after the server process.
     pub fn connect_retry(addr: &str, timeout: Duration) -> Result<NetClient> {
+        Self::connect_retry_with(addr, timeout, Some(DEFAULT_NET_TIMEOUT))
+    }
+
+    /// [`NetClient::connect_retry`] with an explicit per-socket I/O
+    /// timeout for the connection once established.
+    pub fn connect_retry_with(
+        addr: &str,
+        timeout: Duration,
+        io_timeout: Option<Duration>,
+    ) -> Result<NetClient> {
         let t0 = Instant::now();
         loop {
-            match Self::connect(addr) {
+            match Self::connect_with(addr, io_timeout) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
                     if t0.elapsed() >= timeout {
@@ -597,19 +685,19 @@ impl NetClient {
         tokens: &[i32],
     ) -> Result<()> {
         let frame = encode_request(id, task, priority, deadline_us, tokens);
-        self.stream.write_all(&frame).map_err(|e| anyhow!("send: {e}"))
+        self.stream.write_all(&frame).map_err(|e| io_ctx("send", e))
     }
 
     /// Receive the next response frame (blocking).
     pub fn recv(&mut self) -> Result<NetResponse> {
         let mut len4 = [0u8; 4];
-        self.stream.read_exact(&mut len4).map_err(|e| anyhow!("recv: {e}"))?;
+        self.stream.read_exact(&mut len4).map_err(|e| io_ctx("recv", e))?;
         let body_len = u32::from_le_bytes(len4) as usize;
         if body_len > MAX_FRAME {
             bail!("response frame of {body_len} bytes exceeds the {MAX_FRAME} cap");
         }
         let mut body = vec![0u8; body_len];
-        self.stream.read_exact(&mut body).map_err(|e| anyhow!("recv body: {e}"))?;
+        self.stream.read_exact(&mut body).map_err(|e| io_ctx("recv body", e))?;
         decode_response(&body)
     }
 
@@ -624,6 +712,179 @@ impl NetClient {
     ) -> Result<NetResponse> {
         self.send(id, task, priority, deadline_us, tokens)?;
         self.recv()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Retrying client
+// ---------------------------------------------------------------------------
+
+/// Retry/backoff policy for [`RetryClient`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts per request, including the first (>= 1).
+    pub max_attempts: u32,
+    /// Backoff before retry `k` (1-based) is `base_backoff * 2^(k-1)`,
+    /// capped at `max_backoff`, then scaled by jitter in `[0.5, 1.0]`.
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+    /// Seed for the jitter stream — fixed seed, fixed delays.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 5,
+            base_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_secs(1),
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before 1-based retry `attempt`, jittered by `rng`.
+    /// Exposed so tests can pin the schedule for a given seed.
+    pub fn backoff_delay(&self, attempt: u32, rng: &mut Pcg64) -> Duration {
+        let exp = attempt.saturating_sub(1).min(20);
+        let raw = self
+            .base_backoff
+            .saturating_mul(1u32 << exp)
+            .min(self.max_backoff);
+        // Jitter in [0.5, 1.0] keeps retries from synchronising across
+        // clients while never collapsing the delay to zero.
+        raw.mul_f64(0.5 + 0.5 * rng.uniform_f64())
+    }
+}
+
+/// A [`NetClient`] wrapper that survives connection loss: on any send or
+/// receive failure it reconnects (with capped exponential backoff and
+/// seeded jitter) and re-sends the request. Re-sending is safe because
+/// serve computation is pure — responses are keyed by the caller-chosen
+/// request id, and a request the server never admitted left no trace.
+pub struct RetryClient {
+    addr: String,
+    connect_timeout: Duration,
+    io_timeout: Option<Duration>,
+    policy: RetryPolicy,
+    rng: Pcg64,
+    conn: Option<NetClient>,
+    /// Round trips that needed at least one retry.
+    pub retries: u64,
+    /// Reconnects performed after a connection was lost mid-use
+    /// (excludes each client's initial connect).
+    pub reconnects: u64,
+}
+
+impl RetryClient {
+    /// Lazily-connecting client for `addr`. `connect_timeout` bounds each
+    /// (re)connect attempt loop; `io_timeout` applies per socket op.
+    pub fn new(
+        addr: &str,
+        connect_timeout: Duration,
+        io_timeout: Option<Duration>,
+        policy: RetryPolicy,
+    ) -> RetryClient {
+        RetryClient {
+            addr: addr.to_string(),
+            connect_timeout,
+            io_timeout,
+            rng: Pcg64::with_stream(policy.seed, 0x4e7c),
+            policy,
+            conn: None,
+            retries: 0,
+            reconnects: 0,
+        }
+    }
+
+    /// The server hello, connecting first if necessary.
+    pub fn hello(&mut self) -> Result<Hello> {
+        Ok(self.ensure()?.hello)
+    }
+
+    fn ensure(&mut self) -> Result<&mut NetClient> {
+        if self.conn.is_none() {
+            self.conn = Some(NetClient::connect_retry_with(
+                &self.addr,
+                self.connect_timeout,
+                self.io_timeout,
+            )?);
+        }
+        Ok(self.conn.as_mut().unwrap())
+    }
+
+    /// One round trip that retries across connection loss. Fails only
+    /// after `max_attempts` consecutive failures for this request.
+    pub fn call(
+        &mut self,
+        id: u64,
+        task: usize,
+        priority: u8,
+        deadline_us: u64,
+        tokens: &[i32],
+    ) -> Result<NetResponse> {
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let had_conn = self.conn.is_some();
+            let res = self
+                .ensure()
+                .and_then(|c| c.call(id, task, priority, deadline_us, tokens));
+            match res {
+                Ok(resp) => {
+                    if resp.id != id {
+                        // Ordering is per-connection; a stray id means the
+                        // stream is out of sync. Drop it and retry fresh.
+                        self.conn = None;
+                        if attempt >= self.policy.max_attempts.max(1) {
+                            bail!(
+                                "request {id} failed after {attempt} attempts \
+                                 (last response carried id {})",
+                                resp.id
+                            );
+                        }
+                    } else {
+                        return Ok(resp);
+                    }
+                }
+                Err(e) => {
+                    self.conn = None;
+                    if attempt >= self.policy.max_attempts.max(1) {
+                        return Err(e.context(format!(
+                            "request {id} failed after {attempt} attempts"
+                        )));
+                    }
+                }
+            }
+            if had_conn {
+                self.reconnects += 1;
+            }
+            self.retries += 1;
+            std::thread::sleep(self.policy.backoff_delay(attempt, &mut self.rng));
+        }
+    }
+}
+
+/// Client-side knobs for [`run_net_load`].
+#[derive(Clone, Copy, Debug)]
+pub struct NetClientConfig {
+    /// How long each client keeps retrying the initial connect.
+    pub connect_timeout: Duration,
+    /// Per-socket-operation timeout (`None` = block forever).
+    pub io_timeout: Option<Duration>,
+    /// Retry/backoff across connection loss; each client derives its own
+    /// jitter stream from `retry.seed + client index`.
+    pub retry: RetryPolicy,
+}
+
+impl Default for NetClientConfig {
+    fn default() -> Self {
+        NetClientConfig {
+            connect_timeout: Duration::from_secs(10),
+            io_timeout: Some(DEFAULT_NET_TIMEOUT),
+            retry: RetryPolicy::default(),
+        }
     }
 }
 
@@ -643,6 +904,10 @@ pub struct NetLoadReport {
     /// send → receive round-trip of computed responses, seconds; None when
     /// nothing completed.
     pub latency: Option<crate::bench::Stats>,
+    /// Round trips that needed at least one retry, across all clients.
+    pub retries: u64,
+    /// Mid-run reconnects after connection loss, across all clients.
+    pub reconnects: u64,
 }
 
 /// Closed-loop clients over TCP: each thread opens its own connection,
@@ -654,7 +919,7 @@ pub struct NetLoadReport {
 pub fn run_net_load(
     addr: &str,
     cfg: &super::loadgen::LoadGenConfig,
-    connect_timeout: Duration,
+    net: &NetClientConfig,
 ) -> Result<NetLoadReport> {
     if cfg.clients == 0 || cfg.requests_per_client == 0 {
         bail!(
@@ -665,16 +930,29 @@ pub fn run_net_load(
     }
     let deadline_us = cfg.deadline.map_or(0, |d| d.as_micros() as u64);
     let t0 = Instant::now();
-    let per_client: Vec<(Vec<f64>, usize, usize)> = std::thread::scope(|scope| {
+    type ClientOut = (Vec<f64>, usize, usize, u64, u64);
+    let per_client: Vec<ClientOut> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.clients)
             .map(|client| {
-                scope.spawn(move || -> Result<(Vec<f64>, usize, usize)> {
-                    let mut conn = NetClient::connect_retry(addr, connect_timeout)?;
+                scope.spawn(move || -> Result<ClientOut> {
+                    // Each client gets its own jitter stream so backoffs
+                    // de-synchronise even under a shared base seed.
+                    let policy = RetryPolicy {
+                        seed: net.retry.seed.wrapping_add(client as u64),
+                        ..net.retry
+                    };
+                    let mut conn = RetryClient::new(
+                        addr,
+                        net.connect_timeout,
+                        net.io_timeout,
+                        policy,
+                    );
+                    let hello = conn.hello()?;
                     let stream = super::loadgen::request_stream(
                         cfg,
-                        conn.hello.num_tasks,
-                        conn.hello.seq,
-                        conn.hello.vocab,
+                        hello.num_tasks,
+                        hello.seq,
+                        hello.vocab,
                         client,
                         cfg.requests_per_client,
                     );
@@ -685,9 +963,6 @@ pub fn run_net_load(
                         let sent = Instant::now();
                         let resp =
                             conn.call(id, task, cfg.priority, deadline_us, &tokens)?;
-                        if resp.id != id {
-                            bail!("response id {} for request {id}", resp.id);
-                        }
                         match resp.status {
                             WireStatus::Ok => lats.push(sent.elapsed().as_secs_f64()),
                             WireStatus::Expired => expired += 1,
@@ -697,7 +972,7 @@ pub fn run_net_load(
                             std::thread::sleep(Duration::from_micros(cfg.think_us));
                         }
                     }
-                    Ok((lats, expired, errors))
+                    Ok((lats, expired, errors, conn.retries, conn.reconnects))
                 })
             })
             .collect();
@@ -710,10 +985,13 @@ pub fn run_net_load(
     let elapsed = t0.elapsed().as_secs_f64();
     let mut lats = Vec::new();
     let (mut expired, mut errors) = (0usize, 0usize);
-    for (l, e, x) in per_client {
+    let (mut retries, mut reconnects) = (0u64, 0u64);
+    for (l, e, x, r, rc) in per_client {
         lats.extend(l);
         expired += e;
         errors += x;
+        retries += r;
+        reconnects += rc;
     }
     let ok = lats.len();
     Ok(NetLoadReport {
@@ -728,6 +1006,8 @@ pub fn run_net_load(
         } else {
             Some(crate::bench::Stats::from_samples(lats))
         },
+        retries,
+        reconnects,
     })
 }
 
@@ -802,5 +1082,33 @@ mod tests {
         put_u64(&mut bad, 1);
         bad.push(17);
         assert!(decode_response(&bad).is_err());
+    }
+
+    #[test]
+    fn backoff_schedule_is_seed_deterministic_capped_and_jittered() {
+        let policy = RetryPolicy {
+            max_attempts: 8,
+            base_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_millis(100),
+            seed: 7,
+        };
+        let schedule = |seed: u64| -> Vec<Duration> {
+            let mut rng = Pcg64::with_stream(seed, 0x4e7c);
+            (1..=6).map(|k| policy.backoff_delay(k, &mut rng)).collect()
+        };
+        assert_eq!(schedule(7), schedule(7), "same seed, same delays");
+        assert_ne!(schedule(7), schedule(8), "different seed, different jitter");
+        let mut rng = Pcg64::with_stream(7, 0x4e7c);
+        for (k, d) in (1u32..=6).map(|k| (k, policy.backoff_delay(k, &mut rng))) {
+            let raw = policy
+                .base_backoff
+                .saturating_mul(1 << (k - 1))
+                .min(policy.max_backoff);
+            assert!(d >= raw.mul_f64(0.5) && d <= raw, "attempt {k}: {d:?} vs {raw:?}");
+            // The cap binds from attempt 4 on (20 * 2^3 = 160 > 100).
+            if k >= 4 {
+                assert!(d <= policy.max_backoff);
+            }
+        }
     }
 }

@@ -37,6 +37,11 @@ pub enum ResponseStatus {
     /// Shed: the deadline had already passed when a worker reached the
     /// request, so no compute was spent; `logits` is empty.
     Expired,
+    /// Quarantined: the request repeatedly failed execution (poisoned —
+    /// its batch panicked, it was retried solo, and it panicked again).
+    /// `logits` is empty; `error` names the failure. Its batch-mates are
+    /// unaffected.
+    Error,
 }
 
 /// The engine's answer to one [`Request`].
@@ -57,6 +62,9 @@ pub struct Response {
     /// Lets open-loop load generation measure completion-time latency and
     /// deadline attainment without a collector thread in the timing path.
     pub done_us: u64,
+    /// Failure description when `status` is [`ResponseStatus::Error`];
+    /// `None` otherwise.
+    pub error: Option<String>,
 }
 
 /// A queued request plus its completion channel, admission timestamp, and
@@ -70,6 +78,13 @@ pub(crate) struct Pending {
     /// Absolute expiry: a worker that reaches this request at or after the
     /// deadline sheds it instead of computing dead work. None = never.
     pub deadline: Option<Instant>,
+    /// How many times a batch containing this request failed (panic or
+    /// execution error). Supervision increments it on requeue; at 2 the
+    /// request runs solo, and a solo failure quarantines it.
+    pub panics: u32,
+    /// Quarantine-retry flag: run this request in a batch of one so a
+    /// poisoned batch-mate can't take it down (and vice versa).
+    pub solo: bool,
 }
 
 impl Pending {
@@ -186,8 +201,10 @@ impl AdmissionQueue {
 
     /// Fail-fast close: close AND drop every queued request. Dropping a
     /// `Pending` drops its response sender, so blocked clients observe a
-    /// receive error instead of hanging forever — this is the worker-failure
-    /// path, where nothing may remain that no one will ever execute.
+    /// receive error instead of hanging forever. Since PR 8 worker panics
+    /// are supervised (batch requeued, worker re-bound), so this is the
+    /// last-resort path for unrecoverable failures only — e.g. a worker
+    /// that cannot re-bind a fresh step.
     pub fn abort(&self) {
         let drained = {
             let mut inner = self.inner.lock().unwrap();
@@ -198,6 +215,22 @@ impl AdmissionQueue {
         };
         // Senders drop outside the lock.
         drop(drained);
+    }
+
+    /// Put already-admitted requests back at the head of the queue (worker
+    /// supervision: the in-flight batch of a panicked worker). Deliberately
+    /// ignores both capacity (these requests already held admission — a
+    /// transient overshoot beats dropping them) and the closed flag (a
+    /// draining shutdown must still answer them).
+    pub(crate) fn requeue(&self, batch: Vec<Pending>) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for p in batch.into_iter().rev() {
+            inner.queue.push_front(p);
+        }
+        self.not_empty.notify_all();
     }
 
     /// Requests currently waiting (diagnostics).
@@ -227,6 +260,8 @@ mod tests {
                 tx,
                 enqueued: Instant::now(),
                 deadline: None,
+                panics: 0,
+                solo: false,
             },
             rx,
         )
@@ -300,6 +335,8 @@ mod tests {
                     tx,
                     enqueued: now,
                     deadline: deadline.map(|d| now + d),
+                    panics: 0,
+                    solo: false,
                 },
                 _rx,
             )
@@ -322,5 +359,93 @@ mod tests {
         assert!(z.expired_at(now + Duration::from_nanos(1)));
         assert!(z.expired_at(now), "boundary instant counts as expired");
         assert!(!late.expired_at(now));
+    }
+
+    #[test]
+    fn close_keeps_queued_requests_while_abort_errors_them() {
+        // close(): already-admitted requests stay drainable — their
+        // response channels are intact. abort(): queued requests are
+        // dropped, so waiting clients see a disconnect, not a hang.
+        let q = AdmissionQueue::new(4);
+        let (p0, rx0) = pending(0, 0);
+        let (p1, rx1) = pending(1, 0);
+        q.submit(p0).unwrap();
+        q.submit(p1).unwrap();
+        q.close();
+        assert_eq!(q.len(), 2, "close must not discard admitted work");
+        // A worker can still drain and answer after close.
+        let p = q.inner.lock().unwrap().queue.pop_front().unwrap();
+        p.tx.send(Response {
+            id: p.req.id,
+            task: p.req.task,
+            status: ResponseStatus::Ok,
+            logits: vec![0.5, 0.5],
+            batch_rows: 1,
+            generation: 0,
+            done_us: 0,
+            error: None,
+        })
+        .unwrap();
+        assert_eq!(rx0.recv().unwrap().status, ResponseStatus::Ok);
+        // abort() on the same queue drops the remainder: the client's
+        // receive errors instead of blocking forever.
+        q.abort();
+        assert_eq!(q.len(), 0, "abort discards queued work");
+        assert!(rx1.recv().is_err(), "aborted request must disconnect its handle");
+    }
+
+    #[test]
+    fn producer_blocked_on_a_full_queue_wakes_with_an_error_on_close() {
+        use std::sync::Arc;
+        let q = Arc::new(AdmissionQueue::new(1));
+        let (p0, _rx0) = pending(0, 0);
+        q.submit(p0).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let (p1, _rx1) = pending(1, 0);
+            q2.submit(p1)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        let res = h.join().unwrap();
+        assert!(res.is_err(), "blocked producer must wake with an error, not hang");
+        assert_eq!(q.len(), 1, "the admitted request is still drainable");
+    }
+
+    #[test]
+    fn producer_blocked_on_a_full_queue_wakes_with_an_error_on_abort() {
+        use std::sync::Arc;
+        let q = Arc::new(AdmissionQueue::new(1));
+        let (p0, rx0) = pending(0, 0);
+        q.submit(p0).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let (p1, _rx1) = pending(1, 0);
+            q2.submit(p1)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.abort();
+        let res = h.join().unwrap();
+        assert!(res.is_err(), "blocked producer must wake with an error, not hang");
+        assert!(rx0.recv().is_err(), "abort drops the admitted request too");
+    }
+
+    #[test]
+    fn requeue_front_loads_even_a_full_or_closed_queue() {
+        let q = AdmissionQueue::new(1);
+        let (p0, _rx0) = pending(5, 0);
+        q.submit(p0).unwrap();
+        q.close();
+        // Supervision re-queues an in-flight batch: capacity and the
+        // closed flag must not apply — this work already held admission.
+        let (p1, _rx1) = pending(1, 0);
+        let (p2, _rx2) = pending(2, 0);
+        q.requeue(vec![p1, p2]);
+        assert_eq!(q.len(), 3);
+        // Relative order of the requeued batch is preserved, ahead of the
+        // previously queued tail.
+        let inner = q.inner.lock().unwrap();
+        let ids: Vec<u64> = inner.queue.iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![1, 2, 5]);
     }
 }

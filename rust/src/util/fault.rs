@@ -1,0 +1,303 @@
+//! Deterministic fault injection for the serving stack (PR 8).
+//!
+//! A [`FaultPlan`] is a parsed, seeded schedule of faults that the serving
+//! path consults at named injection points. The spec grammar (comma
+//! separated, also read from the `METATT_FAULTS` env var by the CLI):
+//!
+//! ```text
+//! worker_panic@tick=17     panic inside the worker's batch execution on
+//!                          the 17th serve tick (global 1-based counter
+//!                          across all workers of the engine)
+//! net_drop@frame=3         drop the TCP connection that delivers the 3rd
+//!                          request frame (global across connections),
+//!                          before the request is admitted
+//! slow_tick=5ms@p=0.01     sleep 5ms before a tick with probability 0.01
+//!                          (seeded rng — deterministic draw sequence)
+//! torn_write@save=2        tear the 2nd checkpoint save: only a prefix of
+//!                          the temp file lands and the atomic rename
+//!                          never happens
+//! seed=42                  seed for the probabilistic faults
+//! ```
+//!
+//! Every hook takes one relaxed atomic load and returns when the plan is
+//! empty, so an unfaulted engine pays nothing on the hot path — in
+//! particular the zero-allocation warmed serving tick is untouched (the
+//! hooks never allocate). Each plan owns its own counters and rng: tests
+//! running in parallel inside one process do not interfere, which is why
+//! the plan is threaded explicitly (`EngineConfig::faults`,
+//! `save_with_meta_faults`) instead of living in a process-wide global.
+
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A seeded, thread-safe schedule of injected faults. See the module docs
+/// for the spec grammar. `FaultPlan::empty()` (the default) disarms every
+/// hook.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// The original spec string (for display / bench records).
+    spec: String,
+    /// 1-based serve-tick ordinals that panic (`worker_panic@tick=N`).
+    panic_ticks: Vec<u64>,
+    /// 1-based request-frame ordinals that drop the connection
+    /// (`net_drop@frame=N`).
+    drop_frames: Vec<u64>,
+    /// 1-based checkpoint-save ordinals that tear (`torn_write@save=N`).
+    torn_saves: Vec<u64>,
+    /// `slow_tick=DURms@p=P`: sleep `DUR` before a tick with probability
+    /// `P`.
+    slow: Option<(Duration, f64)>,
+    ticks: AtomicU64,
+    frames: AtomicU64,
+    saves: AtomicU64,
+    rng: Mutex<Pcg64>,
+    armed: bool,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::empty()
+    }
+}
+
+impl FaultPlan {
+    /// A disarmed plan: every hook is a near-free early return.
+    pub fn empty() -> FaultPlan {
+        FaultPlan::parse("").expect("empty spec always parses")
+    }
+
+    /// Parse a fault spec (see module docs). An empty or whitespace-only
+    /// spec yields a disarmed plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut panic_ticks = Vec::new();
+        let mut drop_frames = Vec::new();
+        let mut torn_saves = Vec::new();
+        let mut slow = None;
+        let mut seed = 0u64;
+        for raw in spec.split(',') {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if let Some(rest) = item.strip_prefix("worker_panic@tick=") {
+                panic_ticks.push(parse_ordinal(item, rest)?);
+            } else if let Some(rest) = item.strip_prefix("net_drop@frame=") {
+                drop_frames.push(parse_ordinal(item, rest)?);
+            } else if let Some(rest) = item.strip_prefix("torn_write@save=") {
+                torn_saves.push(parse_ordinal(item, rest)?);
+            } else if let Some(rest) = item.strip_prefix("slow_tick=") {
+                let (dur_s, p_s) = rest
+                    .split_once("@p=")
+                    .ok_or_else(|| format!("`{item}`: expected slow_tick=<N>ms@p=<P>"))?;
+                let ms = dur_s
+                    .strip_suffix("ms")
+                    .ok_or_else(|| format!("`{item}`: duration needs an `ms` suffix"))?;
+                let ms: u64 = ms
+                    .parse()
+                    .map_err(|_| format!("`{item}`: bad millisecond count `{ms}`"))?;
+                let p: f64 = p_s
+                    .parse()
+                    .map_err(|_| format!("`{item}`: bad probability `{p_s}`"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("`{item}`: probability must be in [0, 1]"));
+                }
+                if slow.is_some() {
+                    return Err(format!("`{item}`: slow_tick given twice"));
+                }
+                slow = Some((Duration::from_millis(ms), p));
+            } else if let Some(rest) = item.strip_prefix("seed=") {
+                seed = rest
+                    .parse()
+                    .map_err(|_| format!("`{item}`: bad seed `{rest}`"))?;
+            } else {
+                return Err(format!(
+                    "unknown fault `{item}` (expected worker_panic@tick=N, \
+                     net_drop@frame=N, torn_write@save=N, slow_tick=<N>ms@p=<P>, \
+                     or seed=N)"
+                ));
+            }
+        }
+        let armed = !panic_ticks.is_empty()
+            || !drop_frames.is_empty()
+            || !torn_saves.is_empty()
+            || slow.is_some();
+        Ok(FaultPlan {
+            spec: spec.trim().to_string(),
+            panic_ticks,
+            drop_frames,
+            torn_saves,
+            slow,
+            ticks: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            saves: AtomicU64::new(0),
+            rng: Mutex::new(Pcg64::with_stream(seed, 0xfa17)),
+            armed,
+        })
+    }
+
+    /// Parse the `METATT_FAULTS` env var (absent/empty → disarmed plan).
+    pub fn from_env() -> Result<FaultPlan, String> {
+        match std::env::var("METATT_FAULTS") {
+            Ok(spec) => FaultPlan::parse(&spec),
+            Err(_) => Ok(FaultPlan::empty()),
+        }
+    }
+
+    /// True if any fault is scheduled.
+    pub fn is_armed(&self) -> bool {
+        self.armed
+    }
+
+    /// The original spec string.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Worker-side hook, called inside the batch execution guard right
+    /// before the forward. May sleep (`slow_tick`) and may panic
+    /// (`worker_panic`) — the engine's supervision contains the panic.
+    #[inline]
+    pub fn on_serve_tick(&self) {
+        if !self.armed {
+            return;
+        }
+        self.serve_tick_armed();
+    }
+
+    #[cold]
+    fn serve_tick_armed(&self) {
+        let tick = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some((dur, p)) = self.slow {
+            let fire = self.rng.lock().unwrap().bernoulli(p);
+            if fire {
+                std::thread::sleep(dur);
+            }
+        }
+        if self.panic_ticks.contains(&tick) {
+            panic!("injected fault: worker_panic at serve tick {tick}");
+        }
+    }
+
+    /// Network hook, called once per fully-read request frame *before*
+    /// admission. Returns true when the server should drop the connection
+    /// (abandoning the frame — the client must retry on a new connection).
+    #[inline]
+    pub fn on_net_frame(&self) -> bool {
+        if !self.armed {
+            return false;
+        }
+        let frame = self.frames.fetch_add(1, Ordering::Relaxed) + 1;
+        self.drop_frames.contains(&frame)
+    }
+
+    /// Checkpoint hook, called once per `save`. Returns true when this
+    /// save should be torn (partial temp file, no rename).
+    #[inline]
+    pub fn on_save(&self) -> bool {
+        if !self.armed {
+            return false;
+        }
+        let save = self.saves.fetch_add(1, Ordering::Relaxed) + 1;
+        self.torn_saves.contains(&save)
+    }
+}
+
+fn parse_ordinal(item: &str, rest: &str) -> Result<u64, String> {
+    let n: u64 = rest
+        .parse()
+        .map_err(|_| format!("`{item}`: bad ordinal `{rest}`"))?;
+    if n == 0 {
+        return Err(format!("`{item}`: ordinals are 1-based"));
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_whitespace_specs_are_disarmed() {
+        for spec in ["", "  ", " , ,"] {
+            let plan = FaultPlan::parse(spec).unwrap();
+            assert!(!plan.is_armed());
+            assert!(!plan.on_net_frame());
+            assert!(!plan.on_save());
+            plan.on_serve_tick(); // must be a no-op, not a panic
+        }
+    }
+
+    #[test]
+    fn full_grammar_parses() {
+        let plan = FaultPlan::parse(
+            "worker_panic@tick=17, net_drop@frame=3,slow_tick=5ms@p=0.01,\
+             torn_write@save=2,seed=9",
+        )
+        .unwrap();
+        assert!(plan.is_armed());
+        assert_eq!(plan.panic_ticks, vec![17]);
+        assert_eq!(plan.drop_frames, vec![3]);
+        assert_eq!(plan.torn_saves, vec![2]);
+        let (dur, p) = plan.slow.unwrap();
+        assert_eq!(dur, Duration::from_millis(5));
+        assert!((p - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_the_offending_item() {
+        for (spec, needle) in [
+            ("worker_panic@tick=zero", "bad ordinal"),
+            ("worker_panic@tick=0", "1-based"),
+            ("net_drop@frame=", "bad ordinal"),
+            ("slow_tick=5@p=0.1", "ms` suffix"),
+            ("slow_tick=5ms@p=1.5", "probability"),
+            ("slow_tick=5ms", "expected slow_tick"),
+            ("slow_tick=1ms@p=0.1,slow_tick=2ms@p=0.2", "twice"),
+            ("seed=abc", "bad seed"),
+            ("explode@now=1", "unknown fault"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn counters_fire_exactly_at_their_ordinal() {
+        let plan = FaultPlan::parse("net_drop@frame=3,torn_write@save=1").unwrap();
+        assert!(!plan.on_net_frame()); // frame 1
+        assert!(!plan.on_net_frame()); // frame 2
+        assert!(plan.on_net_frame()); // frame 3 — fires
+        assert!(!plan.on_net_frame()); // frame 4
+        assert!(plan.on_save()); // save 1 — fires
+        assert!(!plan.on_save()); // save 2
+    }
+
+    #[test]
+    fn worker_panic_fires_on_the_scheduled_tick_only() {
+        let plan = FaultPlan::parse("worker_panic@tick=2").unwrap();
+        plan.on_serve_tick(); // tick 1: fine
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.on_serve_tick() // tick 2: panics
+        }));
+        assert!(err.is_err(), "tick 2 must panic");
+        plan.on_serve_tick(); // tick 3: fine again
+    }
+
+    #[test]
+    fn slow_tick_draws_are_seed_deterministic() {
+        // Two plans with the same seed consume identical bernoulli
+        // sequences; a different seed diverges. Probed via the rng
+        // directly so the test never sleeps.
+        let a = FaultPlan::parse("slow_tick=1ms@p=0.5,seed=7").unwrap();
+        let b = FaultPlan::parse("slow_tick=1ms@p=0.5,seed=7").unwrap();
+        let c = FaultPlan::parse("slow_tick=1ms@p=0.5,seed=8").unwrap();
+        let draw = |p: &FaultPlan| -> Vec<bool> {
+            let mut rng = p.rng.lock().unwrap();
+            (0..64).map(|_| rng.bernoulli(0.5)).collect()
+        };
+        assert_eq!(draw(&a), draw(&b));
+        assert_ne!(draw(&a), draw(&c));
+    }
+}

@@ -1,6 +1,7 @@
 //! Hand-rolled infrastructure substrates (the offline registry ships only
 //! the `xla` closure): RNG, JSON, TOML, and a thread pool.
 
+pub mod fault;
 pub mod json;
 pub mod rng;
 pub mod threadpool;

@@ -46,6 +46,7 @@ fn engine_cfg(workers: usize, max_batch: usize) -> EngineConfig {
         workers,
         cache_capacity_bytes: 64 << 20,
         dtype: DtypeKind::F32,
+        faults: std::sync::Arc::new(metatt::util::fault::FaultPlan::empty()),
     }
 }
 

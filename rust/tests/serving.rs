@@ -52,6 +52,7 @@ fn engine_cfg(workers: usize, max_batch: usize) -> EngineConfig {
         workers,
         cache_capacity_bytes: 64 << 20,
         dtype: DtypeKind::F32,
+        faults: std::sync::Arc::new(metatt::util::fault::FaultPlan::empty()),
     }
 }
 
@@ -384,6 +385,7 @@ fn graceful_drain_answers_every_admitted_request() {
                 ok += 1;
             }
             ResponseStatus::Expired => expired += 1,
+            ResponseStatus::Error => panic!("request {i} quarantined with no faults armed"),
         }
         // A deadline-free request can never be shed.
         if i % 3 != 0 {
