@@ -75,7 +75,21 @@ commands:
              --faults SPEC    arm deterministic fault injection (also env
                               METATT_FAULTS), e.g. \"worker_panic@tick=17,
                               net_drop@frame=3,slow_tick=5ms@p=0.01,
-                              torn_write@save=2,seed=1\"
+                              torn_write@save=2,shard_down@tick=4,
+                              shard_wedge=5ms@p=0.01,seed=1\"
+             --shards N       sharded topology: N engines behind one
+                              supervised router (heartbeat health, failover,
+                              work stealing); works with --listen and the
+                              in-process load generator
+                              [--replicas R]   same-adapter replicas per
+                              group (R must divide N; default N = one group)
+                              [--route affinity|rr]  replica pick within a
+                              group (affinity keeps per-task folds hot)
+             --topology       sharded capacity sweep over layouts of the
+                              worker budget (4 workers -> 1x4, 2x2, 4x1),
+                              then a kill-one-shard-mid-run goodput
+                              retention probe on the smallest multi-shard
+                              layout; records BENCH_pr9.json
   run        config-file-driven run
              --config configs/foo.toml
 
@@ -110,8 +124,10 @@ const OPTS: &[&str] = &[
     "overload-mults", "overload-requests",
     // fault injection + robustness knobs
     "faults", "net-timeout-ms", "drain-grace-ms",
+    // sharded serving topology
+    "shards", "replicas", "route",
 ];
-const FLAGS: &[&str] = &["help", "no-checkpoint", "verbose", "overload"];
+const FLAGS: &[&str] = &["help", "no-checkpoint", "verbose", "overload", "topology"];
 
 fn run() -> Result<()> {
     let args = Args::from_env(OPTS, FLAGS).map_err(|e| anyhow!(e))?;
@@ -737,6 +753,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let backend = backend_for(args)?;
     let backbone = ckpt_for(args, model);
+
+    // Sharded topologies (PR 9): `--topology` sweeps shard layouts into
+    // BENCH_pr9.json; `--shards N > 1` serves one layout — TCP front-end
+    // or the in-process load generator — behind a supervised router.
+    // Every shard gets the same adapter chain: replicas of a group MUST
+    // hold identical state, and that is what makes failover transparent.
+    let shards = args.usize_or("shards", 1).map_err(|e| anyhow!(e))?;
+    let replicas = args.usize_or("replicas", shards.max(1)).map_err(|e| anyhow!(e))?;
+    let route = serving::RoutePolicy::parse(&args.str_or("route", "affinity"))?;
+    if args.flag("topology") {
+        return serve_topology(args, backend.as_ref(), &cfg, &tt, backbone.as_deref());
+    }
+    if shards > 1 {
+        if args.flag("overload") {
+            bail!(
+                "--overload drives a single engine; use --topology for the \
+                 sharded sweep (records BENCH_pr9.json)"
+            );
+        }
+        let rcfg = serving::RouterConfig {
+            engine: cfg,
+            shards,
+            replicas,
+            route,
+            ..serving::RouterConfig::default()
+        };
+        let router =
+            serving::ShardRouter::new(backend.as_ref(), rcfg, |_| tt.clone(), backbone.as_deref())?;
+        if let Some(addr) = args.get("listen") {
+            return serve_listen(args, &router, addr);
+        }
+        return serve_router_load(args, &router, seed, deadline, priority);
+    }
+
     // A fault-free twin for the resilience comparison (`--overload` with
     // faults armed): same config and adapter state, empty fault plan.
     let twin = (args.flag("overload") && faults.is_armed()).then(|| {
@@ -851,10 +901,12 @@ fn parse_mix(args: &Args, num_tasks: usize) -> Result<Vec<f64>> {
 
 /// `serve --listen ADDR`: run the TCP front-end until `--serve-secs`
 /// elapses (0 = until the process is killed), then drain gracefully —
-/// stop accepting, finish every admitted request, close sockets.
-fn serve_listen(
+/// stop accepting, finish every admitted request, close sockets. Generic
+/// over [`ServeTarget`]: one engine and an N-shard router speak the same
+/// wire protocol, routing lives strictly behind the admission seam.
+fn serve_listen<T: metatt::serving::ServeTarget>(
     args: &Args,
-    engine: &metatt::serving::ServingEngine<'_>,
+    engine: &T,
     addr: &str,
 ) -> Result<()> {
     use std::net::TcpListener;
@@ -873,14 +925,14 @@ fn serve_listen(
     };
     println!(
         "listening on {local} (MTS1; {} tasks, seq {}, vocab {}, {} classes){}",
-        engine.config().num_tasks,
+        engine.num_tasks(),
         engine.seq_len(),
         engine.vocab(),
-        engine.config().classes,
+        engine.classes(),
         if secs > 0 { format!(" — stopping after {secs}s") } else { String::new() }
     );
     let shutdown = Arc::new(AtomicBool::new(false));
-    let net = engine.serve(|eng| {
+    let net = engine.serve_session(|eng| {
         if secs > 0 {
             let sd = Arc::clone(&shutdown);
             std::thread::spawn(move || {
@@ -904,6 +956,75 @@ fn serve_listen(
             ("requests", Json::num(net.requests as f64)),
             ("computed", Json::num(stats.requests as f64)),
             ("shed", Json::num(stats.shed as f64)),
+        ]),
+    );
+    Ok(())
+}
+
+/// `serve --shards N` without a front-end: the in-process closed-loop
+/// load generator pointed at a sharded router. Reports the aggregate
+/// engine view plus the supervision counters (failovers/stolen/moved).
+fn serve_router_load(
+    args: &Args,
+    router: &metatt::serving::ShardRouter<'_>,
+    seed: u64,
+    deadline: Option<std::time::Duration>,
+    priority: u8,
+) -> Result<()> {
+    use metatt::serving::{self, LoadGenConfig};
+    let requests = args.usize_or("requests", 100).map_err(|e| anyhow!(e))?;
+    let clients = args.usize_or("clients", 4).map_err(|e| anyhow!(e))?;
+    if requests == 0 || clients == 0 {
+        bail!("--requests and --clients must be >= 1");
+    }
+    let num_tasks = router.config().engine.num_tasks;
+    let lcfg = LoadGenConfig {
+        clients,
+        requests_per_client: requests.div_ceil(clients).max(1),
+        seed,
+        task_mix: parse_mix(args, num_tasks)?,
+        think_us: args.u64_or("think-us", 0).map_err(|e| anyhow!(e))?,
+        deadline,
+        priority,
+    };
+    let report = serving::run_load(router, &lcfg)?;
+    let rs = router.router_stats();
+    let cache = router.cache_stats();
+    let lookups = (cache.hits + cache.folds).max(1);
+    println!(
+        "served {} requests over {} tasks across {} shards ({} group(s) x {} \
+         replica(s), route {}) in {:.3}s — {:.1} req/s ({} expired)\n\
+         latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms\n\
+         cache hit rate {:.1}% ({} folds)  heartbeats {}  stolen {}  failovers {}",
+        report.total_requests,
+        num_tasks,
+        router.shards(),
+        router.groups(),
+        router.replicas(),
+        router.config().route.name(),
+        report.elapsed,
+        report.throughput_rps,
+        report.expired,
+        report.latency.p50 * 1e3,
+        report.latency.p95 * 1e3,
+        report.latency.p99 * 1e3,
+        100.0 * cache.hits as f64 / lookups as f64,
+        cache.folds,
+        rs.heartbeats,
+        rs.stolen,
+        rs.failovers,
+    );
+    results::append_record(
+        "serve_sharded",
+        &Json::obj(vec![
+            ("shards", Json::num(router.shards() as f64)),
+            ("replicas", Json::num(router.replicas() as f64)),
+            ("route", Json::str(router.config().route.name())),
+            ("requests", Json::num(report.total_requests as f64)),
+            ("throughput_rps", Json::num(report.throughput_rps)),
+            ("p99_ms", Json::num(report.latency.p99 * 1e3)),
+            ("failovers", Json::num(rs.failovers as f64)),
+            ("stolen", Json::num(rs.stolen as f64)),
         ]),
     );
     Ok(())
@@ -1146,6 +1267,224 @@ fn serve_resilience(
                                 ("worker_restarts", Json::num(f.engine.worker_restarts as f64)),
                                 ("quarantined", Json::num(f.engine.quarantined as f64)),
                                 ("requeued", Json::num(f.engine.requeued as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    );
+    Ok(())
+}
+
+/// `serve --topology`: the `BENCH_pr9.json` experiment. Sweep shard
+/// layouts of a fixed worker budget (4 workers -> 1x4, 2x2, 4x1 shards),
+/// measuring closed-loop capacity per layout; then hold the smallest
+/// multi-shard layout at 0.8x its measured capacity open loop and kill
+/// one shard mid-run under a seeded fault plan, reporting goodput
+/// retention against the fault-free twin. A Down shard's queue fails
+/// over, so both arms answer every admitted request.
+fn serve_topology(
+    args: &Args,
+    backend: &dyn Backend,
+    base: &metatt::serving::EngineConfig,
+    tt: &metatt::tt::MetaTt,
+    backbone: Option<&Path>,
+) -> Result<()> {
+    use metatt::serving::{
+        closed_loop_in, open_loop_in, warmup_in, LoadGenConfig, OpenLoopConfig, RoutePolicy,
+        RouterConfig, ShardHealth, ShardRouter,
+    };
+    use metatt::util::fault::FaultPlan;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    // An engine cannot serve twice (`serve` closes its queue on exit), so
+    // every level gets a fresh router; this helper pins the lifetimes.
+    fn fresh<'b>(
+        backend: &'b dyn Backend,
+        rcfg: RouterConfig,
+        tt: &metatt::tt::MetaTt,
+        backbone: Option<&Path>,
+    ) -> Result<ShardRouter<'b>> {
+        ShardRouter::new(backend, rcfg, |_| tt.clone(), backbone)
+    }
+
+    let seed = args.u64_or("seed", 7).map_err(|e| anyhow!(e))?;
+    let requests = args.usize_or("requests", 100).map_err(|e| anyhow!(e))?;
+    let clients = args.usize_or("clients", 4).map_err(|e| anyhow!(e))?;
+    if requests == 0 || clients == 0 {
+        bail!("--requests and --clients must be >= 1");
+    }
+    let route = RoutePolicy::parse(&args.str_or("route", "affinity"))?;
+    let total_workers = base.workers.max(1);
+    let heartbeat = Duration::from_millis(25);
+    let cap_cfg = LoadGenConfig {
+        clients,
+        requests_per_client: requests.div_ceil(clients).max(1),
+        seed,
+        task_mix: parse_mix(args, base.num_tasks)?,
+        think_us: args.u64_or("think-us", 0).map_err(|e| anyhow!(e))?,
+        // Capacity measures what a layout *can* do, no deadline pressure.
+        deadline: None,
+        priority: 0,
+    };
+    let mk_cfg = |shards: usize, faults: Arc<FaultPlan>| RouterConfig {
+        engine: metatt::serving::EngineConfig {
+            workers: (total_workers / shards).max(1),
+            faults,
+            ..base.clone()
+        },
+        shards,
+        // One group per layout: every shard is a same-adapter replica, so
+        // the sweep varies queue/worker partitioning, not task placement.
+        replicas: shards,
+        route,
+        heartbeat,
+        ..RouterConfig::default()
+    };
+
+    let layouts: Vec<usize> = (1..=total_workers).filter(|s| total_workers % s == 0).collect();
+    println!(
+        "topology sweep: {total_workers} total workers, route {} — shard layouts {:?}",
+        route.name(),
+        layouts
+    );
+    let mut levels: Vec<(usize, f64)> = Vec::new();
+    let mut level_json = Vec::new();
+    for &shards in &layouts {
+        let router = fresh(backend, mk_cfg(shards, Arc::new(FaultPlan::empty())), tt, backbone)?;
+        let report = router.serve(|r| {
+            warmup_in(r, seed)?;
+            closed_loop_in(r, &cap_cfg)
+        })??;
+        let cache = router.cache_stats();
+        let rs = router.router_stats();
+        let lookups = (cache.hits + cache.folds).max(1);
+        println!(
+            "{shards} shard(s) x {} worker(s): capacity {:>7.1} req/s  p99 {:>6.2}ms  \
+             cache hit {:>5.1}%  stolen {:>3}",
+            total_workers / shards,
+            report.throughput_rps,
+            report.latency.p99 * 1e3,
+            100.0 * cache.hits as f64 / lookups as f64,
+            rs.stolen
+        );
+        level_json.push(Json::obj(vec![
+            ("shards", Json::num(shards as f64)),
+            ("workers_per_shard", Json::num((total_workers / shards) as f64)),
+            ("capacity_rps", Json::num(report.throughput_rps)),
+            ("p50_ms", Json::num(report.latency.p50 * 1e3)),
+            ("p99_ms", Json::num(report.latency.p99 * 1e3)),
+            ("expired", Json::num(report.expired as f64)),
+            ("cache_hit_rate", Json::num(cache.hits as f64 / lookups as f64)),
+            ("folds", Json::num(cache.folds as f64)),
+            ("stolen", Json::num(rs.stolen as f64)),
+            ("heartbeats", Json::num(rs.heartbeats as f64)),
+        ]));
+        levels.push((shards, report.throughput_rps));
+    }
+
+    // Kill-one-shard-at-steady-state: the smallest multi-shard layout,
+    // held at 0.8x its measured capacity, faulted arm vs fault-free twin.
+    let kill = levels.iter().find(|(s, _)| *s > 1).copied();
+    let kill_json = if let Some((shards, capacity)) = kill {
+        let rate = (capacity * 0.8).max(1.0);
+        let deadline_ms = args.u64_or("deadline-ms", 0).map_err(|e| anyhow!(e))?;
+        let ol = OpenLoopConfig {
+            rate_rps: rate,
+            requests: args.usize_or("overload-requests", 200).map_err(|e| anyhow!(e))?,
+            seed,
+            stream: 1,
+            task_mix: cap_cfg.task_mix.clone(),
+            deadline: Some(Duration::from_millis(if deadline_ms == 0 { 50 } else { deadline_ms })),
+            priority: 0,
+        };
+        // A CLI --faults plan wins; the default kills one shard on the
+        // supervisor's third beat (tick 6 = beat 3 probing shard 1 of 2).
+        let spec = if base.faults.is_armed() {
+            base.faults.spec().to_string()
+        } else {
+            format!("shard_down@tick=6,seed={seed}")
+        };
+        let clean_router =
+            fresh(backend, mk_cfg(shards, Arc::new(FaultPlan::empty())), tt, backbone)?;
+        let clean = clean_router.serve(|r| {
+            warmup_in(r, seed)?;
+            open_loop_in(r, &ol)
+        })??;
+        let plan = Arc::new(FaultPlan::parse(&spec).map_err(|e| anyhow!(e))?);
+        let faulted_router = fresh(backend, mk_cfg(shards, plan), tt, backbone)?;
+        let faulted = faulted_router.serve(|r| {
+            warmup_in(r, seed)?;
+            open_loop_in(r, &ol)
+        })??;
+        let rs = faulted_router.router_stats();
+        let downed = (0..faulted_router.shards())
+            .filter(|&k| faulted_router.health(k) == ShardHealth::Down)
+            .count();
+        let retention =
+            if clean.goodput_rps > 0.0 { faulted.goodput_rps / clean.goodput_rps } else { 0.0 };
+        println!(
+            "kill probe ({shards} shards @ {rate:.1} rps, faults \"{spec}\"): \
+             goodput {:.1} faulted / {:.1} clean rps ({:.1}% retention)\n\
+             {} down, {} failovers, {} moved, {} displaced, {} dropped",
+            faulted.goodput_rps,
+            clean.goodput_rps,
+            retention * 100.0,
+            downed,
+            rs.failovers,
+            rs.moved,
+            rs.displaced,
+            faulted.dropped
+        );
+        Json::obj(vec![
+            ("shards", Json::num(shards as f64)),
+            ("rate_rps", Json::num(rate)),
+            ("faults", Json::str(&spec)),
+            ("goodput_rps_clean", Json::num(clean.goodput_rps)),
+            ("goodput_rps_faulted", Json::num(faulted.goodput_rps)),
+            ("goodput_retention", Json::num(retention)),
+            ("ok_clean", Json::num(clean.ok as f64)),
+            ("ok_faulted", Json::num(faulted.ok as f64)),
+            ("expired_faulted", Json::num(faulted.expired as f64)),
+            ("errors_faulted", Json::num(faulted.errors as f64)),
+            ("dropped_faulted", Json::num(faulted.dropped as f64)),
+            ("shards_down", Json::num(downed as f64)),
+            ("failovers", Json::num(rs.failovers as f64)),
+            ("moved", Json::num(rs.moved as f64)),
+            ("displaced", Json::num(rs.displaced as f64)),
+        ])
+    } else {
+        println!("kill probe skipped: 1 worker allows only the 1x1 layout");
+        Json::Null
+    };
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving_topology")),
+        ("total_workers", Json::num(total_workers as f64)),
+        ("route", Json::str(route.name())),
+        ("num_tasks", Json::num(base.num_tasks as f64)),
+        ("clients", Json::num(clients as f64)),
+        ("requests_per_client", Json::num(cap_cfg.requests_per_client as f64)),
+        ("levels", Json::Arr(level_json)),
+        ("kill", kill_json),
+    ]);
+    metatt::bench::save_record("pr9", &doc)?;
+    results::append_record(
+        "serve_topology",
+        &Json::obj(vec![
+            ("total_workers", Json::num(total_workers as f64)),
+            ("route", Json::str(route.name())),
+            (
+                "levels",
+                Json::Arr(
+                    levels
+                        .iter()
+                        .map(|(s, c)| {
+                            Json::obj(vec![
+                                ("shards", Json::num(*s as f64)),
+                                ("capacity_rps", Json::num(*c)),
                             ])
                         })
                         .collect(),

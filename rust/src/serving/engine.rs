@@ -197,6 +197,10 @@ pub struct ServingEngine<'b> {
     policy: BatchPolicy,
     stats: StatsInner,
     next_id: AtomicU64,
+    /// Request-id increment (1 standalone; the shard count under a
+    /// [`super::router::ShardRouter`], which gives shard k the residue
+    /// class k so ids stay globally unique across the topology).
+    id_step: u64,
     /// Construction instant — the zero point of [`Self::now_us`] and every
     /// [`Response::done_us`] stamp.
     epoch: Instant,
@@ -268,8 +272,37 @@ impl<'b> ServingEngine<'b> {
                 requeued: AtomicU64::new(0),
             },
             next_id: AtomicU64::new(0),
+            id_step: 1,
             epoch: Instant::now(),
         })
+    }
+
+    /// Admission-queue seam for the shard router: failover drains, work
+    /// stealing, and displacing admission all operate on the raw queue
+    /// (`serving::router`).
+    pub(crate) fn queue(&self) -> &AdmissionQueue {
+        &self.queue
+    }
+
+    /// Count an admission rejection that happened outside
+    /// [`Self::try_submit_with`] (the router's displacing path).
+    pub(crate) fn note_rejected(&self) {
+        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Re-base request-id assignment to `start, start + stride, …`. Shard k
+    /// of an N-shard router takes `(k, N)` so every shard mints ids from a
+    /// disjoint residue class — responses stay globally unique without any
+    /// cross-shard coordination on the hot path.
+    pub(crate) fn set_id_stride(&mut self, start: u64, stride: u64) {
+        self.next_id = AtomicU64::new(start);
+        self.id_step = stride.max(1);
+    }
+
+    /// Share one latency epoch across shards so every shard's
+    /// [`Response::done_us`] stamps land on a single comparable clock.
+    pub(crate) fn set_epoch(&mut self, epoch: Instant) {
+        self.epoch = epoch;
     }
 
     pub fn config(&self) -> &EngineConfig {
@@ -386,7 +419,7 @@ impl<'b> ServingEngine<'b> {
         }
     }
 
-    fn make_pending(
+    pub(crate) fn make_pending(
         &self,
         task: usize,
         tokens: Vec<i32>,
@@ -402,7 +435,7 @@ impl<'b> ServingEngine<'b> {
         if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
             bail!("token id {t} outside [0, {})", self.vocab);
         }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(self.id_step, Ordering::Relaxed);
         let (tx, rx) = response_channel();
         let now = Instant::now();
         Ok((
@@ -626,6 +659,105 @@ impl<'b> ServingEngine<'b> {
         }
         self.stats.requeued.fetch_add(requeue.len() as u64, Ordering::Relaxed);
         self.queue.requeue(requeue);
+    }
+}
+
+/// Anything the serving front-ends can sit on: a single [`ServingEngine`]
+/// or an N-shard [`super::router::ShardRouter`]. The TCP front-end
+/// (`serve_net`) and the load generators are generic over this seam, which
+/// is what keeps the MTS1 wire protocol and the admission semantics
+/// identical whether requests land on one engine or are routed across a
+/// topology — routing happens strictly *behind* admission.
+pub trait ServeTarget: Sync {
+    /// Sequence length every request must be tokenized to.
+    fn seq_len(&self) -> usize;
+    /// Vocabulary bound for request token ids.
+    fn vocab(&self) -> usize;
+    /// Classes per task head (the logits row width).
+    fn classes(&self) -> usize;
+    /// Number of served tasks.
+    fn num_tasks(&self) -> usize;
+    /// Total worker threads across the target (warmup sizing).
+    fn workers(&self) -> usize;
+    /// Microseconds on the target's response-stamp clock.
+    fn now_us(&self) -> u64;
+    /// The fault-injection plan threaded into front-end hooks.
+    fn faults(&self) -> &FaultPlan;
+    /// Current adapter-store generation (max across shards for a router).
+    fn generation(&self) -> u64;
+    /// Blocking admission with deadline + priority class.
+    fn submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<ResponseHandle>;
+    /// Non-blocking admission for open-loop load (`Ok(None)` = rejected).
+    fn try_submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<Option<ResponseHandle>>;
+    /// Execution counters, aggregated across shards for a router.
+    fn stats(&self) -> EngineStats;
+    /// Spawn the worker pool(s), run `driver`, then drain and join —
+    /// the same graceful-shutdown contract as [`ServingEngine::serve`].
+    fn serve_session<R>(&self, driver: impl FnOnce(&Self) -> R) -> Result<R>
+    where
+        Self: Sized;
+}
+
+impl ServeTarget for ServingEngine<'_> {
+    fn seq_len(&self) -> usize {
+        ServingEngine::seq_len(self)
+    }
+    fn vocab(&self) -> usize {
+        ServingEngine::vocab(self)
+    }
+    fn classes(&self) -> usize {
+        self.cfg.classes
+    }
+    fn num_tasks(&self) -> usize {
+        self.cfg.num_tasks
+    }
+    fn workers(&self) -> usize {
+        self.cfg.workers
+    }
+    fn now_us(&self) -> u64 {
+        ServingEngine::now_us(self)
+    }
+    fn faults(&self) -> &FaultPlan {
+        ServingEngine::faults(self)
+    }
+    fn generation(&self) -> u64 {
+        ServingEngine::generation(self)
+    }
+    fn submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<ResponseHandle> {
+        ServingEngine::submit_with(self, task, tokens, deadline, priority)
+    }
+    fn try_submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<Option<ResponseHandle>> {
+        ServingEngine::try_submit_with(self, task, tokens, deadline, priority)
+    }
+    fn stats(&self) -> EngineStats {
+        ServingEngine::stats(self)
+    }
+    fn serve_session<R>(&self, driver: impl FnOnce(&Self) -> R) -> Result<R> {
+        ServingEngine::serve(self, driver)
     }
 }
 

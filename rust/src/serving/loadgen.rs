@@ -28,7 +28,7 @@
 //! [`EngineStats`] deltas so warmup and earlier levels never contaminate
 //! a level's numbers.
 
-use super::engine::{EngineStats, ServingEngine};
+use super::engine::{EngineStats, ServeTarget, ServingEngine};
 use super::request::{Response, ResponseHandle, ResponseStatus};
 use crate::bench::Stats;
 use crate::util::json::Json;
@@ -160,26 +160,28 @@ fn sample_task(rng: &mut Pcg64, cum: &[f64]) -> usize {
     cum.iter().position(|&c| u < c).unwrap_or(cum.len() - 1)
 }
 
-/// Warm the engine before a measured window: a round-robin wave over every
-/// task, sized to the worker pool, on its own RNG stream. Covers worker
-/// bind + first-tick arena growth + the cold fold of each task's adapter.
-pub fn warmup_in(eng: &ServingEngine, seed: u64) -> Result<()> {
-    let num_tasks = eng.config().num_tasks;
+/// Warm the serve target before a measured window: a round-robin wave over
+/// every task, sized to the (total) worker pool, on its own RNG stream.
+/// Covers worker bind + first-tick arena growth + the cold fold of each
+/// task's adapter — on a sharded target the wave is large enough to reach
+/// every shard's workers.
+pub fn warmup_in<T: ServeTarget>(eng: &T, seed: u64) -> Result<()> {
+    let num_tasks = eng.num_tasks();
     let (seq, vocab) = (eng.seq_len(), eng.vocab());
     let mut wrng = Pcg64::with_stream(seed, 0x3a97);
-    let warm = (eng.config().workers * 2).max(num_tasks);
+    let warm = (eng.workers() * 2).max(num_tasks);
     for i in 0..warm {
         let tokens = request_tokens(&mut wrng, seq, vocab);
-        eng.submit(i % num_tasks, tokens)?.wait().map_err(|e| anyhow!(e))?;
+        eng.submit_with(i % num_tasks, tokens, None, 0)?.wait().map_err(|e| anyhow!(e))?;
     }
     Ok(())
 }
 
-/// Closed-loop clients against an engine whose worker pool is already
-/// running (call inside a [`ServingEngine::serve`] driver, after
+/// Closed-loop clients against a serve target whose worker pool is already
+/// running (call inside a `serve` driver — engine or router — after
 /// [`warmup_in`]). The report's engine counters are the delta over this
 /// window only.
-pub fn closed_loop_in(eng: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadReport> {
+pub fn closed_loop_in<T: ServeTarget>(eng: &T, cfg: &LoadGenConfig) -> Result<LoadReport> {
     if cfg.clients == 0 || cfg.requests_per_client == 0 {
         anyhow::bail!(
             "load generator needs >= 1 client and >= 1 request per client \
@@ -188,7 +190,7 @@ pub fn closed_loop_in(eng: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadRe
             cfg.requests_per_client
         );
     }
-    let num_tasks = eng.config().num_tasks;
+    let num_tasks = eng.num_tasks();
     let (seq, vocab) = (eng.seq_len(), eng.vocab());
     let base = eng.stats();
     let t0 = Instant::now();
@@ -273,8 +275,8 @@ pub fn closed_loop_in(eng: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadRe
 /// window only — cumulative counters would let warmup ticks contaminate
 /// the fill statistics. (Cache counters stay cumulative: folds happen once
 /// either way and belong to the engine's lifetime, not a window.)
-pub fn run_load(engine: &ServingEngine, cfg: &LoadGenConfig) -> Result<LoadReport> {
-    engine.serve(|eng| {
+pub fn run_load<T: ServeTarget>(engine: &T, cfg: &LoadGenConfig) -> Result<LoadReport> {
+    engine.serve_session(|eng| {
         warmup_in(eng, cfg.seed)?;
         closed_loop_in(eng, cfg)
     })?
@@ -338,12 +340,13 @@ pub struct OpenLoopReport {
     pub engine: EngineStats,
 }
 
-/// Open-loop Poisson arrivals against a running engine (call inside a
-/// [`ServingEngine::serve`] driver). Arrivals are paced on an absolute
+/// Open-loop Poisson arrivals against a running serve target (call inside
+/// a `serve` driver — engine or router). Arrivals are paced on an absolute
 /// schedule — if the generator falls behind it bursts to catch up, so the
 /// *average* offered rate holds. Admission never blocks: a full queue
-/// counts a rejection and the arrival process moves on.
-pub fn open_loop_in(eng: &ServingEngine, cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
+/// counts a rejection and the arrival process moves on (on a router, a
+/// full replica set may instead displace the lowest priority class).
+pub fn open_loop_in<T: ServeTarget>(eng: &T, cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
     if cfg.requests == 0 || !(cfg.rate_rps > 0.0) || !cfg.rate_rps.is_finite() {
         anyhow::bail!(
             "open loop needs >= 1 request and a positive finite rate (got {} @ {} rps)",
@@ -351,7 +354,7 @@ pub fn open_loop_in(eng: &ServingEngine, cfg: &OpenLoopConfig) -> Result<OpenLoo
             cfg.rate_rps
         );
     }
-    let num_tasks = eng.config().num_tasks;
+    let num_tasks = eng.num_tasks();
     let (seq, vocab) = (eng.seq_len(), eng.vocab());
     let cum = cumulative_mix(&cfg.task_mix, num_tasks);
     let mut rng = client_rng(cfg.seed, 0x0bee ^ cfg.stream);
@@ -432,9 +435,12 @@ pub fn open_loop_in(eng: &ServingEngine, cfg: &OpenLoopConfig) -> Result<OpenLoo
     })
 }
 
-/// One full open-loop run: spawn the pool, warm up, offer, drain.
-pub fn run_open_loop(engine: &ServingEngine, cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
-    engine.serve(|eng| {
+/// One full open-loop run: spawn the pool(s), warm up, offer, drain.
+pub fn run_open_loop<T: ServeTarget>(
+    engine: &T,
+    cfg: &OpenLoopConfig,
+) -> Result<OpenLoopReport> {
+    engine.serve_session(|eng| {
         warmup_in(eng, cfg.seed)?;
         open_loop_in(eng, cfg)
     })?

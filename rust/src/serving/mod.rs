@@ -44,8 +44,19 @@
 //! and safe re-send; `crate::util::fault` injects deterministic faults at
 //! every seam so all of this is testable (`tests/chaos.rs`).
 //!
+//! The path is **sharded** (PR 9): a [`ShardRouter`] owns N engines —
+//! replica groups of one adapter — routes by task with cache affinity, and
+//! supervises them end-to-end on a heartbeat: Live/Degraded/Down health,
+//! automatic failover of a Down shard's queue into a surviving replica
+//! (through the urgency-ordered requeue path, never dropped), work
+//! stealing between replicas under skew, and displacement admission when
+//! capacity shrinks. The front-ends are generic over [`ServeTarget`], so
+//! one engine and an N-shard topology speak the same MTS1 wire protocol
+//! and admission semantics — routing lives strictly behind admission.
+//!
 //! Entry points: [`ServingEngine::new`] → [`ServingEngine::serve`] with a
-//! driver closure; [`run_load`] for a full measured run (what `metatt
+//! driver closure; [`ShardRouter::new`] → [`ShardRouter::serve`] for a
+//! topology; [`run_load`] for a full measured run (what `metatt
 //! serve` does); [`serve_net`] inside a driver for the TCP front-end;
 //! [`run_overload_bench`] for the overload sweep.
 
@@ -55,10 +66,12 @@ mod engine;
 mod loadgen;
 pub mod net;
 mod request;
+mod router;
 
 pub use batcher::BatchPolicy;
 pub use cache::{metatt_from_tensors, AdapterStore, CacheStats, FoldedAdapter};
-pub use engine::{adapter_spec_for, EngineConfig, EngineStats, ServingEngine};
+pub use engine::{adapter_spec_for, EngineConfig, EngineStats, ServeTarget, ServingEngine};
+pub use router::{RoutePolicy, RouterConfig, RouterStats, ShardHealth, ShardRouter};
 pub use loadgen::{
     closed_loop_in, open_loop_in, overload_report_json, report_json, request_stream,
     request_tokens, resilience_report_json, run_load, run_open_loop, run_overload_bench,

@@ -26,8 +26,11 @@
 //!
 //! # Server lifecycle
 //!
-//! [`serve_net`] runs inside [`ServingEngine::serve`]'s driver slot: an
-//! accept loop (non-blocking + poll, so no self-connect tricks) hands each
+//! [`serve_net`] runs inside the serve-target's driver slot (a single
+//! engine's `serve` or a shard router's — the server half is generic over
+//! [`ServeTarget`], so routing across shards happens strictly behind the
+//! admission call and MTS1 is unchanged): an accept loop (non-blocking +
+//! backoff poll, so no self-connect tricks) hands each
 //! connection a reader thread (decode → `submit_with` — blocking admission
 //! is per-connection TCP backpressure) and a writer thread (await handles
 //! in order → encode). **Graceful drain** on shutdown: the accept loop
@@ -38,7 +41,7 @@
 //! driver returns, `serve` closes the queue and the workers drain; no
 //! admitted request is ever dropped on a clean shutdown.
 
-use super::engine::ServingEngine;
+use super::engine::ServeTarget;
 use super::request::{Response, ResponseHandle, ResponseStatus};
 use anyhow::{anyhow, bail, Result};
 use crate::util::rng::Pcg64;
@@ -57,8 +60,38 @@ const STATUS_OK: u8 = 0;
 const STATUS_EXPIRED: u8 = 1;
 const STATUS_ERROR: u8 = 2;
 
-/// How long the accept loop sleeps between polls.
-const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Idle accept-poll bounds: the loop sleeps `ACCEPT_POLL_MIN` right after
+/// traffic (snappy accepts) and doubles per empty poll up to
+/// `ACCEPT_POLL_MAX`, so an idle listener costs ~20 accept syscalls per
+/// second instead of the 200/s a fixed 5 ms poll burned.
+const ACCEPT_POLL_MIN: Duration = Duration::from_millis(1);
+const ACCEPT_POLL_MAX: Duration = Duration::from_millis(50);
+
+/// Exponential idle backoff for the nonblocking accept loop (see the
+/// bounds above). Pure arithmetic so the regression test can pin the
+/// idle-second poll budget without real sleeps.
+struct AcceptBackoff {
+    cur: Duration,
+}
+
+impl AcceptBackoff {
+    fn new() -> AcceptBackoff {
+        AcceptBackoff { cur: ACCEPT_POLL_MIN }
+    }
+
+    /// The delay to sleep for this empty poll; doubles (capped) for the
+    /// next one.
+    fn idle_delay(&mut self) -> Duration {
+        let d = self.cur;
+        self.cur = (self.cur * 2).min(ACCEPT_POLL_MAX);
+        d
+    }
+
+    /// A connection arrived: the next idle poll is prompt again.
+    fn accepted(&mut self) {
+        self.cur = ACCEPT_POLL_MIN;
+    }
+}
 /// Per-connection read timeout — the granularity at which readers notice
 /// the shutdown flag.
 const READ_TICK: Duration = Duration::from_millis(25);
@@ -300,13 +333,13 @@ pub fn decode_response(body: &[u8]) -> Result<NetResponse> {
     Ok(NetResponse { id, status, task, generation, batch_rows, logits, error: None })
 }
 
-fn encode_hello(engine: &ServingEngine) -> Vec<u8> {
+fn encode_hello<T: ServeTarget>(engine: &T) -> Vec<u8> {
     let mut buf = Vec::with_capacity(20);
     buf.extend_from_slice(&WIRE_MAGIC);
     put_u32(&mut buf, engine.seq_len() as u32);
     put_u32(&mut buf, engine.vocab() as u32);
-    put_u32(&mut buf, engine.config().classes as u32);
-    put_u32(&mut buf, engine.config().num_tasks as u32);
+    put_u32(&mut buf, engine.classes() as u32);
+    put_u32(&mut buf, engine.num_tasks() as u32);
     buf
 }
 
@@ -415,8 +448,8 @@ fn writer_loop(stream: &mut TcpStream, rx: mpsc::Receiver<WriteCmd>) {
 
 /// Read frames, admit them, and feed the writer until EOF, shutdown, or a
 /// connection error. Returns the number of request frames handled.
-fn reader_loop(
-    engine: &ServingEngine,
+fn reader_loop<T: ServeTarget>(
+    engine: &T,
     stream: &mut TcpStream,
     shutdown: &AtomicBool,
     grace: Duration,
@@ -477,8 +510,8 @@ fn reader_loop(
     }
 }
 
-fn handle_conn(
-    engine: &ServingEngine,
+fn handle_conn<T: ServeTarget>(
+    engine: &T,
     mut stream: TcpStream,
     shutdown: &AtomicBool,
     grace: Duration,
@@ -512,16 +545,18 @@ fn handle_conn(
 }
 
 /// Run the TCP front-end over `listener` until `shutdown` is set. Call
-/// inside [`ServingEngine::serve`]'s driver:
+/// inside the serve target's driver (single engine or shard router —
+/// identical wire behavior either way):
 ///
 /// ```ignore
 /// engine.serve(|eng| net::serve_net(eng, listener, &shutdown))??;
+/// router.serve(|r| net::serve_net(r, listener, &shutdown))??;
 /// ```
 ///
 /// Connection errors (bad magic, oversized frames, mid-frame EOF) drop
 /// that connection only; the listener keeps serving.
-pub fn serve_net(
-    engine: &ServingEngine,
+pub fn serve_net<T: ServeTarget>(
+    engine: &T,
     listener: TcpListener,
     shutdown: &AtomicBool,
 ) -> Result<NetStats> {
@@ -530,8 +565,8 @@ pub fn serve_net(
 
 /// [`serve_net`] with an explicit [`NetServerConfig`] (drain grace for
 /// idle connections after shutdown is signalled).
-pub fn serve_net_with(
-    engine: &ServingEngine,
+pub fn serve_net_with<T: ServeTarget>(
+    engine: &T,
     listener: TcpListener,
     shutdown: &AtomicBool,
     cfg: &NetServerConfig,
@@ -543,9 +578,11 @@ pub fn serve_net_with(
     let connections = AtomicU64::new(0);
     let requests = AtomicU64::new(0);
     std::thread::scope(|scope| {
+        let mut backoff = AcceptBackoff::new();
         while !shutdown.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _peer)) => {
+                    backoff.accepted();
                     connections.fetch_add(1, Ordering::Relaxed);
                     let requests = &requests;
                     scope.spawn(move || {
@@ -555,7 +592,7 @@ pub fn serve_net_with(
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(ACCEPT_POLL);
+                    std::thread::sleep(backoff.idle_delay());
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                 Err(e) => return Err(anyhow!("accept failed: {e}")),
@@ -1109,6 +1146,36 @@ mod tests {
             if k >= 4 {
                 assert!(d <= policy.max_backoff);
             }
+        }
+    }
+
+    #[test]
+    fn idle_accept_loop_does_not_burn_a_core_of_syscalls() {
+        // Regression: the accept loop used a fixed 5 ms poll, i.e. an idle
+        // server woke up and issued ~200 accept syscalls every second,
+        // forever. Each idle_delay() call below corresponds to exactly one
+        // accept syscall, so summing delays to one second counts the
+        // idle-second syscall budget.
+        let mut b = AcceptBackoff::new();
+        let mut polls = 0u32;
+        let mut slept = Duration::ZERO;
+        while slept < Duration::from_secs(1) {
+            slept += b.idle_delay();
+            polls += 1;
+        }
+        // Doubling from 1 ms caps at 50 ms within 7 polls; an idle second
+        // then costs ~25 polls. Assert well under the old 200/s.
+        assert!(polls <= 40, "an idle second should need few polls, got {polls}");
+        // A burst resets the backoff: the poll right after an accept is at
+        // the minimum again, so accept latency stays snappy under load.
+        b.accepted();
+        assert!(b.idle_delay() <= ACCEPT_POLL_MIN);
+        // The schedule is monotone and capped.
+        let mut prev = Duration::ZERO;
+        for _ in 0..20 {
+            let d = b.idle_delay();
+            assert!(d >= prev && d <= ACCEPT_POLL_MAX, "delay {d:?} out of order/cap");
+            prev = d;
         }
     }
 }

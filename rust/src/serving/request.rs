@@ -217,20 +217,100 @@ impl AdmissionQueue {
         drop(drained);
     }
 
-    /// Put already-admitted requests back at the head of the queue (worker
-    /// supervision: the in-flight batch of a panicked worker). Deliberately
-    /// ignores both capacity (these requests already held admission — a
-    /// transient overshoot beats dropping them) and the closed flag (a
-    /// draining shutdown must still answer them).
+    /// Put already-admitted requests back into the queue (worker
+    /// supervision: the in-flight batch of a panicked worker; shard
+    /// failover: a dead shard's drained queue). Each request is re-inserted
+    /// at its (priority, deadline, admission-id) urgency position — NOT
+    /// blindly at the front — so a requeued low-priority batch can never
+    /// sit physically ahead of a more urgent arrival in the drain/steal
+    /// paths that consume the queue in physical order. Deliberately ignores
+    /// both capacity (these requests already held admission — a transient
+    /// overshoot beats dropping them) and the closed flag (a draining
+    /// shutdown must still answer them).
     pub(crate) fn requeue(&self, batch: Vec<Pending>) {
         if batch.is_empty() {
             return;
         }
         let mut inner = self.inner.lock().unwrap();
-        for p in batch.into_iter().rev() {
-            inner.queue.push_front(p);
+        for p in batch {
+            let pos = inner
+                .queue
+                .iter()
+                .position(|q| p.cmp_urgency(q).is_lt())
+                .unwrap_or(inner.queue.len());
+            inner.queue.insert(pos, p);
         }
         self.not_empty.notify_all();
+    }
+
+    /// Remove and return every queued request, most urgent first (shard
+    /// failover: the router drains a Down shard and `requeue`s the batch
+    /// into a surviving replica). Wakes blocked producers — though on a
+    /// Down shard they are about to get a closed error anyway.
+    pub(crate) fn drain_all(&self) -> Vec<Pending> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut out: Vec<Pending> = inner.queue.drain(..).collect();
+        out.sort_by(|a, b| a.cmp_urgency(b));
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Remove the `n` least-urgent queued requests (work stealing between
+    /// replicas). Returned most-urgent-first so a `requeue` at the target
+    /// preserves relative order; the donor keeps its most urgent work, so
+    /// stealing never delays the request a worker would pick next.
+    pub(crate) fn steal_least_urgent(&self, n: usize) -> Vec<Pending> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let mut all: Vec<Pending> = inner.queue.drain(..).collect();
+        all.sort_by(|a, b| a.cmp_urgency(b));
+        let keep = all.len().saturating_sub(n);
+        let stolen = all.split_off(keep);
+        inner.queue.extend(all);
+        if !stolen.is_empty() {
+            self.not_full.notify_all();
+        }
+        stolen
+    }
+
+    /// Non-blocking admission that may displace: like `try_submit`, except
+    /// that when the queue is full and `p`'s priority class strictly
+    /// outranks the least-urgent queued request's, that victim is removed
+    /// and handed back so the caller can answer it with an explicit status
+    /// (graceful degradation under shrunken capacity — the lowest class is
+    /// shed first, never silently). Same-class arrivals never displace
+    /// (deadline churn); they are rejected as `Full`.
+    pub(crate) fn try_submit_displacing(&self, p: Pending) -> Result<Admit, String> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err("serving engine is shut down".into());
+        }
+        if inner.queue.len() < self.capacity {
+            inner.queue.push_back(p);
+            self.not_empty.notify_all();
+            return Ok(Admit::Admitted(None));
+        }
+        let victim_i = (0..inner.queue.len())
+            .max_by(|&a, &b| inner.queue[a].cmp_urgency(&inner.queue[b]))
+            .expect("capacity >= 1, a full queue is non-empty");
+        if p.req.priority < inner.queue[victim_i].req.priority {
+            let victim = inner.queue.remove(victim_i).expect("index in range");
+            inner.queue.push_back(p);
+            self.not_empty.notify_all();
+            Ok(Admit::Admitted(Some(victim)))
+        } else {
+            Ok(Admit::Full)
+        }
+    }
+
+    /// Whether the queue has been closed (the router's supervisor uses
+    /// this to notice a shard whose engine aborted itself).
+    pub(crate) fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
     }
 
     /// Requests currently waiting (diagnostics).
@@ -241,6 +321,17 @@ impl AdmissionQueue {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
+
+/// Outcome of [`AdmissionQueue::try_submit_displacing`].
+pub(crate) enum Admit {
+    /// Admitted; `Some(victim)` carries a displaced less-urgent request
+    /// that the caller must answer explicitly.
+    Admitted(Option<Pending>),
+    /// Queue full and the arrival does not outrank any queued class; the
+    /// arrival was dropped (its handle observes a disconnect — the caller
+    /// counts an overload rejection).
+    Full,
 }
 
 /// One-shot completion channel for a request (engine + tests).
@@ -442,10 +533,110 @@ mod tests {
         let (p2, _rx2) = pending(2, 0);
         q.requeue(vec![p1, p2]);
         assert_eq!(q.len(), 3);
-        // Relative order of the requeued batch is preserved, ahead of the
-        // previously queued tail.
+        // Same class, no deadlines: admission ids order the queue, so the
+        // requeued batch (older ids) lands ahead of the queued tail.
         let inner = q.inner.lock().unwrap();
         let ids: Vec<u64> = inner.queue.iter().map(|p| p.req.id).collect();
         assert_eq!(ids, vec![1, 2, 5]);
+    }
+
+    fn pending_pri(id: u64, priority: u8) -> (Pending, mpsc::Receiver<Response>) {
+        let (tx, rx) = response_channel();
+        (
+            Pending {
+                req: Request { id, task: 0, tokens: vec![1, 2, 3], priority },
+                tx,
+                enqueued: Instant::now(),
+                deadline: None,
+                panics: 0,
+                solo: false,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn requeue_respects_priority_ordering_over_front_of_line() {
+        // Regression (PR 9): a requeued low-priority batch used to be
+        // pushed blindly to the physical front, starving a newly admitted
+        // high-priority request in every path that consumes the queue in
+        // physical order. Re-insertion must go through (priority,
+        // deadline, admission) urgency ordering instead.
+        let q = AdmissionQueue::new(4);
+        let (hi, _rx_hi) = pending_pri(10, 0);
+        q.submit(hi).unwrap();
+        let (lo1, _rx1) = pending_pri(1, 1);
+        let (lo2, _rx2) = pending_pri(2, 1);
+        q.requeue(vec![lo1, lo2]);
+        let inner = q.inner.lock().unwrap();
+        let ids: Vec<u64> = inner.queue.iter().map(|p| p.req.id).collect();
+        assert_eq!(
+            ids,
+            vec![10, 1, 2],
+            "priority-0 arrival must stay ahead of a requeued priority-1 batch"
+        );
+    }
+
+    #[test]
+    fn drain_all_returns_most_urgent_first_and_empties_the_queue() {
+        let q = AdmissionQueue::new(4);
+        let (a, _ra) = pending_pri(1, 1);
+        let (b, _rb) = pending_pri(2, 0);
+        let (c, _rc) = pending_pri(3, 1);
+        q.requeue(vec![a, b, c]);
+        let drained = q.drain_all();
+        let ids: Vec<u64> = drained.iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![2, 1, 3], "priority class first, then admission id");
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn steal_takes_the_least_urgent_and_leaves_the_donor_its_head() {
+        let q = AdmissionQueue::new(4);
+        let (a, _ra) = pending_pri(1, 0);
+        let (b, _rb) = pending_pri(2, 1);
+        let (c, _rc) = pending_pri(3, 0);
+        q.requeue(vec![a, b, c]);
+        let stolen = q.steal_least_urgent(2);
+        let stolen_ids: Vec<u64> = stolen.iter().map(|p| p.req.id).collect();
+        // Urgency order is [1, 3, 2]; the donor keeps its most urgent
+        // request, and the stolen pair comes back most-urgent-first so a
+        // requeue at the target preserves relative order.
+        assert_eq!(stolen_ids, vec![3, 2]);
+        let inner = q.inner.lock().unwrap();
+        let kept: Vec<u64> = inner.queue.iter().map(|p| p.req.id).collect();
+        assert_eq!(kept, vec![1]);
+        drop(inner);
+        assert!(q.steal_least_urgent(0).is_empty());
+    }
+
+    #[test]
+    fn displacing_admission_sheds_the_lowest_class_first_never_silently() {
+        let q = AdmissionQueue::new(1);
+        let (lo, rx_lo) = pending_pri(1, 1);
+        q.submit(lo).unwrap();
+        // A strictly higher class displaces: the victim comes back to the
+        // caller so it can be answered with an explicit status.
+        let (hi, _rx_hi) = pending_pri(2, 0);
+        match q.try_submit_displacing(hi).unwrap() {
+            Admit::Admitted(Some(victim)) => assert_eq!(victim.req.id, 1),
+            _ => panic!("higher class must displace on a full queue"),
+        }
+        // The displaced handle is still answerable — nothing was dropped.
+        drop(rx_lo);
+        // Same class does not displace (no deadline churn), nor does a
+        // lower class: both are plain Full rejections.
+        let (same, rx_same) = pending_pri(3, 0);
+        assert!(matches!(q.try_submit_displacing(same).unwrap(), Admit::Full));
+        assert!(rx_same.recv().is_err(), "rejected arrival disconnects its handle");
+        let (worse, _rx_worse) = pending_pri(4, 1);
+        assert!(matches!(q.try_submit_displacing(worse).unwrap(), Admit::Full));
+        // Room available: plain admission, no victim.
+        let _ = q.inner.lock().unwrap().queue.pop_front();
+        let (ok, _rx_ok) = pending_pri(5, 1);
+        assert!(matches!(q.try_submit_displacing(ok).unwrap(), Admit::Admitted(None)));
+        q.close();
+        let (late, _rx_late) = pending_pri(6, 0);
+        assert!(q.try_submit_displacing(late).is_err(), "closed queue errors");
     }
 }

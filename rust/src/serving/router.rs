@@ -1,0 +1,773 @@
+//! Sharded serving: N [`ServingEngine`]s behind one admission seam, with
+//! end-to-end supervision.
+//!
+//! A [`ShardRouter`] owns `shards` engines partitioned into `shards /
+//! replicas` **groups**. Replicas inside a group are interchangeable — the
+//! caller's `make_tt` closure must hand every member of a group the same
+//! adapter state (same-backbone replicas already share frozen panels via
+//! `Arc` identity, so a replica costs folded-adapter cache, not backbone
+//! memory). Tasks map to groups by residue (`task % groups`), and the
+//! affinity policy pins each task to one preferred replica so that
+//! replica's folded-adapter LRU stays hot; round-robin is the control
+//! arm that spreads a task across all replicas (and their caches).
+//!
+//! Supervision runs on a heartbeat thread:
+//! - **health**: each live shard is probed once per beat. A beat that saw
+//!   new worker restarts bumps a consecutive-failure counter (Degraded;
+//!   Down at the threshold, like a flapping process under systemd's
+//!   `StartLimitBurst`); a clean beat resets it. A wedged shard (fault
+//!   injection, or a real stall surfacing as restarts) sits Degraded —
+//!   still serving, deprioritized by routing — until the wedge expires.
+//! - **failover**: a Down shard is drained and closed exactly once; its
+//!   queued requests are `requeue`d — through the urgency-ordered
+//!   front-of-line path, never dropped — into the least-loaded surviving
+//!   replica. With no survivor they are answered with an explicit `Error`.
+//! - **work stealing**: when one replica's queue is ≥ `STEAL_GAP` deeper
+//!   than a sibling's, half the gap (the donor's *least urgent* work)
+//!   moves over, so a skewed task mix cannot idle half a group.
+//! - **degraded-mode admission**: the open-loop path admits by
+//!   displacement — when every replica is full, a strictly
+//!   higher-priority arrival evicts the lowest class, and the victim is
+//!   answered `Expired`. Lowest class shed first, never silently.
+//!
+//! Routing changes which queue a request waits in, never what is
+//! computed: every row's logits depend only on its own tokens, so a
+//! 1-shard and an N-replica topology answer the same request stream
+//! bit-identically (`tests/router.rs`, `tests/chaos.rs`).
+
+use super::cache::CacheStats;
+use super::engine::{EngineConfig, EngineStats, ServeTarget, ServingEngine};
+use super::request::{
+    response_channel, Admit, Pending, Response, ResponseHandle, ResponseStatus,
+};
+use crate::runtime::Backend;
+use crate::tt::MetaTt;
+use crate::util::fault::{FaultPlan, ShardFault};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Replica queue-depth gap (in requests) that triggers work stealing.
+const STEAL_GAP: usize = 4;
+
+/// How requests pick a replica within their task's group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Pin each task to one preferred replica (`(task / groups) %
+    /// replicas`) so its folded adapter stays resident in that replica's
+    /// LRU; siblings are fallback only.
+    Affinity,
+    /// Spread every task across all replicas with a shared cursor — the
+    /// cache-cold control arm.
+    RoundRobin,
+}
+
+impl RoutePolicy {
+    /// Parse a `--route` value.
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        match s {
+            "affinity" => Ok(RoutePolicy::Affinity),
+            "rr" => Ok(RoutePolicy::RoundRobin),
+            other => bail!("unknown route policy '{other}' (expected affinity or rr)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::Affinity => "affinity",
+            RoutePolicy::RoundRobin => "rr",
+        }
+    }
+}
+
+/// Per-shard health, driven by heartbeat probes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Serving normally; first choice for routing.
+    Live,
+    /// Serving but suspect (recent restarts, or wedged by fault
+    /// injection): routed to only when no Live replica exists.
+    Degraded,
+    /// Dead. Queue drained + closed; traffic failed over. Terminal —
+    /// shards are not resurrected within a serve session.
+    Down,
+}
+
+const LIVE: u8 = 0;
+const DEGRADED: u8 = 1;
+const DOWN: u8 = 2;
+
+fn health_of(v: u8) -> ShardHealth {
+    match v {
+        LIVE => ShardHealth::Live,
+        DEGRADED => ShardHealth::Degraded,
+        _ => ShardHealth::Down,
+    }
+}
+
+/// Router configuration (CLI flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Per-shard engine config. `workers` is **per shard**; the fault plan
+    /// is shared by every shard and by the supervisor's shard-tick hook.
+    pub engine: EngineConfig,
+    /// Total shards (engines).
+    pub shards: usize,
+    /// Same-adapter replicas per group; must divide `shards`.
+    pub replicas: usize,
+    pub route: RoutePolicy,
+    /// Supervisor probe period.
+    pub heartbeat: Duration,
+    /// Consecutive failing heartbeats before a shard is declared Down.
+    pub failure_threshold: u32,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            engine: EngineConfig::default(),
+            shards: 2,
+            replicas: 2,
+            route: RoutePolicy::Affinity,
+            heartbeat: Duration::from_millis(50),
+            failure_threshold: 3,
+        }
+    }
+}
+
+/// Supervision counters, all monotone (read with [`ShardRouter::router_stats`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Heartbeat sweeps performed.
+    pub heartbeats: u64,
+    /// Shards declared Down (each counted once).
+    pub failovers: u64,
+    /// Requests moved off a Down shard into a surviving replica.
+    pub moved: u64,
+    /// Requests moved between replicas by work stealing.
+    pub stolen: u64,
+    /// Queued low-priority requests evicted by displacing admission
+    /// (each answered `Expired`, never dropped).
+    pub displaced: u64,
+    /// Requests answered `Error` because their task's whole group was Down.
+    pub down_errors: u64,
+}
+
+struct RouterStatsInner {
+    heartbeats: AtomicU64,
+    failovers: AtomicU64,
+    moved: AtomicU64,
+    stolen: AtomicU64,
+    displaced: AtomicU64,
+    down_errors: AtomicU64,
+}
+
+struct ShardSlot<'b> {
+    engine: ServingEngine<'b>,
+    group: usize,
+    state: AtomicU8,
+    /// Consecutive failing heartbeats (reset by a clean beat).
+    fails: AtomicU32,
+    /// `worker_restarts` high-water mark from the previous beat.
+    restarts_seen: AtomicU64,
+    /// Wedge expiry on the router's `now_us` clock (0 = not wedged).
+    wedged_until_us: AtomicU64,
+}
+
+/// A one-release-many-waiters latch: shard serve-threads park their
+/// engine drivers on it until the router's own driver returns.
+struct Latch {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch { done: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    fn wait(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        *self.done.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+/// The shard router. Construction builds every engine eagerly (bind
+/// failures surface before any traffic); [`ShardRouter::serve`] scopes the
+/// shard worker pools plus the supervisor around a driver closure, same
+/// contract as [`ServingEngine::serve`].
+pub struct ShardRouter<'b> {
+    cfg: RouterConfig,
+    slots: Vec<ShardSlot<'b>>,
+    groups: usize,
+    /// Shared latency epoch (every shard's `done_us` clock).
+    epoch: Instant,
+    /// Round-robin cursor (shared across groups; only its parity pattern
+    /// matters).
+    rr: AtomicUsize,
+    stop: AtomicBool,
+    rstats: RouterStatsInner,
+    /// Ids for synthesized all-replicas-down error responses, minted from
+    /// the top of the id space so they can never collide with the
+    /// residue-class ids shards assign from the bottom.
+    synth_ids: AtomicU64,
+}
+
+impl<'b> ShardRouter<'b> {
+    /// Build `cfg.shards` engines over one backend. `make_tt(k)` supplies
+    /// shard k's adapter chain; replicas of a group MUST receive identical
+    /// state (same seed / same checkpoint) — that is what makes failover
+    /// bit-transparent. Each shard mints request ids from its own residue
+    /// class and stamps `done_us` on one shared epoch.
+    pub fn new(
+        backend: &'b dyn Backend,
+        cfg: RouterConfig,
+        mut make_tt: impl FnMut(usize) -> MetaTt,
+        backbone: Option<&Path>,
+    ) -> Result<ShardRouter<'b>> {
+        if cfg.shards < 1 {
+            bail!("router config: shards must be >= 1");
+        }
+        if cfg.replicas < 1 || cfg.shards % cfg.replicas != 0 {
+            bail!(
+                "router config: replicas ({}) must be >= 1 and divide shards ({})",
+                cfg.replicas,
+                cfg.shards
+            );
+        }
+        if cfg.failure_threshold < 1 {
+            bail!("router config: failure_threshold must be >= 1");
+        }
+        let groups = cfg.shards / cfg.replicas;
+        let epoch = Instant::now();
+        let mut slots = Vec::with_capacity(cfg.shards);
+        for k in 0..cfg.shards {
+            let mut engine =
+                ServingEngine::new(backend, cfg.engine.clone(), make_tt(k), backbone)?;
+            engine.set_id_stride(k as u64, cfg.shards as u64);
+            engine.set_epoch(epoch);
+            slots.push(ShardSlot {
+                engine,
+                group: k / cfg.replicas,
+                state: AtomicU8::new(LIVE),
+                fails: AtomicU32::new(0),
+                restarts_seen: AtomicU64::new(0),
+                wedged_until_us: AtomicU64::new(0),
+            });
+        }
+        Ok(ShardRouter {
+            cfg,
+            slots,
+            groups,
+            epoch,
+            rr: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            rstats: RouterStatsInner {
+                heartbeats: AtomicU64::new(0),
+                failovers: AtomicU64::new(0),
+                moved: AtomicU64::new(0),
+                stolen: AtomicU64::new(0),
+                displaced: AtomicU64::new(0),
+                down_errors: AtomicU64::new(0),
+            },
+            synth_ids: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &RouterConfig {
+        &self.cfg
+    }
+
+    pub fn shards(&self) -> usize {
+        self.cfg.shards
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.cfg.replicas
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    /// Shard k's current health.
+    pub fn health(&self, k: usize) -> ShardHealth {
+        health_of(self.slots[k].state.load(Ordering::Relaxed))
+    }
+
+    /// Shard k's own execution counters.
+    pub fn shard_stats(&self, k: usize) -> EngineStats {
+        self.slots[k].engine.stats()
+    }
+
+    /// Shard k's folded-adapter cache counters (affinity-vs-rr evidence).
+    pub fn shard_cache_stats(&self, k: usize) -> CacheStats {
+        self.slots[k].engine.cache_stats()
+    }
+
+    /// Supervision counters.
+    pub fn router_stats(&self) -> RouterStats {
+        RouterStats {
+            heartbeats: self.rstats.heartbeats.load(Ordering::Relaxed),
+            failovers: self.rstats.failovers.load(Ordering::Relaxed),
+            moved: self.rstats.moved.load(Ordering::Relaxed),
+            stolen: self.rstats.stolen.load(Ordering::Relaxed),
+            displaced: self.rstats.displaced.load(Ordering::Relaxed),
+            down_errors: self.rstats.down_errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Folded-adapter cache counters summed across shards.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for slot in &self.slots {
+            let s = slot.engine.cache_stats();
+            total.hits += s.hits;
+            total.folds += s.folds;
+            total.evictions += s.evictions;
+            total.reloads += s.reloads;
+            total.bytes += s.bytes;
+        }
+        total
+    }
+
+    /// Microseconds on the shared response-stamp clock.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Hot-swap every shard's adapter. Replicas of a group must again
+    /// receive identical state; each shard bumps its own generation by one,
+    /// so per-task generation stamps stay monotone across failover.
+    pub fn reload(&self, mut make_tt: impl FnMut(usize) -> MetaTt) -> Result<()> {
+        for (k, slot) in self.slots.iter().enumerate() {
+            slot.engine.reload(make_tt(k))?;
+        }
+        Ok(())
+    }
+
+    /// Blocking admission (see [`ServingEngine::submit_with`]): route to
+    /// the task's group, preferred replica first, Live before Degraded.
+    /// A shard that raced to Down mid-submit is skipped; when the whole
+    /// group is Down the caller still gets a handle — it resolves to an
+    /// explicit `Error` response, never a hang or a silent drop.
+    pub fn submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<ResponseHandle> {
+        let order = self.route_order(task);
+        for &k in &order {
+            match self.slots[k].engine.submit_with(task, tokens.clone(), deadline, priority)
+            {
+                Ok(h) => return Ok(h),
+                Err(e) => {
+                    if self.health(k) == ShardHealth::Down {
+                        continue; // lost the race with a failover; next replica
+                    }
+                    return Err(e); // a real admission error (validation)
+                }
+            }
+        }
+        Ok(self.all_down_handle(task))
+    }
+
+    /// Blocking admission, default class, no deadline.
+    pub fn submit(&self, task: usize, tokens: Vec<i32>) -> Result<ResponseHandle> {
+        self.submit_with(task, tokens, None, 0)
+    }
+
+    /// Non-blocking admission for open-loop load, with graceful
+    /// degradation: each candidate replica is tried in routing order, and
+    /// a full queue admits by displacement when the arrival's priority
+    /// class strictly outranks the least-urgent queued request — the
+    /// victim is answered `Expired` (lowest class shed first, never
+    /// silently). `Ok(None)` means every replica was full and nothing was
+    /// outranked; all replicas Down again yields an explicit-`Error`
+    /// handle.
+    pub fn try_submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<Option<ResponseHandle>> {
+        let order = self.route_order(task);
+        let mut any_full = false;
+        for &k in &order {
+            let slot = &self.slots[k];
+            let (p, rx) =
+                slot.engine.make_pending(task, tokens.clone(), deadline, priority)?;
+            let id = p.req.id;
+            match slot.engine.queue().try_submit_displacing(p) {
+                Ok(Admit::Admitted(victim)) => {
+                    if let Some(v) = victim {
+                        self.rstats.displaced.fetch_add(1, Ordering::Relaxed);
+                        self.answer_displaced(v);
+                    }
+                    return Ok(Some(ResponseHandle { id, rx }));
+                }
+                Ok(Admit::Full) => {
+                    any_full = true;
+                    continue;
+                }
+                Err(_) if self.health(k) == ShardHealth::Down => continue,
+                Err(e) => return Err(anyhow!(e)),
+            }
+        }
+        if any_full {
+            // Whole group saturated even for this class: a plain overload
+            // rejection, charged to the preferred replica.
+            self.slots[order[0]].engine.note_rejected();
+            return Ok(None);
+        }
+        Ok(Some(self.all_down_handle(task)))
+    }
+
+    /// Run the topology: every shard's worker pool plus the supervisor
+    /// thread, scoped around `driver`. Graceful-drain contract matches
+    /// [`ServingEngine::serve`]; a Down shard's early exit is normal, and
+    /// the first *unrecoverable* shard error is propagated after every
+    /// pool has joined.
+    pub fn serve<R>(&self, driver: impl FnOnce(&Self) -> R) -> Result<R> {
+        std::thread::scope(|scope| {
+            let latch = Latch::new();
+            let shard_threads: Vec<_> = self
+                .slots
+                .iter()
+                .map(|slot| {
+                    let latch = &latch;
+                    scope.spawn(move || slot.engine.serve(|_| latch.wait()))
+                })
+                .collect();
+            let supervisor = scope.spawn(|| {
+                while !self.stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(self.cfg.heartbeat);
+                    if self.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    self.heartbeat_once();
+                }
+            });
+            // Unwind-guarded like the engine driver: a panicking driver
+            // (failing test assertion) must still release the latch, or
+            // the scope would join forever.
+            let out =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| driver(self)));
+            self.stop.store(true, Ordering::Relaxed);
+            // Join the supervisor BEFORE releasing the latch: engines only
+            // close their queues after release, so no final sweep can
+            // mistake an orderly shutdown for a shard self-abort.
+            let _ = supervisor.join();
+            latch.release();
+            let mut first_err = None;
+            for t in shard_threads {
+                match t.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                    Err(_) => {
+                        first_err =
+                            first_err.or(Some(anyhow!("a shard serve thread panicked")));
+                    }
+                }
+            }
+            let out = match out {
+                Ok(v) => v,
+                Err(payload) => std::panic::resume_unwind(payload),
+            };
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(out),
+            }
+        })
+    }
+
+    /// Run one supervision sweep immediately (tests drive health
+    /// transitions deterministically with this instead of sleeping
+    /// through heartbeat periods).
+    pub fn heartbeat_now(&self) {
+        self.heartbeat_once();
+    }
+
+    /// One sweep: probe every non-Down shard in index order (fault hook →
+    /// self-shutdown check → restart-counter check → state transition),
+    /// then rebalance queues within each group.
+    fn heartbeat_once(&self) {
+        self.rstats.heartbeats.fetch_add(1, Ordering::Relaxed);
+        let now_us = self.now_us();
+        for k in 0..self.slots.len() {
+            let slot = &self.slots[k];
+            if self.health(k) == ShardHealth::Down {
+                continue;
+            }
+            match self.cfg.engine.faults.on_shard_tick(k) {
+                ShardFault::Down => {
+                    self.kill_shard(k);
+                    continue;
+                }
+                ShardFault::Wedge(d) => {
+                    slot.wedged_until_us
+                        .store(now_us + d.as_micros() as u64, Ordering::Relaxed);
+                }
+                ShardFault::None => {}
+            }
+            if slot.engine.queue().is_closed() {
+                // The engine aborted itself (unrecoverable worker failure,
+                // e.g. a step that cannot re-bind): treat as Down and fail
+                // its traffic over.
+                self.kill_shard(k);
+                continue;
+            }
+            let restarts = slot.engine.stats().worker_restarts;
+            let failing = restarts > slot.restarts_seen.swap(restarts, Ordering::Relaxed);
+            if failing {
+                let fails = slot.fails.fetch_add(1, Ordering::Relaxed) + 1;
+                if fails >= self.cfg.failure_threshold {
+                    self.kill_shard(k);
+                    continue;
+                }
+            }
+            let wedged = slot.wedged_until_us.load(Ordering::Relaxed) > now_us;
+            if failing || wedged {
+                slot.state.store(DEGRADED, Ordering::Relaxed);
+            } else {
+                slot.fails.store(0, Ordering::Relaxed);
+                slot.state.store(LIVE, Ordering::Relaxed);
+            }
+        }
+        self.steal_work();
+    }
+
+    /// Declare shard k Down (idempotent — only the first caller drains):
+    /// close its queue and fail its admitted requests over to the
+    /// least-loaded surviving replica, or answer them explicitly when the
+    /// whole group is gone. Either way, zero silent loss.
+    fn kill_shard(&self, k: usize) {
+        let prev = self.slots[k].state.swap(DOWN, Ordering::Relaxed);
+        if prev == DOWN {
+            return;
+        }
+        self.rstats.failovers.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[k];
+        // Drain BEFORE close: after close, producers get errors, and
+        // whatever landed in between is caught by the post-close drain
+        // inside requeue's target (the queue is never read again).
+        let mut drained = slot.engine.queue().drain_all();
+        slot.engine.queue().close();
+        drained.extend(slot.engine.queue().drain_all());
+        if drained.is_empty() {
+            return;
+        }
+        let base = slot.group * self.cfg.replicas;
+        let survivor = (base..base + self.cfg.replicas)
+            .filter(|&j| j != k && self.health(j) != ShardHealth::Down)
+            .min_by_key(|&j| {
+                (self.health(j) == ShardHealth::Degraded, self.slots[j].engine.queue().len())
+            });
+        match survivor {
+            Some(j) => {
+                self.rstats.moved.fetch_add(drained.len() as u64, Ordering::Relaxed);
+                self.slots[j].engine.queue().requeue(drained);
+            }
+            None => {
+                let done_us = self.now_us();
+                for p in drained {
+                    self.rstats.down_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = p.tx.send(Response {
+                        id: p.req.id,
+                        task: p.req.task,
+                        status: ResponseStatus::Error,
+                        logits: Vec::new(),
+                        batch_rows: 0,
+                        generation: 0,
+                        done_us,
+                        error: Some(format!(
+                            "shard {k} went down with no surviving replica in its group"
+                        )),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Rebalance within each group: move half the queue-depth gap of
+    /// least-urgent work from the deepest Live replica to the shallowest.
+    fn steal_work(&self) {
+        for g in 0..self.groups {
+            let base = g * self.cfg.replicas;
+            let mut deepest: Option<(usize, usize)> = None;
+            let mut shallowest: Option<(usize, usize)> = None;
+            for k in base..base + self.cfg.replicas {
+                if self.health(k) != ShardHealth::Live {
+                    continue;
+                }
+                let depth = self.slots[k].engine.queue().len();
+                if deepest.is_none_or(|(_, d)| depth > d) {
+                    deepest = Some((k, depth));
+                }
+                if shallowest.is_none_or(|(_, d)| depth < d) {
+                    shallowest = Some((k, depth));
+                }
+            }
+            let (Some((from, max_d)), Some((to, min_d))) = (deepest, shallowest) else {
+                continue;
+            };
+            if from == to || max_d < min_d + STEAL_GAP {
+                continue;
+            }
+            let stolen = self.slots[from].engine.queue().steal_least_urgent((max_d - min_d) / 2);
+            if stolen.is_empty() {
+                continue;
+            }
+            self.rstats.stolen.fetch_add(stolen.len() as u64, Ordering::Relaxed);
+            self.slots[to].engine.queue().requeue(stolen);
+        }
+    }
+
+    /// Candidate shard order for `task`: its group's members, preferred
+    /// replica first (policy-dependent), Live pass before Degraded pass,
+    /// Down excluded. Empty means the whole group is Down.
+    fn route_order(&self, task: usize) -> Vec<usize> {
+        let base = (task % self.groups) * self.cfg.replicas;
+        let preferred = match self.cfg.route {
+            RoutePolicy::Affinity => (task / self.groups) % self.cfg.replicas,
+            RoutePolicy::RoundRobin => {
+                self.rr.fetch_add(1, Ordering::Relaxed) % self.cfg.replicas
+            }
+        };
+        let mut order = Vec::with_capacity(self.cfg.replicas);
+        for pass in [ShardHealth::Live, ShardHealth::Degraded] {
+            for i in 0..self.cfg.replicas {
+                let k = base + (preferred + i) % self.cfg.replicas;
+                if self.health(k) == pass {
+                    order.push(k);
+                }
+            }
+        }
+        order
+    }
+
+    /// Answer a displaced victim: explicit `Expired`, zero compute —
+    /// the degraded-mode analogue of queue-side deadline shedding.
+    fn answer_displaced(&self, p: Pending) {
+        let done_us = self.now_us();
+        let _ = p.tx.send(Response {
+            id: p.req.id,
+            task: p.req.task,
+            status: ResponseStatus::Expired,
+            logits: Vec::new(),
+            batch_rows: 0,
+            generation: 0,
+            done_us,
+            error: Some(
+                "displaced by a higher-priority request under shrunken capacity".into(),
+            ),
+        });
+    }
+
+    /// A ready-resolved handle for a request whose whole group is Down.
+    /// Synthesized ids are minted from the top of the u64 space so they
+    /// never collide with shard-minted residue-class ids.
+    fn all_down_handle(&self, task: usize) -> ResponseHandle {
+        self.rstats.down_errors.fetch_add(1, Ordering::Relaxed);
+        let id = u64::MAX - self.synth_ids.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = response_channel();
+        let _ = tx.send(Response {
+            id,
+            task,
+            status: ResponseStatus::Error,
+            logits: Vec::new(),
+            batch_rows: 0,
+            generation: 0,
+            done_us: self.now_us(),
+            error: Some(format!(
+                "task {task}: every replica of its shard group is down"
+            )),
+        });
+        ResponseHandle { id, rx }
+    }
+}
+
+impl ServeTarget for ShardRouter<'_> {
+    fn seq_len(&self) -> usize {
+        self.slots[0].engine.seq_len()
+    }
+    fn vocab(&self) -> usize {
+        self.slots[0].engine.vocab()
+    }
+    fn classes(&self) -> usize {
+        self.cfg.engine.classes
+    }
+    fn num_tasks(&self) -> usize {
+        self.cfg.engine.num_tasks
+    }
+    fn workers(&self) -> usize {
+        self.cfg.engine.workers * self.cfg.shards
+    }
+    fn now_us(&self) -> u64 {
+        ShardRouter::now_us(self)
+    }
+    fn faults(&self) -> &FaultPlan {
+        &self.cfg.engine.faults
+    }
+    fn generation(&self) -> u64 {
+        self.slots.iter().map(|s| s.engine.generation()).max().unwrap_or(0)
+    }
+    fn submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<ResponseHandle> {
+        ShardRouter::submit_with(self, task, tokens, deadline, priority)
+    }
+    fn try_submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> Result<Option<ResponseHandle>> {
+        ShardRouter::try_submit_with(self, task, tokens, deadline, priority)
+    }
+    fn stats(&self) -> EngineStats {
+        let mut total = EngineStats {
+            batch_hist: vec![0u64; self.cfg.engine.max_batch + 1],
+            ..EngineStats::default()
+        };
+        for slot in &self.slots {
+            let s = slot.engine.stats();
+            total.batches += s.batches;
+            total.requests += s.requests;
+            total.shed += s.shed;
+            total.rejected += s.rejected;
+            total.queue_us_sum += s.queue_us_sum;
+            total.queue_us_max = total.queue_us_max.max(s.queue_us_max);
+            for (i, n) in s.batch_hist.iter().enumerate() {
+                if let Some(slot_n) = total.batch_hist.get_mut(i) {
+                    *slot_n += n;
+                }
+            }
+            total.cache_bytes += s.cache_bytes;
+            total.worker_restarts += s.worker_restarts;
+            total.quarantined += s.quarantined;
+            total.requeued += s.requeued;
+        }
+        total
+    }
+    fn serve_session<R>(&self, driver: impl FnOnce(&Self) -> R) -> Result<R> {
+        ShardRouter::serve(self, driver)
+    }
+}

@@ -16,6 +16,15 @@
 //! torn_write@save=2        tear the 2nd checkpoint save: only a prefix of
 //!                          the temp file lands and the atomic rename
 //!                          never happens
+//! shard_down@tick=4        kill the shard probed by the router's 4th
+//!                          supervision tick (global 1-based counter; the
+//!                          supervisor probes live shards round-robin each
+//!                          heartbeat, so a tick maps deterministically to
+//!                          one shard): its queue is drained + failed over
+//! shard_wedge=40ms@p=0.05  each supervision probe wedges its shard for
+//!                          40ms with probability 0.05 (seeded rng) — the
+//!                          shard reports Degraded and is routed around
+//!                          until the wedge passes
 //! seed=42                  seed for the probabilistic faults
 //! ```
 //!
@@ -49,11 +58,32 @@ pub struct FaultPlan {
     /// `slow_tick=DURms@p=P`: sleep `DUR` before a tick with probability
     /// `P`.
     slow: Option<(Duration, f64)>,
+    /// 1-based shard supervision-tick ordinals that kill the probed shard
+    /// (`shard_down@tick=N`).
+    down_ticks: Vec<u64>,
+    /// `shard_wedge=DURms@p=P`: each supervision probe wedges its shard
+    /// for `DUR` with probability `P`.
+    wedge: Option<(Duration, f64)>,
     ticks: AtomicU64,
     frames: AtomicU64,
     saves: AtomicU64,
+    shard_ticks: AtomicU64,
     rng: Mutex<Pcg64>,
     armed: bool,
+}
+
+/// What one shard supervision probe injected (see
+/// [`FaultPlan::on_shard_tick`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardFault {
+    /// Nothing scheduled for this probe.
+    None,
+    /// Kill the probed shard: the router marks it Down and fails its
+    /// queued work over to a surviving replica.
+    Down,
+    /// Wedge the probed shard for the given duration: the router reports
+    /// it Degraded and routes around it until the wedge passes.
+    Wedge(Duration),
 }
 
 impl Default for FaultPlan {
@@ -74,7 +104,9 @@ impl FaultPlan {
         let mut panic_ticks = Vec::new();
         let mut drop_frames = Vec::new();
         let mut torn_saves = Vec::new();
+        let mut down_ticks = Vec::new();
         let mut slow = None;
+        let mut wedge = None;
         let mut seed = 0u64;
         for raw in spec.split(',') {
             let item = raw.trim();
@@ -87,26 +119,18 @@ impl FaultPlan {
                 drop_frames.push(parse_ordinal(item, rest)?);
             } else if let Some(rest) = item.strip_prefix("torn_write@save=") {
                 torn_saves.push(parse_ordinal(item, rest)?);
+            } else if let Some(rest) = item.strip_prefix("shard_down@tick=") {
+                down_ticks.push(parse_ordinal(item, rest)?);
             } else if let Some(rest) = item.strip_prefix("slow_tick=") {
-                let (dur_s, p_s) = rest
-                    .split_once("@p=")
-                    .ok_or_else(|| format!("`{item}`: expected slow_tick=<N>ms@p=<P>"))?;
-                let ms = dur_s
-                    .strip_suffix("ms")
-                    .ok_or_else(|| format!("`{item}`: duration needs an `ms` suffix"))?;
-                let ms: u64 = ms
-                    .parse()
-                    .map_err(|_| format!("`{item}`: bad millisecond count `{ms}`"))?;
-                let p: f64 = p_s
-                    .parse()
-                    .map_err(|_| format!("`{item}`: bad probability `{p_s}`"))?;
-                if !(0.0..=1.0).contains(&p) {
-                    return Err(format!("`{item}`: probability must be in [0, 1]"));
-                }
                 if slow.is_some() {
                     return Err(format!("`{item}`: slow_tick given twice"));
                 }
-                slow = Some((Duration::from_millis(ms), p));
+                slow = Some(parse_dur_prob(item, rest)?);
+            } else if let Some(rest) = item.strip_prefix("shard_wedge=") {
+                if wedge.is_some() {
+                    return Err(format!("`{item}`: shard_wedge given twice"));
+                }
+                wedge = Some(parse_dur_prob(item, rest)?);
             } else if let Some(rest) = item.strip_prefix("seed=") {
                 seed = rest
                     .parse()
@@ -114,24 +138,29 @@ impl FaultPlan {
             } else {
                 return Err(format!(
                     "unknown fault `{item}` (expected worker_panic@tick=N, \
-                     net_drop@frame=N, torn_write@save=N, slow_tick=<N>ms@p=<P>, \
-                     or seed=N)"
+                     net_drop@frame=N, torn_write@save=N, shard_down@tick=N, \
+                     slow_tick=<N>ms@p=<P>, shard_wedge=<N>ms@p=<P>, or seed=N)"
                 ));
             }
         }
         let armed = !panic_ticks.is_empty()
             || !drop_frames.is_empty()
             || !torn_saves.is_empty()
-            || slow.is_some();
+            || !down_ticks.is_empty()
+            || slow.is_some()
+            || wedge.is_some();
         Ok(FaultPlan {
             spec: spec.trim().to_string(),
             panic_ticks,
             drop_frames,
             torn_saves,
             slow,
+            down_ticks,
+            wedge,
             ticks: AtomicU64::new(0),
             frames: AtomicU64::new(0),
             saves: AtomicU64::new(0),
+            shard_ticks: AtomicU64::new(0),
             rng: Mutex::new(Pcg64::with_stream(seed, 0xfa17)),
             armed,
         })
@@ -202,6 +231,55 @@ impl FaultPlan {
         let save = self.saves.fetch_add(1, Ordering::Relaxed) + 1;
         self.torn_saves.contains(&save)
     }
+
+    /// Router hook, called once per shard supervision probe. `shard` is the
+    /// probed shard's index (attribution only — the schedule is keyed by
+    /// the global probe ordinal, which maps deterministically to a shard
+    /// because the supervisor probes live shards round-robin each
+    /// heartbeat). Returns what the probe injected; the router acts on it.
+    #[inline]
+    pub fn on_shard_tick(&self, shard: usize) -> ShardFault {
+        if !self.armed {
+            return ShardFault::None;
+        }
+        self.shard_tick_armed(shard)
+    }
+
+    #[cold]
+    fn shard_tick_armed(&self, _shard: usize) -> ShardFault {
+        let tick = self.shard_ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.down_ticks.contains(&tick) {
+            return ShardFault::Down;
+        }
+        if let Some((dur, p)) = self.wedge {
+            let fire = self.rng.lock().unwrap().bernoulli(p);
+            if fire {
+                return ShardFault::Wedge(dur);
+            }
+        }
+        ShardFault::None
+    }
+}
+
+/// Parse the shared `<N>ms@p=<P>` payload of `slow_tick=` / `shard_wedge=`.
+fn parse_dur_prob(item: &str, rest: &str) -> Result<(Duration, f64), String> {
+    let name = item.split('=').next().unwrap_or(item);
+    let (dur_s, p_s) = rest
+        .split_once("@p=")
+        .ok_or_else(|| format!("`{item}`: expected {name}=<N>ms@p=<P>"))?;
+    let ms = dur_s
+        .strip_suffix("ms")
+        .ok_or_else(|| format!("`{item}`: duration needs an `ms` suffix"))?;
+    let ms: u64 = ms
+        .parse()
+        .map_err(|_| format!("`{item}`: bad millisecond count `{ms}`"))?;
+    let p: f64 = p_s
+        .parse()
+        .map_err(|_| format!("`{item}`: bad probability `{p_s}`"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("`{item}`: probability must be in [0, 1]"));
+    }
+    Ok((Duration::from_millis(ms), p))
 }
 
 fn parse_ordinal(item: &str, rest: &str) -> Result<u64, String> {
@@ -225,6 +303,7 @@ mod tests {
             assert!(!plan.is_armed());
             assert!(!plan.on_net_frame());
             assert!(!plan.on_save());
+            assert_eq!(plan.on_shard_tick(0), ShardFault::None);
             plan.on_serve_tick(); // must be a no-op, not a panic
         }
     }
@@ -233,16 +312,20 @@ mod tests {
     fn full_grammar_parses() {
         let plan = FaultPlan::parse(
             "worker_panic@tick=17, net_drop@frame=3,slow_tick=5ms@p=0.01,\
-             torn_write@save=2,seed=9",
+             torn_write@save=2,shard_down@tick=4,shard_wedge=40ms@p=0.25,seed=9",
         )
         .unwrap();
         assert!(plan.is_armed());
         assert_eq!(plan.panic_ticks, vec![17]);
         assert_eq!(plan.drop_frames, vec![3]);
         assert_eq!(plan.torn_saves, vec![2]);
+        assert_eq!(plan.down_ticks, vec![4]);
         let (dur, p) = plan.slow.unwrap();
         assert_eq!(dur, Duration::from_millis(5));
         assert!((p - 0.01).abs() < 1e-12);
+        let (dur, p) = plan.wedge.unwrap();
+        assert_eq!(dur, Duration::from_millis(40));
+        assert!((p - 0.25).abs() < 1e-12);
     }
 
     #[test]
@@ -255,6 +338,10 @@ mod tests {
             ("slow_tick=5ms@p=1.5", "probability"),
             ("slow_tick=5ms", "expected slow_tick"),
             ("slow_tick=1ms@p=0.1,slow_tick=2ms@p=0.2", "twice"),
+            ("shard_down@tick=0", "1-based"),
+            ("shard_wedge=5@p=0.1", "ms` suffix"),
+            ("shard_wedge=5ms", "expected shard_wedge"),
+            ("shard_wedge=1ms@p=0.1,shard_wedge=2ms@p=0.2", "twice"),
             ("seed=abc", "bad seed"),
             ("explode@now=1", "unknown fault"),
         ] {
@@ -283,6 +370,31 @@ mod tests {
         }));
         assert!(err.is_err(), "tick 2 must panic");
         plan.on_serve_tick(); // tick 3: fine again
+    }
+
+    #[test]
+    fn shard_down_fires_exactly_at_its_probe_ordinal() {
+        // Two shards probed round-robin: ordinal 3 is shard 0's 2nd probe.
+        let plan = FaultPlan::parse("shard_down@tick=3").unwrap();
+        assert_eq!(plan.on_shard_tick(0), ShardFault::None); // tick 1
+        assert_eq!(plan.on_shard_tick(1), ShardFault::None); // tick 2
+        assert_eq!(plan.on_shard_tick(0), ShardFault::Down); // tick 3 — fires
+        assert_eq!(plan.on_shard_tick(1), ShardFault::None); // tick 4
+    }
+
+    #[test]
+    fn shard_wedge_draws_are_seed_deterministic() {
+        let probe = |seed: u64| -> Vec<ShardFault> {
+            let plan =
+                FaultPlan::parse(&format!("shard_wedge=7ms@p=0.5,seed={seed}")).unwrap();
+            (0..64).map(|i| plan.on_shard_tick(i % 2)).collect()
+        };
+        assert_eq!(probe(7), probe(7), "same seed, same wedge schedule");
+        assert_ne!(probe(7), probe(8), "different seed, different draws");
+        assert!(
+            probe(7).contains(&ShardFault::Wedge(Duration::from_millis(7))),
+            "p=0.5 over 64 probes must wedge at least once"
+        );
     }
 
     #[test]

@@ -313,6 +313,148 @@ fn poisoned_request_is_quarantined_and_batch_mates_succeed() {
 }
 
 #[test]
+fn shard_kill_fails_over_without_losing_requests() {
+    use metatt::serving::{RoutePolicy, RouterConfig, ServeTarget, ShardHealth, ShardRouter};
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 60;
+    let seed = chaos_seed();
+    // A fixed-ordinal shard kill only: with 2 live shards probed in index
+    // order, global tick 4 is beat 2's probe of shard 1 — deterministic
+    // for any METATT_CHAOS_SEED (the seed moves only probabilistic draws).
+    let plan = FaultPlan::parse(&format!("shard_down@tick=4,seed={seed}")).unwrap();
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let mut ecfg = engine_cfg(2, 4, FaultPlan::empty());
+    ecfg.faults = Arc::new(plan);
+    let rcfg = RouterConfig {
+        engine: ecfg,
+        shards: 2,
+        replicas: 2,
+        route: RoutePolicy::Affinity,
+        heartbeat: Duration::from_millis(20),
+        failure_threshold: 3,
+    };
+    let tt_old = demo_tt(5);
+    let tt_new = demo_tt(6);
+    let router = ShardRouter::new(&backend, rcfg, |_| tt_old.clone(), None).unwrap();
+    let seq = router.seq_len();
+    let vocab = router.vocab();
+    let tt_new_ref = &tt_new;
+
+    type ClientOut = Vec<(usize, Vec<i32>, Vec<f32>, u64)>;
+    let per_client: Vec<ClientOut> = router
+        .serve(|r| {
+            std::thread::scope(|scope| {
+                // Hot-swap identical new state into every shard mid-run,
+                // after the kill beat: reload walks shard 0 first and
+                // failover only moves work 1 -> 0, so per-task generation
+                // stamps stay monotone across the failover.
+                let swapper = scope.spawn(move || {
+                    std::thread::sleep(Duration::from_millis(80));
+                    r.reload(|_| tt_new_ref.clone()).unwrap();
+                });
+                let clients: Vec<_> = (0..CLIENTS)
+                    .map(|client| {
+                        scope.spawn(move || -> ClientOut {
+                            (0..PER_CLIENT)
+                                .map(|i| {
+                                    // A little think time so the run spans
+                                    // both the kill beat and the reload.
+                                    std::thread::sleep(Duration::from_micros(500));
+                                    let (task, tokens) =
+                                        chaos_request(seq, vocab, client, i);
+                                    let resp = r
+                                        .submit_with(task, tokens.clone(), None, 0)
+                                        .unwrap()
+                                        .wait()
+                                        .unwrap();
+                                    assert_eq!(
+                                        resp.status,
+                                        ResponseStatus::Ok,
+                                        "client {client} request {i} lost: {:?}",
+                                        resp.error
+                                    );
+                                    (task, tokens, resp.logits, resp.generation)
+                                })
+                                .collect()
+                        })
+                    })
+                    .collect();
+                let out: Vec<ClientOut> =
+                    clients.into_iter().map(|h| h.join().unwrap()).collect();
+                swapper.join().unwrap();
+                out
+            })
+        })
+        .unwrap();
+
+    // 1. Zero lost requests: every admitted request answered Ok exactly
+    // once, across the kill, the failover requeue, and the hot swap.
+    let total: usize = per_client.iter().map(|c| c.len()).sum();
+    assert_eq!(total, CLIENTS * PER_CLIENT, "every request answered exactly once");
+
+    // 2. Exactly one shard went Down and the survivor absorbed its work.
+    assert_eq!(router.health(1), ShardHealth::Down, "tick 4 kills shard 1");
+    assert_ne!(router.health(0), ShardHealth::Down, "shard 0 survives");
+    let rs = router.router_stats();
+    assert_eq!(rs.failovers, 1, "one kill, one failover");
+    assert_eq!(rs.down_errors, 0, "a surviving replica means no outage errors");
+    let s0 = router.shard_stats(0).requests as usize;
+    let s1 = router.shard_stats(1).requests as usize;
+    assert_eq!(s0 + s1, CLIENTS * PER_CLIENT, "shard counters account for every request");
+    assert!(s0 > 0, "the survivor served the failed-over traffic");
+
+    // 3. Per-task generation stamps never go backwards across the
+    // failover, and the reload landed everywhere.
+    for (client, out) in per_client.iter().enumerate() {
+        let mut last = vec![0u64; TASKS];
+        for (task, _, _, gen) in out {
+            assert!(*gen <= 1, "one reload: generations are 0 or 1, got {gen}");
+            assert!(
+                *gen >= last[*task],
+                "client {client} task {task}: generation went backwards"
+            );
+            last[*task] = *gen;
+        }
+    }
+
+    // 4. Bit identity per generation: failover, requeueing, and work
+    // stealing never change what is computed, only where it waits.
+    let dims = ModelPreset::Tiny.dims(TASKS);
+    let spec = ArtifactSpec {
+        step: StepKind::Eval,
+        model: "tiny".into(),
+        adapter: "metatt4p1d".into(),
+        rank: RANK,
+        classes: 2,
+        tasks: TASKS,
+        batch: 1,
+        seq: dims.max_seq,
+    };
+    let entry = backend.entry(&spec).unwrap();
+    let frozen = Arc::new(assemble_frozen(&entry, None, ModelPreset::Tiny).unwrap());
+    let step = backend.bind(&spec, &frozen).unwrap();
+    let folded: [Vec<_>; 2] = [
+        (0..TASKS).map(|t| tt_old.fold_for_serving(t)).collect(),
+        (0..TASKS).map(|t| tt_new.fold_for_serving(t)).collect(),
+    ];
+    let mut want = vec![0f32; 2];
+    for out in &per_client {
+        for (task, tokens, got, gen) in out {
+            step.run_serve(&folded[*gen as usize][*task], tokens, *task as i32, &mut want)
+                .unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "task {task} gen {gen}: sharded logits {g} != fault-free {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn a_wedged_server_surfaces_as_a_clean_timeout() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();

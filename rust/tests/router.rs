@@ -1,0 +1,293 @@
+//! Router suite (PR 9): sharding is *transparent* — it changes which
+//! queue a request waits in, never what is computed.
+//!
+//! The load-bearing properties:
+//!
+//! 1. **Bit identity across topologies** — a 1-shard engine and a 2x2
+//!    replicated topology answer the same seeded request stream with
+//!    bit-identical logits, request by request.
+//! 2. **Affinity keeps folds hot** — on a skewed-by-construction task
+//!    stream, affinity routing folds each task exactly once across the
+//!    group while round-robin folds it on every replica; the cache hit
+//!    rate ranks accordingly.
+//! 3. **Degraded mode is explicit** — when every replica of a group is
+//!    Down, admission still returns a handle and it resolves to an
+//!    `Error` response naming the condition; nothing hangs or vanishes.
+//! 4. **Config validation** — bad topologies and route policies are
+//!    flag-time errors, not serve-time surprises.
+
+use metatt::adapters::AdapterKind;
+use metatt::config::ModelPreset;
+use metatt::runtime::{assemble_frozen, ArtifactSpec, Backend, RefBackend, StepKind};
+use metatt::serving::{
+    adapter_spec_for, EngineConfig, ResponseStatus, RoutePolicy, RouterConfig, ServeTarget,
+    ShardHealth, ShardRouter,
+};
+use metatt::tensor::DtypeKind;
+use metatt::tt::{CoreInit, InitStrategy, MetaTt, MetaTtKind};
+use metatt::util::fault::FaultPlan;
+use metatt::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+const TASKS: usize = 4;
+const RANK: usize = 4;
+const ALPHA: f32 = 1.1;
+
+fn engine_cfg(workers: usize, faults: FaultPlan) -> EngineConfig {
+    EngineConfig {
+        model: ModelPreset::Tiny,
+        adapter: AdapterKind::MetaTt(MetaTtKind::FourPlusOneD),
+        rank: RANK,
+        alpha: ALPHA,
+        num_tasks: TASKS,
+        classes: 2,
+        max_batch: 4,
+        batch_deadline: Duration::from_millis(1),
+        queue_capacity: 64,
+        workers,
+        cache_capacity_bytes: 64 << 20,
+        dtype: DtypeKind::F32,
+        faults: Arc::new(faults),
+    }
+}
+
+fn router_cfg(shards: usize, replicas: usize, route: RoutePolicy) -> RouterConfig {
+    RouterConfig {
+        engine: engine_cfg(1, FaultPlan::empty()),
+        shards,
+        replicas,
+        route,
+        heartbeat: Duration::from_millis(10),
+        failure_threshold: 3,
+    }
+}
+
+fn demo_tt(seed: u64) -> MetaTt {
+    let spec = adapter_spec_for(&engine_cfg(1, FaultPlan::empty()));
+    let init = InitStrategy {
+        cores: vec![CoreInit::Normal; MetaTtKind::FourPlusOneD.order()],
+    };
+    spec.build_metatt_with(&mut Pcg64::new(seed), Some(&init))
+}
+
+/// The deterministic request of `(client, index)`: pure function, so two
+/// topologies (and the fault-free oracle) replay exactly the same stream.
+fn stream_request(seq: usize, vocab: usize, client: usize, i: usize) -> (usize, Vec<i32>) {
+    let mut rng = Pcg64::with_stream(700 + client as u64, i as u64);
+    let task = (client + i) % TASKS;
+    let tokens = (0..seq).map(|_| 1 + rng.uniform_usize(vocab - 1) as i32).collect();
+    (task, tokens)
+}
+
+/// Drive `clients x per_client` closed-loop requests through a fresh
+/// topology and return each one's logits, indexed `[client][i]`.
+fn run_closed_loop(
+    backend: &RefBackend,
+    shards: usize,
+    replicas: usize,
+    tt: &MetaTt,
+    clients: usize,
+    per_client: usize,
+) -> Vec<Vec<Vec<f32>>> {
+    let router = ShardRouter::new(
+        backend,
+        router_cfg(shards, replicas, RoutePolicy::Affinity),
+        |_| tt.clone(),
+        None,
+    )
+    .unwrap();
+    let seq = router.seq_len();
+    let vocab = router.vocab();
+    router
+        .serve(|r| {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..clients)
+                    .map(|client| {
+                        scope.spawn(move || {
+                            (0..per_client)
+                                .map(|i| {
+                                    let (task, tokens) =
+                                        stream_request(seq, vocab, client, i);
+                                    let resp = r
+                                        .submit_with(task, tokens, None, 0)
+                                        .unwrap()
+                                        .wait()
+                                        .unwrap();
+                                    assert_eq!(
+                                        resp.status,
+                                        ResponseStatus::Ok,
+                                        "client {client} request {i}: {:?}",
+                                        resp.error
+                                    );
+                                    resp.logits
+                                })
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+            })
+        })
+        .unwrap()
+}
+
+#[test]
+fn one_shard_and_a_replicated_topology_answer_bit_identically() {
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 20;
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let tt = demo_tt(9);
+    let single = run_closed_loop(&backend, 1, 1, &tt, CLIENTS, PER_CLIENT);
+    let sharded = run_closed_loop(&backend, 2, 2, &tt, CLIENTS, PER_CLIENT);
+
+    for (client, (a, b)) in single.iter().zip(&sharded).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (i, (la, lb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(la.len(), lb.len());
+            for (x, y) in la.iter().zip(lb) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "client {client} request {i}: 1x1 logit {x} != 2x2 logit {y}"
+                );
+            }
+        }
+    }
+
+    // Oracle: both topologies must also match a direct fault-free batch-1
+    // forward of the same (task, tokens) — routing never changes compute.
+    let dims = ModelPreset::Tiny.dims(TASKS);
+    let spec = ArtifactSpec {
+        step: StepKind::Eval,
+        model: "tiny".into(),
+        adapter: "metatt4p1d".into(),
+        rank: RANK,
+        classes: 2,
+        tasks: TASKS,
+        batch: 1,
+        seq: dims.max_seq,
+    };
+    let entry = backend.entry(&spec).unwrap();
+    let frozen = Arc::new(assemble_frozen(&entry, None, ModelPreset::Tiny).unwrap());
+    let step = backend.bind(&spec, &frozen).unwrap();
+    let folded: Vec<_> = (0..TASKS).map(|t| tt.fold_for_serving(t)).collect();
+    let mut want = vec![0f32; 2];
+    for (client, per) in sharded.iter().enumerate() {
+        for (i, got) in per.iter().enumerate() {
+            let (task, tokens) = stream_request(dims.max_seq, dims.vocab, client, i);
+            step.run_serve(&folded[task], &tokens, task as i32, &mut want).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "client {client} request {i} task {task}: sharded {g} != oracle {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn affinity_routing_beats_round_robin_on_cache_hits() {
+    // A paired task stream — every task submitted back to back, round
+    // after round — through one group of two replicas. Affinity pins each
+    // task to `(task / groups) % replicas`, so the group folds each task
+    // exactly once; round-robin's cursor alternates replicas between the
+    // paired submissions, so every task is folded on *both* caches.
+    const ROUNDS: usize = 5;
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let tt = demo_tt(11);
+    let mut outcomes = Vec::new();
+    for route in [RoutePolicy::Affinity, RoutePolicy::RoundRobin] {
+        let router =
+            ShardRouter::new(&backend, router_cfg(2, 2, route), |_| tt.clone(), None)
+                .unwrap();
+        let seq = router.seq_len();
+        router
+            .serve(|r| {
+                for _round in 0..ROUNDS {
+                    for task in 0..TASKS {
+                        for rep in 0..2 {
+                            let tokens = vec![1 + (task + rep) as i32; seq];
+                            let resp =
+                                r.submit_with(task, tokens, None, 0)?.wait()?;
+                            assert_eq!(resp.status, ResponseStatus::Ok);
+                        }
+                    }
+                }
+                anyhow::Ok(())
+            })
+            .unwrap()
+            .unwrap();
+        let cache = router.cache_stats();
+        let lookups = cache.hits + cache.folds;
+        outcomes.push((route, cache.folds, cache.hits as f64 / lookups.max(1) as f64));
+    }
+    let (_, affinity_folds, affinity_rate) = outcomes[0];
+    let (_, rr_folds, rr_rate) = outcomes[1];
+    assert_eq!(
+        affinity_folds, TASKS as u64,
+        "affinity folds each task exactly once across the group"
+    );
+    assert_eq!(
+        rr_folds,
+        2 * TASKS as u64,
+        "round-robin folds every task on both replicas"
+    );
+    assert!(
+        affinity_rate > rr_rate,
+        "affinity hit rate {affinity_rate:.3} must beat round-robin {rr_rate:.3}"
+    );
+}
+
+#[test]
+fn a_fully_down_group_answers_with_explicit_errors() {
+    // One sweep probes both shards (global tick ordinals 1 and 2), so a
+    // two-tick kill plan downs the whole group in a single heartbeat.
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let plan = FaultPlan::parse("shard_down@tick=1,shard_down@tick=2,seed=1").unwrap();
+    let mut rcfg = router_cfg(2, 2, RoutePolicy::Affinity);
+    rcfg.engine.faults = Arc::new(plan);
+    let router = ShardRouter::new(&backend, rcfg, |_| demo_tt(13), None).unwrap();
+    let seq = router.seq_len();
+
+    router.heartbeat_now();
+    let rs = router.router_stats();
+    assert_eq!(rs.heartbeats, 1);
+    assert_eq!(rs.failovers, 2, "both shards declared Down");
+    assert_eq!(router.health(0), ShardHealth::Down);
+    assert_eq!(router.health(1), ShardHealth::Down);
+
+    // Blocking admission: a handle that resolves to a named Error.
+    let resp = router.submit(0, vec![1; seq]).unwrap().wait().unwrap();
+    assert_eq!(resp.status, ResponseStatus::Error);
+    assert!(resp.logits.is_empty());
+    let msg = resp.error.as_deref().unwrap_or("");
+    assert!(msg.contains("down"), "error must name the condition: {msg:?}");
+
+    // Non-blocking admission degrades the same way — never Ok(None),
+    // which would claim overload rather than outage.
+    let h = router
+        .try_submit_with(1, vec![2; seq], Some(Duration::from_millis(50)), 0)
+        .unwrap()
+        .expect("a downed group answers, it does not shed");
+    let resp = h.wait().unwrap();
+    assert_eq!(resp.status, ResponseStatus::Error);
+    assert!(router.router_stats().down_errors >= 2);
+}
+
+#[test]
+fn bad_topologies_and_policies_are_flag_time_errors() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let err = ShardRouter::new(&backend, router_cfg(4, 3, RoutePolicy::Affinity), |_| {
+        demo_tt(1)
+    }, None)
+    .expect_err("3 replicas cannot divide 4 shards");
+    assert!(format!("{err:#}").contains("divide"));
+    assert!(RoutePolicy::parse("affinity").is_ok());
+    assert!(RoutePolicy::parse("rr").is_ok());
+    let err = RoutePolicy::parse("random").expect_err("unknown policy must error");
+    assert!(format!("{err:#}").contains("unknown route policy"));
+}
