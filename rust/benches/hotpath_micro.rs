@@ -28,6 +28,10 @@
 //!      resident, ticks/s, and effective weight-stream GB/s per dtype,
 //!      emitted as `BENCH_pr7.json`. Asserts the quantized paths actually
 //!      move fewer bytes (bf16 < f32, int8 < bf16).
+//!  10. **Observability overhead** (PR 10): the serving tick with its
+//!      lifecycle hooks armed vs unarmed (acceptance: armed p50 within 5%),
+//!      raw tracer events/s armed and disarmed, and exact loss accounting
+//!      under deliberate ring pressure — emitted as `BENCH_pr10.json`.
 //!
 //! `METATT_BENCH_SMOKE=1` runs a fast subset with tiny iteration counts —
 //! CI uses it to catch kernel regressions (crashes, determinism breaks,
@@ -37,6 +41,7 @@ use metatt::adapters::{AdapterKind, AdapterSpec};
 use metatt::bench::{bench, save_record, Stats};
 use metatt::config::ModelPreset;
 use metatt::data::TaskId;
+use metatt::obs::{EventCode, Obs};
 use metatt::optim::AdamW;
 use metatt::runtime::{
     assemble_frozen, backend_from_env, pack_frozen_weights, packed_frozen_bytes,
@@ -680,5 +685,117 @@ fn main() -> anyhow::Result<()> {
         ("records", Json::Arr(pr7)),
     ]);
     save_record("pr7", &pr7_doc)?;
+
+    // ---- 10. Observability overhead (PR 10). -----------------------------
+    // Three numbers CI tracks: (a) the serving tick with its full lifecycle
+    // hook pattern (admit / tick-start / tick-end / response-written) armed
+    // vs unarmed — acceptance pins the armed p50 within 5%; (b) raw tracer
+    // throughput, armed (ring record) and disarmed (one relaxed load); and
+    // (c) exact loss accounting under deliberate multi-thread ring pressure
+    // — recorded + dropped must equal the offered load.
+    println!("\n== 10. observability (PR 10): hook overhead + tracer throughput ==");
+    let mut pr10: Vec<Json> = Vec::new();
+    let pairs10: Vec<Vec<FoldedPairPacked>> = dense9
+        .iter()
+        .map(|row| {
+            row.iter().map(|(a, b)| FoldedPairPacked::pack(a, b, DtypeKind::F32)).collect()
+        })
+        .collect();
+    let step10 = b9.bind_serve(&spec9, &frozen9, DtypeKind::F32)?;
+    let mut out10 = vec![0f32; 2];
+    step10.run_serve_packed(&pairs10, &tokens9, 0, &mut out10)?; // warm the arena
+    let mut tick_p50 = Vec::new();
+    for armed in [false, true] {
+        let obs = Obs::new(armed);
+        let tag = if armed { "armed" } else { "unarmed" };
+        // Identical code on both arms — the only difference is whether the
+        // hooks fall through their relaxed load or record into a ring — so
+        // the ratio isolates the tracing cost of one serving tick.
+        let s = bench(&format!("obs/serve-tick/{tag}"), scale(3), scale(30), || {
+            let t0 = obs.now_us();
+            obs.event_at(t0, EventCode::Admit, 1, 0);
+            obs.event_at(t0, EventCode::TickStart, 0, 0);
+            step10.run_serve_packed(&pairs10, &tokens9, 0, &mut out10).unwrap();
+            obs.event_at(obs.now_us(), EventCode::TickEnd, 0, t0);
+            obs.event(EventCode::ResponseWritten, 1, 0);
+            std::hint::black_box(&out10);
+        });
+        tick_p50.push(s.p50);
+        pr10.push(Json::obj(vec![
+            ("kind", Json::str("serve-tick")),
+            ("mode", Json::str(tag)),
+            ("p50_s", Json::num(s.p50)),
+            ("ticks_per_s", Json::num(1.0 / s.p50)),
+        ]));
+    }
+    let armed_overhead = tick_p50[1] / tick_p50[0];
+    println!(
+        "   armed/unarmed tick p50 ratio: {armed_overhead:.3} (acceptance: within 5%)"
+    );
+
+    // 10b. Raw tracer throughput: a single thread hammering one hook.
+    const EVENTS_PER_ITER: u64 = 100_000;
+    let obs_on = Obs::with_rings(true, 1, 1 << 16);
+    let rec = bench("obs/event/armed", scale(2), scale(10), || {
+        for i in 0..EVENTS_PER_ITER {
+            obs_on.event_at(i, EventCode::Admit, std::hint::black_box(i), 0);
+        }
+    });
+    let obs_off = Obs::new(false);
+    let off = bench("obs/event/disarmed", scale(2), scale(10), || {
+        for i in 0..EVENTS_PER_ITER {
+            obs_off.event(EventCode::Admit, std::hint::black_box(i), 0);
+        }
+    });
+    let armed_events_per_s = EVENTS_PER_ITER as f64 / rec.p50;
+    let disarmed_events_per_s = EVENTS_PER_ITER as f64 / off.p50;
+    println!(
+        "   tracer: {:.1} M events/s armed, {:.1} M hook calls/s disarmed",
+        armed_events_per_s / 1e6,
+        disarmed_events_per_s / 1e6
+    );
+
+    // 10c. Loss accounting under ring pressure: more threads than rings,
+    // rings far smaller than the offered load. Everything not recorded must
+    // be counted as dropped — the bench asserts the invariant and records
+    // the observed loss so ring-sizing regressions show up in the numbers.
+    let pressure_threads = 4u64;
+    let per_thread = if smoke { 20_000u64 } else { 200_000u64 };
+    let obs_pressure = std::sync::Arc::new(Obs::with_rings(true, 2, 1024));
+    std::thread::scope(|scope| {
+        for t in 0..pressure_threads {
+            let obs = std::sync::Arc::clone(&obs_pressure);
+            scope.spawn(move || {
+                for i in 0..per_thread {
+                    obs.event_at(i, EventCode::Admit, t, i);
+                }
+            });
+        }
+    });
+    let offered = pressure_threads * per_thread;
+    let recorded = obs_pressure.tracer().recorded();
+    let dropped = obs_pressure.tracer().dropped();
+    assert_eq!(
+        recorded + dropped,
+        offered,
+        "ring pressure must never lose events silently"
+    );
+    println!(
+        "   ring pressure ({pressure_threads} threads -> 2x1024 rings): \
+         {offered} offered, {recorded} recorded, {dropped} dropped (accounted exactly)"
+    );
+
+    let pr10_doc = Json::obj(vec![
+        ("bench", Json::str("hotpath_micro/observability")),
+        ("smoke", Json::Bool(smoke)),
+        ("armed_tick_overhead", Json::num(armed_overhead)),
+        ("armed_events_per_s", Json::num(armed_events_per_s)),
+        ("disarmed_hook_calls_per_s", Json::num(disarmed_events_per_s)),
+        ("pressure_offered", Json::num(offered as f64)),
+        ("pressure_recorded", Json::num(recorded as f64)),
+        ("pressure_dropped", Json::num(dropped as f64)),
+        ("records", Json::Arr(pr10)),
+    ]);
+    save_record("pr10", &pr10_doc)?;
     Ok(())
 }

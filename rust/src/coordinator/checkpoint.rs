@@ -23,6 +23,7 @@
 //! the last 8 bytes carry the magic; trailer-less files from older writers
 //! keep loading through the original path.
 
+use crate::obs::{global_event, EventCode};
 use crate::tensor::Tensor;
 use crate::util::fault::FaultPlan;
 use crate::util::json::{self, Json};
@@ -158,6 +159,7 @@ fn write_file(path: &Path, buf: &[u8], faults: Option<&FaultPlan>) -> Result<(),
     let tmp = path.with_file_name(format!("{file_name}.tmp"));
     if faults.is_some_and(|f| f.on_save()) {
         let _ = std::fs::write(&tmp, &full[..full.len() / 2]);
+        global_event(EventCode::CkptSave, full.len() as u64, 1);
         return Err(format!(
             "injected fault: torn write left {} partial; {} untouched",
             tmp.display(),
@@ -174,7 +176,12 @@ fn write_file(path: &Path, buf: &[u8], faults: Option<&FaultPlan>) -> Result<(),
     land.map_err(|e| {
         let _ = std::fs::remove_file(&tmp);
         format!("write {}: {e}", path.display())
-    })
+    })?;
+    // Span payload: (bytes landed, torn? 0/1). These free functions have no
+    // engine to hand them an `Obs`, so they go through the process-global
+    // handle — a single relaxed load on a static when tracing is unarmed.
+    global_event(EventCode::CkptSave, full.len() as u64, 0);
+    Ok(())
 }
 
 /// Save named tensors (v1 container, no metadata). Order is preserved.
@@ -328,6 +335,7 @@ pub fn load_with_meta(
     if pos != buf.len() {
         return Err("trailing bytes in checkpoint".into());
     }
+    global_event(EventCode::CkptLoad, buf.len() as u64, out.len() as u64);
     Ok((meta, out))
 }
 

@@ -39,6 +39,7 @@
 //! | [`optim`] | AdamW / SGD, LR schedules, gradient clipping |
 //! | [`data`] | synthetic GLUE suite + MLM pretraining corpus |
 //! | [`metrics`] | accuracy, Matthews, Spearman, seed aggregation |
+//! | [`obs`] | zero-overhead observability: armed/unarmed span tracer (per-thread lock-free rings → Chrome trace JSON), metrics registry (counters/gauges/log-linear histograms, Prometheus text), `STAT` exposition + `--metrics-out` (`BENCH_pr10.json`) |
 //! | [`runtime`] | `Backend`/`Step` seam: pure-rust ref executor, spec-derived I/O layouts, artifact registry, PJRT cache (feature `pjrt`) |
 //! | [`serving`] | multi-task serving engine: bounded admission queue, dynamic same-task batcher, per-task folded-adapter LRU cache with checkpoint hot-swap, closed-loop load generator (`BENCH_pr5.json`) |
 //! | [`coordinator`] | trainers (single-task, MTL, DMRG), checkpoints (v2 container carries adapter metadata) |
@@ -55,6 +56,7 @@ pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod serving;

@@ -72,6 +72,18 @@ commands:
                               per level); records BENCH_pr6.json — or, with
                               faults armed, a faulted-vs-clean twin sweep
                               into BENCH_pr8.json
+             --trace          arm the tracing + metrics layer (also env
+                              METATT_TRACE=1); unarmed, every hook is one
+                              relaxed atomic load and the warmed serve
+                              tick stays zero-allocation
+             [--trace-out FILE]    write the recorded spans as Chrome
+                              trace-event JSON on exit (implies --trace;
+                              open in chrome://tracing or Perfetto)
+             [--metrics-out FILE]  rewrite a JSON metrics snapshot once a
+                              second while serving, and once on exit
+             --connect ... --stat  after the load run, scrape the server's
+                              STAT admin frame (live Prometheus-style
+                              metrics snapshot) and print it
              --faults SPEC    arm deterministic fault injection (also env
                               METATT_FAULTS), e.g. \"worker_panic@tick=17,
                               net_drop@frame=3,slow_tick=5ms@p=0.01,
@@ -126,8 +138,11 @@ const OPTS: &[&str] = &[
     "faults", "net-timeout-ms", "drain-grace-ms",
     // sharded serving topology
     "shards", "replicas", "route",
+    // observability exports
+    "trace-out", "metrics-out",
 ];
-const FLAGS: &[&str] = &["help", "no-checkpoint", "verbose", "overload", "topology"];
+const FLAGS: &[&str] =
+    &["help", "no-checkpoint", "verbose", "overload", "topology", "trace", "stat"];
 
 fn run() -> Result<()> {
     let args = Args::from_env(OPTS, FLAGS).map_err(|e| anyhow!(e))?;
@@ -588,6 +603,100 @@ fn cmd_dmrg(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The serve session's observability handle (PR 10): builds the shared
+/// [`metatt::obs::Obs`], installs the process-global hook (checkpoint
+/// save/load events), runs the once-a-second `--metrics-out` dumper, and
+/// on drop — every exit path, including errors — writes the final metrics
+/// snapshot and the `--trace-out` Chrome trace.
+struct ObsSession {
+    obs: std::sync::Arc<metatt::obs::Obs>,
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    dumper: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ObsSession {
+    fn begin(args: &Args) -> ObsSession {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let trace_out = args.get("trace-out").map(str::to_string);
+        let metrics_out = args.get("metrics-out").map(str::to_string);
+        let armed = metatt::obs::Obs::armed_from_env(args.flag("trace") || trace_out.is_some());
+        let obs = Arc::new(metatt::obs::Obs::new(armed));
+        metatt::obs::set_global(Some(Arc::clone(&obs)));
+        if armed {
+            println!("tracing armed (per-thread ring-buffer spans + metrics registry)");
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let dumper = metrics_out.clone().map(|path| {
+            let stop = Arc::clone(&stop);
+            let obs = Arc::clone(&obs);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = std::fs::write(&path, obs.metrics_json());
+                    // 100 ms granularity so exit never stalls a full second.
+                    for _ in 0..10 {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(100));
+                    }
+                }
+            })
+        });
+        ObsSession { obs, trace_out, metrics_out, stop, dumper }
+    }
+}
+
+impl Drop for ObsSession {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.dumper.take() {
+            let _ = h.join();
+        }
+        if let Some(path) = &self.metrics_out {
+            match std::fs::write(path, self.obs.metrics_json()) {
+                Ok(()) => println!("metrics snapshot written to {path}"),
+                Err(e) => eprintln!("--metrics-out {path}: {e}"),
+            }
+        }
+        if let Some(path) = &self.trace_out {
+            let t = self.obs.tracer();
+            let spans = t.snapshot().len();
+            match self.obs.write_chrome_trace(Path::new(path)) {
+                Ok(()) => println!(
+                    "wrote {spans} spans to {path} ({} recorded, {} dropped under \
+                     ring pressure)",
+                    t.recorded(),
+                    t.dropped()
+                ),
+                Err(e) => eprintln!("--trace-out {path}: {e}"),
+            }
+        }
+        metatt::obs::set_global(None);
+    }
+}
+
+/// One line of per-stage latency percentiles (satellite of the PR 10
+/// observability layer): where a request's time went, from the engine's
+/// always-on µs stage stamps.
+fn print_stages(stages: &Option<metatt::serving::StageBreakdown>) {
+    let Some(s) = stages else { return };
+    println!(
+        "stage p50/p99 ms — queue {:.2}/{:.2}  batch-wait {:.2}/{:.2}  \
+         compute {:.2}/{:.2}  respond {:.2}/{:.2}",
+        s.queue_wait.p50 * 1e3,
+        s.queue_wait.p99 * 1e3,
+        s.batch_wait.p50 * 1e3,
+        s.batch_wait.p99 * 1e3,
+        s.compute.p50 * 1e3,
+        s.compute.p99 * 1e3,
+        s.respond.p50 * 1e3,
+        s.respond.p99 * 1e3
+    );
+}
+
 /// `metatt serve` — the multi-task serving engine driven by the in-process
 /// closed-loop load generator. The adapter state comes from `--checkpoint`
 /// (a v2 container's metadata is validated against — and fills in — the
@@ -643,6 +752,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(addr) = args.get("connect") {
         return serve_connect(args, addr, seed, deadline, priority);
     }
+
+    // Observability (PR 10): one `Obs` shared by every engine and router in
+    // this process. Unarmed, every hook it feeds is a single relaxed atomic
+    // load; armed (--trace / --trace-out / METATT_TRACE=1) it records spans
+    // into per-thread rings and exports them on exit. The guard's Drop
+    // writes --trace-out / --metrics-out on every exit path.
+    let obs_session = ObsSession::begin(args);
+    let obs = std::sync::Arc::clone(&obs_session.obs);
 
     // Adapter state: checkpoint tensors (+ metadata validation/adoption),
     // or a deterministic synthetic adapter when no checkpoint is given.
@@ -736,6 +853,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map_err(|e| anyhow!(e))?,
         dtype: serve_dtype,
         faults: std::sync::Arc::clone(&faults),
+        obs: std::sync::Arc::clone(&obs),
     };
     // Guard before any chain construction: metatt_from_tensors /
     // build_metatt panic on non-TT families, the engine only folds TT.
@@ -793,6 +911,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         (
             EngineConfig {
                 faults: std::sync::Arc::new(metatt::util::fault::FaultPlan::empty()),
+                // The baseline gets its own disarmed Obs so the exported
+                // trace holds only the faulted arm's spans.
+                obs: std::sync::Arc::new(metatt::obs::Obs::new(false)),
                 ..cfg.clone()
             },
             tt.clone(),
@@ -857,6 +978,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.config().dtype.name(),
         cache.bytes as f64 / 1024.0
     );
+    print_stages(&report.stages);
     let doc = serving::report_json(&engine, &lcfg, &report);
     metatt::bench::save_record("pr5", &doc)?;
     results::append_record(
@@ -1014,6 +1136,7 @@ fn serve_router_load(
         rs.stolen,
         rs.failovers,
     );
+    print_stages(&report.stages);
     results::append_record(
         "serve_sharded",
         &Json::obj(vec![
@@ -1094,6 +1217,27 @@ fn serve_connect(
         report.retries,
         report.reconnects
     );
+    // Client wall latency above includes the network; the engine-clock view
+    // (from the wire stage stamps, admit → done on the server's µs clock)
+    // isolates server-side time.
+    if let Some(l) = &report.engine_latency {
+        println!(
+            "engine-clock latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms \
+             (server admit→done, network excluded)",
+            l.p50 * 1e3,
+            l.p95 * 1e3,
+            l.p99 * 1e3
+        );
+    }
+    print_stages(&report.stages);
+    if args.flag("stat") {
+        let mut c =
+            serving::NetClient::connect_retry_with(addr, net.connect_timeout, io_timeout)?;
+        let text = c.stat()?;
+        println!("--- STAT snapshot from {addr} ---");
+        print!("{text}");
+        println!("--- end STAT snapshot ---");
+    }
     if report.errors > 0 {
         bail!("{} requests came back as protocol/validation errors", report.errors);
     }

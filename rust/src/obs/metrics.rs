@@ -1,0 +1,425 @@
+//! Metrics registry: counters, gauges, and log-linear bucket histograms
+//! with a Prometheus-style text exposition.
+//!
+//! Histograms use **fixed** log-linear bucket boundaries (four linear
+//! sub-buckets per power-of-two octave, values in µs): a value lands in the
+//! same bucket no matter which thread observed it or how many threads were
+//! running, so 1-thread and N-thread runs aggregate identically and records
+//! from different runs can be merged bucket-by-bucket.
+//!
+//! Handles (`Arc<Counter>` etc.) are registered once — keyed by
+//! `(name, labels)` — and cached by producers; the hot path is a plain
+//! relaxed atomic add. Rendering walks the registry under its mutex, which
+//! only ever contends with other renders and late registrations.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of histogram buckets. The last bucket is the +Inf catch-all.
+/// 4 sub-buckets per octave covers [0, 2^25) µs (~33 s) with ≤ ~12%
+/// relative bucket width before saturating.
+pub const BUCKETS: usize = 96;
+
+/// Fixed log-linear bucket index for a value in µs.
+pub fn bucket_index(v: u64) -> usize {
+    if v < 4 {
+        return v as usize; // buckets 0..=3 hold exact values 0,1,2,3
+    }
+    let octave = 63 - v.leading_zeros() as usize; // floor(log2 v), >= 2
+    let sub = ((v >> (octave - 2)) & 3) as usize; // top two bits below the lead
+    (4 * (octave - 1) + sub).min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the +Inf bucket).
+pub fn bucket_bound(i: usize) -> u64 {
+    if i < 4 {
+        return i as u64;
+    }
+    if i >= BUCKETS - 1 {
+        return u64::MAX;
+    }
+    let octave = i / 4 + 1;
+    let sub = (i % 4) as u64;
+    (1u64 << octave) + (sub + 1) * (1u64 << (octave - 2)) - 1
+}
+
+/// Monotone counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-boundary log-linear histogram (values in µs).
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+
+    /// Bucket-resolution quantile estimate: the upper bound of the bucket
+    /// holding the rank-`q` observation (0 when empty). `q` in [0, 1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for i in 0..BUCKETS {
+            seen += self.bucket(i);
+            if seen >= rank {
+                let bound = bucket_bound(i);
+                if bound == u64::MAX {
+                    // +Inf bucket: fall back to the mean as a finite stand-in.
+                    return self.sum() / n;
+                }
+                return bound;
+            }
+        }
+        bucket_bound(BUCKETS - 2)
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: &'static str,
+    help: &'static str,
+    /// Pre-formatted label pairs, e.g. `task="0"`. Empty for no labels.
+    labels: String,
+    metric: Metric,
+}
+
+/// Get-or-create registry of named metrics; renders a Prometheus-style
+/// text snapshot. Registration is construction-time; hot-path updates go
+/// through the returned `Arc` handles and never touch the registry lock.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &str,
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.name == name && e.labels == labels) {
+            return match &e.metric {
+                Metric::Counter(c) => Metric::Counter(c.clone()),
+                Metric::Gauge(g) => Metric::Gauge(g.clone()),
+                Metric::Histogram(h) => Metric::Histogram(h.clone()),
+            };
+        }
+        let metric = make();
+        let handle = match &metric {
+            Metric::Counter(c) => Metric::Counter(c.clone()),
+            Metric::Gauge(g) => Metric::Gauge(g.clone()),
+            Metric::Histogram(h) => Metric::Histogram(h.clone()),
+        };
+        entries.push(Entry { name, help, labels: labels.to_string(), metric });
+        handle
+    }
+
+    /// Get-or-create a counter for `(name, labels)`.
+    pub fn counter(&self, name: &'static str, help: &'static str, labels: &str) -> Arc<Counter> {
+        match self.get_or_insert(name, help, labels, || Metric::Counter(Arc::default())) {
+            Metric::Counter(c) => c,
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Get-or-create a gauge for `(name, labels)`.
+    pub fn gauge(&self, name: &'static str, help: &'static str, labels: &str) -> Arc<Gauge> {
+        match self.get_or_insert(name, help, labels, || Metric::Gauge(Arc::default())) {
+            Metric::Gauge(g) => g,
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Get-or-create a histogram for `(name, labels)`.
+    pub fn histogram(&self, name: &'static str, help: &'static str, labels: &str) -> Arc<Histogram> {
+        match self.get_or_insert(name, help, labels, || Metric::Histogram(Arc::default())) {
+            Metric::Histogram(h) => h,
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Append a JSON array snapshot (`--metrics-out`): one object per
+    /// registered metric with name/labels/kind; counters and gauges carry
+    /// `value`, histograms carry `count`/`sum`/`p50`/`p95`/`p99` (µs).
+    pub fn render_json(&self, out: &mut String) {
+        use std::fmt::Write;
+        let entries = self.entries.lock().unwrap();
+        let mut order: Vec<usize> = (0..entries.len()).collect();
+        order.sort_by(|&a, &b| {
+            (entries[a].name, entries[a].labels.as_str())
+                .cmp(&(entries[b].name, entries[b].labels.as_str()))
+        });
+        out.push('[');
+        for (k, &i) in order.iter().enumerate() {
+            let e = &entries[i];
+            if k > 0 {
+                out.push(',');
+            }
+            let labels = e.labels.replace('\\', "\\\\").replace('"', "\\\"");
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"labels\":\"{}\",\"kind\":\"{}\",",
+                e.name,
+                labels,
+                e.metric.kind()
+            );
+            match &e.metric {
+                Metric::Counter(c) => {
+                    let _ = write!(out, "\"value\":{}}}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = write!(out, "\"value\":{}}}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let _ = write!(
+                        out,
+                        "\"count\":{},\"sum\":{},\"p50\":{},\"p95\":{},\"p99\":{}}}",
+                        h.count(),
+                        h.sum(),
+                        h.quantile(0.5),
+                        h.quantile(0.95),
+                        h.quantile(0.99)
+                    );
+                }
+            }
+        }
+        out.push(']');
+    }
+
+    /// Append a Prometheus text-format snapshot of every registered metric.
+    pub fn render(&self, out: &mut String) {
+        use std::fmt::Write;
+        let entries = self.entries.lock().unwrap();
+        // Stable order: by name, then label string, preserving insertion
+        // order among equals. Emit # HELP/# TYPE once per family.
+        let mut order: Vec<usize> = (0..entries.len()).collect();
+        order.sort_by(|&a, &b| {
+            (entries[a].name, entries[a].labels.as_str())
+                .cmp(&(entries[b].name, entries[b].labels.as_str()))
+        });
+        let mut last_family = "";
+        for &i in &order {
+            let e = &entries[i];
+            if e.name != last_family {
+                if !e.help.is_empty() {
+                    let _ = writeln!(out, "# HELP {} {}", e.name, e.help);
+                }
+                let _ = writeln!(out, "# TYPE {} {}", e.name, e.metric.kind());
+                last_family = e.name;
+            }
+            match &e.metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{}{} {}", e.name, brace(&e.labels), c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "{}{} {}", e.name, brace(&e.labels), g.get());
+                }
+                Metric::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for b in 0..BUCKETS {
+                        let n = h.bucket(b);
+                        if n == 0 && b < BUCKETS - 1 {
+                            cum += n;
+                            continue; // keep the exposition compact
+                        }
+                        cum += n;
+                        let le = bucket_bound(b);
+                        let le = if le == u64::MAX {
+                            "+Inf".to_string()
+                        } else {
+                            le.to_string()
+                        };
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{} {}",
+                            e.name,
+                            brace_with(&e.labels, &format!("le=\"{le}\"")),
+                            cum
+                        );
+                    }
+                    let _ = writeln!(out, "{}_sum{} {}", e.name, brace(&e.labels), h.sum());
+                    let _ = writeln!(out, "{}_count{} {}", e.name, brace(&e.labels), h.count());
+                }
+            }
+        }
+    }
+}
+
+fn brace(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    }
+}
+
+fn brace_with(labels: &str, extra: &str) -> String {
+    if labels.is_empty() {
+        format!("{{{extra}}}")
+    } else {
+        format!("{{{labels},{extra}}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_contiguous_and_monotone() {
+        // Every value maps to exactly one bucket whose bound brackets it.
+        let mut prev_bound = 0u64;
+        for i in 0..BUCKETS - 1 {
+            let b = bucket_bound(i);
+            assert!(b >= prev_bound, "bucket {i} bound regressed");
+            prev_bound = b;
+        }
+        for v in (0u64..4096).chain([1 << 13, 1 << 20, (1 << 25) + 5, u64::MAX / 2]) {
+            let i = bucket_index(v);
+            assert!(i < BUCKETS);
+            if i > 0 {
+                assert!(v > bucket_bound(i - 1), "v={v} below bucket {i} floor");
+            }
+            assert!(v <= bucket_bound(i), "v={v} above bucket {i} bound");
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_thread_count_independent_by_construction() {
+        // The same observations, split across two histograms (as if two
+        // threads each observed half), merge to the same buckets as one.
+        let one = Histogram::default();
+        let a = Histogram::default();
+        let b = Histogram::default();
+        let vals = [0u64, 1, 3, 4, 7, 9, 100, 1000, 123_456, 40_000_000];
+        for (k, &v) in vals.iter().enumerate() {
+            one.observe(v);
+            if k % 2 == 0 { a.observe(v) } else { b.observe(v) }
+        }
+        for i in 0..BUCKETS {
+            assert_eq!(one.bucket(i), a.bucket(i) + b.bucket(i), "bucket {i}");
+        }
+        assert_eq!(one.sum(), a.sum() + b.sum());
+    }
+
+    #[test]
+    fn histogram_quantile_brackets_observations() {
+        let h = Histogram::default();
+        for v in 1..=1000u64 {
+            h.observe(v);
+        }
+        let p50 = h.quantile(0.5);
+        assert!((400..=700).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((900..=1100).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn registry_renders_prometheus_text() {
+        let r = Registry::new();
+        let c = r.counter("metatt_test_total", "a test counter", "task=\"0\"");
+        c.add(3);
+        let c2 = r.counter("metatt_test_total", "a test counter", "task=\"1\"");
+        c2.inc();
+        let g = r.gauge("metatt_test_gauge", "", "");
+        g.set(7);
+        let h = r.histogram("metatt_test_us", "", "");
+        h.observe(5);
+        h.observe(5000);
+        let mut out = String::new();
+        r.render(&mut out);
+        assert!(out.contains("# TYPE metatt_test_total counter"), "{out}");
+        assert!(out.contains("metatt_test_total{task=\"0\"} 3"), "{out}");
+        assert!(out.contains("metatt_test_total{task=\"1\"} 1"), "{out}");
+        assert!(out.contains("metatt_test_gauge 7"), "{out}");
+        assert!(out.contains("metatt_test_us_count 2"), "{out}");
+        assert!(out.contains("le=\"+Inf\""), "{out}");
+        // Same handle on re-registration.
+        let again = r.counter("metatt_test_total", "a test counter", "task=\"0\"");
+        again.inc();
+        assert_eq!(c.get(), 4);
+    }
+}

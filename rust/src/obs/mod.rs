@@ -1,0 +1,365 @@
+//! Zero-overhead observability for the serving stack (PR 10).
+//!
+//! Modeled on the `FaultPlan` pattern (`util::fault`): an [`Obs`] handle is
+//! threaded through `EngineConfig` and armed via `--trace` /
+//! `METATT_TRACE`. **When unarmed, every hook is a single relaxed atomic
+//! load** and an early return — no allocation, no fence, no lock — so the
+//! zero-alloc warmed serving tick is untouched (pinned in
+//! `tests/alloc_regression.rs`). Three pieces:
+//!
+//! * [`trace::Tracer`] — lock-free per-thread ring-buffer span tracer
+//!   stamping every request's lifecycle (admit → batch-formed → tick-start
+//!   → tick-end → response-written) plus engine/router/cache/checkpoint
+//!   events, exportable as Chrome trace-event JSON (`--trace-out`).
+//! * [`metrics::Registry`] — counters, gauges, and fixed-boundary
+//!   log-linear histograms with per-task/per-shard labels; `EngineStats`
+//!   is absorbed as one producer among several at exposition time.
+//! * Exposition — `ServeTarget::metrics_text` renders a Prometheus-style
+//!   snapshot served live over the MTS1 `STAT` admin frame and dumped
+//!   periodically as JSON via `--metrics-out`.
+//!
+//! All timestamps are µs on the engine's `done_us` clock: the engine and
+//! router copy [`Obs::epoch`] at construction, so span timestamps, stage
+//! stamps in `Response`, and `done_us` are directly comparable.
+//!
+//! Free functions without an engine handle (checkpoint save/load) report
+//! through a process-global handle installed by [`set_global`]; its
+//! unarmed cost is the same single relaxed load.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{bucket_bound, bucket_index, Counter, Gauge, Histogram, Registry, BUCKETS};
+pub use trace::{chrome_trace_json, EventCode, TraceEvent, Tracer};
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
+
+/// Default ring pool: 16 threads × 8192 events ≈ 4 MiB, allocated only
+/// when armed.
+pub const DEFAULT_RINGS: usize = 16;
+pub const DEFAULT_RING_SLOTS: usize = 8192;
+
+/// Always-on protocol error counters for the TCP front-end. These sit on
+/// cold error paths, so they count even when tracing is unarmed — errors
+/// must never vanish just because nobody asked for spans.
+pub struct NetCounters {
+    /// Connections rejected for a bad `MTS1` magic.
+    pub bad_magic: Arc<Counter>,
+    /// Frames whose body failed to decode as a request.
+    pub bad_frames: Arc<Counter>,
+    /// Frames rejected for exceeding `MAX_FRAME`.
+    pub oversized_frames: Arc<Counter>,
+    /// Connections torn down by an I/O or protocol error.
+    pub dropped_conns: Arc<Counter>,
+    /// `STAT` admin frames served.
+    pub stat_frames: Arc<Counter>,
+}
+
+impl NetCounters {
+    fn new(reg: &Registry) -> NetCounters {
+        NetCounters {
+            bad_magic: reg.counter(
+                "metatt_net_bad_magic_total",
+                "connections rejected for a bad MTS1 magic",
+                "",
+            ),
+            bad_frames: reg.counter(
+                "metatt_net_bad_frames_total",
+                "frames whose body failed to decode",
+                "",
+            ),
+            oversized_frames: reg.counter(
+                "metatt_net_oversized_frames_total",
+                "frames rejected for exceeding MAX_FRAME",
+                "",
+            ),
+            dropped_conns: reg.counter(
+                "metatt_net_dropped_conns_total",
+                "connections torn down by an I/O or protocol error",
+                "",
+            ),
+            stat_frames: reg.counter("metatt_net_stat_frames_total", "STAT admin frames served", ""),
+        }
+    }
+}
+
+/// Armed-path stage histograms (µs), observed per request at
+/// response-write time. Fixed log-linear buckets: see [`metrics`].
+pub struct StageHists {
+    pub queue_wait_us: Arc<Histogram>,
+    pub batch_wait_us: Arc<Histogram>,
+    pub compute_us: Arc<Histogram>,
+    pub respond_us: Arc<Histogram>,
+    pub tick_us: Arc<Histogram>,
+}
+
+impl StageHists {
+    fn new(reg: &Registry) -> StageHists {
+        StageHists {
+            queue_wait_us: reg.histogram(
+                "metatt_stage_queue_wait_us",
+                "admission to batch-formed",
+                "",
+            ),
+            batch_wait_us: reg.histogram(
+                "metatt_stage_batch_wait_us",
+                "batch-formed to tick-start",
+                "",
+            ),
+            compute_us: reg.histogram("metatt_stage_compute_us", "tick-start to tick-end", ""),
+            respond_us: reg.histogram(
+                "metatt_stage_respond_us",
+                "tick-end to response-written",
+                "",
+            ),
+            tick_us: reg.histogram("metatt_stage_tick_us", "whole serve tick", ""),
+        }
+    }
+}
+
+/// The observability handle. Cheap to construct disarmed (no rings); one
+/// per deployment, shared by every shard through `EngineConfig::obs`.
+pub struct Obs {
+    armed: AtomicBool,
+    epoch: Instant,
+    tracer: Tracer,
+    registry: Registry,
+    pub net: NetCounters,
+    pub stages: StageHists,
+}
+
+impl Default for Obs {
+    fn default() -> Obs {
+        Obs::new(false)
+    }
+}
+
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Obs")
+            .field("armed", &self.armed())
+            .field("rings", &self.tracer.ring_count())
+            .field("ring_capacity", &self.tracer.ring_capacity())
+            .field("recorded", &self.tracer.recorded())
+            .field("dropped", &self.tracer.dropped())
+            .finish()
+    }
+}
+
+impl Obs {
+    /// `armed = false` builds a zero-ring tracer: hooks early-return on a
+    /// relaxed load and nothing else exists to pay for.
+    pub fn new(armed: bool) -> Obs {
+        let rings = if armed { DEFAULT_RINGS } else { 0 };
+        Obs::with_rings(armed, rings, DEFAULT_RING_SLOTS)
+    }
+
+    /// Explicit ring geometry (tests use tiny rings to force wraparound).
+    pub fn with_rings(armed: bool, rings: usize, slots_per_ring: usize) -> Obs {
+        let registry = Registry::new();
+        let net = NetCounters::new(&registry);
+        let stages = StageHists::new(&registry);
+        Obs {
+            armed: AtomicBool::new(armed),
+            epoch: Instant::now(),
+            tracer: Tracer::new(rings, slots_per_ring),
+            registry,
+            net,
+            stages,
+        }
+    }
+
+    /// `true` when the CLI flag is set or `METATT_TRACE` is a non-empty
+    /// value other than `0`.
+    pub fn armed_from_env(flag: bool) -> bool {
+        flag || std::env::var("METATT_TRACE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+    }
+
+    /// The single relaxed load every hook starts (and, unarmed, ends) with.
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    /// The µs-clock origin. The engine and router copy this at
+    /// construction so `done_us`, stage stamps, and span timestamps share
+    /// one clock.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Microseconds since [`Obs::epoch`].
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record an event stamped now. Unarmed: one relaxed load.
+    #[inline]
+    pub fn event(&self, code: EventCode, a: u64, b: u64) {
+        if self.armed() {
+            self.event_cold(code, a, b);
+        }
+    }
+
+    #[cold]
+    fn event_cold(&self, code: EventCode, a: u64, b: u64) {
+        self.tracer.record(self.now_us(), code, a, b);
+    }
+
+    /// Record an event with a caller-supplied timestamp (reusing a stage
+    /// stamp already taken on the engine clock). Unarmed: one relaxed load.
+    #[inline]
+    pub fn event_at(&self, ts_us: u64, code: EventCode, a: u64, b: u64) {
+        if self.armed() {
+            self.tracer.record(ts_us, code, a, b);
+        }
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Snapshot → Chrome trace-event JSON (for `--trace-out`).
+    pub fn chrome_trace(&self) -> String {
+        chrome_trace_json(&self.tracer.snapshot())
+    }
+
+    pub fn write_chrome_trace(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.chrome_trace())
+    }
+
+    /// JSON snapshot of the registry plus tracer meta-fields: what
+    /// `--metrics-out` rewrites once a second while serving.
+    pub fn metrics_json(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"uptime_us\":{},\"armed\":{},\"trace_events\":{},\"trace_dropped\":{},\
+             \"metrics\":",
+            self.now_us(),
+            self.armed(),
+            self.tracer.recorded(),
+            self.tracer.dropped()
+        );
+        self.registry.render_json(&mut out);
+        out.push('}');
+        out
+    }
+
+    /// Append the registry snapshot plus tracer meta-metrics in Prometheus
+    /// text format. Callers (`ServeTarget::metrics_text`) prepend their own
+    /// producer families (engine stats, cache stats, router health).
+    pub fn render(&self, out: &mut String) {
+        use std::fmt::Write;
+        self.registry.render(out);
+        let _ = writeln!(out, "# TYPE metatt_trace_armed gauge");
+        let _ = writeln!(out, "metatt_trace_armed {}", u64::from(self.armed()));
+        let _ = writeln!(out, "# TYPE metatt_trace_events_total counter");
+        let _ = writeln!(out, "metatt_trace_events_total {}", self.tracer.recorded());
+        let _ = writeln!(out, "# TYPE metatt_trace_dropped_total counter");
+        let _ = writeln!(out, "metatt_trace_dropped_total {}", self.tracer.dropped());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global handle for free functions (checkpoint save/load) that have
+// no engine to hand them an Obs. Fast path is one relaxed load on a static.
+// ---------------------------------------------------------------------------
+
+static GLOBAL_ARMED: AtomicBool = AtomicBool::new(false);
+
+fn global_cell() -> &'static RwLock<Option<Arc<Obs>>> {
+    static CELL: OnceLock<RwLock<Option<Arc<Obs>>>> = OnceLock::new();
+    CELL.get_or_init(|| RwLock::new(None))
+}
+
+/// Install (or clear, with `None`) the process-global handle. `serve` sets
+/// this to the session's `Obs`; tests set and clear it around assertions.
+pub fn set_global(obs: Option<Arc<Obs>>) {
+    let armed = obs.as_ref().is_some_and(|o| o.armed());
+    *global_cell().write().unwrap() = obs;
+    GLOBAL_ARMED.store(armed, Ordering::Relaxed);
+}
+
+/// The currently installed global handle, if any.
+pub fn global() -> Option<Arc<Obs>> {
+    global_cell().read().unwrap().clone()
+}
+
+/// Record an event through the global handle. Unarmed (or none installed):
+/// a single relaxed load on a static.
+#[inline]
+pub fn global_event(code: EventCode, a: u64, b: u64) {
+    if GLOBAL_ARMED.load(Ordering::Relaxed) {
+        global_event_cold(code, a, b);
+    }
+}
+
+#[cold]
+fn global_event_cold(code: EventCode, a: u64, b: u64) {
+    if let Some(obs) = global() {
+        obs.event(code, a, b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_obs_records_nothing() {
+        let obs = Obs::new(false);
+        obs.event(EventCode::Admit, 1, 0);
+        obs.event_at(5, EventCode::TickStart, 0, 4);
+        assert!(!obs.armed());
+        assert_eq!(obs.tracer().recorded(), 0);
+        assert_eq!(obs.tracer().dropped(), 0);
+        assert!(obs.tracer().snapshot().is_empty());
+    }
+
+    #[test]
+    fn armed_obs_round_trips_events() {
+        let obs = Obs::with_rings(true, 2, 64);
+        obs.event_at(10, EventCode::Admit, 7, 1);
+        obs.event_at(20, EventCode::TickEnd, 1, 12);
+        let events = obs.tracer().snapshot();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].code, EventCode::Admit);
+        assert_eq!(events[0].a, 7);
+        assert_eq!(events[1].ts_us, 20);
+        let json = obs.chrome_trace();
+        assert!(json.contains("\"traceEvents\""), "{json}");
+        assert!(json.contains("\"name\":\"admit\""), "{json}");
+        // TickEnd becomes a complete event with dur = ts - b.
+        assert!(json.contains("\"ph\":\"X\"") && json.contains("\"dur\":8"), "{json}");
+        assert!(crate::util::json::parse(&json).is_ok(), "chrome trace must parse");
+    }
+
+    #[test]
+    fn global_handle_gates_on_armed() {
+        // Disarmed global: events vanish, fast flag stays clear.
+        let quiet = Arc::new(Obs::new(false));
+        set_global(Some(quiet.clone()));
+        global_event(EventCode::CkptSave, 1, 0);
+        assert_eq!(quiet.tracer().recorded(), 0);
+        // Armed global: events land. (Other tests in this binary may emit
+        // global events concurrently — assert containment, not counts.)
+        let loud = Arc::new(Obs::with_rings(true, 4, 64));
+        set_global(Some(loud.clone()));
+        global_event(EventCode::CkptSave, 123_456_789, 0);
+        assert!(loud
+            .tracer()
+            .snapshot()
+            .iter()
+            .any(|e| e.code == EventCode::CkptSave && e.a == 123_456_789));
+        set_global(None);
+    }
+}

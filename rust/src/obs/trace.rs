@@ -1,0 +1,337 @@
+//! Lock-free per-thread ring-buffer span tracer.
+//!
+//! Recording is wait-free for the common case: each thread claims one
+//! preallocated ring (CAS on an owner word, keyed by the address of a
+//! `thread_local!` token) and then writes slots with plain relaxed stores —
+//! single producer per ring, no allocation, no locks. A full ring wraps and
+//! overwrites its oldest events; nothing ever blocks the serving tick. The
+//! exact number of overwritten events is recoverable as
+//! `written.saturating_sub(capacity)` per ring, surfaced by
+//! [`Tracer::dropped`].
+//!
+//! Timestamps are caller-supplied monotonic microseconds (the engine's
+//! `done_us` clock — see `Obs::epoch`), so spans line up with response
+//! stamps and aggregate identically across 1-thread and N-thread runs.
+//!
+//! [`chrome_trace_json`] renders a snapshot as Chrome trace-event JSON
+//! (`chrome://tracing` / Perfetto): tick spans become `"X"` complete events
+//! with real durations, everything else an `"i"` instant event, one track
+//! (`tid`) per ring.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Every event kind the serving stack can stamp. The numeric value is the
+/// on-ring encoding; `0` is reserved for "empty slot".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum EventCode {
+    /// Request admitted to the queue. `a` = request id, `b` = task.
+    Admit = 1,
+    /// Request drained into a batch. `a` = request id, `b` = task.
+    BatchFormed = 2,
+    /// Serve tick started. `a` = task, `b` = batch rows.
+    TickStart = 3,
+    /// Serve tick finished. `a` = task, `b` = tick-start µs (so the span
+    /// duration is `ts_us - b`).
+    TickEnd = 4,
+    /// Response handed to the per-request channel. `a` = request id,
+    /// `b` = task.
+    ResponseWritten = 5,
+    /// Request shed (deadline passed before compute). `a` = id, `b` = task.
+    Shed = 6,
+    /// Worker re-bound a fresh step after a failed batch. `a` = worker,
+    /// `b` = restart count.
+    WorkerRestart = 7,
+    /// Failed batch re-inserted into the queue. `a` = task, `b` = rows.
+    Requeue = 8,
+    /// Request answered `Error` after repeated failures. `a` = id,
+    /// `b` = task.
+    Quarantine = 9,
+    /// Injected slow tick (fault plan). `a` = slept µs, `b` = task.
+    SlowTick = 10,
+    /// Folded-adapter cache miss → fold + pack. `a` = task, `b` = bytes.
+    CacheFold = 11,
+    /// Folded-adapter LRU eviction. `a` = task, `b` = bytes freed.
+    CacheEvict = 12,
+    /// Checkpoint hot-swap installed a new generation. `a` = generation.
+    HotSwap = 13,
+    /// Shard health transition → Live. `a` = shard.
+    ShardLive = 14,
+    /// Shard health transition → Degraded. `a` = shard, `b` = fail streak.
+    ShardDegraded = 15,
+    /// Shard health transition → Down. `a` = shard.
+    ShardDown = 16,
+    /// Down shard's queue drained into a survivor. `a` = dead shard,
+    /// `b` = requests moved.
+    FailoverDrain = 17,
+    /// Work stolen between replicas. `a` = (from << 32) | to, `b` = moved.
+    WorkSteal = 18,
+    /// Checkpoint written. `a` = bytes, `b` = 1 if the write was torn by
+    /// fault injection.
+    CkptSave = 19,
+    /// Checkpoint loaded. `a` = bytes, `b` = tensors.
+    CkptLoad = 20,
+    /// Request displaced by admission control. `a` = id, `b` = task.
+    Displaced = 21,
+}
+
+impl EventCode {
+    pub(crate) fn from_u64(v: u64) -> Option<EventCode> {
+        use EventCode::*;
+        Some(match v {
+            1 => Admit,
+            2 => BatchFormed,
+            3 => TickStart,
+            4 => TickEnd,
+            5 => ResponseWritten,
+            6 => Shed,
+            7 => WorkerRestart,
+            8 => Requeue,
+            9 => Quarantine,
+            10 => SlowTick,
+            11 => CacheFold,
+            12 => CacheEvict,
+            13 => HotSwap,
+            14 => ShardLive,
+            15 => ShardDegraded,
+            16 => ShardDown,
+            17 => FailoverDrain,
+            18 => WorkSteal,
+            19 => CkptSave,
+            20 => CkptLoad,
+            21 => Displaced,
+            _ => return None,
+        })
+    }
+
+    /// Stable span name used in the Chrome trace and in tests.
+    pub fn name(self) -> &'static str {
+        use EventCode::*;
+        match self {
+            Admit => "admit",
+            BatchFormed => "batch_formed",
+            TickStart => "tick_start",
+            TickEnd => "tick",
+            ResponseWritten => "response_written",
+            Shed => "shed",
+            WorkerRestart => "worker_restart",
+            Requeue => "requeue",
+            Quarantine => "quarantine",
+            SlowTick => "slow_tick",
+            CacheFold => "cache_fold",
+            CacheEvict => "cache_evict",
+            HotSwap => "hot_swap",
+            ShardLive => "shard_live",
+            ShardDegraded => "shard_degraded",
+            ShardDown => "shard_down",
+            FailoverDrain => "failover_drain",
+            WorkSteal => "work_steal",
+            CkptSave => "ckpt_save",
+            CkptLoad => "ckpt_load",
+            Displaced => "displaced",
+        }
+    }
+}
+
+/// One decoded event out of a ring snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub ts_us: u64,
+    pub code: EventCode,
+    pub a: u64,
+    pub b: u64,
+    /// Which ring (≈ thread) recorded it; becomes the Chrome `tid`.
+    pub ring: usize,
+}
+
+struct Slot {
+    ts: AtomicU64,
+    code: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            ts: AtomicU64::new(0),
+            code: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Ring {
+    /// 0 = unclaimed; otherwise the claiming thread's token address.
+    owner: AtomicUsize,
+    /// Total events ever written; index of the next slot is `written % cap`.
+    written: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+thread_local! {
+    /// Address doubles as a per-thread identity: unique among live threads,
+    /// stable for the thread's lifetime (a dead thread's ring is simply
+    /// inherited by whichever new thread lands on the same address).
+    static THREAD_TOKEN: u8 = const { 0 };
+    /// (tracer address, ring index) — skips the claim scan on the hot path.
+    static RING_HINT: Cell<(usize, usize)> = const { Cell::new((0, usize::MAX)) };
+}
+
+fn thread_key() -> usize {
+    THREAD_TOKEN.with(|t| t as *const u8 as usize)
+}
+
+/// Fixed pool of per-thread rings. Disarmed tracers are built with zero
+/// rings and cost nothing beyond the struct itself.
+pub struct Tracer {
+    rings: Box<[Ring]>,
+    cap: usize,
+    /// Events from threads that found every ring claimed.
+    unclaimed_drops: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new(rings: usize, slots_per_ring: usize) -> Tracer {
+        let rings = (0..rings)
+            .map(|_| Ring {
+                owner: AtomicUsize::new(0),
+                written: AtomicU64::new(0),
+                slots: (0..slots_per_ring).map(|_| Slot::empty()).collect(),
+            })
+            .collect();
+        Tracer { rings, cap: slots_per_ring, unclaimed_drops: AtomicU64::new(0) }
+    }
+
+    fn claim(&self) -> Option<&Ring> {
+        let me = thread_key();
+        let tracer_id = self as *const Tracer as usize;
+        let (hinted_for, idx) = RING_HINT.with(Cell::get);
+        if hinted_for == tracer_id && idx < self.rings.len() {
+            let r = &self.rings[idx];
+            if r.owner.load(Ordering::Relaxed) == me {
+                return Some(r);
+            }
+        }
+        for (i, r) in self.rings.iter().enumerate() {
+            let owner = r.owner.load(Ordering::Relaxed);
+            let mine = owner == me
+                || (owner == 0
+                    && r.owner
+                        .compare_exchange(0, me, Ordering::AcqRel, Ordering::Relaxed)
+                        .is_ok());
+            if mine {
+                RING_HINT.with(|h| h.set((tracer_id, i)));
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    /// Record one event. Wait-free single-producer write into this thread's
+    /// ring; wraps over the oldest event when full. Never allocates.
+    pub fn record(&self, ts_us: u64, code: EventCode, a: u64, b: u64) {
+        let Some(ring) = self.claim() else {
+            self.unclaimed_drops.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let n = ring.written.load(Ordering::Relaxed);
+        let slot = &ring.slots[(n % self.cap as u64) as usize];
+        slot.ts.store(ts_us, Ordering::Relaxed);
+        slot.code.store(code as u64, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        ring.written.store(n + 1, Ordering::Release);
+    }
+
+    /// Decode the surviving events out of every ring, oldest first, merged
+    /// and sorted by timestamp. Intended for post-run export (writers
+    /// quiesced); a concurrent snapshot is safe but may catch a slot
+    /// mid-overwrite.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for (ri, r) in self.rings.iter().enumerate() {
+            let n = r.written.load(Ordering::Acquire);
+            let live = n.min(self.cap as u64);
+            for k in (n - live)..n {
+                let s = &r.slots[(k % self.cap as u64) as usize];
+                if let Some(code) = EventCode::from_u64(s.code.load(Ordering::Relaxed)) {
+                    out.push(TraceEvent {
+                        ts_us: s.ts.load(Ordering::Relaxed),
+                        code,
+                        a: s.a.load(Ordering::Relaxed),
+                        b: s.b.load(Ordering::Relaxed),
+                        ring: ri,
+                    });
+                }
+            }
+        }
+        out.sort_by_key(|e| e.ts_us);
+        out
+    }
+
+    /// Total events ever recorded (including ones since overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.rings.iter().map(|r| r.written.load(Ordering::Acquire)).sum()
+    }
+
+    /// Exact number of events lost: ring wraparound overwrites (oldest
+    /// first) plus records from threads that could not claim a ring.
+    pub fn dropped(&self) -> u64 {
+        let wrapped: u64 = self
+            .rings
+            .iter()
+            .map(|r| r.written.load(Ordering::Acquire).saturating_sub(self.cap as u64))
+            .sum();
+        wrapped + self.unclaimed_drops.load(Ordering::Relaxed)
+    }
+
+    pub fn ring_count(&self) -> usize {
+        self.rings.len()
+    }
+
+    pub fn ring_capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+/// Render a snapshot as Chrome trace-event JSON (the `traceEvents` array
+/// format accepted by `chrome://tracing` and Perfetto). [`EventCode::TickEnd`]
+/// events carry their start timestamp in `b` and become `"X"` complete
+/// events with a real duration; everything else is a thread-scoped `"i"`
+/// instant event.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut out = String::with_capacity(64 + events.len() * 96);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let name = e.code.name();
+        match e.code {
+            EventCode::TickEnd => {
+                let start = e.b.min(e.ts_us);
+                out.push_str(&format!(
+                    "{{\"name\":\"{}\",\"cat\":\"serve\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                     \"pid\":0,\"tid\":{},\"args\":{{\"task\":{}}}}}",
+                    name,
+                    start,
+                    e.ts_us - start,
+                    e.ring,
+                    e.a
+                ));
+            }
+            _ => {
+                out.push_str(&format!(
+                    "{{\"name\":\"{}\",\"cat\":\"serve\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{},\
+                     \"pid\":0,\"tid\":{},\"args\":{{\"a\":{},\"b\":{}}}}}",
+                    name, e.ts_us, e.ring, e.a, e.b
+                ));
+            }
+        }
+    }
+    out.push_str("]}");
+    out
+}

@@ -207,6 +207,8 @@ mod tests {
             deadline: deadline.map(|d| now + d),
             panics: 0,
             solo: false,
+            admit_us: 0,
+            batch_us: 0,
         })
         .unwrap();
         rx
@@ -221,6 +223,8 @@ mod tests {
             deadline: None,
             panics: 2,
             solo: true,
+            admit_us: 0,
+            batch_us: 0,
         })
         .unwrap();
         rx

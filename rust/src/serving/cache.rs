@@ -26,6 +26,7 @@
 //! the fold-under-lock trade-off.)
 
 use crate::adapters::AdapterSpec;
+use crate::obs::{EventCode, Obs};
 use crate::runtime::FoldedPairPacked;
 use crate::tensor::{DtypeKind, Tensor};
 use crate::tt::MetaTt;
@@ -97,6 +98,7 @@ pub struct AdapterStore {
     folds: AtomicU64,
     evictions: AtomicU64,
     reloads: AtomicU64,
+    obs: Arc<Obs>,
 }
 
 impl AdapterStore {
@@ -104,7 +106,14 @@ impl AdapterStore {
     /// folded-panel footprint per generation (>= 1; the most recently
     /// folded entry is always kept, so a single oversized fold still
     /// serves). `dtype` is the storage dtype every fold is packed at.
-    pub fn new(tt: MetaTt, capacity_bytes: usize, dtype: DtypeKind) -> AdapterStore {
+    /// `obs` stamps fold / eviction / hot-swap events when tracing is
+    /// armed (a disarmed handle costs one relaxed load per event site).
+    pub fn new(
+        tt: MetaTt,
+        capacity_bytes: usize,
+        dtype: DtypeKind,
+        obs: Arc<Obs>,
+    ) -> AdapterStore {
         assert!(capacity_bytes >= 1, "folded-adapter cache byte capacity must be >= 1");
         AdapterStore {
             current: RwLock::new(Arc::new(Generation {
@@ -118,6 +127,7 @@ impl AdapterStore {
             folds: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             reloads: AtomicU64::new(0),
+            obs,
         }
     }
 
@@ -143,6 +153,7 @@ impl AdapterStore {
             folded: Mutex::new(LruInner { entries: Vec::new(), clock: 0, bytes: 0 }),
         });
         self.reloads.fetch_add(1, Ordering::Relaxed);
+        self.obs.event(EventCode::HotSwap, id, 0);
     }
 
     /// Folded factors for `task` from the current generation, folding on
@@ -177,6 +188,7 @@ impl AdapterStore {
             })
             .collect();
         let bytes = pairs.iter().flatten().map(|p| p.bytes()).sum();
+        self.obs.event(EventCode::CacheFold, key as u64, bytes as u64);
         let folded = Arc::new(FoldedAdapter {
             key,
             generation: generation.id,
@@ -200,6 +212,11 @@ impl AdapterStore {
             let evicted = lru.entries.swap_remove(victim);
             lru.bytes -= evicted.folded.bytes;
             self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.obs.event(
+                EventCode::CacheEvict,
+                evicted.key as u64,
+                evicted.folded.bytes as u64,
+            );
         }
         folded
     }
@@ -266,6 +283,10 @@ mod tests {
     use crate::tt::{InitStrategy, MetaTtKind};
     use crate::util::rng::Pcg64;
 
+    fn test_obs() -> Arc<Obs> {
+        Arc::new(Obs::new(false))
+    }
+
     fn demo_spec(tasks: usize) -> AdapterSpec {
         AdapterSpec::new(
             AdapterKind::MetaTt(MetaTtKind::FourPlusOneD),
@@ -286,7 +307,7 @@ mod tests {
     /// Bytes one folded entry of the demo adapter occupies at `dtype`
     /// (every task of one generation folds to the same shapes).
     fn fold_bytes(dtype: DtypeKind) -> usize {
-        let probe = AdapterStore::new(demo_tt(1, 3), usize::MAX, dtype);
+        let probe = AdapterStore::new(demo_tt(1, 3), usize::MAX, dtype, test_obs());
         probe.get(0).bytes
     }
 
@@ -294,7 +315,7 @@ mod tests {
     fn fold_once_then_hit_then_evict_lru() {
         // Budget exactly two entries' worth of bytes.
         let per_entry = fold_bytes(DtypeKind::F32);
-        let store = AdapterStore::new(demo_tt(1, 3), 2 * per_entry, DtypeKind::F32);
+        let store = AdapterStore::new(demo_tt(1, 3), 2 * per_entry, DtypeKind::F32, test_obs());
         let a0 = store.get(0);
         assert_eq!(a0.bytes, per_entry);
         let again = store.get(0);
@@ -324,7 +345,7 @@ mod tests {
     fn oversized_fold_is_kept_not_thrashed() {
         // A byte budget smaller than a single entry still serves: the
         // newest fold is always resident; older ones are evicted.
-        let store = AdapterStore::new(demo_tt(1, 3), 1, DtypeKind::F32);
+        let store = AdapterStore::new(demo_tt(1, 3), 1, DtypeKind::F32, test_obs());
         let a0 = store.get(0);
         assert!(a0.bytes > 1);
         assert_eq!(store.stats().evictions, 0);
@@ -346,7 +367,7 @@ mod tests {
 
     #[test]
     fn reload_bumps_generation_without_invalidating_snapshots() {
-        let store = AdapterStore::new(demo_tt(1, 3), 64 << 20, DtypeKind::F32);
+        let store = AdapterStore::new(demo_tt(1, 3), 64 << 20, DtypeKind::F32, test_obs());
         let old = store.get(1);
         assert_eq!(old.generation, 0);
         store.reload(demo_tt(2, 3));
@@ -372,7 +393,7 @@ mod tests {
             cores: vec![crate::tt::CoreInit::Normal; 4],
         };
         let tt = spec.build_metatt_with(&mut Pcg64::new(9), Some(&init));
-        let store = AdapterStore::new(tt, 64 << 20, DtypeKind::F32);
+        let store = AdapterStore::new(tt, 64 << 20, DtypeKind::F32, test_obs());
         let a = store.get(0);
         let b = store.get(5); // any task index maps to the shared slot
         assert!(Arc::ptr_eq(&a, &b));

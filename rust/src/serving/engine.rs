@@ -18,10 +18,11 @@ use super::batcher::BatchPolicy;
 use super::cache::{AdapterStore, CacheStats};
 use super::request::{
     response_channel, AdmissionQueue, Pending, Request, Response, ResponseHandle,
-    ResponseStatus,
+    ResponseStatus, StageStamps,
 };
 use crate::adapters::{AdapterKind, AdapterSpec};
 use crate::config::ModelPreset;
+use crate::obs::{EventCode, Obs};
 use crate::runtime::{assemble_frozen, ArtifactSpec, Backend, StepKind};
 use crate::tensor::{DtypeKind, Tensor};
 use crate::tt::MetaTt;
@@ -66,6 +67,11 @@ pub struct EngineConfig {
     /// default empty plan disarms every hook at the cost of one relaxed
     /// load per tick — the zero-alloc warmed serving tick is unchanged.
     pub faults: Arc<FaultPlan>,
+    /// Observability handle (`--trace` / `METATT_TRACE`), same pattern as
+    /// `faults`: the default disarmed handle costs one relaxed load per
+    /// hook and allocates no rings. Shared across shards under a router so
+    /// every span lands on one timeline ([`crate::obs::Obs::epoch`]).
+    pub obs: Arc<Obs>,
 }
 
 impl Default for EngineConfig {
@@ -84,6 +90,7 @@ impl Default for EngineConfig {
             cache_capacity_bytes: 64 << 20,
             dtype: DtypeKind::F32,
             faults: Arc::new(FaultPlan::empty()),
+            obs: Arc::new(Obs::new(false)),
         }
     }
 }
@@ -201,9 +208,13 @@ pub struct ServingEngine<'b> {
     /// [`super::router::ShardRouter`], which gives shard k the residue
     /// class k so ids stay globally unique across the topology).
     id_step: u64,
-    /// Construction instant — the zero point of [`Self::now_us`] and every
-    /// [`Response::done_us`] stamp.
+    /// The zero point of [`Self::now_us`] and every [`Response::done_us`]
+    /// stamp. Copied from [`Obs::epoch`] at construction so span
+    /// timestamps and stage stamps share one clock.
     epoch: Instant,
+    /// Cached registry handles: per-task computed-request counters
+    /// (armed-path increments never touch the registry lock).
+    task_requests: Vec<Arc<crate::obs::Counter>>,
 }
 
 impl<'b> ServingEngine<'b> {
@@ -245,8 +256,19 @@ impl<'b> ServingEngine<'b> {
         };
         let entry = backend.entry(&spec)?;
         let frozen = Arc::new(assemble_frozen(&entry, backbone, cfg.model)?);
-        let store = AdapterStore::new(tt, cfg.cache_capacity_bytes, cfg.dtype);
+        let store =
+            AdapterStore::new(tt, cfg.cache_capacity_bytes, cfg.dtype, cfg.obs.clone());
         let queue = AdmissionQueue::new(cfg.queue_capacity);
+        let task_requests = (0..cfg.num_tasks)
+            .map(|t| {
+                cfg.obs.registry().counter(
+                    "metatt_task_requests_total",
+                    "requests computed, by task",
+                    &format!("task=\"{t}\""),
+                )
+            })
+            .collect();
+        let epoch = cfg.obs.epoch();
         let policy = BatchPolicy { max_batch: cfg.max_batch, deadline: cfg.batch_deadline };
         let hist = vec![0u64; cfg.max_batch + 1];
         Ok(ServingEngine {
@@ -273,7 +295,8 @@ impl<'b> ServingEngine<'b> {
             },
             next_id: AtomicU64::new(0),
             id_step: 1,
-            epoch: Instant::now(),
+            epoch,
+            task_requests,
         })
     }
 
@@ -350,6 +373,29 @@ impl<'b> ServingEngine<'b> {
     /// per-frame hook by [`super::net::serve_net`]).
     pub fn faults(&self) -> &FaultPlan {
         &self.cfg.faults
+    }
+
+    /// The observability handle (PR 10) — span tracer, metrics registry,
+    /// and protocol-error counters for the front-ends.
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.cfg.obs
+    }
+
+    /// Prometheus-style text snapshot: engine counters, cache counters,
+    /// and everything in the obs registry (stage histograms, per-task
+    /// counters, net protocol errors, tracer meta). Served live over the
+    /// MTS1 `STAT` admin frame and dumped by `--metrics-out`.
+    pub fn metrics_text(&self) -> String {
+        let mut out = String::new();
+        render_engine_families(
+            &mut out,
+            &self.stats(),
+            &self.cache_stats(),
+            self.generation(),
+            self.queue.len(),
+        );
+        self.cfg.obs.render(&mut out);
+        out
     }
 
     /// Microseconds since engine construction — the clock every
@@ -438,12 +484,16 @@ impl<'b> ServingEngine<'b> {
         let id = self.next_id.fetch_add(self.id_step, Ordering::Relaxed);
         let (tx, rx) = response_channel();
         let now = Instant::now();
+        let admit_us = self.now_us();
+        self.cfg.obs.event_at(admit_us, EventCode::Admit, id, task as u64);
         Ok((
             Pending {
                 req: Request { id, task, tokens, priority },
                 tx,
                 enqueued: now,
                 deadline: deadline.map(|d| now + d),
+                admit_us,
+                batch_us: 0,
                 panics: 0,
                 solo: false,
             },
@@ -538,6 +588,7 @@ impl<'b> ServingEngine<'b> {
                 self.stats.shed.fetch_add(drained.shed.len() as u64, Ordering::Relaxed);
                 let done_us = self.now_us();
                 for p in drained.shed {
+                    self.cfg.obs.event_at(done_us, EventCode::Shed, p.req.id, p.req.task as u64);
                     let _ = p.tx.send(Response {
                         id: p.req.id,
                         task: p.req.task,
@@ -546,16 +597,31 @@ impl<'b> ServingEngine<'b> {
                         batch_rows: 0,
                         generation: 0,
                         done_us,
+                        stamps: StageStamps { admit_us: p.admit_us, ..StageStamps::default() },
                         error: None,
                     });
                 }
             }
-            let batch = drained.run;
+            let mut batch = drained.run;
             if batch.is_empty() {
                 continue;
             }
             let drained_at = Instant::now();
+            let batch_us = self.now_us();
             let task = batch[0].req.task;
+            if self.cfg.obs.armed() {
+                for p in &batch {
+                    self.cfg.obs.event_at(
+                        batch_us,
+                        EventCode::BatchFormed,
+                        p.req.id,
+                        task as u64,
+                    );
+                }
+            }
+            for p in &mut batch {
+                p.batch_us = batch_us;
+            }
             let folded = self.store.get(task);
             // Queue-delay telemetry is computed here but committed only on
             // success — a supervised failure requeues the batch, and its
@@ -583,14 +649,26 @@ impl<'b> ServingEngine<'b> {
             // unwind. `AssertUnwindSafe` is sound here precisely because
             // the potentially-broken state (step, logits) is rebuilt /
             // fully overwritten before reuse.
+            // Tick-start is stamped BEFORE the fault hook so an injected
+            // slow tick is inside the tick span (and the compute stage) —
+            // `slow_tick=<D>ms@p=1.0` provably yields tick spans ≥ D.
+            let start_us = self.now_us();
+            self.cfg.obs.event_at(
+                start_us,
+                EventCode::TickStart,
+                task as u64,
+                batch.len() as u64,
+            );
             let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                self.cfg.faults.on_serve_tick();
+                let slept_us = self.cfg.faults.on_serve_tick();
                 step.run_serve_packed(&folded.pairs, &tokens, task as i32, &mut logits)
+                    .map(|()| slept_us)
             }));
-            let why = match run {
-                Ok(Ok(())) => None,
-                Ok(Err(e)) => Some(format!("batch execution failed: {e:#}")),
-                Err(_) => Some("worker panicked executing a batch".to_string()),
+            let end_us = self.now_us();
+            let (why, slept_us) = match run {
+                Ok(Ok(slept_us)) => (None, slept_us),
+                Ok(Err(e)) => (Some(format!("batch execution failed: {e:#}")), 0),
+                Err(_) => (Some("worker panicked executing a batch".to_string()), 0),
             };
             if let Some(why) = why {
                 self.supervise_failed_batch(batch, &why);
@@ -604,6 +682,32 @@ impl<'b> ServingEngine<'b> {
             self.stats.hist.lock().unwrap()[batch.len()] += 1;
             let rows = batch.len();
             let done_us = self.now_us();
+            // One armed check covers the whole tick's worth of span +
+            // histogram traffic; unarmed, this entire block is one load.
+            if self.cfg.obs.armed() {
+                let obs = &self.cfg.obs;
+                obs.event_at(end_us, EventCode::TickEnd, task as u64, start_us);
+                if slept_us > 0 {
+                    obs.event_at(start_us, EventCode::SlowTick, slept_us, task as u64);
+                }
+                obs.stages.tick_us.observe(end_us.saturating_sub(start_us));
+                if let Some(c) = self.task_requests.get(task) {
+                    c.add(rows as u64);
+                }
+                for p in &batch {
+                    obs.event_at(done_us, EventCode::ResponseWritten, p.req.id, task as u64);
+                    let stamps = StageStamps {
+                        admit_us: p.admit_us,
+                        batch_us: p.batch_us,
+                        start_us,
+                        end_us,
+                    };
+                    obs.stages.queue_wait_us.observe(stamps.queue_wait_us());
+                    obs.stages.batch_wait_us.observe(stamps.batch_wait_us());
+                    obs.stages.compute_us.observe(stamps.compute_us());
+                    obs.stages.respond_us.observe(stamps.respond_us(done_us));
+                }
+            }
             for (i, p) in batch.into_iter().enumerate() {
                 // A dropped receiver (client gave up) is not an engine
                 // error; ignore the send result.
@@ -615,6 +719,12 @@ impl<'b> ServingEngine<'b> {
                     batch_rows: rows,
                     generation: folded.generation,
                     done_us,
+                    stamps: StageStamps {
+                        admit_us: p.admit_us,
+                        batch_us: p.batch_us,
+                        start_us,
+                        end_us,
+                    },
                     error: None,
                 });
             }
@@ -631,14 +741,22 @@ impl<'b> ServingEngine<'b> {
     /// that expires while retrying is still answered (`Expired`), never
     /// silently dropped.
     fn supervise_failed_batch(&self, batch: Vec<Pending>, why: &str) {
-        self.stats.worker_restarts.fetch_add(1, Ordering::Relaxed);
+        let restarts = self.stats.worker_restarts.fetch_add(1, Ordering::Relaxed) + 1;
         let single = batch.len() == 1;
         let done_us = self.now_us();
+        let task = batch.first().map(|p| p.req.task as u64).unwrap_or(0);
+        self.cfg.obs.event_at(done_us, EventCode::WorkerRestart, task, restarts);
         let mut requeue = Vec::with_capacity(batch.len());
         for mut p in batch {
             p.panics = p.panics.saturating_add(1);
             if single && p.panics >= 2 {
                 self.stats.quarantined.fetch_add(1, Ordering::Relaxed);
+                self.cfg.obs.event_at(
+                    done_us,
+                    EventCode::Quarantine,
+                    p.req.id,
+                    p.req.task as u64,
+                );
                 let _ = p.tx.send(Response {
                     id: p.req.id,
                     task: p.req.task,
@@ -647,6 +765,7 @@ impl<'b> ServingEngine<'b> {
                     batch_rows: 0,
                     generation: 0,
                     done_us,
+                    stamps: StageStamps { admit_us: p.admit_us, ..StageStamps::default() },
                     error: Some(format!(
                         "request quarantined after {} failed executions ({why})",
                         p.panics
@@ -658,6 +777,7 @@ impl<'b> ServingEngine<'b> {
             }
         }
         self.stats.requeued.fetch_add(requeue.len() as u64, Ordering::Relaxed);
+        self.cfg.obs.event_at(done_us, EventCode::Requeue, task, requeue.len() as u64);
         self.queue.requeue(requeue);
     }
 }
@@ -683,6 +803,15 @@ pub trait ServeTarget: Sync {
     fn now_us(&self) -> u64;
     /// The fault-injection plan threaded into front-end hooks.
     fn faults(&self) -> &FaultPlan;
+    /// The observability handle (span tracer + metrics registry + protocol
+    /// error counters) shared across the target.
+    fn obs(&self) -> &Arc<Obs>;
+    /// Folded-adapter cache counters, aggregated across shards for a router.
+    fn cache_stats(&self) -> CacheStats;
+    /// Prometheus-style text snapshot of every metric family the target
+    /// produces — what the MTS1 `STAT` admin frame and `--metrics-out`
+    /// serve from a live engine or topology.
+    fn metrics_text(&self) -> String;
     /// Current adapter-store generation (max across shards for a router).
     fn generation(&self) -> u64;
     /// Blocking admission with deadline + priority class.
@@ -732,6 +861,15 @@ impl ServeTarget for ServingEngine<'_> {
     fn faults(&self) -> &FaultPlan {
         ServingEngine::faults(self)
     }
+    fn obs(&self) -> &Arc<Obs> {
+        ServingEngine::obs(self)
+    }
+    fn cache_stats(&self) -> CacheStats {
+        ServingEngine::cache_stats(self)
+    }
+    fn metrics_text(&self) -> String {
+        ServingEngine::metrics_text(self)
+    }
     fn generation(&self) -> u64 {
         ServingEngine::generation(self)
     }
@@ -758,6 +896,53 @@ impl ServeTarget for ServingEngine<'_> {
     }
     fn serve_session<R>(&self, driver: impl FnOnce(&Self) -> R) -> Result<R> {
         ServingEngine::serve(self, driver)
+    }
+}
+
+/// Render the engine-side metric families (the `EngineStats` producer) in
+/// Prometheus text format. Shared by the engine and the shard router (which
+/// feeds aggregated stats plus its own shard-health families).
+pub(crate) fn render_engine_families(
+    out: &mut String,
+    stats: &EngineStats,
+    cache: &CacheStats,
+    generation: u64,
+    queue_depth: usize,
+) {
+    use std::fmt::Write;
+    let counters = [
+        ("metatt_engine_batches_total", stats.batches),
+        ("metatt_engine_requests_total", stats.requests),
+        ("metatt_engine_shed_total", stats.shed),
+        ("metatt_engine_rejected_total", stats.rejected),
+        ("metatt_engine_worker_restarts_total", stats.worker_restarts),
+        ("metatt_engine_quarantined_total", stats.quarantined),
+        ("metatt_engine_requeued_total", stats.requeued),
+        ("metatt_engine_queue_us_sum", stats.queue_us_sum),
+        ("metatt_cache_hits_total", cache.hits),
+        ("metatt_cache_folds_total", cache.folds),
+        ("metatt_cache_evictions_total", cache.evictions),
+        ("metatt_cache_reloads_total", cache.reloads),
+    ];
+    for (name, v) in counters {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    let gauges = [
+        ("metatt_engine_queue_us_max", stats.queue_us_max),
+        ("metatt_engine_queue_depth", queue_depth as u64),
+        ("metatt_cache_bytes", cache.bytes),
+        ("metatt_generation", generation),
+    ];
+    for (name, v) in gauges {
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    let _ = writeln!(out, "# TYPE metatt_engine_batch_size_total counter");
+    for (size, &n) in stats.batch_hist.iter().enumerate().skip(1) {
+        if n > 0 {
+            let _ = writeln!(out, "metatt_engine_batch_size_total{{size=\"{size}\"}} {n}");
+        }
     }
 }
 

@@ -70,6 +70,44 @@ impl Default for LoadGenConfig {
     }
 }
 
+/// Per-stage latency breakdown of computed responses, from the
+/// [`super::request::StageStamps`] every `Ok` response carries (always on
+/// — stage stamping is cheap clock reads, independent of the armed
+/// tracer). All stats are in **seconds**.
+#[derive(Clone, Debug)]
+pub struct StageBreakdown {
+    /// Admission → batch-formed (time spent queued).
+    pub queue_wait: Stats,
+    /// Batch-formed → tick-start (fold lookup + dispatch).
+    pub batch_wait: Stats,
+    /// Tick-start → tick-end (the forward pass).
+    pub compute: Stats,
+    /// Tick-end → response delivered (`done_us`).
+    pub respond: Stats,
+}
+
+impl StageBreakdown {
+    /// Build from `[admit, batch, start, end, done]` µs stamp rows
+    /// (complete lifecycles only); `None` when there are no rows — e.g.
+    /// nothing completed, or a pre-stamp network peer.
+    pub fn from_stamp_rows(rows: &[[u64; 5]]) -> Option<StageBreakdown> {
+        if rows.is_empty() {
+            return None;
+        }
+        let stage = |lo: usize, hi: usize| {
+            Stats::from_samples(
+                rows.iter().map(|r| r[hi].saturating_sub(r[lo]) as f64 * 1e-6).collect(),
+            )
+        };
+        Some(StageBreakdown {
+            queue_wait: stage(0, 1),
+            batch_wait: stage(1, 2),
+            compute: stage(2, 3),
+            respond: stage(3, 4),
+        })
+    }
+}
+
 /// What one closed-loop run measured.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
@@ -79,6 +117,9 @@ pub struct LoadReport {
     /// End-to-end (submit → response) latency in seconds, computed
     /// responses only.
     pub latency: Stats,
+    /// Per-stage breakdown of the same responses (queue-wait / batch-wait /
+    /// compute / respond); None when nothing completed.
+    pub stages: Option<StageBreakdown>,
     /// Computed responses per task.
     pub per_task: Vec<u64>,
     /// Responses answered `Expired` (only possible with a deadline set).
@@ -194,7 +235,7 @@ pub fn closed_loop_in<T: ServeTarget>(eng: &T, cfg: &LoadGenConfig) -> Result<Lo
     let (seq, vocab) = (eng.seq_len(), eng.vocab());
     let base = eng.stats();
     let t0 = Instant::now();
-    type ClientOut = (Vec<f64>, Vec<u64>, usize, usize);
+    type ClientOut = (Vec<f64>, Vec<[u64; 5]>, Vec<u64>, usize, usize);
     let per_client: Vec<ClientOut> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.clients)
             .map(|client| {
@@ -208,6 +249,7 @@ pub fn closed_loop_in<T: ServeTarget>(eng: &T, cfg: &LoadGenConfig) -> Result<Lo
                         cfg.requests_per_client,
                     );
                     let mut lats = Vec::with_capacity(stream.len());
+                    let mut stamp_rows = Vec::with_capacity(stream.len());
                     let mut per_task = vec![0u64; num_tasks];
                     let (mut expired, mut errors) = (0usize, 0usize);
                     for (task, tokens) in stream {
@@ -225,6 +267,15 @@ pub fn closed_loop_in<T: ServeTarget>(eng: &T, cfg: &LoadGenConfig) -> Result<Lo
                             ResponseStatus::Ok => {
                                 lats.push(sent.elapsed().as_secs_f64());
                                 per_task[task] += 1;
+                                if resp.stamps.complete() {
+                                    stamp_rows.push([
+                                        resp.stamps.admit_us,
+                                        resp.stamps.batch_us,
+                                        resp.stamps.start_us,
+                                        resp.stamps.end_us,
+                                        resp.done_us,
+                                    ]);
+                                }
                             }
                             ResponseStatus::Expired => expired += 1,
                             ResponseStatus::Error => errors += 1,
@@ -233,7 +284,7 @@ pub fn closed_loop_in<T: ServeTarget>(eng: &T, cfg: &LoadGenConfig) -> Result<Lo
                             std::thread::sleep(Duration::from_micros(cfg.think_us));
                         }
                     }
-                    Ok((lats, per_task, expired, errors))
+                    Ok((lats, stamp_rows, per_task, expired, errors))
                 })
             })
             .collect();
@@ -245,10 +296,12 @@ pub fn closed_loop_in<T: ServeTarget>(eng: &T, cfg: &LoadGenConfig) -> Result<Lo
     })?;
     let elapsed = t0.elapsed().as_secs_f64();
     let mut lats = Vec::new();
+    let mut stamp_rows = Vec::new();
     let mut per_task = vec![0u64; num_tasks];
     let (mut expired, mut errors) = (0usize, 0usize);
-    for (l, p, e, x) in per_client {
+    for (l, s, p, e, x) in per_client {
         lats.extend(l);
+        stamp_rows.extend(s);
         expired += e;
         errors += x;
         for (dst, src) in per_task.iter_mut().zip(&p) {
@@ -261,6 +314,7 @@ pub fn closed_loop_in<T: ServeTarget>(eng: &T, cfg: &LoadGenConfig) -> Result<Lo
         elapsed,
         throughput_rps: lats.len() as f64 / elapsed.max(1e-9),
         latency: Stats::from_samples(lats),
+        stages: StageBreakdown::from_stamp_rows(&stamp_rows),
         per_task,
         expired,
         errors,
@@ -336,6 +390,9 @@ pub struct OpenLoopReport {
     /// submit → done latency of computed responses (engine `done_us`
     /// clock); None when nothing completed.
     pub latency: Option<Stats>,
+    /// Per-stage breakdown of computed responses; None when nothing
+    /// completed.
+    pub stages: Option<StageBreakdown>,
     /// Engine counters for this window only.
     pub engine: EngineStats,
 }
@@ -391,6 +448,7 @@ pub fn open_loop_in<T: ServeTarget>(eng: &T, cfg: &OpenLoopConfig) -> Result<Ope
     let (mut ok, mut expired, mut dropped, mut met) = (0usize, 0usize, 0usize, 0usize);
     let mut errors = 0usize;
     let mut lats = Vec::with_capacity(n_admitted);
+    let mut stamp_rows = Vec::with_capacity(n_admitted);
     let mut last_done_us = t0_us;
     for (submit_us, handle) in admitted {
         match handle.wait() {
@@ -401,6 +459,15 @@ pub fn open_loop_in<T: ServeTarget>(eng: &T, cfg: &OpenLoopConfig) -> Result<Ope
                         ok += 1;
                         let lat_us = resp.done_us.saturating_sub(submit_us);
                         lats.push(lat_us as f64 * 1e-6);
+                        if resp.stamps.complete() {
+                            stamp_rows.push([
+                                resp.stamps.admit_us,
+                                resp.stamps.batch_us,
+                                resp.stamps.start_us,
+                                resp.stamps.end_us,
+                                resp.done_us,
+                            ]);
+                        }
                         let in_time = match deadline_us {
                             None => true,
                             Some(d) => lat_us <= d,
@@ -431,6 +498,7 @@ pub fn open_loop_in<T: ServeTarget>(eng: &T, cfg: &OpenLoopConfig) -> Result<Ope
         goodput_rps: met as f64 / elapsed,
         achieved_rps: ok as f64 / elapsed,
         latency: if lats.is_empty() { None } else { Some(Stats::from_samples(lats)) },
+        stages: StageBreakdown::from_stamp_rows(&stamp_rows),
         engine: eng.stats().delta_since(&base),
     })
 }
@@ -532,6 +600,18 @@ fn latency_json(s: &Stats) -> Json {
     ])
 }
 
+/// JSON for a [`StageBreakdown`] — p50/p95/p99 per lifecycle stage, in
+/// seconds (shared by the pr5/pr6/pr8 report emitters and the CLI's
+/// `--metrics-out` dump).
+pub fn stage_json(b: &StageBreakdown) -> Json {
+    Json::obj(vec![
+        ("queue_wait_s", latency_json(&b.queue_wait)),
+        ("batch_wait_s", latency_json(&b.batch_wait)),
+        ("compute_s", latency_json(&b.compute)),
+        ("respond_s", latency_json(&b.respond)),
+    ])
+}
+
 fn engine_window_json(stats: &EngineStats) -> Json {
     let mean_fill = if stats.batches > 0 {
         stats.requests as f64 / stats.batches as f64
@@ -606,6 +686,7 @@ pub fn report_json(engine: &ServingEngine, cfg: &LoadGenConfig, report: &LoadRep
                 ("throughput_rps", Json::num(report.throughput_rps)),
                 ("expired", Json::num(report.expired as f64)),
                 ("latency_s", latency_json(&report.latency)),
+                ("stages", report.stages.as_ref().map_or(Json::Null, stage_json)),
                 (
                     "per_task",
                     Json::Arr(report.per_task.iter().map(|&n| Json::num(n as f64)).collect()),
@@ -677,6 +758,7 @@ pub fn overload_report_json(
                     "latency_s",
                     r.latency.as_ref().map_or(Json::Null, latency_json),
                 ),
+                ("stages", r.stages.as_ref().map_or(Json::Null, stage_json)),
                 ("engine", engine_window_json(&r.engine)),
             ])
         })
@@ -710,6 +792,10 @@ pub fn overload_report_json(
                 ("throughput_rps", Json::num(report.capacity.throughput_rps)),
                 ("requests", Json::num(report.capacity.total_requests as f64)),
                 ("latency_s", latency_json(&report.capacity.latency)),
+                (
+                    "stages",
+                    report.capacity.stages.as_ref().map_or(Json::Null, stage_json),
+                ),
                 ("engine", engine_window_json(&report.capacity.engine)),
             ]),
         ),
@@ -746,6 +832,7 @@ fn resilience_level_json(mult: f64, faulted: &OpenLoopReport, baseline: &OpenLoo
             "latency_s_baseline",
             baseline.latency.as_ref().map_or(Json::Null, latency_json),
         ),
+        ("stages_faulted", faulted.stages.as_ref().map_or(Json::Null, stage_json)),
     ])
 }
 
@@ -847,5 +934,17 @@ mod tests {
     fn wrong_mix_length_is_rejected() {
         let cfg = LoadGenConfig { task_mix: vec![1.0], ..Default::default() };
         let _ = request_stream(&cfg, 3, 8, 64, 0, 1);
+    }
+
+    #[test]
+    fn stage_breakdown_splits_the_lifecycle() {
+        // Two requests: [admit, batch, start, end, done] µs rows.
+        let rows = [[0u64, 10, 30, 70, 150], [100, 120, 140, 180, 260]];
+        let b = StageBreakdown::from_stamp_rows(&rows).unwrap();
+        assert!((b.queue_wait.mean - 15e-6).abs() < 1e-12, "{}", b.queue_wait.mean);
+        assert!((b.batch_wait.mean - 20e-6).abs() < 1e-12, "{}", b.batch_wait.mean);
+        assert!((b.compute.mean - 40e-6).abs() < 1e-12, "{}", b.compute.mean);
+        assert!((b.respond.mean - 80e-6).abs() < 1e-12, "{}", b.respond.mean);
+        assert!(StageBreakdown::from_stamp_rows(&[]).is_none(), "no rows, no breakdown");
     }
 }

@@ -54,6 +54,16 @@
 //! one engine and an N-shard topology speak the same MTS1 wire protocol
 //! and admission semantics — routing lives strictly behind admission.
 //!
+//! The path is **observable** (PR 10): every request carries always-on
+//! µs stage stamps (admit → batch-formed → tick-start → tick-end →
+//! response-written) that ride the wire back to clients, and every
+//! lifecycle seam calls into [`crate::obs`] — a lock-free ring-buffer
+//! span tracer plus a metrics registry that is a single relaxed atomic
+//! load when unarmed, so the warmed zero-alloc serve tick is untouched.
+//! Armed via `--trace` / `METATT_TRACE=1`, exported as Chrome trace JSON,
+//! and scraped live through the `STAT` admin frame on MTS1 (a
+//! Prometheus-style text snapshot from an engine or router).
+//!
 //! Entry points: [`ServingEngine::new`] → [`ServingEngine::serve`] with a
 //! driver closure; [`ShardRouter::new`] → [`ShardRouter::serve`] for a
 //! topology; [`run_load`] for a full measured run (what `metatt
@@ -75,12 +85,12 @@ pub use router::{RoutePolicy, RouterConfig, RouterStats, ShardHealth, ShardRoute
 pub use loadgen::{
     closed_loop_in, open_loop_in, overload_report_json, report_json, request_stream,
     request_tokens, resilience_report_json, run_load, run_open_loop, run_overload_bench,
-    warmup_in, LoadGenConfig, LoadReport, OpenLoopConfig, OpenLoopReport, OverloadConfig,
-    OverloadReport,
+    stage_json, warmup_in, LoadGenConfig, LoadReport, OpenLoopConfig, OpenLoopReport,
+    OverloadConfig, OverloadReport, StageBreakdown,
 };
 pub use net::{
     run_net_load, serve_net, serve_net_with, NetClient, NetClientConfig, NetLoadReport,
     NetResponse, NetServerConfig, NetStats, RetryClient, RetryPolicy, WireStatus,
     DEFAULT_NET_TIMEOUT,
 };
-pub use request::{AdmissionQueue, Request, Response, ResponseHandle, ResponseStatus};
+pub use request::{AdmissionQueue, Request, Response, ResponseHandle, ResponseStatus, StageStamps};

@@ -19,10 +19,19 @@
 //! the deadline passed before a worker reached the request; it was shed,
 //! not computed): `u32` task · `u64` adapter generation · `u32` batch rows
 //! · `u32` logit count · that many `f32` logits (bit-exact: serving logits
-//! round-trip the wire unchanged; expired responses carry zero logits).
+//! round-trip the wire unchanged; expired responses carry zero logits) ·
+//! five `u64` stage stamps on the server's µs clock (admit, batch-formed,
+//! tick-start, tick-end, done; zeros when a stage never ran). Decoders
+//! tolerate their absence, so pre-stamp frames still parse.
 //! For status `2` (error — validation or shutdown): `u32` message length ·
 //! UTF-8 message. Responses are written in request order per connection
 //! (pipelining is allowed; a connection may have many requests in flight).
+//!
+//! **Admin frame.** A 4-byte request body `STAT` (unambiguous: real
+//! request bodies are >= 25 bytes) asks for a Prometheus-style text
+//! snapshot of the serve target's metrics; the server answers a status-`3`
+//! frame: `u64` id 0 · `u8` status `3` · `u32` text length · UTF-8 text.
+//! [`NetClient::stat`] wraps the round trip.
 //!
 //! # Server lifecycle
 //!
@@ -59,6 +68,10 @@ pub const MAX_FRAME: usize = 1 << 22;
 const STATUS_OK: u8 = 0;
 const STATUS_EXPIRED: u8 = 1;
 const STATUS_ERROR: u8 = 2;
+const STATUS_STAT: u8 = 3;
+
+/// The admin request body asking for a metrics snapshot (see module docs).
+const STAT_BODY: &[u8] = b"STAT";
 
 /// Idle accept-poll bounds: the loop sleeps `ACCEPT_POLL_MIN` right after
 /// traffic (snappy accepts) and doubles per empty poll up to
@@ -127,6 +140,14 @@ pub struct NetResponse {
     pub logits: Vec<f32>,
     /// Populated for `WireStatus::Error` frames.
     pub error: Option<String>,
+    /// Stage stamps on the server's µs clock (0 = stage never ran, or a
+    /// pre-stamp peer). `admit_us → done_us` is the engine-side latency,
+    /// free of client-side socket and scheduling time.
+    pub admit_us: u64,
+    pub batch_us: u64,
+    pub start_us: u64,
+    pub end_us: u64,
+    pub done_us: u64,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -199,6 +220,10 @@ impl<'a> Cursor<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
     fn done(&self) -> Result<()> {
         if self.at != self.buf.len() {
             bail!("{} trailing bytes after frame body", self.buf.len() - self.at);
@@ -259,7 +284,9 @@ pub fn decode_request(body: &[u8]) -> Result<WireRequest> {
     Ok(WireRequest { id, task, priority, deadline_us, tokens })
 }
 
-/// Encode an ok/expired response frame (length prefix included).
+/// Encode an ok/expired response frame (length prefix included). `stamps`
+/// is `[admit, batch, start, end, done]` in server-clock µs (zeros for
+/// stages that never ran).
 pub fn encode_response(
     id: u64,
     status: WireStatus,
@@ -267,9 +294,10 @@ pub fn encode_response(
     generation: u64,
     batch_rows: usize,
     logits: &[f32],
+    stamps: [u64; 5],
 ) -> Vec<u8> {
     debug_assert!(status != WireStatus::Error, "error frames carry a message instead");
-    let body_len = 8 + 1 + 4 + 8 + 4 + 4 + 4 * logits.len();
+    let body_len = 8 + 1 + 4 + 8 + 4 + 4 + 4 * logits.len() + 8 * stamps.len();
     let mut buf = Vec::with_capacity(4 + body_len);
     put_u32(&mut buf, body_len as u32);
     put_u64(&mut buf, id);
@@ -281,18 +309,30 @@ pub fn encode_response(
     for &x in logits {
         buf.extend_from_slice(&x.to_le_bytes());
     }
+    for s in stamps {
+        put_u64(&mut buf, s);
+    }
     buf
 }
 
 /// Encode an error response frame (length prefix included).
 pub fn encode_error(id: u64, msg: &str) -> Vec<u8> {
+    encode_text_frame(id, STATUS_ERROR, msg)
+}
+
+/// Encode a `STAT` admin response frame (length prefix included).
+pub fn encode_stat(id: u64, text: &str) -> Vec<u8> {
+    encode_text_frame(id, STATUS_STAT, text)
+}
+
+fn encode_text_frame(id: u64, status: u8, msg: &str) -> Vec<u8> {
     let msg = msg.as_bytes();
     let msg = &msg[..msg.len().min(MAX_FRAME / 2)];
     let body_len = 8 + 1 + 4 + msg.len();
     let mut buf = Vec::with_capacity(4 + body_len);
     put_u32(&mut buf, body_len as u32);
     put_u64(&mut buf, id);
-    buf.push(STATUS_ERROR);
+    buf.push(status);
     put_u32(&mut buf, msg.len() as u32);
     buf.extend_from_slice(msg);
     buf
@@ -315,6 +355,11 @@ pub fn decode_response(body: &[u8]) -> Result<NetResponse> {
             batch_rows: 0,
             logits: Vec::new(),
             error: Some(msg),
+            admit_us: 0,
+            batch_us: 0,
+            start_us: 0,
+            end_us: 0,
+            done_us: 0,
         });
     }
     let task = c.u32()? as usize;
@@ -329,8 +374,28 @@ pub fn decode_response(body: &[u8]) -> Result<NetResponse> {
         .chunks_exact(4)
         .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
         .collect();
+    // Stage stamps were appended to the frame in PR 10; tolerate their
+    // absence so pre-stamp frames still decode (stamps read as zeros).
+    let stamps = if c.remaining() >= 40 {
+        [c.u64()?, c.u64()?, c.u64()?, c.u64()?, c.u64()?]
+    } else {
+        [0u64; 5]
+    };
     c.done()?;
-    Ok(NetResponse { id, status, task, generation, batch_rows, logits, error: None })
+    Ok(NetResponse {
+        id,
+        status,
+        task,
+        generation,
+        batch_rows,
+        logits,
+        error: None,
+        admit_us: stamps[0],
+        batch_us: stamps[1],
+        start_us: stamps[2],
+        end_us: stamps[3],
+        done_us: stamps[4],
+    })
 }
 
 fn encode_hello<T: ServeTarget>(engine: &T) -> Vec<u8> {
@@ -405,11 +470,18 @@ fn read_exact_idle(
     Ok(ReadStatus::Done)
 }
 
-/// One queued write: the client's id plus either a pending engine handle
-/// or an immediate error message.
+/// One queued write: the client's id plus what to answer it with.
 struct WriteCmd {
     client_id: u64,
-    outcome: std::result::Result<ResponseHandle, String>,
+    outcome: Outcome,
+}
+
+/// What the reader decided for one frame: a pending engine handle, an
+/// immediate error message, or a metrics snapshot (`STAT` admin frame).
+enum Outcome {
+    Handle(ResponseHandle),
+    Error(String),
+    Stat(String),
 }
 
 fn response_frame(client_id: u64, resp: &Response) -> Vec<u8> {
@@ -423,7 +495,21 @@ fn response_frame(client_id: u64, resp: &Response) -> Vec<u8> {
             return encode_error(client_id, msg);
         }
     };
-    encode_response(client_id, status, resp.task, resp.generation, resp.batch_rows, &resp.logits)
+    encode_response(
+        client_id,
+        status,
+        resp.task,
+        resp.generation,
+        resp.batch_rows,
+        &resp.logits,
+        [
+            resp.stamps.admit_us,
+            resp.stamps.batch_us,
+            resp.stamps.start_us,
+            resp.stamps.end_us,
+            resp.done_us,
+        ],
+    )
 }
 
 /// Await handles in request order and stream frames back. A write failure
@@ -432,12 +518,13 @@ fn response_frame(client_id: u64, resp: &Response) -> Vec<u8> {
 fn writer_loop(stream: &mut TcpStream, rx: mpsc::Receiver<WriteCmd>) {
     for cmd in rx {
         let frame = match cmd.outcome {
-            Ok(handle) => match handle.wait() {
+            Outcome::Handle(handle) => match handle.wait() {
                 Ok(resp) => response_frame(cmd.client_id, &resp),
                 // Dropped before execution (worker failure / abort).
                 Err(e) => encode_error(cmd.client_id, &e),
             },
-            Err(msg) => encode_error(cmd.client_id, &msg),
+            Outcome::Error(msg) => encode_error(cmd.client_id, &msg),
+            Outcome::Stat(text) => encode_stat(cmd.client_id, &text),
         };
         if stream.write_all(&frame).is_err() {
             break;
@@ -466,6 +553,7 @@ fn reader_loop<T: ServeTarget>(
         if body_len > MAX_FRAME {
             // Protocol violation: answer nothing (we cannot trust the
             // stream framing any more) and drop the connection.
+            engine.obs().net.oversized_frames.inc();
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
                 format!("frame body of {body_len} bytes exceeds the {MAX_FRAME} cap"),
@@ -475,6 +563,18 @@ fn reader_loop<T: ServeTarget>(
         match read_exact_idle(stream, &mut body, shutdown, grace)? {
             ReadStatus::Done => {}
             ReadStatus::Eof | ReadStatus::Idle => return Ok(served),
+        }
+        // Admin frame: a 4-byte `STAT` body (real request bodies are >= 25
+        // bytes) is answered with a metrics snapshot through the ordinary
+        // writer queue — ordered with pipelined responses, not counted as
+        // a request, and invisible to request-frame fault injection.
+        if body == STAT_BODY {
+            engine.obs().net.stat_frames.inc();
+            let cmd = WriteCmd { client_id: 0, outcome: Outcome::Stat(engine.metrics_text()) };
+            if tx.send(cmd).is_err() {
+                return Ok(served);
+            }
+            continue;
         }
         // Injected connection drop (`net_drop@frame=N`): abandon the
         // just-read frame WITHOUT admitting it and stop reading. Returning
@@ -495,13 +595,21 @@ fn reader_loop<T: ServeTarget>(
                     Some(Duration::from_micros(wire.deadline_us))
                 };
                 match engine.submit_with(wire.task, wire.tokens, deadline, wire.priority) {
-                    Ok(handle) => WriteCmd { client_id: wire.id, outcome: Ok(handle) },
-                    Err(e) => WriteCmd { client_id: wire.id, outcome: Err(format!("{e:#}")) },
+                    Ok(handle) => {
+                        WriteCmd { client_id: wire.id, outcome: Outcome::Handle(handle) }
+                    }
+                    Err(e) => WriteCmd {
+                        client_id: wire.id,
+                        outcome: Outcome::Error(format!("{e:#}")),
+                    },
                 }
             }
             // Undecodable body but intact framing: answer an error frame
             // with the best-effort id 0 and keep the connection.
-            Err(e) => WriteCmd { client_id: 0, outcome: Err(format!("{e:#}")) },
+            Err(e) => {
+                engine.obs().net.bad_frames.inc();
+                WriteCmd { client_id: 0, outcome: Outcome::Error(format!("{e:#}")) }
+            }
         };
         if tx.send(cmd).is_err() {
             // Writer died (client closed its read half) — stop reading.
@@ -525,6 +633,7 @@ fn handle_conn<T: ServeTarget>(
         ReadStatus::Eof | ReadStatus::Idle => return Ok(0),
     }
     if magic != WIRE_MAGIC {
+        engine.obs().net.bad_magic.inc();
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
             "bad protocol magic (want MTS1)",
@@ -585,10 +694,13 @@ pub fn serve_net_with<T: ServeTarget>(
                     backoff.accepted();
                     connections.fetch_add(1, Ordering::Relaxed);
                     let requests = &requests;
-                    scope.spawn(move || {
-                        if let Ok(n) = handle_conn(engine, stream, shutdown, grace) {
+                    scope.spawn(move || match handle_conn(engine, stream, shutdown, grace) {
+                        Ok(n) => {
                             requests.fetch_add(n, Ordering::Relaxed);
                         }
+                        // I/O or protocol error dropped the connection;
+                        // the listener keeps serving the rest.
+                        Err(_) => engine.obs().net.dropped_conns.inc(),
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -749,6 +861,35 @@ impl NetClient {
     ) -> Result<NetResponse> {
         self.send(id, task, priority, deadline_us, tokens)?;
         self.recv()
+    }
+
+    /// Fetch the server's live metrics snapshot (`STAT` admin frame):
+    /// Prometheus-style text from the serve target behind this connection.
+    /// Do not interleave with pipelined requests awaiting `recv` — the
+    /// snapshot is answered in order through the same writer.
+    pub fn stat(&mut self) -> Result<String> {
+        let mut frame = Vec::with_capacity(4 + STAT_BODY.len());
+        put_u32(&mut frame, STAT_BODY.len() as u32);
+        frame.extend_from_slice(STAT_BODY);
+        self.stream.write_all(&frame).map_err(|e| io_ctx("stat send", e))?;
+        let mut len4 = [0u8; 4];
+        self.stream.read_exact(&mut len4).map_err(|e| io_ctx("stat recv", e))?;
+        let body_len = u32::from_le_bytes(len4) as usize;
+        if body_len > MAX_FRAME {
+            bail!("stat frame of {body_len} bytes exceeds the {MAX_FRAME} cap");
+        }
+        let mut body = vec![0u8; body_len];
+        self.stream.read_exact(&mut body).map_err(|e| io_ctx("stat recv body", e))?;
+        let mut c = Cursor::new(&body);
+        let _id = c.u64()?;
+        let status = c.u8()?;
+        if status != STATUS_STAT {
+            bail!("expected a stat frame (status {STATUS_STAT}), got status {status}");
+        }
+        let n = c.u32()? as usize;
+        let text = String::from_utf8_lossy(c.take(n)?).into_owned();
+        c.done()?;
+        Ok(text)
     }
 }
 
@@ -939,8 +1080,16 @@ pub struct NetLoadReport {
     /// Computed responses per second.
     pub throughput_rps: f64,
     /// send → receive round-trip of computed responses, seconds; None when
-    /// nothing completed.
+    /// nothing completed. Client **wall** clock: includes socket and
+    /// client-side scheduling time.
     pub latency: Option<crate::bench::Stats>,
+    /// admit → done on the **server's** clock (from the response frame's
+    /// stage stamps), seconds — the engine-side latency the wall clock
+    /// wraps. None when nothing completed or the server sent no stamps.
+    pub engine_latency: Option<crate::bench::Stats>,
+    /// Per-stage breakdown (queue-wait / batch-wait / compute / respond)
+    /// from the same stamps.
+    pub stages: Option<super::loadgen::StageBreakdown>,
     /// Round trips that needed at least one retry, across all clients.
     pub retries: u64,
     /// Mid-run reconnects after connection loss, across all clients.
@@ -967,7 +1116,7 @@ pub fn run_net_load(
     }
     let deadline_us = cfg.deadline.map_or(0, |d| d.as_micros() as u64);
     let t0 = Instant::now();
-    type ClientOut = (Vec<f64>, usize, usize, u64, u64);
+    type ClientOut = (Vec<f64>, Vec<[u64; 5]>, usize, usize, u64, u64);
     let per_client: Vec<ClientOut> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.clients)
             .map(|client| {
@@ -994,6 +1143,7 @@ pub fn run_net_load(
                         cfg.requests_per_client,
                     );
                     let mut lats = Vec::with_capacity(stream.len());
+                    let mut stamp_rows = Vec::with_capacity(stream.len());
                     let (mut expired, mut errors) = (0usize, 0usize);
                     for (i, (task, tokens)) in stream.into_iter().enumerate() {
                         let id = ((client as u64) << 32) | i as u64;
@@ -1001,7 +1151,20 @@ pub fn run_net_load(
                         let resp =
                             conn.call(id, task, cfg.priority, deadline_us, &tokens)?;
                         match resp.status {
-                            WireStatus::Ok => lats.push(sent.elapsed().as_secs_f64()),
+                            WireStatus::Ok => {
+                                lats.push(sent.elapsed().as_secs_f64());
+                                // Computed responses from a stamping server
+                                // carry a full lifecycle (start > 0).
+                                if resp.start_us > 0 {
+                                    stamp_rows.push([
+                                        resp.admit_us,
+                                        resp.batch_us,
+                                        resp.start_us,
+                                        resp.end_us,
+                                        resp.done_us,
+                                    ]);
+                                }
+                            }
                             WireStatus::Expired => expired += 1,
                             WireStatus::Error => errors += 1,
                         }
@@ -1009,7 +1172,7 @@ pub fn run_net_load(
                             std::thread::sleep(Duration::from_micros(cfg.think_us));
                         }
                     }
-                    Ok((lats, expired, errors, conn.retries, conn.reconnects))
+                    Ok((lats, stamp_rows, expired, errors, conn.retries, conn.reconnects))
                 })
             })
             .collect();
@@ -1021,16 +1184,22 @@ pub fn run_net_load(
     })?;
     let elapsed = t0.elapsed().as_secs_f64();
     let mut lats = Vec::new();
+    let mut stamp_rows = Vec::new();
     let (mut expired, mut errors) = (0usize, 0usize);
     let (mut retries, mut reconnects) = (0u64, 0u64);
-    for (l, e, x, r, rc) in per_client {
+    for (l, s, e, x, r, rc) in per_client {
         lats.extend(l);
+        stamp_rows.extend(s);
         expired += e;
         errors += x;
         retries += r;
         reconnects += rc;
     }
     let ok = lats.len();
+    let engine_lats: Vec<f64> = stamp_rows
+        .iter()
+        .map(|r| r[4].saturating_sub(r[0]) as f64 / 1e6)
+        .collect();
     Ok(NetLoadReport {
         total: ok + expired + errors,
         ok,
@@ -1043,6 +1212,12 @@ pub fn run_net_load(
         } else {
             Some(crate::bench::Stats::from_samples(lats))
         },
+        engine_latency: if engine_lats.is_empty() {
+            None
+        } else {
+            Some(crate::bench::Stats::from_samples(engine_lats))
+        },
+        stages: super::loadgen::StageBreakdown::from_stamp_rows(&stamp_rows),
         retries,
         reconnects,
     })
@@ -1071,7 +1246,7 @@ mod tests {
         // Include values whose bit patterns are easy to corrupt: negative
         // zero, subnormals, and a NaN payload.
         let logits = vec![1.5f32, -0.0, f32::from_bits(0x0000_0001), f32::from_bits(0x7fc0_1234)];
-        let frame = encode_response(7, WireStatus::Ok, 1, 3, 4, &logits);
+        let frame = encode_response(7, WireStatus::Ok, 1, 3, 4, &logits, [10, 20, 30, 40, 50]);
         let got = decode_response(&frame[4..]).unwrap();
         assert_eq!(got.id, 7);
         assert_eq!(got.status, WireStatus::Ok);
@@ -1082,10 +1257,43 @@ mod tests {
         for (a, b) in got.logits.iter().zip(&logits) {
             assert_eq!(a.to_bits(), b.to_bits(), "logit bits must survive the wire");
         }
-        let expired = encode_response(8, WireStatus::Expired, 2, 0, 0, &[]);
+        assert_eq!(
+            (got.admit_us, got.batch_us, got.start_us, got.end_us, got.done_us),
+            (10, 20, 30, 40, 50),
+            "stage stamps must survive the wire"
+        );
+        let expired = encode_response(8, WireStatus::Expired, 2, 0, 0, &[], [0; 5]);
         let got = decode_response(&expired[4..]).unwrap();
         assert_eq!(got.status, WireStatus::Expired);
         assert!(got.logits.is_empty());
+    }
+
+    #[test]
+    fn stampless_response_frames_still_decode() {
+        // A pre-PR10 peer's frame: same layout, no trailing stamps. The
+        // decoder must tolerate it and report zero stamps.
+        let full = encode_response(7, WireStatus::Ok, 1, 3, 4, &[1.0f32, 2.0], [9; 5]);
+        let legacy_body = &full[4..full.len() - 40];
+        let got = decode_response(legacy_body).unwrap();
+        assert_eq!(got.id, 7);
+        assert_eq!(got.logits, vec![1.0f32, 2.0]);
+        assert_eq!(got.done_us, 0, "absent stamps decode as zeros");
+    }
+
+    #[test]
+    fn stat_frame_round_trips() {
+        let text = "# TYPE metatt_engine_requests_total counter\nmetatt_engine_requests_total 42\n";
+        let frame = encode_stat(0, text);
+        let body = &frame[4..];
+        let mut c = Cursor::new(body);
+        assert_eq!(c.u64().unwrap(), 0);
+        assert_eq!(c.u8().unwrap(), STATUS_STAT);
+        let n = c.u32().unwrap() as usize;
+        assert_eq!(std::str::from_utf8(c.take(n).unwrap()).unwrap(), text);
+        c.done().unwrap();
+        // decode_response refuses the admin status — stat frames are only
+        // parsed by NetClient::stat, never mixed into the response path.
+        assert!(decode_response(body).is_err());
     }
 
     #[test]

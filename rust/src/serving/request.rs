@@ -44,6 +44,52 @@ pub enum ResponseStatus {
     Error,
 }
 
+/// Per-request stage timeline, µs on the engine's `done_us` clock (PR 10).
+/// Stamped unconditionally — four clock reads per *batch* plus one copy per
+/// request — so serve reports can break latency into stages even with
+/// tracing unarmed. Zero-filled (except `admit_us`) on responses that never
+/// reached compute (shed / quarantine / failover synthesized).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageStamps {
+    /// Admission into the queue.
+    pub admit_us: u64,
+    /// Drained into a batch by a worker.
+    pub batch_us: u64,
+    /// Serve tick started (before fault injection, so injected slow ticks
+    /// are visible in the compute stage and in tick spans).
+    pub start_us: u64,
+    /// Serve tick finished.
+    pub end_us: u64,
+}
+
+impl StageStamps {
+    /// queue-wait: admission → batch-formed.
+    pub fn queue_wait_us(&self) -> u64 {
+        self.batch_us.saturating_sub(self.admit_us)
+    }
+
+    /// batch-wait: batch-formed → tick-start (padding, fold lookup).
+    pub fn batch_wait_us(&self) -> u64 {
+        self.start_us.saturating_sub(self.batch_us)
+    }
+
+    /// compute: tick-start → tick-end.
+    pub fn compute_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+
+    /// respond-write: tick-end → `done_us` (response fan-out).
+    pub fn respond_us(&self, done_us: u64) -> u64 {
+        done_us.saturating_sub(self.end_us)
+    }
+
+    /// Whether this response went through a real serve tick (stage
+    /// breakdowns only aggregate these).
+    pub fn complete(&self) -> bool {
+        self.admit_us <= self.batch_us && self.batch_us <= self.start_us && self.start_us > 0
+    }
+}
+
 /// The engine's answer to one [`Request`].
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -62,6 +108,9 @@ pub struct Response {
     /// Lets open-loop load generation measure completion-time latency and
     /// deadline attainment without a collector thread in the timing path.
     pub done_us: u64,
+    /// Stage timeline (admit / batch-formed / tick-start / tick-end) on the
+    /// same clock as `done_us`; see [`StageStamps`].
+    pub stamps: StageStamps,
     /// Failure description when `status` is [`ResponseStatus::Error`];
     /// `None` otherwise.
     pub error: Option<String>,
@@ -78,6 +127,11 @@ pub(crate) struct Pending {
     /// Absolute expiry: a worker that reaches this request at or after the
     /// deadline sheds it instead of computing dead work. None = never.
     pub deadline: Option<Instant>,
+    /// Admission stamp on the engine's `done_us` clock (µs) — seeds the
+    /// response's [`StageStamps`].
+    pub admit_us: u64,
+    /// Stamped by the draining worker when this request joins a batch.
+    pub batch_us: u64,
     /// How many times a batch containing this request failed (panic or
     /// execution error). Supervision increments it on requeue; at 2 the
     /// request runs solo, and a solo failure quarantines it.
@@ -351,6 +405,8 @@ mod tests {
                 tx,
                 enqueued: Instant::now(),
                 deadline: None,
+                admit_us: 0,
+                batch_us: 0,
                 panics: 0,
                 solo: false,
             },
@@ -426,6 +482,8 @@ mod tests {
                     tx,
                     enqueued: now,
                     deadline: deadline.map(|d| now + d),
+                    admit_us: 0,
+                    batch_us: 0,
                     panics: 0,
                     solo: false,
                 },
@@ -474,6 +532,7 @@ mod tests {
             batch_rows: 1,
             generation: 0,
             done_us: 0,
+            stamps: StageStamps::default(),
             error: None,
         })
         .unwrap();
@@ -548,6 +607,8 @@ mod tests {
                 tx,
                 enqueued: Instant::now(),
                 deadline: None,
+                admit_us: 0,
+                batch_us: 0,
                 panics: 0,
                 solo: false,
             },

@@ -36,10 +36,14 @@
 //! bit-identically (`tests/router.rs`, `tests/chaos.rs`).
 
 use super::cache::CacheStats;
-use super::engine::{EngineConfig, EngineStats, ServeTarget, ServingEngine};
+use super::engine::{
+    render_engine_families, EngineConfig, EngineStats, ServeTarget, ServingEngine,
+};
 use super::request::{
     response_channel, Admit, Pending, Response, ResponseHandle, ResponseStatus,
+    StageStamps,
 };
+use crate::obs::{EventCode, Obs};
 use crate::runtime::Backend;
 use crate::tt::MetaTt;
 use crate::util::fault::{FaultPlan, ShardFault};
@@ -248,7 +252,9 @@ impl<'b> ShardRouter<'b> {
             bail!("router config: failure_threshold must be >= 1");
         }
         let groups = cfg.shards / cfg.replicas;
-        let epoch = Instant::now();
+        // Every shard's `done_us` clock, span timestamps, and the router's
+        // own event stamps share the observability epoch.
+        let epoch = cfg.engine.obs.epoch();
         let mut slots = Vec::with_capacity(cfg.shards);
         for k in 0..cfg.shards {
             let mut engine =
@@ -343,6 +349,50 @@ impl<'b> ShardRouter<'b> {
     /// Microseconds on the shared response-stamp clock.
     pub fn now_us(&self) -> u64 {
         self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// The observability handle every shard shares (one tracer, one
+    /// registry, one epoch).
+    pub fn obs(&self) -> &std::sync::Arc<Obs> {
+        &self.cfg.engine.obs
+    }
+
+    /// Prometheus-style text snapshot of the whole topology: router
+    /// supervision counters, per-shard health gauges, engine + cache
+    /// families aggregated across shards, then the shared registry
+    /// (stage histograms, net counters, tracer meta).
+    pub fn metrics_text(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let rs = self.router_stats();
+        let counters = [
+            ("metatt_router_heartbeats_total", rs.heartbeats),
+            ("metatt_router_failovers_total", rs.failovers),
+            ("metatt_router_moved_total", rs.moved),
+            ("metatt_router_stolen_total", rs.stolen),
+            ("metatt_router_displaced_total", rs.displaced),
+            ("metatt_router_down_errors_total", rs.down_errors),
+        ];
+        for (name, v) in counters {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        let _ = writeln!(out, "# HELP metatt_shard_health 0=live 1=degraded 2=down");
+        let _ = writeln!(out, "# TYPE metatt_shard_health gauge");
+        for (k, slot) in self.slots.iter().enumerate() {
+            let state = slot.state.load(Ordering::Relaxed);
+            let _ = writeln!(out, "metatt_shard_health{{shard=\"{k}\"}} {state}");
+        }
+        let depth: usize = self.slots.iter().map(|s| s.engine.queue().len()).sum();
+        render_engine_families(
+            &mut out,
+            &ServeTarget::stats(self),
+            &self.cache_stats(),
+            ServeTarget::generation(self),
+            depth,
+        );
+        self.cfg.engine.obs.render(&mut out);
+        out
     }
 
     /// Hot-swap every shard's adapter. Replicas of a group must again
@@ -539,11 +589,18 @@ impl<'b> ShardRouter<'b> {
                 }
             }
             let wedged = slot.wedged_until_us.load(Ordering::Relaxed) > now_us;
+            // Health-transition events fire only on an actual state change
+            // (swap + compare), not on every confirming beat.
             if failing || wedged {
-                slot.state.store(DEGRADED, Ordering::Relaxed);
+                if slot.state.swap(DEGRADED, Ordering::Relaxed) != DEGRADED {
+                    let streak = slot.fails.load(Ordering::Relaxed) as u64;
+                    self.obs().event(EventCode::ShardDegraded, k as u64, streak);
+                }
             } else {
                 slot.fails.store(0, Ordering::Relaxed);
-                slot.state.store(LIVE, Ordering::Relaxed);
+                if slot.state.swap(LIVE, Ordering::Relaxed) != LIVE {
+                    self.obs().event(EventCode::ShardLive, k as u64, 0);
+                }
             }
         }
         self.steal_work();
@@ -559,6 +616,7 @@ impl<'b> ShardRouter<'b> {
             return;
         }
         self.rstats.failovers.fetch_add(1, Ordering::Relaxed);
+        self.obs().event(EventCode::ShardDown, k as u64, 0);
         let slot = &self.slots[k];
         // Drain BEFORE close: after close, producers get errors, and
         // whatever landed in between is caught by the post-close drain
@@ -577,7 +635,12 @@ impl<'b> ShardRouter<'b> {
             });
         match survivor {
             Some(j) => {
-                self.rstats.moved.fetch_add(drained.len() as u64, Ordering::Relaxed);
+                let moved = drained.len() as u64;
+                self.rstats.moved.fetch_add(moved, Ordering::Relaxed);
+                self.obs().event(EventCode::FailoverDrain, k as u64, moved);
+                // Router-level requeue: payload is (target shard, moved),
+                // unlike the engine's per-batch (task, rows) requeues.
+                self.obs().event(EventCode::Requeue, j as u64, moved);
                 self.slots[j].engine.queue().requeue(drained);
             }
             None => {
@@ -592,6 +655,10 @@ impl<'b> ShardRouter<'b> {
                         batch_rows: 0,
                         generation: 0,
                         done_us,
+                        stamps: StageStamps {
+                            admit_us: p.admit_us,
+                            ..StageStamps::default()
+                        },
                         error: Some(format!(
                             "shard {k} went down with no surviving replica in its group"
                         )),
@@ -631,6 +698,11 @@ impl<'b> ShardRouter<'b> {
                 continue;
             }
             self.rstats.stolen.fetch_add(stolen.len() as u64, Ordering::Relaxed);
+            self.obs().event(
+                EventCode::WorkSteal,
+                ((from as u64) << 32) | to as u64,
+                stolen.len() as u64,
+            );
             self.slots[to].engine.queue().requeue(stolen);
         }
     }
@@ -662,6 +734,7 @@ impl<'b> ShardRouter<'b> {
     /// the degraded-mode analogue of queue-side deadline shedding.
     fn answer_displaced(&self, p: Pending) {
         let done_us = self.now_us();
+        self.obs().event_at(done_us, EventCode::Displaced, p.req.id, p.req.task as u64);
         let _ = p.tx.send(Response {
             id: p.req.id,
             task: p.req.task,
@@ -670,6 +743,7 @@ impl<'b> ShardRouter<'b> {
             batch_rows: 0,
             generation: 0,
             done_us,
+            stamps: StageStamps { admit_us: p.admit_us, ..StageStamps::default() },
             error: Some(
                 "displaced by a higher-priority request under shrunken capacity".into(),
             ),
@@ -691,6 +765,7 @@ impl<'b> ShardRouter<'b> {
             batch_rows: 0,
             generation: 0,
             done_us: self.now_us(),
+            stamps: StageStamps::default(),
             error: Some(format!(
                 "task {task}: every replica of its shard group is down"
             )),
@@ -720,6 +795,15 @@ impl ServeTarget for ShardRouter<'_> {
     }
     fn faults(&self) -> &FaultPlan {
         &self.cfg.engine.faults
+    }
+    fn obs(&self) -> &std::sync::Arc<Obs> {
+        ShardRouter::obs(self)
+    }
+    fn cache_stats(&self) -> CacheStats {
+        ShardRouter::cache_stats(self)
+    }
+    fn metrics_text(&self) -> String {
+        ShardRouter::metrics_text(self)
     }
     fn generation(&self) -> u64 {
         self.slots.iter().map(|s| s.engine.generation()).max().unwrap_or(0)

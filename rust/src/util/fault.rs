@@ -187,26 +187,33 @@ impl FaultPlan {
     /// Worker-side hook, called inside the batch execution guard right
     /// before the forward. May sleep (`slow_tick`) and may panic
     /// (`worker_panic`) — the engine's supervision contains the panic.
+    /// Returns the injected sleep in µs (0 when nothing fired) so the
+    /// tracer can stamp a `slow_tick` span (PR 10); the sleep happens
+    /// before any scheduled panic, so a slow tick is on the clock even
+    /// when the same tick also panics.
     #[inline]
-    pub fn on_serve_tick(&self) {
+    pub fn on_serve_tick(&self) -> u64 {
         if !self.armed {
-            return;
+            return 0;
         }
-        self.serve_tick_armed();
+        self.serve_tick_armed()
     }
 
     #[cold]
-    fn serve_tick_armed(&self) {
+    fn serve_tick_armed(&self) -> u64 {
         let tick = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut slept_us = 0;
         if let Some((dur, p)) = self.slow {
             let fire = self.rng.lock().unwrap().bernoulli(p);
             if fire {
                 std::thread::sleep(dur);
+                slept_us = dur.as_micros() as u64;
             }
         }
         if self.panic_ticks.contains(&tick) {
             panic!("injected fault: worker_panic at serve tick {tick}");
         }
+        slept_us
     }
 
     /// Network hook, called once per fully-read request frame *before*
@@ -304,7 +311,7 @@ mod tests {
             assert!(!plan.on_net_frame());
             assert!(!plan.on_save());
             assert_eq!(plan.on_shard_tick(0), ShardFault::None);
-            plan.on_serve_tick(); // must be a no-op, not a panic
+            assert_eq!(plan.on_serve_tick(), 0); // must be a no-op, not a panic
         }
     }
 
@@ -359,6 +366,13 @@ mod tests {
         assert!(!plan.on_net_frame()); // frame 4
         assert!(plan.on_save()); // save 1 — fires
         assert!(!plan.on_save()); // save 2
+    }
+
+    #[test]
+    fn slow_tick_at_p1_reports_its_sleep() {
+        let plan = FaultPlan::parse("slow_tick=5ms@p=1.0").unwrap();
+        let slept = plan.on_serve_tick();
+        assert_eq!(slept, 5_000, "p=1.0 slow tick must report the injected sleep in µs");
     }
 
     #[test]

@@ -159,4 +159,37 @@ fn warmed_train_step_is_allocation_free_with_arena() {
         "warmed-up serving tick heap-allocated (min over 5 ticks); \
          the folded-inference path is bypassing the workspace arena"
     );
+
+    // --- Observability hooks (PR 10): an UNARMED Obs must add nothing to
+    // the path above — every `event()` is a single relaxed atomic load and
+    // the disarmed tracer owns no rings, so a serve tick interleaved with
+    // the full request-lifecycle hook sequence stays at zero allocations.
+    // (Same test body: the allocation counter is process-global.)
+    use metatt::obs::{EventCode, Obs};
+    let obs = Obs::new(false);
+    assert!(!obs.armed());
+    // Warm any lazy statics in the hook path (thread-local ring key).
+    obs.event(EventCode::Admit, 0, 0);
+    obs.event_at(0, EventCode::TickEnd, 0, 0);
+    metatt::obs::global_event(EventCode::CkptSave, 0, 0);
+    let mut min_obs_delta = u64::MAX;
+    for i in 0..5 {
+        let before = allocs();
+        // The per-request lifecycle, as the engine stamps it around a tick.
+        obs.event(EventCode::Admit, i, 0);
+        obs.event(EventCode::BatchFormed, i, 0);
+        obs.event(EventCode::TickStart, 0, 8);
+        serve_step.run_serve(&folded, &tokens, 0, &mut out).unwrap();
+        obs.event_at(obs.now_us(), EventCode::TickEnd, 0, 0);
+        obs.event(EventCode::ResponseWritten, i, 0);
+        metatt::obs::global_event(EventCode::CkptSave, 0, 0);
+        let after = allocs();
+        min_obs_delta = min_obs_delta.min(after - before);
+    }
+    assert_eq!(
+        min_obs_delta, 0,
+        "unarmed observability hooks heap-allocated around a warmed serve \
+         tick; the disarmed fast path must be a single relaxed load"
+    );
+    assert_eq!(obs.tracer().recorded(), 0, "disarmed hooks must record nothing");
 }

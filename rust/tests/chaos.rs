@@ -64,6 +64,7 @@ fn engine_cfg(workers: usize, max_batch: usize, faults: FaultPlan) -> EngineConf
         cache_capacity_bytes: 64 << 20,
         dtype: DtypeKind::F32,
         faults: Arc::new(faults),
+        obs: Arc::new(metatt::obs::Obs::new(false)),
     }
 }
 
@@ -451,6 +452,92 @@ fn shard_kill_fails_over_without_losing_requests() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn armed_shard_kill_trace_contains_the_failover_story() {
+    use metatt::obs::{EventCode, Obs};
+    use metatt::serving::{RoutePolicy, RouterConfig, ServeTarget, ShardHealth, ShardRouter};
+    let seed = chaos_seed();
+    // One manual sweep probes shard 0 (tick 1) then shard 1 (tick 2, the
+    // kill); slow_tick wedges every serve tick long enough that requests
+    // submitted just before the sweep are still queued when the kill
+    // drains shard 1 — so the failover drain is non-empty by construction.
+    let plan =
+        FaultPlan::parse(&format!("slow_tick=25ms@p=1.0,shard_down@tick=2,seed={seed}"))
+            .unwrap();
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let obs = Arc::new(Obs::new(true));
+    let mut ecfg = engine_cfg(2, 4, FaultPlan::empty());
+    ecfg.faults = Arc::new(plan);
+    ecfg.obs = Arc::clone(&obs);
+    let rcfg = RouterConfig {
+        engine: ecfg,
+        shards: 2,
+        replicas: 2,
+        route: RoutePolicy::Affinity,
+        // Long enough that the only sweep during the ~150ms driver is the
+        // manual one (serve's teardown still pays one sleep of this).
+        heartbeat: Duration::from_secs(1),
+        failure_threshold: 3,
+    };
+    let router = ShardRouter::new(&backend, rcfg, |_| demo_tt(5), None).unwrap();
+    let seq = router.seq_len();
+    let vocab = router.vocab();
+
+    router
+        .serve(|r| {
+            // Task 1 pins to slot 1 under affinity (groups=1). 14 requests
+            // against 2 workers x batch 4 leaves at least 6 queued while
+            // the in-flight batches sleep through their slow ticks.
+            let handles: Vec<_> = (0..14)
+                .map(|i| {
+                    let (_, tokens) = chaos_request(seq, vocab, 1, i);
+                    r.submit_with(1, tokens, None, 0).unwrap()
+                })
+                .collect();
+            std::thread::sleep(Duration::from_millis(10));
+            r.heartbeat_now();
+            for (i, h) in handles.into_iter().enumerate() {
+                let resp = h.wait().unwrap();
+                assert_eq!(
+                    resp.status,
+                    ResponseStatus::Ok,
+                    "request {i} lost across the failover: {:?}",
+                    resp.error
+                );
+            }
+        })
+        .unwrap();
+
+    assert_eq!(router.health(1), ShardHealth::Down, "tick 2 kills shard 1");
+    let rs = router.router_stats();
+    assert_eq!(rs.failovers, 1, "one kill, one failover");
+    assert!(rs.moved >= 1, "the drain must move the queued work");
+
+    // The exported trace tells the whole story: a health transition, the
+    // failover drain, and the router requeue — in causal order (all three
+    // are stamped by the supervisor thread, so one ring preserves it).
+    let events = obs.tracer().snapshot();
+    assert!(
+        events.windows(2).all(|w| w[0].ts_us <= w[1].ts_us),
+        "snapshot timestamps must be globally monotone"
+    );
+    let ts_of = |code: EventCode| events.iter().find(|e| e.code == code).map(|e| e.ts_us);
+    let down = ts_of(EventCode::ShardDown).expect("health-transition span missing");
+    let drain = ts_of(EventCode::FailoverDrain).expect("failover span missing");
+    let requeue = ts_of(EventCode::Requeue).expect("requeue span missing");
+    assert!(down <= drain, "health transition precedes the failover drain");
+    assert!(drain <= requeue, "drain precedes the router requeue");
+    let drain_ev = events.iter().find(|e| e.code == EventCode::FailoverDrain).unwrap();
+    assert_eq!(drain_ev.a, 1, "the drained shard is the killed one");
+    assert_eq!(drain_ev.b, rs.moved, "the span payload carries the moved count");
+
+    // And the Chrome export names all three for the trace viewer.
+    let json = obs.chrome_trace();
+    for name in ["shard_down", "failover_drain", "requeue", "slow_tick"] {
+        assert!(json.contains(&format!("\"name\":\"{name}\"")), "{name} missing: {json}");
     }
 }
 

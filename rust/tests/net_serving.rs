@@ -47,6 +47,7 @@ fn engine_cfg(workers: usize, max_batch: usize) -> EngineConfig {
         cache_capacity_bytes: 64 << 20,
         dtype: DtypeKind::F32,
         faults: std::sync::Arc::new(metatt::util::fault::FaultPlan::empty()),
+        obs: std::sync::Arc::new(metatt::obs::Obs::new(false)),
     }
 }
 
@@ -215,6 +216,44 @@ fn bad_magic_drops_the_connection_but_not_the_server() {
     });
     assert_eq!(net.connections, 2);
     assert_eq!(net.requests, 3, "the bad-magic connection served nothing");
+    // PR 10: the protocol-error counters saw exactly this traffic. The
+    // rejected handshake counts as bad magic AND a dropped connection; the
+    // out-of-range request decoded fine (it is a validation error with an
+    // echoed id, not a framing error), so bad_frames stays clean — and the
+    // well-behaved connection was never disturbed (asserted above).
+    let ctrs = &engine.obs().net;
+    assert_eq!(ctrs.bad_magic.get(), 1, "one bad-magic handshake");
+    assert_eq!(ctrs.dropped_conns.get(), 1, "the bad connection was dropped");
+    assert_eq!(ctrs.bad_frames.get(), 0, "no framing errors on the good connection");
+    assert_eq!(ctrs.oversized_frames.get(), 0);
+}
+
+#[test]
+fn stat_admin_frame_returns_a_live_metrics_snapshot() {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let engine = ServingEngine::new(&backend, engine_cfg(1, 4), demo_tt(5), None).unwrap();
+    let seq = engine.seq_len();
+    let (text, net) = with_server(&engine, |addr| {
+        let mut client = NetClient::connect_retry(addr, Duration::from_secs(10)).unwrap();
+        // Interleave request → STAT → request: the snapshot rides the
+        // ordered writer queue without disturbing pipelined responses.
+        let r1 = client.call(1, 0, 0, 0, &vec![1; seq]).unwrap();
+        assert_eq!(r1.status, WireStatus::Ok);
+        let text = client.stat().unwrap();
+        let r2 = client.call(2, 1, 0, 0, &vec![2; seq]).unwrap();
+        assert_eq!(r2.status, WireStatus::Ok);
+        text
+    });
+    assert_eq!(net.requests, 2, "STAT is an admin frame, not a request");
+    // The snapshot is a live engine view in Prometheus text format: engine
+    // families, cache families, net counters (including this very STAT),
+    // stage histograms, and the tracer meta-gauges.
+    assert!(text.contains("metatt_engine_requests_total 1"), "{text}");
+    assert!(text.contains("metatt_net_stat_frames_total 1"), "{text}");
+    assert!(text.contains("metatt_cache_folds_total"), "{text}");
+    assert!(text.contains("metatt_stage_compute_us_count"), "{text}");
+    assert!(text.contains("metatt_trace_armed 0"), "{text}");
+    assert_eq!(engine.obs().net.stat_frames.get(), 1);
 }
 
 #[test]

@@ -1,0 +1,252 @@
+//! Tracer self-tests and engine-integration checks for the PR 10
+//! observability layer.
+//!
+//! The load-bearing properties:
+//!
+//! 1. **Exact loss accounting** — a full ring wraps over its *oldest*
+//!    events and `dropped()` counts every lost event exactly; nothing is
+//!    lost silently.
+//! 2. **Disarmed is inert** — a disarmed `Obs` records nothing no matter
+//!    how many hooks fire (the zero-allocation side is pinned in
+//!    `tests/alloc_regression.rs`).
+//! 3. **Lifecycle ordering** — an armed engine run emits every request
+//!    lifecycle stage, and per request the span timestamps and the wire
+//!    stage stamps are monotone: admit ≤ batch-formed ≤ tick-start ≤
+//!    tick-end ≤ response-written.
+//! 4. **Faults are visible** — `slow_tick=<D>ms@p=1.0` yields tick spans
+//!    (and `slow_tick` span payloads) of at least D.
+
+use metatt::adapters::AdapterKind;
+use metatt::config::ModelPreset;
+use metatt::obs::{self, EventCode, Obs};
+use metatt::runtime::RefBackend;
+use metatt::serving::{
+    adapter_spec_for, request_stream, EngineConfig, LoadGenConfig, Response, ServingEngine,
+};
+use metatt::tensor::DtypeKind;
+use metatt::tt::{CoreInit, InitStrategy, MetaTt, MetaTtKind};
+use metatt::util::fault::FaultPlan;
+use metatt::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+const TASKS: usize = 3;
+
+fn engine_cfg(workers: usize, obs: Arc<Obs>, faults: FaultPlan) -> EngineConfig {
+    EngineConfig {
+        model: ModelPreset::Tiny,
+        adapter: AdapterKind::MetaTt(MetaTtKind::FourPlusOneD),
+        rank: 4,
+        alpha: 1.3,
+        num_tasks: TASKS,
+        classes: 2,
+        max_batch: 4,
+        batch_deadline: Duration::from_millis(1),
+        queue_capacity: 128,
+        workers,
+        cache_capacity_bytes: 64 << 20,
+        dtype: DtypeKind::F32,
+        faults: Arc::new(faults),
+        obs,
+    }
+}
+
+fn demo_tt(cfg: &EngineConfig, seed: u64) -> MetaTt {
+    let spec = adapter_spec_for(cfg);
+    let init = InitStrategy {
+        cores: vec![CoreInit::Normal; MetaTtKind::FourPlusOneD.order()],
+    };
+    spec.build_metatt_with(&mut Pcg64::new(seed), Some(&init))
+}
+
+/// Serve a deterministic stream through an engine built around `obs` and
+/// return the responses in request order.
+fn serve_with(obs: Arc<Obs>, faults: FaultPlan, count: usize) -> Vec<Response> {
+    let backend = RefBackend::with_config(1, true).unwrap();
+    let cfg = engine_cfg(2, obs, faults);
+    let tt = demo_tt(&cfg, 11);
+    let dims = ModelPreset::Tiny.dims(TASKS);
+    let lcfg = LoadGenConfig { seed: 33, ..Default::default() };
+    let stream = request_stream(&lcfg, TASKS, dims.max_seq, dims.vocab, 0, count);
+    let engine = ServingEngine::new(&backend, cfg, tt, None).unwrap();
+    engine
+        .serve(|eng| {
+            let handles: Vec<_> = stream
+                .iter()
+                .map(|(task, tokens)| eng.submit(*task, tokens.clone()).unwrap())
+                .collect();
+            handles.into_iter().map(|h| h.wait().unwrap()).collect::<Vec<_>>()
+        })
+        .unwrap()
+}
+
+#[test]
+fn ring_wraparound_drops_oldest_with_exact_count() {
+    // One ring of 8 slots, 20 single-threaded records: the 8 newest
+    // survive, exactly 12 are dropped, and `recorded` counts all 20.
+    let obs = Obs::with_rings(true, 1, 8);
+    for i in 0..20u64 {
+        obs.event_at(i, EventCode::Admit, i, 0);
+    }
+    let t = obs.tracer();
+    assert_eq!(t.recorded(), 20);
+    assert_eq!(t.dropped(), 12, "wraparound must count every overwritten event");
+    let events = t.snapshot();
+    assert_eq!(events.len(), 8, "only the ring's capacity survives");
+    let ids: Vec<u64> = events.iter().map(|e| e.a).collect();
+    assert_eq!(ids, (12..20).collect::<Vec<u64>>(), "oldest events are the ones dropped");
+}
+
+#[test]
+fn full_ring_pool_counts_unclaimed_thread_drops() {
+    // Two threads, one ring: the loser of the claim race loses its events
+    // to `dropped()`, never silently.
+    let obs = Arc::new(Obs::with_rings(true, 1, 64));
+    let mut joins = Vec::new();
+    for t in 0..2u64 {
+        let obs = Arc::clone(&obs);
+        joins.push(std::thread::spawn(move || {
+            for i in 0..10 {
+                obs.event_at(i, EventCode::Admit, t, i);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let t = obs.tracer();
+    assert_eq!(
+        t.recorded() + t.dropped(),
+        20,
+        "every event is either recorded or counted as dropped"
+    );
+    assert_eq!(t.recorded(), 10, "a single ring admits exactly one thread's events");
+}
+
+#[test]
+fn disarmed_obs_records_nothing_across_all_hooks() {
+    let obs = Obs::new(false);
+    for i in 0..100 {
+        obs.event(EventCode::Admit, i, 0);
+        obs.event_at(i, EventCode::TickEnd, 0, i);
+    }
+    assert_eq!(obs.tracer().recorded(), 0);
+    assert_eq!(obs.tracer().dropped(), 0);
+    assert!(obs.tracer().snapshot().is_empty());
+    assert_eq!(obs.chrome_trace(), "{\"displayTimeUnit\":\"ms\",\"traceEvents\":[]}");
+}
+
+#[test]
+fn armed_engine_run_emits_monotone_lifecycle_spans() {
+    let obs = Arc::new(Obs::new(true));
+    let responses = serve_with(Arc::clone(&obs), FaultPlan::empty(), 24);
+    assert_eq!(responses.len(), 24);
+
+    // Wire stage stamps: every computed response carries a complete,
+    // monotone admit ≤ batch ≤ start ≤ end ≤ done chain.
+    for r in &responses {
+        assert!(r.stamps.complete(), "incomplete stamps on request {}: {:?}", r.id, r.stamps);
+        assert!(r.stamps.start_us <= r.stamps.end_us, "tick inverted on request {}", r.id);
+        assert!(r.stamps.end_us <= r.done_us, "done precedes tick end on request {}", r.id);
+    }
+
+    // Span stream: at least one event per lifecycle stage...
+    let events = obs.tracer().snapshot();
+    for code in [
+        EventCode::Admit,
+        EventCode::BatchFormed,
+        EventCode::TickStart,
+        EventCode::TickEnd,
+        EventCode::ResponseWritten,
+        EventCode::CacheFold,
+    ] {
+        assert!(
+            events.iter().any(|e| e.code == code),
+            "no {} span in an armed run ({} events)",
+            code.name(),
+            events.len()
+        );
+    }
+    // ...and per request the lifecycle timestamps never run backwards.
+    for r in &responses {
+        let at = |code: EventCode| {
+            events.iter().find(|e| e.code == code && e.a == r.id).map(|e| e.ts_us)
+        };
+        let (admit, formed, written) = (
+            at(EventCode::Admit),
+            at(EventCode::BatchFormed),
+            at(EventCode::ResponseWritten),
+        );
+        // Ring pressure may have evicted early events; order what survived.
+        if let (Some(a), Some(f)) = (admit, formed) {
+            assert!(a <= f, "admit after batch-formed for request {}", r.id);
+        }
+        if let (Some(f), Some(w)) = (formed, written) {
+            assert!(f <= w, "batch-formed after response-written for request {}", r.id);
+        }
+    }
+
+    // The metrics registry saw the same traffic: stage histograms filled
+    // and the Prometheus rendering exposes them.
+    assert!(obs.stages.compute_us.count() > 0, "compute histogram never observed");
+    let mut text = String::new();
+    obs.render(&mut text);
+    assert!(text.contains("metatt_stage_compute_us"), "{text}");
+    assert!(text.contains("metatt_trace_armed 1"), "{text}");
+
+    // Chrome export parses structurally: one X event per tick span.
+    let json = obs.chrome_trace();
+    assert!(json.contains("\"ph\":\"X\""), "tick spans must export as complete events");
+    assert!(json.contains("\"name\":\"admit\""), "{json}");
+}
+
+#[test]
+fn slow_tick_fault_is_visible_in_tick_spans() {
+    let obs = Arc::new(Obs::new(true));
+    let plan = FaultPlan::parse("slow_tick=20ms@p=1.0,seed=5").unwrap();
+    let responses = serve_with(Arc::clone(&obs), plan, 8);
+    assert_eq!(responses.len(), 8);
+    let events = obs.tracer().snapshot();
+    let ticks: Vec<_> = events.iter().filter(|e| e.code == EventCode::TickEnd).collect();
+    assert!(!ticks.is_empty(), "no tick spans recorded");
+    for e in &ticks {
+        // TickEnd carries its start timestamp in `b`: span length ≥ the
+        // injected 20 ms sleep.
+        assert!(
+            e.ts_us.saturating_sub(e.b) >= 20_000,
+            "tick span shorter than the injected slow_tick: {} µs",
+            e.ts_us.saturating_sub(e.b)
+        );
+    }
+    assert!(
+        events.iter().any(|e| e.code == EventCode::SlowTick && e.a >= 20_000),
+        "slow_tick span with the slept duration must be recorded"
+    );
+}
+
+#[test]
+fn global_handle_feeds_checkpoint_events() {
+    // `set_global` routes the free-function checkpoint hooks into this
+    // Obs; clearing it disarms them again.
+    let obs = Arc::new(Obs::new(true));
+    obs::set_global(Some(Arc::clone(&obs)));
+    let dir = std::env::temp_dir().join(format!("metatt_obs_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.bin");
+    let t = metatt::tensor::Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    metatt::coordinator::checkpoint::save(&path, &[("w".into(), t)]).unwrap();
+    let _ = metatt::coordinator::checkpoint::load(&path).unwrap();
+    obs::set_global(None);
+    let events = obs.tracer().snapshot();
+    let save = events.iter().find(|e| e.code == EventCode::CkptSave);
+    let load = events.iter().find(|e| e.code == EventCode::CkptLoad);
+    let _ = std::fs::remove_dir_all(&dir);
+    let save = save.expect("save span missing");
+    let load = load.expect("load span missing");
+    assert!(save.a > 0, "save span must carry the byte count");
+    assert_eq!(save.b, 0, "an intact save is not torn");
+    // The save counts the 8-byte CRC trailer it lands; the load counts the
+    // body it parses after verifying and stripping that trailer.
+    assert_eq!(load.a + 8, save.a, "load body must be the save minus its trailer");
+    assert_eq!(load.b, 1, "one tensor loaded");
+}

@@ -49,6 +49,7 @@ fn engine_cfg(workers: usize, faults: FaultPlan) -> EngineConfig {
         cache_capacity_bytes: 64 << 20,
         dtype: DtypeKind::F32,
         faults: Arc::new(faults),
+        obs: Arc::new(metatt::obs::Obs::new(false)),
     }
 }
 

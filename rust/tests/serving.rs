@@ -53,6 +53,7 @@ fn engine_cfg(workers: usize, max_batch: usize) -> EngineConfig {
         cache_capacity_bytes: 64 << 20,
         dtype: DtypeKind::F32,
         faults: std::sync::Arc::new(metatt::util::fault::FaultPlan::empty()),
+        obs: std::sync::Arc::new(metatt::obs::Obs::new(false)),
     }
 }
 
